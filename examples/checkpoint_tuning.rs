@@ -1,0 +1,43 @@
+//! Ablation: checkpoint cadence x storage scheme.
+//!
+//! The paper checkpoints every iteration (its Fig. 4 cost); this study shows
+//! the trade-off the Reinit++ user actually faces: less frequent checkpoints
+//! cost less to write but lose more recomputation after a failure.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example checkpoint_tuning
+//! ```
+
+use std::rc::Rc;
+
+use reinitpp::config::{AppKind, CkptKind, ExperimentConfig, FailureKind, RecoveryKind};
+use reinitpp::harness::run_point;
+use reinitpp::runtime::XlaRuntime;
+
+fn main() {
+    let xla = Rc::new(XlaRuntime::load("artifacts").expect("run `make artifacts`"));
+    println!("== checkpoint tuning: HPCCG, 32 ranks, Reinit++, process failure ==\n");
+    println!("| ckpt scheme | every k iters | total (s) | write (s) | MPI recovery (s) |");
+    println!("|---|---|---|---|---|");
+    for scheme in [CkptKind::Memory, CkptKind::File] {
+        for every in [1u32, 2, 4] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.app = AppKind::Hpccg;
+            cfg.recovery = RecoveryKind::Reinit;
+            cfg.failure = FailureKind::Process;
+            cfg.ranks = 32;
+            cfg.iters = 12;
+            cfg.ckpt = Some(scheme);
+            cfg.ckpt_every = every;
+            cfg.trials = 3;
+            cfg.validate().unwrap();
+            let p = run_point(&cfg, Some(Rc::clone(&xla)));
+            println!(
+                "| {} | {} | {:.3} | {:.3} | {:.3} |",
+                scheme, every, p.total.mean, p.ckpt_write.mean, p.recovery.mean
+            );
+        }
+    }
+    println!("\nExpected shape: write cost falls with k; total has a sweet spot");
+    println!("because a failure forces re-running up to k-1 iterations.");
+}

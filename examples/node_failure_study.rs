@@ -1,0 +1,41 @@
+//! Node-failure study (a compact Figure 7): CR vs Reinit++ recovering from
+//! the loss of a whole node (its daemon and all 16 ranks), with file
+//! checkpointing and an over-provisioned spare node.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example node_failure_study
+//! ```
+
+use std::rc::Rc;
+
+use reinitpp::config::{AppKind, ExperimentConfig, FailureKind, RecoveryKind};
+use reinitpp::harness::{fig7, SweepOpts};
+use reinitpp::runtime::XlaRuntime;
+
+fn main() {
+    let mut base = ExperimentConfig::default();
+    base.app = AppKind::Hpccg;
+    base.failure = FailureKind::Node;
+    base.spare_nodes = 1;
+    base.trials = 3;
+    base.iters = 10;
+    let xla = Rc::new(XlaRuntime::load(&base.artifacts_dir).expect("run `make artifacts`"));
+    let opts = SweepOpts {
+        max_ranks: 128,
+        outdir: "results/examples".into(),
+    };
+    let points = fig7(&base, Some(xla), &opts);
+
+    let mean = |rk: RecoveryKind, ranks: u32| {
+        points
+            .iter()
+            .find(|p| p.cfg.recovery == rk && p.cfg.ranks == ranks && p.cfg.app == AppKind::Hpccg)
+            .map(|p| p.recovery.mean)
+            .unwrap_or(f64::NAN)
+    };
+    let (cr, re) = (mean(RecoveryKind::Cr, 64), mean(RecoveryKind::Reinit, 64));
+    println!(
+        "\nAt 64 ranks, node failure: CR {cr:.2} s vs Reinit++ {re:.2} s -> {:.1}x faster",
+        cr / re
+    );
+}

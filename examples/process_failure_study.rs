@@ -1,0 +1,41 @@
+//! Process-failure study (a compact Figure 6): compare CR, ULFM and
+//! Reinit++ MPI-recovery time for a single process failure, 16-128 ranks,
+//! full-fidelity compute.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example process_failure_study
+//! ```
+
+use std::rc::Rc;
+
+use reinitpp::config::{AppKind, ExperimentConfig, FailureKind, RecoveryKind};
+use reinitpp::harness::{fig6, SweepOpts};
+use reinitpp::runtime::XlaRuntime;
+
+fn main() {
+    let mut base = ExperimentConfig::default();
+    base.app = AppKind::Hpccg;
+    base.failure = FailureKind::Process;
+    base.trials = 3;
+    base.iters = 10;
+    let xla = Rc::new(XlaRuntime::load(&base.artifacts_dir).expect("run `make artifacts`"));
+    let opts = SweepOpts {
+        max_ranks: 128,
+        outdir: "results/examples".into(),
+    };
+    let points = fig6(&base, Some(xla), &opts);
+
+    // Verdict in the paper's own terms.
+    let mean = |rk: RecoveryKind, ranks: u32| {
+        points
+            .iter()
+            .find(|p| p.cfg.recovery == rk && p.cfg.ranks == ranks && p.cfg.app == AppKind::Hpccg)
+            .map(|p| p.recovery.mean)
+            .unwrap_or(f64::NAN)
+    };
+    let (cr, re) = (mean(RecoveryKind::Cr, 128), mean(RecoveryKind::Reinit, 128));
+    println!(
+        "\nAt 128 ranks: CR {cr:.2} s vs Reinit++ {re:.2} s -> {:.1}x faster recovery",
+        cr / re
+    );
+}

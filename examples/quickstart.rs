@@ -1,0 +1,55 @@
+//! Quickstart: run one HPCCG experiment under Reinit++ with an injected
+//! process failure and print the paper-style time breakdown.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::rc::Rc;
+
+use reinitpp::config::{AppKind, ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
+use reinitpp::recovery::job::run_trial;
+use reinitpp::runtime::XlaRuntime;
+
+fn main() {
+    // 1. Configure the experiment (paper Table 1 defaults, small scale).
+    let mut cfg = ExperimentConfig::default();
+    cfg.app = AppKind::Hpccg;
+    cfg.recovery = RecoveryKind::Reinit;
+    cfg.failure = FailureKind::Process;
+    cfg.ranks = 16;
+    cfg.iters = 10;
+    cfg.trials = 1;
+    cfg.validate().unwrap();
+
+    // 2. Load the AOT artifacts (HLO text -> PJRT, compiled once). Falls
+    //    back to the pure-Rust oracle if `make artifacts` hasn't run.
+    let xla = match XlaRuntime::load(&cfg.artifacts_dir) {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("(no artifacts: {e:#}; using the native oracle)");
+            cfg.fidelity = Fidelity::Modeled;
+            None
+        }
+    };
+
+    // 3. Run one trial on the simulated cluster.
+    let r = run_trial(&cfg, 0, xla);
+
+    println!("== quickstart: {} / {} / {} ==", cfg.app, cfg.recovery, cfg.failure);
+    println!(
+        "injected failure: rank {} at iteration {}",
+        r.fault.rank, r.fault.iteration
+    );
+    println!("completed:        {}", r.completed);
+    println!("total time:       {:.3} s (virtual)", r.breakdown.total_s);
+    println!("  checkpoint write {:.3} s", r.breakdown.ckpt_write_s);
+    println!("  checkpoint read  {:.3} s", r.breakdown.ckpt_read_s);
+    println!("  MPI recovery     {:.3} s", r.breakdown.mpi_recovery_s);
+    println!("  application      {:.3} s", r.breakdown.app_s());
+    println!("\nCG residual trace (rank 0):");
+    for (t, iter, res) in &r.diag_trace {
+        println!("  t={t:>8.3}s  iter={iter:>2}  |r|/|r0| = {res:.3e}");
+    }
+    assert!(r.completed);
+}

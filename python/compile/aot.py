@@ -1,0 +1,121 @@
+"""AOT lowering: JAX (L2) -> HLO text artifacts consumed by the Rust runtime.
+
+Run once at build time (``make artifacts``); the Rust binary is self-contained
+afterwards. Interchange format is HLO *text*, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Besides the ``.hlo.txt`` files this writes ``manifest.txt`` describing every
+artifact's input/output signature, e.g.::
+
+    name=hpccg_matvec_16 file=hpccg_matvec_16.hlo.txt in=f32[18,18,18] out=f32[16,16,16];f32[]
+
+The Rust runtime (rust/src/runtime/manifest.rs) parses this to validate
+literal shapes before execution.
+
+Usage: python -m compile.aot --outdir ../artifacts [--comd-n 64,128]
+       [--hpccg-nx 8,16] [--lulesh-nx 8,16]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _fmt(avals):
+    out = []
+    for a in avals:
+        dims = ",".join(str(d) for d in a.shape)
+        out.append(f"f32[{dims}]")
+    return ";".join(out)
+
+
+def entry_points(comd_ns, hpccg_nxs, lulesh_nxs):
+    """Yield (name, fn, input_specs) for every artifact to build."""
+    for n in comd_ns:
+        yield (
+            f"comd_step_n{n}",
+            model.comd_step,
+            [_spec(n, 3), _spec(n, 3), _spec(n, 3), _spec(), _spec()],
+        )
+    for nx in hpccg_nxs:
+        h = nx + 2
+        yield (
+            f"hpccg_matvec_{nx}",
+            model.hpccg_matvec,
+            [_spec(h, h, h)],
+        )
+        yield (
+            f"hpccg_update_{nx}",
+            model.hpccg_update,
+            [_spec(nx, nx, nx)] * 4 + [_spec()],
+        )
+        yield (
+            f"hpccg_direction_{nx}",
+            model.hpccg_direction,
+            [_spec(nx, nx, nx)] * 2 + [_spec()],
+        )
+    for nx in lulesh_nxs:
+        yield (
+            f"lulesh_step_{nx}",
+            model.lulesh_step,
+            [_spec(nx, nx, nx), _spec(nx + 2, nx + 2, nx + 2), _spec()],
+        )
+
+
+def build(outdir, comd_ns, hpccg_nxs, lulesh_nxs):
+    os.makedirs(outdir, exist_ok=True)
+    manifest_lines = []
+    for name, fn, specs in entry_points(comd_ns, hpccg_nxs, lulesh_nxs):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+        line = (
+            f"name={name} file={fname} "
+            f"in={_fmt(specs)} out={_fmt(out_avals)}"
+        )
+        manifest_lines.append(line)
+        print(f"  lowered {name}: {len(text)} chars")
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(manifest_lines)} artifacts + manifest to {outdir}")
+
+
+def _csv_ints(s):
+    return [int(x) for x in s.split(",") if x]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--comd-n", type=_csv_ints, default=[64, 128])
+    ap.add_argument("--hpccg-nx", type=_csv_ints, default=[8, 16])
+    ap.add_argument("--lulesh-nx", type=_csv_ints, default=[8, 16])
+    args = ap.parse_args()
+    build(args.outdir, args.comd_n, args.hpccg_nx, args.lulesh_nx)
+
+
+if __name__ == "__main__":
+    main()

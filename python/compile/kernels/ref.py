@@ -1,0 +1,143 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground
+truth).
+
+Each function here defines *the* semantics of the corresponding Pallas kernel
+in ``lj_force.py`` / ``stencil27.py`` / ``hydro.py``. pytest asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-generated shapes;
+the Rust ``apps/native.rs`` oracle mirrors these formulas a third time so the
+whole three-layer stack can be cross-checked.
+
+Physics notes
+-------------
+* ``lj_forces_ref`` — Lennard-Jones 12-6 with minimum-image periodic boundary
+  conditions and radial cutoff, the CoMD hot-spot (ljForce.c).
+* ``stencil27_ref`` — the HPCCG sparse operator: a 27-point stencil matrix
+  with diagonal 27 and -1 for each of the 26 grid neighbours (generate_matrix
+  in HPCCG). The input carries a one-cell halo; a zero halo reproduces the
+  Dirichlet truncation HPCCG applies at the global boundary.
+* ``hydro_ref`` — a LULESH-flavoured explicit hydro update: EOS pressure,
+  artificial viscosity on compression, energy/velocity update and a Courant
+  time-step candidate per element (LagrangeLeapFrog's CalcCourant).
+"""
+
+import jax.numpy as jnp
+
+# -- Lennard-Jones (CoMD) -----------------------------------------------------
+
+LJ_EPS = 1.0
+LJ_SIGMA = 1.0
+LJ_CUTOFF = 2.5  # in units of sigma
+
+
+def lj_forces_ref(pos, mask, box):
+    """All-pairs LJ 12-6 forces with minimum-image PBC and cutoff.
+
+    pos:  (N, 3) float32 positions.
+    mask: (N,) float32 validity (1.0 = real particle, 0.0 = padding).
+    box:  scalar float32 cubic box edge length.
+
+    Returns (forces (N,3), pe ()): pair potential energy counted once per
+    pair. Padded particles receive and exert zero force.
+    """
+    pos = jnp.asarray(pos)
+    n = pos.shape[0]
+    rij = pos[:, None, :] - pos[None, :, :]  # (N, N, 3) displacement i - j
+    rij = rij - box * jnp.round(rij / box)  # minimum image
+    r2 = jnp.sum(rij * rij, axis=-1)  # (N, N)
+    eye = jnp.eye(n, dtype=pos.dtype)
+    pair_mask = mask[:, None] * mask[None, :] * (1.0 - eye)
+    cut = (r2 < LJ_CUTOFF * LJ_CUTOFF).astype(pos.dtype) * pair_mask
+    r2s = jnp.where(r2 > 0.0, r2, 1.0)  # avoid 0-division on the diagonal
+    s2 = (LJ_SIGMA * LJ_SIGMA) / r2s
+    s6 = s2 * s2 * s2
+    s12 = s6 * s6
+    # F_i = sum_j 24 eps (2 s12 - s6) / r2 * rij
+    fmag = 24.0 * LJ_EPS * (2.0 * s12 - s6) / r2s * cut
+    forces = jnp.sum(fmag[:, :, None] * rij, axis=1)
+    pe = 0.5 * jnp.sum(4.0 * LJ_EPS * (s12 - s6) * cut)
+    return forces.astype(jnp.float32), pe.astype(jnp.float32)
+
+
+# -- 27-point stencil SpMV (HPCCG) --------------------------------------------
+
+
+def stencil27_ref(p_halo):
+    """HPCCG operator: Ap = 27 p_c - sum_{26 neighbours} p_n.
+
+    p_halo: (nx+2, ny+2, nz+2) float32, one-cell halo already in place
+            (zero at the global boundary).
+    Returns Ap: (nx, ny, nz) float32 over the interior.
+    """
+    p = jnp.asarray(p_halo)
+    nx, ny, nz = p.shape[0] - 2, p.shape[1] - 2, p.shape[2] - 2
+    acc = jnp.zeros((nx, ny, nz), dtype=p.dtype)
+    for dx in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dz in (-1, 0, 1):
+                acc = acc + p[
+                    1 + dx : nx + 1 + dx,
+                    1 + dy : ny + 1 + dy,
+                    1 + dz : nz + 1 + dz,
+                ]
+    center = p[1:-1, 1:-1, 1:-1]
+    # 27*c - (sum_27 - c) = 28*c - sum_27
+    return (28.0 * center - acc).astype(jnp.float32)
+
+
+# -- Hydro update (LULESH-flavoured) -------------------------------------------
+
+HYDRO_GAMMA = 1.4
+HYDRO_QCOEF = 2.0
+HYDRO_CFL = 0.4
+HYDRO_DX = 1.0
+HYDRO_SS_FLOOR = 1e-6
+
+
+def hydro_ref(e, u_halo, dt):
+    """One explicit hydro step on a 3D grid.
+
+    e:      (nx, ny, nz) float32 internal energy per element.
+    u_halo: (nx+2, ny+2, nz+2) float32 velocity-divergence carrier field,
+            one-cell halo in place (zero at the global boundary).
+    dt:     scalar float32 time step.
+
+    Returns (e', u', dt_elem):
+      div     = 6-neighbour Laplacian of u (divergence proxy)
+      q       = QCOEF * div^2 on compression (div < 0), else 0
+      p       = (GAMMA - 1) * e                       (ideal-gas EOS)
+      e'      = e - dt * (p + q) * div                (pdV work + shock heating)
+      u'      = u + dt * (p + q)                      (pressure drives the flow)
+      ss      = sqrt(GAMMA * max(p, floor))           (sound speed)
+      dt_elem = CFL * DX / (ss + |u'|)                (Courant candidate)
+
+    The p-driven velocity update closes the e <-> u coupling loop (a pressure
+    spike accelerates the carrier field, whose divergence then does pdV work
+    on neighbouring elements), giving Sedov-like energy spreading with the
+    same stencil/EOS/viscosity/Courant structure as LULESH's Lagrange leapfrog.
+    The global dt for the next step is min(dt_elem) allreduced across ranks
+    by the L3 coordinator.
+    """
+    e = jnp.asarray(e)
+    u = jnp.asarray(u_halo)
+    uc = u[1:-1, 1:-1, 1:-1]
+    lap = (
+        u[2:, 1:-1, 1:-1]
+        + u[:-2, 1:-1, 1:-1]
+        + u[1:-1, 2:, 1:-1]
+        + u[1:-1, :-2, 1:-1]
+        + u[1:-1, 1:-1, 2:]
+        + u[1:-1, 1:-1, :-2]
+        - 6.0 * uc
+    )
+    div = lap
+    q = HYDRO_QCOEF * jnp.where(div < 0.0, div * div, 0.0)
+    p = (HYDRO_GAMMA - 1.0) * e
+    e_new = e - dt * (p + q) * div
+    u_new = uc + dt * (p + q)
+    ss = jnp.sqrt(HYDRO_GAMMA * jnp.maximum(p, HYDRO_SS_FLOOR))
+    dt_elem = HYDRO_CFL * HYDRO_DX / (ss + jnp.abs(u_new))
+    return (
+        e_new.astype(jnp.float32),
+        u_new.astype(jnp.float32),
+        dt_elem.astype(jnp.float32),
+    )

@@ -1,0 +1,84 @@
+"""L2: per-rank compute graphs of the three proxy applications (JAX).
+
+Each function below is an AOT entry point: ``aot.py`` lowers it once to HLO
+text and the Rust coordinator (L3) executes the compiled artifact on every
+simulated MPI rank — Python never runs on the request path.
+
+The decomposition mirrors how the real proxy apps interleave compute and MPI:
+
+* CoMD       — one velocity-Verlet step per iteration; the L3 coordinator
+               allreduces (ke, pe) for the conservation diagnostic, exactly
+               where CoMD calls MPI_Allreduce in sumAtoms/eamForce.
+* HPCCG      — one CG iteration is split at its two dot-product allreduces:
+                 matvec   : p (halo'd by L3) -> Ap, local p.Ap
+                 update   : alpha            -> x', r', local r'.r'
+                 direction: beta             -> p'
+               The halo exchange of p before matvec is done by L3 (the
+               exch_externals phase of HPCCG).
+* LULESH     — one fused element update per iteration; L3 min-allreduces the
+               Courant dt candidate (CalcTimeConstraintsForElems).
+
+State that the application checkpoints is exactly the tuple of arrays each
+step consumes/produces; the Rust side serialises those bytes.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.hydro import hydro_step_elems
+from .kernels.lj_force import lj_forces
+from .kernels.stencil27 import stencil27
+
+# -- CoMD: molecular dynamics -------------------------------------------------
+
+
+def comd_step(pos, vel, frc, dt, box):
+    """One velocity-Verlet step with LJ forces (mass = 1).
+
+    pos, vel, frc: (N, 3) float32;  dt, box: () float32.
+    Returns (pos', vel', frc', ke, pe) — ke/pe are rank-local partial sums,
+    allreduced by the coordinator.
+    """
+    n = pos.shape[0]
+    mask = jnp.ones((n,), jnp.float32)
+    vh = vel + 0.5 * dt * frc
+    pos2 = pos + dt * vh
+    pos2 = pos2 - box * jnp.floor(pos2 / box)  # periodic wrap into [0, box)
+    frc2, pe = lj_forces(pos2, mask, box)
+    vel2 = vh + 0.5 * dt * frc2
+    ke = 0.5 * jnp.sum(vel2 * vel2)
+    return pos2, vel2, frc2, ke, pe
+
+
+# -- HPCCG: conjugate-gradient solver ------------------------------------------
+
+
+def hpccg_matvec(p_halo):
+    """Ap = A p over the rank's interior; also the local p.Ap partial.
+
+    p_halo: (nx+2, ny+2, nz+2) with neighbour faces already exchanged by L3.
+    Returns (Ap (nx,ny,nz), pAp ()).
+    """
+    ap = stencil27(p_halo)
+    p_int = p_halo[1:-1, 1:-1, 1:-1]
+    return ap, jnp.sum(p_int * ap)
+
+
+def hpccg_update(x, r, p, ap, alpha):
+    """x' = x + alpha p;  r' = r - alpha Ap;  local rr = r'.r'."""
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    return x2, r2, jnp.sum(r2 * r2)
+
+
+def hpccg_direction(r, p, beta):
+    """p' = r + beta p (new search direction)."""
+    return (r + beta * p,)
+
+
+# -- LULESH: explicit hydro ------------------------------------------------------
+
+
+def lulesh_step(e, u_halo, dt):
+    """One fused hydro element update; returns (e', u', local dt_min)."""
+    e2, u2, dtc = hydro_step_elems(e, u_halo, dt)
+    return e2, u2, jnp.min(dtc)

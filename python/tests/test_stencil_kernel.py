@@ -1,0 +1,100 @@
+"""L1 correctness: Pallas 27-point stencil SpMV vs the pure-jnp oracle,
+plus algebraic properties of the HPCCG operator (SPD-related identities)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.stencil27 import stencil27, _pick_tz
+
+
+def rand_halo(nx, ny, nz, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((nx + 2, ny + 2, nz + 2)).astype(np.float32)
+
+
+def check(ph):
+    a_k = np.asarray(stencil27(jnp.asarray(ph)))
+    a_r = np.asarray(ref.stencil27_ref(ph))
+    np.testing.assert_allclose(a_k, a_r, atol=1e-4, rtol=1e-5)
+
+
+def test_cube_16():
+    check(rand_halo(16, 16, 16, 0))
+
+
+def test_non_cubic():
+    check(rand_halo(8, 12, 10, 1))
+
+
+def test_slab_thickness_one():
+    # nz prime -> TZ=1 path
+    assert _pick_tz(7) == 7 or 7 % _pick_tz(7) == 0
+    check(rand_halo(6, 6, 7, 2))
+
+
+def test_min_domain():
+    check(rand_halo(1, 1, 1, 3))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    nx=st.integers(min_value=1, max_value=20),
+    ny=st.integers(min_value=1, max_value=20),
+    nz=st.integers(min_value=1, max_value=20),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_shapes(nx, ny, nz, seed):
+    check(rand_halo(nx, ny, nz, seed))
+
+
+def test_constant_field_interior():
+    """With a constant field and full halo, Ap = (27-26)*c = c."""
+    ph = np.full((10, 10, 10), 3.0, np.float32)
+    ap = np.asarray(stencil27(jnp.asarray(ph)))
+    np.testing.assert_allclose(ap, 3.0, rtol=1e-6)
+
+
+def test_zero_halo_boundary_row_sum():
+    """Interior cell of ones with zero halo: boundary cells see fewer
+    neighbours, so Ap at a corner = 27 - 7 = 20 (7 interior neighbours)."""
+    ph = np.zeros((6, 6, 6), np.float32)
+    ph[1:-1, 1:-1, 1:-1] = 1.0
+    ap = np.asarray(stencil27(jnp.asarray(ph)))
+    assert ap[0, 0, 0] == pytest.approx(27.0 - 7.0)
+    assert ap[1, 1, 1] == pytest.approx(27.0 - 26.0)
+
+
+def test_linearity():
+    a = rand_halo(8, 8, 8, 4)
+    b = rand_halo(8, 8, 8, 5)
+    lhs = np.asarray(stencil27(jnp.asarray(a + 2.0 * b)))
+    rhs = np.asarray(stencil27(jnp.asarray(a))) + 2.0 * np.asarray(
+        stencil27(jnp.asarray(b))
+    )
+    np.testing.assert_allclose(lhs, rhs, atol=1e-3)
+
+
+def test_operator_symmetry_via_inner_products():
+    """<Au, v> == <u, Av> for zero-halo (Dirichlet) fields — A is symmetric."""
+    rng = np.random.default_rng(6)
+    u = np.zeros((10, 10, 10), np.float32)
+    v = np.zeros((10, 10, 10), np.float32)
+    u[1:-1, 1:-1, 1:-1] = rng.standard_normal((8, 8, 8)).astype(np.float32)
+    v[1:-1, 1:-1, 1:-1] = rng.standard_normal((8, 8, 8)).astype(np.float32)
+    au = np.asarray(stencil27(jnp.asarray(u)))
+    av = np.asarray(stencil27(jnp.asarray(v)))
+    lhs = float(np.sum(au * v[1:-1, 1:-1, 1:-1]))
+    rhs = float(np.sum(u[1:-1, 1:-1, 1:-1] * av))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-2)
+
+
+def test_positive_definite_quadratic_form():
+    """<Au, u> > 0 for nonzero u (diagonally dominant M-matrix)."""
+    rng = np.random.default_rng(7)
+    u = np.zeros((10, 10, 10), np.float32)
+    u[1:-1, 1:-1, 1:-1] = rng.standard_normal((8, 8, 8)).astype(np.float32)
+    au = np.asarray(stencil27(jnp.asarray(u)))
+    assert float(np.sum(au * u[1:-1, 1:-1, 1:-1])) > 0.0

@@ -1,0 +1,31 @@
+//! Bench: regenerate Figure 4 (total execution time breakdown under a
+//! process failure) on the modeled backend. `cargo bench --bench
+//! fig4_total_time`. For the full-fidelity version use
+//! `reinitpp reproduce --figure 4`.
+
+use reinitpp::config::{ExperimentConfig, Fidelity};
+use reinitpp::harness::{fig4, SweepOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let mut base = ExperimentConfig::default();
+    base.trials = 5;
+    base.iters = 10;
+    base.fidelity = Fidelity::Modeled;
+    // small per-rank domains keep 1024-rank modeled sweeps tractable;
+    // the figure *shapes* come from the protocols, not the compute size
+    base.hpccg_nx = 8;
+    base.comd_n = 32;
+    base.lulesh_nx = 8;
+    let opts = SweepOpts {
+        max_ranks: 1024,
+        outdir: "results/bench".into(),
+    };
+    let points = fig4(&base, None, &opts);
+    eprintln!(
+        "\nfig4: {} points, {} trials each, host wall {:.1} s",
+        points.len(),
+        base.trials,
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate Figure 5 (pure application time weak scaling; shows
+//! the ULFM fault-free inflation) on the modeled backend.
+
+use reinitpp::config::{ExperimentConfig, Fidelity};
+use reinitpp::harness::{fig5, SweepOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let mut base = ExperimentConfig::default();
+    base.trials = 5;
+    base.iters = 10;
+    base.fidelity = Fidelity::Modeled;
+    // small per-rank domains keep 1024-rank modeled sweeps tractable;
+    // the figure *shapes* come from the protocols, not the compute size
+    base.hpccg_nx = 8;
+    base.comd_n = 32;
+    base.lulesh_nx = 8;
+    let opts = SweepOpts {
+        max_ranks: 1024,
+        outdir: "results/bench".into(),
+    };
+    let points = fig5(&base, None, &opts);
+    eprintln!(
+        "\nfig5: {} points, host wall {:.1} s",
+        points.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,51 @@
+//! Bench: regenerate Figure 6 (MPI recovery time, process failure) on the
+//! modeled backend, and verify the paper's headline ratios.
+
+use reinitpp::config::{AppKind, ExperimentConfig, Fidelity, RecoveryKind};
+use reinitpp::harness::{fig6, SweepOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let mut base = ExperimentConfig::default();
+    base.trials = 5;
+    base.iters = 10;
+    base.fidelity = Fidelity::Modeled;
+    // small per-rank domains keep 1024-rank modeled sweeps tractable;
+    // the figure *shapes* come from the protocols, not the compute size
+    base.hpccg_nx = 8;
+    base.comd_n = 32;
+    base.lulesh_nx = 8;
+    let opts = SweepOpts {
+        max_ranks: 1024,
+        outdir: "results/bench".into(),
+    };
+    let points = fig6(&base, None, &opts);
+
+    let mean = |rk: RecoveryKind, ranks: u32| {
+        points
+            .iter()
+            .find(|p| {
+                p.cfg.recovery == rk && p.cfg.ranks == ranks && p.cfg.app == AppKind::Hpccg
+            })
+            .map(|p| p.recovery.mean)
+            .unwrap_or(f64::NAN)
+    };
+    eprintln!("\npaper headline checks (HPCCG):");
+    eprintln!(
+        "  CR/Reinit++ at 1024 ranks: {:.1}x (paper: up to 6x)",
+        mean(RecoveryKind::Cr, 1024) / mean(RecoveryKind::Reinit, 1024)
+    );
+    eprintln!(
+        "  ULFM/Reinit++ at 1024 ranks: {:.1}x (paper: up to 3x)",
+        mean(RecoveryKind::Ulfm, 1024) / mean(RecoveryKind::Reinit, 1024)
+    );
+    eprintln!(
+        "  ULFM/Reinit++ at 64 ranks: {:.1}x (paper: on par)",
+        mean(RecoveryKind::Ulfm, 64) / mean(RecoveryKind::Reinit, 64)
+    );
+    eprintln!(
+        "fig6: {} points, host wall {:.1} s",
+        points.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

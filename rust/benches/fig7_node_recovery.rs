@@ -1,0 +1,43 @@
+//! Bench: regenerate Figure 7 (MPI recovery time, node failure; CR vs
+//! Reinit++, file checkpointing) on the modeled backend.
+
+use reinitpp::config::{AppKind, ExperimentConfig, Fidelity, RecoveryKind};
+use reinitpp::harness::{fig7, SweepOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let mut base = ExperimentConfig::default();
+    base.trials = 5;
+    base.iters = 10;
+    base.fidelity = Fidelity::Modeled;
+    // small per-rank domains keep 1024-rank modeled sweeps tractable;
+    // the figure *shapes* come from the protocols, not the compute size
+    base.hpccg_nx = 8;
+    base.comd_n = 32;
+    base.lulesh_nx = 8;
+    base.spare_nodes = 1;
+    let opts = SweepOpts {
+        max_ranks: 1024,
+        outdir: "results/bench".into(),
+    };
+    let points = fig7(&base, None, &opts);
+
+    let mean = |rk: RecoveryKind, ranks: u32| {
+        points
+            .iter()
+            .find(|p| {
+                p.cfg.recovery == rk && p.cfg.ranks == ranks && p.cfg.app == AppKind::Hpccg
+            })
+            .map(|p| p.recovery.mean)
+            .unwrap_or(f64::NAN)
+    };
+    eprintln!(
+        "\nCR/Reinit++ node-failure recovery at 1024 ranks: {:.1}x (paper: ~2x)",
+        mean(RecoveryKind::Cr, 1024) / mean(RecoveryKind::Reinit, 1024)
+    );
+    eprintln!(
+        "fig7: {} points, host wall {:.1} s",
+        points.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

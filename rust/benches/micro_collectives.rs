@@ -1,0 +1,51 @@
+//! Micro-bench: the MPI layer's collectives — virtual-time latency (the
+//! quantity the figures depend on) and host-side simulation cost per
+//! collective across the paper's rank counts.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use reinitpp::cluster::Topology;
+use reinitpp::config::Calibration;
+use reinitpp::mpi::{FtMode, MpiJob, ReduceOp};
+use reinitpp::sim::Sim;
+
+fn bench_allreduce(ranks: u32, reps: u32) -> (f64, f64, u64) {
+    let sim = Sim::new();
+    let topo = Topology::new(ranks, 16, 0);
+    let job = MpiJob::new(&sim, topo, FtMode::Reinit, &Calibration::default());
+    let done_at = Rc::new(RefCell::new(0.0f64));
+    for r in 0..ranks {
+        let j2 = job.clone();
+        let d2 = Rc::clone(&done_at);
+        let node = topo.home_node(r);
+        let p = sim.spawn_process(format!("r{r}"));
+        let sim2 = sim.clone();
+        sim.spawn(p, async move {
+            let c = j2.attach(r, node);
+            for _ in 0..reps {
+                c.allreduce_scalar(1.0, ReduceOp::Sum).await.unwrap();
+            }
+            if r == 0 {
+                *d2.borrow_mut() = sim2.now().secs_f64();
+            }
+        });
+    }
+    let t0 = Instant::now();
+    let s = sim.run();
+    let host = t0.elapsed().as_secs_f64();
+    let virt_per_op = *done_at.borrow() / reps as f64;
+    (virt_per_op * 1e6, host / reps as f64 * 1e3, s.events)
+}
+
+fn main() {
+    println!("| ranks | allreduce virtual latency (µs) | host cost/op (ms) | total events |");
+    println!("|---|---|---|---|");
+    for ranks in [16u32, 64, 256, 1024] {
+        let reps = 20;
+        let (virt_us, host_ms, events) = bench_allreduce(ranks, reps);
+        println!("| {ranks} | {virt_us:.1} | {host_ms:.2} | {events} |");
+    }
+    println!("\n(virtual latency should grow ~log2(ranks): tree allreduce)");
+}

@@ -1,0 +1,88 @@
+//! Micro-bench: raw throughput of the virtual-time DES executor — the L3
+//! hot path every experiment rides on. Reports host events/second for
+//! timer storms, task churn, and channel messaging.
+
+use std::time::Instant;
+
+use reinitpp::sim::{channel, Sim, SimDuration};
+
+fn bench_timer_storm(tasks: u64, sleeps: u64) -> (f64, u64) {
+    let sim = Sim::new();
+    let p = sim.spawn_process("bench");
+    for i in 0..tasks {
+        let s2 = sim.clone();
+        sim.spawn(p, async move {
+            for k in 0..sleeps {
+                s2.sleep(SimDuration::from_nanos(1 + (i * 7 + k) % 97)).await;
+            }
+        });
+    }
+    let t0 = Instant::now();
+    let summary = sim.run();
+    (t0.elapsed().as_secs_f64(), summary.events + summary.polls)
+}
+
+fn bench_channel_pingpong(pairs: u64, msgs: u64) -> (f64, u64) {
+    let sim = Sim::new();
+    let mut count = 0u64;
+    for i in 0..pairs {
+        let p = sim.spawn_process(format!("p{i}"));
+        let (tx_a, rx_a) = channel::<u64>(&sim);
+        let (tx_b, rx_b) = channel::<u64>(&sim);
+        sim.spawn(p, async move {
+            for k in 0..msgs {
+                tx_a.send(k, SimDuration::from_nanos(100));
+                let _ = rx_b.recv().await;
+            }
+        });
+        sim.spawn(p, async move {
+            for _ in 0..msgs {
+                let v = rx_a.recv().await.unwrap();
+                tx_b.send(v, SimDuration::from_nanos(100));
+            }
+        });
+        count += msgs * 2;
+    }
+    let t0 = Instant::now();
+    sim.run();
+    (t0.elapsed().as_secs_f64(), count)
+}
+
+fn bench_process_churn(n: u64) -> (f64, u64) {
+    let sim = Sim::new();
+    for i in 0..n {
+        let p = sim.spawn_process(format!("c{i}"));
+        let s2 = sim.clone();
+        sim.spawn(p, async move {
+            s2.sleep(SimDuration::from_micros(1)).await;
+        });
+        let s3 = sim.clone();
+        sim.schedule(SimDuration::from_nanos(500), move || s3.kill(p));
+    }
+    let t0 = Instant::now();
+    let summary = sim.run();
+    (t0.elapsed().as_secs_f64(), summary.events)
+}
+
+fn main() {
+    println!("| micro-bench | work | host time (s) | rate |");
+    println!("|---|---|---|---|");
+
+    let (dt, events) = bench_timer_storm(1_000, 200);
+    println!(
+        "| timer storm | {events} events+polls | {dt:.3} | {:.2} M/s |",
+        events as f64 / dt / 1e6
+    );
+
+    let (dt, msgs) = bench_channel_pingpong(500, 200);
+    println!(
+        "| channel ping-pong | {msgs} msgs | {dt:.3} | {:.2} M msg/s |",
+        msgs as f64 / dt / 1e6
+    );
+
+    let (dt, _events) = bench_process_churn(20_000);
+    println!(
+        "| process spawn+kill | 20000 procs | {dt:.3} | {:.0} k proc/s |",
+        20_000.0 / dt / 1e3
+    );
+}

@@ -1,0 +1,155 @@
+//! Compute backends: how a simulated rank's per-iteration compute runs and
+//! what it charges to virtual time.
+//!
+//! - `Xla`: execute the real AOT artifact via PJRT; charge the *measured*
+//!   wall time (full fidelity — the paper's "pure application time").
+//! - `Native`: execute the pure-Rust oracle; charge a deterministic
+//!   analytic cost (unit tests, bitwise-reproducible protocol runs).
+//! - `Ghost`: skip the math, emit zeros of the right shape; charge the
+//!   live ranks' running-average measured cost (fast fidelity at 256-1024
+//!   ranks — DESIGN.md §8).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::native;
+use crate::runtime::{ArrayF32, XlaRuntime};
+use crate::sim::SimDuration;
+
+/// Shared per-artifact running average of measured compute cost (seconds).
+/// Live ranks record; ghost ranks replay.
+#[derive(Clone, Default)]
+pub struct CostTracker {
+    inner: Rc<RefCell<HashMap<String, (f64, u64)>>>, // (mean, count)
+}
+
+impl CostTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, name: &str, secs: f64) {
+        let mut m = self.inner.borrow_mut();
+        let e = m.entry(name.to_string()).or_insert((0.0, 0));
+        e.1 += 1;
+        e.0 += (secs - e.0) / e.1 as f64;
+    }
+
+    pub fn mean(&self, name: &str) -> Option<f64> {
+        self.inner.borrow().get(name).map(|(m, _)| *m)
+    }
+}
+
+enum Inner {
+    Xla {
+        rt: Rc<XlaRuntime>,
+        tracker: CostTracker,
+    },
+    Native,
+    Ghost {
+        tracker: CostTracker,
+    },
+}
+
+/// A rank's compute engine (cheap to clone, shared within a trial).
+#[derive(Clone)]
+pub struct ComputeBackend {
+    inner: Rc<Inner>,
+}
+
+impl ComputeBackend {
+    pub fn xla(rt: Rc<XlaRuntime>, tracker: CostTracker) -> Self {
+        ComputeBackend {
+            inner: Rc::new(Inner::Xla { rt, tracker }),
+        }
+    }
+
+    pub fn native() -> Self {
+        ComputeBackend {
+            inner: Rc::new(Inner::Native),
+        }
+    }
+
+    pub fn ghost(tracker: CostTracker) -> Self {
+        ComputeBackend {
+            inner: Rc::new(Inner::Ghost { tracker }),
+        }
+    }
+
+    pub fn is_ghost(&self) -> bool {
+        matches!(*self.inner, Inner::Ghost { .. })
+    }
+
+    /// Run kernel `name`; returns outputs + the virtual compute cost to
+    /// charge (the caller sleeps it, possibly scaled by the ULFM factor).
+    pub fn execute(&self, name: &str, inputs: &[ArrayF32]) -> (Vec<ArrayF32>, SimDuration) {
+        match &*self.inner {
+            Inner::Xla { rt, tracker } => {
+                let (outs, wall) = rt
+                    .execute(name, inputs)
+                    .unwrap_or_else(|e| panic!("XLA execute {name}: {e:#}"));
+                let secs = wall.as_secs_f64();
+                tracker.record(name, secs);
+                (outs, SimDuration::from_secs_f64(secs))
+            }
+            Inner::Native => {
+                let outs = native::execute(name, inputs);
+                (outs, SimDuration::from_secs_f64(native::modeled_cost_s(name)))
+            }
+            Inner::Ghost { tracker } => {
+                let shapes = native::output_shapes(name);
+                let outs = shapes.iter().map(|s| ArrayF32::zeros(s)).collect();
+                let secs = tracker
+                    .mean(name)
+                    .unwrap_or_else(|| native::modeled_cost_s(name));
+                (outs, SimDuration::from_secs_f64(secs))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_running_mean() {
+        let t = CostTracker::new();
+        t.record("k", 1.0);
+        t.record("k", 3.0);
+        assert_eq!(t.mean("k"), Some(2.0));
+        assert_eq!(t.mean("other"), None);
+    }
+
+    #[test]
+    fn native_backend_charges_deterministic_cost() {
+        let b = ComputeBackend::native();
+        let nx = 4usize;
+        let ph = ArrayF32::zeros(&[nx + 2, nx + 2, nx + 2]);
+        let (outs, c1) = b.execute("hpccg_matvec_4", &[ph.clone()]);
+        let (_, c2) = b.execute("hpccg_matvec_4", &[ph]);
+        assert_eq!(c1, c2);
+        assert_eq!(outs[0].shape, vec![4, 4, 4]);
+    }
+
+    #[test]
+    fn ghost_backend_zeros_and_replayed_cost() {
+        let t = CostTracker::new();
+        t.record("hpccg_matvec_4", 0.125);
+        let b = ComputeBackend::ghost(t);
+        let ph = ArrayF32::zeros(&[6, 6, 6]);
+        let (outs, cost) = b.execute("hpccg_matvec_4", &[ph]);
+        assert!(outs[0].data.iter().all(|&v| v == 0.0));
+        assert_eq!(cost, SimDuration::from_secs_f64(0.125));
+        assert!(b.is_ghost());
+    }
+
+    #[test]
+    fn ghost_without_observations_falls_back_to_model() {
+        let b = ComputeBackend::ghost(CostTracker::new());
+        let ph = ArrayF32::zeros(&[6, 6, 6]);
+        let (_, cost) = b.execute("hpccg_matvec_4", &[ph]);
+        assert!(cost > SimDuration::ZERO);
+    }
+}

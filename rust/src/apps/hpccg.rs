@@ -1,0 +1,200 @@
+//! HPCCG proxy: distributed conjugate gradient on the 27-point stencil
+//! operator, weak-scaled with an nx³ subdomain per rank.
+//!
+//! The CG iteration is split at its two allreduce points exactly like the
+//! real HPCCG (ddot after the matvec for alpha, ddot on the new residual for
+//! beta) with a 6-face halo exchange of the search direction before each
+//! matvec (exch_externals). All reductions run through the deterministic
+//! tree allreduce, so the distributed solve is bitwise reproducible.
+
+use super::halo::{build_halo, exchange_faces, grid3};
+use super::{decode_blocks, encode_blocks, AppState, LocalBoxFuture, StepCtx};
+use crate::mpi::{MpiError, ReduceOp};
+use crate::runtime::ArrayF32;
+use crate::sim::rng::Rng;
+
+/// Factory for per-rank HPCCG state.
+pub struct HpccgApp {
+    pub nx: u32,
+    pub seed: u64,
+}
+
+impl super::App for HpccgApp {
+    fn name(&self) -> String {
+        format!("hpccg_nx{}", self.nx)
+    }
+
+    fn new_state(&self, rank: u32, size: u32) -> Box<dyn AppState> {
+        Box::new(HpccgState::new(self.nx as usize, self.seed, rank, size))
+    }
+}
+
+pub struct HpccgState {
+    _rank: u32,
+    dims: (u32, u32, u32),
+    nx: usize,
+    x: Vec<f32>,
+    r: Vec<f32>,
+    p: Vec<f32>,
+    /// Global r.r of the current residual (valid once rr_init).
+    rr: f32,
+    rr_init: bool,
+    /// Residual norm ratio (diagnostic).
+    pub rel_residual: f32,
+    rr0: f32,
+}
+
+impl HpccgState {
+    pub fn new(nx: usize, seed: u64, rank: u32, size: u32) -> Self {
+        let mut rng = Rng::new(seed).fork(&format!("hpccg-init-r{rank}"));
+        let n = nx * nx * nx;
+        let b: Vec<f32> = (0..n).map(|_| rng.gen_f32_range(-0.5, 0.5)).collect();
+        HpccgState {
+            _rank: rank,
+            dims: grid3(size),
+            nx,
+            x: vec![0.0; n],
+            r: b.clone(),
+            p: b,
+            rr: 0.0,
+            rr_init: false,
+            rel_residual: 1.0,
+            rr0: 0.0,
+        }
+    }
+
+    fn shape(&self) -> Vec<usize> {
+        vec![self.nx, self.nx, self.nx]
+    }
+}
+
+impl AppState for HpccgState {
+    fn serialize(&self) -> Vec<u8> {
+        let scalars = [
+            self.rr,
+            if self.rr_init { 1.0 } else { 0.0 },
+            self.rel_residual,
+            self.rr0,
+        ];
+        encode_blocks(&[&self.x, &self.r, &self.p, &scalars])
+    }
+
+    fn restore(&mut self, bytes: &[u8]) {
+        let blocks = decode_blocks(bytes);
+        assert_eq!(blocks.len(), 4, "HPCCG checkpoint layout");
+        self.x = blocks[0].clone();
+        self.r = blocks[1].clone();
+        self.p = blocks[2].clone();
+        self.rr = blocks[3][0];
+        self.rr_init = blocks[3][1] != 0.0;
+        self.rel_residual = blocks[3][2];
+        self.rr0 = blocks[3][3];
+    }
+
+    fn diagnostic(&self) -> f64 {
+        self.rel_residual as f64
+    }
+
+    fn step<'a>(
+        &'a mut self,
+        cx: StepCtx<'a>,
+        _iter: u32,
+    ) -> LocalBoxFuture<'a, Result<(), MpiError>> {
+        Box::pin(async move {
+            let nx = self.nx;
+            if !self.rr_init {
+                let local: f32 = self.r.iter().map(|v| v * v).sum();
+                self.rr = cx.comm.allreduce_scalar(local, ReduceOp::Sum).await?;
+                self.rr0 = self.rr;
+                self.rr_init = true;
+            }
+            // exch_externals: ship p's faces to the 6 neighbours
+            let faces = exchange_faces(cx.comm, self.dims, &self.p, nx).await?;
+            let p_halo = build_halo(&self.p, nx, &faces);
+
+            let mut outs = cx
+                .run_kernel(
+                    &format!("hpccg_matvec_{nx}"),
+                    &[ArrayF32::new(vec![nx + 2, nx + 2, nx + 2], p_halo)],
+                )
+                .await;
+            let pap_local = outs[1].as_scalar();
+            let ap = std::mem::take(&mut outs[0].data);
+            let pap = cx.comm.allreduce_scalar(pap_local, ReduceOp::Sum).await?;
+            let alpha = if pap != 0.0 { self.rr / pap } else { 0.0 };
+
+            let mut outs = cx
+                .run_kernel(
+                    &format!("hpccg_update_{nx}"),
+                    &[
+                        ArrayF32::new(self.shape(), self.x.clone()),
+                        ArrayF32::new(self.shape(), self.r.clone()),
+                        ArrayF32::new(self.shape(), self.p.clone()),
+                        ArrayF32::new(self.shape(), ap),
+                        ArrayF32::scalar(alpha),
+                    ],
+                )
+                .await;
+            let rr_local = outs[2].as_scalar();
+            self.x = std::mem::take(&mut outs[0].data);
+            self.r = std::mem::take(&mut outs[1].data);
+            let rr_new = cx.comm.allreduce_scalar(rr_local, ReduceOp::Sum).await?;
+            let beta = if self.rr != 0.0 { rr_new / self.rr } else { 0.0 };
+
+            let mut outs = cx
+                .run_kernel(
+                    &format!("hpccg_direction_{nx}"),
+                    &[
+                        ArrayF32::new(self.shape(), self.r.clone()),
+                        ArrayF32::new(self.shape(), self.p.clone()),
+                        ArrayF32::scalar(beta),
+                    ],
+                )
+                .await;
+            self.p = std::mem::take(&mut outs[0].data);
+            self.rr = rr_new;
+            self.rel_residual = if self.rr0 > 0.0 {
+                (rr_new / self.rr0).sqrt()
+            } else {
+                0.0
+            };
+            Ok(())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::App;
+
+    #[test]
+    fn init_deterministic_and_rank_distinct() {
+        let a = HpccgState::new(8, 5, 0, 8);
+        let b = HpccgState::new(8, 5, 0, 8);
+        let c = HpccgState::new(8, 5, 1, 8);
+        assert_eq!(a.r, b.r);
+        assert_ne!(a.r, c.r);
+        assert!(a.x.iter().all(|&v| v == 0.0));
+        assert_eq!(a.r, a.p, "p0 = r0 = b");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let app = HpccgApp { nx: 8, seed: 5 };
+        let a = app.new_state(2, 8);
+        let mut b = app.new_state(3, 8);
+        assert_ne!(a.digest(), b.digest());
+        b.restore(&a.serialize());
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn checkpoint_size_matches_three_vectors() {
+        let app = HpccgApp { nx: 16, seed: 0 };
+        let s = app.new_state(0, 1);
+        let bytes = s.serialize().len();
+        let expect = 4 + 4 * 4 + 3 * 16 * 16 * 16 * 4 + 4 * 4;
+        assert_eq!(bytes, expect);
+    }
+}

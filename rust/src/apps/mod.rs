@@ -1,0 +1,191 @@
+//! The three weak-scaled proxy applications (paper Table 1) and the compute
+//! backends they run on.
+//!
+//! Each app is a per-rank state machine: `step` performs one main-loop
+//! iteration — kernel execution (XLA artifact / native oracle / ghost) plus
+//! the MPI phases the real proxy app does in that spot (halo exchange,
+//! allreduce). `serialize`/`restore` define the checkpoint payload; the
+//! rank driver in `recovery::job` owns the loop, fault injection and
+//! checkpoint cadence (the paper's Fig. 2 `foo` pattern).
+
+pub mod backend;
+pub mod halo;
+pub mod native;
+
+mod comd;
+mod hpccg;
+mod lulesh;
+
+pub use backend::{ComputeBackend, CostTracker};
+pub use comd::ComdApp;
+pub use hpccg::HpccgApp;
+pub use lulesh::LuleshApp;
+
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+
+use crate::config::{AppKind, ExperimentConfig};
+use crate::mpi::{Comm, MpiError};
+use crate::sim::Sim;
+
+/// Boxed local future (single-threaded executor: no Send bound).
+pub type LocalBoxFuture<'a, T> = Pin<Box<dyn Future<Output = T> + 'a>>;
+
+/// What a step needs from the environment.
+pub struct StepCtx<'a> {
+    pub sim: &'a Sim,
+    pub comm: &'a Comm,
+    pub backend: &'a ComputeBackend,
+}
+
+impl StepCtx<'_> {
+    /// Execute a kernel and charge its virtual cost (scaled by the ULFM
+    /// fault-tolerance overhead factor — the Fig. 5 inflation).
+    pub async fn run_kernel(
+        &self,
+        name: &str,
+        inputs: &[crate::runtime::ArrayF32],
+    ) -> Vec<crate::runtime::ArrayF32> {
+        let (outs, cost) = self.backend.execute(name, inputs);
+        let f = self.comm.fault_tolerance_compute_factor();
+        self.sim
+            .sleep(crate::sim::SimDuration::from_secs_f64(cost.secs_f64() * f))
+            .await;
+        outs
+    }
+}
+
+/// Per-rank application state.
+pub trait AppState {
+    /// Checkpoint payload (paper: what the app saves every iteration).
+    fn serialize(&self) -> Vec<u8>;
+    /// Restore from a checkpoint payload.
+    fn restore(&mut self, bytes: &[u8]);
+    /// Order-stable content hash (equivalence tests).
+    fn digest(&self) -> u64 {
+        fnv1a(&self.serialize())
+    }
+    /// Scalar progress diagnostic after each step (HPCCG: relative residual;
+    /// CoMD: total energy; LULESH: global dt). Used for the e2e examples'
+    /// convergence traces.
+    fn diagnostic(&self) -> f64 {
+        0.0
+    }
+    /// One main-loop iteration.
+    fn step<'a>(&'a mut self, cx: StepCtx<'a>, iter: u32)
+        -> LocalBoxFuture<'a, Result<(), MpiError>>;
+}
+
+/// Application factory (one per proxy app).
+pub trait App {
+    fn name(&self) -> String;
+    fn new_state(&self, rank: u32, size: u32) -> Box<dyn AppState>;
+}
+
+/// Build the configured app.
+pub fn make_app(cfg: &ExperimentConfig) -> Rc<dyn App> {
+    match cfg.app {
+        AppKind::CoMD => Rc::new(ComdApp {
+            n: cfg.comd_n,
+            seed: cfg.seed,
+        }),
+        AppKind::Hpccg => Rc::new(HpccgApp {
+            nx: cfg.hpccg_nx,
+            seed: cfg.seed,
+        }),
+        AppKind::Lulesh => Rc::new(LuleshApp {
+            nx: cfg.lulesh_nx,
+            seed: cfg.seed,
+        }),
+    }
+}
+
+/// FNV-1a 64-bit (digests).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---- checkpoint codec: length-prefixed f32 blocks -------------------------
+
+/// Serialize f32 blocks: [count u32][len u32, data f32*]*.
+pub fn encode_blocks(parts: &[&[f32]]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(parts.len() as u32).to_le_bytes());
+    for p in parts {
+        out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        for x in *p {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Inverse of `encode_blocks`.
+pub fn decode_blocks(bytes: &[u8]) -> Vec<Vec<f32>> {
+    let mut pos = 0usize;
+    let read_u32 = |pos: &mut usize| {
+        let v = u32::from_le_bytes(bytes[*pos..*pos + 4].try_into().unwrap());
+        *pos += 4;
+        v
+    };
+    let count = read_u32(&mut pos) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let len = read_u32(&mut pos) as usize;
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(f32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()));
+            pos += 4;
+        }
+        out.push(v);
+    }
+    assert_eq!(pos, bytes.len(), "trailing checkpoint bytes");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_codec_roundtrip() {
+        let a = vec![1.0f32, -2.5, 3.25];
+        let b = vec![0.0f32];
+        let c: Vec<f32> = vec![];
+        let enc = encode_blocks(&[&a, &b, &c]);
+        assert_eq!(decode_blocks(&enc), vec![a, b, c]);
+    }
+
+    #[test]
+    fn fnv_distinguishes() {
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+    }
+
+    #[test]
+    fn make_app_dispatch() {
+        let mut cfg = ExperimentConfig::default();
+        for (kind, name) in [
+            (AppKind::CoMD, "comd"),
+            (AppKind::Hpccg, "hpccg"),
+            (AppKind::Lulesh, "lulesh"),
+        ] {
+            cfg.app = kind;
+            assert!(make_app(&cfg).name().starts_with(name));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "trailing checkpoint bytes")]
+    fn decode_rejects_garbage_suffix() {
+        let mut enc = encode_blocks(&[&[1.0f32]]);
+        enc.push(0);
+        decode_blocks(&enc);
+    }
+}

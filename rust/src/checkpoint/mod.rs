@@ -1,0 +1,7 @@
+//! Application-level checkpointing: serialization, the Table 2 policy, and
+//! the two storage schemes (file on the Lustre model; local+buddy memory).
+
+pub mod policy;
+mod store;
+
+pub use store::CkptStore;

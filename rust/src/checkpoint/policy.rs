@@ -1,0 +1,54 @@
+//! The paper's Table 2: which checkpoint storage each recovery approach uses
+//! for each failure type.
+//!
+//! | failure  | CR   | ULFM   | Reinit++ |
+//! |----------|------|--------|----------|
+//! | process  | file | memory | memory   |
+//! | node     | file | file   | file     |
+//!
+//! CR always needs permanent storage (the job is re-deployed, local memory
+//! is gone). Memory/buddy checkpoints only survive single-process failures:
+//! a node failure can wipe both the local and the buddy copy.
+
+use crate::config::{CkptKind, FailureKind, RecoveryKind};
+
+/// Default scheme per the paper's Table 2. Fault-free runs keep the scheme
+/// they would use under a process failure (checkpoints are written either
+/// way; the paper's Fig. 4 breakdown needs the write cost).
+pub fn default_scheme(recovery: RecoveryKind, failure: FailureKind) -> CkptKind {
+    match (recovery, failure) {
+        (RecoveryKind::Cr, _) => CkptKind::File,
+        (_, FailureKind::Node) => CkptKind::File,
+        (RecoveryKind::Ulfm | RecoveryKind::Reinit, _) => CkptKind::Memory,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matrix() {
+        use CkptKind::*;
+        use FailureKind::*;
+        use RecoveryKind::*;
+        assert_eq!(default_scheme(Cr, Process), File);
+        assert_eq!(default_scheme(Ulfm, Process), Memory);
+        assert_eq!(default_scheme(Reinit, Process), Memory);
+        assert_eq!(default_scheme(Cr, Node), File);
+        assert_eq!(default_scheme(Ulfm, Node), File);
+        assert_eq!(default_scheme(Reinit, Node), File);
+    }
+
+    #[test]
+    fn fault_free_uses_process_column() {
+        assert_eq!(
+            default_scheme(RecoveryKind::Reinit, FailureKind::None),
+            CkptKind::Memory
+        );
+        assert_eq!(
+            default_scheme(RecoveryKind::Cr, FailureKind::None),
+            CkptKind::File
+        );
+    }
+}

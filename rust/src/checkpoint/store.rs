@@ -1,0 +1,346 @@
+//! Checkpoint storage engines (paper §4 "Checkpointing").
+//!
+//! Two schemes, as in the paper's own "simple checkpointing library":
+//!
+//! - **File**: every rank writes its state to the shared parallel
+//!   filesystem (`fs::SharedDisk` contention model). Survives anything;
+//!   the only option for CR and for node failures (Table 2).
+//! - **Memory**: every rank keeps its checkpoint in its own memory *and*
+//!   pushes a copy to a buddy — the cyclically next rank (Zheng et al.,
+//!   as cited by the paper). A process failure loses the local copy but
+//!   the buddy copy survives; a node failure may wipe both, which is why
+//!   Table 2 forbids this scheme for node failures.
+//!
+//! Loss semantics are explicit: the DES keeps all bytes outside the
+//! simulated processes, so the fault injector must call `lose_rank` /
+//! `lose_node` to model memory destruction.
+//!
+//! Stores retain the last two iterations per rank: ranks can be one
+//! checkpoint apart when a failure lands, and global-restart needs the
+//! newest *globally complete* one (agreed via an allreduce-min after
+//! recovery).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::cluster::Topology;
+use crate::config::{Calibration, CkptKind};
+use crate::fs::SharedDisk;
+use crate::sim::{Sim, SimDuration};
+use crate::transport::NetCost;
+
+/// Per-rank slot holding the last two checkpoints.
+#[derive(Default, Clone)]
+struct Slot {
+    /// (iteration, payload), newest last. Length <= 2.
+    entries: Vec<(u32, Rc<Vec<u8>>)>,
+}
+
+impl Slot {
+    fn put(&mut self, iter: u32, data: Rc<Vec<u8>>) {
+        self.entries.retain(|(i, _)| *i != iter);
+        self.entries.push((iter, data));
+        self.entries.sort_by_key(|(i, _)| *i);
+        while self.entries.len() > 2 {
+            self.entries.remove(0);
+        }
+    }
+
+    fn get(&self, iter: u32) -> Option<Rc<Vec<u8>>> {
+        self.entries
+            .iter()
+            .find(|(i, _)| *i == iter)
+            .map(|(_, d)| Rc::clone(d))
+    }
+
+    fn latest(&self) -> Option<u32> {
+        self.entries.last().map(|(i, _)| *i)
+    }
+}
+
+struct Inner {
+    /// Durable file checkpoints (parallel FS).
+    file: HashMap<u32, Slot>,
+    /// In-memory local copy, lives in the owner rank's memory.
+    local: HashMap<u32, Slot>,
+    /// Buddy copy of rank r's checkpoint, lives in rank (r+1)%n's memory.
+    buddy: HashMap<u32, Slot>,
+}
+
+/// Shared checkpoint store for one experiment trial.
+pub struct CkptStore {
+    sim: Sim,
+    scheme: CkptKind,
+    disk: SharedDisk,
+    net: NetCost,
+    mem_bytes_per_sec: f64,
+    topo: Topology,
+    inner: Rc<RefCell<Inner>>,
+}
+
+impl Clone for CkptStore {
+    fn clone(&self) -> Self {
+        CkptStore {
+            sim: self.sim.clone(),
+            scheme: self.scheme,
+            disk: self.disk.clone(),
+            net: self.net.clone(),
+            mem_bytes_per_sec: self.mem_bytes_per_sec,
+            topo: self.topo,
+            inner: Rc::clone(&self.inner),
+        }
+    }
+}
+
+impl CkptStore {
+    pub fn new(sim: &Sim, scheme: CkptKind, topo: Topology, calib: &Calibration) -> Self {
+        CkptStore {
+            sim: sim.clone(),
+            scheme,
+            disk: SharedDisk::from_calib(sim, calib),
+            net: NetCost::from_calib(calib),
+            mem_bytes_per_sec: calib.mem_bw_gbps * 1e9,
+            topo,
+            inner: Rc::new(RefCell::new(Inner {
+                file: HashMap::new(),
+                local: HashMap::new(),
+                buddy: HashMap::new(),
+            })),
+        }
+    }
+
+    pub fn scheme(&self) -> CkptKind {
+        self.scheme
+    }
+
+    fn buddy_of(&self, rank: u32) -> u32 {
+        (rank + 1) % self.topo.ranks
+    }
+
+    fn memcpy_cost(&self, bytes: usize) -> SimDuration {
+        SimDuration::from_secs_f64(bytes as f64 / self.mem_bytes_per_sec)
+    }
+
+    /// Store rank `rank`'s state for `iter`; awaits the (virtual) storage
+    /// cost. `node` is the rank's current placement (buddy transfer cost).
+    pub async fn save(&self, rank: u32, node: u32, iter: u32, data: Vec<u8>) {
+        let data = Rc::new(data);
+        match self.scheme {
+            CkptKind::File => {
+                self.disk.write(data.len() as u64).await;
+                self.inner
+                    .borrow_mut()
+                    .file
+                    .entry(rank)
+                    .or_default()
+                    .put(iter, data);
+            }
+            CkptKind::Memory => {
+                let buddy = self.buddy_of(rank);
+                let buddy_node = self.topo.home_node(buddy.min(self.topo.ranks - 1));
+                // local memcpy, then push to buddy over the fabric
+                self.sim.sleep(self.memcpy_cost(data.len())).await;
+                self.sim
+                    .sleep(self.net.data_delay(data.len(), buddy_node == node))
+                    .await;
+                let mut inner = self.inner.borrow_mut();
+                inner
+                    .local
+                    .entry(rank)
+                    .or_default()
+                    .put(iter, Rc::clone(&data));
+                inner.buddy.entry(rank).or_default().put(iter, data);
+            }
+        }
+    }
+
+    /// Newest iteration available for `rank` (after any losses).
+    pub fn latest_iter(&self, rank: u32) -> Option<u32> {
+        let inner = self.inner.borrow();
+        match self.scheme {
+            CkptKind::File => inner.file.get(&rank).and_then(Slot::latest),
+            CkptKind::Memory => {
+                let l = inner.local.get(&rank).and_then(Slot::latest);
+                let b = inner.buddy.get(&rank).and_then(Slot::latest);
+                l.max(b)
+            }
+        }
+    }
+
+    /// Load rank `rank`'s checkpoint of `iter`; awaits the retrieval cost.
+    /// Returns None if lost (e.g. buddy died too).
+    pub async fn load(&self, rank: u32, node: u32, iter: u32) -> Option<Vec<u8>> {
+        match self.scheme {
+            CkptKind::File => {
+                let data = self.inner.borrow().file.get(&rank)?.get(iter)?;
+                self.disk.read(data.len() as u64).await;
+                Some(data.as_ref().clone())
+            }
+            CkptKind::Memory => {
+                // Prefer the local copy; fall back to the buddy's.
+                let local = self.inner.borrow().local.get(&rank).and_then(|s| s.get(iter));
+                if let Some(d) = local {
+                    self.sim.sleep(self.memcpy_cost(d.len())).await;
+                    return Some(d.as_ref().clone());
+                }
+                let buddy = self.inner.borrow().buddy.get(&rank).and_then(|s| s.get(iter));
+                let d = buddy?;
+                let bnode = self.topo.home_node(self.buddy_of(rank));
+                self.sim
+                    .sleep(self.net.data_delay(d.len(), bnode == node))
+                    .await;
+                Some(d.as_ref().clone())
+            }
+        }
+    }
+
+    /// Model the memory loss of a failed process: its local checkpoint and
+    /// any buddy copy *hosted in its memory* are gone.
+    pub fn lose_rank(&self, rank: u32) {
+        let mut inner = self.inner.borrow_mut();
+        inner.local.remove(&rank);
+        // buddy copies of rank k live at (k+1)%n == rank  =>  k = rank-1
+        let k = (rank + self.topo.ranks - 1) % self.topo.ranks;
+        inner.buddy.remove(&k);
+    }
+
+    /// Memory loss of a whole node.
+    pub fn lose_node_ranks(&self, ranks: &[u32]) {
+        for &r in ranks {
+            self.lose_rank(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    fn store(scheme: CkptKind, ranks: u32) -> (Sim, CkptStore) {
+        let sim = Sim::new();
+        let topo = Topology::new(ranks, 16, 0);
+        let s = CkptStore::new(&sim, scheme, topo, &Calibration::default());
+        (sim, s)
+    }
+
+    fn block_on_save(sim: &Sim, s: &CkptStore, rank: u32, iter: u32, data: Vec<u8>) {
+        let p = sim.spawn_process("saver");
+        let s2 = s.clone();
+        sim.spawn(p, async move {
+            s2.save(rank, 0, iter, data).await;
+        });
+        sim.run();
+    }
+
+    fn block_on_load(sim: &Sim, s: &CkptStore, rank: u32, iter: u32) -> Option<Vec<u8>> {
+        let p = sim.spawn_process("loader");
+        let s2 = s.clone();
+        let out = Rc::new(RefCell::new(None));
+        let o2 = Rc::clone(&out);
+        sim.spawn(p, async move {
+            *o2.borrow_mut() = Some(s2.load(rank, 0, iter).await);
+        });
+        sim.run();
+        Rc::try_unwrap(out).ok().unwrap().into_inner().unwrap()
+    }
+
+    #[test]
+    fn file_save_load_roundtrip() {
+        let (sim, s) = store(CkptKind::File, 4);
+        block_on_save(&sim, &s, 2, 5, vec![1, 2, 3]);
+        assert_eq!(s.latest_iter(2), Some(5));
+        assert_eq!(block_on_load(&sim, &s, 2, 5), Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn memory_save_load_roundtrip() {
+        let (sim, s) = store(CkptKind::Memory, 4);
+        block_on_save(&sim, &s, 2, 5, vec![9; 100]);
+        assert_eq!(block_on_load(&sim, &s, 2, 5), Some(vec![9; 100]));
+    }
+
+    #[test]
+    fn memory_survives_process_failure_via_buddy() {
+        let (sim, s) = store(CkptKind::Memory, 4);
+        block_on_save(&sim, &s, 2, 7, vec![42; 10]);
+        s.lose_rank(2); // local copy gone
+        assert_eq!(s.latest_iter(2), Some(7), "buddy copy at rank 3 survives");
+        assert_eq!(block_on_load(&sim, &s, 2, 7), Some(vec![42; 10]));
+    }
+
+    #[test]
+    fn buddy_hosted_copies_die_with_host() {
+        let (sim, s) = store(CkptKind::Memory, 4);
+        block_on_save(&sim, &s, 1, 3, vec![1]);
+        block_on_save(&sim, &s, 2, 3, vec![2]);
+        // rank 2's memory hosts: local[2] and buddy copy of rank 1
+        s.lose_rank(2);
+        // rank 1 still has its local copy
+        assert_eq!(block_on_load(&sim, &s, 1, 3), Some(vec![1]));
+        // but if rank 1 then ALSO fails, its buddy copy was at rank 2: gone
+        s.lose_rank(1);
+        assert_eq!(s.latest_iter(1), None);
+        assert_eq!(block_on_load(&sim, &s, 1, 3), None);
+    }
+
+    #[test]
+    fn node_failure_wipes_local_and_buddy_pairs() {
+        // paper Table 2's reason: ranks 0 and 1 on the same node are each
+        // other's local/buddy chain; losing both loses rank 0 entirely.
+        let sim = Sim::new();
+        let topo = Topology::new(4, 2, 0); // 2 ranks/node
+        let s = CkptStore::new(&sim, CkptKind::Memory, topo, &Calibration::default());
+        block_on_save(&sim, &s, 0, 1, vec![7]);
+        s.lose_node_ranks(&[0, 1]);
+        assert_eq!(s.latest_iter(0), None, "local at 0 and buddy at 1 both dead");
+    }
+
+    #[test]
+    fn keeps_last_two_iterations_only() {
+        let (sim, s) = store(CkptKind::File, 2);
+        for it in 1..=4 {
+            block_on_save(&sim, &s, 0, it, vec![it as u8]);
+        }
+        assert_eq!(s.latest_iter(0), Some(4));
+        assert_eq!(block_on_load(&sim, &s, 0, 3), Some(vec![3]));
+        assert_eq!(block_on_load(&sim, &s, 0, 2), None, "evicted");
+    }
+
+    #[test]
+    fn file_write_cost_exceeds_memory_cost() {
+        // same payload: file pays metadata + contended disk; memory pays
+        // memcpy + one fabric hop. This gap is the whole Fig. 4 story.
+        let t_file = {
+            let (sim, s) = store(CkptKind::File, 4);
+            let t = Rc::new(Cell::new(0.0));
+            let (s2, t2, sim2) = (s.clone(), Rc::clone(&t), sim.clone());
+            let p = sim.spawn_process("w");
+            sim.spawn(p, async move {
+                let start = sim2.now();
+                s2.save(0, 0, 1, vec![0; 1 << 20]).await;
+                t2.set((sim2.now() - start).secs_f64());
+            });
+            sim.run();
+            t.get()
+        };
+        let t_mem = {
+            let (sim, s) = store(CkptKind::Memory, 4);
+            let t = Rc::new(Cell::new(0.0));
+            let (s2, t2, sim2) = (s.clone(), Rc::clone(&t), sim.clone());
+            let p = sim.spawn_process("w");
+            sim.spawn(p, async move {
+                let start = sim2.now();
+                s2.save(0, 0, 1, vec![0; 1 << 20]).await;
+                t2.set((sim2.now() - start).secs_f64());
+            });
+            sim.run();
+            t.get()
+        };
+        assert!(t_file > 5.0 * t_mem, "file={t_file} mem={t_mem}");
+    }
+
+    use std::cell::RefCell;
+    use std::rc::Rc;
+}

@@ -1,0 +1,382 @@
+//! Command-line interface for the `reinitpp` binary (hand-rolled: the
+//! offline build has no clap).
+//!
+//! ```text
+//! reinitpp run       [OPTIONS] [key=value ...]   one experiment point
+//! reinitpp reproduce --figure N [OPTIONS] [...]  regenerate a paper figure
+//! reinitpp tables    [--which 1|2]               print Tables 1/2
+//! reinitpp validate  [OPTIONS] [key=value ...]   global-restart equivalence
+//! reinitpp calibrate [key=value ...]             measure artifact exec times
+//! ```
+//!
+//! OPTIONS: `--config FILE` (TOML-subset), `--max-ranks N`, `--outdir DIR`,
+//! plus any dotted config key as `key=value` (see `config::ExperimentConfig`).
+
+use std::rc::Rc;
+
+use crate::config::{ExperimentConfig, Fidelity};
+use crate::harness::{self, SweepOpts};
+use crate::recovery::job::run_trial;
+use crate::runtime::XlaRuntime;
+
+/// Parsed command line.
+#[derive(Debug)]
+pub enum Command {
+    Run {
+        cfg: ExperimentConfig,
+    },
+    Reproduce {
+        figure: u32,
+        cfg: ExperimentConfig,
+        opts: SweepOpts,
+    },
+    Tables {
+        which: Option<u32>,
+    },
+    Validate {
+        cfg: ExperimentConfig,
+    },
+    Calibrate {
+        cfg: ExperimentConfig,
+    },
+    Help,
+}
+
+/// Error with usage context.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+fn err(m: impl Into<String>) -> CliError {
+    CliError(m.into())
+}
+
+pub const USAGE: &str = "\
+reinitpp — Reinit++ global-restart MPI fault-tolerance study (paper reproduction)
+
+USAGE:
+  reinitpp run       [OPTIONS] [key=value ...]   run one experiment point
+  reinitpp reproduce --figure N [OPTIONS] [...]  regenerate paper figure N (4-7, or 0 = all)
+  reinitpp tables    [--which 1|2]               print the paper's tables
+  reinitpp validate  [OPTIONS] [key=value ...]   check global-restart equivalence
+  reinitpp calibrate [key=value ...]             measure artifact execution costs
+
+OPTIONS:
+  --config FILE      load a TOML-subset config file
+  --max-ranks N      cap the sweep's rank counts (reproduce only)
+  --outdir DIR       CSV output directory (default: results)
+  key=value          any config key, e.g. app=hpccg ranks=64 recovery=reinit
+                     failure=process trials=10 iters=20 fidelity=auto
+                     calibration.fork_exec_ms=350
+
+EXAMPLES:
+  reinitpp run app=hpccg ranks=16 recovery=reinit failure=process trials=3
+  reinitpp reproduce --figure 6 --max-ranks 128 trials=5
+  reinitpp validate app=comd recovery=ulfm failure=process
+";
+
+/// Parse argv (without the binary name).
+pub fn parse(args: &[String]) -> Result<Command, CliError> {
+    let Some(cmd) = args.first() else {
+        return Ok(Command::Help);
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => Ok(Command::Help),
+        "tables" => {
+            let mut which = None;
+            let mut it = rest.iter();
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--which" => {
+                        let v = it.next().ok_or_else(|| err("--which needs a value"))?;
+                        which = Some(v.parse().map_err(|_| err("--which: 1 or 2"))?);
+                    }
+                    other => return Err(err(format!("tables: unknown arg {other}"))),
+                }
+            }
+            Ok(Command::Tables { which })
+        }
+        "run" | "validate" | "calibrate" => {
+            let (cfg, leftovers) = parse_cfg(rest)?;
+            if let Some(x) = leftovers.first() {
+                return Err(err(format!("{cmd}: unknown arg {x}")));
+            }
+            Ok(match cmd.as_str() {
+                "run" => Command::Run { cfg },
+                "validate" => Command::Validate { cfg },
+                _ => Command::Calibrate { cfg },
+            })
+        }
+        "reproduce" => {
+            let (cfg, leftovers) = parse_cfg(rest)?;
+            let mut figure = None;
+            let mut opts = SweepOpts::default();
+            let mut it = leftovers.iter();
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--figure" => {
+                        let v = it.next().ok_or_else(|| err("--figure needs a value"))?;
+                        figure = Some(v.parse().map_err(|_| err("--figure: 0 or 4-7"))?);
+                    }
+                    "--max-ranks" => {
+                        let v = it.next().ok_or_else(|| err("--max-ranks needs a value"))?;
+                        opts.max_ranks = v.parse().map_err(|_| err("--max-ranks: number"))?;
+                    }
+                    "--outdir" => {
+                        opts.outdir = it
+                            .next()
+                            .ok_or_else(|| err("--outdir needs a value"))?
+                            .clone();
+                    }
+                    other => return Err(err(format!("reproduce: unknown arg {other}"))),
+                }
+            }
+            let figure = figure.ok_or_else(|| err("reproduce: missing --figure"))?;
+            if figure != 0 && !(4..=7).contains(&figure) {
+                return Err(err("reproduce: --figure must be 0 (all) or 4..7"));
+            }
+            Ok(Command::Reproduce { figure, cfg, opts })
+        }
+        other => Err(err(format!("unknown command `{other}`\n\n{USAGE}"))),
+    }
+}
+
+/// Extract `--config FILE` and `key=value` pairs; returns remaining args.
+fn parse_cfg(args: &[String]) -> Result<(ExperimentConfig, Vec<String>), CliError> {
+    let mut cfg = ExperimentConfig::default();
+    let mut leftovers = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--config" {
+            let path = it.next().ok_or_else(|| err("--config needs a file"))?;
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| err(format!("reading {path}: {e}")))?;
+            let doc = crate::config::toml::parse(&text).map_err(|e| err(e.to_string()))?;
+            cfg.apply_doc(&doc).map_err(|e| err(e.to_string()))?;
+        } else if let Some((k, v)) = a.split_once('=') {
+            if a.starts_with("--") {
+                leftovers.push(a.clone());
+            } else {
+                cfg.apply(k, v).map_err(|e| err(e.to_string()))?;
+            }
+        } else {
+            leftovers.push(a.clone());
+        }
+    }
+    Ok((cfg, leftovers))
+}
+
+/// Load the XLA runtime if the chosen fidelity needs it.
+fn maybe_xla(cfg: &ExperimentConfig) -> Option<Rc<XlaRuntime>> {
+    match cfg.fidelity.resolve(cfg.ranks) {
+        Fidelity::Modeled => None,
+        _ => Some(Rc::new(
+            XlaRuntime::load(&cfg.artifacts_dir)
+                .expect("loading artifacts (run `make artifacts`)"),
+        )),
+    }
+}
+
+/// Execute a parsed command; returns a process exit code.
+pub fn execute(cmd: Command) -> i32 {
+    match cmd {
+        Command::Help => {
+            println!("{USAGE}");
+            0
+        }
+        Command::Tables { which } => {
+            match which {
+                Some(1) => harness::print_table1(),
+                Some(2) => harness::print_table2(),
+                None => {
+                    harness::print_table1();
+                    harness::print_table2();
+                }
+                Some(n) => {
+                    eprintln!("no table {n}");
+                    return 2;
+                }
+            }
+            0
+        }
+        Command::Run { cfg } => {
+            if let Err(e) = cfg.validate() {
+                eprintln!("{e}");
+                return 2;
+            }
+            let xla = maybe_xla(&cfg);
+            println!(
+                "# {} | ranks={} | {} | failure={} | ckpt={} | trials={}",
+                cfg.app,
+                cfg.ranks,
+                cfg.recovery,
+                cfg.failure,
+                cfg.effective_ckpt(),
+                cfg.trials
+            );
+            let p = harness::run_point(&cfg, xla);
+            harness::print_points("run", std::slice::from_ref(&p));
+            println!("\n(host wall time: {:.2} s)", p.wall_s);
+            0
+        }
+        Command::Reproduce { figure, cfg, opts } => {
+            let xla = maybe_xla(&cfg);
+            let figs: Vec<u32> = if figure == 0 {
+                vec![4, 5, 6, 7]
+            } else {
+                vec![figure]
+            };
+            for f in figs {
+                match f {
+                    4 => drop(harness::fig4(&cfg, xla.clone(), &opts)),
+                    5 => drop(harness::fig5(&cfg, xla.clone(), &opts)),
+                    6 => drop(harness::fig6(&cfg, xla.clone(), &opts)),
+                    7 => drop(harness::fig7(&cfg, xla.clone(), &opts)),
+                    _ => unreachable!(),
+                }
+            }
+            0
+        }
+        Command::Validate { cfg } => {
+            if let Err(e) = cfg.validate() {
+                eprintln!("{e}");
+                return 2;
+            }
+            let xla = maybe_xla(&cfg);
+            let mut free_cfg = cfg.clone();
+            free_cfg.failure = crate::config::FailureKind::None;
+            println!("validating global-restart equivalence: {cfg:?}");
+            let free = run_trial(&free_cfg, 0, xla.clone());
+            let faulty = run_trial(&cfg, 0, xla);
+            if !faulty.completed {
+                eprintln!("FAIL: faulty run did not complete (fault {:?})", faulty.fault);
+                return 1;
+            }
+            if faulty.digests != free.digests {
+                eprintln!(
+                    "FAIL: recovered state differs from fault-free (fault {:?})",
+                    faulty.fault
+                );
+                return 1;
+            }
+            println!(
+                "OK: fault {:?} recovered bitwise-identically ({} ranks, recovery {:.3} s)",
+                faulty.fault, cfg.ranks, faulty.breakdown.mpi_recovery_s
+            );
+            0
+        }
+        Command::Calibrate { cfg } => {
+            let rt = XlaRuntime::load(&cfg.artifacts_dir)
+                .expect("loading artifacts (run `make artifacts`)");
+            println!("| artifact | mean execute (µs) | modeled cost (µs) |");
+            println!("|---|---|---|");
+            for name in [
+                format!("comd_step_n{}", cfg.comd_n),
+                format!("hpccg_matvec_{}", cfg.hpccg_nx),
+                format!("hpccg_update_{}", cfg.hpccg_nx),
+                format!("hpccg_direction_{}", cfg.hpccg_nx),
+                format!("lulesh_step_{}", cfg.lulesh_nx),
+            ] {
+                if !rt.has_artifact(&name) {
+                    println!("| {name} | (missing) | |");
+                    continue;
+                }
+                let sig = rt.signature(&name).unwrap().clone();
+                let inputs: Vec<crate::runtime::ArrayF32> = sig
+                    .inputs
+                    .iter()
+                    .map(|s| {
+                        let mut a = crate::runtime::ArrayF32::zeros(s);
+                        for (i, v) in a.data.iter_mut().enumerate() {
+                            *v = 0.5 + 0.1 * ((i % 7) as f32); // benign values
+                        }
+                        a
+                    })
+                    .collect();
+                // warmup (compile) + timed reps
+                let _ = rt.execute(&name, &inputs).unwrap();
+                let reps = 10;
+                let mut total = 0.0;
+                for _ in 0..reps {
+                    let (_, wall) = rt.execute(&name, &inputs).unwrap();
+                    total += wall.as_secs_f64();
+                }
+                println!(
+                    "| {} | {:.1} | {:.1} |",
+                    name,
+                    total / reps as f64 * 1e6,
+                    crate::apps::native::modeled_cost_s(&name) * 1e6
+                );
+            }
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_run_with_overrides() {
+        let cmd = parse(&sv(&["run", "app=comd", "ranks=64", "trials=3"])).unwrap();
+        match cmd {
+            Command::Run { cfg } => {
+                assert_eq!(cfg.app, crate::config::AppKind::CoMD);
+                assert_eq!(cfg.ranks, 64);
+                assert_eq!(cfg.trials, 3);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_reproduce() {
+        let cmd = parse(&sv(&[
+            "reproduce",
+            "--figure",
+            "6",
+            "--max-ranks",
+            "128",
+            "trials=5",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Reproduce { figure, cfg, opts } => {
+                assert_eq!(figure, 6);
+                assert_eq!(opts.max_ranks, 128);
+                assert_eq!(cfg.trials, 5);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse(&sv(&["reproduce"])).is_err()); // missing --figure
+        assert!(parse(&sv(&["reproduce", "--figure", "9"])).is_err());
+        assert!(parse(&sv(&["run", "bogus=1"])).is_err());
+        assert!(parse(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn parse_tables_and_help() {
+        assert!(matches!(parse(&sv(&[])).unwrap(), Command::Help));
+        assert!(matches!(
+            parse(&sv(&["tables", "--which", "2"])).unwrap(),
+            Command::Tables { which: Some(2) }
+        ));
+    }
+}

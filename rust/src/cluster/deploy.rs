@@ -1,0 +1,154 @@
+//! Process-management cost model: what `mpirun`, daemon spawning, teardown
+//! and wireup charge to virtual time. Constants from `config::Calibration`
+//! (DESIGN.md §6); anchored to the paper's ≈3 s CR re-deploy, ≈0.5 s / 1.5 s
+//! Reinit++ process/node recovery.
+
+use super::topology::Topology;
+use crate::config::Calibration;
+use crate::sim::SimDuration;
+
+/// Deployment/teardown/respawn costs.
+#[derive(Clone, Debug)]
+pub struct DeployCost {
+    fork_exec: SimDuration,
+    daemon_launch_per_level: SimDuration,
+    spawn_serialize: SimDuration,
+    teardown: SimDuration,
+    mpirun_base: SimDuration,
+    wireup_per_level: SimDuration,
+    orte_barrier_per_level: SimDuration,
+    comm_reinit: SimDuration,
+    sigchld_notify: SimDuration,
+    tcp_break_detect: SimDuration,
+    signal_local: SimDuration,
+}
+
+fn ms(v: f64) -> SimDuration {
+    SimDuration::from_secs_f64(v * 1e-3)
+}
+
+impl DeployCost {
+    pub fn from_calib(c: &Calibration) -> Self {
+        DeployCost {
+            fork_exec: ms(c.fork_exec_ms),
+            daemon_launch_per_level: ms(c.daemon_launch_per_level_ms),
+            spawn_serialize: ms(c.spawn_serialize_ms),
+            teardown: SimDuration::from_secs_f64(c.teardown_s),
+            mpirun_base: SimDuration::from_secs_f64(c.mpirun_base_s),
+            wireup_per_level: ms(c.wireup_per_level_ms),
+            orte_barrier_per_level: ms(c.orte_barrier_per_level_ms),
+            comm_reinit: ms(c.comm_reinit_ms),
+            sigchld_notify: ms(c.sigchld_notify_ms),
+            tcp_break_detect: ms(c.tcp_break_detect_ms),
+            signal_local: SimDuration::from_secs_f64(c.signal_local_us * 1e-6),
+        }
+    }
+
+    /// Spawning `k` MPI processes on ONE node: first pays full fork+exec,
+    /// subsequent ones pipeline at the serialization cost.
+    pub fn node_spawn(&self, k: u32) -> SimDuration {
+        if k == 0 {
+            return SimDuration::ZERO;
+        }
+        self.fork_exec + SimDuration(self.spawn_serialize.0 * (k as u64 - 1))
+    }
+
+    /// Full `mpirun` launch: base + daemon tree launch (parallel across the
+    /// tree, cost per level) + node-local spawns (parallel across nodes) +
+    /// MPI_Init wireup (tree address exchange over all ranks).
+    pub fn mpirun_launch(&self, topo: &Topology) -> SimDuration {
+        let daemon_levels = Topology::tree_levels(topo.total_nodes() + 1); // root + daemons
+        let wireup_levels = Topology::tree_levels(topo.ranks);
+        self.mpirun_base
+            + SimDuration(self.daemon_launch_per_level.0 * daemon_levels as u64)
+            + self.node_spawn(topo.ranks_per_node.min(topo.ranks))
+            + SimDuration(self.wireup_per_level.0 * wireup_levels as u64)
+    }
+
+    /// RTE cleanup after an abort (before CR can re-deploy).
+    pub fn teardown(&self) -> SimDuration {
+        self.teardown
+    }
+
+    /// ORTE-level barrier across daemons+root (Reinit++'s MPI_Init-like sync).
+    pub fn orte_barrier(&self, nodes: u32) -> SimDuration {
+        SimDuration(self.orte_barrier_per_level.0 * Topology::tree_levels(nodes + 1) as u64)
+    }
+
+    /// Re-initialisation of MPI_COMM_WORLD after roll-back/re-spawn.
+    pub fn comm_reinit(&self, ranks: u32) -> SimDuration {
+        self.comm_reinit + SimDuration(self.wireup_per_level.0 * Topology::tree_levels(ranks) as u64 / 4)
+    }
+
+    /// SIGCHLD delivery + daemon-side handling of a dead child.
+    pub fn sigchld(&self) -> SimDuration {
+        self.sigchld_notify
+    }
+
+    /// Time for the root to declare a daemon dead from its broken channel.
+    pub fn tcp_break(&self) -> SimDuration {
+        self.tcp_break_detect
+    }
+
+    /// Local signal (SIGREINIT/SIGKILL) delivery + handler entry.
+    pub fn signal(&self) -> SimDuration {
+        self.signal_local
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> DeployCost {
+        DeployCost::from_calib(&Calibration::default())
+    }
+
+    #[test]
+    fn cr_redeploy_anchor_about_3s() {
+        // paper Fig. 6: CR ≈ 3 s roughly constant across scales
+        let c = cost();
+        for ranks in [16u32, 64, 256, 1024] {
+            let topo = Topology::new(ranks, 16, 0);
+            let total = c.teardown() + c.mpirun_launch(&topo);
+            let s = total.secs_f64();
+            assert!((2.5..4.2).contains(&s), "ranks={ranks}: {s} s");
+        }
+    }
+
+    #[test]
+    fn redeploy_grows_slowly_with_scale() {
+        let c = cost();
+        let t16 = c.mpirun_launch(&Topology::new(16, 16, 0)).secs_f64();
+        let t1024 = c.mpirun_launch(&Topology::new(1024, 16, 0)).secs_f64();
+        assert!(t1024 > t16);
+        assert!(t1024 / t16 < 1.5, "launch must scale ~flat: {t16} vs {t1024}");
+    }
+
+    #[test]
+    fn single_respawn_anchor_under_half_second() {
+        // Reinit++ process recovery ≈ 0.5 s incl. barrier + comm re-init
+        let c = cost();
+        let t = (c.sigchld() + c.node_spawn(1) + c.orte_barrier(64) + c.comm_reinit(1024))
+            .secs_f64();
+        assert!((0.3..0.7).contains(&t), "{t} s");
+    }
+
+    #[test]
+    fn node_respawn_anchor() {
+        // Reinit++ node recovery ≈ 1.5 s: detection + 16 spawns + re-init
+        let c = cost();
+        let t = (c.tcp_break() + c.node_spawn(16) + c.orte_barrier(64) + c.comm_reinit(1024))
+            .secs_f64();
+        assert!((1.0..2.0).contains(&t), "{t} s");
+    }
+
+    #[test]
+    fn node_spawn_zero_and_linear() {
+        let c = cost();
+        assert_eq!(c.node_spawn(0), SimDuration::ZERO);
+        let t1 = c.node_spawn(1);
+        let t16 = c.node_spawn(16);
+        assert!(t16 > t1);
+    }
+}

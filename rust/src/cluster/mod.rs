@@ -1,0 +1,15 @@
+//! Cluster topology, deployment cost model, and live cluster state.
+//!
+//! Mirrors the paper's deployment model (§3.1, Fig. 3): a single *root*
+//! process (Open MPI's HNP, on the login node) spawns one *daemon* per
+//! compute node; daemons spawn and monitor the node-local *MPI processes*.
+//! For node-failure experiments the allocation is over-provisioned with
+//! spare nodes (paper §3.2).
+
+mod deploy;
+mod state;
+mod topology;
+
+pub use deploy::DeployCost;
+pub use state::{Cluster, NodeInfo, RankSlot};
+pub use topology::Topology;

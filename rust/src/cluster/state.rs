@@ -1,0 +1,288 @@
+//! Live cluster state: root/daemon/rank simulated processes, slot
+//! accounting, kill cascades, and Algorithm 1's least-loaded-node choice.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::topology::Topology;
+use crate::sim::{ProcId, Sim};
+
+/// Where a rank currently lives.
+#[derive(Clone, Copy, Debug)]
+pub struct RankSlot {
+    pub proc: ProcId,
+    pub node: u32,
+    /// Bumped on every re-spawn; composes fabric endpoint keys.
+    pub incarnation: u32,
+}
+
+/// Static + liveness info for a node.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeInfo {
+    pub id: u32,
+    pub alive: bool,
+    pub occupied_slots: u32,
+}
+
+struct Inner {
+    root: ProcId,
+    daemons: Vec<ProcId>,
+    node_alive: Vec<bool>,
+    ranks: Vec<RankSlot>,
+}
+
+/// Shared handle to the cluster state (one per job incarnation).
+pub struct Cluster {
+    sim: Sim,
+    pub topo: Topology,
+    inner: Rc<RefCell<Inner>>,
+}
+
+impl Clone for Cluster {
+    fn clone(&self) -> Self {
+        Cluster {
+            sim: self.sim.clone(),
+            topo: self.topo,
+            inner: Rc::clone(&self.inner),
+        }
+    }
+}
+
+impl Cluster {
+    /// Create root, one daemon per node (incl. spares), and one process per
+    /// rank at its home node. (The *cost* of doing this is charged by the
+    /// job driver via `DeployCost::mpirun_launch`.)
+    pub fn new(sim: &Sim, topo: Topology, job_tag: &str) -> Self {
+        let root = sim.spawn_process(format!("{job_tag}/root"));
+        let daemons: Vec<ProcId> = (0..topo.total_nodes())
+            .map(|n| sim.spawn_process(format!("{job_tag}/daemon{n}")))
+            .collect();
+        let ranks: Vec<RankSlot> = (0..topo.ranks)
+            .map(|r| {
+                let node = topo.home_node(r);
+                RankSlot {
+                    proc: sim.spawn_process(format!("{job_tag}/rank{r}.0")),
+                    node,
+                    incarnation: 0,
+                }
+            })
+            .collect();
+        Cluster {
+            sim: sim.clone(),
+            topo,
+            inner: Rc::new(RefCell::new(Inner {
+                root,
+                daemons,
+                node_alive: vec![true; topo.total_nodes() as usize],
+                ranks,
+            })),
+        }
+    }
+
+    pub fn root(&self) -> ProcId {
+        self.inner.borrow().root
+    }
+
+    pub fn daemon(&self, node: u32) -> ProcId {
+        self.inner.borrow().daemons[node as usize]
+    }
+
+    pub fn rank_slot(&self, rank: u32) -> RankSlot {
+        self.inner.borrow().ranks[rank as usize]
+    }
+
+    pub fn node_is_alive(&self, node: u32) -> bool {
+        self.inner.borrow().node_alive[node as usize]
+    }
+
+    pub fn rank_is_alive(&self, rank: u32) -> bool {
+        self.sim.is_alive(self.rank_slot(rank).proc)
+    }
+
+    /// Kill one MPI process (fail-stop).
+    pub fn kill_rank(&self, rank: u32) {
+        let proc = self.rank_slot(rank).proc;
+        self.sim.kill(proc);
+    }
+
+    /// Kill a node: its daemon and every MPI process currently placed there
+    /// die at the same instant (the paper equates daemon and node failure).
+    pub fn kill_node(&self, node: u32) {
+        let (daemon, victims): (ProcId, Vec<ProcId>) = {
+            let inner = self.inner.borrow();
+            (
+                inner.daemons[node as usize],
+                inner
+                    .ranks
+                    .iter()
+                    .filter(|s| s.node == node)
+                    .map(|s| s.proc)
+                    .collect(),
+            )
+        };
+        self.inner.borrow_mut().node_alive[node as usize] = false;
+        self.sim.kill(daemon);
+        for p in victims {
+            self.sim.kill(p);
+        }
+    }
+
+    /// Re-spawn `rank` on `node`; returns the new process. Panics if the
+    /// node is dead (Algorithm 1 never selects a dead node).
+    pub fn respawn_rank(&self, rank: u32, node: u32) -> ProcId {
+        let mut inner = self.inner.borrow_mut();
+        assert!(inner.node_alive[node as usize], "respawn on dead node {node}");
+        let slot = &mut inner.ranks[rank as usize];
+        slot.incarnation += 1;
+        slot.node = node;
+        slot.proc = self
+            .sim
+            .spawn_process(format!("rank{r}.{i}", r = rank, i = slot.incarnation));
+        slot.proc
+    }
+
+    /// Alive MPI processes currently placed on `node`.
+    pub fn occupied_slots(&self, node: u32) -> u32 {
+        let inner = self.inner.borrow();
+        inner
+            .ranks
+            .iter()
+            .filter(|s| s.node == node && self.sim.is_alive(s.proc))
+            .count() as u32
+    }
+
+    /// Algorithm 1: `argmin_{d in D} |Children(d)|` over *alive* daemons;
+    /// deterministic tie-break on the lowest node id.
+    pub fn least_loaded_alive_node(&self) -> u32 {
+        let n = self.topo.total_nodes();
+        (0..n)
+            .filter(|&node| self.node_is_alive(node))
+            .min_by_key(|&node| (self.occupied_slots(node), node))
+            .expect("no alive node left")
+    }
+
+    /// All ranks whose current process is dead.
+    pub fn failed_ranks(&self) -> Vec<u32> {
+        (0..self.topo.ranks)
+            .filter(|&r| !self.rank_is_alive(r))
+            .collect()
+    }
+
+    /// All ranks whose current process is alive.
+    pub fn alive_ranks(&self) -> Vec<u32> {
+        (0..self.topo.ranks)
+            .filter(|&r| self.rank_is_alive(r))
+            .collect()
+    }
+
+    /// Snapshot of node occupancy (debug/metrics).
+    pub fn nodes(&self) -> Vec<NodeInfo> {
+        (0..self.topo.total_nodes())
+            .map(|id| NodeInfo {
+                id,
+                alive: self.node_is_alive(id),
+                occupied_slots: self.occupied_slots(id),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(ranks: u32, rpn: u32, spares: u32) -> (Sim, Cluster) {
+        let sim = Sim::new();
+        let c = Cluster::new(&sim, Topology::new(ranks, rpn, spares), "job0");
+        (sim, c)
+    }
+
+    #[test]
+    fn initial_placement_and_liveness() {
+        let (_sim, c) = cluster(32, 16, 1);
+        assert_eq!(c.alive_ranks().len(), 32);
+        assert!(c.failed_ranks().is_empty());
+        assert_eq!(c.occupied_slots(0), 16);
+        assert_eq!(c.occupied_slots(1), 16);
+        assert_eq!(c.occupied_slots(2), 0); // spare
+    }
+
+    #[test]
+    fn kill_rank_updates_liveness_and_slots() {
+        let (_sim, c) = cluster(32, 16, 0);
+        c.kill_rank(5);
+        assert!(!c.rank_is_alive(5));
+        assert_eq!(c.failed_ranks(), vec![5]);
+        assert_eq!(c.occupied_slots(0), 15);
+    }
+
+    #[test]
+    fn kill_node_cascades_to_children() {
+        let (sim, c) = cluster(32, 16, 1);
+        c.kill_node(1);
+        assert!(!c.node_is_alive(1));
+        assert!(!sim.is_alive(c.daemon(1)));
+        assert_eq!(c.failed_ranks(), (16..32).collect::<Vec<_>>());
+        assert_eq!(c.occupied_slots(1), 0);
+    }
+
+    #[test]
+    fn least_loaded_picks_spare_after_node_failure() {
+        let (_sim, c) = cluster(32, 16, 1);
+        c.kill_node(0);
+        // nodes: 0 dead, 1 has 16, 2 (spare) has 0
+        assert_eq!(c.least_loaded_alive_node(), 2);
+    }
+
+    #[test]
+    fn least_loaded_tie_breaks_deterministically() {
+        let (_sim, c) = cluster(32, 16, 2);
+        // spares 2 and 3 both empty -> lowest id wins
+        assert_eq!(c.least_loaded_alive_node(), 2);
+    }
+
+    #[test]
+    fn respawn_moves_rank_and_bumps_incarnation() {
+        let (sim, c) = cluster(32, 16, 1);
+        c.kill_node(1);
+        let target = c.least_loaded_alive_node();
+        for r in 16..32 {
+            let p = c.respawn_rank(r, target);
+            assert!(sim.is_alive(p));
+        }
+        assert!(c.failed_ranks().is_empty());
+        assert_eq!(c.occupied_slots(target), 16);
+        let slot = c.rank_slot(20);
+        assert_eq!(slot.node, 2);
+        assert_eq!(slot.incarnation, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "respawn on dead node")]
+    fn respawn_on_dead_node_panics() {
+        let (_sim, c) = cluster(16, 16, 0);
+        c.kill_node(0);
+        c.respawn_rank(0, 0);
+    }
+
+    #[test]
+    fn process_failure_respawns_on_original_node() {
+        // paper §3.2: process failures re-spawn on the original node
+        let (_sim, c) = cluster(32, 16, 0);
+        c.kill_rank(20);
+        let node = c.rank_slot(20).node;
+        c.respawn_rank(20, node);
+        assert!(c.rank_is_alive(20));
+        assert_eq!(c.rank_slot(20).node, 1);
+        assert_eq!(c.occupied_slots(1), 16);
+    }
+
+    #[test]
+    fn nodes_snapshot() {
+        let (_sim, c) = cluster(16, 16, 1);
+        let nodes = c.nodes();
+        assert_eq!(nodes.len(), 2);
+        assert!(nodes[0].alive && nodes[0].occupied_slots == 16);
+        assert!(nodes[1].alive && nodes[1].occupied_slots == 0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Static placement: which rank lives on which node.
+
+/// Rank/node arithmetic for a block placement of `ranks` MPI processes at
+/// `ranks_per_node` per node, plus idle spare nodes at the end of the
+/// allocation (paper §3.2: over-provisioning for node failures).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub ranks: u32,
+    pub ranks_per_node: u32,
+    pub compute_nodes: u32,
+    pub spare_nodes: u32,
+}
+
+impl Topology {
+    pub fn new(ranks: u32, ranks_per_node: u32, spare_nodes: u32) -> Self {
+        assert!(ranks > 0 && ranks_per_node > 0);
+        Topology {
+            ranks,
+            ranks_per_node,
+            compute_nodes: ranks.div_ceil(ranks_per_node),
+            spare_nodes,
+        }
+    }
+
+    pub fn total_nodes(&self) -> u32 {
+        self.compute_nodes + self.spare_nodes
+    }
+
+    /// Node a rank is initially placed on.
+    pub fn home_node(&self, rank: u32) -> u32 {
+        assert!(rank < self.ranks);
+        rank / self.ranks_per_node
+    }
+
+    /// Ranks initially placed on `node` (empty for spares).
+    pub fn ranks_on_node(&self, node: u32) -> Vec<u32> {
+        if node >= self.compute_nodes {
+            return Vec::new();
+        }
+        let lo = node * self.ranks_per_node;
+        let hi = ((node + 1) * self.ranks_per_node).min(self.ranks);
+        (lo..hi).collect()
+    }
+
+    /// Depth of a binomial/binary communication tree over `n` participants.
+    pub fn tree_levels(n: u32) -> u32 {
+        if n <= 1 {
+            0
+        } else {
+            32 - (n - 1).leading_zeros() // ceil(log2(n))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_placement() {
+        let t = Topology::new(32, 16, 1);
+        assert_eq!(t.compute_nodes, 2);
+        assert_eq!(t.total_nodes(), 3);
+        assert_eq!(t.home_node(0), 0);
+        assert_eq!(t.home_node(15), 0);
+        assert_eq!(t.home_node(16), 1);
+        assert_eq!(t.ranks_on_node(0), (0..16).collect::<Vec<_>>());
+        assert_eq!(t.ranks_on_node(2), Vec::<u32>::new()); // spare
+    }
+
+    #[test]
+    fn ragged_last_node() {
+        let t = Topology::new(20, 16, 0);
+        assert_eq!(t.compute_nodes, 2);
+        assert_eq!(t.ranks_on_node(1), (16..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn paper_scales() {
+        // Table 1: 16 ranks/node, 16..1024 ranks = 1..64 nodes
+        for (ranks, nodes) in [(16, 1), (64, 4), (1024, 64)] {
+            assert_eq!(Topology::new(ranks, 16, 0).compute_nodes, nodes);
+        }
+    }
+
+    #[test]
+    fn tree_levels_log2ceil() {
+        assert_eq!(Topology::tree_levels(1), 0);
+        assert_eq!(Topology::tree_levels(2), 1);
+        assert_eq!(Topology::tree_levels(3), 2);
+        assert_eq!(Topology::tree_levels(64), 6);
+        assert_eq!(Topology::tree_levels(1024), 10);
+    }
+
+    #[test]
+    fn every_rank_has_exactly_one_home() {
+        let t = Topology::new(100, 7, 2);
+        let mut seen = vec![0u32; 100];
+        for node in 0..t.total_nodes() {
+            for r in t.ranks_on_node(node) {
+                assert_eq!(t.home_node(r), node);
+                seen[r as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+}

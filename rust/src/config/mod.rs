@@ -1,0 +1,483 @@
+//! Typed experiment configuration: enums, defaults (the paper's Table 1
+//! setup), TOML-subset config files, and dotted-key CLI overrides.
+
+pub mod calibration;
+pub mod presets;
+pub mod toml;
+
+pub use calibration::Calibration;
+
+use std::fmt;
+
+/// Which proxy application to run (paper §4, Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AppKind {
+    CoMD,
+    Hpccg,
+    Lulesh,
+}
+
+impl AppKind {
+    pub const ALL: [AppKind; 3] = [AppKind::CoMD, AppKind::Hpccg, AppKind::Lulesh];
+
+    pub fn parse(s: &str) -> Option<AppKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "comd" => Some(AppKind::CoMD),
+            "hpccg" => Some(AppKind::Hpccg),
+            "lulesh" => Some(AppKind::Lulesh),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for AppKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AppKind::CoMD => write!(f, "CoMD"),
+            AppKind::Hpccg => write!(f, "HPCCG"),
+            AppKind::Lulesh => write!(f, "LULESH"),
+        }
+    }
+}
+
+/// Global-restart recovery approach (paper §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RecoveryKind {
+    /// Checkpoint-Restart: abort + full re-deploy.
+    Cr,
+    /// User-Level Failure Mitigation (revoke/shrink/agree/spawn/merge).
+    Ulfm,
+    /// Reinit++ (this paper's contribution).
+    Reinit,
+}
+
+impl RecoveryKind {
+    pub const ALL: [RecoveryKind; 3] =
+        [RecoveryKind::Cr, RecoveryKind::Ulfm, RecoveryKind::Reinit];
+
+    pub fn parse(s: &str) -> Option<RecoveryKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "cr" => Some(RecoveryKind::Cr),
+            "ulfm" => Some(RecoveryKind::Ulfm),
+            "reinit" | "reinit++" | "reinitpp" => Some(RecoveryKind::Reinit),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for RecoveryKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RecoveryKind::Cr => write!(f, "CR"),
+            RecoveryKind::Ulfm => write!(f, "ULFM"),
+            RecoveryKind::Reinit => write!(f, "Reinit++"),
+        }
+    }
+}
+
+/// What failure to inject (paper §4: a single process OR node failure,
+/// at a seeded-random iteration and rank).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FailureKind {
+    None,
+    Process,
+    Node,
+}
+
+impl FailureKind {
+    pub fn parse(s: &str) -> Option<FailureKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Some(FailureKind::None),
+            "process" | "proc" => Some(FailureKind::Process),
+            "node" => Some(FailureKind::Node),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for FailureKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FailureKind::None => write!(f, "none"),
+            FailureKind::Process => write!(f, "process"),
+            FailureKind::Node => write!(f, "node"),
+        }
+    }
+}
+
+/// Checkpoint storage scheme (paper Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CkptKind {
+    /// Per-rank files on the shared parallel filesystem (Lustre model).
+    File,
+    /// Local + buddy in-memory copies (process failures only).
+    Memory,
+}
+
+impl CkptKind {
+    pub fn parse(s: &str) -> Option<CkptKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "file" => Some(CkptKind::File),
+            "memory" | "mem" => Some(CkptKind::Memory),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for CkptKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CkptKind::File => write!(f, "file"),
+            CkptKind::Memory => write!(f, "memory"),
+        }
+    }
+}
+
+/// Compute fidelity (DESIGN.md §8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Fidelity {
+    /// Every rank executes the real PJRT artifact each iteration.
+    Full,
+    /// One node of live ranks executes; others replay measured cost.
+    Fast,
+    /// Analytic per-iteration cost; no PJRT (unit tests).
+    Modeled,
+    /// Full for <= 128 ranks, Fast above.
+    Auto,
+}
+
+impl Fidelity {
+    pub fn parse(s: &str) -> Option<Fidelity> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" => Some(Fidelity::Full),
+            "fast" => Some(Fidelity::Fast),
+            "modeled" => Some(Fidelity::Modeled),
+            "auto" => Some(Fidelity::Auto),
+            _ => None,
+        }
+    }
+
+    /// Resolve `Auto` for a given rank count.
+    pub fn resolve(self, ranks: u32) -> Fidelity {
+        match self {
+            Fidelity::Auto => {
+                if ranks <= 128 {
+                    Fidelity::Full
+                } else {
+                    Fidelity::Fast
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+/// One experiment = (app, scale, recovery, failure, checkpointing) x trials.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub app: AppKind,
+    pub ranks: u32,
+    pub ranks_per_node: u32,
+    /// Extra idle nodes for re-spawning after a node failure
+    /// (the paper's over-provisioning requirement, §3.2).
+    pub spare_nodes: u32,
+    pub recovery: RecoveryKind,
+    pub failure: FailureKind,
+    /// None = pick per the paper's Table 2 policy.
+    pub ckpt: Option<CkptKind>,
+    pub iters: u32,
+    /// Store a checkpoint every k iterations (paper: every iteration).
+    pub ckpt_every: u32,
+    pub seed: u64,
+    pub trials: u32,
+    pub fidelity: Fidelity,
+    /// CoMD particles per rank.
+    pub comd_n: u32,
+    /// HPCCG local grid edge per rank.
+    pub hpccg_nx: u32,
+    /// LULESH local grid edge per rank.
+    pub lulesh_nx: u32,
+    pub calib: Calibration,
+    /// Directory with AOT artifacts (manifest.txt).
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            app: AppKind::Hpccg,
+            ranks: 16,
+            ranks_per_node: 16,
+            spare_nodes: 1,
+            recovery: RecoveryKind::Reinit,
+            failure: FailureKind::Process,
+            ckpt: None,
+            iters: 20,
+            ckpt_every: 1,
+            seed: 20210621,
+            trials: 10,
+            fidelity: Fidelity::Auto,
+            comd_n: 128,
+            hpccg_nx: 16,
+            lulesh_nx: 16,
+            calib: Calibration::default(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+/// Error applying a config key.
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn cerr(msg: impl Into<String>) -> ConfigError {
+    ConfigError(msg.into())
+}
+
+impl ExperimentConfig {
+    /// Number of compute nodes (excluding spares) for this scale.
+    pub fn nodes(&self) -> u32 {
+        self.ranks.div_ceil(self.ranks_per_node)
+    }
+
+    /// Checkpoint scheme after applying the paper's Table 2 policy.
+    pub fn effective_ckpt(&self) -> CkptKind {
+        if let Some(k) = self.ckpt {
+            return k;
+        }
+        crate::checkpoint::policy::default_scheme(self.recovery, self.failure)
+    }
+
+    /// Apply a dotted-key override, e.g. `ranks=64`, `app=comd`,
+    /// `calibration.fork_exec_ms=100`.
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
+        if let Some(field) = key.strip_prefix("calibration.") {
+            let v: f64 = value
+                .parse()
+                .map_err(|_| cerr(format!("calibration.{field}: not a number: {value}")))?;
+            if !self.calib.set(field, v) {
+                return Err(cerr(format!("unknown calibration key: {field}")));
+            }
+            return Ok(());
+        }
+        macro_rules! num {
+            () => {
+                value
+                    .parse()
+                    .map_err(|_| cerr(format!("{key}: bad number: {value}")))?
+            };
+        }
+        match key {
+            "app" => {
+                self.app = AppKind::parse(value)
+                    .ok_or_else(|| cerr(format!("unknown app: {value}")))?
+            }
+            "ranks" => self.ranks = num!(),
+            "ranks_per_node" => self.ranks_per_node = num!(),
+            "spare_nodes" => self.spare_nodes = num!(),
+            "recovery" => {
+                self.recovery = RecoveryKind::parse(value)
+                    .ok_or_else(|| cerr(format!("unknown recovery: {value}")))?
+            }
+            "failure" => {
+                self.failure = FailureKind::parse(value)
+                    .ok_or_else(|| cerr(format!("unknown failure: {value}")))?
+            }
+            "ckpt" => {
+                self.ckpt = Some(
+                    CkptKind::parse(value)
+                        .ok_or_else(|| cerr(format!("unknown ckpt: {value}")))?,
+                )
+            }
+            "iters" => self.iters = num!(),
+            "ckpt_every" => self.ckpt_every = num!(),
+            "seed" => self.seed = num!(),
+            "trials" => self.trials = num!(),
+            "fidelity" => {
+                self.fidelity = Fidelity::parse(value)
+                    .ok_or_else(|| cerr(format!("unknown fidelity: {value}")))?
+            }
+            "comd_n" => self.comd_n = num!(),
+            "hpccg_nx" => self.hpccg_nx = num!(),
+            "lulesh_nx" => self.lulesh_nx = num!(),
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            _ => return Err(cerr(format!("unknown config key: {key}"))),
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a TOML-subset document (top-level keys plus a
+    /// `[calibration]` section).
+    pub fn apply_doc(&mut self, doc: &toml::Doc) -> Result<(), ConfigError> {
+        let items: Vec<(String, String)> = doc
+            .section("")
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), value_to_string(v)))
+            .chain(
+                doc.section("calibration")
+                    .into_iter()
+                    .map(|(k, v)| (format!("calibration.{k}"), value_to_string(v))),
+            )
+            .collect();
+        for (k, v) in items {
+            self.apply(&k, &v)?;
+        }
+        Ok(())
+    }
+
+    /// Validate cross-field invariants; call before running.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.ranks == 0 || self.ranks_per_node == 0 {
+            return Err(cerr("ranks and ranks_per_node must be > 0"));
+        }
+        if self.iters == 0 {
+            return Err(cerr("iters must be > 0"));
+        }
+        if self.ckpt_every == 0 {
+            return Err(cerr("ckpt_every must be > 0"));
+        }
+        if self.failure == FailureKind::Node && self.spare_nodes == 0 {
+            return Err(cerr(
+                "node-failure experiments need spare_nodes >= 1 (over-provisioning, paper §3.2)",
+            ));
+        }
+        if self.effective_ckpt() == CkptKind::Memory && self.failure == FailureKind::Node {
+            return Err(cerr(
+                "memory checkpointing cannot survive a node failure (paper Table 2)",
+            ));
+        }
+        if self.app == AppKind::Lulesh {
+            // paper: LULESH requires a cube number of ranks
+            let c = (self.ranks as f64).cbrt().round() as u32;
+            if c * c * c != self.ranks {
+                return Err(cerr(format!(
+                    "LULESH needs a cube rank count (got {})",
+                    self.ranks
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn value_to_string(v: &toml::Value) -> String {
+    match v {
+        toml::Value::Str(s) => s.clone(),
+        toml::Value::Int(i) => i.to_string(),
+        toml::Value::Float(f) => f.to_string(),
+        toml::Value::Bool(b) => b.to_string(),
+        toml::Value::Array(_) => "<array>".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn apply_basic_keys() {
+        let mut c = ExperimentConfig::default();
+        c.apply("app", "comd").unwrap();
+        c.apply("ranks", "64").unwrap();
+        c.apply("recovery", "ulfm").unwrap();
+        c.apply("failure", "node").unwrap();
+        c.apply("ckpt", "file").unwrap();
+        assert_eq!(c.app, AppKind::CoMD);
+        assert_eq!(c.ranks, 64);
+        assert_eq!(c.recovery, RecoveryKind::Ulfm);
+        assert_eq!(c.failure, FailureKind::Node);
+        assert_eq!(c.ckpt, Some(CkptKind::File));
+    }
+
+    #[test]
+    fn apply_calibration_key() {
+        let mut c = ExperimentConfig::default();
+        c.apply("calibration.teardown_s", "2.5").unwrap();
+        assert_eq!(c.calib.teardown_s, 2.5);
+    }
+
+    #[test]
+    fn unknown_keys_error() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.apply("bogus", "1").is_err());
+        assert!(c.apply("calibration.bogus", "1").is_err());
+        assert!(c.apply("app", "gromacs").is_err());
+    }
+
+    #[test]
+    fn nodes_round_up() {
+        let mut c = ExperimentConfig::default();
+        c.ranks = 17;
+        c.ranks_per_node = 16;
+        assert_eq!(c.nodes(), 2);
+    }
+
+    #[test]
+    fn lulesh_cube_rank_check() {
+        let mut c = ExperimentConfig::default();
+        c.app = AppKind::Lulesh;
+        c.ranks = 27;
+        c.validate().unwrap();
+        c.ranks = 32;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn memory_ckpt_with_node_failure_rejected() {
+        let mut c = ExperimentConfig::default();
+        c.failure = FailureKind::Node;
+        c.ckpt = Some(CkptKind::Memory);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn node_failure_needs_spares() {
+        let mut c = ExperimentConfig::default();
+        c.failure = FailureKind::Node;
+        c.ckpt = Some(CkptKind::File);
+        c.spare_nodes = 0;
+        assert!(c.validate().is_err());
+        c.spare_nodes = 1;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn apply_doc_roundtrip() {
+        let doc = toml::parse(
+            "app = \"lulesh\"\nranks = 27\n[calibration]\nfork_exec_ms = 99.0\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.app, AppKind::Lulesh);
+        assert_eq!(c.ranks, 27);
+        assert_eq!(c.calib.fork_exec_ms, 99.0);
+    }
+
+    #[test]
+    fn fidelity_auto_resolution() {
+        assert_eq!(Fidelity::Auto.resolve(64), Fidelity::Full);
+        assert_eq!(Fidelity::Auto.resolve(256), Fidelity::Fast);
+        assert_eq!(Fidelity::Modeled.resolve(1024), Fidelity::Modeled);
+    }
+
+    #[test]
+    fn display_names_match_paper() {
+        assert_eq!(RecoveryKind::Reinit.to_string(), "Reinit++");
+        assert_eq!(RecoveryKind::Cr.to_string(), "CR");
+        assert_eq!(AppKind::Hpccg.to_string(), "HPCCG");
+    }
+}

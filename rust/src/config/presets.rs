@@ -1,0 +1,80 @@
+//! The paper's experimental presets (Table 1) and sweep definitions.
+
+use super::AppKind;
+
+/// Rank counts of the paper's weak-scaling sweep (Table 1).
+pub const RANK_SWEEP: [u32; 7] = [16, 32, 64, 128, 256, 512, 1024];
+
+/// LULESH requires a cube number of ranks (paper Table 1); the usable subset.
+pub const LULESH_RANK_SWEEP: [u32; 3] = [27, 64, 512];
+
+/// Ranks per node in the paper's deployment.
+pub const RANKS_PER_NODE: u32 = 16;
+
+/// Rank counts used for an app in the sweep.
+pub fn rank_sweep(app: AppKind) -> &'static [u32] {
+    match app {
+        AppKind::Lulesh => &LULESH_RANK_SWEEP,
+        _ => &RANK_SWEEP,
+    }
+}
+
+/// Table 1 descriptor row: the paper's inputs and our simulated analog.
+pub struct Table1Row {
+    pub app: AppKind,
+    pub paper_input: &'static str,
+    pub our_input: &'static str,
+    pub ranks: &'static [u32],
+}
+
+/// Paper's Table 1 alongside the weak-scaled per-rank inputs we run.
+pub fn table1() -> Vec<Table1Row> {
+    vec![
+        Table1Row {
+            app: AppKind::CoMD,
+            paper_input: "-i4 -j2 -k2 -x 80 -y 40 -z 40 -N 20 (weak-scaled)",
+            our_input: "128 LJ particles/rank, velocity-Verlet, dt=2e-3",
+            ranks: &RANK_SWEEP,
+        },
+        Table1Row {
+            app: AppKind::Hpccg,
+            paper_input: "64 64 64 (per-rank grid)",
+            our_input: "16^3 27-pt stencil grid/rank, CG iterations",
+            ranks: &RANK_SWEEP,
+        },
+        Table1Row {
+            app: AppKind::Lulesh,
+            paper_input: "-s 48 (cube ranks only)",
+            our_input: "16^3 hydro grid/rank, Sedov-like deposit",
+            ranks: &LULESH_RANK_SWEEP,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_matches_paper() {
+        assert_eq!(RANK_SWEEP.to_vec(), vec![16, 32, 64, 128, 256, 512, 1024]);
+        assert_eq!(RANKS_PER_NODE, 16);
+    }
+
+    #[test]
+    fn lulesh_ranks_are_cubes() {
+        for r in LULESH_RANK_SWEEP {
+            let c = (r as f64).cbrt().round() as u32;
+            assert_eq!(c * c * c, r);
+        }
+    }
+
+    #[test]
+    fn table1_covers_all_apps() {
+        let rows = table1();
+        assert_eq!(rows.len(), 3);
+        for app in AppKind::ALL {
+            assert!(rows.iter().any(|r| r.app == app));
+        }
+    }
+}

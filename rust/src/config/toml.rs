@@ -1,0 +1,294 @@
+//! Minimal TOML-subset parser (offline build: no serde/toml crates).
+//!
+//! Supported: `[section]` headers, `key = value` pairs with string, integer,
+//! float, boolean and flat-array values, `#` comments. This covers every
+//! config file the harness reads; nested tables and datetimes are rejected
+//! with a line-numbered error.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed document: `(section, key) -> value`; top-level keys use "".
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn section(&self, section: &str) -> Vec<(&str, &Value)> {
+        self.entries
+            .iter()
+            .filter(|((s, _), _)| s == section)
+            .map(|((_, k), v)| (k.as_str(), v))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError {
+        line,
+        message: msg.into(),
+    }
+}
+
+/// Parse one scalar (or array) value.
+fn parse_value(raw: &str, line: usize) -> Result<Value, ParseError> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(err(line, "empty value"));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let Some(end) = stripped.find('"') else {
+            return Err(err(line, "unterminated string"));
+        };
+        if !stripped[end + 1..].trim().is_empty() {
+            return Err(err(line, "trailing characters after string"));
+        }
+        return Ok(Value::Str(stripped[..end].to_string()));
+    }
+    if raw.starts_with('[') {
+        if !raw.ends_with(']') {
+            return Err(err(line, "unterminated array"));
+        }
+        let inner = &raw[1..raw.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            // flat arrays only: split on commas outside strings
+            let mut depth_str = false;
+            let mut cur = String::new();
+            for c in inner.chars() {
+                match c {
+                    '"' => {
+                        depth_str = !depth_str;
+                        cur.push(c);
+                    }
+                    ',' if !depth_str => {
+                        items.push(parse_value(&cur, line)?);
+                        cur.clear();
+                    }
+                    _ => cur.push(c),
+                }
+            }
+            if !cur.trim().is_empty() {
+                items.push(parse_value(&cur, line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(line, format!("cannot parse value `{raw}`")))
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc, ParseError> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (idx, line_raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        // strip comments (naive: `#` not inside a string)
+        let mut in_str = false;
+        let mut line = String::new();
+        for c in line_raw.chars() {
+            match c {
+                '"' => {
+                    in_str = !in_str;
+                    line.push(c);
+                }
+                '#' if !in_str => break,
+                _ => line.push(c),
+            }
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                return Err(err(lineno, "malformed section header"));
+            };
+            if name.contains('[') || name.contains('.') {
+                return Err(err(lineno, "nested tables are not supported"));
+            }
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(err(lineno, "expected `key = value`"));
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(&line[eq + 1..], lineno)?;
+        doc.entries
+            .insert((section.clone(), key.to_string()), value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = parse(
+            r#"
+# experiment
+app = "hpccg"
+ranks = 64
+[calibration]
+fork_exec_ms = 150.5
+fast = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "app").unwrap().as_str(), Some("hpccg"));
+        assert_eq!(doc.get("", "ranks").unwrap().as_i64(), Some(64));
+        assert_eq!(
+            doc.get("calibration", "fork_exec_ms").unwrap().as_f64(),
+            Some(150.5)
+        );
+        assert_eq!(doc.get("calibration", "fast").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse("ranks = [16, 32, 64]\nnames = [\"a\", \"b\"]").unwrap();
+        let arr = doc.get("", "ranks").unwrap().as_array().unwrap();
+        assert_eq!(
+            arr.iter().map(|v| v.as_i64().unwrap()).collect::<Vec<_>>(),
+            vec![16, 32, 64]
+        );
+        assert_eq!(doc.get("", "names").unwrap().as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = parse("\n# full line\na = 1 # trailing\n\n").unwrap();
+        assert_eq!(doc.len(), 1);
+        assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn int_coerces_to_f64_but_not_reverse() {
+        let doc = parse("i = 3\nf = 3.5").unwrap();
+        assert_eq!(doc.get("", "i").unwrap().as_f64(), Some(3.0));
+        assert_eq!(doc.get("", "f").unwrap().as_i64(), None);
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let e = parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn rejects_nested_tables() {
+        assert!(parse("[a.b]\nx = 1").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_string() {
+        assert!(parse("s = \"oops").is_err());
+    }
+
+    #[test]
+    fn empty_doc_ok() {
+        assert!(parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn section_iteration() {
+        let doc = parse("[s]\na = 1\nb = 2\n[t]\nc = 3").unwrap();
+        let keys: Vec<&str> = doc.section("s").into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["a", "b"]);
+    }
+}

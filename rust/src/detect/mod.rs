@@ -1,0 +1,126 @@
+//! Failure detection building blocks (paper §3.1 "Fault Detection").
+//!
+//! - A daemon is the parent of its node's MPI processes: a child crash is
+//!   observed via SIGCHLD (`watch_child`, with the SIGCHLD handling delay).
+//! - The root holds a reliable control channel to each daemon: a daemon
+//!   (node) crash is observed as a channel break (`watch_daemon`, with the
+//!   TCP keepalive/RST detection delay).
+//!
+//! Both emit `DetectEvent`s into the observer's control mailbox. The ULFM
+//! heartbeat detector is modeled as an additional notification latency on
+//! the RTE->rank path (see `recovery::ulfm`), per Bosilca et al.'s
+//! always-on observation ring.
+
+use crate::sim::{ProcId, Sender, Sim, SimDuration, SimTime};
+
+/// A detected failure, delivered to whoever monitors the process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DetectEvent {
+    /// An MPI process died (daemon-level SIGCHLD).
+    RankDead { rank: u32, at: SimTime },
+    /// A daemon (= node) died (root-level channel break).
+    NodeDead { node: u32, at: SimTime },
+}
+
+/// Watch one MPI child process from its parent daemon. Spawns a monitor
+/// task on `observer`; on death, delivers `RankDead` after the SIGCHLD
+/// handling delay.
+pub fn watch_child(
+    sim: &Sim,
+    observer: ProcId,
+    child: ProcId,
+    rank: u32,
+    sigchld_delay: SimDuration,
+    tx: Sender<DetectEvent>,
+) {
+    let sim2 = sim.clone();
+    sim.spawn(observer, async move {
+        let at = sim2.watch(child).await;
+        tx.send(DetectEvent::RankDead { rank, at }, sigchld_delay);
+    });
+}
+
+/// Watch a daemon from the root. On death, delivers `NodeDead` after the
+/// TCP break-detection delay.
+pub fn watch_daemon(
+    sim: &Sim,
+    observer: ProcId,
+    daemon: ProcId,
+    node: u32,
+    break_delay: SimDuration,
+    tx: Sender<DetectEvent>,
+) {
+    let sim2 = sim.clone();
+    sim.spawn(observer, async move {
+        let at = sim2.watch(daemon).await;
+        tx.send(DetectEvent::NodeDead { node, at }, break_delay);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::channel;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn child_death_detected_after_sigchld_delay() {
+        let sim = Sim::new();
+        let daemon = sim.spawn_process("daemon");
+        let child = sim.spawn_process("rank3");
+        let (tx, rx) = channel::<DetectEvent>(&sim);
+        watch_child(&sim, daemon, child, 3, SimDuration::from_millis(1), tx);
+        let s2 = sim.clone();
+        sim.schedule(SimDuration::from_millis(50), move || s2.kill(child));
+        let seen = Rc::new(RefCell::new(Vec::new()));
+        let s3 = sim.clone();
+        let seen2 = Rc::clone(&seen);
+        sim.spawn(daemon, async move {
+            let e = rx.recv().await.unwrap();
+            seen2.borrow_mut().push((e, s3.now().nanos()));
+        });
+        sim.run();
+        let v = seen.borrow();
+        assert_eq!(v.len(), 1);
+        let (e, at) = v[0];
+        assert!(matches!(e, DetectEvent::RankDead { rank: 3, .. }));
+        assert_eq!(at, 51_000_000); // kill at 50ms + 1ms SIGCHLD
+    }
+
+    #[test]
+    fn daemon_death_detected_after_break_delay() {
+        let sim = Sim::new();
+        let root = sim.spawn_process("root");
+        let daemon = sim.spawn_process("daemon2");
+        let (tx, rx) = channel::<DetectEvent>(&sim);
+        watch_daemon(&sim, root, daemon, 2, SimDuration::from_millis(400), tx);
+        let s2 = sim.clone();
+        sim.schedule(SimDuration::from_millis(10), move || s2.kill(daemon));
+        let seen = Rc::new(RefCell::new(None));
+        let s3 = sim.clone();
+        let seen2 = Rc::clone(&seen);
+        sim.spawn(root, async move {
+            let e = rx.recv().await.unwrap();
+            *seen2.borrow_mut() = Some((e, s3.now().nanos()));
+        });
+        sim.run();
+        let (e, at) = seen.borrow().unwrap();
+        assert!(matches!(e, DetectEvent::NodeDead { node: 2, .. }));
+        assert_eq!(at, 410_000_000);
+    }
+
+    #[test]
+    fn watcher_dies_with_its_observer() {
+        // if the observer (daemon) itself dies, its monitor tasks vanish:
+        // no spurious events, no hung tasks.
+        let sim = Sim::new();
+        let daemon = sim.spawn_process("daemon");
+        let child = sim.spawn_process("rank0");
+        let (tx, _rx) = channel::<DetectEvent>(&sim);
+        watch_child(&sim, daemon, child, 0, SimDuration::from_millis(1), tx);
+        sim.kill(daemon);
+        let s = sim.run();
+        assert_eq!(s.tasks_pending, 0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Fault injection (paper §4 "Emulating failures").
+//!
+//! A single process or node failure per run, at a seeded-random iteration of
+//! the main loop and a seeded-random victim rank. The draw depends only on
+//! `(seed, trial)` — *not* on the recovery approach — so CR, ULFM and
+//! Reinit++ face the identical failure, as in the paper's methodology.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use crate::config::{ExperimentConfig, FailureKind};
+use crate::sim::rng::Rng;
+
+/// The failure one trial will inject.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub kind: FailureKind,
+    /// Main-loop iteration (0-based) at whose start the victim dies.
+    pub iteration: u32,
+    /// Victim rank. For node failures the victim's *node* dies (the rank
+    /// SIGKILLs its parent daemon, per the paper).
+    pub rank: u32,
+}
+
+impl FaultPlan {
+    /// Draw the failure for `(cfg.seed, trial)`.
+    pub fn draw(cfg: &ExperimentConfig, trial: u32) -> FaultPlan {
+        let mut rng = Rng::new(cfg.seed)
+            .fork("fault-injection")
+            .fork(&format!("trial{trial}"));
+        // Iteration in [1, iters-1): at least one checkpoint exists and the
+        // failure lands strictly inside the run.
+        let span = cfg.iters.saturating_sub(2).max(1);
+        let iteration = 1 + (rng.gen_range(span as u64) as u32);
+        let rank = rng.gen_range(cfg.ranks as u64) as u32;
+        FaultPlan {
+            kind: cfg.failure,
+            iteration,
+            rank,
+        }
+    }
+
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            kind: FailureKind::None,
+            iteration: u32::MAX,
+            rank: u32::MAX,
+        }
+    }
+}
+
+/// One-shot trigger shared by all rank tasks of a trial: fires at most once
+/// even though the victim's iteration is re-executed after recovery.
+#[derive(Clone)]
+pub struct FaultTrigger {
+    plan: FaultPlan,
+    fired: Rc<Cell<bool>>,
+}
+
+impl FaultTrigger {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultTrigger {
+            plan,
+            fired: Rc::new(Cell::new(false)),
+        }
+    }
+
+    pub fn plan(&self) -> FaultPlan {
+        self.plan
+    }
+
+    /// Should `rank` die at the start of `iteration`? Consumes the trigger
+    /// on the first true.
+    pub fn should_fire(&self, rank: u32, iteration: u32) -> bool {
+        if self.fired.get() || self.plan.kind == FailureKind::None {
+            return false;
+        }
+        if rank == self.plan.rank && iteration == self.plan.iteration {
+            self.fired.set(true);
+            return true;
+        }
+        false
+    }
+
+    pub fn has_fired(&self) -> bool {
+        self.fired.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RecoveryKind;
+
+    fn cfg(seed: u64) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.seed = seed;
+        c.ranks = 64;
+        c.iters = 20;
+        c
+    }
+
+    #[test]
+    fn draw_is_deterministic_and_recovery_independent() {
+        let mut a = cfg(7);
+        a.recovery = RecoveryKind::Cr;
+        let mut b = cfg(7);
+        b.recovery = RecoveryKind::Reinit;
+        assert_eq!(FaultPlan::draw(&a, 0), FaultPlan::draw(&b, 0));
+    }
+
+    #[test]
+    fn trials_differ() {
+        let c = cfg(7);
+        let p0 = FaultPlan::draw(&c, 0);
+        let p1 = FaultPlan::draw(&c, 1);
+        assert!(p0 != p1, "different trials draw different failures");
+    }
+
+    #[test]
+    fn iteration_in_valid_window() {
+        let c = cfg(3);
+        for trial in 0..50 {
+            let p = FaultPlan::draw(&c, trial);
+            assert!(p.iteration >= 1 && p.iteration < c.iters - 1, "{p:?}");
+            assert!(p.rank < c.ranks);
+        }
+    }
+
+    #[test]
+    fn rank_coverage_over_trials() {
+        let c = cfg(11);
+        let mut hit = std::collections::HashSet::new();
+        for trial in 0..300 {
+            hit.insert(FaultPlan::draw(&c, trial).rank);
+        }
+        assert!(hit.len() > 32, "injection spreads across ranks: {}", hit.len());
+    }
+
+    #[test]
+    fn trigger_fires_exactly_once() {
+        let t = FaultTrigger::new(FaultPlan {
+            kind: FailureKind::Process,
+            iteration: 3,
+            rank: 5,
+        });
+        assert!(!t.should_fire(5, 2));
+        assert!(!t.should_fire(4, 3));
+        assert!(t.should_fire(5, 3));
+        assert!(t.has_fired());
+        // re-execution of iteration 3 after recovery must not re-kill
+        assert!(!t.should_fire(5, 3));
+    }
+
+    #[test]
+    fn none_plan_never_fires() {
+        let t = FaultTrigger::new(FaultPlan::none());
+        for i in 0..10 {
+            assert!(!t.should_fire(i, i));
+        }
+    }
+}

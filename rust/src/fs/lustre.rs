@@ -1,0 +1,333 @@
+//! Fluid processor-sharing disk model (see module docs in `fs/mod.rs`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::config::Calibration;
+use crate::sim::{channel, Receiver, Sender, Sim, SimDuration, SimTime};
+
+const GB: f64 = 1e9;
+
+struct Transfer {
+    remaining: f64, // bytes
+    done_tx: Sender<()>,
+}
+
+struct Inner {
+    agg_bps: f64,
+    client_bps: f64,
+    active: HashMap<u64, Transfer>,
+    next_id: u64,
+    last_update: SimTime,
+    /// Generation counter: outstanding completion events from a stale state
+    /// of the active set are ignored.
+    generation: u64,
+    // stats
+    bytes_written: u64,
+    bytes_read: u64,
+    ops: u64,
+    peak_concurrency: usize,
+}
+
+/// Cumulative counters (tests, perf reports).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DiskStats {
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+    pub ops: u64,
+    pub peak_concurrency: usize,
+}
+
+/// Shared parallel filesystem handle (cheap to clone).
+pub struct SharedDisk {
+    sim: Sim,
+    meta_latency: SimDuration,
+    inner: Rc<RefCell<Inner>>,
+}
+
+impl Clone for SharedDisk {
+    fn clone(&self) -> Self {
+        SharedDisk {
+            sim: self.sim.clone(),
+            meta_latency: self.meta_latency,
+            inner: Rc::clone(&self.inner),
+        }
+    }
+}
+
+impl SharedDisk {
+    pub fn from_calib(sim: &Sim, c: &Calibration) -> Self {
+        SharedDisk::new(
+            sim,
+            c.lustre_agg_gbps * GB,
+            c.lustre_client_gbps * GB,
+            SimDuration::from_secs_f64(c.lustre_meta_ms * 1e-3),
+        )
+    }
+
+    pub fn new(sim: &Sim, agg_bps: f64, client_bps: f64, meta_latency: SimDuration) -> Self {
+        assert!(agg_bps > 0.0 && client_bps > 0.0);
+        SharedDisk {
+            sim: sim.clone(),
+            meta_latency,
+            inner: Rc::new(RefCell::new(Inner {
+                agg_bps,
+                client_bps,
+                active: HashMap::new(),
+                next_id: 0,
+                last_update: SimTime::ZERO,
+                generation: 0,
+                bytes_written: 0,
+                bytes_read: 0,
+                ops: 0,
+                peak_concurrency: 0,
+            })),
+        }
+    }
+
+    fn rate(inner: &Inner) -> f64 {
+        let n = inner.active.len().max(1) as f64;
+        inner.client_bps.min(inner.agg_bps / n)
+    }
+
+    /// Advance all active transfers to `now` at the rate of the previous
+    /// configuration.
+    fn update_progress(inner: &mut Inner, now: SimTime) {
+        let dt = (now - inner.last_update).secs_f64();
+        if dt > 0.0 && !inner.active.is_empty() {
+            let rate = Self::rate(inner);
+            for t in inner.active.values_mut() {
+                t.remaining -= rate * dt;
+            }
+        }
+        inner.last_update = now;
+    }
+
+    /// Complete finished transfers and schedule the next completion event.
+    fn reschedule(&self) {
+        let now = self.sim.now();
+        let mut inner = self.inner.borrow_mut();
+        Self::update_progress(&mut inner, now);
+        // complete transfers that have drained (within 1 byte of fluid slack)
+        let done: Vec<u64> = inner
+            .active
+            .iter()
+            .filter(|(_, t)| t.remaining <= 1.0)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in done {
+            let t = inner.active.remove(&id).unwrap();
+            t.done_tx.send((), SimDuration::ZERO);
+        }
+        inner.generation += 1;
+        if inner.active.is_empty() {
+            return;
+        }
+        let rate = Self::rate(&inner);
+        let min_remaining = inner
+            .active
+            .values()
+            .map(|t| t.remaining)
+            .fold(f64::INFINITY, f64::min);
+        let eta = SimDuration::from_secs_f64((min_remaining / rate).max(0.0));
+        let generation = inner.generation;
+        let this = self.clone();
+        drop(inner);
+        self.sim.schedule(eta, move || {
+            if this.inner.borrow().generation == generation {
+                this.reschedule();
+            }
+        });
+    }
+
+    fn begin(&self, bytes: u64, is_write: bool) -> Receiver<()> {
+        let (tx, rx) = channel::<()>(&self.sim);
+        {
+            let now = self.sim.now();
+            let mut inner = self.inner.borrow_mut();
+            Self::update_progress(&mut inner, now);
+            let id = inner.next_id;
+            inner.next_id += 1;
+            inner.active.insert(
+                id,
+                Transfer {
+                    remaining: bytes as f64,
+                    done_tx: tx,
+                },
+            );
+            inner.ops += 1;
+            if is_write {
+                inner.bytes_written += bytes;
+            } else {
+                inner.bytes_read += bytes;
+            }
+            let n = inner.active.len();
+            inner.peak_concurrency = inner.peak_concurrency.max(n);
+        }
+        self.reschedule();
+        rx
+    }
+
+    /// Write `bytes` to a file: metadata round trip + contended transfer.
+    /// Returns when durable; the await time is the checkpoint-write cost.
+    pub async fn write(&self, bytes: u64) {
+        self.sim.sleep(self.meta_latency).await;
+        let rx = self.begin(bytes, true);
+        let _ = rx.recv().await;
+    }
+
+    /// Read `bytes` (checkpoint restore).
+    pub async fn read(&self, bytes: u64) {
+        self.sim.sleep(self.meta_latency).await;
+        let rx = self.begin(bytes, false);
+        let _ = rx.recv().await;
+    }
+
+    pub fn stats(&self) -> DiskStats {
+        let inner = self.inner.borrow();
+        DiskStats {
+            bytes_written: inner.bytes_written,
+            bytes_read: inner.bytes_read,
+            ops: inner.ops,
+            peak_concurrency: inner.peak_concurrency,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    /// agg 10 B/s, client 4 B/s, no metadata latency — tiny numbers so the
+    /// fluid arithmetic is easy to check by hand.
+    fn disk(sim: &Sim) -> SharedDisk {
+        SharedDisk::new(sim, 10.0, 4.0, SimDuration::ZERO)
+    }
+
+    fn run_writers(sizes: &[u64], agg: f64, client: f64, meta: SimDuration) -> Vec<f64> {
+        let sim = Sim::new();
+        let d = SharedDisk::new(&sim, agg, client, meta);
+        let times: Rc<RefCell<Vec<(usize, f64)>>> = Rc::new(RefCell::new(Vec::new()));
+        for (i, &sz) in sizes.iter().enumerate() {
+            let p = sim.spawn_process(format!("w{i}"));
+            let d2 = d.clone();
+            let t2 = Rc::clone(&times);
+            let s2 = sim.clone();
+            sim.spawn(p, async move {
+                let start = s2.now();
+                d2.write(sz).await;
+                t2.borrow_mut().push((i, (s2.now() - start).secs_f64()));
+            });
+        }
+        sim.run();
+        let mut v = times.borrow().clone();
+        v.sort_by_key(|(i, _)| *i);
+        v.into_iter().map(|(_, t)| t).collect()
+    }
+
+    #[test]
+    fn single_writer_client_capped() {
+        // 8 bytes at client cap 4 B/s -> 2 s
+        let t = run_writers(&[8], 10.0, 4.0, SimDuration::ZERO);
+        assert!((t[0] - 2.0).abs() < 1e-6, "{t:?}");
+    }
+
+    #[test]
+    fn two_writers_still_client_capped() {
+        // 2 clients: agg/2 = 5 > client 4 -> both at 4 B/s: 8/4 = 2 s each
+        let t = run_writers(&[8, 8], 10.0, 4.0, SimDuration::ZERO);
+        assert!((t[0] - 2.0).abs() < 1e-6 && (t[1] - 2.0).abs() < 1e-6, "{t:?}");
+    }
+
+    #[test]
+    fn four_writers_aggregate_capped() {
+        // 4 clients: agg/4 = 2.5 < client 4 -> each at 2.5 B/s: 10/2.5 = 4 s
+        let t = run_writers(&[10, 10, 10, 10], 10.0, 4.0, SimDuration::ZERO);
+        for x in &t {
+            assert!((x - 4.0).abs() < 1e-6, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn short_transfer_finishes_first_then_rates_rise() {
+        // writer A: 4 bytes, writer B: 12 bytes, agg 4 B/s, client 4 B/s.
+        // Phase 1 (both active): rate 2 B/s each; A done at t=2 (B has 8 left).
+        // Phase 2: B alone at 4 B/s -> 2 more seconds. B total = 4 s.
+        let t = run_writers(&[4, 12], 4.0, 4.0, SimDuration::ZERO);
+        assert!((t[0] - 2.0).abs() < 1e-6, "{t:?}");
+        assert!((t[1] - 4.0).abs() < 1e-6, "{t:?}");
+    }
+
+    #[test]
+    fn metadata_latency_added() {
+        let t = run_writers(&[4], 10.0, 4.0, SimDuration::from_millis(500));
+        assert!((t[0] - 1.5).abs() < 1e-6, "{t:?}"); // 0.5 meta + 1.0 transfer
+    }
+
+    #[test]
+    fn staggered_join_shares_fairly() {
+        // B joins at t=1 while A (8 B @ 4 B/s solo) has 4 B left.
+        let sim = Sim::new();
+        let d = disk(&sim);
+        let done = Rc::new(RefCell::new(Vec::new()));
+        let pa = sim.spawn_process("a");
+        let (d2, dn, s2) = (d.clone(), Rc::clone(&done), sim.clone());
+        sim.spawn(pa, async move {
+            d2.write(8).await;
+            dn.borrow_mut().push(("a", s2.now().secs_f64()));
+        });
+        let pb = sim.spawn_process("b");
+        let (d3, dn2, s3) = (d.clone(), Rc::clone(&done), sim.clone());
+        sim.spawn(pb, async move {
+            s3.sleep(SimDuration::from_secs_f64(1.0)).await;
+            d3.write(8).await;
+            dn2.borrow_mut().push(("b", s3.now().secs_f64()));
+        });
+        sim.run();
+        let v = done.borrow().clone();
+        // t=1: A has 4 left; both at 4 B/s (agg 10/2=5>4): A ends t=2, B ends t=3
+        assert_eq!(v[0].0, "a");
+        assert!((v[0].1 - 2.0).abs() < 1e-6, "{v:?}");
+        assert!((v[1].1 - 3.0).abs() < 1e-6, "{v:?}");
+    }
+
+    #[test]
+    fn reads_and_writes_counted() {
+        let sim = Sim::new();
+        let d = disk(&sim);
+        let p = sim.spawn_process("p");
+        let d2 = d.clone();
+        let ok = Rc::new(Cell::new(false));
+        let ok2 = Rc::clone(&ok);
+        sim.spawn(p, async move {
+            d2.write(4).await;
+            d2.read(8).await;
+            ok2.set(true);
+        });
+        sim.run();
+        assert!(ok.get());
+        let s = d.stats();
+        assert_eq!(s.bytes_written, 4);
+        assert_eq!(s.bytes_read, 8);
+        assert_eq!(s.ops, 2);
+    }
+
+    #[test]
+    fn many_writers_scale_like_n_over_agg() {
+        // weak-scaling shape: N writers of S bytes take ~ N*S/agg once
+        // N > agg/client — the CR checkpoint curve of Fig. 4.
+        let t8 = run_writers(&vec![100; 8], 10.0, 4.0, SimDuration::ZERO);
+        let t16 = run_writers(&vec![100; 16], 10.0, 4.0, SimDuration::ZERO);
+        let m8 = t8.iter().cloned().fold(0.0, f64::max);
+        let m16 = t16.iter().cloned().fold(0.0, f64::max);
+        assert!((m16 / m8 - 2.0).abs() < 0.05, "m8={m8} m16={m16}");
+    }
+
+    #[test]
+    fn zero_byte_write_costs_metadata_only() {
+        let t = run_writers(&[0], 10.0, 4.0, SimDuration::from_millis(100));
+        assert!((t[0] - 0.1).abs() < 1e-6, "{t:?}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Simulated parallel filesystem (Lustre-class).
+//!
+//! The paper's CR results are dominated by N ranks writing checkpoints to a
+//! shared filesystem; what matters is the *contention*: each client is capped
+//! by its own link, and all clients share a fixed aggregate OST bandwidth.
+//! `SharedDisk` implements a fluid processor-sharing queue in virtual time:
+//! every active transfer progresses at `min(client_bw, agg_bw / n_active)`,
+//! recomputed whenever a transfer joins or finishes. Metadata ops add a fixed
+//! per-file latency (MDS round trip).
+
+mod lustre;
+
+pub use lustre::{DiskStats, SharedDisk};

@@ -1,0 +1,297 @@
+//! Per-figure sweep drivers (paper §5, Figures 4-7) and table/CSV emitters.
+
+use std::rc::Rc;
+
+use super::{run_point, Point};
+use crate::config::{
+    presets, AppKind, CkptKind, ExperimentConfig, FailureKind, RecoveryKind,
+};
+use crate::runtime::XlaRuntime;
+
+/// Options common to all figure drivers.
+#[derive(Clone, Debug)]
+pub struct SweepOpts {
+    /// Cap on rank counts (quick runs / CI).
+    pub max_ranks: u32,
+    /// Output directory for CSVs (created if missing).
+    pub outdir: String,
+}
+
+impl Default for SweepOpts {
+    fn default() -> Self {
+        SweepOpts {
+            max_ranks: 1024,
+            outdir: "results".to_string(),
+        }
+    }
+}
+
+fn sweep_ranks(app: AppKind, max: u32) -> Vec<u32> {
+    presets::rank_sweep(app)
+        .iter()
+        .copied()
+        .filter(|&r| r <= max)
+        .collect()
+}
+
+fn point_cfg(
+    base: &ExperimentConfig,
+    app: AppKind,
+    ranks: u32,
+    recovery: RecoveryKind,
+    failure: FailureKind,
+) -> ExperimentConfig {
+    let mut c = base.clone();
+    c.app = app;
+    c.ranks = ranks;
+    c.recovery = recovery;
+    c.failure = failure;
+    c.ckpt = None; // Table 2 policy
+    c
+}
+
+/// Render one summary as `mean±ci`.
+fn cell(s: &crate::metrics::Summary) -> String {
+    if s.ci95 > 0.0005 {
+        format!("{:.3}±{:.3}", s.mean, s.ci95)
+    } else {
+        format!("{:.3}", s.mean)
+    }
+}
+
+/// Print a figure's points as a markdown table.
+pub fn print_points(title: &str, points: &[Point]) {
+    println!("\n## {title}\n");
+    println!(
+        "| app | ranks | recovery | ckpt | total (s) | ckpt write (s) | ckpt read (s) | MPI recovery (s) | app (s) |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|");
+    for p in points {
+        println!(
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} |",
+            p.cfg.app,
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.effective_ckpt(),
+            cell(&p.total),
+            cell(&p.ckpt_write),
+            cell(&p.ckpt_read),
+            cell(&p.recovery),
+            cell(&p.app),
+        );
+    }
+}
+
+/// Write the points to `outdir/<name>.csv`.
+pub fn write_csv(name: &str, outdir: &str, points: &[Point]) -> std::io::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    let mut s = String::from(
+        "app,ranks,recovery,failure,ckpt,total_s,total_ci,ckpt_write_s,ckpt_write_ci,\
+         ckpt_read_s,ckpt_read_ci,mpi_recovery_s,mpi_recovery_ci,app_s,app_ci,trials\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            p.cfg.app,
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.failure,
+            p.cfg.effective_ckpt(),
+            p.total.mean,
+            p.total.ci95,
+            p.ckpt_write.mean,
+            p.ckpt_write.ci95,
+            p.ckpt_read.mean,
+            p.ckpt_read.ci95,
+            p.recovery.mean,
+            p.recovery.ci95,
+            p.app.mean,
+            p.app.ci95,
+            p.total.n,
+        ));
+    }
+    std::fs::write(format!("{outdir}/{name}.csv"), s)
+}
+
+fn run_sweep(
+    base: &ExperimentConfig,
+    xla: Option<Rc<XlaRuntime>>,
+    opts: &SweepOpts,
+    apps: &[AppKind],
+    recoveries: &[RecoveryKind],
+    failure: FailureKind,
+) -> Vec<Point> {
+    let mut points = Vec::new();
+    for &app in apps {
+        for &ranks in &sweep_ranks(app, opts.max_ranks) {
+            for &rk in recoveries {
+                let cfg = point_cfg(base, app, ranks, rk, failure);
+                eprintln!(
+                    "  running {app} ranks={ranks} {rk} {failure} (trials={})...",
+                    cfg.trials
+                );
+                points.push(run_point(&cfg, xla.clone()));
+            }
+        }
+    }
+    points
+}
+
+/// Fig. 4: total execution time breakdown under a process failure
+/// (CR uses file checkpoints; ULFM/Reinit++ memory — Table 2).
+pub fn fig4(
+    base: &ExperimentConfig,
+    xla: Option<Rc<XlaRuntime>>,
+    opts: &SweepOpts,
+) -> Vec<Point> {
+    let points = run_sweep(
+        base,
+        xla,
+        opts,
+        &AppKind::ALL,
+        &RecoveryKind::ALL,
+        FailureKind::Process,
+    );
+    print_points(
+        "Figure 4: total execution time breakdown, single process failure",
+        &points,
+    );
+    let _ = write_csv("fig4_total_time", &opts.outdir, &points);
+    points
+}
+
+/// Fig. 5: pure application time weak scaling (fault-free runs; shows the
+/// ULFM inflation).
+pub fn fig5(
+    base: &ExperimentConfig,
+    xla: Option<Rc<XlaRuntime>>,
+    opts: &SweepOpts,
+) -> Vec<Point> {
+    let points = run_sweep(
+        base,
+        xla,
+        opts,
+        &AppKind::ALL,
+        &RecoveryKind::ALL,
+        FailureKind::None,
+    );
+    print_points(
+        "Figure 5: pure application time scaling (fault-free)",
+        &points,
+    );
+    let _ = write_csv("fig5_app_time", &opts.outdir, &points);
+    points
+}
+
+/// Fig. 6: MPI recovery time under a process failure.
+pub fn fig6(
+    base: &ExperimentConfig,
+    xla: Option<Rc<XlaRuntime>>,
+    opts: &SweepOpts,
+) -> Vec<Point> {
+    let points = run_sweep(
+        base,
+        xla,
+        opts,
+        &AppKind::ALL,
+        &RecoveryKind::ALL,
+        FailureKind::Process,
+    );
+    print_points(
+        "Figure 6: MPI recovery time, single process failure",
+        &points,
+    );
+    let _ = write_csv("fig6_process_recovery", &opts.outdir, &points);
+    points
+}
+
+/// Fig. 7: MPI recovery time under a node failure. As in the paper, only
+/// CR and Reinit++ (the ULFM prototype could not run node failures; ours
+/// can, but we reproduce the paper's comparison).
+pub fn fig7(
+    base: &ExperimentConfig,
+    xla: Option<Rc<XlaRuntime>>,
+    opts: &SweepOpts,
+) -> Vec<Point> {
+    let mut b = base.clone();
+    b.spare_nodes = b.spare_nodes.max(1);
+    b.ckpt = Some(CkptKind::File);
+    let points = run_sweep(
+        &b,
+        xla,
+        opts,
+        &AppKind::ALL,
+        &[RecoveryKind::Cr, RecoveryKind::Reinit],
+        FailureKind::Node,
+    );
+    print_points("Figure 7: MPI recovery time, single node failure", &points);
+    let _ = write_csv("fig7_node_recovery", &opts.outdir, &points);
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Fidelity;
+
+    fn quick_base() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.trials = 2;
+        c.iters = 5;
+        c.fidelity = Fidelity::Modeled;
+        c.hpccg_nx = 4;
+        c.comd_n = 32;
+        c.lulesh_nx = 4;
+        c
+    }
+
+    #[test]
+    fn fig6_quick_sweep_shapes() {
+        let base = quick_base();
+        let opts = SweepOpts {
+            max_ranks: 32,
+            outdir: "/tmp/reinitpp-test-results".into(),
+        };
+        let pts = run_sweep(
+            &base,
+            None,
+            &opts,
+            &[AppKind::Hpccg],
+            &RecoveryKind::ALL,
+            FailureKind::Process,
+        );
+        assert_eq!(pts.len(), 2 * 3); // ranks {16,32} x 3 recoveries
+        let get = |ranks: u32, rk: RecoveryKind| {
+            pts.iter()
+                .find(|p| p.cfg.ranks == ranks && p.cfg.recovery == rk)
+                .unwrap()
+                .recovery
+                .mean
+        };
+        // paper shape at small scale: CR slowest, Reinit fastest-ish
+        assert!(get(16, RecoveryKind::Cr) > 2.0 * get(16, RecoveryKind::Reinit));
+        assert!(get(32, RecoveryKind::Cr) > 2.0 * get(32, RecoveryKind::Reinit));
+    }
+
+    #[test]
+    fn csv_written() {
+        let base = quick_base();
+        let opts = SweepOpts {
+            max_ranks: 16,
+            outdir: "/tmp/reinitpp-test-results".into(),
+        };
+        let pts = run_sweep(
+            &base,
+            None,
+            &opts,
+            &[AppKind::Hpccg],
+            &[RecoveryKind::Reinit],
+            FailureKind::Process,
+        );
+        write_csv("unit_test", &opts.outdir, &pts).unwrap();
+        let text =
+            std::fs::read_to_string("/tmp/reinitpp-test-results/unit_test.csv").unwrap();
+        assert!(text.starts_with("app,ranks,"));
+        assert_eq!(text.lines().count(), 2);
+    }
+}

@@ -1,0 +1,88 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation section (§5). Each `figN` driver sweeps the paper's parameter
+//! grid, runs `trials` seeded repetitions per point, and emits the same
+//! rows/series the paper plots — as a markdown table on stdout and a CSV
+//! under `results/`.
+
+mod figures;
+mod tables;
+
+pub use figures::{fig4, fig5, fig6, fig7, print_points, write_csv, SweepOpts};
+pub use tables::{print_table1, print_table2};
+
+use std::rc::Rc;
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{mean_ci95, Summary};
+use crate::recovery::job::run_trial;
+use crate::runtime::XlaRuntime;
+
+/// Aggregated result of `trials` runs of one experiment point.
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub cfg: ExperimentConfig,
+    pub total: Summary,
+    pub ckpt_write: Summary,
+    pub ckpt_read: Summary,
+    pub recovery: Summary,
+    pub app: Summary,
+    /// Real (host) seconds spent producing this point.
+    pub wall_s: f64,
+}
+
+/// Run all trials of one point and summarize (the paper's §4 methodology:
+/// independent seeded trials, mean + 95% t-CI).
+pub fn run_point(cfg: &ExperimentConfig, xla: Option<Rc<XlaRuntime>>) -> Point {
+    let t0 = std::time::Instant::now();
+    let mut total = Vec::new();
+    let mut wr = Vec::new();
+    let mut rd = Vec::new();
+    let mut rec = Vec::new();
+    let mut app = Vec::new();
+    for trial in 0..cfg.trials {
+        let r = run_trial(cfg, trial, xla.clone());
+        assert!(
+            r.completed,
+            "trial {trial} of {}/{}/{} ranks={} did not complete",
+            cfg.app, cfg.recovery, cfg.failure, cfg.ranks
+        );
+        total.push(r.breakdown.total_s);
+        wr.push(r.breakdown.ckpt_write_s);
+        rd.push(r.breakdown.ckpt_read_s);
+        rec.push(r.breakdown.mpi_recovery_s);
+        app.push(r.breakdown.app_s());
+    }
+    Point {
+        cfg: cfg.clone(),
+        total: mean_ci95(&total),
+        ckpt_write: mean_ci95(&wr),
+        ckpt_read: mean_ci95(&rd),
+        recovery: mean_ci95(&rec),
+        app: mean_ci95(&app),
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AppKind, FailureKind, Fidelity, RecoveryKind};
+
+    #[test]
+    fn run_point_aggregates_trials() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.app = AppKind::Hpccg;
+        cfg.recovery = RecoveryKind::Reinit;
+        cfg.failure = FailureKind::Process;
+        cfg.ranks = 8;
+        cfg.ranks_per_node = 4;
+        cfg.iters = 5;
+        cfg.trials = 3;
+        cfg.fidelity = Fidelity::Modeled;
+        cfg.hpccg_nx = 4;
+        let p = run_point(&cfg, None);
+        assert_eq!(p.recovery.n, 3);
+        assert!(p.recovery.mean > 0.2);
+        assert!(p.total.mean > p.recovery.mean);
+    }
+}

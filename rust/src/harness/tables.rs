@@ -1,0 +1,45 @@
+//! The paper's Tables 1 and 2 as printable artifacts.
+
+use crate::checkpoint::policy::default_scheme;
+use crate::config::{presets, FailureKind, RecoveryKind};
+
+/// Table 1: proxy applications and their configuration.
+pub fn print_table1() {
+    println!("\n## Table 1: proxy applications and their configuration\n");
+    println!("| application | paper input | our per-rank analog | rank counts |");
+    println!("|---|---|---|---|");
+    for row in presets::table1() {
+        let ranks: Vec<String> = row.ranks.iter().map(|r| r.to_string()).collect();
+        println!(
+            "| {} | `{}` | {} | {} |",
+            row.app,
+            row.paper_input,
+            row.our_input,
+            ranks.join(", ")
+        );
+    }
+    println!("\n(16 ranks per node, weak scaling — paper §4.)");
+}
+
+/// Table 2: checkpointing scheme per recovery approach and failure type.
+pub fn print_table2() {
+    println!("\n## Table 2: checkpointing per recovery and failure\n");
+    println!("| failure | CR | ULFM | Reinit++ |");
+    println!("|---|---|---|---|");
+    for failure in [FailureKind::Process, FailureKind::Node] {
+        let row: Vec<String> = [RecoveryKind::Cr, RecoveryKind::Ulfm, RecoveryKind::Reinit]
+            .iter()
+            .map(|&rk| default_scheme(rk, failure).to_string())
+            .collect();
+        println!("| {} | {} | {} | {} |", failure, row[0], row[1], row[2]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tables_print_without_panic() {
+        super::print_table1();
+        super::print_table2();
+    }
+}

@@ -1,0 +1,46 @@
+//! # reinitpp — a reproduction of "Reinit++: Evaluating the Performance of
+//! Global-Restart Recovery Methods for MPI Fault Tolerance" (Georgakoudis,
+//! Guo, Laguna; 2021).
+//!
+//! The crate implements the paper's full experimental system on a
+//! **virtual-time simulated cluster**: an Open-MPI-like runtime (root/HNP,
+//! per-node daemons, MPI rank processes), three global-restart recovery
+//! approaches (Checkpoint-Restart re-deploy, ULFM, Reinit++), file (Lustre
+//! model) and in-memory buddy checkpointing, fault injection/detection, and
+//! the three weak-scaled proxy applications (CoMD, HPCCG, LULESH) whose
+//! per-rank compute executes real AOT-compiled XLA artifacts via PJRT.
+//!
+//! Layering (see DESIGN.md):
+//! - `sim`        — deterministic single-threaded virtual-time async executor
+//! - `transport`  — message cost model + typed mailbox channels
+//! - `cluster`    — node/daemon/root topology & deployment cost model
+//! - `fs`         — shared-bandwidth parallel-filesystem (Lustre) model
+//! - `mpi`        — communicators, point-to-point, collectives, ULFM ext.
+//! - `fault`      — fault injection plans
+//! - `detect`     — child-exit / channel-break / heartbeat failure detection
+//! - `checkpoint` — file + buddy-memory checkpointing
+//! - `recovery`   — CR, ULFM, Reinit++ global-restart implementations
+//! - `runtime`    — PJRT client wrapper: load/compile/execute HLO artifacts
+//! - `apps`       — proxy applications + pure-Rust numeric oracle
+//! - `metrics`    — phase-time breakdown, t-distribution CIs, table emit
+//! - `config`     — TOML-subset config system + presets (Table 1)
+//! - `harness`    — per-figure experiment drivers (Figures 4-7, Tables 1-2)
+//! - `testkit`    — seeded property-testing micro-framework
+//! - `cli`        — argument parsing for the `reinitpp` binary
+
+pub mod sim;
+pub mod transport;
+pub mod cluster;
+pub mod fs;
+pub mod mpi;
+pub mod fault;
+pub mod detect;
+pub mod checkpoint;
+pub mod recovery;
+pub mod runtime;
+pub mod apps;
+pub mod metrics;
+pub mod config;
+pub mod harness;
+pub mod testkit;
+pub mod cli;

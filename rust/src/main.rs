@@ -1,0 +1,15 @@
+//! `reinitpp` — leader entrypoint: CLI over the experiment harness.
+
+use reinitpp::cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match cli::parse(&args) {
+        Ok(cmd) => cli::execute(cmd),
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli::USAGE);
+            2
+        }
+    };
+    std::process::exit(code);
+}

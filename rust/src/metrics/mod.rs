@@ -1,0 +1,176 @@
+//! Measurement: the paper's per-run time breakdown and its statistics
+//! (mean + 95% confidence intervals from the t-distribution, 10 trials).
+
+mod stats;
+
+pub use stats::{mean_ci95, Summary};
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::sim::{SimDuration, SimTime};
+
+/// Phase breakdown of one trial (paper §4 "Statistical evaluation"):
+/// total = app + ckpt_write + ckpt_read + mpi_recovery.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breakdown {
+    pub total_s: f64,
+    pub ckpt_write_s: f64,
+    pub ckpt_read_s: f64,
+    pub mpi_recovery_s: f64,
+}
+
+impl Breakdown {
+    /// Pure application time: everything not attributed elsewhere.
+    pub fn app_s(&self) -> f64 {
+        (self.total_s - self.ckpt_write_s - self.ckpt_read_s - self.mpi_recovery_s).max(0.0)
+    }
+}
+
+struct Inner {
+    job_start: SimTime,
+    job_end: SimTime,
+    fail_at: Option<SimTime>,
+    resume_at: Option<SimTime>, // max over ranks re-entering the user fn
+    /// Per-rank accumulated phase durations (index = rank).
+    ckpt_write: Vec<SimDuration>,
+    ckpt_read: Vec<SimDuration>,
+    /// Extra recovery time outside the fail->resume window (CR: teardown
+    /// and re-deploy happen between jobs; already inside the window).
+    recovery_extra: SimDuration,
+}
+
+/// Shared collector for one trial.
+#[derive(Clone)]
+pub struct TrialMetrics {
+    inner: Rc<RefCell<Inner>>,
+}
+
+impl TrialMetrics {
+    pub fn new(ranks: u32) -> Self {
+        TrialMetrics {
+            inner: Rc::new(RefCell::new(Inner {
+                job_start: SimTime::ZERO,
+                job_end: SimTime::ZERO,
+                fail_at: None,
+                resume_at: None,
+                ckpt_write: vec![SimDuration::ZERO; ranks as usize],
+                ckpt_read: vec![SimDuration::ZERO; ranks as usize],
+                recovery_extra: SimDuration::ZERO,
+            })),
+        }
+    }
+
+    pub fn set_job_start(&self, t: SimTime) {
+        self.inner.borrow_mut().job_start = t;
+    }
+
+    pub fn set_job_end(&self, t: SimTime) {
+        self.inner.borrow_mut().job_end = t;
+    }
+
+    /// Record the failure instant (the kill).
+    pub fn record_failure(&self, t: SimTime) {
+        let mut inner = self.inner.borrow_mut();
+        if inner.fail_at.is_none() {
+            inner.fail_at = Some(t);
+        }
+    }
+
+    /// A rank re-entered the user function after recovery (before loading
+    /// its checkpoint); the job-level recovery ends at the slowest rank.
+    pub fn record_resume(&self, t: SimTime) {
+        let mut inner = self.inner.borrow_mut();
+        inner.resume_at = Some(match inner.resume_at {
+            None => t,
+            Some(prev) => prev.max(t),
+        });
+    }
+
+    pub fn add_ckpt_write(&self, rank: u32, d: SimDuration) {
+        self.inner.borrow_mut().ckpt_write[rank as usize] += d;
+    }
+
+    pub fn add_ckpt_read(&self, rank: u32, d: SimDuration) {
+        self.inner.borrow_mut().ckpt_read[rank as usize] += d;
+    }
+
+    pub fn fail_at(&self) -> Option<SimTime> {
+        self.inner.borrow().fail_at
+    }
+
+    /// Finalize into the paper's breakdown. Checkpoint phases use the
+    /// slowest rank's accumulated time (the BSP stall path); MPI recovery is
+    /// the failure->resume window minus the checkpoint read that happens
+    /// inside it (read is reported separately, as in the paper).
+    pub fn breakdown(&self) -> Breakdown {
+        let inner = self.inner.borrow();
+        // job_end < job_start means the run never finished (deadlock);
+        // report what we have instead of underflowing.
+        let total = inner.job_end.saturating_sub(inner.job_start).secs_f64();
+        let wr = inner
+            .ckpt_write
+            .iter()
+            .map(|d| d.secs_f64())
+            .fold(0.0, f64::max);
+        let rd = inner
+            .ckpt_read
+            .iter()
+            .map(|d| d.secs_f64())
+            .fold(0.0, f64::max);
+        let recovery = match (inner.fail_at, inner.resume_at) {
+            (Some(f), Some(r)) => {
+                r.saturating_sub(f).secs_f64() + inner.recovery_extra.secs_f64()
+            }
+            _ => 0.0,
+        };
+        Breakdown {
+            total_s: total,
+            ckpt_write_s: wr,
+            ckpt_read_s: rd,
+            mpi_recovery_s: recovery,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accounts_all_phases() {
+        let m = TrialMetrics::new(2);
+        m.set_job_start(SimTime(0));
+        m.set_job_end(SimTime(10_000_000_000)); // 10 s
+        m.record_failure(SimTime(4_000_000_000));
+        m.record_resume(SimTime(4_500_000_000));
+        m.record_resume(SimTime(4_400_000_000)); // earlier rank: ignored
+        m.add_ckpt_write(0, SimDuration::from_millis(300));
+        m.add_ckpt_write(0, SimDuration::from_millis(200));
+        m.add_ckpt_write(1, SimDuration::from_millis(400));
+        m.add_ckpt_read(1, SimDuration::from_millis(50));
+        let b = m.breakdown();
+        assert!((b.total_s - 10.0).abs() < 1e-9);
+        assert!((b.mpi_recovery_s - 0.5).abs() < 1e-9);
+        assert!((b.ckpt_write_s - 0.5).abs() < 1e-9, "max rank sum = 0.5");
+        assert!((b.ckpt_read_s - 0.05).abs() < 1e-9);
+        assert!((b.app_s() - (10.0 - 0.5 - 0.5 - 0.05)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fault_free_run_has_zero_recovery() {
+        let m = TrialMetrics::new(1);
+        m.set_job_end(SimTime(1_000_000_000));
+        let b = m.breakdown();
+        assert_eq!(b.mpi_recovery_s, 0.0);
+        assert!((b.app_s() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn first_failure_time_sticks() {
+        let m = TrialMetrics::new(1);
+        m.record_failure(SimTime(100));
+        m.record_failure(SimTime(200));
+        assert_eq!(m.fail_at(), Some(SimTime(100)));
+    }
+}

@@ -1,0 +1,107 @@
+//! Statistics for the harness: mean and 95% confidence interval via the
+//! t-distribution (the paper's §4 methodology: 10 trials, t-based CIs with
+//! no normality assumption on the population).
+
+/// Two-sided 97.5% t-distribution quantiles for df = 1..=30 (exact table);
+/// falls back to the normal quantile 1.96 for larger df.
+const T_975: [f64; 30] = [
+    12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+    2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+    2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+];
+
+fn t_quantile_975(df: usize) -> f64 {
+    if df == 0 {
+        f64::NAN
+    } else if df <= 30 {
+        T_975[df - 1]
+    } else {
+        1.96
+    }
+}
+
+/// Mean, half-width of the 95% CI, and sample count.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub mean: f64,
+    pub ci95: f64,
+    pub n: usize,
+}
+
+impl Summary {
+    pub fn lo(&self) -> f64 {
+        self.mean - self.ci95
+    }
+    pub fn hi(&self) -> f64 {
+        self.mean + self.ci95
+    }
+}
+
+/// Sample mean and 95% t-CI half-width. For n = 1 the CI is 0 (degenerate).
+pub fn mean_ci95(xs: &[f64]) -> Summary {
+    let n = xs.len();
+    assert!(n > 0, "mean_ci95 of empty sample");
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    if n == 1 {
+        return Summary { mean, ci95: 0.0, n };
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n as f64 - 1.0);
+    let se = (var / n as f64).sqrt();
+    Summary {
+        mean,
+        ci95: t_quantile_975(n - 1) * se,
+        n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_df9_quantile() {
+        // 10 trials -> df 9 -> 2.262 (the value the paper's CIs use)
+        assert_eq!(t_quantile_975(9), 2.262);
+    }
+
+    #[test]
+    fn constant_sample_zero_ci() {
+        let s = mean_ci95(&[3.0; 10]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.ci95, 0.0);
+    }
+
+    #[test]
+    fn known_sample() {
+        // mean 2, sd 1, n=4 -> se = 0.5, t(3) = 3.182 -> ci = 1.591
+        let s = mean_ci95(&[1.0, 2.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        let sd = (2.0f64 / 3.0).sqrt(); // sample sd of [1,2,2,3]
+        let expect = 3.182 * sd / 2.0;
+        assert!((s.ci95 - expect).abs() < 1e-9, "{} vs {}", s.ci95, expect);
+    }
+
+    #[test]
+    fn single_sample_degenerate() {
+        let s = mean_ci95(&[5.0]);
+        assert_eq!((s.mean, s.ci95, s.n), (5.0, 0.0, 1));
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..50).map(|i| (i % 5) as f64).collect();
+        assert!(mean_ci95(&b).ci95 < mean_ci95(&a).ci95);
+    }
+
+    #[test]
+    fn large_df_uses_normal() {
+        assert_eq!(t_quantile_975(100), 1.96);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_sample_panics() {
+        mean_ci95(&[]);
+    }
+}

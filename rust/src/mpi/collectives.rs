@@ -1,0 +1,329 @@
+//! Tree-based collectives over the point-to-point layer.
+//!
+//! Broadcast and reduce use binomial trees (log₂N rounds, N-1 messages);
+//! allreduce = reduce-to-0 + broadcast, which keeps the combine order fixed
+//! so f32 results are bitwise deterministic — required by the global-restart
+//! equivalence tests (a recovered run must reproduce the fault-free run
+//! exactly). Barrier is an empty allreduce.
+//!
+//! Every collective pulls a fresh tag block from the per-comm sequence
+//! counter; ranks call collectives in program order, so blocks agree without
+//! negotiation (MPI's context-id rule).
+
+use super::comm::{Comm, RecvSrc};
+use super::{bytes_to_f32s, f32s_to_bytes, MpiError, Rank, ReduceOp};
+
+impl Comm {
+    /// Binomial-tree broadcast of `data` from `root`. Returns the payload on
+    /// every rank.
+    pub async fn bcast(&self, root: Rank, data: Vec<u8>) -> Result<Vec<u8>, MpiError> {
+        let tag = self.next_coll_tag();
+        self.bcast_tagged(root, data, tag).await
+    }
+
+    async fn bcast_tagged(
+        &self,
+        root: Rank,
+        data: Vec<u8>,
+        tag: u64,
+    ) -> Result<Vec<u8>, MpiError> {
+        let size = self.size;
+        if size <= 1 {
+            return Ok(data);
+        }
+        let vr = (self.rank + size - root) % size; // virtual rank, root = 0
+        let unvr = |v: u32| (v + root) % size;
+
+        // Receive phase: find the bit that connects us to our parent.
+        let mut buf = data;
+        let mut mask = 1u32;
+        while mask < size {
+            if vr & mask != 0 {
+                let parent = unvr(vr - mask);
+                let m = self
+                    .recv_inner(RecvSrc::From(parent), tag, true)
+                    .await?;
+                buf = m.data;
+                break;
+            }
+            mask <<= 1;
+        }
+        // Send phase: fan out to children below our connecting bit.
+        mask >>= 1;
+        while mask > 0 {
+            if vr & mask == 0 && vr + mask < size {
+                self.send(unvr(vr + mask), tag, &buf);
+            }
+            mask >>= 1;
+        }
+        Ok(buf)
+    }
+
+    /// Binomial-tree reduction to `root`. All ranks pass equal-length f32
+    /// vectors; `root` gets the elementwise reduction, others get their
+    /// partial (combine order is rank-ascending at each tree join, fixed).
+    pub async fn reduce(
+        &self,
+        root: Rank,
+        data: &[f32],
+        op: ReduceOp,
+    ) -> Result<Vec<f32>, MpiError> {
+        let tag = self.next_coll_tag();
+        self.reduce_tagged(root, data, op, tag).await
+    }
+
+    async fn reduce_tagged(
+        &self,
+        root: Rank,
+        data: &[f32],
+        op: ReduceOp,
+        tag: u64,
+    ) -> Result<Vec<f32>, MpiError> {
+        let size = self.size;
+        let mut acc: Vec<f32> = data.to_vec();
+        if size <= 1 {
+            return Ok(acc);
+        }
+        let vr = (self.rank + size - root) % size;
+        let unvr = |v: u32| (v + root) % size;
+        let mut mask = 1u32;
+        while mask < size {
+            if vr & mask == 0 {
+                let child = vr | mask;
+                if child < size {
+                    let m = self
+                        .recv_inner(RecvSrc::From(unvr(child)), tag, true)
+                        .await?;
+                    let other = bytes_to_f32s(&m.data);
+                    debug_assert_eq!(other.len(), acc.len());
+                    // Fixed order: child-subtree value combines on the right.
+                    for (a, b) in acc.iter_mut().zip(other) {
+                        *a = op.apply(*a, b);
+                    }
+                }
+            } else {
+                let parent = unvr(vr & !mask);
+                self.send(parent, tag, &f32s_to_bytes(&acc));
+                break;
+            }
+            mask <<= 1;
+        }
+        Ok(acc)
+    }
+
+    /// Allreduce: reduce to rank `0` then broadcast. Deterministic combine
+    /// order (see module docs).
+    pub async fn allreduce(&self, data: &[f32], op: ReduceOp) -> Result<Vec<f32>, MpiError> {
+        let rtag = self.next_coll_tag();
+        let btag = self.next_coll_tag();
+        let partial = self.reduce_tagged(0, data, op, rtag).await?;
+        let out = self
+            .bcast_tagged(0, f32s_to_bytes(&partial), btag)
+            .await?;
+        Ok(bytes_to_f32s(&out))
+    }
+
+    /// Scalar convenience allreduce.
+    pub async fn allreduce_scalar(&self, x: f32, op: ReduceOp) -> Result<f32, MpiError> {
+        Ok(self.allreduce(&[x], op).await?[0])
+    }
+
+    /// Barrier: empty allreduce (tree down + up).
+    pub async fn barrier(&self) -> Result<(), MpiError> {
+        self.allreduce(&[], ReduceOp::Sum).await?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::config::Calibration;
+    use crate::mpi::{FtMode, MpiJob};
+    use crate::sim::{Sim, SimDuration, SimTime};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    /// Run `body(rank, comm)` on `n` ranks; returns per-rank results.
+    fn run_ranks<T: 'static + Clone, F, Fut>(n: u32, mode: FtMode, body: F) -> Vec<T>
+    where
+        F: Fn(u32, Rc<Comm>) -> Fut + 'static + Clone,
+        Fut: std::future::Future<Output = T> + 'static,
+    {
+        let sim = Sim::new();
+        let topo = Topology::new(n, 16, 0);
+        let job = MpiJob::new(&sim, topo, mode, &Calibration::default());
+        let results: Rc<RefCell<Vec<Option<T>>>> =
+            Rc::new(RefCell::new(vec![None; n as usize]));
+        for r in 0..n {
+            let p = sim.spawn_process(format!("r{r}"));
+            let job2 = job.clone();
+            let res = Rc::clone(&results);
+            let body = body.clone();
+            let node = topo.home_node(r);
+            sim.spawn(p, async move {
+                let comm = Rc::new(job2.attach(r, node));
+                let out = body(r, comm).await;
+                res.borrow_mut()[r as usize] = Some(out);
+            });
+        }
+        let summary = sim.run();
+        assert_eq!(summary.tasks_pending, 0, "collective deadlocked");
+        Rc::try_unwrap(results)
+            .ok()
+            .unwrap()
+            .into_inner()
+            .into_iter()
+            .map(|o| o.expect("rank produced no result"))
+            .collect()
+    }
+
+    #[test]
+    fn bcast_from_rank0() {
+        for n in [1u32, 2, 3, 7, 16, 33] {
+            let out = run_ranks(n, FtMode::Reinit, move |r, c| async move {
+                let data = if r == 0 { vec![42u8, 1] } else { vec![] };
+                c.bcast(0, data).await.unwrap()
+            });
+            assert!(out.iter().all(|d| d == &vec![42u8, 1]), "n={n}");
+        }
+    }
+
+    #[test]
+    fn bcast_from_nonzero_root() {
+        let out = run_ranks(8, FtMode::Reinit, move |r, c| async move {
+            let data = if r == 5 { vec![9u8] } else { vec![] };
+            c.bcast(5, data).await.unwrap()
+        });
+        assert!(out.iter().all(|d| d == &vec![9u8]));
+    }
+
+    #[test]
+    fn reduce_sum_to_root() {
+        for n in [1u32, 4, 5, 16] {
+            let out = run_ranks(n, FtMode::Reinit, move |r, c| async move {
+                c.reduce(0, &[r as f32, 1.0], ReduceOp::Sum).await.unwrap()
+            });
+            let expect = (0..n).map(|r| r as f32).sum::<f32>();
+            assert_eq!(out[0], vec![expect, n as f32], "n={n}");
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_min_max() {
+        let n = 13u32; // non-power-of-two
+        let sums = run_ranks(n, FtMode::Reinit, move |r, c| async move {
+            c.allreduce(&[r as f32], ReduceOp::Sum).await.unwrap()[0]
+        });
+        assert!(sums.iter().all(|&s| s == 78.0), "{sums:?}");
+        let mins = run_ranks(n, FtMode::Reinit, move |r, c| async move {
+            c.allreduce_scalar(r as f32 - 3.0, ReduceOp::Min).await.unwrap()
+        });
+        assert!(mins.iter().all(|&m| m == -3.0));
+        let maxs = run_ranks(n, FtMode::Reinit, move |r, c| async move {
+            c.allreduce_scalar(r as f32, ReduceOp::Max).await.unwrap()
+        });
+        assert!(maxs.iter().all(|&m| m == 12.0));
+    }
+
+    #[test]
+    fn allreduce_bitwise_deterministic() {
+        // adversarial f32s where combine order matters
+        let vals: Vec<f32> = (0..16)
+            .map(|i| (1.0f32 + i as f32 * 0.7).powi(3) * if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let run = || {
+            let v = vals.clone();
+            run_ranks(16, FtMode::Reinit, move |r, c| {
+                let x = v[r as usize];
+                async move { c.allreduce_scalar(x, ReduceOp::Sum).await.unwrap().to_bits() }
+            })
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| x == a[0]), "all ranks agree bitwise");
+    }
+
+    #[test]
+    fn barrier_synchronizes_virtual_time() {
+        // rank i sleeps i ms then barriers; all must leave the barrier at
+        // >= the slowest rank's arrival.
+        let out = run_ranks(8, FtMode::Reinit, move |r, c| async move {
+            let sim = sim_of(&c);
+            sim.sleep(SimDuration::from_millis(r as u64)).await;
+            c.barrier().await.unwrap();
+            sim.now()
+        });
+        let slowest_arrival = SimTime::ZERO + SimDuration::from_millis(7);
+        for t in out {
+            assert!(t >= slowest_arrival, "{t:?}");
+        }
+    }
+
+    fn sim_of(c: &Comm) -> Sim {
+        c.job.inner.sim.clone()
+    }
+
+    #[test]
+    fn consecutive_collectives_do_not_cross_match() {
+        let out = run_ranks(4, FtMode::Reinit, move |r, c| async move {
+            let a = c.allreduce_scalar(r as f32, ReduceOp::Sum).await.unwrap();
+            let b = c.allreduce_scalar(1.0, ReduceOp::Sum).await.unwrap();
+            let d = c
+                .bcast(0, if r == 0 { vec![3] } else { vec![] })
+                .await
+                .unwrap();
+            (a, b, d[0])
+        });
+        for (a, b, d) in out {
+            assert_eq!((a, b, d), (6.0, 4.0, 3));
+        }
+    }
+
+    #[test]
+    fn ulfm_collective_fails_on_any_known_failure() {
+        // 4 ranks, rank 3 dies before the collective; others get ProcFailed.
+        let sim = Sim::new();
+        let topo = Topology::new(4, 16, 0);
+        let job = MpiJob::new(&sim, topo, FtMode::Ulfm, &Calibration::default());
+        let errs: Rc<RefCell<Vec<MpiError>>> = Rc::new(RefCell::new(Vec::new()));
+        for r in 0..3u32 {
+            let p = sim.spawn_process(format!("r{r}"));
+            let j2 = job.clone();
+            let e2 = Rc::clone(&errs);
+            sim.spawn(p, async move {
+                let c = j2.attach(r, 0);
+                let e = c.allreduce_scalar(1.0, ReduceOp::Sum).await.unwrap_err();
+                e2.borrow_mut().push(e);
+            });
+        }
+        job.notify_failure(3, SimDuration::from_millis(50));
+        let s = sim.run();
+        assert_eq!(s.tasks_pending, 0);
+        assert_eq!(errs.borrow().len(), 3);
+        for e in errs.borrow().iter() {
+            assert_eq!(*e, MpiError::ProcFailed { rank: 3 });
+        }
+    }
+
+    #[test]
+    fn collective_message_complexity_is_linear() {
+        // reduce+bcast allreduce: 2(N-1) data messages per allreduce
+        let sim = Sim::new();
+        let topo = Topology::new(32, 16, 0);
+        let job = MpiJob::new(&sim, topo, FtMode::Reinit, &Calibration::default());
+        for r in 0..32u32 {
+            let p = sim.spawn_process(format!("r{r}"));
+            let j2 = job.clone();
+            sim.spawn(p, async move {
+                let c = j2.attach(r, 0);
+                c.allreduce_scalar(1.0, ReduceOp::Sum).await.unwrap();
+            });
+        }
+        sim.run();
+        let (msgs, _) = job.inner.fabric.stats();
+        assert_eq!(msgs, 2 * 31, "allreduce over 32 ranks = 62 messages");
+    }
+}

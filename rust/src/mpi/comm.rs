@@ -1,0 +1,543 @@
+//! Per-rank communicator handle: point-to-point with (src, tag) matching and
+//! ULFM-style failure surfacing.
+
+use std::cell::{Cell, RefCell};
+use std::collections::{HashSet, VecDeque};
+
+use super::{tags, FtMode, MpiError, MpiJob, Msg, Rank};
+use crate::sim::Receiver;
+
+/// Source selector for a receive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvSrc {
+    Any,
+    From(Rank),
+}
+
+/// A rank's handle on the world communicator (one generation).
+pub struct Comm {
+    pub(crate) job: MpiJob,
+    pub rank: Rank,
+    pub size: u32,
+    pub node: u32,
+    generation: u64,
+    rx: Receiver<Msg>,
+    unmatched: RefCell<VecDeque<Msg>>,
+    known_failed: RefCell<HashSet<Rank>>,
+    revoked: Cell<bool>,
+    op_seq: Cell<u64>,
+}
+
+impl Comm {
+    pub(crate) fn attach(job: MpiJob, rank: Rank, node: u32) -> Comm {
+        let generation = job.generation();
+        let rx = job
+            .inner
+            .fabric
+            .bind(MpiJob::key(generation, rank), node);
+        Comm {
+            job,
+            rank,
+            size: 0,
+            node,
+            generation,
+            rx,
+            unmatched: RefCell::new(VecDeque::new()),
+            known_failed: RefCell::new(HashSet::new()),
+            revoked: Cell::new(false),
+            op_seq: Cell::new(0),
+        }
+        .finish_init()
+    }
+
+    fn finish_init(mut self) -> Comm {
+        self.size = self.job.size();
+        self
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Ranks this communicator knows to have failed (ULFM notification).
+    pub fn known_failed(&self) -> Vec<Rank> {
+        let mut v: Vec<Rank> = self.known_failed.borrow().iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn is_revoked(&self) -> bool {
+        self.revoked.get()
+    }
+
+    /// ULFM compute-inflation factor for this scale (Fig. 5): the always-on
+    /// heartbeat + fault-tolerant wrappers tax every compute/comm phase.
+    pub fn fault_tolerance_compute_factor(&self) -> f64 {
+        match self.job.mode() {
+            FtMode::Ulfm => {
+                1.0 + self.job.inner.ulfm_frac_per_level
+                    * crate::cluster::Topology::tree_levels(self.size) as f64
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// Next collective tag block (all ranks call collectives in the same
+    /// order, so sequence numbers agree).
+    pub(crate) fn next_coll_tag(&self) -> u64 {
+        let s = self.op_seq.get();
+        self.op_seq.set(s + 1);
+        tags::COLLECTIVE_BASE + (s << 8)
+    }
+
+    /// Fire-and-forget send (MPI_Send with buffering semantics).
+    pub fn send(&self, to: Rank, tag: u64, data: &[u8]) {
+        debug_assert!(tag < tags::CTRL_REVOKE);
+        let msg = Msg {
+            src: self.rank,
+            tag,
+            data: data.to_vec(),
+        };
+        let bytes = data.len().max(1); // headers: empty msgs still cost latency
+        self.job
+            .inner
+            .fabric
+            .send_from(self.node, MpiJob::key(self.generation, to), msg, bytes);
+    }
+
+    fn take_unmatched(&self, src: RecvSrc, tag: u64) -> Option<Msg> {
+        let mut q = self.unmatched.borrow_mut();
+        let pos = q.iter().position(|m| {
+            m.tag == tag
+                && match src {
+                    RecvSrc::Any => true,
+                    RecvSrc::From(r) => m.src == r,
+                }
+        })?;
+        q.remove(pos)
+    }
+
+    fn handle_ctrl(&self, msg: &Msg) -> bool {
+        match msg.tag {
+            tags::CTRL_FAILURE => {
+                let r = Rank::from_le_bytes([
+                    msg.data[0],
+                    msg.data[1],
+                    msg.data[2],
+                    msg.data[3],
+                ]);
+                self.known_failed.borrow_mut().insert(r);
+                true
+            }
+            tags::CTRL_REVOKE => {
+                self.revoked.set(true);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Check ULFM error conditions for an operation that `involves` the
+    /// given peers (None = the whole communicator).
+    fn check_failures(&self, involves: Option<&[Rank]>) -> Result<(), MpiError> {
+        if self.job.mode() != FtMode::Ulfm {
+            return Ok(()); // CR/Reinit: no user-level notification
+        }
+        if self.revoked.get() {
+            return Err(MpiError::Revoked);
+        }
+        let failed = self.known_failed.borrow();
+        if failed.is_empty() {
+            return Ok(());
+        }
+        match involves {
+            None => {
+                let r = *failed.iter().min().unwrap();
+                Err(MpiError::ProcFailed { rank: r })
+            }
+            Some(peers) => {
+                for p in peers {
+                    if failed.contains(p) {
+                        return Err(MpiError::ProcFailed { rank: *p });
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Receive matching (src, tag). `collective` ops fail on *any* known
+    /// failure; point-to-point only on the involved peer.
+    pub async fn recv_inner(
+        &self,
+        src: RecvSrc,
+        tag: u64,
+        collective: bool,
+    ) -> Result<Msg, MpiError> {
+        loop {
+            let involves_buf;
+            let involves: Option<&[Rank]> = if collective {
+                None
+            } else {
+                match src {
+                    RecvSrc::Any => None,
+                    RecvSrc::From(r) => {
+                        involves_buf = [r];
+                        Some(&involves_buf)
+                    }
+                }
+            };
+            self.check_failures(involves)?;
+            if let Some(m) = self.take_unmatched(src, tag) {
+                return Ok(m);
+            }
+            // Block for the next message (control messages wake us too).
+            match self.rx.recv().await {
+                Ok(m) => {
+                    if !self.handle_ctrl(&m) {
+                        self.unmatched.borrow_mut().push_back(m);
+                    }
+                    // loop: re-check failures + matching
+                }
+                Err(_) => {
+                    // Mailbox closed: treat as revocation (job shutting down)
+                    return Err(MpiError::Revoked);
+                }
+            }
+        }
+    }
+
+    /// Point-to-point receive.
+    pub async fn recv(&self, src: RecvSrc, tag: u64) -> Result<Msg, MpiError> {
+        self.recv_inner(src, tag, false).await
+    }
+
+    /// Combined send + receive (halo exchange building block).
+    pub async fn sendrecv(
+        &self,
+        to: Rank,
+        send_tag: u64,
+        data: &[u8],
+        from: Rank,
+        recv_tag: u64,
+    ) -> Result<Msg, MpiError> {
+        self.send(to, send_tag, data);
+        self.recv(RecvSrc::From(from), recv_tag).await
+    }
+
+    /// Raw send used by the ULFM shrink/agree protocol (same path as `send`;
+    /// revocation never blocks outbound traffic, per the ULFM spec).
+    pub(crate) fn send_raw(&self, to: Rank, tag: u64, data: &[u8]) {
+        self.send(to, tag, data);
+    }
+
+    /// Unchecked receive: ignores revocation and failure knowledge (the
+    /// ULFM spec requires shrink/agree to progress on revoked communicators
+    /// with failed members). Returns None only if the mailbox closed.
+    pub(crate) async fn recv_unchecked(&self, src: RecvSrc, tag: u64) -> Option<Msg> {
+        loop {
+            if let Some(m) = self.take_unmatched(src, tag) {
+                return Some(m);
+            }
+            match self.rx.recv().await {
+                Ok(m) => {
+                    if !self.handle_ctrl(&m) {
+                        self.unmatched.borrow_mut().push_back(m);
+                    }
+                }
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// `recv_unchecked` with a relative timeout (shrink/agree liveness: a
+    /// survivor blocked on a peer that moved to different failure knowledge
+    /// must be able to back off and retry).
+    pub(crate) async fn recv_unchecked_timeout(
+        &self,
+        src: RecvSrc,
+        tag: u64,
+        timeout: crate::sim::SimDuration,
+    ) -> Option<Msg> {
+        let deadline = self.job.inner.sim.now() + timeout;
+        loop {
+            if let Some(m) = self.take_unmatched(src, tag) {
+                return Some(m);
+            }
+            match self.rx.recv_deadline(deadline).await {
+                Ok(m) => {
+                    if !self.handle_ctrl(&m) {
+                        self.unmatched.borrow_mut().push_back(m);
+                    }
+                }
+                Err(_) => return None, // closed or timed out
+            }
+        }
+    }
+
+    /// Wait until failure knowledge is quiescent for one heartbeat period
+    /// (failure-detector convergence before entering shrink/agree; all
+    /// survivors see RTE notifications with identical delivery delay, so a
+    /// quiet period yields identical knowledge — the consistency anchor of
+    /// our shrink protocol, see `ulfm.rs`).
+    pub async fn stabilize_failure_knowledge(&self) {
+        let quiet = self.job.inner.ulfm_stabilize;
+        loop {
+            let snap = self.known_failed();
+            self.job.inner.sim.sleep(quiet).await;
+            self.poll_ctrl();
+            if self.known_failed() == snap {
+                return;
+            }
+        }
+    }
+
+    /// ULFM `MPI_Comm_revoke`: best-effort flood to all ranks, plus local
+    /// revocation. Any subsequent operation on this communicator raises
+    /// `Revoked` everywhere.
+    pub fn revoke(&self) {
+        self.revoked.set(true);
+        for r in 0..self.size {
+            if r == self.rank {
+                continue;
+            }
+            let msg = Msg {
+                src: self.rank,
+                tag: tags::CTRL_REVOKE,
+                data: Vec::new(),
+            };
+            self.job
+                .inner
+                .fabric
+                .send_from(self.node, MpiJob::key(self.generation, r), msg, 1);
+        }
+    }
+
+    /// Drain any control messages already queued (used before testing
+    /// failure knowledge without blocking).
+    pub fn poll_ctrl(&self) {
+        while let Some(m) = self.rx.try_recv() {
+            if !self.handle_ctrl(&m) {
+                self.unmatched.borrow_mut().push_back(m);
+            }
+        }
+    }
+}
+
+impl Drop for Comm {
+    fn drop(&mut self) {
+        // Unbind only if we are still the current binding (a newer
+        // generation may have re-bound this rank's key space).
+        let key = MpiJob::key(self.generation, self.rank);
+        self.job.inner.fabric.unbind(key);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::config::Calibration;
+    use crate::sim::{Sim, SimDuration};
+    use std::cell::Cell as StdCell;
+    use std::rc::Rc;
+
+    fn job(sim: &Sim, ranks: u32, mode: FtMode) -> MpiJob {
+        MpiJob::new(
+            sim,
+            Topology::new(ranks, 16, 0),
+            mode,
+            &Calibration::default(),
+        )
+    }
+
+    #[test]
+    fn p2p_send_recv() {
+        let sim = Sim::new();
+        let j = job(&sim, 2, FtMode::Reinit);
+        let ok = Rc::new(StdCell::new(false));
+        let p0 = sim.spawn_process("r0");
+        let p1 = sim.spawn_process("r1");
+        let j0 = j.clone();
+        sim.spawn(p0, async move {
+            let c = j0.attach(0, 0);
+            c.send(1, 7, &[1, 2, 3]);
+        });
+        let j1 = j.clone();
+        let ok2 = Rc::clone(&ok);
+        sim.spawn(p1, async move {
+            let c = j1.attach(1, 0);
+            let m = c.recv(RecvSrc::From(0), 7).await.unwrap();
+            assert_eq!(m.data, vec![1, 2, 3]);
+            assert_eq!(m.src, 0);
+            ok2.set(true);
+        });
+        sim.run();
+        assert!(ok.get());
+    }
+
+    #[test]
+    fn tag_matching_out_of_order() {
+        let sim = Sim::new();
+        let j = job(&sim, 2, FtMode::Reinit);
+        let p0 = sim.spawn_process("r0");
+        let p1 = sim.spawn_process("r1");
+        let j0 = j.clone();
+        sim.spawn(p0, async move {
+            let c = j0.attach(0, 0);
+            c.send(1, 100, &[100]);
+            c.send(1, 200, &[200]);
+        });
+        let j1 = j.clone();
+        let ok = Rc::new(StdCell::new(false));
+        let ok2 = Rc::clone(&ok);
+        sim.spawn(p1, async move {
+            let c = j1.attach(1, 0);
+            // receive tag 200 first even though 100 arrives first
+            let m200 = c.recv(RecvSrc::From(0), 200).await.unwrap();
+            let m100 = c.recv(RecvSrc::From(0), 100).await.unwrap();
+            assert_eq!((m100.data[0], m200.data[0]), (100, 200));
+            ok2.set(true);
+        });
+        sim.run();
+        assert!(ok.get());
+    }
+
+    #[test]
+    fn recv_any_source() {
+        let sim = Sim::new();
+        let j = job(&sim, 3, FtMode::Reinit);
+        for r in [1u32, 2] {
+            let p = sim.spawn_process(format!("r{r}"));
+            let jj = j.clone();
+            sim.spawn(p, async move {
+                let c = jj.attach(r, 0);
+                c.send(0, 9, &[r as u8]);
+            });
+        }
+        let p0 = sim.spawn_process("r0");
+        let j0 = j.clone();
+        let total = Rc::new(StdCell::new(0u8));
+        let t2 = Rc::clone(&total);
+        sim.spawn(p0, async move {
+            let c = j0.attach(0, 0);
+            let a = c.recv(RecvSrc::Any, 9).await.unwrap();
+            let b = c.recv(RecvSrc::Any, 9).await.unwrap();
+            t2.set(a.data[0] + b.data[0]);
+        });
+        sim.run();
+        assert_eq!(total.get(), 3);
+    }
+
+    #[test]
+    fn ulfm_failure_notification_errors_pending_recv() {
+        let sim = Sim::new();
+        let j = job(&sim, 2, FtMode::Ulfm);
+        let p1 = sim.spawn_process("r1");
+        let j1 = j.clone();
+        let got = Rc::new(StdCell::new(None));
+        let g2 = Rc::clone(&got);
+        sim.spawn(p1, async move {
+            let c = j1.attach(1, 0);
+            // rank 0 never sends: it "fails"
+            let r = c.recv(RecvSrc::From(0), 7).await;
+            g2.set(Some(r.unwrap_err()));
+        });
+        j.notify_failure(0, SimDuration::from_millis(100));
+        sim.run();
+        assert_eq!(got.get(), Some(MpiError::ProcFailed { rank: 0 }));
+    }
+
+    #[test]
+    fn cr_mode_blocks_forever_on_dead_peer() {
+        let sim = Sim::new();
+        let j = job(&sim, 2, FtMode::Cr);
+        let p1 = sim.spawn_process("r1");
+        let j1 = j.clone();
+        sim.spawn(p1, async move {
+            let c = j1.attach(1, 0);
+            let _ = c.recv(RecvSrc::From(0), 7).await;
+            unreachable!("CR rank must hang, not error");
+        });
+        j.notify_failure(0, SimDuration::from_millis(100));
+        let s = sim.run();
+        assert_eq!(s.tasks_pending, 1, "rank 1 still blocked");
+    }
+
+    #[test]
+    fn revoke_floods_and_errors_peers() {
+        let sim = Sim::new();
+        let j = job(&sim, 3, FtMode::Ulfm);
+        let results: Rc<RefCell<Vec<MpiError>>> = Rc::new(RefCell::new(Vec::new()));
+        for r in [1u32, 2] {
+            let p = sim.spawn_process(format!("r{r}"));
+            let jj = j.clone();
+            let res = Rc::clone(&results);
+            sim.spawn(p, async move {
+                let c = jj.attach(r, 0);
+                let e = c.recv(RecvSrc::From(0), 7).await.unwrap_err();
+                res.borrow_mut().push(e);
+            });
+        }
+        let p0 = sim.spawn_process("r0");
+        let j0 = j.clone();
+        let s0 = sim.clone();
+        sim.spawn(p0, async move {
+            let c = j0.attach(0, 0);
+            s0.sleep(SimDuration::from_millis(1)).await;
+            c.revoke();
+        });
+        sim.run();
+        assert_eq!(
+            *results.borrow(),
+            vec![MpiError::Revoked, MpiError::Revoked]
+        );
+    }
+
+    #[test]
+    fn stale_generation_traffic_not_matched() {
+        let sim = Sim::new();
+        let j = job(&sim, 2, FtMode::Reinit);
+        let p0 = sim.spawn_process("r0");
+        let j0 = j.clone();
+        sim.spawn(p0, async move {
+            let old = j0.attach(0, 0);
+            old.send(1, 7, &[9]); // sent into generation 0
+        });
+        // generation bumped before rank 1 attaches (post-rollback)
+        let p1 = sim.spawn_process("r1");
+        let j1 = j.clone();
+        let s1 = sim.clone();
+        let pending = Rc::new(StdCell::new(false));
+        let pend2 = Rc::clone(&pending);
+        sim.spawn(p1, async move {
+            s1.sleep(SimDuration::from_micros(10)).await;
+            j1.bump_generation();
+            let c = j1.attach(1, 0);
+            pend2.set(true);
+            let _ = c.recv(RecvSrc::From(0), 7).await; // must never arrive
+            unreachable!();
+        });
+        let s = sim.run();
+        assert!(pending.get());
+        assert_eq!(s.tasks_pending, 1, "old-generation msg must not match");
+    }
+
+    #[test]
+    fn ulfm_compute_factor_grows_with_scale() {
+        let sim = Sim::new();
+        let j16 = job(&sim, 16, FtMode::Ulfm);
+        let j1024 = job(&sim, 1024, FtMode::Ulfm);
+        let c16 = j16.attach(0, 0);
+        let c1024 = j1024.attach(0, 0);
+        assert!(c16.fault_tolerance_compute_factor() > 1.0);
+        assert!(
+            c1024.fault_tolerance_compute_factor()
+                > c16.fault_tolerance_compute_factor()
+        );
+        let jr = job(&sim, 1024, FtMode::Reinit);
+        assert_eq!(jr.attach(0, 0).fault_tolerance_compute_factor(), 1.0);
+    }
+
+    use std::cell::RefCell;
+}

@@ -1,0 +1,266 @@
+//! MPI-like message layer over the simulated fabric.
+//!
+//! Implements what the proxy applications and the three recovery approaches
+//! need from MPI: a world communicator with point-to-point matching
+//! (src, tag), binomial-tree broadcast/reduce, tree allreduce and barrier,
+//! plus the ULFM extensions (`revoke`, failure notification, `agree`).
+//!
+//! Failure semantics per recovery mode (paper §2):
+//! - **CR**: no user-level fault notification. Operations touching a dead
+//!   peer simply block forever; the RTE kills the whole job.
+//! - **ULFM**: the RTE (heartbeat + SIGCHLD path) broadcasts failure
+//!   notifications as control messages; pending/future operations raise
+//!   `MpiError::ProcFailed` / `MpiError::Revoked`, and the application
+//!   drives recovery (revoke -> shrink -> agree -> spawn -> merge).
+//! - **Reinit++**: ranks are never told about failures through MPI; the
+//!   runtime rolls survivors back (SIGREINIT == task cancellation) and
+//!   re-spawns the failed ranks, then everyone re-attaches a fresh
+//!   communicator generation.
+//!
+//! Endpoint keys on the fabric are `(generation << 32) | rank`, so stale
+//! traffic from before a roll-back can never be matched by the repaired
+//! world communicator.
+
+mod collectives;
+mod comm;
+pub mod ulfm;
+
+pub use comm::{Comm, RecvSrc};
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use crate::cluster::Topology;
+use crate::config::Calibration;
+use crate::sim::Sim;
+use crate::transport::{Fabric, NetCost};
+
+/// MPI rank index.
+pub type Rank = u32;
+
+/// Sender id for runtime-originated control messages.
+pub const SYSTEM_SRC: Rank = u32::MAX;
+
+/// Control-plane tags (top of the tag space).
+pub mod tags {
+    /// RTE failure notification (ULFM mode): payload = failed rank.
+    pub const CTRL_FAILURE: u64 = u64::MAX;
+    /// Communicator revocation flood.
+    pub const CTRL_REVOKE: u64 = u64::MAX - 1;
+    /// First tag reserved for collectives (below control, above user tags).
+    pub const COLLECTIVE_BASE: u64 = 1 << 48;
+}
+
+/// Fault-tolerance mode of the job (which recovery approach is active).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FtMode {
+    Cr,
+    Ulfm,
+    Reinit,
+}
+
+/// Errors surfaced by MPI operations (ULFM semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MpiError {
+    /// A process involved in the operation is known to have failed.
+    ProcFailed { rank: Rank },
+    /// The communicator was revoked.
+    Revoked,
+}
+
+impl std::fmt::Display for MpiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MpiError::ProcFailed { rank } => write!(f, "MPI_ERR_PROC_FAILED (rank {rank})"),
+            MpiError::Revoked => write!(f, "MPI_ERR_REVOKED"),
+        }
+    }
+}
+
+impl std::error::Error for MpiError {}
+
+/// A message on the data plane.
+#[derive(Clone, Debug)]
+pub struct Msg {
+    pub src: Rank,
+    pub tag: u64,
+    pub data: Vec<u8>,
+}
+
+pub(crate) struct JobInner {
+    pub sim: Sim,
+    pub fabric: Fabric<Msg>,
+    pub topo: Topology,
+    pub mode: FtMode,
+    pub generation: Cell<u64>,
+    /// ULFM fault-free overhead fraction per collective tree level (Fig. 5).
+    pub ulfm_frac_per_level: f64,
+    /// Quiet period for failure-detector convergence (one heartbeat).
+    pub ulfm_stabilize: crate::sim::SimDuration,
+}
+
+/// Shared per-job MPI state; ranks `attach` to get their `Comm`.
+#[derive(Clone)]
+pub struct MpiJob {
+    pub(crate) inner: Rc<JobInner>,
+}
+
+impl MpiJob {
+    pub fn new(sim: &Sim, topo: Topology, mode: FtMode, calib: &Calibration) -> Self {
+        MpiJob {
+            inner: Rc::new(JobInner {
+                sim: sim.clone(),
+                fabric: Fabric::new(sim, NetCost::from_calib(calib)),
+                topo,
+                mode,
+                generation: Cell::new(0),
+                ulfm_frac_per_level: calib.ulfm_overhead_frac_per_level,
+                ulfm_stabilize: crate::sim::SimDuration::from_secs_f64(
+                    calib.ulfm_hb_period_ms * 1e-3,
+                ),
+            }),
+        }
+    }
+
+    pub fn size(&self) -> u32 {
+        self.inner.topo.ranks
+    }
+
+    pub fn mode(&self) -> FtMode {
+        self.inner.mode
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.inner.generation.get()
+    }
+
+    /// Start a new communicator generation (Reinit++ roll-back / ULFM
+    /// repair). Ranks attached to older generations can no longer be
+    /// reached — their in-flight traffic is dropped, like post-longjmp
+    /// MPI state in the paper (§3.1: only the world communicator survives,
+    /// rebuilt).
+    pub fn bump_generation(&self) -> u64 {
+        let g = self.inner.generation.get() + 1;
+        self.inner.generation.set(g);
+        g
+    }
+
+    pub(crate) fn key(generation: u64, rank: Rank) -> u64 {
+        (generation << 32) | rank as u64
+    }
+
+    /// Attach `rank` (currently placed on `node`) to the *current*
+    /// generation of the world communicator. The paper's MPI_Init /
+    /// post-MPI_Reinit state.
+    pub fn attach(&self, rank: Rank, node: u32) -> Comm {
+        Comm::attach(self.clone(), rank, node)
+    }
+
+    /// RTE-side failure notification (ULFM mode): tell every currently
+    /// attached rank that `failed` died, after `delay` of detection
+    /// latency (heartbeat period + propagation).
+    pub fn notify_failure(&self, failed: Rank, delay: crate::sim::SimDuration) {
+        let inner = Rc::clone(&self.inner);
+        self.inner.sim.schedule(delay, move || {
+            let generation = inner.generation.get();
+            for r in 0..inner.topo.ranks {
+                if r == failed {
+                    continue;
+                }
+                let msg = Msg {
+                    src: SYSTEM_SRC,
+                    tag: tags::CTRL_FAILURE,
+                    data: failed.to_le_bytes().to_vec(),
+                };
+                inner
+                    .fabric
+                    .send_from(u32::MAX, Self::key(generation, r), msg, 4);
+            }
+        });
+    }
+}
+
+/// User-space tag for the RTE "recovery complete, re-attach" signal
+/// (ULFM spawn+merge handshake).
+pub const PROCEED_TAG: u64 = 1 << 47;
+
+impl MpiJob {
+    /// RTE-originated point message to a rank of a *specific* generation
+    /// (used to reach survivors still attached to a revoked communicator).
+    pub fn send_system(&self, generation: u64, rank: Rank, tag: u64, data: Vec<u8>) {
+        let bytes = data.len().max(1);
+        let msg = Msg {
+            src: SYSTEM_SRC,
+            tag,
+            data,
+        };
+        self.inner
+            .fabric
+            .send_from(u32::MAX, Self::key(generation, rank), msg, bytes);
+    }
+}
+
+/// Encode a f32 slice little-endian.
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a little-endian f32 buffer.
+pub fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    assert_eq!(b.len() % 4, 0, "not a f32 buffer");
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Elementwise reduction operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Min,
+    Max,
+}
+
+impl ReduceOp {
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Min => a.min(b),
+            ReduceOp::Max => a.max(b),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_codec_roundtrip() {
+        let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a f32 buffer")]
+    fn f32_codec_rejects_ragged() {
+        bytes_to_f32s(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn reduce_ops() {
+        assert_eq!(ReduceOp::Sum.apply(1.0, 2.0), 3.0);
+        assert_eq!(ReduceOp::Min.apply(1.0, 2.0), 1.0);
+        assert_eq!(ReduceOp::Max.apply(1.0, 2.0), 2.0);
+    }
+
+    #[test]
+    fn endpoint_keys_disjoint_across_generations() {
+        assert_ne!(MpiJob::key(0, 5), MpiJob::key(1, 5));
+        assert_ne!(MpiJob::key(1, 0), MpiJob::key(0, 1));
+    }
+}

@@ -1,0 +1,245 @@
+//! ULFM extensions: `MPI_Comm_shrink` + `MPI_Comm_agree` over survivors.
+//!
+//! Per the ULFM spec both operations must make progress on a *revoked*
+//! communicator with known-failed members, so they use an unchecked receive
+//! path that ignores the revocation flag and failure knowledge (survivors
+//! only talk to survivors).
+//!
+//! The protocol is the classic two-phase consensus the ULFM global-restart
+//! recipe needs: gather the union of locally-known failed sets up a binomial
+//! tree of survivors (leader = lowest survivor rank), then broadcast the
+//! agreed set down. With a single injected failure one round always
+//! converges; the retry loop guards the general case.
+
+use super::comm::{Comm, RecvSrc};
+use super::{bytes_to_f32s, f32s_to_bytes, MpiError, Rank};
+
+/// Result of `shrink`: the survivor group and this rank's index in it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shrunken {
+    pub survivors: Vec<Rank>,
+    pub my_index: u32,
+}
+
+fn encode_set(ranks: &[Rank]) -> Vec<u8> {
+    f32s_to_bytes(&ranks.iter().map(|&r| r as f32).collect::<Vec<_>>())
+}
+
+fn decode_set(b: &[u8]) -> Vec<Rank> {
+    bytes_to_f32s(b).iter().map(|&f| f as Rank).collect()
+}
+
+impl Comm {
+    /// Agree on the global failed set and return the shrunken survivor
+    /// group (`MPI_Comm_shrink` + the `MPI_Comm_agree` consensus in one
+    /// protocol, as the ULFM global-restart recipe composes them).
+    pub async fn shrink_agree(&self) -> Result<Shrunken, MpiError> {
+        // Failure-detector convergence: all survivors enter with identical
+        // knowledge (see `Comm::stabilize_failure_knowledge`). This quiet
+        // period is part of why ULFM recovery is slower than Reinit++.
+        let mut attempts = 0u32;
+        loop {
+            self.stabilize_failure_knowledge().await;
+            let known = self.known_failed();
+            let survivors: Vec<Rank> =
+                (0..self.size).filter(|r| !known.contains(r)).collect();
+            // Tag space derived from the (stabilized) failure knowledge —
+            // NOT from the collective sequence counter: survivors are
+            // interrupted at *different* operations (a halo recv vs an
+            // allreduce), so their op_seq values disagree. Hashing the
+            // failed set gives every survivor with the same knowledge the
+            // same base without communication; survivors with *different*
+            // knowledge use disjoint tags, time out, and retry after the
+            // late notifications arrive.
+            let mut h: u64 = 0xcbf29ce484222325;
+            for r in &known {
+                h = (h ^ *r as u64).wrapping_mul(0x100000001b3);
+            }
+            let tag_base = (1u64 << 46) | ((h & 0xffff_ffff) << 10);
+            match self.agree_round(&survivors, &known, tag_base).await? {
+                Some(agreed) if agreed == self.known_failed() => {
+                    let my_index = survivors
+                        .iter()
+                        .position(|&r| r == self.rank)
+                        .expect("caller is a survivor") as u32;
+                    return Ok(Shrunken {
+                        survivors,
+                        my_index,
+                    });
+                }
+                // timed out, or learned of more failures mid-protocol:
+                // re-stabilize and retry with the updated knowledge.
+                _ => {}
+            }
+            attempts += 1;
+            if attempts > 16 {
+                return Err(MpiError::Revoked); // pathological churn
+            }
+        }
+    }
+
+    /// One gather-union + broadcast round over the survivor tree.
+    /// Returns Ok(None) if a receive timed out (peer has different failure
+    /// knowledge — caller re-stabilizes and retries).
+    async fn agree_round(
+        &self,
+        survivors: &[Rank],
+        known: &[Rank],
+        tag: u64,
+    ) -> Result<Option<Vec<Rank>>, MpiError> {
+        let timeout = crate::sim::SimDuration(self.job.inner.ulfm_stabilize.0 * 4);
+        let n = survivors.len() as u32;
+        let vr = survivors
+            .iter()
+            .position(|&r| r == self.rank)
+            .expect("not a survivor") as u32;
+        let mut acc: Vec<Rank> = known.to_vec();
+
+        // Gather-union up the binomial tree (virtual root = survivor 0).
+        let mut mask = 1u32;
+        while mask < n {
+            if vr & mask == 0 {
+                let child = vr | mask;
+                if child < n {
+                    let Some(m) = self
+                        .recv_unchecked_timeout(
+                            RecvSrc::From(survivors[child as usize]),
+                            tag,
+                            timeout,
+                        )
+                        .await
+                    else {
+                        return Ok(None);
+                    };
+                    for r in decode_set(&m.data) {
+                        if !acc.contains(&r) {
+                            acc.push(r);
+                        }
+                    }
+                }
+            } else {
+                let parent = survivors[(vr & !mask) as usize];
+                self.send_raw(parent, tag, &encode_set(&acc));
+                break;
+            }
+            mask <<= 1;
+        }
+        acc.sort_unstable();
+
+        // Broadcast the agreed set down the same tree.
+        let btag = tag + 1;
+        let mut buf = encode_set(&acc);
+        let mut mask = 1u32;
+        while mask < n {
+            if vr & mask != 0 {
+                let parent = survivors[(vr - mask) as usize];
+                let Some(m) = self
+                    .recv_unchecked_timeout(RecvSrc::From(parent), btag, timeout)
+                    .await
+                else {
+                    return Ok(None);
+                };
+                buf = m.data;
+                break;
+            }
+            mask <<= 1;
+        }
+        mask >>= 1;
+        while mask > 0 {
+            if vr & mask == 0 && vr + mask < n {
+                self.send_raw(survivors[(vr + mask) as usize], btag, &buf);
+            }
+            mask >>= 1;
+        }
+        Ok(Some(decode_set(&buf)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::config::Calibration;
+    use crate::mpi::{FtMode, MpiJob};
+    use crate::sim::{Sim, SimDuration};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    /// n ranks; `dead` never participates; everyone learns of the failure
+    /// (possibly at different times), revokes, then shrinks+agrees.
+    fn run_shrink(n: u32, dead: Rank) -> Vec<Shrunken> {
+        let sim = Sim::new();
+        let topo = Topology::new(n, 16, 0);
+        let job = MpiJob::new(&sim, topo, FtMode::Ulfm, &Calibration::default());
+        let out: Rc<RefCell<Vec<Shrunken>>> = Rc::new(RefCell::new(Vec::new()));
+        for r in (0..n).filter(|&r| r != dead) {
+            let p = sim.spawn_process(format!("r{r}"));
+            let j2 = job.clone();
+            let o2 = Rc::clone(&out);
+            sim.spawn(p, async move {
+                let c = j2.attach(r, 0);
+                // the failure interrupts an application collective
+                let e = c.allreduce_scalar(1.0, crate::mpi::ReduceOp::Sum).await;
+                assert!(e.is_err());
+                c.revoke();
+                let s = c.shrink_agree().await.unwrap();
+                o2.borrow_mut().push(s);
+            });
+        }
+        job.notify_failure(dead, SimDuration::from_millis(100));
+        let summary = sim.run();
+        assert_eq!(summary.tasks_pending, 0, "shrink deadlocked");
+        Rc::try_unwrap(out).ok().unwrap().into_inner()
+    }
+
+    #[test]
+    fn all_survivors_agree_on_group() {
+        for (n, dead) in [(4u32, 2u32), (8, 0), (13, 12), (16, 5)] {
+            let results = run_shrink(n, dead);
+            assert_eq!(results.len() as u32, n - 1, "n={n}");
+            let expect: Vec<Rank> = (0..n).filter(|&r| r != dead).collect();
+            for s in &results {
+                assert_eq!(s.survivors, expect, "n={n} dead={dead}");
+            }
+            // indices form a permutation of 0..n-1
+            let mut idx: Vec<u32> = results.iter().map(|s| s.my_index).collect();
+            idx.sort_unstable();
+            assert_eq!(idx, (0..n - 1).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn shrink_works_with_two_failures_known_unevenly() {
+        // ranks 1 and 5 both die; notifications race with the protocol.
+        let sim = Sim::new();
+        let n = 8u32;
+        let topo = Topology::new(n, 16, 0);
+        let job = MpiJob::new(&sim, topo, FtMode::Ulfm, &Calibration::default());
+        let out: Rc<RefCell<Vec<Shrunken>>> = Rc::new(RefCell::new(Vec::new()));
+        for r in (0..n).filter(|&r| r != 1 && r != 5) {
+            let p = sim.spawn_process(format!("r{r}"));
+            let j2 = job.clone();
+            let o2 = Rc::clone(&out);
+            sim.spawn(p, async move {
+                let c = j2.attach(r, 0);
+                let _ = c.allreduce_scalar(1.0, crate::mpi::ReduceOp::Sum).await;
+                c.revoke();
+                // wait until this rank knows BOTH failures before shrinking:
+                // mirrors the ULFM recipe of agreeing until stable. Our
+                // shrink_agree retries internally; to exercise the retry we
+                // enter immediately.
+                let s = c.shrink_agree().await.unwrap();
+                o2.borrow_mut().push(s);
+            });
+        }
+        job.notify_failure(1, SimDuration::from_millis(60));
+        job.notify_failure(5, SimDuration::from_millis(90));
+        let summary = sim.run();
+        assert_eq!(summary.tasks_pending, 0);
+        let results = out.borrow();
+        let expect: Vec<Rank> = (0..n).filter(|&r| r != 1 && r != 5).collect();
+        for s in results.iter() {
+            assert_eq!(s.survivors, expect);
+        }
+    }
+}

@@ -1,0 +1,383 @@
+//! Job runner: deployment, the per-rank driver loop, detection wiring and
+//! trial orchestration shared by all three recovery approaches.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
+
+use crate::apps::{make_app, App, ComputeBackend, CostTracker, StepCtx};
+use crate::checkpoint::CkptStore;
+use crate::cluster::{Cluster, DeployCost, Topology};
+use crate::config::{ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
+use crate::detect::{watch_child, watch_daemon, DetectEvent};
+use crate::fault::{FaultPlan, FaultTrigger};
+use crate::metrics::{Breakdown, TrialMetrics};
+use crate::mpi::{Comm, FtMode, MpiError, MpiJob};
+use crate::runtime::XlaRuntime;
+use crate::sim::{channel, Receiver, Sender, Sim, SimDuration, TaskId};
+
+/// The paper's `MPI_Reinit_state_t` (Fig. 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReinitState {
+    /// First execution of this process.
+    New,
+    /// Survivor rolled back after a failure.
+    Reinited,
+    /// Re-spawned replacement of a failed process.
+    Restarted,
+}
+
+/// Outcome of one trial.
+#[derive(Clone, Debug)]
+pub struct TrialResult {
+    pub breakdown: Breakdown,
+    /// Final state digest per rank (meaningful for non-ghost ranks).
+    pub digests: Vec<u64>,
+    pub completed: bool,
+    pub fault: FaultPlan,
+    pub sim_events: u64,
+    /// Rank 0's (virtual time s, iteration, diagnostic) trace.
+    pub diag_trace: Vec<(f64, u32, f64)>,
+}
+
+/// Per-rank backend selection (fidelity, DESIGN.md §8).
+pub struct Backends {
+    live: ComputeBackend,
+    ghost: Option<ComputeBackend>,
+    live_count: u32,
+}
+
+impl Backends {
+    pub fn build(cfg: &ExperimentConfig, xla: Option<Rc<XlaRuntime>>) -> Backends {
+        let tracker = CostTracker::new();
+        match cfg.fidelity.resolve(cfg.ranks) {
+            Fidelity::Modeled => Backends {
+                live: ComputeBackend::native(),
+                ghost: None,
+                live_count: cfg.ranks,
+            },
+            Fidelity::Full => Backends {
+                live: ComputeBackend::xla(
+                    xla.expect("full fidelity needs the XLA runtime"),
+                    tracker,
+                ),
+                ghost: None,
+                live_count: cfg.ranks,
+            },
+            Fidelity::Fast => Backends {
+                live: ComputeBackend::xla(
+                    xla.expect("fast fidelity needs the XLA runtime"),
+                    tracker.clone(),
+                ),
+                ghost: Some(ComputeBackend::ghost(tracker)),
+                live_count: cfg.ranks_per_node.min(cfg.ranks),
+            },
+            Fidelity::Auto => unreachable!("resolved above"),
+        }
+    }
+
+    pub fn for_rank(&self, rank: u32) -> ComputeBackend {
+        if rank < self.live_count {
+            self.live.clone()
+        } else {
+            self.ghost.clone().expect("ghost backend")
+        }
+    }
+}
+
+/// Everything shared across (re-)deployments of one trial.
+pub struct TrialWorld {
+    pub sim: Sim,
+    pub cfg: ExperimentConfig,
+    pub app: Rc<dyn App>,
+    pub backends: Backends,
+    pub ckpt: CkptStore,
+    pub metrics: TrialMetrics,
+    pub fault: FaultTrigger,
+    pub deploy: DeployCost,
+    pub digests: Rc<RefCell<Vec<Option<u64>>>>,
+    pub completed: Rc<RefCell<HashSet<u32>>>,
+    /// Rank 0's per-iteration diagnostic (virtual time s, iter, value) —
+    /// the e2e examples' convergence trace across the failure.
+    pub diag_trace: Rc<RefCell<Vec<(f64, u32, f64)>>>,
+}
+
+impl TrialWorld {
+    pub fn new(
+        sim: &Sim,
+        cfg: &ExperimentConfig,
+        trial: u32,
+        xla: Option<Rc<XlaRuntime>>,
+    ) -> Rc<TrialWorld> {
+        let topo = Topology::new(cfg.ranks, cfg.ranks_per_node, cfg.spare_nodes);
+        Rc::new(TrialWorld {
+            sim: sim.clone(),
+            cfg: cfg.clone(),
+            app: make_app(cfg),
+            backends: Backends::build(cfg, xla),
+            ckpt: CkptStore::new(sim, cfg.effective_ckpt(), topo, &cfg.calib),
+            metrics: TrialMetrics::new(cfg.ranks),
+            fault: FaultTrigger::new(if cfg.failure == FailureKind::None {
+                FaultPlan::none()
+            } else {
+                FaultPlan::draw(cfg, trial)
+            }),
+            deploy: DeployCost::from_calib(&cfg.calib),
+            digests: Rc::new(RefCell::new(vec![None; cfg.ranks as usize])),
+            completed: Rc::new(RefCell::new(HashSet::new())),
+            diag_trace: Rc::new(RefCell::new(Vec::new())),
+        })
+    }
+
+    pub fn topo(&self) -> Topology {
+        Topology::new(self.cfg.ranks, self.cfg.ranks_per_node, self.cfg.spare_nodes)
+    }
+
+    pub fn ft_mode(&self) -> FtMode {
+        match self.cfg.recovery {
+            RecoveryKind::Cr => FtMode::Cr,
+            RecoveryKind::Ulfm => FtMode::Ulfm,
+            RecoveryKind::Reinit => FtMode::Reinit,
+        }
+    }
+}
+
+/// One deployment of the job (CR creates several per trial).
+pub struct JobCtx {
+    pub world: Rc<TrialWorld>,
+    pub cluster: Cluster,
+    pub mpi: MpiJob,
+    pub rank_tasks: Rc<RefCell<HashMap<u32, TaskId>>>,
+    pub done_tx: Sender<u32>,
+    pub detect_tx: Sender<DetectEvent>,
+}
+
+impl Clone for JobCtx {
+    fn clone(&self) -> Self {
+        JobCtx {
+            world: Rc::clone(&self.world),
+            cluster: self.cluster.clone(),
+            mpi: self.mpi.clone(),
+            rank_tasks: Rc::clone(&self.rank_tasks),
+            done_tx: self.done_tx.clone(),
+            detect_tx: self.detect_tx.clone(),
+        }
+    }
+}
+
+/// Create the cluster + MPI world + control channels for one deployment and
+/// arm all failure detectors. The *cost* of deployment is charged by the
+/// caller (approach-specific).
+pub fn launch_job(
+    world: &Rc<TrialWorld>,
+    tag: &str,
+) -> (JobCtx, Receiver<DetectEvent>, Receiver<u32>) {
+    let sim = &world.sim;
+    let topo = world.topo();
+    let cluster = Cluster::new(sim, topo, tag);
+    let mpi = MpiJob::new(sim, topo, world.ft_mode(), &world.cfg.calib);
+    let (done_tx, done_rx) = channel::<u32>(sim);
+    let (detect_tx, detect_rx) = channel::<DetectEvent>(sim);
+    let ctx = JobCtx {
+        world: Rc::clone(world),
+        cluster,
+        mpi,
+        rank_tasks: Rc::new(RefCell::new(HashMap::new())),
+        done_tx,
+        detect_tx,
+    };
+    // Root watches every daemon (TCP channel break).
+    for node in 0..topo.total_nodes() {
+        watch_daemon(
+            sim,
+            ctx.cluster.root(),
+            ctx.cluster.daemon(node),
+            node,
+            world.deploy.tcp_break(),
+            ctx.detect_tx.clone(),
+        );
+    }
+    // Each daemon watches its children (SIGCHLD), relayed to the root over
+    // the control channel (paper §3.1: the daemon forwards, root decides).
+    for rank in 0..topo.ranks {
+        arm_child_watcher(&ctx, rank);
+    }
+    (ctx, detect_rx, done_rx)
+}
+
+/// (Re-)arm the SIGCHLD watcher for a rank's current incarnation.
+pub fn arm_child_watcher(ctx: &JobCtx, rank: u32) {
+    let slot = ctx.cluster.rank_slot(rank);
+    let daemon = ctx.cluster.daemon(slot.node);
+    if !ctx.world.sim.is_alive(daemon) {
+        return; // node is gone; the root's daemon watcher covers this
+    }
+    // SIGCHLD to the daemon, then relay over the control channel to root.
+    let delay = ctx.world.deploy.sigchld()
+        + SimDuration::from_secs_f64(ctx.world.cfg.calib.control_latency_us * 1e-6);
+    watch_child(
+        &ctx.world.sim,
+        daemon,
+        slot.proc,
+        rank,
+        delay,
+        ctx.detect_tx.clone(),
+    );
+}
+
+/// The user's resilient main function (the paper's Fig. 2 `foo`): load the
+/// latest globally-consistent checkpoint, then run the main loop with fault
+/// injection and per-iteration checkpointing. Returns the communicator
+/// alongside any MPI error so ULFM can drive recovery on it.
+pub async fn rank_user_main(
+    ctx: JobCtx,
+    rank: u32,
+    state: ReinitState,
+) -> Result<(), (MpiError, Rc<Comm>)> {
+    let w = &ctx.world;
+    let slot = ctx.cluster.rank_slot(rank);
+    let comm = Rc::new(ctx.mpi.attach(rank, slot.node));
+
+    // Entering the user function after a recovery == the end of MPI
+    // recovery (paper Fig. 6/7 metric). Only meaningful once a fault fired.
+    if w.fault.has_fired() {
+        w.metrics.record_resume(w.sim.now());
+    }
+
+    let backend = w.backends.for_rank(rank);
+    let mut app_state = w.app.new_state(rank, w.cfg.ranks);
+
+    // Application recovery (paper §3.1): agree on the newest checkpoint
+    // every rank has, then everyone loads it.
+    let my_latest = w.ckpt.latest_iter(rank).map(|i| i as f32).unwrap_or(-1.0);
+    let agreed = comm
+        .allreduce_scalar(my_latest, crate::mpi::ReduceOp::Min)
+        .await
+        .map_err(|e| (e, Rc::clone(&comm)))?;
+    let mut start_iter = 0u32;
+    if agreed >= 0.0 {
+        let it = agreed as u32;
+        let t0 = w.sim.now();
+        let bytes = w
+            .ckpt
+            .load(rank, slot.node, it)
+            .await
+            .expect("globally-agreed checkpoint must exist");
+        app_state.restore(&bytes);
+        w.metrics.add_ckpt_read(rank, w.sim.now() - t0);
+        start_iter = it + 1;
+    }
+
+    for iter in start_iter..w.cfg.iters {
+        // Fault injection at the start of the drawn iteration (paper §4).
+        if w.fault.should_fire(rank, iter) {
+            w.metrics.record_failure(w.sim.now());
+            match w.fault.plan().kind {
+                FailureKind::Process => {
+                    w.ckpt.lose_rank(rank);
+                    ctx.cluster.kill_rank(rank); // SIGKILL to self
+                }
+                FailureKind::Node => {
+                    let victims: Vec<u32> = (0..w.cfg.ranks)
+                        .filter(|&r| ctx.cluster.rank_slot(r).node == slot.node)
+                        .collect();
+                    w.ckpt.lose_node_ranks(&victims);
+                    ctx.cluster.kill_node(slot.node);
+                }
+                FailureKind::None => unreachable!(),
+            }
+            // The kill drops this task the moment it yields.
+            w.sim.halt_forever().await;
+        }
+
+        let cx = StepCtx {
+            sim: &w.sim,
+            comm: &comm,
+            backend: &backend,
+        };
+        app_state
+            .step(cx, iter)
+            .await
+            .map_err(|e| (e, Rc::clone(&comm)))?;
+        if rank == 0 {
+            w.diag_trace.borrow_mut().push((
+                w.sim.now().secs_f64(),
+                iter,
+                app_state.diagnostic(),
+            ));
+        }
+
+        if iter % w.cfg.ckpt_every == 0 {
+            let t0 = w.sim.now();
+            w.ckpt
+                .save(rank, slot.node, iter, app_state.serialize())
+                .await;
+            w.metrics.add_ckpt_write(rank, w.sim.now() - t0);
+        }
+    }
+
+    w.digests.borrow_mut()[rank as usize] = Some(app_state.digest());
+    w.completed.borrow_mut().insert(rank);
+    ctx.done_tx.send(rank, SimDuration::ZERO);
+    let _ = state; // informational (apps are state-agnostic; see paper Fig. 2)
+    Ok(())
+}
+
+/// Await until all ranks reported completion.
+pub async fn wait_all_done(world: &Rc<TrialWorld>, done_rx: &Receiver<u32>) {
+    while (world.completed.borrow().len() as u32) < world.cfg.ranks {
+        let _ = done_rx.recv().await;
+    }
+}
+
+/// Run one trial end to end; returns the paper's breakdown + validation data.
+pub fn run_trial(
+    cfg: &ExperimentConfig,
+    trial: u32,
+    xla: Option<Rc<XlaRuntime>>,
+) -> TrialResult {
+    cfg.validate().expect("invalid experiment config");
+    let sim = Sim::new();
+    // generous runaway guard (events scale with ranks * iters)
+    sim.set_event_limit(200_000_000);
+    let world = TrialWorld::new(&sim, cfg, trial, xla);
+
+    let driver = sim.spawn_process("trial-driver");
+    let w2 = Rc::clone(&world);
+    match cfg.recovery {
+        RecoveryKind::Cr => {
+            sim.spawn(driver, async move {
+                super::cr::cr_trial_driver(w2).await;
+            });
+        }
+        RecoveryKind::Reinit => {
+            sim.spawn(driver, async move {
+                super::reinit::reinit_trial_driver(w2).await;
+            });
+        }
+        RecoveryKind::Ulfm => {
+            sim.spawn(driver, async move {
+                super::ulfm::ulfm_trial_driver(w2).await;
+            });
+        }
+    }
+    let summary = sim.run();
+    let completed = world.completed.borrow().len() as u32 == cfg.ranks;
+    let breakdown = world.metrics.breakdown();
+    let digests: Vec<u64> = world
+        .digests
+        .borrow()
+        .iter()
+        .map(|d| d.unwrap_or(0))
+        .collect();
+    let fault = world.fault.plan();
+    let diag_trace = world.diag_trace.borrow().clone();
+    TrialResult {
+        breakdown,
+        digests,
+        completed,
+        fault,
+        sim_events: summary.events,
+        diag_trace,
+    }
+}

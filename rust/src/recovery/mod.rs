@@ -1,0 +1,25 @@
+//! The three global-restart recovery approaches (paper §2, §3) and the job
+//! runner that hosts them on the simulated cluster.
+//!
+//! - `job`    — deployment, rank driver (the paper's Fig. 2 pattern:
+//!              MPI_Reinit-style rollback point, checkpoint every iteration,
+//!              fault injection), detection wiring, trial orchestration.
+//! - `cr`     — Checkpoint-Restart: abort on failure, tear down, re-deploy
+//!              the whole job, resume from the file checkpoint.
+//! - `reinit` — Reinit++: root HandleFailure (Algorithm 1) + daemon
+//!              HandleReinit (Algorithm 2); survivors roll back in place,
+//!              failed ranks re-spawn; only the world communicator is
+//!              rebuilt.
+//! - `ulfm`   — ULFM global-restart recipe: failure notification -> pending
+//!              ops raise errors -> revoke -> shrink+agree -> RTE re-spawn
+//!              -> merge (new communicator generation) -> roll back.
+
+pub mod cr;
+pub mod job;
+pub mod reinit;
+pub mod ulfm;
+
+#[cfg(test)]
+mod tests;
+
+pub use job::{run_trial, ReinitState, TrialResult, TrialWorld};

@@ -1,0 +1,142 @@
+//! Reinit++ (the paper's contribution, §3).
+//!
+//! Root `HandleFailure` (Algorithm 1): on a process failure the failed rank
+//! re-spawns on its original node; on a daemon/node failure the root picks
+//! the least-loaded alive node; either way the root broadcasts REINIT to all
+//! daemons over the control tree.
+//!
+//! Daemon `HandleReinit` (Algorithm 2): signal SIGREINIT to survivor
+//! children — modeled as cancelling their task and re-entering the rollback
+//! point with `MPI_REINIT_REINITED`, memory intact (longjmp semantics) —
+//! and fork+exec the assigned replacements (`MPI_REINIT_RESTARTED`).
+//!
+//! All re-entering ranks synchronize on the ORTE-level barrier and rebuild
+//! MPI_COMM_WORLD (a fresh communicator generation); everything older is
+//! discarded, exactly the paper's post-MPI_Init semantics.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use super::job::{
+    arm_child_watcher, launch_job, rank_user_main, wait_all_done, JobCtx, ReinitState,
+    TrialWorld,
+};
+use crate::cluster::Topology;
+use crate::detect::DetectEvent;
+use crate::sim::{Receiver, SimDuration};
+
+/// Spawn (or re-spawn) the rank task entering the rollback point.
+pub fn spawn_rank(ctx: &JobCtx, rank: u32, state: ReinitState, startup: SimDuration) {
+    let slot = ctx.cluster.rank_slot(rank);
+    let sim = ctx.world.sim.clone();
+    let ctx2 = ctx.clone();
+    let tid = sim.clone().spawn(slot.proc, async move {
+        if startup > SimDuration::ZERO {
+            sim.sleep(startup).await;
+        }
+        if rank_user_main(ctx2, rank, state).await.is_err() {
+            // CR/Reinit ranks never see MPI errors (no ULFM notification);
+            // a closed mailbox means the job is being torn down.
+            crate::sim::Sim::halt_forever(&sim).await;
+        }
+    });
+    ctx.rank_tasks.borrow_mut().insert(rank, tid);
+}
+
+/// The root's failure-handling loop (Algorithm 1 + orchestration of the
+/// daemons' Algorithm 2 actions).
+pub async fn reinit_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
+    let w = Rc::clone(&ctx.world);
+    let control = SimDuration::from_secs_f64(w.cfg.calib.control_latency_us * 1e-6);
+    loop {
+        let Ok(ev) = detect_rx.recv().await else {
+            return;
+        };
+        // Algorithm 1: build the (daemon, rank) spawn list.
+        let spawn_list: Vec<(u32, u32)> = match ev {
+            DetectEvent::RankDead { rank, .. } => {
+                if ctx.cluster.rank_is_alive(rank) {
+                    continue; // stale notification (already re-spawned)
+                }
+                // process failure: re-spawn on the original node (§3.2)
+                vec![(rank, ctx.cluster.rank_slot(rank).node)]
+            }
+            DetectEvent::NodeDead { node, .. } => {
+                let failed: Vec<u32> = (0..w.cfg.ranks)
+                    .filter(|&r| {
+                        ctx.cluster.rank_slot(r).node == node && !ctx.cluster.rank_is_alive(r)
+                    })
+                    .collect();
+                if failed.is_empty() {
+                    continue;
+                }
+                // d' = argmin_d |Children(d)| over alive daemons
+                let target = ctx.cluster.least_loaded_alive_node();
+                failed.into_iter().map(|r| (r, target)).collect()
+            }
+        };
+
+        // Broadcast <REINIT, spawn list> down the root->daemon control tree.
+        let levels = Topology::tree_levels(ctx.cluster.topo.total_nodes() + 1);
+        w.sim
+            .sleep(SimDuration(control.0 * levels.max(1) as u64))
+            .await;
+
+        // Old MPI state is discarded; ranks re-attach to a new generation.
+        ctx.mpi.bump_generation();
+        let startup = w.deploy.orte_barrier(ctx.cluster.topo.total_nodes())
+            + w.deploy.comm_reinit(w.cfg.ranks);
+
+        // Algorithm 2 on every daemon — survivors first: SIGREINIT.
+        let signal = w.deploy.signal();
+        for rank in 0..w.cfg.ranks {
+            if !ctx.cluster.rank_is_alive(rank) {
+                continue;
+            }
+            let old_task = ctx.rank_tasks.borrow().get(&rank).copied();
+            let ctx2 = ctx.clone();
+            w.sim.schedule(signal, move || {
+                if let Some(t) = old_task {
+                    ctx2.world.sim.cancel_task(t); // longjmp: drop the stack
+                }
+                spawn_rank(&ctx2, rank, ReinitState::Reinited, startup);
+            });
+        }
+
+        // Replacements, grouped per target daemon (parallel across nodes,
+        // serialized within one node: fork+exec pipeline).
+        let mut by_node: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+        for (rank, node) in spawn_list {
+            by_node.entry(node).or_default().push(rank);
+        }
+        for (node, ranks) in by_node {
+            let cost = w.deploy.node_spawn(ranks.len() as u32);
+            let ctx2 = ctx.clone();
+            w.sim.schedule(cost, move || {
+                for &rank in &ranks {
+                    ctx2.cluster.respawn_rank(rank, node);
+                    arm_child_watcher(&ctx2, rank);
+                    spawn_rank(&ctx2, rank, ReinitState::Restarted, startup);
+                }
+            });
+        }
+    }
+}
+
+/// Whole-trial driver for Reinit++.
+pub async fn reinit_trial_driver(w: Rc<TrialWorld>) {
+    let (ctx, detect_rx, done_rx) = launch_job(&w, "reinit-job");
+    // mpirun deployment (cost only; the paper times the application)
+    w.sim.sleep(w.deploy.mpirun_launch(&w.topo())).await;
+    w.metrics.set_job_start(w.sim.now());
+    for rank in 0..w.cfg.ranks {
+        spawn_rank(&ctx, rank, ReinitState::New, SimDuration::ZERO);
+    }
+    let root = ctx.cluster.root();
+    let ctx2 = ctx.clone();
+    w.sim.clone().spawn(root, async move {
+        reinit_root(ctx2, detect_rx).await;
+    });
+    wait_all_done(&w, &done_rx).await;
+    w.metrics.set_job_end(w.sim.now());
+}

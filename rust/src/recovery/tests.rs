@@ -1,0 +1,216 @@
+//! End-to-end recovery tests on the native (modeled-fidelity) backend:
+//! the core *global-restart equivalence* invariant — a run that suffers a
+//! failure and recovers must finish in exactly the fault-free final state —
+//! plus the paper's qualitative performance orderings.
+
+use super::job::run_trial;
+use crate::config::{
+    AppKind, CkptKind, ExperimentConfig, FailureKind, Fidelity, RecoveryKind,
+};
+
+fn base_cfg(app: AppKind, recovery: RecoveryKind, failure: FailureKind) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.app = app;
+    c.recovery = recovery;
+    c.failure = failure;
+    c.ranks = 8;
+    c.ranks_per_node = 4;
+    c.spare_nodes = 1;
+    c.iters = 6;
+    c.fidelity = Fidelity::Modeled;
+    c.comd_n = 32;
+    c.hpccg_nx = 4;
+    c.lulesh_nx = 4;
+    c.seed = 1234;
+    c
+}
+
+fn digests_of(cfg: &ExperimentConfig, trial: u32) -> Vec<u64> {
+    let r = run_trial(cfg, trial, None);
+    assert!(r.completed, "{:?}/{:?} did not complete", cfg.app, cfg.recovery);
+    assert!(r.digests.iter().all(|&d| d != 0));
+    r.digests
+}
+
+#[test]
+fn fault_free_all_apps_complete() {
+    for app in AppKind::ALL {
+        let cfg = base_cfg(app, RecoveryKind::Reinit, FailureKind::None);
+        let r = run_trial(&cfg, 0, None);
+        assert!(r.completed, "{app}");
+        assert_eq!(r.breakdown.mpi_recovery_s, 0.0);
+        assert!(r.breakdown.total_s > 0.0);
+    }
+}
+
+#[test]
+fn fault_free_digest_identical_across_recovery_modes() {
+    // CR and Reinit must not perturb the computation at all; ULFM inflates
+    // time but not values.
+    for app in AppKind::ALL {
+        let base = digests_of(&base_cfg(app, RecoveryKind::Reinit, FailureKind::None), 0);
+        for rk in [RecoveryKind::Cr, RecoveryKind::Ulfm] {
+            let d = digests_of(&base_cfg(app, rk, FailureKind::None), 0);
+            assert_eq!(d, base, "{app} {rk}");
+        }
+    }
+}
+
+fn check_equivalence(app: AppKind, recovery: RecoveryKind, failure: FailureKind, trial: u32) {
+    let fault_free = digests_of(&base_cfg(app, recovery, FailureKind::None), trial);
+    let cfg = base_cfg(app, recovery, failure);
+    let r = run_trial(&cfg, trial, None);
+    assert!(
+        r.completed,
+        "{app}/{recovery}/{failure} trial {trial} hung (fault {:?})",
+        r.fault
+    );
+    assert!(r.breakdown.mpi_recovery_s > 0.0, "no recovery recorded");
+    assert_eq!(
+        r.digests, fault_free,
+        "{app}/{recovery}/{failure}: recovered state differs from fault-free (fault {:?})",
+        r.fault
+    );
+}
+
+#[test]
+fn reinit_process_failure_equivalence_all_apps() {
+    for app in AppKind::ALL {
+        check_equivalence(app, RecoveryKind::Reinit, FailureKind::Process, 0);
+    }
+}
+
+#[test]
+fn cr_process_failure_equivalence_all_apps() {
+    for app in AppKind::ALL {
+        check_equivalence(app, RecoveryKind::Cr, FailureKind::Process, 0);
+    }
+}
+
+#[test]
+fn ulfm_process_failure_equivalence_all_apps() {
+    for app in AppKind::ALL {
+        check_equivalence(app, RecoveryKind::Ulfm, FailureKind::Process, 0);
+    }
+}
+
+#[test]
+fn reinit_node_failure_equivalence() {
+    for app in [AppKind::Hpccg, AppKind::CoMD] {
+        check_equivalence(app, RecoveryKind::Reinit, FailureKind::Node, 0);
+    }
+}
+
+#[test]
+fn cr_node_failure_equivalence() {
+    check_equivalence(AppKind::Hpccg, RecoveryKind::Cr, FailureKind::Node, 0);
+}
+
+#[test]
+fn equivalence_over_random_trials_property() {
+    // property sweep: several trials = several (iteration, victim) draws
+    for trial in 0..4 {
+        check_equivalence(AppKind::Hpccg, RecoveryKind::Reinit, FailureKind::Process, trial);
+    }
+}
+
+#[test]
+fn recovery_time_ordering_cr_slowest() {
+    // Fig. 6 shape: CR ≈ 3 s; Reinit++ ≈ 0.5 s; ULFM in between at small N.
+    let reinit = run_trial(
+        &base_cfg(AppKind::Hpccg, RecoveryKind::Reinit, FailureKind::Process),
+        0,
+        None,
+    );
+    let cr = run_trial(
+        &base_cfg(AppKind::Hpccg, RecoveryKind::Cr, FailureKind::Process),
+        0,
+        None,
+    );
+    let ulfm = run_trial(
+        &base_cfg(AppKind::Hpccg, RecoveryKind::Ulfm, FailureKind::Process),
+        0,
+        None,
+    );
+    let (tr, tc, tu) = (
+        reinit.breakdown.mpi_recovery_s,
+        cr.breakdown.mpi_recovery_s,
+        ulfm.breakdown.mpi_recovery_s,
+    );
+    assert!(tc > 2.0 && tc < 5.0, "CR anchor ≈3 s, got {tc}");
+    assert!(tr > 0.2 && tr < 0.9, "Reinit++ anchor ≈0.5 s, got {tr}");
+    assert!(tc > 3.0 * tr, "CR must be several x slower: {tc} vs {tr}");
+    assert!(tu > tr * 0.5, "ULFM comparable at small scale: {tu} vs {tr}");
+}
+
+#[test]
+fn node_failure_recovery_slower_than_process() {
+    // Fig. 7: Reinit++ ≈1.5 s for node vs ≈0.5 s for process failures.
+    let mut proc_cfg = base_cfg(AppKind::Hpccg, RecoveryKind::Reinit, FailureKind::Process);
+    proc_cfg.ckpt = Some(CkptKind::File); // same scheme for a fair contrast
+    let node_cfg = base_cfg(AppKind::Hpccg, RecoveryKind::Reinit, FailureKind::Node);
+    let tp = run_trial(&proc_cfg, 0, None).breakdown.mpi_recovery_s;
+    let tn = run_trial(&node_cfg, 0, None).breakdown.mpi_recovery_s;
+    assert!(tn > 1.8 * tp, "node recovery must cost much more: {tn} vs {tp}");
+    // at the test's 4 ranks/node the respawn batch is smaller than the
+    // paper's 16/node, so the anchor scales down from ~1.5 s accordingly
+    assert!(tn > 0.8 && tn < 2.5, "node anchor, got {tn}");
+}
+
+#[test]
+fn ulfm_inflates_pure_app_time() {
+    // Fig. 5: ULFM's heartbeat/FT-wrappers tax fault-free execution.
+    // Use a compute-dominated size so the inflation is visible over the
+    // (identical) communication time.
+    let mut r_cfg = base_cfg(AppKind::Hpccg, RecoveryKind::Reinit, FailureKind::None);
+    r_cfg.hpccg_nx = 16;
+    let mut u_cfg = r_cfg.clone();
+    u_cfg.recovery = RecoveryKind::Ulfm;
+    let reinit = run_trial(&r_cfg, 0, None);
+    let ulfm = run_trial(&u_cfg, 0, None);
+    let (ar, au) = (reinit.breakdown.app_s(), ulfm.breakdown.app_s());
+    assert!(au > ar * 1.02, "ULFM app time must inflate: {au} vs {ar}");
+}
+
+#[test]
+fn file_ckpt_writes_cost_more_than_memory() {
+    // Fig. 4 mechanism: CR's file checkpoints vs Reinit++'s buddy memory.
+    let cr = run_trial(
+        &base_cfg(AppKind::Hpccg, RecoveryKind::Cr, FailureKind::None),
+        0,
+        None,
+    );
+    let reinit = run_trial(
+        &base_cfg(AppKind::Hpccg, RecoveryKind::Reinit, FailureKind::None),
+        0,
+        None,
+    );
+    assert!(
+        cr.breakdown.ckpt_write_s > 3.0 * reinit.breakdown.ckpt_write_s,
+        "file {} vs memory {}",
+        cr.breakdown.ckpt_write_s,
+        reinit.breakdown.ckpt_write_s
+    );
+}
+
+#[test]
+fn trial_is_deterministic() {
+    let cfg = base_cfg(AppKind::Lulesh, RecoveryKind::Reinit, FailureKind::Process);
+    let a = run_trial(&cfg, 1, None);
+    let b = run_trial(&cfg, 1, None);
+    assert_eq!(a.digests, b.digests);
+    assert_eq!(a.breakdown.total_s, b.breakdown.total_s);
+    assert_eq!(a.sim_events, b.sim_events);
+}
+
+#[test]
+fn victim_rank_state_restored_via_buddy() {
+    // memory checkpointing: the victim's state must come from its buddy
+    let cfg = base_cfg(AppKind::Hpccg, RecoveryKind::Reinit, FailureKind::Process);
+    assert_eq!(cfg.effective_ckpt(), CkptKind::Memory);
+    let fault_free = digests_of(&base_cfg(cfg.app, cfg.recovery, FailureKind::None), 2);
+    let r = run_trial(&cfg, 2, None);
+    assert!(r.completed);
+    let victim = r.fault.rank as usize;
+    assert_eq!(r.digests[victim], fault_free[victim], "victim state wrong");
+}

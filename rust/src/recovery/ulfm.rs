@@ -1,0 +1,204 @@
+//! ULFM global-restart (paper §2.2): the application-level recipe built
+//! from the ULFM extensions.
+//!
+//! Failure path: the RTE (SIGCHLD / channel break + the always-on heartbeat
+//! detector) notifies every rank; pending MPI operations raise
+//! `MPI_ERR_PROC_FAILED`; the application then
+//!   1. revokes the world communicator (flood),
+//!   2. shrinks it + agrees on the failed set (consensus over survivors),
+//!   3. the leader asks the RTE to spawn replacements,
+//!   4. everyone merges into a repaired world communicator (a new
+//!      generation) and rolls back to the restart point.
+//!
+//! The measured slowness of the ULFM prototype's shrink/agree/merge at scale
+//! (paper §5.3: parity with Reinit++ up to 64 ranks, ≈3× at 1024) is charged
+//! as the calibrated-to-paper `ulfm_recover_base/per_rank` term — the
+//! protocol messages themselves are simulated, but the prototype's
+//! implementation inefficiency is not something message latency reproduces.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use super::job::{
+    arm_child_watcher, launch_job, rank_user_main, wait_all_done, JobCtx, ReinitState,
+    TrialWorld,
+};
+use crate::detect::DetectEvent;
+use crate::mpi::{Comm, RecvSrc, PROCEED_TAG, SYSTEM_SRC};
+use crate::sim::{channel, Receiver, Sender, SimDuration};
+
+/// Spawn a ULFM rank task: user main inside the recover-and-retry loop.
+pub fn spawn_ulfm_rank(
+    ctx: &JobCtx,
+    spawn_req_tx: Sender<Vec<u32>>,
+    rank: u32,
+    state: ReinitState,
+    startup: SimDuration,
+) {
+    let slot = ctx.cluster.rank_slot(rank);
+    let sim = ctx.world.sim.clone();
+    let ctx2 = ctx.clone();
+    let tid = sim.clone().spawn(slot.proc, async move {
+        if startup > SimDuration::ZERO {
+            sim.sleep(startup).await;
+        }
+        let mut state = state;
+        loop {
+            match rank_user_main(ctx2.clone(), rank, state).await {
+                Ok(()) => return,
+                Err((_e, comm)) => {
+                    survivor_recover(&ctx2, &spawn_req_tx, rank, comm).await;
+                    state = ReinitState::Reinited;
+                }
+            }
+        }
+    });
+    ctx.rank_tasks.borrow_mut().insert(rank, tid);
+}
+
+/// The survivor side of the global-restart recipe.
+async fn survivor_recover(
+    ctx: &JobCtx,
+    spawn_req_tx: &Sender<Vec<u32>>,
+    _rank: u32,
+    comm: Rc<Comm>,
+) {
+    let w = &ctx.world;
+    // 1. MPI_Comm_revoke: make sure everyone's pending ops fail fast.
+    comm.revoke();
+    // 2. MPI_Comm_shrink + MPI_Comm_agree over survivors.
+    let Ok(shr) = comm.shrink_agree().await else {
+        w.sim.halt_forever().await;
+        unreachable!();
+    };
+    // 3. Leader (lowest survivor) asks the RTE to spawn replacements.
+    if shr.my_index == 0 {
+        let failed: Vec<u32> = (0..comm.size)
+            .filter(|r| !shr.survivors.contains(r))
+            .collect();
+        let control = SimDuration::from_secs_f64(w.cfg.calib.control_latency_us * 1e-6);
+        spawn_req_tx.send(failed, control);
+    }
+    // Calibrated-to-paper cost of the prototype's shrink/agree/merge
+    // collectives at this scale (§5.3).
+    let extra = SimDuration::from_secs_f64(
+        w.cfg.calib.ulfm_recover_base_ms * 1e-3
+            + w.cfg.calib.ulfm_recover_per_rank_us * 1e-6 * comm.size as f64,
+    );
+    w.sim.sleep(extra).await;
+    // 4. Wait for the RTE's PROCEED, then merge = re-attach a fresh
+    //    generation (done by the caller loop re-entering rank_user_main).
+    let _ = comm
+        .recv_unchecked(RecvSrc::From(SYSTEM_SRC), PROCEED_TAG)
+        .await;
+    w.sim.sleep(w.deploy.comm_reinit(w.cfg.ranks)).await;
+}
+
+/// RTE side: failure notification fan-out (heartbeat-floor latency).
+async fn ulfm_notifier(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
+    let w = Rc::clone(&ctx.world);
+    let hb = SimDuration::from_secs_f64(w.cfg.calib.ulfm_hb_period_ms * 1e-3);
+    loop {
+        let Ok(ev) = detect_rx.recv().await else {
+            return;
+        };
+        match ev {
+            DetectEvent::RankDead { rank, .. } => {
+                if !ctx.cluster.rank_is_alive(rank) {
+                    ctx.mpi.notify_failure(rank, hb);
+                }
+            }
+            DetectEvent::NodeDead { node, .. } => {
+                for r in 0..w.cfg.ranks {
+                    if ctx.cluster.rank_slot(r).node == node && !ctx.cluster.rank_is_alive(r) {
+                        ctx.mpi.notify_failure(r, hb);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// RTE side: handle the leader's spawn request — re-spawn failed processes,
+/// open a new communicator generation, release the survivors.
+async fn ulfm_spawner(
+    ctx: JobCtx,
+    spawn_req_tx: Sender<Vec<u32>>,
+    spawn_req_rx: Receiver<Vec<u32>>,
+) {
+    let w = Rc::clone(&ctx.world);
+    loop {
+        let Ok(failed) = spawn_req_rx.recv().await else {
+            return;
+        };
+        let old_gen = ctx.mpi.generation();
+        ctx.mpi.bump_generation();
+        let survivors: Vec<u32> = (0..w.cfg.ranks)
+            .filter(|r| !failed.contains(r))
+            .collect();
+        // choose targets: original node if alive, else least loaded
+        let mut by_node: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+        for &rank in &failed {
+            let home = ctx.cluster.rank_slot(rank).node;
+            let node = if ctx.cluster.node_is_alive(home) {
+                home
+            } else {
+                ctx.cluster.least_loaded_alive_node()
+            };
+            by_node.entry(node).or_default().push(rank);
+        }
+        let startup = w.deploy.comm_reinit(w.cfg.ranks);
+        let mut spawn_cost = SimDuration::ZERO;
+        for (node, ranks) in &by_node {
+            spawn_cost = spawn_cost.max(w.deploy.node_spawn(ranks.len() as u32));
+            let ctx2 = ctx.clone();
+            let tx2 = spawn_req_tx.clone();
+            let ranks = ranks.clone();
+            let node = *node;
+            let cost = w.deploy.node_spawn(ranks.len() as u32);
+            w.sim.schedule(cost, move || {
+                for &rank in &ranks {
+                    ctx2.cluster.respawn_rank(rank, node);
+                    arm_child_watcher(&ctx2, rank);
+                    spawn_ulfm_rank(&ctx2, tx2.clone(), rank, ReinitState::Restarted, startup);
+                }
+            });
+        }
+        // Release survivors once the replacements exist.
+        let mpi = ctx.mpi.clone();
+        w.sim.schedule(spawn_cost, move || {
+            for &r in &survivors {
+                mpi.send_system(old_gen, r, PROCEED_TAG, Vec::new());
+            }
+        });
+    }
+}
+
+/// Whole-trial driver for ULFM.
+pub async fn ulfm_trial_driver(w: Rc<TrialWorld>) {
+    let (ctx, detect_rx, done_rx) = launch_job(&w, "ulfm-job");
+    w.sim.sleep(w.deploy.mpirun_launch(&w.topo())).await;
+    w.metrics.set_job_start(w.sim.now());
+    let (spawn_req_tx, spawn_req_rx) = channel::<Vec<u32>>(&w.sim);
+    for rank in 0..w.cfg.ranks {
+        spawn_ulfm_rank(
+            &ctx,
+            spawn_req_tx.clone(),
+            rank,
+            ReinitState::New,
+            SimDuration::ZERO,
+        );
+    }
+    let root = ctx.cluster.root();
+    let ctx2 = ctx.clone();
+    w.sim.clone().spawn(root, async move {
+        ulfm_notifier(ctx2, detect_rx).await;
+    });
+    let ctx3 = ctx.clone();
+    let tx2 = spawn_req_tx.clone();
+    w.sim.clone().spawn(root, async move {
+        ulfm_spawner(ctx3, tx2, spawn_req_rx).await;
+    });
+    wait_all_done(&w, &done_rx).await;
+    w.metrics.set_job_end(w.sim.now());
+}

@@ -1,0 +1,120 @@
+//! Parser for `artifacts/manifest.txt` (written by `python/compile/aot.py`):
+//!
+//! ```text
+//! name=hpccg_matvec_16 file=hpccg_matvec_16.hlo.txt in=f32[18,18,18] out=f32[16,16,16];f32[]
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+/// Signature of one AOT artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: String,
+    /// Input shapes, in call order (empty vec = rank-0 scalar). f32 only.
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    let body = s
+        .strip_prefix("f32[")
+        .and_then(|r| r.strip_suffix(']'))
+        .ok_or_else(|| anyhow!("bad shape spec `{s}` (only f32[...] supported)"))?;
+    if body.is_empty() {
+        return Ok(vec![]);
+    }
+    body.split(',')
+        .map(|d| {
+            d.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad dim `{d}` in `{s}`"))
+        })
+        .collect()
+}
+
+fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>> {
+    s.split(';').map(parse_shape).collect()
+}
+
+/// Parse the whole manifest.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSig>> {
+    let mut out = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut name = None;
+        let mut file = None;
+        let mut inputs = None;
+        let mut outputs = None;
+        for field in line.split_whitespace() {
+            let (k, v) = field
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: bad field `{field}`", idx + 1))?;
+            match k {
+                "name" => name = Some(v.to_string()),
+                "file" => file = Some(v.to_string()),
+                "in" => inputs = Some(parse_shapes(v)?),
+                "out" => outputs = Some(parse_shapes(v)?),
+                _ => bail!("line {}: unknown field `{k}`", idx + 1),
+            }
+        }
+        out.push(ArtifactSig {
+            name: name.ok_or_else(|| anyhow!("line {}: missing name", idx + 1))?,
+            file: file.ok_or_else(|| anyhow!("line {}: missing file", idx + 1))?,
+            inputs: inputs.ok_or_else(|| anyhow!("line {}: missing in", idx + 1))?,
+            outputs: outputs.ok_or_else(|| anyhow!("line {}: missing out", idx + 1))?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_example_line() {
+        let m = parse_manifest(
+            "name=hpccg_matvec_16 file=hpccg_matvec_16.hlo.txt in=f32[18,18,18] out=f32[16,16,16];f32[]\n",
+        )
+        .unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].name, "hpccg_matvec_16");
+        assert_eq!(m[0].inputs, vec![vec![18, 18, 18]]);
+        assert_eq!(m[0].outputs, vec![vec![16, 16, 16], vec![]]);
+    }
+
+    #[test]
+    fn scalar_shape_is_empty_vec() {
+        assert_eq!(parse_shape("f32[]").unwrap(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn multi_input_line() {
+        let m = parse_manifest(
+            "name=x file=x.hlo.txt in=f32[4,3];f32[4,3];f32[];f32[] out=f32[4,3]\n",
+        )
+        .unwrap();
+        assert_eq!(m[0].inputs.len(), 4);
+        assert_eq!(m[0].inputs[2], Vec::<usize>::new());
+    }
+
+    #[test]
+    fn blank_lines_and_comments_skipped() {
+        let m = parse_manifest("\n# comment\nname=a file=f in=f32[1] out=f32[1]\n").unwrap();
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        assert!(parse_manifest("name=a file=f in=s32[1] out=f32[1]").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(parse_manifest("name=a in=f32[1] out=f32[1]").is_err());
+    }
+}

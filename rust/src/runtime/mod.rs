@@ -1,0 +1,222 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the simulated ranks' hot path. Python never runs here — `make artifacts`
+//! produced the HLO at build time (see `python/compile/aot.py`).
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+mod manifest;
+
+pub use manifest::{parse_manifest, ArtifactSig};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A dense f32 tensor crossing the Rust<->XLA boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl ArrayF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        ArrayF32 { shape, data }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        ArrayF32 {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        ArrayF32 {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_scalar(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "not a scalar");
+        self.data[0]
+    }
+}
+
+/// PJRT CPU client + compiled-executable cache. One per OS process; shared
+/// by every simulated rank (compilation happens once per artifact).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    sigs: HashMap<String, ArtifactSig>,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Load the artifact manifest from `dir` and create the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
+        let sigs = parse_manifest(&manifest)?
+            .into_iter()
+            .map(|s| (s.name.clone(), s))
+            .collect();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(XlaRuntime {
+            client,
+            dir,
+            sigs,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.sigs.contains_key(name)
+    }
+
+    pub fn signature(&self, name: &str) -> Option<&ArtifactSig> {
+        self.sigs.get(name)
+    }
+
+    fn compiled(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let sig = self
+            .sigs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        let path = self.dir.join(&sig.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute artifact `name`. Validates shapes against the manifest.
+    /// Returns the outputs and the measured *wall* duration of the execute
+    /// call (the caller charges it to virtual time).
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[ArrayF32],
+    ) -> Result<(Vec<ArrayF32>, std::time::Duration)> {
+        let sig = self
+            .sigs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+            .clone();
+        if inputs.len() != sig.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (a, want)) in inputs.iter().zip(&sig.inputs).enumerate() {
+            if &a.shape != want {
+                bail!("{name}: input {i} shape {:?} != {:?}", a.shape, want);
+            }
+        }
+        let exe = self.compiled(name)?;
+        // Single-copy literal creation (no vec1 + reshape round trip —
+        // see EXPERIMENTS.md §Perf).
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|a| {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(
+                        a.data.as_ptr() as *const u8,
+                        a.data.len() * 4,
+                    )
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &a.shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal for {name}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+
+        let start = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        let wall = start.elapsed();
+
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let parts = root.to_tuple().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
+        if parts.len() != sig.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                sig.outputs.len(),
+                parts.len()
+            );
+        }
+        let outputs = parts
+            .into_iter()
+            .zip(&sig.outputs)
+            .map(|(lit, shape)| {
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                Ok(ArrayF32::new(shape.clone(), data))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok((outputs, wall))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn array_f32_helpers() {
+        let a = ArrayF32::zeros(&[2, 3]);
+        assert_eq!(a.len(), 6);
+        assert_eq!(ArrayF32::scalar(2.5).as_scalar(), 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        ArrayF32::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    // PJRT-backed execution is covered by rust/tests/runtime_artifacts.rs
+    // (needs `make artifacts` to have run).
+}

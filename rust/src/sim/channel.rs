@@ -1,0 +1,345 @@
+//! Typed simulated channels: multi-producer single-consumer mailboxes whose
+//! deliveries occur after a caller-supplied virtual-time delay (the transport
+//! layer computes the delay from its cost model).
+//!
+//! Failure semantics are deliberately *not* built in here: a message sent to
+//! a mailbox whose owner died is silently delivered into the queue (nobody
+//! will read it), exactly like bytes arriving at a crashed TCP endpoint.
+//! Death detection is layered above via `Sim::watch` — mirroring how Open MPI
+//! detects failures via SIGCHLD / broken control channels, not via magic
+//! knowledge in the fabric.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::task::{Context, Poll, Waker};
+
+use super::executor::Sim;
+use super::time::{SimDuration, SimTime};
+
+/// Error returned by `Receiver::recv`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvError {
+    /// Channel explicitly closed and drained.
+    Closed,
+    /// `recv_deadline` expired.
+    Timeout,
+}
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecvError::Closed => write!(f, "channel closed"),
+            RecvError::Timeout => write!(f, "recv timeout"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+struct ChanInner<T> {
+    queue: VecDeque<T>,
+    waiter: Option<Waker>,
+    closed: bool,
+}
+
+/// Sending half (cloneable).
+pub struct Sender<T> {
+    sim: Sim,
+    inner: Rc<RefCell<ChanInner<T>>>,
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        Sender {
+            sim: self.sim.clone(),
+            inner: Rc::clone(&self.inner),
+        }
+    }
+}
+
+/// Receiving half (single consumer).
+pub struct Receiver<T> {
+    inner: Rc<RefCell<ChanInner<T>>>,
+    sim: Sim,
+}
+
+/// Create a simulated channel. Delays are chosen per `send`.
+pub fn channel<T: 'static>(sim: &Sim) -> (Sender<T>, Receiver<T>) {
+    let inner = Rc::new(RefCell::new(ChanInner {
+        queue: VecDeque::new(),
+        waiter: None,
+        closed: false,
+    }));
+    (
+        Sender {
+            sim: sim.clone(),
+            inner: Rc::clone(&inner),
+        },
+        Receiver {
+            inner,
+            sim: sim.clone(),
+        },
+    )
+}
+
+impl<T: 'static> Sender<T> {
+    /// Deliver `msg` after `delay` of virtual time.
+    pub fn send(&self, msg: T, delay: SimDuration) {
+        let inner = Rc::clone(&self.inner);
+        self.sim.schedule(delay, move || {
+            let mut ch = inner.borrow_mut();
+            if ch.closed {
+                return; // dropped on the floor, like TCP RST
+            }
+            ch.queue.push_back(msg);
+            if let Some(w) = ch.waiter.take() {
+                w.wake();
+            }
+        });
+    }
+
+    /// Mark the channel closed (pending undelivered messages are dropped,
+    /// queued ones remain readable).
+    pub fn close(&self) {
+        let mut ch = self.inner.borrow_mut();
+        ch.closed = true;
+        if let Some(w) = ch.waiter.take() {
+            w.wake();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Non-blocking poll of the queue.
+    pub fn try_recv(&self) -> Option<T> {
+        self.inner.borrow_mut().queue.pop_front()
+    }
+
+    /// Await the next message.
+    pub fn recv(&self) -> Recv<'_, T> {
+        Recv {
+            rx: self,
+            deadline: None,
+            timer_set: false,
+        }
+    }
+
+    /// Await the next message until an absolute virtual deadline.
+    pub fn recv_deadline(&self, deadline: SimTime) -> Recv<'_, T> {
+        Recv {
+            rx: self,
+            deadline: Some(deadline),
+            timer_set: false,
+        }
+    }
+
+    /// Await with a relative timeout.
+    pub fn recv_timeout(&self, d: SimDuration) -> Recv<'_, T> {
+        self.recv_deadline(self.sim.now() + d)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.borrow().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Future returned by `Receiver::recv*`.
+pub struct Recv<'a, T> {
+    rx: &'a Receiver<T>,
+    deadline: Option<SimTime>,
+    timer_set: bool,
+}
+
+impl<'a, T: 'static> Future for Recv<'a, T> {
+    type Output = Result<T, RecvError>;
+
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let mut ch = self.rx.inner.borrow_mut();
+        if let Some(msg) = ch.queue.pop_front() {
+            return Poll::Ready(Ok(msg));
+        }
+        if ch.closed {
+            return Poll::Ready(Err(RecvError::Closed));
+        }
+        if let Some(dl) = self.deadline {
+            if self.rx.sim.now() >= dl {
+                return Poll::Ready(Err(RecvError::Timeout));
+            }
+        }
+        ch.waiter = Some(cx.waker().clone());
+        drop(ch);
+        if let Some(dl) = self.deadline {
+            if !self.timer_set {
+                self.timer_set = true;
+                // Wake ourselves at the deadline to deliver the timeout.
+                let waker = cx.waker().clone();
+                let delay = dl - self.rx.sim.now();
+                self.rx.sim.schedule(delay, move || waker.wake());
+            }
+        }
+        Poll::Pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+    use std::cell::Cell;
+
+    #[test]
+    fn message_arrives_after_latency() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let (tx, rx) = channel::<u32>(&sim);
+        let got = Rc::new(Cell::new((0u32, SimTime::ZERO)));
+        let g2 = Rc::clone(&got);
+        let s2 = sim.clone();
+        sim.spawn(p, async move {
+            let v = rx.recv().await.unwrap();
+            g2.set((v, s2.now()));
+        });
+        tx.send(7, SimDuration::from_micros(42));
+        sim.run();
+        assert_eq!(got.get(), (7, SimTime(42_000)));
+    }
+
+    #[test]
+    fn fifo_per_sender_and_time_ordering() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let (tx, rx) = channel::<u32>(&sim);
+        // later-sent but lower-latency message overtakes: delivery is by time
+        tx.send(1, SimDuration::from_micros(100));
+        tx.send(2, SimDuration::from_micros(10));
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let o2 = Rc::clone(&order);
+        sim.spawn(p, async move {
+            for _ in 0..2 {
+                o2.borrow_mut().push(rx.recv().await.unwrap());
+            }
+        });
+        sim.run();
+        assert_eq!(*order.borrow(), vec![2, 1]);
+    }
+
+    #[test]
+    fn same_delay_messages_keep_send_order() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let (tx, rx) = channel::<u32>(&sim);
+        for i in 0..5 {
+            tx.send(i, SimDuration::from_micros(10));
+        }
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let o2 = Rc::clone(&order);
+        sim.spawn(p, async move {
+            for _ in 0..5 {
+                o2.borrow_mut().push(rx.recv().await.unwrap());
+            }
+        });
+        sim.run();
+        assert_eq!(*order.borrow(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn recv_timeout_fires() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let (tx, rx) = channel::<u32>(&sim);
+        let _keep = tx; // no messages ever sent
+        let result = Rc::new(Cell::new(None));
+        let r2 = Rc::clone(&result);
+        let s2 = sim.clone();
+        sim.spawn(p, async move {
+            let r = rx.recv_timeout(SimDuration::from_millis(5)).await;
+            r2.set(Some((r, s2.now().nanos())));
+        });
+        sim.run();
+        assert_eq!(result.get(), Some((Err(RecvError::Timeout), 5_000_000)));
+    }
+
+    #[test]
+    fn recv_timeout_beaten_by_message() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let (tx, rx) = channel::<u32>(&sim);
+        tx.send(9, SimDuration::from_millis(1));
+        let result = Rc::new(Cell::new(None));
+        let r2 = Rc::clone(&result);
+        sim.spawn(p, async move {
+            r2.set(Some(rx.recv_timeout(SimDuration::from_millis(50)).await));
+        });
+        sim.run();
+        assert_eq!(result.get(), Some(Ok(9)));
+    }
+
+    #[test]
+    fn close_wakes_receiver_with_closed() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let (tx, rx) = channel::<u32>(&sim);
+        let result = Rc::new(Cell::new(None));
+        let r2 = Rc::clone(&result);
+        sim.spawn(p, async move {
+            r2.set(Some(rx.recv().await));
+        });
+        let tx2 = tx.clone();
+        sim.schedule(SimDuration::from_millis(3), move || tx2.close());
+        sim.run();
+        assert_eq!(result.get(), Some(Err(RecvError::Closed)));
+    }
+
+    #[test]
+    fn multiple_senders_interleave() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let (tx, rx) = channel::<u32>(&sim);
+        let tx2 = tx.clone();
+        tx.send(1, SimDuration::from_micros(30));
+        tx2.send(2, SimDuration::from_micros(20));
+        let sum = Rc::new(Cell::new(0));
+        let s2 = Rc::clone(&sum);
+        sim.spawn(p, async move {
+            let a = rx.recv().await.unwrap();
+            let b = rx.recv().await.unwrap();
+            s2.set(a * 10 + b);
+        });
+        sim.run();
+        assert_eq!(sum.get(), 21); // 2 then 1
+    }
+
+    #[test]
+    fn message_to_dead_receiver_is_harmless() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let (tx, rx) = channel::<u32>(&sim);
+        sim.spawn(p, async move {
+            let _ = rx.recv().await;
+            unreachable!("receiver killed before delivery");
+        });
+        let s2 = sim.clone();
+        sim.schedule(SimDuration::from_micros(1), move || s2.kill(p));
+        tx.send(1, SimDuration::from_millis(1));
+        let summary = sim.run();
+        assert_eq!(summary.tasks_pending, 0);
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let sim = Sim::new();
+        let (tx, rx) = channel::<u32>(&sim);
+        assert_eq!(rx.try_recv(), None);
+        tx.send(5, SimDuration::ZERO);
+        sim.run(); // deliver
+        assert_eq!(rx.try_recv(), Some(5));
+        assert_eq!(rx.try_recv(), None);
+    }
+}

@@ -1,0 +1,767 @@
+//! The virtual-time async executor.
+//!
+//! Single-threaded and deterministic: tasks run until all are blocked, then
+//! the clock jumps to the earliest scheduled event. See `sim/mod.rs` for the
+//! design discussion.
+
+use std::cell::RefCell;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Wake, Waker};
+
+use super::proc::{ProcEntry, ProcId, ProcStatus};
+use super::time::{SimDuration, SimTime};
+
+/// Identifier of a spawned task.
+pub type TaskId = u64;
+
+/// Why `Sim::run` returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExitReason {
+    /// No runnable tasks and no pending events: simulation quiesced.
+    Idle,
+    /// Event budget exhausted (runaway guard).
+    EventLimit,
+}
+
+/// Counters describing a finished run (used by tests and the perf harness).
+#[derive(Clone, Copy, Debug)]
+pub struct SimSummary {
+    pub end_time: SimTime,
+    pub events: u64,
+    pub polls: u64,
+    pub tasks_completed: u64,
+    /// Tasks still pending at exit (> 0 usually indicates a deadlock,
+    /// unless tasks were deliberately left blocked, e.g. idle daemons).
+    pub tasks_pending: u64,
+    pub reason: ExitReason,
+}
+
+enum Event {
+    Wake(Waker),
+    Run(Box<dyn FnOnce()>),
+}
+
+struct EventEntry {
+    time: SimTime,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for EventEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.time == o.time && self.seq == o.seq
+    }
+}
+impl Eq for EventEntry {}
+impl PartialOrd for EventEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for EventEntry {
+    // Reversed: BinaryHeap is a max-heap; we want earliest (time, seq) first.
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        (o.time, o.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+struct TaskEntry {
+    fut: Pin<Box<dyn Future<Output = ()>>>,
+    proc: ProcId,
+    /// Already sitting in the ready queue (dedup flag: avoids an O(n)
+    /// `contains` scan per external wake — see EXPERIMENTS.md §Perf).
+    queued: bool,
+}
+
+#[derive(Default)]
+struct WakeQueue {
+    queue: Mutex<VecDeque<TaskId>>,
+}
+
+impl WakeQueue {
+    fn push(&self, t: TaskId) {
+        self.queue.lock().unwrap().push_back(t);
+    }
+    fn drain(&self) -> Vec<TaskId> {
+        self.queue.lock().unwrap().drain(..).collect()
+    }
+}
+
+struct TaskWaker {
+    id: TaskId,
+    queue: Arc<WakeQueue>,
+}
+
+impl Wake for TaskWaker {
+    fn wake(self: Arc<Self>) {
+        self.queue.push(self.id);
+    }
+}
+
+struct Inner {
+    now: SimTime,
+    next_seq: u64,
+    next_task: TaskId,
+    events: BinaryHeap<EventEntry>,
+    ready: VecDeque<TaskId>,
+    tasks: HashMap<TaskId, TaskEntry>,
+    procs: Vec<ProcEntry>,
+    events_fired: u64,
+    polls: u64,
+    tasks_completed: u64,
+    event_limit: u64,
+}
+
+/// Handle to the simulation world. Cheap to clone; every task captures one.
+#[derive(Clone)]
+pub struct Sim {
+    inner: Rc<RefCell<Inner>>,
+    wakes: Arc<WakeQueue>,
+}
+
+impl Default for Sim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sim {
+    pub fn new() -> Self {
+        Sim {
+            inner: Rc::new(RefCell::new(Inner {
+                now: SimTime::ZERO,
+                next_seq: 0,
+                next_task: 0,
+                events: BinaryHeap::new(),
+                ready: VecDeque::new(),
+                tasks: HashMap::new(),
+                procs: Vec::new(),
+                events_fired: 0,
+                polls: 0,
+                tasks_completed: 0,
+                event_limit: u64::MAX,
+            })),
+            wakes: Arc::new(WakeQueue::default()),
+        }
+    }
+
+    /// Guard against runaway simulations (default: unlimited).
+    pub fn set_event_limit(&self, limit: u64) {
+        self.inner.borrow_mut().event_limit = limit;
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.inner.borrow().now
+    }
+
+    /// Register a new simulated process.
+    pub fn spawn_process(&self, name: impl Into<String>) -> ProcId {
+        let mut inner = self.inner.borrow_mut();
+        let id = ProcId(inner.procs.len() as u32);
+        inner.procs.push(ProcEntry::new(name.into()));
+        id
+    }
+
+    pub fn proc_status(&self, p: ProcId) -> ProcStatus {
+        self.inner.borrow().procs[p.0 as usize].status
+    }
+
+    pub fn proc_name(&self, p: ProcId) -> String {
+        self.inner.borrow().procs[p.0 as usize].name.clone()
+    }
+
+    pub fn is_alive(&self, p: ProcId) -> bool {
+        matches!(self.proc_status(p), ProcStatus::Alive)
+    }
+
+    /// Spawn a task belonging to process `p`. Panics if `p` is dead —
+    /// callers must re-create processes through their manager (daemon).
+    pub fn spawn(&self, p: ProcId, fut: impl Future<Output = ()> + 'static) -> TaskId {
+        let mut inner = self.inner.borrow_mut();
+        assert!(
+            matches!(inner.procs[p.0 as usize].status, ProcStatus::Alive),
+            "spawn on dead {:?} ({})",
+            p,
+            inner.procs[p.0 as usize].name
+        );
+        let id = inner.next_task;
+        inner.next_task += 1;
+        inner.tasks.insert(
+            id,
+            TaskEntry {
+                fut: Box::pin(fut),
+                proc: p,
+                queued: true,
+            },
+        );
+        inner.ready.push_back(id);
+        id
+    }
+
+    /// Schedule `f` to run at `now + delay` (used for message delivery).
+    pub fn schedule(&self, delay: SimDuration, f: impl FnOnce() + 'static) {
+        let mut inner = self.inner.borrow_mut();
+        let time = inner.now + delay;
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.events.push(EventEntry {
+            time,
+            seq,
+            event: Event::Run(Box::new(f)),
+        });
+    }
+
+    fn schedule_wake(&self, at: SimTime, w: Waker) {
+        let mut inner = self.inner.borrow_mut();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        let time = at.max(inner.now);
+        inner.events.push(EventEntry {
+            time,
+            seq,
+            event: Event::Wake(w),
+        });
+    }
+
+    /// Advance this task's virtual clock by `d`.
+    pub fn sleep(&self, d: SimDuration) -> Sleep {
+        Sleep {
+            sim: self.clone(),
+            deadline: self.now() + d,
+            registered: false,
+        }
+    }
+
+    /// Reschedule the current task behind everything already runnable.
+    pub fn yield_now(&self) -> YieldNow {
+        YieldNow { polled: false }
+    }
+
+    /// Resolve when process `p` dies; yields the death time. Resolves
+    /// immediately if already dead.
+    pub fn watch(&self, p: ProcId) -> Watch {
+        Watch {
+            sim: self.clone(),
+            proc: p,
+        }
+    }
+
+    /// Fail-stop kill: drop all tasks of `p` (no victim code runs again),
+    /// mark dead, wake watchers. Safe to call from within any task,
+    /// including a task of `p` itself (suicide).
+    pub fn kill(&self, p: ProcId) {
+        let mut victims: Vec<TaskEntry> = Vec::new();
+        {
+            let mut inner = self.inner.borrow_mut();
+            let entry = &mut inner.procs[p.0 as usize];
+            if !matches!(entry.status, ProcStatus::Alive) {
+                return;
+            }
+            let at = inner.now;
+            let entry = &mut inner.procs[p.0 as usize];
+            entry.status = ProcStatus::Dead { at };
+            let watchers = std::mem::take(&mut entry.watchers);
+            let tids: Vec<TaskId> = inner
+                .tasks
+                .iter()
+                .filter(|(_, t)| t.proc == p)
+                .map(|(id, _)| *id)
+                .collect();
+            for t in tids {
+                if let Some(e) = inner.tasks.remove(&t) {
+                    victims.push(e);
+                }
+            }
+            for w in watchers {
+                w.wake();
+            }
+        }
+        // Drop victim futures outside the borrow: their drop glue may touch
+        // the Sim (e.g. guards), which would otherwise re-borrow.
+        drop(victims);
+    }
+
+    /// Cancel a single task without killing its process: the DES analog of
+    /// interrupting a thread (Reinit++'s SIGREINIT/longjmp roll-back drops
+    /// the survivor's call stack but keeps the process and its memory).
+    /// No-op if the task already finished. Must not target the running task.
+    pub fn cancel_task(&self, tid: TaskId) {
+        let removed = self.inner.borrow_mut().tasks.remove(&tid);
+        drop(removed); // drop glue runs without the borrow held
+    }
+
+    /// A future that never resolves: what a just-SIGKILLed process "runs".
+    pub fn halt_forever(&self) -> HaltForever {
+        HaltForever
+    }
+
+    fn poll_task(&self, tid: TaskId) {
+        let (mut fut, proc) = {
+            let mut inner = self.inner.borrow_mut();
+            match inner.tasks.remove(&tid) {
+                // Task finished or was killed after being scheduled: skip.
+                None => return,
+                Some(e) => (e.fut, e.proc),
+            }
+        };
+        let waker = Waker::from(Arc::new(TaskWaker {
+            id: tid,
+            queue: Arc::clone(&self.wakes),
+        }));
+        let mut cx = Context::from_waker(&waker);
+        let res = fut.as_mut().poll(&mut cx);
+        let mut inner = self.inner.borrow_mut();
+        inner.polls += 1;
+        match res {
+            Poll::Ready(()) => {
+                inner.tasks_completed += 1;
+            }
+            Poll::Pending => {
+                // If the task killed its own process during the poll, its
+                // future must die with it.
+                if matches!(inner.procs[proc.0 as usize].status, ProcStatus::Alive) {
+                    inner.tasks.insert(
+                        tid,
+                        TaskEntry {
+                            fut,
+                            proc,
+                            queued: false,
+                        },
+                    );
+                } else {
+                    drop(inner);
+                    drop(fut);
+                }
+            }
+        }
+    }
+
+    /// Run until quiescence (no runnable tasks, no pending events).
+    pub fn run(&self) -> SimSummary {
+        loop {
+            // 1. External wakes -> ready queue (dedup via the task flag).
+            let wakes = self.wakes.drain();
+            if !wakes.is_empty() {
+                let mut inner = self.inner.borrow_mut();
+                for t in wakes {
+                    if let Some(e) = inner.tasks.get_mut(&t) {
+                        if !e.queued {
+                            e.queued = true;
+                            inner.ready.push_back(t);
+                        }
+                    }
+                }
+            }
+            // 2. Poll one runnable task.
+            let next = self.inner.borrow_mut().ready.pop_front();
+            if let Some(tid) = next {
+                self.poll_task(tid);
+                continue;
+            }
+            // 3. Nothing runnable: advance virtual time to the next event.
+            enum Step {
+                Fire(Event),
+                Exit(ExitReason),
+            }
+            let step = {
+                let mut inner = self.inner.borrow_mut();
+                if inner.events_fired >= inner.event_limit {
+                    Step::Exit(ExitReason::EventLimit)
+                } else {
+                    match inner.events.pop() {
+                        None => Step::Exit(ExitReason::Idle),
+                        Some(e) => {
+                            debug_assert!(e.time >= inner.now);
+                            inner.now = e.time;
+                            inner.events_fired += 1;
+                            Step::Fire(e.event)
+                        }
+                    }
+                }
+            };
+            match step {
+                Step::Exit(reason) => return self.summary(reason),
+                Step::Fire(Event::Wake(w)) => w.wake(),
+                Step::Fire(Event::Run(f)) => f(), // runs without the borrow held
+            }
+        }
+    }
+
+    fn summary(&self, reason: ExitReason) -> SimSummary {
+        let inner = self.inner.borrow();
+        SimSummary {
+            end_time: inner.now,
+            events: inner.events_fired,
+            polls: inner.polls,
+            tasks_completed: inner.tasks_completed,
+            tasks_pending: inner.tasks.len() as u64,
+            reason,
+        }
+    }
+}
+
+/// Future returned by `Sim::sleep`.
+pub struct Sleep {
+    sim: Sim,
+    deadline: SimTime,
+    registered: bool,
+}
+
+impl Future for Sleep {
+    type Output = ();
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if self.sim.now() >= self.deadline {
+            return Poll::Ready(());
+        }
+        if !self.registered {
+            self.registered = true;
+            let deadline = self.deadline;
+            self.sim.schedule_wake(deadline, cx.waker().clone());
+        }
+        Poll::Pending
+    }
+}
+
+/// Future returned by `Sim::halt_forever` (never ready).
+pub struct HaltForever;
+
+impl Future for HaltForever {
+    type Output = ();
+    fn poll(self: Pin<&mut Self>, _cx: &mut Context<'_>) -> Poll<()> {
+        Poll::Pending
+    }
+}
+
+/// Future returned by `Sim::yield_now`.
+pub struct YieldNow {
+    polled: bool,
+}
+
+impl Future for YieldNow {
+    type Output = ();
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if self.polled {
+            Poll::Ready(())
+        } else {
+            self.polled = true;
+            cx.waker().wake_by_ref();
+            Poll::Pending
+        }
+    }
+}
+
+/// Future returned by `Sim::watch`.
+pub struct Watch {
+    sim: Sim,
+    proc: ProcId,
+}
+
+impl Future for Watch {
+    type Output = SimTime;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<SimTime> {
+        let mut inner = self.sim.inner.borrow_mut();
+        match inner.procs[self.proc.0 as usize].status {
+            ProcStatus::Dead { at } => Poll::Ready(at),
+            ProcStatus::Alive => {
+                inner.procs[self.proc.0 as usize]
+                    .watchers
+                    .push(cx.waker().clone());
+                Poll::Pending
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    #[test]
+    fn empty_sim_quiesces_at_zero() {
+        let sim = Sim::new();
+        let s = sim.run();
+        assert_eq!(s.end_time, SimTime::ZERO);
+        assert_eq!(s.reason, ExitReason::Idle);
+        assert_eq!(s.tasks_pending, 0);
+    }
+
+    #[test]
+    fn sleep_advances_virtual_clock() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("a");
+        let done = Rc::new(Cell::new(SimTime::ZERO));
+        let d2 = Rc::clone(&done);
+        let s2 = sim.clone();
+        sim.spawn(p, async move {
+            s2.sleep(SimDuration::from_millis(250)).await;
+            d2.set(s2.now());
+        });
+        let s = sim.run();
+        assert_eq!(done.get().nanos(), 250_000_000);
+        assert_eq!(s.end_time.nanos(), 250_000_000);
+        assert_eq!(s.tasks_completed, 1);
+    }
+
+    #[test]
+    fn sequential_sleeps_accumulate() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("a");
+        let s2 = sim.clone();
+        sim.spawn(p, async move {
+            for _ in 0..10 {
+                s2.sleep(SimDuration::from_millis(10)).await;
+            }
+        });
+        assert_eq!(sim.run().end_time.nanos(), 100_000_000);
+    }
+
+    #[test]
+    fn concurrent_tasks_interleave_by_time() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("a");
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for (label, ms) in [("fast", 10u64), ("slow", 30), ("mid", 20)] {
+            let s2 = sim.clone();
+            let o2 = Rc::clone(&order);
+            sim.spawn(p, async move {
+                s2.sleep(SimDuration::from_millis(ms)).await;
+                o2.borrow_mut().push(label);
+            });
+        }
+        sim.run();
+        assert_eq!(*order.borrow(), vec!["fast", "mid", "slow"]);
+    }
+
+    #[test]
+    fn zero_duration_sleep_completes() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("a");
+        let s2 = sim.clone();
+        sim.spawn(p, async move {
+            s2.sleep(SimDuration::ZERO).await;
+        });
+        let s = sim.run();
+        assert_eq!(s.tasks_completed, 1);
+    }
+
+    #[test]
+    fn yield_now_reschedules_fairly() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("a");
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for label in ["t1", "t2"] {
+            let s2 = sim.clone();
+            let o2 = Rc::clone(&order);
+            sim.spawn(p, async move {
+                for i in 0..3 {
+                    o2.borrow_mut().push((label, i));
+                    s2.yield_now().await;
+                }
+            });
+        }
+        sim.run();
+        // strict alternation: yield_now puts the task behind its peer
+        assert_eq!(
+            *order.borrow(),
+            vec![
+                ("t1", 0),
+                ("t2", 0),
+                ("t1", 1),
+                ("t2", 1),
+                ("t1", 2),
+                ("t2", 2)
+            ]
+        );
+    }
+
+    #[test]
+    fn kill_cancels_tasks_and_wakes_watcher() {
+        let sim = Sim::new();
+        let victim = sim.spawn_process("victim");
+        let observer = sim.spawn_process("observer");
+        let progressed = Rc::new(Cell::new(0u32));
+        let death_seen = Rc::new(Cell::new(None));
+
+        let s2 = sim.clone();
+        let p2 = Rc::clone(&progressed);
+        sim.spawn(victim, async move {
+            p2.set(1);
+            s2.sleep(SimDuration::from_millis(100)).await;
+            p2.set(2); // must never run
+        });
+
+        let s3 = sim.clone();
+        sim.spawn(observer, async move {
+            s3.sleep(SimDuration::from_millis(50)).await;
+            s3.kill(victim);
+        });
+
+        let s4 = sim.clone();
+        let d2 = Rc::clone(&death_seen);
+        sim.spawn(observer, async move {
+            let at = s4.watch(victim).await;
+            d2.set(Some(at.nanos()));
+        });
+
+        let summary = sim.run();
+        assert_eq!(progressed.get(), 1, "victim body after kill must not run");
+        assert_eq!(death_seen.get(), Some(50_000_000));
+        assert!(!sim.is_alive(victim));
+        assert_eq!(summary.tasks_pending, 0);
+    }
+
+    #[test]
+    fn suicide_is_safe_and_stops_the_task() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("kamikaze");
+        let after = Rc::new(Cell::new(false));
+        let s2 = sim.clone();
+        let a2 = Rc::clone(&after);
+        sim.spawn(p, async move {
+            s2.sleep(SimDuration::from_millis(5)).await;
+            s2.kill(p); // SIGKILL to self
+            s2.sleep(SimDuration::from_millis(5)).await;
+            a2.set(true); // unreachable
+        });
+        let s = sim.run();
+        assert!(!after.get());
+        assert!(!sim.is_alive(p));
+        assert_eq!(s.tasks_completed, 0);
+        assert_eq!(s.tasks_pending, 0);
+    }
+
+    #[test]
+    fn watch_already_dead_resolves_immediately() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let q = sim.spawn_process("q");
+        sim.kill(p);
+        let seen = Rc::new(Cell::new(false));
+        let s2 = sim.clone();
+        let seen2 = Rc::clone(&seen);
+        sim.spawn(q, async move {
+            let at = s2.watch(p).await;
+            assert_eq!(at, SimTime::ZERO);
+            seen2.set(true);
+        });
+        sim.run();
+        assert!(seen.get());
+    }
+
+    #[test]
+    fn double_kill_is_idempotent() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        sim.kill(p);
+        let first_death = match sim.proc_status(p) {
+            ProcStatus::Dead { at } => at,
+            _ => panic!(),
+        };
+        sim.kill(p);
+        assert_eq!(sim.proc_status(p), ProcStatus::Dead { at: first_death });
+    }
+
+    #[test]
+    #[should_panic(expected = "spawn on dead")]
+    fn spawn_on_dead_proc_panics() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        sim.kill(p);
+        sim.spawn(p, async {});
+    }
+
+    #[test]
+    fn schedule_runs_closures_in_time_order() {
+        let sim = Sim::new();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for (label, ms) in [("c", 30u64), ("a", 10), ("b", 20)] {
+            let o2 = Rc::clone(&order);
+            sim.schedule(SimDuration::from_millis(ms), move || {
+                o2.borrow_mut().push(label);
+            });
+        }
+        sim.run();
+        assert_eq!(*order.borrow(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn same_time_events_fire_in_fifo_seq_order() {
+        let sim = Sim::new();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..5 {
+            let o2 = Rc::clone(&order);
+            sim.schedule(SimDuration::from_millis(10), move || {
+                o2.borrow_mut().push(i);
+            });
+        }
+        sim.run();
+        assert_eq!(*order.borrow(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn event_limit_stops_runaway() {
+        let sim = Sim::new();
+        sim.set_event_limit(100);
+        let p = sim.spawn_process("looper");
+        let s2 = sim.clone();
+        sim.spawn(p, async move {
+            loop {
+                s2.sleep(SimDuration::from_nanos(1)).await;
+            }
+        });
+        let s = sim.run();
+        assert_eq!(s.reason, ExitReason::EventLimit);
+    }
+
+    #[test]
+    fn cancel_task_drops_future_keeps_process() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let progressed = Rc::new(Cell::new(0u32));
+        let s2 = sim.clone();
+        let pr = Rc::clone(&progressed);
+        let tid = sim.spawn(p, async move {
+            pr.set(1);
+            s2.sleep(SimDuration::from_millis(100)).await;
+            pr.set(2); // must not run
+        });
+        let s3 = sim.clone();
+        sim.schedule(SimDuration::from_millis(10), move || s3.cancel_task(tid));
+        let summary = sim.run();
+        assert_eq!(progressed.get(), 1);
+        assert!(sim.is_alive(p), "process survives a task cancel");
+        assert_eq!(summary.tasks_pending, 0);
+    }
+
+    #[test]
+    fn cancel_finished_task_is_noop() {
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let tid = sim.spawn(p, async {});
+        sim.run();
+        sim.cancel_task(tid); // no panic
+    }
+
+    #[test]
+    fn determinism_same_program_same_trace() {
+        fn trace() -> (u64, u64, SimTime) {
+            let sim = Sim::new();
+            let p = sim.spawn_process("p");
+            for i in 0..20u64 {
+                let s2 = sim.clone();
+                sim.spawn(p, async move {
+                    s2.sleep(SimDuration::from_micros(i * 7 % 13)).await;
+                    s2.sleep(SimDuration::from_micros(i)).await;
+                });
+            }
+            let s = sim.run();
+            (s.events, s.polls, s.end_time)
+        }
+        assert_eq!(trace(), trace());
+    }
+}

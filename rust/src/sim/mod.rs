@@ -1,0 +1,29 @@
+//! Deterministic virtual-time discrete-event simulation substrate.
+//!
+//! A single-threaded async executor whose clock is *virtual*: time advances
+//! only when every runnable task is blocked, jumping to the earliest pending
+//! event. Simulated processes (MPI ranks, ORTE daemons, the HNP root) are
+//! groups of tasks that can be killed atomically — the DES analog of a
+//! fail-stop crash — with death notifications for fault detection.
+//!
+//! Design notes:
+//! - Determinism: events are ordered by `(virtual time, sequence number)`;
+//!   the executor itself introduces no ordering dependent on wall time. Runs
+//!   with the same seed and inputs replay identically (asserted in tests).
+//! - Real compute inside virtual time: a task may run *real* work (e.g. a
+//!   PJRT executable) synchronously during its poll, then charge the measured
+//!   wall duration to the virtual clock via `Sim::sleep`.
+//! - Kill semantics: `Sim::kill` drops every future of the process (Rust
+//!   drop glue releases held resources), marks it dead, and wakes watchers.
+//!   This models SIGKILL: no user code of the victim runs afterwards.
+
+mod channel;
+mod executor;
+mod proc;
+pub mod rng;
+mod time;
+
+pub use channel::{channel, RecvError, Receiver, Sender};
+pub use executor::{ExitReason, Sim, SimSummary, TaskId};
+pub use proc::{ProcId, ProcStatus};
+pub use time::{SimDuration, SimTime};

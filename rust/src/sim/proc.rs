@@ -1,0 +1,40 @@
+//! Simulated processes: kill-able groups of tasks with death notification.
+
+use std::task::Waker;
+
+use super::time::SimTime;
+
+/// Identifier of a simulated process (rank, daemon, or root).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProcId(pub u32);
+
+impl std::fmt::Debug for ProcId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "proc#{}", self.0)
+    }
+}
+
+/// Liveness of a simulated process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProcStatus {
+    Alive,
+    /// Fail-stop crashed (or exited) at the given virtual time.
+    Dead { at: SimTime },
+}
+
+pub(crate) struct ProcEntry {
+    pub name: String,
+    pub status: ProcStatus,
+    /// Wakers of `watch()` futures to notify on death.
+    pub watchers: Vec<Waker>,
+}
+
+impl ProcEntry {
+    pub fn new(name: String) -> Self {
+        ProcEntry {
+            name,
+            status: ProcStatus::Alive,
+            watchers: Vec::new(),
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Seeded property-testing micro-framework (the offline build has no
+//! proptest). Generates many random cases from a deterministic seed and, on
+//! failure, reports the seed + case index so the exact case replays.
+
+use crate::sim::rng::Rng;
+
+/// Run `cases` random checks. `gen` draws a case from the RNG; `prop`
+/// returns Err(description) on violation. Panics with a replayable id.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: u32,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for i in 0..cases {
+        let mut rng = Rng::new(seed).fork(name).fork(&format!("case{i}"));
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property `{name}` failed (seed={seed}, case={i}):\n  case: {case:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: property over a u64 range.
+pub fn check_range(
+    name: &str,
+    seed: u64,
+    cases: u32,
+    lo: u64,
+    hi: u64,
+    mut prop: impl FnMut(u64) -> Result<(), String>,
+) {
+    check(
+        name,
+        seed,
+        cases,
+        |rng| lo + rng.gen_range(hi - lo),
+        |&v| prop(v),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "count",
+            1,
+            50,
+            |rng| rng.gen_range(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_context() {
+        check("always-fails", 2, 10, |rng| rng.gen_range(5), |_| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        check("det", 3, 20, |r| r.gen_range(1000), |&v| {
+            a.push(v);
+            Ok(())
+        });
+        check("det", 3, 20, |r| r.gen_range(1000), |&v| {
+            b.push(v);
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

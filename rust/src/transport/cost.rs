@@ -1,0 +1,91 @@
+//! Latency/bandwidth cost model (constants from `config::Calibration`).
+
+use crate::config::Calibration;
+use crate::sim::SimDuration;
+
+/// Transfer-time calculator for the simulated fabric.
+#[derive(Clone, Debug)]
+pub struct NetCost {
+    intra_lat: SimDuration,
+    intra_bytes_per_sec: f64,
+    inter_lat: SimDuration,
+    inter_bytes_per_sec: f64,
+    control_lat: SimDuration,
+}
+
+const GB: f64 = 1e9;
+
+impl NetCost {
+    pub fn from_calib(c: &Calibration) -> Self {
+        NetCost {
+            intra_lat: SimDuration::from_secs_f64(c.intra_latency_us * 1e-6),
+            intra_bytes_per_sec: c.intra_bw_gbps * GB,
+            inter_lat: SimDuration::from_secs_f64(c.inter_latency_us * 1e-6),
+            inter_bytes_per_sec: c.inter_bw_gbps * GB,
+            control_lat: SimDuration::from_secs_f64(c.control_latency_us * 1e-6),
+        }
+    }
+
+    /// One-way delivery time of `bytes` on the data plane.
+    pub fn data_delay(&self, bytes: usize, same_node: bool) -> SimDuration {
+        let (lat, bw) = if same_node {
+            (self.intra_lat, self.intra_bytes_per_sec)
+        } else {
+            (self.inter_lat, self.inter_bytes_per_sec)
+        };
+        lat + SimDuration::from_secs_f64(bytes as f64 / bw)
+    }
+
+    /// One-way delivery time of a small control-plane message.
+    pub fn control_delay(&self, bytes: usize) -> SimDuration {
+        self.control_lat + SimDuration::from_secs_f64(bytes as f64 / self.inter_bytes_per_sec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> NetCost {
+        NetCost::from_calib(&Calibration::default())
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let c = cost();
+        let d = c.data_delay(8, false);
+        // 2 µs latency + ~0.6 ns transfer
+        assert!(d.nanos() >= 2_000 && d.nanos() < 2_100, "{d:?}");
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_messages() {
+        let c = cost();
+        let d = c.data_delay(125_000_000, false); // 125 MB at 12.5 GB/s = 10 ms
+        let secs = d.secs_f64();
+        assert!((secs - 0.01).abs() < 0.001, "{secs}");
+    }
+
+    #[test]
+    fn intra_node_is_faster() {
+        let c = cost();
+        assert!(c.data_delay(1 << 20, true) < c.data_delay(1 << 20, false));
+    }
+
+    #[test]
+    fn control_plane_latency() {
+        let c = cost();
+        assert!(c.control_delay(64).nanos() >= 25_000);
+    }
+
+    #[test]
+    fn monotone_in_size() {
+        let c = cost();
+        let mut last = SimDuration::ZERO;
+        for bytes in [0usize, 100, 10_000, 1_000_000] {
+            let d = c.data_delay(bytes, false);
+            assert!(d >= last);
+            last = d;
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Addressed message fabric: per-endpoint mailboxes with cost-model delays.
+//!
+//! Endpoints are keyed by `u64`; the MPI layer composes keys from
+//! `(job incarnation, rank)` so that a CR re-deploy gets a pristine fabric
+//! address space and a re-spawned rank re-binds its own key.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::cost::NetCost;
+use crate::sim::{channel, Receiver, Sender, Sim};
+
+/// An endpoint binding: where a key currently lives.
+#[derive(Clone)]
+pub struct Endpoint<M> {
+    tx: Sender<M>,
+    node: u32,
+}
+
+struct Inner<M> {
+    endpoints: HashMap<u64, Endpoint<M>>,
+    /// Messages sent to a not-yet-bound key (eager sends racing MPI_Init
+    /// wireup). Flushed on `bind`; keys that never bind keep them forever,
+    /// like packets to a crashed incarnation.
+    pending: HashMap<u64, Vec<(u32, M, usize)>>,
+    messages_sent: u64,
+    bytes_sent: u64,
+}
+
+/// The data-plane fabric shared by all ranks of a job.
+pub struct Fabric<M> {
+    sim: Sim,
+    cost: NetCost,
+    inner: Rc<RefCell<Inner<M>>>,
+}
+
+impl<M> Clone for Fabric<M> {
+    fn clone(&self) -> Self {
+        Fabric {
+            sim: self.sim.clone(),
+            cost: self.cost.clone(),
+            inner: Rc::clone(&self.inner),
+        }
+    }
+}
+
+impl<M: 'static> Fabric<M> {
+    pub fn new(sim: &Sim, cost: NetCost) -> Self {
+        Fabric {
+            sim: sim.clone(),
+            cost,
+            inner: Rc::new(RefCell::new(Inner {
+                endpoints: HashMap::new(),
+                pending: HashMap::new(),
+                messages_sent: 0,
+                bytes_sent: 0,
+            })),
+        }
+    }
+
+    /// Bind (or re-bind, after a re-spawn) `key` on `node`; returns the
+    /// mailbox. A re-bind drops the stale mailbox: in-flight messages to the
+    /// dead incarnation are lost, like packets to a crashed process.
+    pub fn bind(&self, key: u64, node: u32) -> Receiver<M> {
+        let (tx, rx) = channel::<M>(&self.sim);
+        let backlog = {
+            let mut inner = self.inner.borrow_mut();
+            inner.endpoints.insert(key, Endpoint { tx, node });
+            inner.pending.remove(&key).unwrap_or_default()
+        };
+        // Flush eager sends that raced the bind (delay computed now, which
+        // models the connection-establishment handshake completing).
+        for (from_node, msg, bytes) in backlog {
+            self.send_from(from_node, key, msg, bytes);
+        }
+        rx
+    }
+
+    /// Remove a binding (process death).
+    pub fn unbind(&self, key: u64) {
+        self.inner.borrow_mut().endpoints.remove(&key);
+    }
+
+    /// Node an endpoint lives on, if bound.
+    pub fn node_of(&self, key: u64) -> Option<u32> {
+        self.inner.borrow().endpoints.get(&key).map(|e| e.node)
+    }
+
+    /// Send `msg` (`bytes` long on the wire) from a task on `from_node` to
+    /// endpoint `to`. If the endpoint is not bound yet the message is
+    /// buffered until `bind` (eager send racing wireup); returns false in
+    /// that case.
+    pub fn send_from(&self, from_node: u32, to: u64, msg: M, bytes: usize) -> bool {
+        let (tx, delay) = {
+            let mut inner = self.inner.borrow_mut();
+            let Some(ep) = inner.endpoints.get(&to) else {
+                inner.pending.entry(to).or_default().push((from_node, msg, bytes));
+                return false;
+            };
+            let delay = self.cost.data_delay(bytes, ep.node == from_node);
+            let tx = ep.tx.clone();
+            inner.messages_sent += 1;
+            inner.bytes_sent += bytes as u64;
+            (tx, delay)
+        };
+        tx.send(msg, delay);
+        true
+    }
+
+    /// Traffic counters `(messages, bytes)` — used by tests and perf metrics.
+    pub fn stats(&self) -> (u64, u64) {
+        let inner = self.inner.borrow();
+        (inner.messages_sent, inner.bytes_sent)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Calibration;
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    fn fabric(sim: &Sim) -> Fabric<(u32, Vec<u8>)> {
+        Fabric::new(sim, NetCost::from_calib(&Calibration::default()))
+    }
+
+    #[test]
+    fn send_and_receive_roundtrip() {
+        let sim = Sim::new();
+        let f = fabric(&sim);
+        let p = sim.spawn_process("r1");
+        let rx = f.bind(1, 0);
+        assert!(f.send_from(0, 1, (7, vec![1, 2, 3]), 3));
+        let got = Rc::new(Cell::new(0));
+        let g = Rc::clone(&got);
+        sim.spawn(p, async move {
+            let (tag, data) = rx.recv().await.unwrap();
+            g.set(tag + data.len() as u32);
+        });
+        sim.run();
+        assert_eq!(got.get(), 10);
+    }
+
+    #[test]
+    fn send_to_unbound_is_buffered_until_bind() {
+        let sim = Sim::new();
+        let f = fabric(&sim);
+        assert!(!f.send_from(0, 99, (7, vec![1]), 1)); // buffered
+        let rx = f.bind(99, 0); // flushes
+        sim.run();
+        assert_eq!(rx.try_recv().map(|m| m.0), Some(7));
+    }
+
+    #[test]
+    fn unbind_then_send_buffers_for_next_incarnation() {
+        let sim = Sim::new();
+        let f = fabric(&sim);
+        let _rx = f.bind(5, 2);
+        f.unbind(5);
+        assert!(!f.send_from(0, 5, (0, vec![]), 0));
+        assert_eq!(f.node_of(5), None);
+    }
+
+    #[test]
+    fn rebind_gets_fresh_mailbox() {
+        let sim = Sim::new();
+        let f = fabric(&sim);
+        let _old = f.bind(1, 0);
+        assert!(f.send_from(0, 1, (1, vec![]), 0)); // goes to old mailbox
+        let new = f.bind(1, 3); // respawned on another node
+        assert_eq!(f.node_of(1), Some(3));
+        sim.run();
+        assert!(new.is_empty(), "message to the dead incarnation is lost");
+    }
+
+    #[test]
+    fn intra_node_beats_inter_node_delivery() {
+        let sim = Sim::new();
+        let f = fabric(&sim);
+        let p = sim.spawn_process("r");
+        let rx_near = f.bind(1, 0);
+        let rx_far = f.bind(2, 1);
+        // same payload, sent at t=0 from node 0
+        f.send_from(0, 1, (1, vec![0; 1024]), 1024);
+        f.send_from(0, 2, (2, vec![0; 1024]), 1024);
+        let times = Rc::new(RefCell::new(Vec::new()));
+        let t2 = Rc::clone(&times);
+        let s2 = sim.clone();
+        sim.spawn(p, async move {
+            rx_near.recv().await.unwrap();
+            t2.borrow_mut().push(s2.now());
+            rx_far.recv().await.unwrap();
+            t2.borrow_mut().push(s2.now());
+        });
+        sim.run();
+        let t = times.borrow();
+        assert!(t[0] < t[1], "near={:?} far={:?}", t[0], t[1]);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let sim = Sim::new();
+        let f = fabric(&sim);
+        let _rx = f.bind(1, 0);
+        f.send_from(0, 1, (0, vec![0; 10]), 10);
+        f.send_from(0, 1, (0, vec![0; 20]), 20);
+        assert_eq!(f.stats(), (2, 30));
+    }
+}

@@ -1,0 +1,14 @@
+//! Simulated interconnect: cost model + addressed message fabric.
+//!
+//! Two planes, as in Open MPI:
+//! - the **data plane** (`Fabric`) carries MPI traffic between ranks with
+//!   latency/bandwidth costs depending on intra- vs inter-node placement;
+//! - the **control plane** is the set of root<->daemon channels owned by
+//!   `cluster` (reliable TCP-like, fixed small latency) — it reuses
+//!   `NetCost::control_delay`.
+
+mod cost;
+mod fabric;
+
+pub use cost::NetCost;
+pub use fabric::{Endpoint, Fabric};

@@ -1,0 +1,207 @@
+//! Property tests over the coordinator invariants (DESIGN.md §9.4), using
+//! the in-repo seeded property-test micro-framework (`testkit`): randomized
+//! kill sequences and fault draws, with replayable case ids on failure.
+
+use reinitpp::cluster::{Cluster, Topology};
+use reinitpp::config::{
+    AppKind, ExperimentConfig, FailureKind, Fidelity, RecoveryKind,
+};
+use reinitpp::recovery::job::run_trial;
+use reinitpp::sim::rng::Rng;
+use reinitpp::sim::Sim;
+use reinitpp::testkit::check;
+
+/// Random cluster + random node kill: Algorithm 1's least-loaded choice is
+/// always an alive node with minimal occupancy, and respawning the lost
+/// ranks there restores the full world (non-shrinking recovery).
+#[test]
+fn prop_least_loaded_selection_and_nonshrinking_respawn() {
+    check(
+        "least-loaded-respawn",
+        0xA11CE,
+        60,
+        |rng: &mut Rng| {
+            let rpn = 1 + rng.gen_range(16) as u32;
+            let nodes = 2 + rng.gen_range(6) as u32;
+            let ranks = rpn * nodes;
+            let spares = 1 + rng.gen_range(2) as u32;
+            let victim_node = rng.gen_range(nodes as u64) as u32;
+            (ranks, rpn, spares, victim_node)
+        },
+        |&(ranks, rpn, spares, victim_node)| {
+            let sim = Sim::new();
+            let topo = Topology::new(ranks, rpn, spares);
+            let c = Cluster::new(&sim, topo, "prop");
+            c.kill_node(victim_node);
+            let target = c.least_loaded_alive_node();
+            if !c.node_is_alive(target) {
+                return Err("selected a dead node".into());
+            }
+            let occ = c.occupied_slots(target);
+            for n in 0..topo.total_nodes() {
+                if c.node_is_alive(n) && c.occupied_slots(n) < occ {
+                    return Err(format!(
+                        "node {n} ({} slots) beats target {target} ({occ})",
+                        c.occupied_slots(n)
+                    ));
+                }
+            }
+            let failed = c.failed_ranks();
+            if failed.len() != rpn as usize {
+                return Err(format!("expected {rpn} failed, got {}", failed.len()));
+            }
+            for r in failed {
+                c.respawn_rank(r, target);
+            }
+            // non-shrinking: world membership fully restored
+            if c.alive_ranks().len() != ranks as usize {
+                return Err("world not restored to full size".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Every rank is re-spawned at most once per failure, and each incarnation
+/// gets a fresh process id.
+#[test]
+fn prop_respawn_bumps_incarnation_monotonically() {
+    check(
+        "incarnation-monotone",
+        0xBEEF,
+        40,
+        |rng: &mut Rng| {
+            let ranks = 4 + rng.gen_range(60) as u32;
+            let kills = 1 + rng.gen_range(5) as usize;
+            let seq: Vec<u32> = (0..kills)
+                .map(|_| rng.gen_range(ranks as u64) as u32)
+                .collect();
+            (ranks, seq)
+        },
+        |&(ranks, ref seq)| {
+            let sim = Sim::new();
+            let topo = Topology::new(ranks, 8, 0);
+            let c = Cluster::new(&sim, topo, "prop");
+            for (i, &victim) in seq.iter().enumerate() {
+                if !c.rank_is_alive(victim) {
+                    continue; // already dead: the RTE would skip it too
+                }
+                let before = c.rank_slot(victim);
+                c.kill_rank(victim);
+                let proc = c.respawn_rank(victim, before.node);
+                let after = c.rank_slot(victim);
+                if after.incarnation != before.incarnation + 1 {
+                    return Err(format!("kill {i}: incarnation not bumped"));
+                }
+                if proc == before.proc {
+                    return Err(format!("kill {i}: proc id reused"));
+                }
+                if !c.rank_is_alive(victim) {
+                    return Err(format!("kill {i}: respawn not alive"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn base_cfg(recovery: RecoveryKind) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.app = AppKind::Hpccg;
+    c.recovery = recovery;
+    c.failure = FailureKind::Process;
+    c.ranks = 8;
+    c.ranks_per_node = 4;
+    c.spare_nodes = 1;
+    c.iters = 6;
+    c.fidelity = Fidelity::Modeled;
+    c.hpccg_nx = 4;
+    c
+}
+
+/// Across random seeds (= random fault iteration/victim draws), every
+/// recovery approach completes and reproduces the fault-free digests.
+#[test]
+fn prop_equivalence_across_random_fault_draws() {
+    for recovery in [RecoveryKind::Reinit, RecoveryKind::Cr, RecoveryKind::Ulfm] {
+        check(
+            "fault-draw-equivalence",
+            0xC0FFEE ^ recovery as u64,
+            6,
+            |rng: &mut Rng| rng.next_u64(),
+            |&seed| {
+                let mut cfg = base_cfg(recovery);
+                cfg.seed = seed;
+                let mut free_cfg = cfg.clone();
+                free_cfg.failure = FailureKind::None;
+                let free = run_trial(&free_cfg, 0, None);
+                let faulty = run_trial(&cfg, 0, None);
+                if !faulty.completed {
+                    return Err(format!("{recovery}: hung on fault {:?}", faulty.fault));
+                }
+                if faulty.digests != free.digests {
+                    return Err(format!(
+                        "{recovery}: digests differ for fault {:?}",
+                        faulty.fault
+                    ));
+                }
+                if faulty.breakdown.mpi_recovery_s <= 0.0 {
+                    return Err("no recovery time recorded".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// The victim's buddy checkpoint is never read from a failed pair: with
+/// memory checkpointing, recovery succeeds iff the buddy survived — which a
+/// single process failure guarantees (paper Table 2's premise).
+#[test]
+fn prop_single_process_failure_always_recoverable_from_memory() {
+    check(
+        "buddy-survives-single-failure",
+        0xDADA,
+        8,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut cfg = base_cfg(RecoveryKind::Reinit);
+            cfg.seed = seed;
+            cfg.ckpt = Some(reinitpp::config::CkptKind::Memory);
+            let r = run_trial(&cfg, 0, None);
+            if !r.completed {
+                return Err(format!("hung on {:?}", r.fault));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Virtual-time determinism of whole trials: same config + seed => same
+/// event count, same final time, same digests (the DES guarantee the whole
+/// measurement methodology rests on).
+#[test]
+fn prop_trials_are_replayable() {
+    check(
+        "trial-replay",
+        0x5EED,
+        5,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut cfg = base_cfg(RecoveryKind::Ulfm);
+            cfg.seed = seed;
+            let a = run_trial(&cfg, 0, None);
+            let b = run_trial(&cfg, 0, None);
+            if a.sim_events != b.sim_events {
+                return Err("event counts differ".into());
+            }
+            if a.breakdown.total_s != b.breakdown.total_s {
+                return Err("total times differ".into());
+            }
+            if a.digests != b.digests {
+                return Err("digests differ".into());
+            }
+            Ok(())
+        },
+    );
+}

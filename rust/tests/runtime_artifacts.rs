@@ -1,0 +1,178 @@
+//! Integration: AOT artifacts (python/compile/aot.py -> HLO text) load,
+//! compile and execute through the PJRT CPU client, and their numerics match
+//! the pure-Rust native oracle — closing the Python -> HLO -> Rust triangle.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use reinitpp::apps::native;
+use reinitpp::runtime::{ArrayF32, XlaRuntime};
+use reinitpp::sim::rng::Rng;
+
+fn runtime() -> XlaRuntime {
+    XlaRuntime::load("artifacts").expect("run `make artifacts` first")
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+fn rand_array(shape: &[usize], lo: f32, hi: f32, seed: u64) -> ArrayF32 {
+    let mut rng = Rng::new(seed);
+    let n: usize = shape.iter().product();
+    ArrayF32::new(
+        shape.to_vec(),
+        (0..n).map(|_| rng.gen_f32_range(lo, hi)).collect(),
+    )
+}
+
+#[test]
+fn manifest_lists_all_kernels() {
+    let rt = runtime();
+    for name in [
+        "comd_step_n64",
+        "comd_step_n128",
+        "hpccg_matvec_8",
+        "hpccg_matvec_16",
+        "hpccg_update_16",
+        "hpccg_direction_16",
+        "lulesh_step_8",
+        "lulesh_step_16",
+    ] {
+        assert!(rt.has_artifact(name), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn hpccg_matvec_matches_native() {
+    let rt = runtime();
+    let nx = 8usize;
+    let ph = rand_array(&[nx + 2, nx + 2, nx + 2], -1.0, 1.0, 7);
+    let (outs, wall) = rt.execute("hpccg_matvec_8", &[ph.clone()]).unwrap();
+    assert!(wall.as_nanos() > 0);
+    let (ap_n, pap_n) = native::hpccg_matvec(&ph.data, nx);
+    assert!(max_abs_diff(&outs[0].data, &ap_n) < 1e-4);
+    let rel = (outs[1].as_scalar() - pap_n).abs() / pap_n.abs().max(1.0);
+    assert!(rel < 1e-4, "pAp {} vs {}", outs[1].as_scalar(), pap_n);
+}
+
+#[test]
+fn hpccg_update_and_direction_match_native() {
+    let rt = runtime();
+    let nx = 16usize;
+    let shape = [nx, nx, nx];
+    let x = rand_array(&shape, -1.0, 1.0, 1);
+    let r = rand_array(&shape, -1.0, 1.0, 2);
+    let p = rand_array(&shape, -1.0, 1.0, 3);
+    let ap = rand_array(&shape, -1.0, 1.0, 4);
+    let alpha = ArrayF32::scalar(0.37);
+    let (outs, _) = rt
+        .execute(
+            "hpccg_update_16",
+            &[x.clone(), r.clone(), p.clone(), ap.clone(), alpha],
+        )
+        .unwrap();
+    let (x2, r2, rr) = native::hpccg_update(&x.data, &r.data, &p.data, &ap.data, 0.37);
+    assert!(max_abs_diff(&outs[0].data, &x2) < 1e-5);
+    assert!(max_abs_diff(&outs[1].data, &r2) < 1e-5);
+    assert!((outs[2].as_scalar() - rr).abs() / rr.max(1.0) < 1e-4);
+
+    let beta = ArrayF32::scalar(0.81);
+    let (outs, _) = rt
+        .execute("hpccg_direction_16", &[r.clone(), p.clone(), beta])
+        .unwrap();
+    let p2 = native::hpccg_direction(&r.data, &p.data, 0.81);
+    assert!(max_abs_diff(&outs[0].data, &p2) < 1e-5);
+}
+
+#[test]
+fn lulesh_step_matches_native() {
+    let rt = runtime();
+    let nx = 8usize;
+    let e = rand_array(&[nx, nx, nx], 0.5, 2.0, 5);
+    let uh = rand_array(&[nx + 2, nx + 2, nx + 2], -0.1, 0.1, 6);
+    let dt = ArrayF32::scalar(1e-3);
+    let (outs, _) = rt
+        .execute("lulesh_step_8", &[e.clone(), uh.clone(), dt])
+        .unwrap();
+    let (e2, u2, dtmin) = native::lulesh_step(&e.data, &uh.data, nx, 1e-3);
+    assert!(max_abs_diff(&outs[0].data, &e2) < 1e-5);
+    assert!(max_abs_diff(&outs[1].data, &u2) < 1e-5);
+    assert!((outs[2].as_scalar() - dtmin).abs() < 1e-5);
+}
+
+#[test]
+fn comd_step_matches_native() {
+    let rt = runtime();
+    let n = 64usize;
+    // physical lattice config (overlapping random positions blow up LJ)
+    let state = reinitpp::apps::ComdApp { n: 64, seed: 9 }; // noqa: factory
+    let _ = state;
+    let mut rng = Rng::new(9);
+    let side = 4usize;
+    let spacing = 1.25f32;
+    let boxl = side as f32 * spacing;
+    let mut pos = Vec::with_capacity(n * 3);
+    for x in 0..side {
+        for y in 0..side {
+            for z in 0..side {
+                for c in [x, y, z] {
+                    pos.push(c as f32 * spacing + 0.6 + rng.gen_f32_range(-0.03, 0.03));
+                }
+            }
+        }
+    }
+    let vel: Vec<f32> = (0..n * 3).map(|_| rng.gen_f32_range(-0.05, 0.05)).collect();
+    let (frc0, _) = native::lj_forces(&pos, n, boxl);
+    let inputs = [
+        ArrayF32::new(vec![n, 3], pos.clone()),
+        ArrayF32::new(vec![n, 3], vel.clone()),
+        ArrayF32::new(vec![n, 3], frc0.clone()),
+        ArrayF32::scalar(2e-3),
+        ArrayF32::scalar(boxl),
+    ];
+    let (outs, _) = rt.execute("comd_step_n64", &inputs).unwrap();
+    let (p2, v2, f2, ke, pe) = native::comd_step(&pos, &vel, &frc0, n, 2e-3, boxl);
+    assert!(max_abs_diff(&outs[0].data, &p2) < 1e-4);
+    assert!(max_abs_diff(&outs[1].data, &v2) < 2e-3); // force accumulation order
+    assert!(max_abs_diff(&outs[2].data, &f2) < 0.5 * f2.iter().fold(1.0f32, |a, &b| a.max(b.abs())) * 1e-3 + 1e-2);
+    assert!((outs[3].as_scalar() - ke).abs() / ke.max(1.0) < 1e-3);
+    assert!((outs[4].as_scalar() - pe).abs() / pe.abs().max(1.0) < 1e-3);
+}
+
+#[test]
+fn executable_is_cached_and_reusable() {
+    let rt = runtime();
+    let nx = 8usize;
+    let ph = rand_array(&[nx + 2, nx + 2, nx + 2], -1.0, 1.0, 11);
+    let (a, first) = rt.execute("hpccg_matvec_8", &[ph.clone()]).unwrap();
+    let (b, _second) = rt.execute("hpccg_matvec_8", &[ph]).unwrap();
+    // deterministic across calls (same compiled executable)
+    assert_eq!(a[0].data, b[0].data);
+    assert!(first.as_nanos() > 0);
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let rt = runtime();
+    let bad = ArrayF32::zeros(&[4, 4, 4]);
+    assert!(rt.execute("hpccg_matvec_8", &[bad]).is_err());
+    assert!(rt.execute("no_such_kernel", &[]).is_err());
+}
+
+#[test]
+fn xla_is_bitwise_deterministic() {
+    // the equivalence experiments rely on recomputation being exact
+    let rt = runtime();
+    let nx = 16usize;
+    let ph = rand_array(&[nx + 2, nx + 2, nx + 2], -1.0, 1.0, 13);
+    let (a, _) = rt.execute("hpccg_matvec_16", &[ph.clone()]).unwrap();
+    let (b, _) = rt.execute("hpccg_matvec_16", &[ph]).unwrap();
+    assert_eq!(
+        a[0].data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        b[0].data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+    assert_eq!(a[1].as_scalar().to_bits(), b[1].as_scalar().to_bits());
+}

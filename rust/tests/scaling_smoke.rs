@@ -1,0 +1,86 @@
+//! Integration: the paper-scale configurations run to completion in
+//! reasonable wall time — fast fidelity at 256+ ranks (ghost ranks replay
+//! live-measured compute costs), modeled fidelity at 1024.
+
+use reinitpp::config::{AppKind, ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
+use reinitpp::recovery::job::run_trial;
+
+fn cfg(ranks: u32) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.app = AppKind::Hpccg;
+    c.recovery = RecoveryKind::Reinit;
+    c.failure = FailureKind::Process;
+    c.ranks = ranks;
+    c.ranks_per_node = 16;
+    c.spare_nodes = 1;
+    c.iters = 8;
+    c.fidelity = Fidelity::Modeled;
+    c.hpccg_nx = 8;
+    c.seed = 77;
+    c
+}
+
+#[test]
+fn modeled_256_ranks_process_failure() {
+    let r = run_trial(&cfg(256), 0, None);
+    assert!(r.completed, "fault {:?}", r.fault);
+    assert!(r.breakdown.mpi_recovery_s > 0.1);
+}
+
+#[test]
+fn modeled_1024_ranks_process_failure() {
+    let r = run_trial(&cfg(1024), 0, None);
+    assert!(r.completed, "fault {:?}", r.fault);
+    // Fig. 6's headline: recovery stays ~constant as ranks grow
+    let small = run_trial(&cfg(64), 0, None);
+    let ratio = r.breakdown.mpi_recovery_s / small.breakdown.mpi_recovery_s;
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "Reinit++ recovery must scale ~flat: 64 ranks {} vs 1024 ranks {}",
+        small.breakdown.mpi_recovery_s,
+        r.breakdown.mpi_recovery_s
+    );
+}
+
+#[test]
+fn modeled_node_failure_at_scale() {
+    let mut c = cfg(256);
+    c.failure = FailureKind::Node;
+    let r = run_trial(&c, 0, None);
+    assert!(r.completed, "fault {:?}", r.fault);
+    assert!(r.breakdown.mpi_recovery_s > 1.0);
+}
+
+#[test]
+fn ulfm_recovery_grows_with_scale() {
+    // Fig. 6's other headline: ULFM degrades as ranks grow
+    let mut small = cfg(16);
+    small.recovery = RecoveryKind::Ulfm;
+    let mut big = cfg(512);
+    big.recovery = RecoveryKind::Ulfm;
+    let ts = run_trial(&small, 0, None);
+    let tb = run_trial(&big, 0, None);
+    assert!(ts.completed && tb.completed);
+    assert!(
+        tb.breakdown.mpi_recovery_s > 1.5 * ts.breakdown.mpi_recovery_s,
+        "ULFM at 512 ranks ({}) must exceed 16 ranks ({})",
+        tb.breakdown.mpi_recovery_s,
+        ts.breakdown.mpi_recovery_s
+    );
+}
+
+#[test]
+fn cr_flat_and_slowest_at_scale() {
+    let mut c = cfg(512);
+    c.recovery = RecoveryKind::Cr;
+    let cr = run_trial(&c, 0, None);
+    let reinit = run_trial(&cfg(512), 0, None);
+    assert!(cr.completed && reinit.completed);
+    let ratio = cr.breakdown.mpi_recovery_s / reinit.breakdown.mpi_recovery_s;
+    assert!(
+        ratio > 4.0,
+        "paper: CR up to ~6x slower than Reinit++; got {ratio:.1}x ({} vs {})",
+        cr.breakdown.mpi_recovery_s,
+        reinit.breakdown.mpi_recovery_s
+    );
+}
