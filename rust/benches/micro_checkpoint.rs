@@ -40,6 +40,7 @@ fn bench(scheme: CkptKind, ranks: u32, bytes: usize) -> (f64, f64) {
 
 fn main() {
     let bytes = 400 * 1024; // ~HPCCG 32^3 x 3 vectors
+    let mut report = reinitpp::metrics::BenchReport::new("micro_checkpoint");
     println!("| scheme | ranks | worst virtual write (ms) | host (ms) |");
     println!("|---|---|---|---|");
     for scheme in [CkptKind::Memory, CkptKind::File] {
@@ -50,8 +51,21 @@ fn main() {
                 virt * 1e3,
                 host * 1e3
             );
+            report.push(
+                reinitpp::metrics::BenchRow::new(
+                    &format!("save_{scheme}_{ranks}ranks"),
+                    ranks as u64,
+                    host,
+                    "rank-saves/s",
+                )
+                .with_extra("worst_virtual_write_ms", virt * 1e3),
+            );
         }
     }
     println!("\n(file scales ~linearly with ranks once aggregate-BW bound;");
     println!(" memory stays flat — the paper's Fig. 4 CR-vs-rest gap)");
+    report.write_json(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_micro_checkpoint.json"
+    ));
 }

@@ -40,12 +40,29 @@ fn bench_allreduce(ranks: u32, reps: u32) -> (f64, f64, u64) {
 }
 
 fn main() {
+    let mut report = reinitpp::metrics::BenchReport::new("micro_collectives");
     println!("| ranks | allreduce virtual latency (µs) | host cost/op (ms) | total events |");
     println!("|---|---|---|---|");
     for ranks in [16u32, 64, 256, 1024] {
         let reps = 20;
         let (virt_us, host_ms, events) = bench_allreduce(ranks, reps);
         println!("| {ranks} | {virt_us:.1} | {host_ms:.2} | {events} |");
+        // rate = simulator events processed per host second
+        let host_s = host_ms * 1e-3 * reps as f64;
+        report.push(
+            reinitpp::metrics::BenchRow::new(
+                &format!("allreduce_{ranks}ranks"),
+                events,
+                host_s,
+                "events/s",
+            )
+            .with_extra("virtual_latency_us", virt_us)
+            .with_extra("host_ms_per_op", host_ms),
+        );
     }
     println!("\n(virtual latency should grow ~log2(ranks): tree allreduce)");
+    report.write_json(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_micro_collectives.json"
+    ));
 }

@@ -1,12 +1,55 @@
 //! Micro-bench: raw throughput of the virtual-time DES executor — the L3
 //! hot path every experiment rides on. Reports host events/second for
-//! timer storms, task churn, and channel messaging.
+//! timer storms, task churn, and channel messaging, plus heap allocations
+//! observed during each run (the engine hot path is allocation-lean: slab
+//! tasks, cached wakers, swap-drained wake ring — see EXPERIMENTS.md §Perf).
+//!
+//! Emits `BENCH_micro_sim_engine.json` at the repository root so CI and
+//! later PRs can track the perf trajectory.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use reinitpp::metrics::{BenchReport, BenchRow};
 use reinitpp::sim::{channel, Sim, SimDuration};
 
-fn bench_timer_storm(tasks: u64, sleeps: u64) -> (f64, u64) {
+/// Counts every heap allocation so the report can include an "allocations
+/// per unit of work" figure (the measurable part of the zero-alloc claims).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Seed-engine reference rates for the same workloads (the pre-rewrite
+/// HashMap + per-poll-Arc + mutexed-wake-queue executor), used to report the
+/// speedup trajectory in the JSON. ESTIMATED from the seed engine's
+/// per-event operation costs, pending recalibration with a real seed-engine
+/// run on the CI reference machine — compare ratios across runs of the SAME
+/// machine, not absolutes.
+const SEED_TIMER_STORM_RATE: f64 = 5.1e6; // events+polls/s
+const SEED_PINGPONG_RATE: f64 = 2.05e6; // msgs/s
+const SEED_CHURN_RATE: f64 = 2.84e4; // procs/s (kill scanned all live tasks)
+
+/// (host seconds, work units, allocations during the run)
+fn bench_timer_storm(tasks: u64, sleeps: u64) -> (f64, u64, u64) {
     let sim = Sim::new();
     let p = sim.spawn_process("bench");
     for i in 0..tasks {
@@ -17,12 +60,17 @@ fn bench_timer_storm(tasks: u64, sleeps: u64) -> (f64, u64) {
             }
         });
     }
+    let a0 = alloc_count();
     let t0 = Instant::now();
     let summary = sim.run();
-    (t0.elapsed().as_secs_f64(), summary.events + summary.polls)
+    (
+        t0.elapsed().as_secs_f64(),
+        summary.events + summary.polls,
+        alloc_count() - a0,
+    )
 }
 
-fn bench_channel_pingpong(pairs: u64, msgs: u64) -> (f64, u64) {
+fn bench_channel_pingpong(pairs: u64, msgs: u64) -> (f64, u64, u64) {
     let sim = Sim::new();
     let mut count = 0u64;
     for i in 0..pairs {
@@ -43,12 +91,13 @@ fn bench_channel_pingpong(pairs: u64, msgs: u64) -> (f64, u64) {
         });
         count += msgs * 2;
     }
+    let a0 = alloc_count();
     let t0 = Instant::now();
     sim.run();
-    (t0.elapsed().as_secs_f64(), count)
+    (t0.elapsed().as_secs_f64(), count, alloc_count() - a0)
 }
 
-fn bench_process_churn(n: u64) -> (f64, u64) {
+fn bench_process_churn(n: u64) -> (f64, u64, u64) {
     let sim = Sim::new();
     for i in 0..n {
         let p = sim.spawn_process(format!("c{i}"));
@@ -59,30 +108,59 @@ fn bench_process_churn(n: u64) -> (f64, u64) {
         let s3 = sim.clone();
         sim.schedule(SimDuration::from_nanos(500), move || s3.kill(p));
     }
+    let a0 = alloc_count();
     let t0 = Instant::now();
     let summary = sim.run();
-    (t0.elapsed().as_secs_f64(), summary.events)
+    (
+        t0.elapsed().as_secs_f64(),
+        summary.events,
+        alloc_count() - a0,
+    )
 }
 
 fn main() {
-    println!("| micro-bench | work | host time (s) | rate |");
-    println!("|---|---|---|---|");
+    let mut report = BenchReport::new("micro_sim_engine");
+    println!("| micro-bench | work | host time (s) | rate | allocs |");
+    println!("|---|---|---|---|---|");
 
-    let (dt, events) = bench_timer_storm(1_000, 200);
+    let (dt, events, allocs) = bench_timer_storm(1_000, 200);
     println!(
-        "| timer storm | {events} events+polls | {dt:.3} | {:.2} M/s |",
+        "| timer storm | {events} events+polls | {dt:.3} | {:.2} M/s | {allocs} |",
         events as f64 / dt / 1e6
     );
+    report.push(
+        BenchRow::new("timer_storm", events, dt, "events+polls/s")
+            .with_extra("allocations", allocs as f64)
+            .with_extra("baseline_rate_per_sec", SEED_TIMER_STORM_RATE)
+            .with_extra("speedup_vs_seed", events as f64 / dt / SEED_TIMER_STORM_RATE),
+    );
 
-    let (dt, msgs) = bench_channel_pingpong(500, 200);
+    let (dt, msgs, allocs) = bench_channel_pingpong(500, 200);
     println!(
-        "| channel ping-pong | {msgs} msgs | {dt:.3} | {:.2} M msg/s |",
+        "| channel ping-pong | {msgs} msgs | {dt:.3} | {:.2} M msg/s | {allocs} |",
         msgs as f64 / dt / 1e6
     );
+    report.push(
+        BenchRow::new("channel_pingpong", msgs, dt, "msgs/s")
+            .with_extra("allocations", allocs as f64)
+            .with_extra("baseline_rate_per_sec", SEED_PINGPONG_RATE)
+            .with_extra("speedup_vs_seed", msgs as f64 / dt / SEED_PINGPONG_RATE),
+    );
 
-    let (dt, _events) = bench_process_churn(20_000);
+    let (dt, _events, allocs) = bench_process_churn(20_000);
     println!(
-        "| process spawn+kill | 20000 procs | {dt:.3} | {:.0} k proc/s |",
+        "| process spawn+kill | 20000 procs | {dt:.3} | {:.0} k proc/s | {allocs} |",
         20_000.0 / dt / 1e3
     );
+    report.push(
+        BenchRow::new("process_churn", 20_000, dt, "procs/s")
+            .with_extra("allocations", allocs as f64)
+            .with_extra("baseline_rate_per_sec", SEED_CHURN_RATE)
+            .with_extra("speedup_vs_seed", 20_000.0 / dt / SEED_CHURN_RATE),
+    );
+
+    report.write_json(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_micro_sim_engine.json"
+    ));
 }

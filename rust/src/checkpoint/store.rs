@@ -38,12 +38,25 @@ struct Slot {
 }
 
 impl Slot {
+    /// Straight-line two-slot insert (entries stay ascending by iteration):
+    /// overwrite a matching iteration, fill an empty slot, or displace the
+    /// older entry — anything older than both retained checkpoints is
+    /// dropped. No retain/sort/remove churn for a 2-entry buffer.
     fn put(&mut self, iter: u32, data: Rc<Vec<u8>>) {
-        self.entries.retain(|(i, _)| *i != iter);
-        self.entries.push((iter, data));
-        self.entries.sort_by_key(|(i, _)| *i);
-        while self.entries.len() > 2 {
-            self.entries.remove(0);
+        if let Some(e) = self.entries.iter_mut().find(|(i, _)| *i == iter) {
+            e.1 = data;
+            return;
+        }
+        if self.entries.len() < 2 {
+            self.entries.push((iter, data));
+        } else if iter > self.entries[0].0 {
+            // newer than the oldest retained entry: displace it
+            self.entries[0] = (iter, data);
+        } else {
+            return; // older than both retained checkpoints
+        }
+        if self.entries.len() == 2 && self.entries[0].0 > self.entries[1].0 {
+            self.entries.swap(0, 1);
         }
     }
 
@@ -69,6 +82,7 @@ struct Inner {
 }
 
 /// Shared checkpoint store for one experiment trial.
+#[derive(Clone)]
 pub struct CkptStore {
     sim: Sim,
     scheme: CkptKind,
@@ -77,20 +91,6 @@ pub struct CkptStore {
     mem_bytes_per_sec: f64,
     topo: Topology,
     inner: Rc<RefCell<Inner>>,
-}
-
-impl Clone for CkptStore {
-    fn clone(&self) -> Self {
-        CkptStore {
-            sim: self.sim.clone(),
-            scheme: self.scheme,
-            disk: self.disk.clone(),
-            net: self.net.clone(),
-            mem_bytes_per_sec: self.mem_bytes_per_sec,
-            topo: self.topo,
-            inner: Rc::clone(&self.inner),
-        }
-    }
 }
 
 impl CkptStore {
@@ -169,20 +169,22 @@ impl CkptStore {
     }
 
     /// Load rank `rank`'s checkpoint of `iter`; awaits the retrieval cost.
-    /// Returns None if lost (e.g. buddy died too).
-    pub async fn load(&self, rank: u32, node: u32, iter: u32) -> Option<Vec<u8>> {
+    /// Returns None if lost (e.g. buddy died too). The payload is shared
+    /// (`Rc`): the *virtual* copy cost is charged above, so the *host* pays
+    /// no deep copy per load (see EXPERIMENTS.md §Perf).
+    pub async fn load(&self, rank: u32, node: u32, iter: u32) -> Option<Rc<Vec<u8>>> {
         match self.scheme {
             CkptKind::File => {
                 let data = self.inner.borrow().file.get(&rank)?.get(iter)?;
                 self.disk.read(data.len() as u64).await;
-                Some(data.as_ref().clone())
+                Some(data)
             }
             CkptKind::Memory => {
                 // Prefer the local copy; fall back to the buddy's.
                 let local = self.inner.borrow().local.get(&rank).and_then(|s| s.get(iter));
                 if let Some(d) = local {
                     self.sim.sleep(self.memcpy_cost(d.len())).await;
-                    return Some(d.as_ref().clone());
+                    return Some(d);
                 }
                 let buddy = self.inner.borrow().buddy.get(&rank).and_then(|s| s.get(iter));
                 let d = buddy?;
@@ -190,7 +192,7 @@ impl CkptStore {
                 self.sim
                     .sleep(self.net.data_delay(d.len(), bnode == node))
                     .await;
-                Some(d.as_ref().clone())
+                Some(d)
             }
         }
     }
@@ -240,7 +242,9 @@ mod tests {
         let out = Rc::new(RefCell::new(None));
         let o2 = Rc::clone(&out);
         sim.spawn(p, async move {
-            *o2.borrow_mut() = Some(s2.load(rank, 0, iter).await);
+            // unwrap the shared payload so assertions compare plain bytes
+            let loaded = s2.load(rank, 0, iter).await.map(|d| d.as_ref().clone());
+            *o2.borrow_mut() = Some(loaded);
         });
         sim.run();
         Rc::try_unwrap(out).ok().unwrap().into_inner().unwrap()

@@ -1,0 +1,159 @@
+//! Machine-readable micro-bench reports.
+//!
+//! Each `benches/micro_*.rs` driver emits a `BENCH_<name>.json` next to the
+//! repository root so the perf trajectory of the DES engine is tracked
+//! across PRs (CI uploads the file as an artifact; EXPERIMENTS.md §Perf
+//! records the table). The format is deliberately flat — `bench`, `schema`,
+//! and a list of `{name, work, host_seconds, rate_per_sec, unit}` rows plus
+//! optional free-form numeric extras — and the writer is dependency-free.
+
+use std::io::Write as _;
+use std::path::Path;
+
+/// One measured row of a micro-bench report.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    /// Sub-benchmark name, e.g. `timer_storm`.
+    pub name: String,
+    /// Units of work performed (events, messages, processes, ...).
+    pub work: u64,
+    /// Host wall-clock seconds for the run.
+    pub host_seconds: f64,
+    /// `work / host_seconds`.
+    pub rate_per_sec: f64,
+    /// What the rate counts, e.g. `events+polls/s`.
+    pub unit: String,
+    /// Extra numeric facts (e.g. heap allocations observed).
+    pub extra: Vec<(String, f64)>,
+}
+
+impl BenchRow {
+    pub fn new(name: &str, work: u64, host_seconds: f64, unit: &str) -> Self {
+        BenchRow {
+            name: name.to_string(),
+            work,
+            host_seconds,
+            rate_per_sec: if host_seconds > 0.0 {
+                work as f64 / host_seconds
+            } else {
+                0.0
+            },
+            unit: unit.to_string(),
+            extra: Vec::new(),
+        }
+    }
+
+    pub fn with_extra(mut self, key: &str, value: f64) -> Self {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+}
+
+/// A full report: `write_json` renders it without any serde dependency.
+#[derive(Clone, Debug, Default)]
+pub struct BenchReport {
+    pub bench: String,
+    pub rows: Vec<BenchRow>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> Self {
+        BenchReport {
+            bench: bench.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: BenchRow) {
+        self.rows.push(row);
+    }
+
+    /// Render the report as pretty-printed JSON. Only numbers and
+    /// identifier-ish strings ever enter a report, but strings are escaped
+    /// anyway so the output is always valid JSON.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": {},\n", json_str(&self.bench)));
+        s.push_str("  \"schema\": 1,\n");
+        s.push_str("  \"results\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str("    {");
+            s.push_str(&format!("\"name\": {}, ", json_str(&r.name)));
+            s.push_str(&format!("\"work\": {}, ", r.work));
+            s.push_str(&format!("\"host_seconds\": {}, ", json_num(r.host_seconds)));
+            s.push_str(&format!("\"rate_per_sec\": {}, ", json_num(r.rate_per_sec)));
+            s.push_str(&format!("\"unit\": {}", json_str(&r.unit)));
+            for (k, v) in &r.extra {
+                s.push_str(&format!(", {}: {}", json_str(k), json_num(*v)));
+            }
+            s.push('}');
+            s.push_str(if i + 1 == self.rows.len() { "\n" } else { ",\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the JSON report to `path` (best effort: a read-only checkout
+    /// must not kill a perf run, so failures are reported, not fatal).
+    pub fn write_json(&self, path: impl AsRef<Path>) {
+        let path = path.as_ref();
+        let write = || -> std::io::Result<()> {
+            let mut f = std::fs::File::create(path)?;
+            f.write_all(self.to_json().as_bytes())
+        };
+        match write() {
+            Ok(()) => eprintln!("wrote {}", path.display()),
+            Err(e) => eprintln!("WARN: could not write {}: {e}", path.display()),
+        }
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON has no NaN/Inf; clamp to null-free sentinels.
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "0".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_valid_flat_json() {
+        let mut rep = BenchReport::new("micro_example");
+        rep.push(BenchRow::new("storm", 1000, 0.5, "events/s").with_extra("allocs", 42.0));
+        let j = rep.to_json();
+        assert!(j.contains("\"bench\": \"micro_example\""));
+        assert!(j.contains("\"rate_per_sec\": 2000"));
+        assert!(j.contains("\"allocs\": 42"));
+        // crude balance check: every brace/bracket closes
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn strings_are_escaped() {
+        assert_eq!(json_str("a\"b"), "\"a\\\"b\"");
+        assert_eq!(json_num(f64::NAN), "0");
+    }
+}

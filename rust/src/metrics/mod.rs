@@ -1,8 +1,10 @@
 //! Measurement: the paper's per-run time breakdown and its statistics
 //! (mean + 95% confidence intervals from the t-distribution, 10 trials).
 
+mod bench;
 mod stats;
 
+pub use bench::{BenchReport, BenchRow};
 pub use stats::{mean_ci95, Summary};
 
 use std::cell::RefCell;

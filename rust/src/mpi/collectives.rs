@@ -10,23 +10,26 @@
 //! counter; ranks call collectives in program order, so blocks agree without
 //! negotiation (MPI's context-id rule).
 
+use std::rc::Rc;
+
 use super::comm::{Comm, RecvSrc};
-use super::{bytes_to_f32s, f32s_to_bytes, MpiError, Rank, ReduceOp};
+use super::{bytes_to_f32s, f32s_to_bytes, MpiError, Payload, Rank, ReduceOp};
 
 impl Comm {
     /// Binomial-tree broadcast of `data` from `root`. Returns the payload on
-    /// every rank.
-    pub async fn bcast(&self, root: Rank, data: Vec<u8>) -> Result<Vec<u8>, MpiError> {
+    /// every rank (shared: one buffer travels the whole tree — fan-out
+    /// clones the `Rc`, never the bytes).
+    pub async fn bcast(&self, root: Rank, data: Vec<u8>) -> Result<Payload, MpiError> {
         let tag = self.next_coll_tag();
-        self.bcast_tagged(root, data, tag).await
+        self.bcast_tagged(root, data.into(), tag).await
     }
 
     async fn bcast_tagged(
         &self,
         root: Rank,
-        data: Vec<u8>,
+        data: Payload,
         tag: u64,
-    ) -> Result<Vec<u8>, MpiError> {
+    ) -> Result<Payload, MpiError> {
         let size = self.size;
         if size <= 1 {
             return Ok(data);
@@ -52,7 +55,7 @@ impl Comm {
         mask >>= 1;
         while mask > 0 {
             if vr & mask == 0 && vr + mask < size {
-                self.send(unvr(vr + mask), tag, &buf);
+                self.send_payload(unvr(vr + mask), tag, Rc::clone(&buf));
             }
             mask >>= 1;
         }
@@ -103,7 +106,7 @@ impl Comm {
                 }
             } else {
                 let parent = unvr(vr & !mask);
-                self.send(parent, tag, &f32s_to_bytes(&acc));
+                self.send_payload(parent, tag, f32s_to_bytes(&acc).into());
                 break;
             }
             mask <<= 1;
@@ -118,7 +121,7 @@ impl Comm {
         let btag = self.next_coll_tag();
         let partial = self.reduce_tagged(0, data, op, rtag).await?;
         let out = self
-            .bcast_tagged(0, f32s_to_bytes(&partial), btag)
+            .bcast_tagged(0, f32s_to_bytes(&partial).into(), btag)
             .await?;
         Ok(bytes_to_f32s(&out))
     }
@@ -186,7 +189,7 @@ mod tests {
                 let data = if r == 0 { vec![42u8, 1] } else { vec![] };
                 c.bcast(0, data).await.unwrap()
             });
-            assert!(out.iter().all(|d| d == &vec![42u8, 1]), "n={n}");
+            assert!(out.iter().all(|d| d.as_ref() == &[42u8, 1][..]), "n={n}");
         }
     }
 
@@ -196,7 +199,7 @@ mod tests {
             let data = if r == 5 { vec![9u8] } else { vec![] };
             c.bcast(5, data).await.unwrap()
         });
-        assert!(out.iter().all(|d| d == &vec![9u8]));
+        assert!(out.iter().all(|d| d.as_ref() == &[9u8][..]));
     }
 
     #[test]

@@ -3,8 +3,9 @@
 
 use std::cell::{Cell, RefCell};
 use std::collections::{HashSet, VecDeque};
+use std::rc::Rc;
 
-use super::{tags, FtMode, MpiError, MpiJob, Msg, Rank};
+use super::{tags, FtMode, MpiError, MpiJob, Msg, Payload, Rank};
 use crate::sim::Receiver;
 
 /// Source selector for a receive.
@@ -90,15 +91,22 @@ impl Comm {
         tags::COLLECTIVE_BASE + (s << 8)
     }
 
-    /// Fire-and-forget send (MPI_Send with buffering semantics).
+    /// Fire-and-forget send (MPI_Send with buffering semantics). Copies
+    /// `data` once into a shared payload.
     pub fn send(&self, to: Rank, tag: u64, data: &[u8]) {
+        self.send_payload(to, tag, Rc::from(data));
+    }
+
+    /// Zero-copy send of an already-shared payload: collective fan-out
+    /// forwards one buffer to several children without copying per hop.
+    pub fn send_payload(&self, to: Rank, tag: u64, data: Payload) {
         debug_assert!(tag < tags::CTRL_REVOKE);
+        let bytes = data.len().max(1); // headers: empty msgs still cost latency
         let msg = Msg {
             src: self.rank,
             tag,
-            data: data.to_vec(),
+            data,
         };
-        let bytes = data.len().max(1); // headers: empty msgs still cost latency
         self.job
             .inner
             .fabric
@@ -225,12 +233,6 @@ impl Comm {
         self.recv(RecvSrc::From(from), recv_tag).await
     }
 
-    /// Raw send used by the ULFM shrink/agree protocol (same path as `send`;
-    /// revocation never blocks outbound traffic, per the ULFM spec).
-    pub(crate) fn send_raw(&self, to: Rank, tag: u64, data: &[u8]) {
-        self.send(to, tag, data);
-    }
-
     /// Unchecked receive: ignores revocation and failure knowledge (the
     /// ULFM spec requires shrink/agree to progress on revoked communicators
     /// with failed members). Returns None only if the mailbox closed.
@@ -297,6 +299,7 @@ impl Comm {
     /// `Revoked` everywhere.
     pub fn revoke(&self) {
         self.revoked.set(true);
+        let empty: Payload = Rc::from(Vec::new());
         for r in 0..self.size {
             if r == self.rank {
                 continue;
@@ -304,7 +307,7 @@ impl Comm {
             let msg = Msg {
                 src: self.rank,
                 tag: tags::CTRL_REVOKE,
-                data: Vec::new(),
+                data: Rc::clone(&empty),
             };
             self.job
                 .inner
@@ -368,7 +371,7 @@ mod tests {
         sim.spawn(p1, async move {
             let c = j1.attach(1, 0);
             let m = c.recv(RecvSrc::From(0), 7).await.unwrap();
-            assert_eq!(m.data, vec![1, 2, 3]);
+            assert_eq!(&m.data[..], &[1, 2, 3][..]);
             assert_eq!(m.src, 0);
             ok2.set(true);
         });

@@ -79,12 +79,17 @@ impl std::fmt::Display for MpiError {
 
 impl std::error::Error for MpiError {}
 
+/// Shared immutable message payload. Reference-counted so collective-tree
+/// fan-out (one buffer forwarded to several children) and multi-hop relays
+/// clone a pointer instead of copying bytes per hop.
+pub type Payload = Rc<[u8]>;
+
 /// A message on the data plane.
 #[derive(Clone, Debug)]
 pub struct Msg {
     pub src: Rank,
     pub tag: u64,
-    pub data: Vec<u8>,
+    pub data: Payload,
 }
 
 pub(crate) struct JobInner {
@@ -163,6 +168,7 @@ impl MpiJob {
         let inner = Rc::clone(&self.inner);
         self.inner.sim.schedule(delay, move || {
             let generation = inner.generation.get();
+            let payload: Payload = Rc::from(failed.to_le_bytes().to_vec());
             for r in 0..inner.topo.ranks {
                 if r == failed {
                     continue;
@@ -170,7 +176,7 @@ impl MpiJob {
                 let msg = Msg {
                     src: SYSTEM_SRC,
                     tag: tags::CTRL_FAILURE,
-                    data: failed.to_le_bytes().to_vec(),
+                    data: Rc::clone(&payload),
                 };
                 inner
                     .fabric
@@ -192,7 +198,7 @@ impl MpiJob {
         let msg = Msg {
             src: SYSTEM_SRC,
             tag,
-            data,
+            data: data.into(),
         };
         self.inner
             .fabric

@@ -11,8 +11,10 @@
 //! agreed set down. With a single injected failure one round always
 //! converges; the retry loop guards the general case.
 
+use std::rc::Rc;
+
 use super::comm::{Comm, RecvSrc};
-use super::{bytes_to_f32s, f32s_to_bytes, MpiError, Rank};
+use super::{bytes_to_f32s, f32s_to_bytes, MpiError, Payload, Rank};
 
 /// Result of `shrink`: the survivor group and this rank's index in it.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -119,16 +121,17 @@ impl Comm {
                 }
             } else {
                 let parent = survivors[(vr & !mask) as usize];
-                self.send_raw(parent, tag, &encode_set(&acc));
+                self.send_payload(parent, tag, encode_set(&acc).into());
                 break;
             }
             mask <<= 1;
         }
         acc.sort_unstable();
 
-        // Broadcast the agreed set down the same tree.
+        // Broadcast the agreed set down the same tree (shared payload:
+        // relayed by Rc clone, not byte copy).
         let btag = tag + 1;
-        let mut buf = encode_set(&acc);
+        let mut buf: Payload = encode_set(&acc).into();
         let mut mask = 1u32;
         while mask < n {
             if vr & mask != 0 {
@@ -147,7 +150,7 @@ impl Comm {
         mask >>= 1;
         while mask > 0 {
             if vr & mask == 0 && vr + mask < n {
-                self.send_raw(survivors[(vr + mask) as usize], btag, &buf);
+                self.send_payload(survivors[(vr + mask) as usize], btag, Rc::clone(&buf));
             }
             mask >>= 1;
         }

@@ -5,18 +5,16 @@
 //! Interchange is HLO *text*: jax >= 0.5 serialized protos use 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The PJRT backend needs the external `xla` bindings (and their native
+//! `xla_extension` libraries), so it is gated behind the `pjrt` cargo
+//! feature. Without it the crate builds hermetically: `XlaRuntime::load`
+//! returns an error and the Modeled-fidelity paths (pure-Rust oracle) carry
+//! every experiment.
 
 mod manifest;
 
 pub use manifest::{parse_manifest, ArtifactSig};
-
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-use std::time::Instant;
-
-use anyhow::{anyhow, bail, Context, Result};
 
 /// A dense f32 tensor crossing the Rust<->XLA boundary.
 #[derive(Clone, Debug, PartialEq)]
@@ -63,142 +61,220 @@ impl ArrayF32 {
     }
 }
 
-/// PJRT CPU client + compiled-executable cache. One per OS process; shared
-/// by every simulated rank (compilation happens once per artifact).
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    sigs: HashMap<String, ArtifactSig>,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    //! Real PJRT CPU client. Compiled only with `--features pjrt`, which
+    //! additionally requires the `xla` bindings crate to be added to the
+    //! dependency set (it is not declared by default so that the hermetic
+    //! build never resolves it).
 
-impl XlaRuntime {
-    /// Load the artifact manifest from `dir` and create the PJRT CPU client.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
-        let sigs = parse_manifest(&manifest)?
-            .into_iter()
-            .map(|s| (s.name.clone(), s))
-            .collect();
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(XlaRuntime {
-            client,
-            dir,
-            sigs,
-            cache: RefCell::new(HashMap::new()),
-        })
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::rc::Rc;
+    use std::time::Instant;
+
+    use anyhow::{anyhow, bail, Context, Result};
+
+    use super::{parse_manifest, ArrayF32, ArtifactSig};
+
+    /// PJRT CPU client + compiled-executable cache. One per OS process;
+    /// shared by every simulated rank (compilation happens once per
+    /// artifact).
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        sigs: HashMap<String, ArtifactSig>,
+        cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     }
 
-    pub fn has_artifact(&self, name: &str) -> bool {
-        self.sigs.contains_key(name)
-    }
-
-    pub fn signature(&self, name: &str) -> Option<&ArtifactSig> {
-        self.sigs.get(name)
-    }
-
-    fn compiled(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(Rc::clone(e));
-        }
-        let sig = self
-            .sigs
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
-        let path = self.dir.join(&sig.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let exe = Rc::new(exe);
-        self.cache
-            .borrow_mut()
-            .insert(name.to_string(), Rc::clone(&exe));
-        Ok(exe)
-    }
-
-    /// Execute artifact `name`. Validates shapes against the manifest.
-    /// Returns the outputs and the measured *wall* duration of the execute
-    /// call (the caller charges it to virtual time).
-    pub fn execute(
-        &self,
-        name: &str,
-        inputs: &[ArrayF32],
-    ) -> Result<(Vec<ArrayF32>, std::time::Duration)> {
-        let sig = self
-            .sigs
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
-            .clone();
-        if inputs.len() != sig.inputs.len() {
-            bail!(
-                "{name}: expected {} inputs, got {}",
-                sig.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (a, want)) in inputs.iter().zip(&sig.inputs).enumerate() {
-            if &a.shape != want {
-                bail!("{name}: input {i} shape {:?} != {:?}", a.shape, want);
-            }
-        }
-        let exe = self.compiled(name)?;
-        // Single-copy literal creation (no vec1 + reshape round trip —
-        // see EXPERIMENTS.md §Perf).
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|a| {
-                let bytes = unsafe {
-                    std::slice::from_raw_parts(
-                        a.data.as_ptr() as *const u8,
-                        a.data.len() * 4,
+    impl XlaRuntime {
+        /// Load the artifact manifest from `dir` and create the PJRT CPU
+        /// client.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+                .with_context(|| {
+                    format!(
+                        "reading {}/manifest.txt (run `make artifacts`)",
+                        dir.display()
                     )
-                };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::F32,
-                    &a.shape,
-                    bytes,
-                )
-                .map_err(|e| anyhow!("literal for {name}: {e:?}"))
+                })?;
+            let sigs = parse_manifest(&manifest)?
+                .into_iter()
+                .map(|s| (s.name.clone(), s))
+                .collect();
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(XlaRuntime {
+                client,
+                dir,
+                sigs,
+                cache: RefCell::new(HashMap::new()),
             })
-            .collect::<Result<_>>()?;
-
-        let start = Instant::now();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let root = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
-        let wall = start.elapsed();
-
-        // aot.py lowers with return_tuple=True: root is always a tuple.
-        let parts = root.to_tuple().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
-        if parts.len() != sig.outputs.len() {
-            bail!(
-                "{name}: expected {} outputs, got {}",
-                sig.outputs.len(),
-                parts.len()
-            );
         }
-        let outputs = parts
-            .into_iter()
-            .zip(&sig.outputs)
-            .map(|(lit, shape)| {
-                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-                Ok(ArrayF32::new(shape.clone(), data))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok((outputs, wall))
+
+        pub fn has_artifact(&self, name: &str) -> bool {
+            self.sigs.contains_key(name)
+        }
+
+        pub fn signature(&self, name: &str) -> Option<&ArtifactSig> {
+            self.sigs.get(name)
+        }
+
+        fn compiled(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+            if let Some(e) = self.cache.borrow().get(name) {
+                return Ok(Rc::clone(e));
+            }
+            let sig = self
+                .sigs
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+            let path = self.dir.join(&sig.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            let exe = Rc::new(exe);
+            self.cache
+                .borrow_mut()
+                .insert(name.to_string(), Rc::clone(&exe));
+            Ok(exe)
+        }
+
+        /// Execute artifact `name`. Validates shapes against the manifest.
+        /// Returns the outputs and the measured *wall* duration of the
+        /// execute call (the caller charges it to virtual time).
+        pub fn execute(
+            &self,
+            name: &str,
+            inputs: &[ArrayF32],
+        ) -> Result<(Vec<ArrayF32>, std::time::Duration)> {
+            let sig = self
+                .sigs
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+                .clone();
+            if inputs.len() != sig.inputs.len() {
+                bail!(
+                    "{name}: expected {} inputs, got {}",
+                    sig.inputs.len(),
+                    inputs.len()
+                );
+            }
+            for (i, (a, want)) in inputs.iter().zip(&sig.inputs).enumerate() {
+                if &a.shape != want {
+                    bail!("{name}: input {i} shape {:?} != {:?}", a.shape, want);
+                }
+            }
+            let exe = self.compiled(name)?;
+            // Single-copy literal creation (no vec1 + reshape round trip —
+            // see EXPERIMENTS.md §Perf).
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|a| {
+                    let bytes = unsafe {
+                        std::slice::from_raw_parts(
+                            a.data.as_ptr() as *const u8,
+                            a.data.len() * 4,
+                        )
+                    };
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::F32,
+                        &a.shape,
+                        bytes,
+                    )
+                    .map_err(|e| anyhow!("literal for {name}: {e:?}"))
+                })
+                .collect::<Result<_>>()?;
+
+            let start = Instant::now();
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+            let root = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+            let wall = start.elapsed();
+
+            // aot.py lowers with return_tuple=True: root is always a tuple.
+            let parts = root
+                .to_tuple()
+                .map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
+            if parts.len() != sig.outputs.len() {
+                bail!(
+                    "{name}: expected {} outputs, got {}",
+                    sig.outputs.len(),
+                    parts.len()
+                );
+            }
+            let outputs = parts
+                .into_iter()
+                .zip(&sig.outputs)
+                .map(|(lit, shape)| {
+                    let data =
+                        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                    Ok(ArrayF32::new(shape.clone(), data))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok((outputs, wall))
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_backend {
+    //! Hermetic stand-in for the PJRT client: same public surface, but
+    //! `load` always fails with an actionable message. Full-fidelity paths
+    //! (`Fidelity::Full`/`Fast`) are unreachable in this build; the
+    //! Modeled-fidelity oracle backs every tier-1 test.
+
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::{ArrayF32, ArtifactSig};
+
+    /// Placeholder for the PJRT CPU client; never constructible without the
+    /// `pjrt` feature.
+    pub struct XlaRuntime {
+        _unconstructible: (),
+    }
+
+    impl XlaRuntime {
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            bail!(
+                "reinitpp was built without the `pjrt` feature: cannot load \
+                 PJRT artifacts from {} (rebuild with `--features pjrt` and \
+                 the `xla` bindings crate)",
+                dir.as_ref().display()
+            )
+        }
+
+        pub fn has_artifact(&self, _name: &str) -> bool {
+            false
+        }
+
+        pub fn signature(&self, _name: &str) -> Option<&ArtifactSig> {
+            None
+        }
+
+        pub fn execute(
+            &self,
+            name: &str,
+            _inputs: &[ArrayF32],
+        ) -> Result<(Vec<ArrayF32>, std::time::Duration)> {
+            bail!("pjrt feature disabled: cannot execute artifact `{name}`")
+        }
+    }
+}
+
+pub use pjrt_backend::XlaRuntime;
 
 #[cfg(test)]
 mod tests {
@@ -217,6 +293,13 @@ mod tests {
         ArrayF32::new(vec![2, 2], vec![0.0; 3]);
     }
 
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn stub_runtime_fails_loudly() {
+        let err = XlaRuntime::load("artifacts").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
     // PJRT-backed execution is covered by rust/tests/runtime_artifacts.rs
-    // (needs `make artifacts` to have run).
+    // (needs `make artifacts` to have run and `--features pjrt`).
 }

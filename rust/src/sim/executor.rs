@@ -2,21 +2,61 @@
 //!
 //! Single-threaded and deterministic: tasks run until all are blocked, then
 //! the clock jumps to the earliest scheduled event. See `sim/mod.rs` for the
-//! design discussion.
+//! design discussion and EXPERIMENTS.md §Perf for the engine internals
+//! (generational slab, cached wakers, timer wheel).
+//!
+//! Hot-path design (every experiment replays thousands of ranks over this
+//! loop, so host events/second is the ceiling on trials × scales):
+//!
+//! - **Generational slab**: tasks live in a `Vec<TaskSlot>` indexed by the
+//!   high half of the `TaskId`; the low half is a generation counter that
+//!   makes stale ids (wakes/cancels racing task death) miss safely. Futures
+//!   are polled in place (the `Pin<Box>` moves out and back, 8 bytes) —
+//!   no hash, no remove/reinsert per poll.
+//! - **Cached wakers**: one `Rc`-backed waker is built per task at spawn and
+//!   reused for every poll, instead of a fresh `Arc` allocation per poll.
+//! - **Wake ring**: external wakes land in a plain `RefCell<VecDeque>`
+//!   (single-threaded — no `Mutex`), drained by swapping with a scratch
+//!   buffer reused across the whole run (no per-iteration allocation).
+//! - **Per-process task index**: slots of one process form an intrusive
+//!   doubly-linked list, so `kill` is O(tasks of that process) instead of a
+//!   scan over every live task.
+//! - **Timer wheel**: near-future events (the dominant `sleep` pattern from
+//!   compute/checkpoint cost models) go to a 1 ns-resolution ring covering
+//!   the next `WHEEL_SLOTS` nanoseconds; far deadlines fall back to the
+//!   `BinaryHeap`. Ordering stays exactly (time, seq): a bucket only ever
+//!   holds one absolute time, FIFO == seq order, and a heap entry at the
+//!   same time as a wheel entry always carries the smaller seq (it was
+//!   scheduled when that time still lay beyond the horizon), so ties go to
+//!   the heap.
 
 use std::cell::RefCell;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, VecDeque};
 use std::future::Future;
 use std::pin::Pin;
 use std::rc::Rc;
-use std::sync::{Arc, Mutex};
-use std::task::{Context, Poll, Wake, Waker};
+use std::task::{Context, Poll, RawWaker, RawWakerVTable, Waker};
 
-use super::proc::{ProcEntry, ProcId, ProcStatus};
+use super::proc::{ProcEntry, ProcId, ProcStatus, NIL};
 use super::time::{SimDuration, SimTime};
 
-/// Identifier of a spawned task.
+/// Identifier of a spawned task: `(slot index << 32) | generation`.
 pub type TaskId = u64;
+
+#[inline]
+fn task_id(slot: u32, gen: u32) -> TaskId {
+    ((slot as u64) << 32) | gen as u64
+}
+
+#[inline]
+fn slot_of(tid: TaskId) -> usize {
+    (tid >> 32) as usize
+}
+
+#[inline]
+fn gen_of(tid: TaskId) -> u32 {
+    tid as u32
+}
 
 /// Why `Sim::run` returned.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -69,46 +109,227 @@ impl Ord for EventEntry {
     }
 }
 
-struct TaskEntry {
-    fut: Pin<Box<dyn Future<Output = ()>>>,
+/// Near-horizon slots of the timer wheel, 1 ns per bucket.
+const WHEEL_SLOTS: usize = 1024;
+const WHEEL_MASK: u64 = WHEEL_SLOTS as u64 - 1;
+
+/// Two-level event queue: a 1 ns-resolution ring for the near future plus a
+/// `BinaryHeap` fallback for far deadlines. Pops in exact (time, seq) order.
+const WHEEL_WORDS: usize = WHEEL_SLOTS / 64;
+
+struct TimerWheel {
+    /// Every bucketed entry has `base <= time < base + WHEEL_SLOTS`.
+    base: u64,
+    /// Number of entries currently in buckets (not the overflow heap).
+    in_wheel: usize,
+    buckets: Vec<VecDeque<EventEntry>>,
+    /// One bit per bucket (set = non-empty): peek finds the next occupied
+    /// bucket with word scans + `trailing_zeros` instead of probing up to
+    /// 1023 `VecDeque`s one by one.
+    occupancy: [u64; WHEEL_WORDS],
+    overflow: BinaryHeap<EventEntry>,
+}
+
+impl TimerWheel {
+    fn new() -> Self {
+        TimerWheel {
+            base: 0,
+            in_wheel: 0,
+            buckets: (0..WHEEL_SLOTS).map(|_| VecDeque::new()).collect(),
+            occupancy: [0; WHEEL_WORDS],
+            overflow: BinaryHeap::new(),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.in_wheel == 0 && self.overflow.is_empty()
+    }
+
+    fn push(&mut self, e: EventEntry) {
+        let t = e.time.nanos();
+        // `t < base` can happen when the cursor ran ahead of virtual time
+        // (peek skipped empty buckets, then an earlier heap event won the
+        // pop). Such a time can never collide with a bucketed one — while a
+        // bucket at time T is occupied the cursor never passes T — so the
+        // heap orders it correctly.
+        if t >= self.base && t - self.base < WHEEL_SLOTS as u64 {
+            let idx = (t & WHEEL_MASK) as usize;
+            self.buckets[idx].push_back(e);
+            self.occupancy[idx / 64] |= 1u64 << (idx % 64);
+            self.in_wheel += 1;
+        } else {
+            self.overflow.push(e);
+        }
+    }
+
+    /// Earliest bucketed time, advancing `base` to the next occupied bucket
+    /// (circular occupancy-bitmap scan: <= 17 word probes, no per-bucket
+    /// walk). A non-empty bucket at index `base & MASK` can only hold
+    /// events at exactly `base` (uniqueness within the horizon window).
+    fn wheel_peek_time(&mut self) -> Option<u64> {
+        if self.in_wheel == 0 {
+            return None;
+        }
+        let start = (self.base & WHEEL_MASK) as usize;
+        let mut word_i = start / 64;
+        // First word: ignore bits below the cursor; they sit a full lap
+        // ahead and are revisited (as lowest bits) if the scan wraps.
+        let mut word = self.occupancy[word_i] & (!0u64 << (start % 64));
+        for _ in 0..=WHEEL_WORDS {
+            if word != 0 {
+                let idx = word_i * 64 + word.trailing_zeros() as usize;
+                let delta = ((idx + WHEEL_SLOTS - start) as u64) & WHEEL_MASK;
+                self.base += delta;
+                return Some(self.base);
+            }
+            word_i = (word_i + 1) % WHEEL_WORDS;
+            word = self.occupancy[word_i];
+        }
+        unreachable!("in_wheel > 0 but occupancy bitmap is empty");
+    }
+
+    fn pop_wheel(&mut self) -> Option<EventEntry> {
+        let idx = (self.base & WHEEL_MASK) as usize;
+        let e = self.buckets[idx].pop_front();
+        if e.is_some() {
+            self.in_wheel -= 1;
+            if self.buckets[idx].is_empty() {
+                self.occupancy[idx / 64] &= !(1u64 << (idx % 64));
+            }
+        }
+        e
+    }
+
+    fn pop_overflow(&mut self) -> Option<EventEntry> {
+        let e = self.overflow.pop();
+        if let Some(ref ev) = e {
+            // Safe to fast-forward: every bucketed entry is >= this time
+            // (otherwise the caller would have popped the wheel instead).
+            if ev.time.nanos() > self.base {
+                self.base = ev.time.nanos();
+            }
+        }
+        e
+    }
+
+    /// Remove and return the globally earliest event by (time, seq).
+    fn pop(&mut self) -> Option<EventEntry> {
+        let wheel_t = self.wheel_peek_time();
+        let heap_t = self.overflow.peek().map(|h| h.time.nanos());
+        match (wheel_t, heap_t) {
+            (None, None) => None,
+            (Some(_), None) => self.pop_wheel(),
+            (None, Some(_)) => self.pop_overflow(),
+            // Ties go to the heap: at equal times the heap entry was
+            // scheduled first (beyond-horizon then), i.e. has lower seq.
+            (Some(w), Some(h)) => {
+                if h <= w {
+                    self.pop_overflow()
+                } else {
+                    self.pop_wheel()
+                }
+            }
+        }
+    }
+}
+
+/// Per-task waker payload: pushes the task id into the run loop's wake ring.
+/// One of these is allocated per task (at spawn), not per poll.
+struct TaskWaker {
+    id: TaskId,
+    wakes: Rc<RefCell<VecDeque<TaskId>>>,
+}
+
+impl TaskWaker {
+    fn wake(&self) {
+        self.wakes.borrow_mut().push_back(self.id);
+    }
+}
+
+// SAFETY CONTRACT: the executor (and everything spawned on it) is strictly
+// single-threaded — `Sim` is `!Send` and so is every future it runs. These
+// wakers must never cross a thread boundary; within that contract the
+// `Rc`-based vtable below is sound and avoids the `Arc`/`Mutex` tax of the
+// `std::task::Wake` route.
+const WAKER_VTABLE: RawWakerVTable =
+    RawWakerVTable::new(waker_clone, waker_wake, waker_wake_by_ref, waker_drop);
+
+fn waker_clone(data: *const ()) -> RawWaker {
+    unsafe { Rc::increment_strong_count(data as *const TaskWaker) };
+    RawWaker::new(data, &WAKER_VTABLE)
+}
+
+fn waker_wake(data: *const ()) {
+    let w = unsafe { Rc::from_raw(data as *const TaskWaker) };
+    w.wake();
+}
+
+fn waker_wake_by_ref(data: *const ()) {
+    let w = unsafe { &*(data as *const TaskWaker) };
+    w.wake();
+}
+
+fn waker_drop(data: *const ()) {
+    drop(unsafe { Rc::from_raw(data as *const TaskWaker) });
+}
+
+fn make_waker(id: TaskId, wakes: &Rc<RefCell<VecDeque<TaskId>>>) -> Waker {
+    let rc = Rc::new(TaskWaker {
+        id,
+        wakes: Rc::clone(wakes),
+    });
+    let raw = RawWaker::new(Rc::into_raw(rc) as *const (), &WAKER_VTABLE);
+    unsafe { Waker::from_raw(raw) }
+}
+
+type TaskFuture = Pin<Box<dyn Future<Output = ()>>>;
+
+/// One slab slot. `gen` disambiguates reuse; `fut == None` while the task is
+/// being polled (the future is out on the stack) or after release.
+struct TaskSlot {
+    gen: u32,
+    occupied: bool,
     proc: ProcId,
     /// Already sitting in the ready queue (dedup flag: avoids an O(n)
     /// `contains` scan per external wake — see EXPERIMENTS.md §Perf).
     queued: bool,
+    fut: Option<TaskFuture>,
+    waker: Option<Waker>,
+    /// Intrusive per-process doubly-linked list (kill in O(tasks-of-proc)).
+    prev: u32,
+    next: u32,
+    /// Free-list link, meaningful only while vacant.
+    next_free: u32,
 }
 
-#[derive(Default)]
-struct WakeQueue {
-    queue: Mutex<VecDeque<TaskId>>,
-}
-
-impl WakeQueue {
-    fn push(&self, t: TaskId) {
-        self.queue.lock().unwrap().push_back(t);
+impl TaskSlot {
+    fn vacant() -> Self {
+        TaskSlot {
+            gen: 0,
+            occupied: false,
+            proc: ProcId(0),
+            queued: false,
+            fut: None,
+            waker: None,
+            prev: NIL,
+            next: NIL,
+            next_free: NIL,
+        }
     }
-    fn drain(&self) -> Vec<TaskId> {
-        self.queue.lock().unwrap().drain(..).collect()
-    }
-}
 
-struct TaskWaker {
-    id: TaskId,
-    queue: Arc<WakeQueue>,
-}
-
-impl Wake for TaskWaker {
-    fn wake(self: Arc<Self>) {
-        self.queue.push(self.id);
+    fn is_current(&self, tid: TaskId) -> bool {
+        self.occupied && self.gen == gen_of(tid)
     }
 }
 
 struct Inner {
     now: SimTime,
     next_seq: u64,
-    next_task: TaskId,
-    events: BinaryHeap<EventEntry>,
+    events: TimerWheel,
     ready: VecDeque<TaskId>,
-    tasks: HashMap<TaskId, TaskEntry>,
+    slots: Vec<TaskSlot>,
+    free_head: u32,
+    tasks_live: u64,
     procs: Vec<ProcEntry>,
     events_fired: u64,
     polls: u64,
@@ -116,11 +337,61 @@ struct Inner {
     event_limit: u64,
 }
 
+impl Inner {
+    fn alloc_slot(&mut self) -> usize {
+        if self.free_head != NIL {
+            let idx = self.free_head as usize;
+            self.free_head = self.slots[idx].next_free;
+            idx
+        } else {
+            self.slots.push(TaskSlot::vacant());
+            self.slots.len() - 1
+        }
+    }
+
+    /// Vacate `idx`: unlink from its process list, bump the generation (so
+    /// stale ids miss), push onto the free list. Returns the future, which
+    /// the CALLER must drop outside any `inner` borrow — drop glue may
+    /// re-enter the `Sim`.
+    fn release_slot(&mut self, idx: usize) -> Option<TaskFuture> {
+        let s = &mut self.slots[idx];
+        debug_assert!(s.occupied);
+        s.occupied = false;
+        s.gen = s.gen.wrapping_add(1);
+        s.queued = false;
+        s.waker = None;
+        let fut = s.fut.take();
+        let (prev, next, proc) = (s.prev, s.next, s.proc);
+        s.prev = NIL;
+        s.next = NIL;
+        if prev != NIL {
+            self.slots[prev as usize].next = next;
+        } else {
+            self.procs[proc.0 as usize].task_head = next;
+        }
+        if next != NIL {
+            self.slots[next as usize].prev = prev;
+        }
+        self.slots[idx].next_free = self.free_head;
+        self.free_head = idx as u32;
+        self.tasks_live -= 1;
+        fut
+    }
+
+    fn push_event(&mut self, time: SimTime, event: Event) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.events.push(EventEntry { time, seq, event });
+    }
+}
+
 /// Handle to the simulation world. Cheap to clone; every task captures one.
 #[derive(Clone)]
 pub struct Sim {
     inner: Rc<RefCell<Inner>>,
-    wakes: Arc<WakeQueue>,
+    /// External wake ring: wakers push here (never into `inner`, which may
+    /// be borrowed when a waker fires, e.g. watchers woken inside `kill`).
+    wakes: Rc<RefCell<VecDeque<TaskId>>>,
 }
 
 impl Default for Sim {
@@ -135,17 +406,18 @@ impl Sim {
             inner: Rc::new(RefCell::new(Inner {
                 now: SimTime::ZERO,
                 next_seq: 0,
-                next_task: 0,
-                events: BinaryHeap::new(),
+                events: TimerWheel::new(),
                 ready: VecDeque::new(),
-                tasks: HashMap::new(),
+                slots: Vec::new(),
+                free_head: NIL,
+                tasks_live: 0,
                 procs: Vec::new(),
                 events_fired: 0,
                 polls: 0,
                 tasks_completed: 0,
                 event_limit: u64::MAX,
             })),
-            wakes: Arc::new(WakeQueue::default()),
+            wakes: Rc::new(RefCell::new(VecDeque::new())),
         }
     }
 
@@ -188,43 +460,41 @@ impl Sim {
             p,
             inner.procs[p.0 as usize].name
         );
-        let id = inner.next_task;
-        inner.next_task += 1;
-        inner.tasks.insert(
-            id,
-            TaskEntry {
-                fut: Box::pin(fut),
-                proc: p,
-                queued: true,
-            },
-        );
-        inner.ready.push_back(id);
-        id
+        let idx = inner.alloc_slot();
+        let gen = inner.slots[idx].gen;
+        let tid = task_id(idx as u32, gen);
+        let waker = make_waker(tid, &self.wakes);
+        let head = inner.procs[p.0 as usize].task_head;
+        {
+            let s = &mut inner.slots[idx];
+            s.occupied = true;
+            s.proc = p;
+            s.queued = true;
+            s.fut = Some(Box::pin(fut));
+            s.waker = Some(waker);
+            s.prev = NIL;
+            s.next = head;
+        }
+        if head != NIL {
+            inner.slots[head as usize].prev = idx as u32;
+        }
+        inner.procs[p.0 as usize].task_head = idx as u32;
+        inner.tasks_live += 1;
+        inner.ready.push_back(tid);
+        tid
     }
 
     /// Schedule `f` to run at `now + delay` (used for message delivery).
     pub fn schedule(&self, delay: SimDuration, f: impl FnOnce() + 'static) {
         let mut inner = self.inner.borrow_mut();
         let time = inner.now + delay;
-        let seq = inner.next_seq;
-        inner.next_seq += 1;
-        inner.events.push(EventEntry {
-            time,
-            seq,
-            event: Event::Run(Box::new(f)),
-        });
+        inner.push_event(time, Event::Run(Box::new(f)));
     }
 
     fn schedule_wake(&self, at: SimTime, w: Waker) {
         let mut inner = self.inner.borrow_mut();
-        let seq = inner.next_seq;
-        inner.next_seq += 1;
         let time = at.max(inner.now);
-        inner.events.push(EventEntry {
-            time,
-            seq,
-            event: Event::Wake(w),
-        });
+        inner.push_event(time, Event::Wake(w));
     }
 
     /// Advance this task's virtual clock by `d`.
@@ -252,9 +522,10 @@ impl Sim {
 
     /// Fail-stop kill: drop all tasks of `p` (no victim code runs again),
     /// mark dead, wake watchers. Safe to call from within any task,
-    /// including a task of `p` itself (suicide).
+    /// including a task of `p` itself (suicide). O(tasks of `p`) via the
+    /// per-process intrusive task list.
     pub fn kill(&self, p: ProcId) {
-        let mut victims: Vec<TaskEntry> = Vec::new();
+        let mut victims: Vec<TaskFuture> = Vec::new();
         {
             let mut inner = self.inner.borrow_mut();
             let entry = &mut inner.procs[p.0 as usize];
@@ -265,16 +536,16 @@ impl Sim {
             let entry = &mut inner.procs[p.0 as usize];
             entry.status = ProcStatus::Dead { at };
             let watchers = std::mem::take(&mut entry.watchers);
-            let tids: Vec<TaskId> = inner
-                .tasks
-                .iter()
-                .filter(|(_, t)| t.proc == p)
-                .map(|(id, _)| *id)
-                .collect();
-            for t in tids {
-                if let Some(e) = inner.tasks.remove(&t) {
-                    victims.push(e);
+            let mut cur = entry.task_head;
+            while cur != NIL {
+                let next = inner.slots[cur as usize].next;
+                // A `None` future here is the currently-running task killing
+                // its own process; `poll_task` sees the bumped generation
+                // and drops the future when the poll returns.
+                if let Some(f) = inner.release_slot(cur as usize) {
+                    victims.push(f);
                 }
+                cur = next;
             }
             for w in watchers {
                 w.wake();
@@ -290,7 +561,16 @@ impl Sim {
     /// the survivor's call stack but keeps the process and its memory).
     /// No-op if the task already finished. Must not target the running task.
     pub fn cancel_task(&self, tid: TaskId) {
-        let removed = self.inner.borrow_mut().tasks.remove(&tid);
+        let removed = {
+            let mut inner = self.inner.borrow_mut();
+            let idx = slot_of(tid);
+            let current = inner.slots.get(idx).is_some_and(|s| s.is_current(tid));
+            if current {
+                inner.release_slot(idx)
+            } else {
+                None
+            }
+        };
         drop(removed); // drop glue runs without the borrow held
     }
 
@@ -300,59 +580,76 @@ impl Sim {
     }
 
     fn poll_task(&self, tid: TaskId) {
-        let (mut fut, proc) = {
+        let idx = slot_of(tid);
+        let (mut fut, waker) = {
             let mut inner = self.inner.borrow_mut();
-            match inner.tasks.remove(&tid) {
+            let slot = match inner.slots.get_mut(idx) {
+                Some(s) if s.is_current(tid) => s,
                 // Task finished or was killed after being scheduled: skip.
+                _ => return,
+            };
+            slot.queued = false;
+            let fut = match slot.fut.take() {
+                Some(f) => f,
                 None => return,
-                Some(e) => (e.fut, e.proc),
-            }
+            };
+            let waker = slot.waker.as_ref().expect("live task has a waker").clone();
+            (fut, waker)
         };
-        let waker = Waker::from(Arc::new(TaskWaker {
-            id: tid,
-            queue: Arc::clone(&self.wakes),
-        }));
         let mut cx = Context::from_waker(&waker);
         let res = fut.as_mut().poll(&mut cx);
         let mut inner = self.inner.borrow_mut();
         inner.polls += 1;
-        match res {
+        let leftover = match res {
             Poll::Ready(()) => {
                 inner.tasks_completed += 1;
+                if inner.slots[idx].is_current(tid) {
+                    let none = inner.release_slot(idx); // future is out here
+                    debug_assert!(none.is_none());
+                }
+                Some(fut)
             }
             Poll::Pending => {
-                // If the task killed its own process during the poll, its
+                // If the task killed its own process (or was cancelled)
+                // during the poll, the slot generation moved on and the
                 // future must die with it.
-                if matches!(inner.procs[proc.0 as usize].status, ProcStatus::Alive) {
-                    inner.tasks.insert(
-                        tid,
-                        TaskEntry {
-                            fut,
-                            proc,
-                            queued: false,
-                        },
-                    );
+                if inner.slots[idx].is_current(tid) {
+                    inner.slots[idx].fut = Some(fut);
+                    None
                 } else {
-                    drop(inner);
-                    drop(fut);
+                    Some(fut)
                 }
             }
-        }
+        };
+        drop(inner);
+        drop(leftover); // drop glue may re-enter the Sim
     }
 
     /// Run until quiescence (no runnable tasks, no pending events).
     pub fn run(&self) -> SimSummary {
+        // Reusable drain buffer: the wake ring is swapped into it instead of
+        // collecting into a fresh Vec every scheduler iteration.
+        let mut scratch: VecDeque<TaskId> = VecDeque::new();
         loop {
-            // 1. External wakes -> ready queue (dedup via the task flag).
-            let wakes = self.wakes.drain();
-            if !wakes.is_empty() {
+            // 1. External wakes -> ready queue (dedup via the slot flag).
+            {
+                let mut wakes = self.wakes.borrow_mut();
+                if !wakes.is_empty() {
+                    std::mem::swap(&mut *wakes, &mut scratch);
+                }
+            }
+            if !scratch.is_empty() {
                 let mut inner = self.inner.borrow_mut();
-                for t in wakes {
-                    if let Some(e) = inner.tasks.get_mut(&t) {
-                        if !e.queued {
-                            e.queued = true;
-                            inner.ready.push_back(t);
+                for tid in scratch.drain(..) {
+                    let queue = match inner.slots.get_mut(slot_of(tid)) {
+                        Some(s) if s.is_current(tid) && !s.queued => {
+                            s.queued = true;
+                            true
                         }
+                        _ => false,
+                    };
+                    if queue {
+                        inner.ready.push_back(tid);
                     }
                 }
             }
@@ -393,12 +690,13 @@ impl Sim {
 
     fn summary(&self, reason: ExitReason) -> SimSummary {
         let inner = self.inner.borrow();
+        debug_assert!(inner.events.is_empty() || reason == ExitReason::EventLimit);
         SimSummary {
             end_time: inner.now,
             events: inner.events_fired,
             polls: inner.polls,
             tasks_completed: inner.tasks_completed,
-            tasks_pending: inner.tasks.len() as u64,
+            tasks_pending: inner.tasks_live,
             reason,
         }
     }
@@ -745,6 +1043,129 @@ mod tests {
         let tid = sim.spawn(p, async {});
         sim.run();
         sim.cancel_task(tid); // no panic
+    }
+
+    #[test]
+    fn cancel_stale_id_after_slot_reuse_is_noop() {
+        // The generation in the TaskId must protect against slab ABA: a
+        // cancel aimed at a finished task must not hit the slot's new tenant.
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let first = sim.spawn(p, async {});
+        sim.run(); // first completes, its slot is freed
+        let reached = Rc::new(Cell::new(false));
+        let s2 = sim.clone();
+        let r2 = Rc::clone(&reached);
+        let second = sim.spawn(p, async move {
+            s2.sleep(SimDuration::from_millis(1)).await;
+            r2.set(true);
+        });
+        assert_eq!(slot_of(first), slot_of(second), "slot reused");
+        assert_ne!(first, second, "generation differs");
+        sim.cancel_task(first); // stale id: must miss
+        sim.run();
+        assert!(reached.get(), "new tenant survived the stale cancel");
+    }
+
+    #[test]
+    fn kill_of_huge_proc_leaves_other_procs_runnable() {
+        // Satellite regression: kill() walks the per-process task index, so
+        // killing a 10k-task process neither touches nor starves unrelated
+        // processes' tasks.
+        let sim = Sim::new();
+        let big = sim.spawn_process("big");
+        let small = sim.spawn_process("small");
+        for _ in 0..10_000 {
+            let s2 = sim.clone();
+            sim.spawn(big, async move {
+                s2.sleep(SimDuration::from_millis(1)).await;
+                panic!("killed task body must never resume");
+            });
+        }
+        let done = Rc::new(Cell::new(0u32));
+        for _ in 0..100 {
+            let s2 = sim.clone();
+            let d2 = Rc::clone(&done);
+            sim.spawn(small, async move {
+                s2.sleep(SimDuration::from_millis(2)).await;
+                d2.set(d2.get() + 1);
+            });
+        }
+        let s2 = sim.clone();
+        sim.schedule(SimDuration::from_micros(10), move || s2.kill(big));
+        let s = sim.run();
+        assert_eq!(done.get(), 100, "unrelated proc's tasks all completed");
+        assert_eq!(s.tasks_completed, 100);
+        assert_eq!(s.tasks_pending, 0);
+        assert!(!sim.is_alive(big));
+        assert!(sim.is_alive(small));
+    }
+
+    #[test]
+    fn timer_wheel_and_heap_agree_on_order() {
+        // Deadlines straddling the wheel horizon (1 µs) must still fire in
+        // exact (time, seq) order, including a same-time wheel/heap tie.
+        let sim = Sim::new();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for (label, ns) in [
+            // beyond the 1.024 µs horizon -> overflow heap, lowest seq
+            ("heap@2000", 2_000u64),
+            ("wheel@5", 5),
+            ("wheel@900", 900),
+        ] {
+            let o2 = Rc::clone(&order);
+            sim.schedule(SimDuration::from_nanos(ns), move || {
+                o2.borrow_mut().push(label);
+            });
+        }
+        let s2 = sim.clone();
+        let o2 = Rc::clone(&order);
+        sim.schedule(SimDuration::from_nanos(1_500), move || {
+            o2.borrow_mut().push("mid@1500");
+            // now = 1500: 2000 is inside the horizon -> wheel bucket, at
+            // the SAME time as the heap entry above. The heap entry was
+            // scheduled earlier (lower seq) and must fire first.
+            let o3 = Rc::clone(&o2);
+            s2.schedule(SimDuration::from_nanos(500), move || {
+                o3.borrow_mut().push("tie-wheel@2000");
+            });
+        });
+        sim.run();
+        assert_eq!(
+            *order.borrow(),
+            vec![
+                "wheel@5",
+                "wheel@900",
+                "mid@1500",
+                "heap@2000",
+                "tie-wheel@2000"
+            ]
+        );
+    }
+
+    #[test]
+    fn sparse_wheel_timers_wrap_the_ring() {
+        // Chained 700 ns timers stay inside the horizon but land in buckets
+        // that wrap the ring modulo, exercising the circular occupancy scan
+        // (including the partial-first-word and wrapped-word paths).
+        fn chain(sim: &Sim, hits: &Rc<RefCell<Vec<u64>>>, remaining: u32) {
+            if remaining == 0 {
+                return;
+            }
+            let s2 = sim.clone();
+            let h2 = Rc::clone(hits);
+            sim.schedule(SimDuration::from_nanos(700), move || {
+                h2.borrow_mut().push(s2.now().nanos());
+                chain(&s2, &h2, remaining - 1);
+            });
+        }
+        let sim = Sim::new();
+        let hits = Rc::new(RefCell::new(Vec::new()));
+        chain(&sim, &hits, 5);
+        let s = sim.run();
+        assert_eq!(*hits.borrow(), vec![700, 1400, 2100, 2800, 3500]);
+        assert_eq!(s.end_time.nanos(), 3500);
+        assert_eq!(s.events, 5);
     }
 
     #[test]

@@ -4,6 +4,9 @@ use std::task::Waker;
 
 use super::time::SimTime;
 
+/// Sentinel index for the executor's intrusive lists ("no slot").
+pub(crate) const NIL: u32 = u32::MAX;
+
 /// Identifier of a simulated process (rank, daemon, or root).
 #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ProcId(pub u32);
@@ -27,6 +30,10 @@ pub(crate) struct ProcEntry {
     pub status: ProcStatus,
     /// Wakers of `watch()` futures to notify on death.
     pub watchers: Vec<Waker>,
+    /// Head of this process's intrusive task list in the executor slab
+    /// (`NIL` when the process has no live tasks). Lets `Sim::kill` visit
+    /// exactly the victim's tasks instead of scanning every live task.
+    pub task_head: u32,
 }
 
 impl ProcEntry {
@@ -35,6 +42,7 @@ impl ProcEntry {
             name,
             status: ProcStatus::Alive,
             watchers: Vec::new(),
+            task_head: NIL,
         }
     }
 }

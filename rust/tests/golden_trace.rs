@@ -1,0 +1,168 @@
+//! Golden-trace regression tests for the DES executor.
+//!
+//! The engine internals (slab tasks, cached wakers, timer wheel) are free to
+//! change, but the *trace* — which events fire, in which order, how many
+//! polls the scheduler performs, and where virtual time ends — is the
+//! executor's contract with the experiments. These tests pin the exact
+//! `(events, polls, end_time)` triple of two mixed workloads to the values
+//! derived from the executor's documented semantics (the step-by-step
+//! derivations are in the comments), so any rewrite that perturbs scheduling
+//! order, wake dedup, kill semantics, or timer ordering fails loudly.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+use reinitpp::cluster::Topology;
+use reinitpp::config::Calibration;
+use reinitpp::mpi::{FtMode, MpiJob, ReduceOp};
+use reinitpp::sim::{channel, Sim, SimDuration, SimTime};
+
+/// Mixed sim-layer workload: sleeps + channel traffic + yield + kill + watch.
+///
+/// Derivation of the golden counts (task poll = one `poll_task` that reaches
+/// the future; event = one popped timer/delivery/closure):
+///
+/// spawn A1(proc a), B1(proc b), C1(proc c), W(proc b); schedule kill(c)@20µs.
+///  p1  A1: sleep(10µs) registers wake@10µs            -> pending
+///  p2  B1: recv #1 blocks                             -> pending
+///  p3  C1: sleep(100µs) registers wake@100µs          -> pending
+///  p4  W:  watch(c) registers watcher                 -> pending
+///  e1  wake@10µs   p5  A1: sends msg 1 (delay 5µs -> @15µs) and msg 2
+///                       (delay 1µs -> @11µs); sleep(10µs) -> wake@20µs
+///  e2  deliver "2"@11µs  p6  B1: recv #1 = Ok(2); recv #2 blocks
+///  e3  deliver "1"@15µs  p7  B1: recv #2 = Ok(1); yield_now self-wakes
+///  (wake ring)           p8  B1: yield resolves; sleep(2µs) -> wake@17µs
+///  e4  wake@17µs         p9  B1: done (completed: 1)
+///  e5  kill(c)@20µs: C1's future dropped, watcher woken
+///                        p10 W: watch = 20µs, done (completed: 2)
+///  e6  wake@20µs         p11 A1: done (completed: 3)
+///  e7  wake@100µs: C1's timer fires into the void (task dead) — the event
+///      still pops and advances virtual time, exactly like the seed engine.
+///  idle.
+///
+/// => events = 7, polls = 11, end_time = 100 µs, 3 completed, 0 pending.
+fn mixed_sim_workload() -> (u64, u64, u64, u64, u64, u64) {
+    let sim = Sim::new();
+    let a = sim.spawn_process("a");
+    let b = sim.spawn_process("b");
+    let c = sim.spawn_process("victim");
+    let (tx, rx) = channel::<u32>(&sim);
+    let watch_at = Rc::new(Cell::new(0u64));
+
+    let s2 = sim.clone();
+    sim.spawn(a, async move {
+        s2.sleep(SimDuration::from_micros(10)).await;
+        tx.send(1, SimDuration::from_micros(5));
+        tx.send(2, SimDuration::from_micros(1));
+        s2.sleep(SimDuration::from_micros(10)).await;
+    });
+
+    let s3 = sim.clone();
+    sim.spawn(b, async move {
+        let first = rx.recv().await.unwrap();
+        let second = rx.recv().await.unwrap();
+        assert_eq!((first, second), (2, 1), "low-latency message overtakes");
+        s3.yield_now().await;
+        s3.sleep(SimDuration::from_micros(2)).await;
+    });
+
+    let s4 = sim.clone();
+    sim.spawn(c, async move {
+        s4.sleep(SimDuration::from_micros(100)).await;
+        unreachable!("killed at 20µs");
+    });
+
+    let s5 = sim.clone();
+    let w2 = Rc::clone(&watch_at);
+    sim.spawn(b, async move {
+        w2.set(s5.watch(c).await.nanos());
+    });
+
+    let s6 = sim.clone();
+    sim.schedule(SimDuration::from_micros(20), move || s6.kill(c));
+
+    let s = sim.run();
+    assert_eq!(watch_at.get(), 20_000, "watcher saw the kill time");
+    (
+        s.events,
+        s.polls,
+        s.end_time.nanos(),
+        s.tasks_completed,
+        s.tasks_pending,
+        watch_at.get(),
+    )
+}
+
+#[test]
+fn golden_trace_mixed_sim_workload() {
+    let (events, polls, end_ns, completed, pending, watch_ns) = mixed_sim_workload();
+    assert_eq!(
+        (events, polls, end_ns),
+        (7, 11, 100_000),
+        "executor trace drifted from the pinned semantics"
+    );
+    assert_eq!(completed, 3);
+    assert_eq!(pending, 0);
+    assert_eq!(watch_ns, 20_000);
+}
+
+#[test]
+fn golden_trace_is_deterministic_across_runs() {
+    assert_eq!(mixed_sim_workload(), mixed_sim_workload());
+}
+
+/// 4-rank allreduce with a round-number calibration so every delivery delay
+/// is exactly 1001 ns (1 µs latency + 4 B at 4 GB/s = 1 ns).
+///
+/// Binomial reduce to 0 then broadcast, all ranks on one node, arrivals:
+///   reduce: r1->r0 and r3->r2 arrive @1001; r2->r0 arrives @2002
+///   bcast:  r0->r2 and r0->r1 arrive @3003; r2->r3 arrives @4004
+/// => 6 delivery events, end_time = 4004 ns.
+/// Polls per rank (initial poll + one poll per message arrival):
+///   r0: 1 + recv(r1) + recv(r2) = 3     r1: 1 + recv(r0) = 2
+///   r2: 1 + recv(r3) + recv(r0) = 3     r3: 1 + recv(r2) = 2
+/// => polls = 10.
+fn allreduce_trace() -> (u64, u64, u64, Vec<u32>) {
+    let sim = Sim::new();
+    let mut calib = Calibration::default();
+    calib.intra_latency_us = 1.0;
+    calib.intra_bw_gbps = 4.0;
+    let topo = Topology::new(4, 16, 0);
+    let job = MpiJob::new(&sim, topo, FtMode::Reinit, &calib);
+    let sums: Rc<RefCell<Vec<u32>>> = Rc::new(RefCell::new(Vec::new()));
+    for r in 0..4u32 {
+        let p = sim.spawn_process(format!("r{r}"));
+        let j2 = job.clone();
+        let s2 = Rc::clone(&sums);
+        sim.spawn(p, async move {
+            let c = j2.attach(r, 0);
+            let v = c.allreduce_scalar(r as f32, ReduceOp::Sum).await.unwrap();
+            s2.borrow_mut().push(v.to_bits());
+        });
+    }
+    let s = sim.run();
+    assert_eq!(s.tasks_pending, 0, "collective deadlocked");
+    assert_eq!(s.end_time, SimTime(4_004));
+    let bits = Rc::try_unwrap(sums).ok().unwrap().into_inner();
+    (s.events, s.polls, s.end_time.nanos(), bits)
+}
+
+#[test]
+fn golden_trace_allreduce_over_mpi_layer() {
+    let (events, polls, end_ns, bits) = allreduce_trace();
+    assert_eq!(
+        (events, polls, end_ns),
+        (6, 10, 4_004),
+        "collective trace drifted from the pinned semantics"
+    );
+    assert_eq!(bits.len(), 4);
+    assert!(
+        bits.iter().all(|&b| b == 6.0f32.to_bits()),
+        "fixed combine order: 0+1+2+3 must be exactly 6.0 on every rank"
+    );
+}
+
+#[test]
+fn golden_trace_allreduce_deterministic_across_runs() {
+    assert_eq!(allreduce_trace(), allreduce_trace());
+}

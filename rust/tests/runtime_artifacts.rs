@@ -2,7 +2,9 @@
 //! compile and execute through the PJRT CPU client, and their numerics match
 //! the pure-Rust native oracle — closing the Python -> HLO -> Rust triangle.
 //!
-//! Requires `make artifacts` (skipped with a clear message otherwise).
+//! Requires `make artifacts` (skipped with a clear message otherwise) and
+//! the `pjrt` cargo feature (hermetic builds have no PJRT client).
+#![cfg(feature = "pjrt")]
 
 use reinitpp::apps::native;
 use reinitpp::runtime::{ArrayF32, XlaRuntime};
