@@ -8,14 +8,13 @@
 //! make artifacts && cargo run --release --example checkpoint_tuning
 //! ```
 
-use std::rc::Rc;
-
 use reinitpp::config::{AppKind, CkptKind, ExperimentConfig, FailureKind, RecoveryKind};
-use reinitpp::harness::run_point;
-use reinitpp::runtime::XlaRuntime;
+use reinitpp::harness::{default_jobs, run_point};
 
 fn main() {
-    let xla = Rc::new(XlaRuntime::load("artifacts").expect("run `make artifacts`"));
+    // Each point's trials run on the sweep pool; workers lazy-load the PJRT
+    // runtime when the resolved fidelity needs it.
+    let jobs = default_jobs();
     println!("== checkpoint tuning: HPCCG, 32 ranks, Reinit++, process failure ==\n");
     println!("| ckpt scheme | every k iters | total (s) | write (s) | MPI recovery (s) |");
     println!("|---|---|---|---|---|");
@@ -31,7 +30,7 @@ fn main() {
             cfg.ckpt_every = every;
             cfg.trials = 3;
             cfg.validate().unwrap();
-            let p = run_point(&cfg, Some(Rc::clone(&xla)));
+            let p = run_point(&cfg, jobs);
             println!(
                 "| {} | {} | {:.3} | {:.3} | {:.3} |",
                 scheme, every, p.total.mean, p.ckpt_write.mean, p.recovery.mean

@@ -9,15 +9,17 @@
 //! the failure, and the final state is verified bitwise against the
 //! fault-free run (recorded in EXPERIMENTS.md).
 //!
+//! The fault-free and faulty trials are independent simulations, so they
+//! run concurrently on the sweep pool (`harness::run_trials`); each worker
+//! thread lazy-loads its own PJRT runtime, since `Rc<XlaRuntime>` cannot
+//! cross threads.
+//!
 //! ```sh
 //! make artifacts && cargo run --release --example e2e_hpccg_solve
 //! ```
 
-use std::rc::Rc;
-
 use reinitpp::config::{AppKind, ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
-use reinitpp::recovery::job::run_trial;
-use reinitpp::runtime::XlaRuntime;
+use reinitpp::harness::{run_trials, TrialSpec};
 
 fn main() {
     let mut cfg = ExperimentConfig::default();
@@ -33,15 +35,25 @@ fn main() {
     cfg.trials = 1;
     cfg.validate().unwrap();
 
-    let xla = Rc::new(XlaRuntime::load(&cfg.artifacts_dir).expect("run `make artifacts`"));
-    let host0 = std::time::Instant::now();
-
     println!("== e2e: distributed HPCCG solve, 64 ranks, Reinit++ recovery ==\n");
     let mut free_cfg = cfg.clone();
     free_cfg.failure = FailureKind::None;
-    let free = run_trial(&free_cfg, 0, Some(Rc::clone(&xla)));
+    let specs = vec![
+        TrialSpec {
+            point: 0,
+            trial: 0,
+            cfg: free_cfg,
+        },
+        TrialSpec {
+            point: 1,
+            trial: 0,
+            cfg: cfg.clone(),
+        },
+    ];
+    let (mut outs, stats) = run_trials(specs, 2);
+    let faulty = outs.pop().unwrap().result;
+    let free = outs.pop().unwrap().result;
     assert!(free.completed);
-    let faulty = run_trial(&cfg, 0, Some(xla));
     assert!(faulty.completed, "recovery failed");
 
     println!(
@@ -87,5 +99,10 @@ fn main() {
         "recovered solve must equal the fault-free solve bitwise"
     );
     println!("\nstate equivalence: recovered run == fault-free run (bitwise) OK");
-    println!("host wall time: {:.1} s", host0.elapsed().as_secs_f64());
+    println!(
+        "host wall time: {:.1} s on {} workers ({:.0}% utilization)",
+        stats.wall_s,
+        stats.jobs,
+        stats.utilization() * 100.0
+    );
 }

@@ -1,16 +1,15 @@
 //! Node-failure study (a compact Figure 7): CR vs Reinit++ recovering from
 //! the loss of a whole node (its daemon and all 16 ranks), with file
-//! checkpointing and an over-provisioned spare node.
+//! checkpointing and an over-provisioned spare node. Trials fan out over
+//! all cores via the sweep pool; each worker lazy-loads its own PJRT
+//! runtime.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example node_failure_study
 //! ```
 
-use std::rc::Rc;
-
 use reinitpp::config::{AppKind, ExperimentConfig, FailureKind, RecoveryKind};
-use reinitpp::harness::{fig7, SweepOpts};
-use reinitpp::runtime::XlaRuntime;
+use reinitpp::harness::{default_jobs, fig7, SweepOpts};
 
 fn main() {
     let mut base = ExperimentConfig::default();
@@ -19,12 +18,12 @@ fn main() {
     base.spare_nodes = 1;
     base.trials = 3;
     base.iters = 10;
-    let xla = Rc::new(XlaRuntime::load(&base.artifacts_dir).expect("run `make artifacts`"));
     let opts = SweepOpts {
         max_ranks: 128,
         outdir: "results/examples".into(),
+        jobs: default_jobs(),
     };
-    let points = fig7(&base, Some(xla), &opts);
+    let points = fig7(&base, &opts);
 
     let mean = |rk: RecoveryKind, ranks: u32| {
         points

@@ -1,16 +1,14 @@
 //! Process-failure study (a compact Figure 6): compare CR, ULFM and
 //! Reinit++ MPI-recovery time for a single process failure, 16-128 ranks,
-//! full-fidelity compute.
+//! full-fidelity compute. Trials fan out over all cores via the sweep
+//! pool; each worker lazy-loads its own PJRT runtime.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example process_failure_study
 //! ```
 
-use std::rc::Rc;
-
 use reinitpp::config::{AppKind, ExperimentConfig, FailureKind, RecoveryKind};
-use reinitpp::harness::{fig6, SweepOpts};
-use reinitpp::runtime::XlaRuntime;
+use reinitpp::harness::{default_jobs, fig6, SweepOpts};
 
 fn main() {
     let mut base = ExperimentConfig::default();
@@ -18,12 +16,12 @@ fn main() {
     base.failure = FailureKind::Process;
     base.trials = 3;
     base.iters = 10;
-    let xla = Rc::new(XlaRuntime::load(&base.artifacts_dir).expect("run `make artifacts`"));
     let opts = SweepOpts {
         max_ranks: 128,
         outdir: "results/examples".into(),
+        jobs: default_jobs(),
     };
-    let points = fig6(&base, Some(xla), &opts);
+    let points = fig6(&base, &opts);
 
     // Verdict in the paper's own terms.
     let mean = |rk: RecoveryKind, ranks: u32| {

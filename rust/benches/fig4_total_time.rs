@@ -4,7 +4,7 @@
 //! `reinitpp reproduce --figure 4`.
 
 use reinitpp::config::{ExperimentConfig, Fidelity};
-use reinitpp::harness::{fig4, SweepOpts};
+use reinitpp::harness::{default_jobs, fig4, SweepOpts};
 
 fn main() {
     let t0 = std::time::Instant::now();
@@ -20,8 +20,9 @@ fn main() {
     let opts = SweepOpts {
         max_ranks: 1024,
         outdir: "results/bench".into(),
+        jobs: default_jobs(),
     };
-    let points = fig4(&base, None, &opts);
+    let points = fig4(&base, &opts);
     eprintln!(
         "\nfig4: {} points, {} trials each, host wall {:.1} s",
         points.len(),

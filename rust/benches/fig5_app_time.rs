@@ -2,7 +2,7 @@
 //! the ULFM fault-free inflation) on the modeled backend.
 
 use reinitpp::config::{ExperimentConfig, Fidelity};
-use reinitpp::harness::{fig5, SweepOpts};
+use reinitpp::harness::{default_jobs, fig5, SweepOpts};
 
 fn main() {
     let t0 = std::time::Instant::now();
@@ -18,8 +18,9 @@ fn main() {
     let opts = SweepOpts {
         max_ranks: 1024,
         outdir: "results/bench".into(),
+        jobs: default_jobs(),
     };
-    let points = fig5(&base, None, &opts);
+    let points = fig5(&base, &opts);
     eprintln!(
         "\nfig5: {} points, host wall {:.1} s",
         points.len(),

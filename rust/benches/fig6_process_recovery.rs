@@ -2,7 +2,7 @@
 //! modeled backend, and verify the paper's headline ratios.
 
 use reinitpp::config::{AppKind, ExperimentConfig, Fidelity, RecoveryKind};
-use reinitpp::harness::{fig6, SweepOpts};
+use reinitpp::harness::{default_jobs, fig6, SweepOpts};
 
 fn main() {
     let t0 = std::time::Instant::now();
@@ -18,8 +18,9 @@ fn main() {
     let opts = SweepOpts {
         max_ranks: 1024,
         outdir: "results/bench".into(),
+        jobs: default_jobs(),
     };
-    let points = fig6(&base, None, &opts);
+    let points = fig6(&base, &opts);
 
     let mean = |rk: RecoveryKind, ranks: u32| {
         points

@@ -2,7 +2,7 @@
 //! Reinit++, file checkpointing) on the modeled backend.
 
 use reinitpp::config::{AppKind, ExperimentConfig, Fidelity, RecoveryKind};
-use reinitpp::harness::{fig7, SweepOpts};
+use reinitpp::harness::{default_jobs, fig7, SweepOpts};
 
 fn main() {
     let t0 = std::time::Instant::now();
@@ -19,8 +19,9 @@ fn main() {
     let opts = SweepOpts {
         max_ranks: 1024,
         outdir: "results/bench".into(),
+        jobs: default_jobs(),
     };
-    let points = fig7(&base, None, &opts);
+    let points = fig7(&base, &opts);
 
     let mean = |rk: RecoveryKind, ranks: u32| {
         points

@@ -1,0 +1,95 @@
+//! Micro-bench: parallel sweep scheduler throughput — the same figure-style
+//! grid run serially (`jobs = 1`) and on all cores, reporting trials/second,
+//! worker utilization and the wall-clock speedup, plus a determinism
+//! cross-check (parallel summaries must be bit-identical to serial).
+//!
+//! Emits `BENCH_micro_sweep.json` at the repository root so CI and later
+//! PRs can track the scheduler's scaling trajectory.
+
+use reinitpp::config::{
+    AppKind, ExperimentConfig, FailureKind, Fidelity, RecoveryKind,
+};
+use reinitpp::harness::{default_jobs, run_points};
+use reinitpp::metrics::{BenchReport, BenchRow};
+
+/// A compact Figure-6-like grid: enough independent trials to saturate a
+/// small machine, small enough to stay a smoke test in CI.
+fn grid() -> Vec<ExperimentConfig> {
+    let mut cfgs = Vec::new();
+    for ranks in [16u32, 32] {
+        for rk in [RecoveryKind::Cr, RecoveryKind::Ulfm, RecoveryKind::Reinit] {
+            let mut c = ExperimentConfig::default();
+            c.app = AppKind::Hpccg;
+            c.recovery = rk;
+            c.failure = FailureKind::Process;
+            c.ranks = ranks;
+            c.iters = 10;
+            c.trials = 8;
+            c.fidelity = Fidelity::Modeled;
+            c.hpccg_nx = 8;
+            cfgs.push(c);
+        }
+    }
+    cfgs
+}
+
+fn main() {
+    let cfgs = grid();
+    let trials: u64 = cfgs.iter().map(|c| c.trials as u64).sum();
+
+    let (p_serial, s_serial) = run_points(&cfgs, 1);
+    let (p_par, s_par) = run_points(&cfgs, default_jobs());
+    // Report the clamped worker count actually used (the utilization
+    // denominator), not the requested one.
+    let jobs = s_par.jobs;
+
+    let identical = p_serial.iter().zip(&p_par).all(|(a, b)| {
+        a.total == b.total
+            && a.ckpt_write == b.ckpt_write
+            && a.ckpt_read == b.ckpt_read
+            && a.recovery == b.recovery
+            && a.app == b.app
+    });
+    assert!(identical, "parallel sweep must be bit-identical to serial");
+
+    let speedup = if s_par.wall_s > 0.0 {
+        s_serial.wall_s / s_par.wall_s
+    } else {
+        0.0
+    };
+    println!("| sweep | trials | jobs | wall (s) | trials/s | utilization |");
+    println!("|---|---|---|---|---|---|");
+    println!(
+        "| serial | {trials} | 1 | {:.3} | {:.1} | {:.0}% |",
+        s_serial.wall_s,
+        s_serial.trials_per_sec(),
+        s_serial.utilization() * 100.0
+    );
+    println!(
+        "| parallel | {trials} | {jobs} | {:.3} | {:.1} | {:.0}% |",
+        s_par.wall_s,
+        s_par.trials_per_sec(),
+        s_par.utilization() * 100.0
+    );
+    println!(
+        "\nspeedup: {speedup:.2}x on {jobs} worker(s); outputs identical: {identical}"
+    );
+
+    let mut report = BenchReport::new("micro_sweep");
+    report.push(
+        BenchRow::new("sweep_serial", trials, s_serial.wall_s, "trials/s")
+            .with_extra("jobs", 1.0)
+            .with_extra("utilization", s_serial.utilization()),
+    );
+    report.push(
+        BenchRow::new("sweep_parallel", trials, s_par.wall_s, "trials/s")
+            .with_extra("jobs", jobs as f64)
+            .with_extra("utilization", s_par.utilization())
+            .with_extra("speedup_vs_serial", speedup)
+            .with_extra("outputs_identical", if identical { 1.0 } else { 0.0 }),
+    );
+    report.write_json(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_micro_sweep.json"
+    ));
+}

@@ -10,11 +10,14 @@
 //! ```
 //!
 //! OPTIONS: `--config FILE` (TOML-subset), `--max-ranks N`, `--outdir DIR`,
-//! plus any dotted config key as `key=value` (see `config::ExperimentConfig`).
+//! `--jobs N` (worker threads for trial execution: default = available
+//! parallelism, `1` forces the serial path; output is byte-identical for
+//! any value — see `harness::pool`), plus any dotted config key as
+//! `key=value` (see `config::ExperimentConfig`).
 
 use std::rc::Rc;
 
-use crate::config::{ExperimentConfig, Fidelity};
+use crate::config::ExperimentConfig;
 use crate::harness::{self, SweepOpts};
 use crate::recovery::job::run_trial;
 use crate::runtime::XlaRuntime;
@@ -24,6 +27,7 @@ use crate::runtime::XlaRuntime;
 pub enum Command {
     Run {
         cfg: ExperimentConfig,
+        jobs: usize,
     },
     Reproduce {
         figure: u32,
@@ -72,15 +76,26 @@ OPTIONS:
   --config FILE      load a TOML-subset config file
   --max-ranks N      cap the sweep's rank counts (reproduce only)
   --outdir DIR       CSV output directory (default: results)
+  --jobs N           worker threads for trial execution (run/reproduce;
+                     default: all cores, 1 = serial). Tables and CSVs are
+                     byte-identical for any N.
   key=value          any config key, e.g. app=hpccg ranks=64 recovery=reinit
                      failure=process trials=10 iters=20 fidelity=auto
                      calibration.fork_exec_ms=350
 
 EXAMPLES:
   reinitpp run app=hpccg ranks=16 recovery=reinit failure=process trials=3
-  reinitpp reproduce --figure 6 --max-ranks 128 trials=5
+  reinitpp reproduce --figure 6 --max-ranks 128 --jobs 8 trials=5
   reinitpp validate app=comd recovery=ulfm failure=process
 ";
+
+/// Parse a `--jobs` value (>= 1).
+fn parse_jobs(v: &str) -> Result<usize, CliError> {
+    match v.parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(err("--jobs: positive worker count")),
+    }
+}
 
 /// Parse argv (without the binary name).
 pub fn parse(args: &[String]) -> Result<Command, CliError> {
@@ -104,13 +119,27 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             }
             Ok(Command::Tables { which })
         }
-        "run" | "validate" | "calibrate" => {
+        "run" => {
+            let (cfg, leftovers) = parse_cfg(rest)?;
+            let mut jobs = crate::harness::default_jobs();
+            let mut it = leftovers.iter();
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--jobs" => {
+                        let v = it.next().ok_or_else(|| err("--jobs needs a value"))?;
+                        jobs = parse_jobs(v)?;
+                    }
+                    other => return Err(err(format!("run: unknown arg {other}"))),
+                }
+            }
+            Ok(Command::Run { cfg, jobs })
+        }
+        "validate" | "calibrate" => {
             let (cfg, leftovers) = parse_cfg(rest)?;
             if let Some(x) = leftovers.first() {
                 return Err(err(format!("{cmd}: unknown arg {x}")));
             }
             Ok(match cmd.as_str() {
-                "run" => Command::Run { cfg },
                 "validate" => Command::Validate { cfg },
                 _ => Command::Calibrate { cfg },
             })
@@ -135,6 +164,10 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                             .next()
                             .ok_or_else(|| err("--outdir needs a value"))?
                             .clone();
+                    }
+                    "--jobs" => {
+                        let v = it.next().ok_or_else(|| err("--jobs needs a value"))?;
+                        opts.jobs = parse_jobs(v)?;
                     }
                     other => return Err(err(format!("reproduce: unknown arg {other}"))),
                 }
@@ -174,15 +207,10 @@ fn parse_cfg(args: &[String]) -> Result<(ExperimentConfig, Vec<String>), CliErro
     Ok((cfg, leftovers))
 }
 
-/// Load the XLA runtime if the chosen fidelity needs it.
+/// Load the XLA runtime if the chosen fidelity needs it (single-trial
+/// paths; the sweep paths resolve runtimes per worker the same way).
 fn maybe_xla(cfg: &ExperimentConfig) -> Option<Rc<XlaRuntime>> {
-    match cfg.fidelity.resolve(cfg.ranks) {
-        Fidelity::Modeled => None,
-        _ => Some(Rc::new(
-            XlaRuntime::load(&cfg.artifacts_dir)
-                .expect("loading artifacts (run `make artifacts`)"),
-        )),
-    }
+    crate::recovery::job::RtCache::new().resolve(cfg)
 }
 
 /// Execute a parsed command; returns a process exit code.
@@ -207,28 +235,27 @@ pub fn execute(cmd: Command) -> i32 {
             }
             0
         }
-        Command::Run { cfg } => {
+        Command::Run { cfg, jobs } => {
             if let Err(e) = cfg.validate() {
                 eprintln!("{e}");
                 return 2;
             }
-            let xla = maybe_xla(&cfg);
             println!(
-                "# {} | ranks={} | {} | failure={} | ckpt={} | trials={}",
+                "# {} | ranks={} | {} | failure={} | ckpt={} | trials={} | jobs={}",
                 cfg.app,
                 cfg.ranks,
                 cfg.recovery,
                 cfg.failure,
                 cfg.effective_ckpt(),
-                cfg.trials
+                cfg.trials,
+                jobs
             );
-            let p = harness::run_point(&cfg, xla);
+            let p = harness::run_point(&cfg, jobs);
             harness::print_points("run", std::slice::from_ref(&p));
-            println!("\n(host wall time: {:.2} s)", p.wall_s);
+            println!("\n(host busy time: {:.2} s across {jobs} worker(s))", p.wall_s);
             0
         }
         Command::Reproduce { figure, cfg, opts } => {
-            let xla = maybe_xla(&cfg);
             let figs: Vec<u32> = if figure == 0 {
                 vec![4, 5, 6, 7]
             } else {
@@ -236,10 +263,10 @@ pub fn execute(cmd: Command) -> i32 {
             };
             for f in figs {
                 match f {
-                    4 => drop(harness::fig4(&cfg, xla.clone(), &opts)),
-                    5 => drop(harness::fig5(&cfg, xla.clone(), &opts)),
-                    6 => drop(harness::fig6(&cfg, xla.clone(), &opts)),
-                    7 => drop(harness::fig7(&cfg, xla.clone(), &opts)),
+                    4 => drop(harness::fig4(&cfg, &opts)),
+                    5 => drop(harness::fig5(&cfg, &opts)),
+                    6 => drop(harness::fig6(&cfg, &opts)),
+                    7 => drop(harness::fig7(&cfg, &opts)),
                     _ => unreachable!(),
                 }
             }
@@ -333,11 +360,21 @@ mod tests {
     fn parse_run_with_overrides() {
         let cmd = parse(&sv(&["run", "app=comd", "ranks=64", "trials=3"])).unwrap();
         match cmd {
-            Command::Run { cfg } => {
+            Command::Run { cfg, jobs } => {
                 assert_eq!(cfg.app, crate::config::AppKind::CoMD);
                 assert_eq!(cfg.ranks, 64);
                 assert_eq!(cfg.trials, 3);
+                assert!(jobs >= 1, "defaults to available parallelism");
             }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_run_with_jobs() {
+        let cmd = parse(&sv(&["run", "--jobs", "1", "ranks=16"])).unwrap();
+        match cmd {
+            Command::Run { jobs, .. } => assert_eq!(jobs, 1),
             _ => panic!(),
         }
     }
@@ -350,6 +387,8 @@ mod tests {
             "6",
             "--max-ranks",
             "128",
+            "--jobs",
+            "4",
             "trials=5",
         ]))
         .unwrap();
@@ -357,6 +396,7 @@ mod tests {
             Command::Reproduce { figure, cfg, opts } => {
                 assert_eq!(figure, 6);
                 assert_eq!(opts.max_ranks, 128);
+                assert_eq!(opts.jobs, 4);
                 assert_eq!(cfg.trials, 5);
             }
             _ => panic!(),
@@ -367,6 +407,8 @@ mod tests {
     fn parse_errors() {
         assert!(parse(&sv(&["reproduce"])).is_err()); // missing --figure
         assert!(parse(&sv(&["reproduce", "--figure", "9"])).is_err());
+        assert!(parse(&sv(&["reproduce", "--figure", "6", "--jobs", "0"])).is_err());
+        assert!(parse(&sv(&["run", "--jobs", "x"])).is_err());
         assert!(parse(&sv(&["run", "bogus=1"])).is_err());
         assert!(parse(&sv(&["frobnicate"])).is_err());
     }

@@ -1,12 +1,14 @@
 //! Per-figure sweep drivers (paper §5, Figures 4-7) and table/CSV emitters.
+//!
+//! Every driver builds its full point grid up front and hands the flattened
+//! (point, trial) work list to the parallel sweep scheduler
+//! (`harness::pool`); output order — and therefore every table and CSV
+//! byte — is independent of `jobs`.
 
-use std::rc::Rc;
-
-use super::{run_point, Point};
+use super::{default_jobs, run_points, Point};
 use crate::config::{
     presets, AppKind, CkptKind, ExperimentConfig, FailureKind, RecoveryKind,
 };
-use crate::runtime::XlaRuntime;
 
 /// Options common to all figure drivers.
 #[derive(Clone, Debug)]
@@ -15,6 +17,8 @@ pub struct SweepOpts {
     pub max_ranks: u32,
     /// Output directory for CSVs (created if missing).
     pub outdir: String,
+    /// Worker threads for trial execution (1 = serial; default all cores).
+    pub jobs: usize,
 }
 
 impl Default for SweepOpts {
@@ -22,6 +26,7 @@ impl Default for SweepOpts {
         SweepOpts {
             max_ranks: 1024,
             outdir: "results".to_string(),
+            jobs: default_jobs(),
         }
     }
 }
@@ -115,38 +120,40 @@ pub fn write_csv(name: &str, outdir: &str, points: &[Point]) -> std::io::Result<
 
 fn run_sweep(
     base: &ExperimentConfig,
-    xla: Option<Rc<XlaRuntime>>,
     opts: &SweepOpts,
     apps: &[AppKind],
     recoveries: &[RecoveryKind],
     failure: FailureKind,
 ) -> Vec<Point> {
-    let mut points = Vec::new();
+    let mut cfgs = Vec::new();
     for &app in apps {
         for &ranks in &sweep_ranks(app, opts.max_ranks) {
             for &rk in recoveries {
-                let cfg = point_cfg(base, app, ranks, rk, failure);
-                eprintln!(
-                    "  running {app} ranks={ranks} {rk} {failure} (trials={})...",
-                    cfg.trials
-                );
-                points.push(run_point(&cfg, xla.clone()));
+                cfgs.push(point_cfg(base, app, ranks, rk, failure));
             }
         }
     }
+    let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
+    eprintln!(
+        "  sweep: {} points / {trials} trials ({failure} failure) on {} worker(s)...",
+        cfgs.len(),
+        opts.jobs
+    );
+    let (points, stats) = run_points(&cfgs, opts.jobs);
+    eprintln!(
+        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
+        stats.wall_s,
+        stats.trials_per_sec(),
+        stats.utilization() * 100.0
+    );
     points
 }
 
 /// Fig. 4: total execution time breakdown under a process failure
 /// (CR uses file checkpoints; ULFM/Reinit++ memory — Table 2).
-pub fn fig4(
-    base: &ExperimentConfig,
-    xla: Option<Rc<XlaRuntime>>,
-    opts: &SweepOpts,
-) -> Vec<Point> {
+pub fn fig4(base: &ExperimentConfig, opts: &SweepOpts) -> Vec<Point> {
     let points = run_sweep(
         base,
-        xla,
         opts,
         &AppKind::ALL,
         &RecoveryKind::ALL,
@@ -162,14 +169,9 @@ pub fn fig4(
 
 /// Fig. 5: pure application time weak scaling (fault-free runs; shows the
 /// ULFM inflation).
-pub fn fig5(
-    base: &ExperimentConfig,
-    xla: Option<Rc<XlaRuntime>>,
-    opts: &SweepOpts,
-) -> Vec<Point> {
+pub fn fig5(base: &ExperimentConfig, opts: &SweepOpts) -> Vec<Point> {
     let points = run_sweep(
         base,
-        xla,
         opts,
         &AppKind::ALL,
         &RecoveryKind::ALL,
@@ -184,14 +186,9 @@ pub fn fig5(
 }
 
 /// Fig. 6: MPI recovery time under a process failure.
-pub fn fig6(
-    base: &ExperimentConfig,
-    xla: Option<Rc<XlaRuntime>>,
-    opts: &SweepOpts,
-) -> Vec<Point> {
+pub fn fig6(base: &ExperimentConfig, opts: &SweepOpts) -> Vec<Point> {
     let points = run_sweep(
         base,
-        xla,
         opts,
         &AppKind::ALL,
         &RecoveryKind::ALL,
@@ -208,17 +205,12 @@ pub fn fig6(
 /// Fig. 7: MPI recovery time under a node failure. As in the paper, only
 /// CR and Reinit++ (the ULFM prototype could not run node failures; ours
 /// can, but we reproduce the paper's comparison).
-pub fn fig7(
-    base: &ExperimentConfig,
-    xla: Option<Rc<XlaRuntime>>,
-    opts: &SweepOpts,
-) -> Vec<Point> {
+pub fn fig7(base: &ExperimentConfig, opts: &SweepOpts) -> Vec<Point> {
     let mut b = base.clone();
     b.spare_nodes = b.spare_nodes.max(1);
     b.ckpt = Some(CkptKind::File);
     let points = run_sweep(
         &b,
-        xla,
         opts,
         &AppKind::ALL,
         &[RecoveryKind::Cr, RecoveryKind::Reinit],
@@ -251,10 +243,10 @@ mod tests {
         let opts = SweepOpts {
             max_ranks: 32,
             outdir: "/tmp/reinitpp-test-results".into(),
+            jobs: 2,
         };
         let pts = run_sweep(
             &base,
-            None,
             &opts,
             &[AppKind::Hpccg],
             &RecoveryKind::ALL,
@@ -279,10 +271,10 @@ mod tests {
         let opts = SweepOpts {
             max_ranks: 16,
             outdir: "/tmp/reinitpp-test-results".into(),
+            jobs: 1,
         };
         let pts = run_sweep(
             &base,
-            None,
             &opts,
             &[AppKind::Hpccg],
             &[RecoveryKind::Reinit],

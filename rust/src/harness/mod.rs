@@ -3,19 +3,22 @@
 //! grid, runs `trials` seeded repetitions per point, and emits the same
 //! rows/series the paper plots — as a markdown table on stdout and a CSV
 //! under `results/`.
+//!
+//! Trials execute on the parallel sweep scheduler (`pool`): the whole
+//! sweep is flattened into (point, trial) work items, fanned out over
+//! worker threads, and merged back in (point, trial) order, so every table
+//! and CSV is bit-identical to a serial run for any `--jobs` value.
 
 mod figures;
+mod pool;
 mod tables;
 
 pub use figures::{fig4, fig5, fig6, fig7, print_points, write_csv, SweepOpts};
+pub use pool::{default_jobs, run_trials, TrialOut, TrialSpec};
 pub use tables::{print_table1, print_table2};
 
-use std::rc::Rc;
-
 use crate::config::ExperimentConfig;
-use crate::metrics::{mean_ci95, Summary};
-use crate::recovery::job::run_trial;
-use crate::runtime::XlaRuntime;
+use crate::metrics::{mean_ci95, Summary, SweepStats};
 
 /// Aggregated result of `trials` runs of one experiment point.
 #[derive(Clone, Debug)]
@@ -26,31 +29,32 @@ pub struct Point {
     pub ckpt_read: Summary,
     pub recovery: Summary,
     pub app: Summary,
-    /// Real (host) seconds spent producing this point.
+    /// Host seconds of trial compute attributed to this point (sum over its
+    /// trials' busy time; equals elapsed wall-clock only in a serial run).
     pub wall_s: f64,
 }
 
-/// Run all trials of one point and summarize (the paper's §4 methodology:
-/// independent seeded trials, mean + 95% t-CI).
-pub fn run_point(cfg: &ExperimentConfig, xla: Option<Rc<XlaRuntime>>) -> Point {
-    let t0 = std::time::Instant::now();
-    let mut total = Vec::new();
-    let mut wr = Vec::new();
-    let mut rd = Vec::new();
-    let mut rec = Vec::new();
-    let mut app = Vec::new();
-    for trial in 0..cfg.trials {
-        let r = run_trial(cfg, trial, xla.clone());
+/// Summarize one point's finished trials (the paper's §4 methodology:
+/// independent seeded trials, mean + 95% t-CI). `outs` must hold exactly
+/// this point's trials in trial order.
+fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
+    debug_assert_eq!(outs.len(), cfg.trials as usize);
+    let mut total = Vec::with_capacity(outs.len());
+    let mut wr = Vec::with_capacity(outs.len());
+    let mut rd = Vec::with_capacity(outs.len());
+    let mut rec = Vec::with_capacity(outs.len());
+    let mut app = Vec::with_capacity(outs.len());
+    for o in outs {
         assert!(
-            r.completed,
-            "trial {trial} of {}/{}/{} ranks={} did not complete",
-            cfg.app, cfg.recovery, cfg.failure, cfg.ranks
+            o.result.completed,
+            "trial {} of {}/{}/{} ranks={} did not complete",
+            o.trial, cfg.app, cfg.recovery, cfg.failure, cfg.ranks
         );
-        total.push(r.breakdown.total_s);
-        wr.push(r.breakdown.ckpt_write_s);
-        rd.push(r.breakdown.ckpt_read_s);
-        rec.push(r.breakdown.mpi_recovery_s);
-        app.push(r.breakdown.app_s());
+        total.push(o.result.breakdown.total_s);
+        wr.push(o.result.breakdown.ckpt_write_s);
+        rd.push(o.result.breakdown.ckpt_read_s);
+        rec.push(o.result.breakdown.mpi_recovery_s);
+        app.push(o.result.breakdown.app_s());
     }
     Point {
         cfg: cfg.clone(),
@@ -59,8 +63,46 @@ pub fn run_point(cfg: &ExperimentConfig, xla: Option<Rc<XlaRuntime>>) -> Point {
         ckpt_read: mean_ci95(&rd),
         recovery: mean_ci95(&rec),
         app: mean_ci95(&app),
-        wall_s: t0.elapsed().as_secs_f64(),
+        wall_s: outs.iter().map(|o| o.host_s).sum(),
     }
+}
+
+/// Run every trial of every point on `jobs` workers (trial-granular
+/// fan-out: one expensive point spreads across all cores) and merge back
+/// into per-point summaries in (point, trial) order.
+pub fn run_points(
+    cfgs: &[ExperimentConfig],
+    jobs: usize,
+) -> (Vec<Point>, SweepStats) {
+    let specs: Vec<TrialSpec> = cfgs
+        .iter()
+        .enumerate()
+        .flat_map(|(point, cfg)| {
+            (0..cfg.trials).map(move |trial| TrialSpec {
+                point,
+                trial,
+                cfg: cfg.clone(),
+            })
+        })
+        .collect();
+    let (outs, stats) = run_trials(specs, jobs);
+    let mut points = Vec::with_capacity(cfgs.len());
+    let mut off = 0;
+    for cfg in cfgs {
+        let n = cfg.trials as usize;
+        points.push(aggregate_point(cfg, &outs[off..off + n]));
+        off += n;
+    }
+    (points, stats)
+}
+
+/// Run all trials of one point and summarize. `jobs = 1` is the old serial
+/// path; more workers split the point's trials across cores.
+pub fn run_point(cfg: &ExperimentConfig, jobs: usize) -> Point {
+    run_points(std::slice::from_ref(cfg), jobs)
+        .0
+        .pop()
+        .expect("one point in, one point out")
 }
 
 #[cfg(test)]
@@ -68,8 +110,7 @@ mod tests {
     use super::*;
     use crate::config::{AppKind, FailureKind, Fidelity, RecoveryKind};
 
-    #[test]
-    fn run_point_aggregates_trials() {
+    fn quick_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::default();
         cfg.app = AppKind::Hpccg;
         cfg.recovery = RecoveryKind::Reinit;
@@ -80,9 +121,39 @@ mod tests {
         cfg.trials = 3;
         cfg.fidelity = Fidelity::Modeled;
         cfg.hpccg_nx = 4;
-        let p = run_point(&cfg, None);
+        cfg
+    }
+
+    #[test]
+    fn run_point_aggregates_trials() {
+        let p = run_point(&quick_cfg(), 1);
         assert_eq!(p.recovery.n, 3);
         assert!(p.recovery.mean > 0.2);
         assert!(p.total.mean > p.recovery.mean);
+        assert!(p.wall_s > 0.0);
+    }
+
+    #[test]
+    fn run_point_parallel_equals_serial() {
+        let serial = run_point(&quick_cfg(), 1);
+        let parallel = run_point(&quick_cfg(), 3);
+        assert_eq!(serial.total, parallel.total);
+        assert_eq!(serial.ckpt_write, parallel.ckpt_write);
+        assert_eq!(serial.ckpt_read, parallel.ckpt_read);
+        assert_eq!(serial.recovery, parallel.recovery);
+        assert_eq!(serial.app, parallel.app);
+    }
+
+    #[test]
+    fn run_points_merges_in_point_order() {
+        let mut a = quick_cfg();
+        a.recovery = RecoveryKind::Cr;
+        let b = quick_cfg();
+        let (pts, stats) = run_points(&[a, b], 4);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].cfg.recovery, RecoveryKind::Cr);
+        assert_eq!(pts[1].cfg.recovery, RecoveryKind::Reinit);
+        assert_eq!(stats.trials, 6);
+        assert!(stats.wall_s > 0.0);
     }
 }

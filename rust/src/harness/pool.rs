@@ -1,0 +1,243 @@
+//! Parallel sweep scheduler: multi-core trial execution with a
+//! deterministic merge.
+//!
+//! The evaluation grid (apps × rank counts × recovery methods × failure
+//! kinds, each point averaged over seeded trials — paper §5) is pleasingly
+//! parallel at *trial* granularity: every trial constructs its own
+//! deterministic `Sim` and shares nothing with its siblings. The `Sim` is
+//! `Rc`-based and `!Send`, so the pool never moves a simulation between
+//! threads; instead each worker runs whole trials locally — resolving the
+//! XLA runtime per worker via `RtCache`, since `Rc<XlaRuntime>` cannot
+//! cross threads either — and sends back a plain `Send` result struct.
+//!
+//! Work items are handed out from a shared injector queue at (point, trial)
+//! granularity, so one expensive point (say 1024 ranks at Full fidelity)
+//! fans out across every core instead of serializing its trials. Results
+//! are merged back in (point, trial) order, which makes markdown tables,
+//! CSVs and `mean_ci95` summaries bit-identical to a serial run regardless
+//! of thread count or completion order (`rust/tests/parallel_determinism.rs`
+//! pins this).
+//!
+//! Hand-rolled on `std::thread::scope` + `Mutex<VecDeque>` + `mpsc`: the
+//! offline build has no rayon/crossbeam, and a work-stealing deque buys
+//! nothing over a single injector lock at this granularity (a trial costs
+//! milliseconds to minutes; the lock costs nanoseconds).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::Instant;
+
+use crate::config::ExperimentConfig;
+use crate::metrics::SweepStats;
+use crate::recovery::job::{run_trial, RtCache, TrialResult};
+
+thread_local! {
+    /// One runtime cache per thread, living as long as the thread: repeated
+    /// sweeps on the same thread (the serial path, or an embedding with
+    /// persistent workers) load each artifacts directory once, not once per
+    /// `run_trials` call. Pool worker threads are per-sweep, so a parallel
+    /// Full-fidelity sweep still pays one load per worker.
+    static RT_CACHE: RefCell<RtCache> = RefCell::new(RtCache::new());
+}
+
+/// One unit of work: trial `trial` of the point at index `point` in the
+/// sweep's point list. Everything a worker needs is owned and `Send`.
+pub struct TrialSpec {
+    pub point: usize,
+    pub trial: u32,
+    pub cfg: ExperimentConfig,
+}
+
+/// A finished trial, sent back from a worker.
+pub struct TrialOut {
+    pub point: usize,
+    pub trial: u32,
+    /// Host seconds this one trial took (busy time on its worker).
+    pub host_s: f64,
+    pub result: TrialResult,
+}
+
+/// Default worker count: all available cores (`--jobs` overrides).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Sets the sweep's cancel flag if its worker thread unwinds.
+struct CancelOnPanic<'a>(&'a AtomicBool);
+
+impl Drop for CancelOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+fn run_one(spec: TrialSpec) -> TrialOut {
+    // Resolve the runtime before starting the clock: a thread's one-time
+    // XLA load must not be billed to whichever trial it runs first.
+    let xla = RT_CACHE.with(|rt| rt.borrow_mut().resolve(&spec.cfg));
+    let t0 = Instant::now();
+    let result = run_trial(&spec.cfg, spec.trial, xla);
+    TrialOut {
+        point: spec.point,
+        trial: spec.trial,
+        host_s: t0.elapsed().as_secs_f64(),
+        result,
+    }
+}
+
+/// Run every spec — serially on the caller thread for `jobs <= 1`, else on
+/// `jobs` scoped worker threads — and return the outputs sorted by
+/// (point, trial) plus host-side throughput stats.
+pub fn run_trials(specs: Vec<TrialSpec>, jobs: usize) -> (Vec<TrialOut>, SweepStats) {
+    let trials = specs.len();
+    let jobs = jobs.clamp(1, trials.max(1));
+    // Progress heartbeat on stderr (~every 10% of the sweep), so a long
+    // figure run is distinguishable from a hung one.
+    let progress_every = (trials / 10).max(1);
+    let progress = |done: usize| {
+        if done % progress_every == 0 && done < trials {
+            eprintln!("  {done}/{trials} trials done");
+        }
+    };
+    let t0 = Instant::now();
+    let mut outs: Vec<TrialOut> = if jobs == 1 {
+        specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let o = run_one(s);
+                progress(i + 1);
+                o
+            })
+            .collect()
+    } else {
+        let queue: Mutex<VecDeque<TrialSpec>> = Mutex::new(specs.into());
+        let cancelled = AtomicBool::new(false);
+        let (tx, rx) = mpsc::channel::<TrialOut>();
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                let tx = tx.clone();
+                let queue = &queue;
+                let cancelled = &cancelled;
+                scope.spawn(move || {
+                    // Fail fast: if this worker unwinds (a trial panicked),
+                    // the guard stops the others from burning through the
+                    // rest of a sweep whose results will be discarded when
+                    // the scope re-raises the panic.
+                    let _guard = CancelOnPanic(cancelled);
+                    loop {
+                        if cancelled.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        // The lock guard is a temporary: released before the
+                        // (long) trial runs.
+                        let next = queue.lock().unwrap().pop_front();
+                        let Some(spec) = next else { break };
+                        if tx.send(run_one(spec)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx); // rx drains until every worker's clone is gone
+            let mut outs = Vec::with_capacity(trials);
+            for o in rx {
+                outs.push(o);
+                progress(outs.len());
+            }
+            outs
+        })
+    };
+    outs.sort_unstable_by_key(|o| (o.point, o.trial));
+    let busy_s = outs.iter().map(|o| o.host_s).sum();
+    let stats = SweepStats {
+        jobs,
+        trials,
+        wall_s: t0.elapsed().as_secs_f64(),
+        busy_s,
+    };
+    (outs, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AppKind, FailureKind, Fidelity, RecoveryKind};
+
+    fn quick_cfg(ranks: u32, recovery: RecoveryKind) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.app = AppKind::Hpccg;
+        c.recovery = recovery;
+        c.failure = FailureKind::Process;
+        c.ranks = ranks;
+        c.iters = 5;
+        c.trials = 2;
+        c.fidelity = Fidelity::Modeled;
+        c.hpccg_nx = 4;
+        c
+    }
+
+    fn specs_for(cfgs: &[ExperimentConfig]) -> Vec<TrialSpec> {
+        cfgs.iter()
+            .enumerate()
+            .flat_map(|(point, c)| {
+                (0..c.trials).map(move |trial| TrialSpec {
+                    point,
+                    trial,
+                    cfg: c.clone(),
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let cfgs = [
+            quick_cfg(8, RecoveryKind::Reinit),
+            quick_cfg(8, RecoveryKind::Cr),
+        ];
+        let (serial, s_stats) = run_trials(specs_for(&cfgs), 1);
+        let (parallel, _) = run_trials(specs_for(&cfgs), 4);
+        assert_eq!(s_stats.trials, 4);
+        assert_eq!(s_stats.jobs, 1);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!((a.point, a.trial), (b.point, b.trial));
+            let (ra, rb) = (&a.result, &b.result);
+            assert_eq!(
+                ra.breakdown.total_s.to_bits(),
+                rb.breakdown.total_s.to_bits()
+            );
+            assert_eq!(
+                ra.breakdown.mpi_recovery_s.to_bits(),
+                rb.breakdown.mpi_recovery_s.to_bits()
+            );
+            assert_eq!(ra.digests, rb.digests);
+            assert_eq!(ra.sim_events, rb.sim_events);
+        }
+    }
+
+    #[test]
+    fn more_jobs_than_work_is_clamped() {
+        let cfgs = [quick_cfg(8, RecoveryKind::Reinit)];
+        let (outs, stats) = run_trials(specs_for(&cfgs), 64);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(stats.jobs, 2, "jobs clamped to the number of work items");
+        assert!(stats.busy_s > 0.0);
+        assert!(stats.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn empty_spec_list_is_fine() {
+        let (outs, stats) = run_trials(Vec::new(), 8);
+        assert!(outs.is_empty());
+        assert_eq!(stats.trials, 0);
+        assert_eq!(stats.trials_per_sec(), 0.0);
+    }
+}

@@ -29,6 +29,41 @@ impl Breakdown {
     }
 }
 
+/// Host-side throughput of one sweep (all points × trials): wall-clock,
+/// busy seconds summed over workers, and utilization — the parallel sweep
+/// scheduler's scoreboard (EXPERIMENTS.md §Perf "Sweep throughput").
+#[derive(Clone, Copy, Debug)]
+pub struct SweepStats {
+    /// Worker threads used (1 = the old serial path).
+    pub jobs: usize,
+    /// Trials executed across all points.
+    pub trials: usize,
+    /// Host wall-clock seconds for the whole sweep.
+    pub wall_s: f64,
+    /// Sum of per-trial host seconds across all workers (busy time).
+    pub busy_s: f64,
+}
+
+impl SweepStats {
+    pub fn trials_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.trials as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of worker capacity that ran trials (1.0 = every worker busy
+    /// for the whole sweep; low values mean tail/imbalance or tiny sweeps).
+    pub fn utilization(&self) -> f64 {
+        if self.wall_s > 0.0 && self.jobs > 0 {
+            (self.busy_s / (self.jobs as f64 * self.wall_s)).min(1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
 struct Inner {
     job_start: SimTime,
     job_end: SimTime,
@@ -166,6 +201,26 @@ mod tests {
         let b = m.breakdown();
         assert_eq!(b.mpi_recovery_s, 0.0);
         assert!((b.app_s() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweep_stats_rates() {
+        let s = SweepStats {
+            jobs: 4,
+            trials: 80,
+            wall_s: 2.0,
+            busy_s: 6.0,
+        };
+        assert_eq!(s.trials_per_sec(), 40.0);
+        assert!((s.utilization() - 0.75).abs() < 1e-12);
+        let z = SweepStats {
+            jobs: 0,
+            trials: 0,
+            wall_s: 0.0,
+            busy_s: 0.0,
+        };
+        assert_eq!(z.utilization(), 0.0);
+        assert_eq!(z.trials_per_sec(), 0.0);
     }
 
     #[test]

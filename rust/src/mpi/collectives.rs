@@ -9,11 +9,16 @@
 //! Every collective pulls a fresh tag block from the per-comm sequence
 //! counter; ranks call collectives in program order, so blocks agree without
 //! negotiation (MPI's context-id rule).
+//!
+//! Allocation discipline: tree hops decode child partials straight off the
+//! wire bytes and encode outgoing partials through the per-comm scratch
+//! buffer (`Comm::f32_payload`) — one copy into the `Rc` payload the fabric
+//! needs anyway, no per-hop `Vec<f32>`/`Vec<u8>` churn.
 
 use std::rc::Rc;
 
 use super::comm::{Comm, RecvSrc};
-use super::{bytes_to_f32s, f32s_to_bytes, MpiError, Payload, Rank, ReduceOp};
+use super::{bytes_to_f32s, MpiError, Payload, Rank, ReduceOp};
 
 impl Comm {
     /// Binomial-tree broadcast of `data` from `root`. Returns the payload on
@@ -97,16 +102,18 @@ impl Comm {
                     let m = self
                         .recv_inner(RecvSrc::From(unvr(child)), tag, true)
                         .await?;
-                    let other = bytes_to_f32s(&m.data);
-                    debug_assert_eq!(other.len(), acc.len());
-                    // Fixed order: child-subtree value combines on the right.
-                    for (a, b) in acc.iter_mut().zip(other) {
-                        *a = op.apply(*a, b);
+                    debug_assert_eq!(m.data.len(), acc.len() * 4);
+                    // Fixed order: child-subtree value combines on the
+                    // right, decoded straight off the wire bytes (no
+                    // per-hop `Vec<f32>`).
+                    for (a, c) in acc.iter_mut().zip(m.data.chunks_exact(4)) {
+                        *a = op.apply(*a, f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
                     }
                 }
             } else {
                 let parent = unvr(vr & !mask);
-                self.send_payload(parent, tag, f32s_to_bytes(&acc).into());
+                let payload = self.f32_payload(&acc);
+                self.send_payload(parent, tag, payload);
                 break;
             }
             mask <<= 1;
@@ -120,9 +127,8 @@ impl Comm {
         let rtag = self.next_coll_tag();
         let btag = self.next_coll_tag();
         let partial = self.reduce_tagged(0, data, op, rtag).await?;
-        let out = self
-            .bcast_tagged(0, f32s_to_bytes(&partial).into(), btag)
-            .await?;
+        let payload = self.f32_payload(&partial);
+        let out = self.bcast_tagged(0, payload, btag).await?;
         Ok(bytes_to_f32s(&out))
     }
 

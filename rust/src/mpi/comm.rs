@@ -27,6 +27,11 @@ pub struct Comm {
     known_failed: RefCell<HashSet<Rank>>,
     revoked: Cell<bool>,
     op_seq: Cell<u64>,
+    /// Reusable f32-serialization buffer for the collective tree
+    /// (reduce/allreduce partials): hops encode into this scratch and copy
+    /// once into the shared payload, instead of allocating a fresh
+    /// `Vec<f32>` + `Vec<u8>` per hop.
+    coll_scratch: RefCell<Vec<u8>>,
 }
 
 impl Comm {
@@ -47,6 +52,7 @@ impl Comm {
             known_failed: RefCell::new(HashSet::new()),
             revoked: Cell::new(false),
             op_seq: Cell::new(0),
+            coll_scratch: RefCell::new(Vec::new()),
         }
         .finish_init()
     }
@@ -95,6 +101,16 @@ impl Comm {
     /// `data` once into a shared payload.
     pub fn send(&self, to: Rank, tag: u64, data: &[u8]) {
         self.send_payload(to, tag, Rc::from(data));
+    }
+
+    /// Serialize f32s into a shared payload through the per-comm scratch
+    /// buffer: one copy into the `Rc` allocation the fabric needs anyway,
+    /// no intermediate `Vec` growth in the steady state.
+    pub(crate) fn f32_payload(&self, xs: &[f32]) -> Payload {
+        let mut scratch = self.coll_scratch.borrow_mut();
+        scratch.clear();
+        scratch.extend(xs.iter().flat_map(|x| x.to_le_bytes()));
+        Payload::from(&scratch[..])
     }
 
     /// Zero-copy send of an already-shared payload: collective fan-out
@@ -329,8 +345,13 @@ impl Comm {
 
 impl Drop for Comm {
     fn drop(&mut self) {
-        // Unbind only if we are still the current binding (a newer
-        // generation may have re-bound this rank's key space).
+        // Unconditional unbind + retire of this comm's (generation, rank)
+        // key. INVARIANT this relies on: a rank attaches at most once per
+        // generation — every recovery path bumps the generation before
+        // re-attaching (reinit/ulfm) or builds a fresh fabric (CR) — so no
+        // live newer binding can share our key. If a future flow ever
+        // re-attaches without bumping, this drop would tear down the new
+        // incarnation's endpoint; such a flow must bump the generation.
         let key = MpiJob::key(self.generation, self.rank);
         self.job.inner.fabric.unbind(key);
     }

@@ -40,6 +40,40 @@ pub struct TrialResult {
     pub diag_trace: Vec<(f64, u32, f64)>,
 }
 
+/// Per-worker-thread XLA runtime cache. `Rc<XlaRuntime>` cannot cross
+/// threads, so the parallel sweep scheduler (`harness::pool`) ships only
+/// `Send` inputs — an owned `ExperimentConfig` plus the trial index — and
+/// every worker resolves the runtime locally through one of these, loading
+/// it at most once per artifacts directory per thread.
+#[derive(Default)]
+pub struct RtCache {
+    loaded: HashMap<String, Rc<XlaRuntime>>,
+}
+
+impl RtCache {
+    pub fn new() -> RtCache {
+        RtCache::default()
+    }
+
+    /// The runtime for `cfg`, if its resolved fidelity needs one (lazy
+    /// load; `Modeled` runs on the pure-Rust oracle and needs nothing).
+    pub fn resolve(&mut self, cfg: &ExperimentConfig) -> Option<Rc<XlaRuntime>> {
+        if cfg.fidelity.resolve(cfg.ranks) == Fidelity::Modeled {
+            return None;
+        }
+        let rt = self
+            .loaded
+            .entry(cfg.artifacts_dir.clone())
+            .or_insert_with(|| {
+                Rc::new(
+                    XlaRuntime::load(&cfg.artifacts_dir)
+                        .expect("loading artifacts (run `make artifacts`)"),
+                )
+            });
+        Some(Rc::clone(rt))
+    }
+}
+
 /// Per-rank backend selection (fidelity, DESIGN.md §8).
 pub struct Backends {
     live: ComputeBackend,

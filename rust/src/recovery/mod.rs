@@ -22,4 +22,4 @@ pub mod ulfm;
 #[cfg(test)]
 mod tests;
 
-pub use job::{run_trial, ReinitState, TrialResult, TrialWorld};
+pub use job::{run_trial, ReinitState, RtCache, TrialResult, TrialWorld};

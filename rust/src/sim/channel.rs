@@ -16,7 +16,7 @@ use std::pin::Pin;
 use std::rc::Rc;
 use std::task::{Context, Poll, Waker};
 
-use super::executor::Sim;
+use super::executor::{Deliverable, Sim};
 use super::time::{SimDuration, SimTime};
 
 /// Error returned by `Receiver::recv`.
@@ -43,6 +43,48 @@ struct ChanInner<T> {
     queue: VecDeque<T>,
     waiter: Option<Waker>,
     closed: bool,
+    /// Messages scheduled for future delivery, parked here until their
+    /// delivery event fires. Slots are recycled through `free`, so a
+    /// steady-state send allocates nothing (the executor's `Deliver` event
+    /// carries only an `Rc` clone + the slot index — no boxed closure).
+    inflight: Vec<Option<T>>,
+    free: Vec<u32>,
+}
+
+impl<T> ChanInner<T> {
+    /// Park `msg` in a recycled (or new) inflight slot; returns the slot.
+    fn park(&mut self, msg: T) -> u32 {
+        match self.free.pop() {
+            Some(slot) => {
+                debug_assert!(self.inflight[slot as usize].is_none());
+                self.inflight[slot as usize] = Some(msg);
+                slot
+            }
+            None => {
+                self.inflight.push(Some(msg));
+                (self.inflight.len() - 1) as u32
+            }
+        }
+    }
+}
+
+impl<T: 'static> Deliverable for RefCell<ChanInner<T>> {
+    /// The delivery event fired: move the parked message into the queue
+    /// (or drop it if the channel closed meanwhile, like TCP RST).
+    fn deliver(&self, slot: u32) {
+        let mut ch = self.borrow_mut();
+        let msg = ch.inflight[slot as usize]
+            .take()
+            .expect("delivery slot must be occupied");
+        ch.free.push(slot);
+        if ch.closed {
+            return; // dropped on the floor
+        }
+        ch.queue.push_back(msg);
+        if let Some(w) = ch.waiter.take() {
+            w.wake();
+        }
+    }
 }
 
 /// Sending half (cloneable).
@@ -72,6 +114,8 @@ pub fn channel<T: 'static>(sim: &Sim) -> (Sender<T>, Receiver<T>) {
         queue: VecDeque::new(),
         waiter: None,
         closed: false,
+        inflight: Vec::new(),
+        free: Vec::new(),
     }));
     (
         Sender {
@@ -86,19 +130,13 @@ pub fn channel<T: 'static>(sim: &Sim) -> (Sender<T>, Receiver<T>) {
 }
 
 impl<T: 'static> Sender<T> {
-    /// Deliver `msg` after `delay` of virtual time.
+    /// Deliver `msg` after `delay` of virtual time. Allocation-free in the
+    /// steady state: the message parks in a recycled inflight slot and the
+    /// executor's `Deliver` event is an `Rc` clone plus the slot index.
     pub fn send(&self, msg: T, delay: SimDuration) {
-        let inner = Rc::clone(&self.inner);
-        self.sim.schedule(delay, move || {
-            let mut ch = inner.borrow_mut();
-            if ch.closed {
-                return; // dropped on the floor, like TCP RST
-            }
-            ch.queue.push_back(msg);
-            if let Some(w) = ch.waiter.take() {
-                w.wake();
-            }
-        });
+        let slot = self.inner.borrow_mut().park(msg);
+        let target: Rc<dyn Deliverable> = Rc::clone(&self.inner);
+        self.sim.schedule_deliver(delay, target, slot);
     }
 
     /// Mark the channel closed (pending undelivered messages are dropped,
@@ -330,6 +368,26 @@ mod tests {
         tx.send(1, SimDuration::from_millis(1));
         let summary = sim.run();
         assert_eq!(summary.tasks_pending, 0);
+    }
+
+    #[test]
+    fn inflight_slots_are_recycled() {
+        let sim = Sim::new();
+        let (tx, rx) = channel::<u32>(&sim);
+        // 100 concurrent sends grow the inflight slab to its high-water mark
+        for i in 0..100 {
+            tx.send(i, SimDuration::from_micros(1));
+        }
+        sim.run();
+        assert_eq!(rx.inner.borrow().inflight.len(), 100);
+        assert_eq!(rx.inner.borrow().free.len(), 100, "all slots returned");
+        // a second wave reuses the freed slots: no further growth
+        for i in 0..100 {
+            tx.send(i, SimDuration::from_micros(1));
+        }
+        sim.run();
+        assert_eq!(rx.inner.borrow().inflight.len(), 100, "slab did not grow");
+        assert_eq!(rx.len(), 200, "every message delivered");
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //! - **Per-process task index**: slots of one process form an intrusive
 //!   doubly-linked list, so `kill` is O(tasks of that process) instead of a
 //!   scan over every live task.
+//! - **Delivery events**: channel sends park the message in the channel's
+//!   recycled inflight slab and schedule an `Event::Deliver` — an `Rc`
+//!   refcount bump plus a slot index — instead of boxing one closure per
+//!   message (`sim/channel.rs`, the former top allocator on message-heavy
+//!   runs).
 //! - **Timer wheel**: near-future events (the dominant `sleep` pattern from
 //!   compute/checkpoint cost models) go to a 1 ns-resolution ring covering
 //!   the next `WHEEL_SLOTS` nanoseconds; far deadlines fall back to the
@@ -80,9 +85,18 @@ pub struct SimSummary {
     pub reason: ExitReason,
 }
 
+/// A scheduled message delivery into a channel. The message itself is
+/// already stashed in the channel's inflight slab (see `sim/channel.rs`),
+/// so the event carries only a refcounted pointer plus a slot index — no
+/// per-message closure box on the send hot path.
+pub(crate) trait Deliverable {
+    fn deliver(&self, slot: u32);
+}
+
 enum Event {
     Wake(Waker),
     Run(Box<dyn FnOnce()>),
+    Deliver(Rc<dyn Deliverable>, u32),
 }
 
 struct EventEntry {
@@ -484,11 +498,26 @@ impl Sim {
         tid
     }
 
-    /// Schedule `f` to run at `now + delay` (used for message delivery).
+    /// Schedule `f` to run at `now + delay` (control-plane events; the
+    /// channel data plane uses the allocation-free `schedule_deliver`).
     pub fn schedule(&self, delay: SimDuration, f: impl FnOnce() + 'static) {
         let mut inner = self.inner.borrow_mut();
         let time = inner.now + delay;
         inner.push_event(time, Event::Run(Box::new(f)));
+    }
+
+    /// Schedule delivery of the message stashed in `target`'s inflight slot
+    /// `slot` at `now + delay`. Allocation-free: the `Rc` clone is a
+    /// refcount bump, the ordering (`seq`) semantics match `schedule`.
+    pub(crate) fn schedule_deliver(
+        &self,
+        delay: SimDuration,
+        target: Rc<dyn Deliverable>,
+        slot: u32,
+    ) {
+        let mut inner = self.inner.borrow_mut();
+        let time = inner.now + delay;
+        inner.push_event(time, Event::Deliver(target, slot));
     }
 
     fn schedule_wake(&self, at: SimTime, w: Waker) {
@@ -684,6 +713,7 @@ impl Sim {
                 Step::Exit(reason) => return self.summary(reason),
                 Step::Fire(Event::Wake(w)) => w.wake(),
                 Step::Fire(Event::Run(f)) => f(), // runs without the borrow held
+                Step::Fire(Event::Deliver(t, slot)) => t.deliver(slot),
             }
         }
     }

@@ -5,7 +5,7 @@
 //! address space and a re-spawned rank re-binds its own key.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 
 use super::cost::NetCost;
@@ -21,9 +21,16 @@ pub struct Endpoint<M> {
 struct Inner<M> {
     endpoints: HashMap<u64, Endpoint<M>>,
     /// Messages sent to a not-yet-bound key (eager sends racing MPI_Init
-    /// wireup). Flushed on `bind`; keys that never bind keep them forever,
-    /// like packets to a crashed incarnation.
+    /// wireup). Flushed on `bind`. Only keys that were never bound buffer
+    /// here: a key that was bound and then unbound is a crashed
+    /// incarnation, and its traffic is dropped (see `retired`).
     pending: HashMap<u64, Vec<(u32, M, usize)>>,
+    /// Keys that were bound once and then unbound (dead incarnations).
+    /// Sends to them are dropped instead of buffered — eager traffic to a
+    /// crashed process must not accumulate waiting for a bind that never
+    /// comes (endpoint keys are generation-tagged, so dead keys are never
+    /// reused by recovered worlds).
+    retired: HashSet<u64>,
     messages_sent: u64,
     bytes_sent: u64,
 }
@@ -53,6 +60,7 @@ impl<M: 'static> Fabric<M> {
             inner: Rc::new(RefCell::new(Inner {
                 endpoints: HashMap::new(),
                 pending: HashMap::new(),
+                retired: HashSet::new(),
                 messages_sent: 0,
                 bytes_sent: 0,
             })),
@@ -66,6 +74,7 @@ impl<M: 'static> Fabric<M> {
         let (tx, rx) = channel::<M>(&self.sim);
         let backlog = {
             let mut inner = self.inner.borrow_mut();
+            inner.retired.remove(&key); // an explicit re-bind revives the key
             inner.endpoints.insert(key, Endpoint { tx, node });
             inner.pending.remove(&key).unwrap_or_default()
         };
@@ -77,9 +86,15 @@ impl<M: 'static> Fabric<M> {
         rx
     }
 
-    /// Remove a binding (process death).
+    /// Remove a binding (process death). The key is retired: its buffered
+    /// backlog (if any) is dropped and later eager sends are discarded
+    /// rather than buffered, so a crashed incarnation cannot accumulate
+    /// traffic forever waiting for a bind that never comes.
     pub fn unbind(&self, key: u64) {
-        self.inner.borrow_mut().endpoints.remove(&key);
+        let mut inner = self.inner.borrow_mut();
+        inner.endpoints.remove(&key);
+        inner.pending.remove(&key);
+        inner.retired.insert(key);
     }
 
     /// Node an endpoint lives on, if bound.
@@ -89,13 +104,16 @@ impl<M: 'static> Fabric<M> {
 
     /// Send `msg` (`bytes` long on the wire) from a task on `from_node` to
     /// endpoint `to`. If the endpoint is not bound yet the message is
-    /// buffered until `bind` (eager send racing wireup); returns false in
-    /// that case.
+    /// buffered until `bind` (eager send racing wireup) — unless the key is
+    /// retired (a crashed incarnation), in which case the message is
+    /// dropped like packets to a dead host. Returns false in both cases.
     pub fn send_from(&self, from_node: u32, to: u64, msg: M, bytes: usize) -> bool {
         let (tx, delay) = {
             let mut inner = self.inner.borrow_mut();
             let Some(ep) = inner.endpoints.get(&to) else {
-                inner.pending.entry(to).or_default().push((from_node, msg, bytes));
+                if !inner.retired.contains(&to) {
+                    inner.pending.entry(to).or_default().push((from_node, msg, bytes));
+                }
                 return false;
             };
             let delay = self.cost.data_delay(bytes, ep.node == from_node);
@@ -106,6 +124,11 @@ impl<M: 'static> Fabric<M> {
         };
         tx.send(msg, delay);
         true
+    }
+
+    /// Messages currently buffered for a not-yet-bound key (leak audits).
+    pub fn pending_len(&self, key: u64) -> usize {
+        self.inner.borrow().pending.get(&key).map_or(0, |v| v.len())
     }
 
     /// Traffic counters `(messages, bytes)` — used by tests and perf metrics.
@@ -154,13 +177,43 @@ mod tests {
     }
 
     #[test]
-    fn unbind_then_send_buffers_for_next_incarnation() {
+    fn crashed_incarnation_eager_sends_are_dropped() {
+        // Satellite regression (the `pending` leak): traffic to a key that
+        // was bound and then unbound (a crashed incarnation) must be
+        // dropped, not buffered forever for a bind that never comes.
         let sim = Sim::new();
         let f = fabric(&sim);
         let _rx = f.bind(5, 2);
         f.unbind(5);
-        assert!(!f.send_from(0, 5, (0, vec![]), 0));
         assert_eq!(f.node_of(5), None);
+        for i in 0..100 {
+            assert!(!f.send_from(0, 5, (i, vec![1, 2, 3]), 3));
+        }
+        assert_eq!(f.pending_len(5), 0, "no backlog accumulates");
+        assert_eq!(f.stats(), (0, 0), "dropped traffic never hits the wire");
+        // An explicit re-bind revives the key with a pristine mailbox...
+        let rx2 = f.bind(5, 3);
+        sim.run();
+        assert!(rx2.is_empty(), "crashed incarnation's sends stay dropped");
+        // ...and live delivery works again.
+        assert!(f.send_from(0, 5, (7, vec![9]), 1));
+        sim.run();
+        assert_eq!(rx2.try_recv().map(|m| m.0), Some(7));
+    }
+
+    #[test]
+    fn unbind_clears_buffered_backlog() {
+        // Eager sends buffered for a never-bound key are dropped the moment
+        // the key is unbound (its incarnation died before wireup finished).
+        let sim = Sim::new();
+        let f = fabric(&sim);
+        assert!(!f.send_from(0, 9, (1, vec![1]), 1)); // buffered (wireup race)
+        assert_eq!(f.pending_len(9), 1);
+        f.unbind(9);
+        assert_eq!(f.pending_len(9), 0);
+        let rx = f.bind(9, 0); // next incarnation
+        sim.run();
+        assert!(rx.is_empty(), "dead incarnation's backlog not replayed");
     }
 
     #[test]

@@ -1,0 +1,79 @@
+//! Determinism under parallelism: the parallel sweep scheduler must produce
+//! byte-identical artifacts for any worker count. Trials are seeded,
+//! independent simulations; the pool merges results in (point, trial)
+//! order, so every `Summary` — and therefore every CSV byte — matches the
+//! serial run exactly (acceptance criterion of the PR-2 tentpole).
+
+use reinitpp::config::{
+    AppKind, ExperimentConfig, FailureKind, Fidelity, RecoveryKind,
+};
+use reinitpp::harness::{run_points, write_csv};
+
+fn quick_cfg(ranks: u32, recovery: RecoveryKind) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.app = AppKind::Hpccg;
+    c.recovery = recovery;
+    c.failure = FailureKind::Process;
+    c.ranks = ranks;
+    c.iters = 5;
+    c.trials = 3;
+    c.fidelity = Fidelity::Modeled;
+    c.hpccg_nx = 4;
+    c
+}
+
+fn small_grid() -> Vec<ExperimentConfig> {
+    let mut cfgs = Vec::new();
+    for ranks in [16u32, 32] {
+        for rk in [RecoveryKind::Cr, RecoveryKind::Ulfm, RecoveryKind::Reinit] {
+            cfgs.push(quick_cfg(ranks, rk));
+        }
+    }
+    cfgs
+}
+
+#[test]
+fn jobs1_and_jobs4_emit_identical_csv_bytes_and_summaries() {
+    let grid = small_grid();
+    let (p1, s1) = run_points(&grid, 1);
+    let (p4, s4) = run_points(&grid, 4);
+    assert_eq!(s1.jobs, 1);
+    assert!(s4.jobs > 1, "grid has enough trials to use several workers");
+    assert_eq!(p1.len(), p4.len());
+
+    // Every Summary identical, field for field (f64 bitwise via PartialEq
+    // on finite values produced by the same deterministic trials).
+    for (a, b) in p1.iter().zip(&p4) {
+        assert_eq!(a.cfg.ranks, b.cfg.ranks);
+        assert_eq!(a.cfg.recovery, b.cfg.recovery);
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.ckpt_write, b.ckpt_write);
+        assert_eq!(a.ckpt_read, b.ckpt_read);
+        assert_eq!(a.recovery, b.recovery);
+        assert_eq!(a.app, b.app);
+    }
+
+    // And the emitted CSVs are byte-identical.
+    let base = std::env::temp_dir().join("reinitpp-par-det");
+    let (d1, d4) = (base.join("j1"), base.join("j4"));
+    write_csv("det", d1.to_str().unwrap(), &p1).unwrap();
+    write_csv("det", d4.to_str().unwrap(), &p4).unwrap();
+    let b1 = std::fs::read(d1.join("det.csv")).unwrap();
+    let b4 = std::fs::read(d4.join("det.csv")).unwrap();
+    assert!(!b1.is_empty());
+    assert_eq!(b1, b4, "CSV bytes must not depend on the worker count");
+}
+
+#[test]
+fn single_point_fans_out_and_merges_in_trial_order() {
+    // One expensive point with more trials than workers: trial-granular
+    // fan-out must still aggregate exactly like the serial path.
+    let mut cfg = quick_cfg(32, RecoveryKind::Reinit);
+    cfg.trials = 8;
+    let (serial, _) = run_points(std::slice::from_ref(&cfg), 1);
+    let (parallel, stats) = run_points(std::slice::from_ref(&cfg), 4);
+    assert_eq!(stats.trials, 8);
+    assert_eq!(serial[0].total, parallel[0].total);
+    assert_eq!(serial[0].recovery, parallel[0].recovery);
+    assert_eq!(serial[0].total.n, 8);
+}
