@@ -1,6 +1,7 @@
-//! Micro-bench: checkpoint storage engines — the Fig. 4 mechanism in
-//! isolation. Virtual write cost per scheme as writer count scales
-//! (Lustre contention vs buddy memory), plus host-side simulation cost.
+//! Micro-bench: the paper's two checkpoint schemes — the Fig. 4 mechanism
+//! in isolation. Virtual write cost per scheme as writer count scales
+//! (Lustre contention vs local+partner memory), plus host-side simulation
+//! cost. See `micro_ckpt_tiers` for the full tier-stack comparison.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -14,7 +15,7 @@ use reinitpp::sim::Sim;
 fn bench(scheme: CkptKind, ranks: u32, bytes: usize) -> (f64, f64) {
     let sim = Sim::new();
     let topo = Topology::new(ranks, 16, 0);
-    let store = CkptStore::new(&sim, scheme, topo, &Calibration::default());
+    let store = CkptStore::from_kind(&sim, scheme, topo, &Calibration::default());
     let worst = Rc::new(RefCell::new(0.0f64));
     for r in 0..ranks {
         let s2 = store.clone();

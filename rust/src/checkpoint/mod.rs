@@ -1,7 +1,13 @@
-//! Application-level checkpointing: serialization, the Table 2 policy, and
-//! the two storage schemes (file on the Lustre model; local+buddy memory).
+//! Application-level checkpointing *policy* (the paper's Table 2): which
+//! storage each recovery approach defaults to for each failure type.
+//!
+//! The storage engines themselves live in [`crate::ckptstore`] — a
+//! composable multi-tier stack (local memory, node-disjoint partner
+//! replicas, shared filesystem) with an optional asynchronous background
+//! drain. The old two-scheme (file / local+buddy) store this module used to
+//! host maps onto the stacks `fs` and `local+partner1`; [`CkptStore`] is
+//! re-exported here for the experiment drivers.
 
 pub mod policy;
-mod store;
 
-pub use store::CkptStore;
+pub use crate::ckptstore::CkptStore;

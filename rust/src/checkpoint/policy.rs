@@ -7,9 +7,14 @@
 //! | node     | file | file   | file     |
 //!
 //! CR always needs permanent storage (the job is re-deployed, local memory
-//! is gone). Memory/buddy checkpoints only survive single-process failures:
-//! a node failure can wipe both the local and the buddy copy.
+//! is gone). The paper's memory scheme only survives single-process
+//! failures because its cyclic buddy could share the owner's node; the tier
+//! stacks in [`crate::ckptstore`] generalize this — `default_stack` maps
+//! Table 2 onto them (`file` → `fs`, `memory` → `local+partner1` with
+//! node-disjoint placement), and explicit `ckpt_tiers` configs can go
+//! beyond the paper (deeper stacks, more replicas, async drain).
 
+use crate::ckptstore::StackSpec;
 use crate::config::{CkptKind, FailureKind, RecoveryKind};
 
 /// Default scheme per the paper's Table 2. Fault-free runs keep the scheme
@@ -21,6 +26,12 @@ pub fn default_scheme(recovery: RecoveryKind, failure: FailureKind) -> CkptKind 
         (_, FailureKind::Node) => CkptKind::File,
         (RecoveryKind::Ulfm | RecoveryKind::Reinit, _) => CkptKind::Memory,
     }
+}
+
+/// Table 2 as a tier stack — the route every recovery path takes when no
+/// explicit `ckpt_tiers` override is configured.
+pub fn default_stack(recovery: RecoveryKind, failure: FailureKind) -> StackSpec {
+    StackSpec::from_kind(default_scheme(recovery, failure))
 }
 
 #[cfg(test)]
@@ -38,6 +49,15 @@ mod tests {
         assert_eq!(default_scheme(Cr, Node), File);
         assert_eq!(default_scheme(Ulfm, Node), File);
         assert_eq!(default_scheme(Reinit, Node), File);
+    }
+
+    #[test]
+    fn table2_stacks() {
+        use FailureKind::*;
+        use RecoveryKind::*;
+        assert_eq!(default_stack(Cr, Process).to_string(), "fs");
+        assert_eq!(default_stack(Reinit, Process).to_string(), "local+partner1");
+        assert_eq!(default_stack(Reinit, Node).to_string(), "fs");
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Multi-tier checkpoint storage subsystem.
+//!
+//! The paper's "simple checkpointing library" offered exactly two schemes
+//! (shared-FS file, single cyclic buddy in memory). This module generalizes
+//! both into a composable *tier stack*, ordered fast → slow:
+//!
+//! - [`TierSpec::LocalMem`] — the owner rank's own memory (memcpy cost;
+//!   dies with the process).
+//! - [`TierSpec::PartnerMem`] — `replicas` copies in other ranks' memory.
+//!   Placement walks the block [`Topology`](crate::cluster::Topology) so
+//!   copies land on *distinct nodes* when `node_disjoint` (see
+//!   [`placement`]), which is what lets a k≥1 partner tier survive a whole
+//!   node failure — the ReStore observation (arXiv 2203.01107). Spare nodes
+//!   hold no ranks and are never placement targets; they stay free for
+//!   post-failure respawns.
+//! - [`TierSpec::SharedFs`] — per-rank files on the contended Lustre model
+//!   (`fs::SharedDisk`). Survives everything, including a CR re-deploy.
+//!
+//! Writes either flow through every tier synchronously (`drain_interval_s ==
+//! 0`, the paper's blocking model) or land only in the fastest tier while a
+//! background *drain* task on the DES executor trickles copies down the
+//! stack at a configurable interval and bandwidth cap (`calibration.
+//! drain_bw_gbps`). Loss is failure-domain driven: `lose_rank` /
+//! `lose_node_ranks` erase exactly the copies *hosted in the dead ranks'
+//! memory* (and any undrained items sourced from them) in every tier.
+//! Recovery loads from the cheapest surviving tier and `rebuild` restores
+//! degraded replicas after a restart. See EXPERIMENTS.md §Checkpoint tiers.
+
+pub mod placement;
+mod store;
+
+pub use placement::{buddy_of, partners_of};
+pub use store::CkptStore;
+
+use std::fmt;
+
+use crate::config::CkptKind;
+use crate::fs::DiskStats;
+
+/// One storage tier of a checkpoint stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TierSpec {
+    /// The owner rank's own memory.
+    LocalMem,
+    /// `replicas` copies in partner ranks' memory; `node_disjoint` placement
+    /// puts each copy on a different node than the owner (and each other)
+    /// whenever the topology allows it.
+    PartnerMem { replicas: u32, node_disjoint: bool },
+    /// Per-rank files on the shared parallel filesystem.
+    SharedFs,
+}
+
+impl TierSpec {
+    /// Parse one tier token: `local`/`mem`, `partner[K][.same]`, `fs`/`file`.
+    pub fn parse(tok: &str) -> Result<TierSpec, String> {
+        let t = tok.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "local" | "mem" => return Ok(TierSpec::LocalMem),
+            "fs" | "file" => return Ok(TierSpec::SharedFs),
+            _ => {}
+        }
+        if let Some(rest) = t.strip_prefix("partner") {
+            let (num, node_disjoint) = match rest.strip_suffix(".same") {
+                Some(n) => (n, false),
+                None => (rest, true),
+            };
+            let replicas: u32 = if num.is_empty() {
+                1
+            } else {
+                num.parse()
+                    .map_err(|_| format!("bad replica count in tier `{tok}`"))?
+            };
+            if replicas == 0 {
+                return Err(format!("tier `{tok}`: replicas must be >= 1"));
+            }
+            return Ok(TierSpec::PartnerMem {
+                replicas,
+                node_disjoint,
+            });
+        }
+        Err(format!(
+            "unknown checkpoint tier `{tok}` (expected local, partnerK[.same] or fs)"
+        ))
+    }
+
+    /// Canonical fast→slow position (stacks must be ordered by this).
+    fn order(&self) -> u8 {
+        match self {
+            TierSpec::LocalMem => 0,
+            TierSpec::PartnerMem { .. } => 1,
+            TierSpec::SharedFs => 2,
+        }
+    }
+}
+
+impl fmt::Display for TierSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TierSpec::LocalMem => write!(f, "local"),
+            TierSpec::SharedFs => write!(f, "fs"),
+            TierSpec::PartnerMem {
+                replicas,
+                node_disjoint: true,
+            } => write!(f, "partner{replicas}"),
+            TierSpec::PartnerMem {
+                replicas,
+                node_disjoint: false,
+            } => write!(f, "partner{replicas}.same"),
+        }
+    }
+}
+
+/// A full checkpoint stack: ordered tiers plus the drain cadence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StackSpec {
+    /// Tiers ordered fast → slow (`local` < `partnerK` < `fs`), each kind at
+    /// most once.
+    pub tiers: Vec<TierSpec>,
+    /// Seconds between background drain activations. `0` = synchronous
+    /// write-through: every `save` blocks until all tiers hold the copy.
+    pub drain_interval_s: f64,
+}
+
+impl StackSpec {
+    /// Parse a `+`-joined stack, e.g. `local+partner2+fs`. The parsed stack
+    /// is write-through; set `drain_interval_s` separately
+    /// (`ckpt_drain_interval_s` config key).
+    pub fn parse(s: &str) -> Result<StackSpec, String> {
+        let tiers = s
+            .split('+')
+            .map(TierSpec::parse)
+            .collect::<Result<Vec<_>, _>>()?;
+        let stack = StackSpec {
+            tiers,
+            drain_interval_s: 0.0,
+        };
+        stack.check()?;
+        Ok(stack)
+    }
+
+    /// Structural validity: non-empty, unique kinds, fast→slow order,
+    /// finite non-negative drain interval.
+    pub fn check(&self) -> Result<(), String> {
+        if self.tiers.is_empty() {
+            return Err("checkpoint stack has no tiers".to_string());
+        }
+        for w in self.tiers.windows(2) {
+            if w[1].order() <= w[0].order() {
+                return Err(format!(
+                    "checkpoint stack `{self}`: tiers must be unique and ordered \
+                     fast->slow (local + partnerK + fs)"
+                ));
+            }
+        }
+        if !(self.drain_interval_s >= 0.0 && self.drain_interval_s.is_finite()) {
+            return Err("drain interval must be a finite number >= 0".to_string());
+        }
+        Ok(())
+    }
+
+    /// The stack a legacy two-scheme `CkptKind` maps to. `Memory` becomes
+    /// local + one *node-disjoint* partner — the old `(rank+1) % n` buddy
+    /// silently landed on the owner's node when `ranks_per_node > 1`.
+    pub fn from_kind(kind: CkptKind) -> StackSpec {
+        let tiers = match kind {
+            CkptKind::File => vec![TierSpec::SharedFs],
+            CkptKind::Memory => vec![
+                TierSpec::LocalMem,
+                TierSpec::PartnerMem {
+                    replicas: 1,
+                    node_disjoint: true,
+                },
+            ],
+        };
+        StackSpec {
+            tiers,
+            drain_interval_s: 0.0,
+        }
+    }
+
+    /// Can a checkpoint outlive the failure of its owner process?
+    pub fn survives_process_failure(&self, ranks: u32) -> bool {
+        self.tiers.iter().any(|t| match t {
+            TierSpec::SharedFs => true,
+            TierSpec::PartnerMem { .. } => ranks >= 2,
+            TierSpec::LocalMem => false,
+        })
+    }
+
+    /// Can a checkpoint outlive the failure of its owner's whole node?
+    pub fn survives_node_failure(&self, compute_nodes: u32) -> bool {
+        self.tiers.iter().any(|t| match t {
+            TierSpec::SharedFs => true,
+            TierSpec::PartnerMem { node_disjoint, .. } => {
+                *node_disjoint && compute_nodes >= 2
+            }
+            TierSpec::LocalMem => false,
+        })
+    }
+}
+
+impl fmt::Display for StackSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, t) in self.tiers.iter().enumerate() {
+            if i > 0 {
+                write!(f, "+")?;
+            }
+            write!(f, "{t}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Cumulative byte counters of one tier (see EXPERIMENTS.md §Checkpoint
+/// tiers; exported per sweep point into the CSVs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierIo {
+    /// Payload bytes landed in this tier (one count per copy), from
+    /// synchronous saves, drain and rebuild alike.
+    pub write_bytes: u64,
+    /// Payload bytes served from this tier by recovery loads.
+    pub read_bytes: u64,
+    /// Subset of `write_bytes` written by post-restart replica rebuild.
+    pub rebuild_bytes: u64,
+    /// Subset of `write_bytes` landed by the background drain.
+    pub drained_bytes: u64,
+    /// Copies erased by `lose_rank` / `lose_node_ranks` / `lose_all_memory`.
+    pub copies_lost: u64,
+}
+
+/// Per-trial storage scoreboard: per-tier-kind traffic plus the shared
+/// disk's own counters and the drain backlog high-water mark.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StorageStats {
+    pub local: TierIo,
+    pub partner: TierIo,
+    pub fs: TierIo,
+    pub disk: DiskStats,
+    /// Peak number of checkpoints queued for background drain.
+    pub pending_peak: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_display() {
+        for s in [
+            "fs",
+            "local",
+            "local+partner1",
+            "local+partner2+fs",
+            "local+partner3.same",
+            "partner2+fs",
+        ] {
+            let stack = StackSpec::parse(s).unwrap();
+            assert_eq!(stack.to_string(), s, "display must round-trip");
+        }
+    }
+
+    #[test]
+    fn parse_aliases_and_defaults() {
+        assert_eq!(
+            StackSpec::parse("mem+partner+file").unwrap().tiers,
+            vec![
+                TierSpec::LocalMem,
+                TierSpec::PartnerMem {
+                    replicas: 1,
+                    node_disjoint: true
+                },
+                TierSpec::SharedFs
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_stacks() {
+        assert!(StackSpec::parse("").is_err());
+        assert!(StackSpec::parse("bogus").is_err());
+        assert!(StackSpec::parse("partner0").is_err());
+        assert!(StackSpec::parse("partnerx").is_err());
+        assert!(StackSpec::parse("fs+local").is_err(), "wrong order");
+        assert!(StackSpec::parse("local+local").is_err(), "duplicate kind");
+        assert!(
+            StackSpec::parse("partner1+partner2").is_err(),
+            "one partner tier max"
+        );
+    }
+
+    #[test]
+    fn legacy_kind_mapping() {
+        assert_eq!(
+            StackSpec::from_kind(CkptKind::File).to_string(),
+            "fs"
+        );
+        assert_eq!(
+            StackSpec::from_kind(CkptKind::Memory).to_string(),
+            "local+partner1"
+        );
+    }
+
+    #[test]
+    fn survivability_predicates() {
+        let fs = StackSpec::parse("fs").unwrap();
+        let mem = StackSpec::parse("local+partner1").unwrap();
+        let same = StackSpec::parse("local+partner1.same").unwrap();
+        let local = StackSpec::parse("local").unwrap();
+        assert!(fs.survives_process_failure(1) && fs.survives_node_failure(1));
+        assert!(mem.survives_process_failure(2));
+        assert!(!mem.survives_process_failure(1), "no partner to hold a copy");
+        assert!(mem.survives_node_failure(2), "node-disjoint replica");
+        assert!(!mem.survives_node_failure(1), "single node: nowhere safe");
+        assert!(!same.survives_node_failure(4), "same-node buddy may die too");
+        assert!(!local.survives_process_failure(8));
+    }
+}

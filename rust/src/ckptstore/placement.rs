@@ -1,0 +1,173 @@
+//! Replica placement: which ranks host copies of a rank's checkpoint.
+//!
+//! Placement walks the block [`Topology`] in cyclic rank order starting at
+//! `rank + 1`, preferring hosts on nodes that neither the owner nor an
+//! already-chosen replica occupies — so a `node_disjoint` partner tier keeps
+//! every copy on a distinct node whenever the allocation has enough compute
+//! nodes, which is exactly what lets it survive a whole-node failure.
+//!
+//! Spare nodes (paper §3.2 over-provisioning) hold no ranks, so they are
+//! never placement targets: replicas live in running ranks' memory, and the
+//! spares stay free for post-failure respawns.
+//!
+//! When disjointness cannot be met (fewer distinct nodes than replicas, or
+//! `node_disjoint == false`), the remaining slots fall back to the
+//! cyclically-nearest unused ranks — replica *count* is kept, disjointness
+//! is best-effort. The old two-scheme store's `(rank + 1) % n` buddy is the
+//! degenerate single-node case of this walk.
+
+use crate::cluster::Topology;
+
+/// The `replicas` partner ranks hosting copies of `rank`'s checkpoint,
+/// in deterministic placement order. Never includes `rank` itself; returns
+/// fewer than `replicas` hosts only when the world has too few ranks.
+pub fn partners_of(topo: &Topology, rank: u32, replicas: u32, node_disjoint: bool) -> Vec<u32> {
+    let n = topo.ranks;
+    debug_assert!(rank < n);
+    let want = replicas.min(n.saturating_sub(1)) as usize;
+    let mut picked: Vec<u32> = Vec::with_capacity(want);
+    if want == 0 {
+        return picked;
+    }
+    if node_disjoint {
+        let mut used_nodes = vec![topo.home_node(rank)];
+        for off in 1..n {
+            if picked.len() == want {
+                break;
+            }
+            let cand = (rank + off) % n;
+            let node = topo.home_node(cand);
+            if !used_nodes.contains(&node) {
+                used_nodes.push(node);
+                picked.push(cand);
+            }
+        }
+    }
+    // Non-disjoint mode, or not enough distinct nodes: fill the remaining
+    // replica slots with the cyclically-nearest unused ranks.
+    for off in 1..n {
+        if picked.len() == want {
+            break;
+        }
+        let cand = (rank + off) % n;
+        if !picked.contains(&cand) {
+            picked.push(cand);
+        }
+    }
+    picked
+}
+
+/// The single-replica ("buddy") partner of `rank`. Unlike the removed
+/// two-scheme store's `(rank + 1) % n`, the buddy lands on a *different
+/// node* whenever the topology has more than one compute node, so a buddy
+/// copy survives its owner's node. `None` only for a 1-rank world.
+pub fn buddy_of(topo: &Topology, rank: u32) -> Option<u32> {
+    partners_of(topo, rank, 1, true).first().copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression pin for the old `buddy_of` bug: with `ranks_per_node > 1`
+    /// the cyclic rank+1 buddy sat on the owner's own node, silently
+    /// weakening the memory scheme. The placement walk must put the buddy on
+    /// a different node for *every* rank whenever >= 2 compute nodes exist.
+    #[test]
+    fn buddy_is_node_disjoint_whenever_possible() {
+        for (ranks, rpn) in [(32, 16), (8, 2), (20, 16), (12, 3)] {
+            let t = Topology::new(ranks, rpn, 1);
+            assert!(t.compute_nodes >= 2, "test setup");
+            for r in 0..ranks {
+                let b = buddy_of(&t, r).unwrap();
+                assert_ne!(
+                    t.home_node(b),
+                    t.home_node(r),
+                    "rank {r}'s buddy {b} shares its node ({ranks} ranks, {rpn}/node)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_falls_back_to_cyclic_buddy() {
+        let t = Topology::new(4, 16, 0);
+        for r in 0..4 {
+            assert_eq!(buddy_of(&t, r), Some((r + 1) % 4));
+        }
+    }
+
+    #[test]
+    fn k_replicas_land_on_k_distinct_nodes() {
+        let t = Topology::new(12, 4, 0); // 3 nodes
+        for r in 0..12 {
+            let hosts = partners_of(&t, r, 2, true);
+            assert_eq!(hosts.len(), 2);
+            let mut nodes: Vec<u32> = hosts.iter().map(|&h| t.home_node(h)).collect();
+            nodes.push(t.home_node(r));
+            nodes.sort_unstable();
+            nodes.dedup();
+            assert_eq!(nodes.len(), 3, "owner + 2 replicas on 3 distinct nodes");
+        }
+    }
+
+    #[test]
+    fn replica_count_kept_when_nodes_run_out() {
+        // 2 nodes, 3 replicas wanted: one disjoint pick, two cyclic fills.
+        let t = Topology::new(4, 2, 0);
+        let hosts = partners_of(&t, 0, 3, true);
+        assert_eq!(hosts.len(), 3);
+        assert_eq!(hosts[0], 2, "first pick prefers the other node");
+        assert!(!hosts.contains(&0), "never self");
+        let mut sorted = hosts.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "no duplicate hosts");
+    }
+
+    #[test]
+    fn non_disjoint_mode_is_plain_cyclic() {
+        let t = Topology::new(8, 4, 0);
+        assert_eq!(partners_of(&t, 1, 2, false), vec![2, 3]);
+        assert_eq!(partners_of(&t, 7, 2, false), vec![0, 1]);
+    }
+
+    #[test]
+    fn replicas_capped_at_world_size() {
+        let t = Topology::new(3, 1, 0);
+        assert_eq!(partners_of(&t, 0, 10, true).len(), 2);
+        let lone = Topology::new(1, 1, 0);
+        assert!(partners_of(&lone, 0, 1, true).is_empty());
+        assert_eq!(buddy_of(&lone, 0), None);
+    }
+
+    /// Property sweep: placement never targets the owner, never duplicates a
+    /// host, never targets a spare node, and is deterministic.
+    #[test]
+    fn placement_invariants_over_many_topologies() {
+        for (ranks, rpn, spares) in
+            [(7, 3, 2), (16, 16, 1), (100, 7, 3), (9, 1, 0), (24, 8, 2)]
+        {
+            let t = Topology::new(ranks, rpn, spares);
+            for r in 0..ranks {
+                for k in [1, 2, 4] {
+                    for nd in [true, false] {
+                        let a = partners_of(&t, r, k, nd);
+                        assert_eq!(a, partners_of(&t, r, k, nd), "deterministic");
+                        assert!(!a.contains(&r), "never self");
+                        let mut s = a.clone();
+                        s.sort_unstable();
+                        s.dedup();
+                        assert_eq!(s.len(), a.len(), "no duplicates");
+                        for &h in &a {
+                            assert!(
+                                t.home_node(h) < t.compute_nodes,
+                                "spare nodes hold no replicas"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,882 @@
+//! The tiered checkpoint store (see module docs in `ckptstore/mod.rs`).
+//!
+//! All payload bytes live outside the simulated processes, so the fault
+//! injector models memory destruction explicitly via `lose_rank` /
+//! `lose_node_ranks` / `lose_all_memory`. Copies are keyed by
+//! `(owner rank, host rank)`: losing a host erases exactly the copies that
+//! sat in its memory, across every in-memory tier — the filesystem tier's
+//! pseudo-host is never lost.
+//!
+//! Each copy retains the last two iterations per rank (ranks can be one
+//! checkpoint apart when a failure lands; global restart agrees on the
+//! newest *globally complete* one via an allreduce-min after recovery).
+//!
+//! With an async drain, `save` lands only the fastest tier and queues the
+//! payload; a background task on the DES executor flushes the queue in
+//! ascending iteration order, landing each iteration's batch atomically
+//! after its costs are charged. That batching is load-bearing: every
+//! rank's drained prefix ends at the same iteration boundary, so the
+//! post-failure allreduce-min (which can agree on the victim's older
+//! drained iteration) always names an iteration every rank can still
+//! serve from *some* tier — each copy slot retains two iterations, and a
+//! partial batch would let a lagging rank's retained pair skip past the
+//! agreed one. Items queued from a dead rank's buffer are dropped; a batch
+//! already in flight lands (the bytes left the source).
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use super::placement::partners_of;
+use super::{StackSpec, StorageStats, TierIo, TierSpec};
+use crate::cluster::Topology;
+use crate::config::{Calibration, CkptKind};
+use crate::fs::SharedDisk;
+use crate::sim::{ProcId, Sim, SimDuration};
+use crate::transport::NetCost;
+
+/// Pseudo-host id for copies living on the parallel filesystem rather than
+/// in any rank's memory; never erased by loss events.
+const FS_HOST: u32 = u32::MAX;
+
+/// Per-copy slot holding the last two checkpoints of one owner.
+#[derive(Default, Clone)]
+struct Slot {
+    /// (iteration, payload), ascending by iteration. Length <= 2.
+    entries: Vec<(u32, Rc<Vec<u8>>)>,
+}
+
+impl Slot {
+    /// Straight-line two-slot insert: overwrite a matching iteration, fill
+    /// an empty slot, or displace the older entry — anything older than both
+    /// retained checkpoints is dropped.
+    fn put(&mut self, iter: u32, data: Rc<Vec<u8>>) {
+        if let Some(e) = self.entries.iter_mut().find(|(i, _)| *i == iter) {
+            e.1 = data;
+            return;
+        }
+        if self.entries.len() < 2 {
+            self.entries.push((iter, data));
+        } else if iter > self.entries[0].0 {
+            // newer than the oldest retained entry: displace it
+            self.entries[0] = (iter, data);
+        } else {
+            return; // older than both retained checkpoints
+        }
+        if self.entries.len() == 2 && self.entries[0].0 > self.entries[1].0 {
+            self.entries.swap(0, 1);
+        }
+    }
+
+    fn get(&self, iter: u32) -> Option<Rc<Vec<u8>>> {
+        self.entries
+            .iter()
+            .find(|(i, _)| *i == iter)
+            .map(|(_, d)| Rc::clone(d))
+    }
+
+    fn latest(&self) -> Option<u32> {
+        self.entries.last().map(|(i, _)| *i)
+    }
+
+    /// Would `put(iter, ..)` actually retain an entry for `iter`? False when
+    /// both retained checkpoints are already newer — the two-slot buffer
+    /// drops such an insert on the floor.
+    fn would_retain(&self, iter: u32) -> bool {
+        self.entries.len() < 2
+            || self.entries.iter().any(|(i, _)| *i == iter)
+            || iter > self.entries[0].0
+    }
+}
+
+/// One tier's copies: owner rank -> [(host rank, slot)].
+struct TierState {
+    copies: HashMap<u32, Vec<(u32, Slot)>>,
+    io: TierIo,
+}
+
+struct Inner {
+    tiers: Vec<TierState>,
+    /// (iteration, owner) -> payload awaiting background drain to the tiers
+    /// below the synchronous one. BTreeMap order IS the flush order.
+    pending: BTreeMap<(u32, u32), Rc<Vec<u8>>>,
+    /// A flush activation is scheduled or running.
+    drain_armed: bool,
+    pending_peak: u64,
+}
+
+/// Shared tiered checkpoint store for one experiment trial (cheap clone).
+#[derive(Clone)]
+pub struct CkptStore {
+    sim: Sim,
+    specs: Rc<Vec<TierSpec>>,
+    /// Placement hosts per tier per owner rank, precomputed once — the
+    /// topology is immutable, so the save/drain/rebuild hot paths must not
+    /// re-walk it per checkpoint.
+    placements: Rc<Vec<Vec<Vec<u32>>>>,
+    topo: Topology,
+    disk: SharedDisk,
+    net: NetCost,
+    mem_bytes_per_sec: f64,
+    drain_interval: SimDuration,
+    drain_bps: f64,
+    /// The drain daemon's process id (outside the cluster: it models the
+    /// storage subsystem, so cluster kills never target it). `None` in
+    /// write-through mode.
+    drain_proc: Option<ProcId>,
+    inner: Rc<RefCell<Inner>>,
+}
+
+impl CkptStore {
+    pub fn new(sim: &Sim, stack: &StackSpec, topo: Topology, calib: &Calibration) -> Self {
+        stack.check().expect("invalid checkpoint stack");
+        let drain_interval = SimDuration::from_secs_f64(stack.drain_interval_s);
+        // A drain only exists when there are tiers below the sync one.
+        let drain_on = drain_interval > SimDuration::ZERO && stack.tiers.len() > 1;
+        let placements: Vec<Vec<Vec<u32>>> = stack
+            .tiers
+            .iter()
+            .map(|spec| {
+                (0..topo.ranks)
+                    .map(|r| match *spec {
+                        TierSpec::LocalMem => vec![r],
+                        TierSpec::PartnerMem {
+                            replicas,
+                            node_disjoint,
+                        } => partners_of(&topo, r, replicas, node_disjoint),
+                        TierSpec::SharedFs => vec![FS_HOST],
+                    })
+                    .collect()
+            })
+            .collect();
+        CkptStore {
+            sim: sim.clone(),
+            specs: Rc::new(stack.tiers.clone()),
+            placements: Rc::new(placements),
+            topo,
+            disk: SharedDisk::from_calib(sim, calib),
+            net: NetCost::from_calib(calib),
+            mem_bytes_per_sec: calib.mem_bw_gbps * 1e9,
+            drain_interval,
+            drain_bps: calib.drain_bw_gbps * 1e9,
+            drain_proc: drain_on.then(|| sim.spawn_process("ckpt-drain")),
+            inner: Rc::new(RefCell::new(Inner {
+                tiers: stack
+                    .tiers
+                    .iter()
+                    .map(|_| TierState {
+                        copies: HashMap::new(),
+                        io: TierIo::default(),
+                    })
+                    .collect(),
+                pending: BTreeMap::new(),
+                drain_armed: false,
+                pending_peak: 0,
+            })),
+        }
+    }
+
+    /// Legacy two-scheme constructor (paper Table 2 kinds).
+    pub fn from_kind(sim: &Sim, kind: CkptKind, topo: Topology, calib: &Calibration) -> Self {
+        CkptStore::new(sim, &StackSpec::from_kind(kind), topo, calib)
+    }
+
+    /// The tier stack this store runs, fast → slow.
+    pub fn stack(&self) -> &[TierSpec] {
+        &self.specs
+    }
+
+    fn memcpy_cost(&self, bytes: usize) -> SimDuration {
+        SimDuration::from_secs_f64(bytes as f64 / self.mem_bytes_per_sec)
+    }
+
+    /// One fabric hop between the owner's current `node` and `host`'s home.
+    fn hop_cost(&self, bytes: usize, host: u32, node: u32) -> SimDuration {
+        self.net
+            .data_delay(bytes, self.topo.home_node(host) == node)
+    }
+
+    /// The placement hosts of `owner`'s copies in tier `tier`.
+    fn hosts(&self, tier: usize, owner: u32) -> &[u32] {
+        &self.placements[tier][owner as usize]
+    }
+
+    /// Land `data` for `(owner, iter)` in `tier`'s copy at `host`.
+    fn install(&self, tier: usize, owner: u32, host: u32, iter: u32, data: &Rc<Vec<u8>>) {
+        let mut inner = self.inner.borrow_mut();
+        let t = &mut inner.tiers[tier];
+        let v = t.copies.entry(owner).or_default();
+        let slot = match v.iter().position(|(h, _)| *h == host) {
+            Some(pos) => &mut v[pos].1,
+            None => {
+                v.push((host, Slot::default()));
+                &mut v.last_mut().expect("just pushed").1
+            }
+        };
+        slot.put(iter, Rc::clone(data));
+        t.io.write_bytes += data.len() as u64;
+    }
+
+    fn note_drained(&self, tier: usize, bytes: u64) {
+        self.inner.borrow_mut().tiers[tier].io.drained_bytes += bytes;
+    }
+
+    /// Write one tier fully (cost + install of every copy).
+    async fn write_tier(&self, tier: usize, owner: u32, node: u32, iter: u32, data: &Rc<Vec<u8>>) {
+        match self.specs[tier] {
+            TierSpec::LocalMem => {
+                self.sim.sleep(self.memcpy_cost(data.len())).await;
+                self.install(tier, owner, owner, iter, data);
+            }
+            TierSpec::PartnerMem { .. } => {
+                // one NIC: replica pushes serialize on the owner's link
+                for &host in self.hosts(tier, owner) {
+                    self.sim.sleep(self.hop_cost(data.len(), host, node)).await;
+                    self.install(tier, owner, host, iter, data);
+                }
+            }
+            TierSpec::SharedFs => {
+                self.disk.write(data.len() as u64).await;
+                self.install(tier, owner, FS_HOST, iter, data);
+            }
+        }
+    }
+
+    /// Store rank `rank`'s state for `iter`, awaiting the virtual storage
+    /// cost. `node` is the rank's current placement. Write-through stacks
+    /// (drain interval 0) land the copy in every tier before returning;
+    /// with an async drain only the fastest tier is written here and the
+    /// rest trickles down in the background.
+    pub async fn save(&self, rank: u32, node: u32, iter: u32, data: Vec<u8>) {
+        let data = Rc::new(data);
+        if self.drain_proc.is_none() {
+            for tier in 0..self.specs.len() {
+                self.write_tier(tier, rank, node, iter, &data).await;
+            }
+            return;
+        }
+        self.write_tier(0, rank, node, iter, &data).await;
+        {
+            let mut inner = self.inner.borrow_mut();
+            inner.pending.insert((iter, rank), Rc::clone(&data));
+            let backlog = inner.pending.len() as u64;
+            inner.pending_peak = inner.pending_peak.max(backlog);
+        }
+        self.arm_drain();
+    }
+
+    /// Schedule a flush activation `drain_interval` from now, unless one is
+    /// already scheduled or running.
+    fn arm_drain(&self) {
+        let Some(proc) = self.drain_proc else { return };
+        {
+            let mut inner = self.inner.borrow_mut();
+            if inner.drain_armed || inner.pending.is_empty() {
+                return;
+            }
+            inner.drain_armed = true;
+        }
+        let store = self.clone();
+        let sim = self.sim.clone();
+        self.sim.schedule(self.drain_interval, move || {
+            let store2 = store.clone();
+            sim.spawn(proc, async move { store2.flush().await });
+        });
+    }
+
+    /// Background drain: move every queued checkpoint down the stack, paced
+    /// at `calibration.drain_bw_gbps` per item; filesystem copies
+    /// additionally go through the contended disk model. The queue drains
+    /// in ascending iteration order, and each iteration's batch *lands
+    /// atomically* after its costs are charged — so every rank's drained
+    /// prefix ends at a common iteration boundary, which is what keeps the
+    /// post-failure allreduce-min agreement loadable on every surviving
+    /// tier (see the module docs).
+    async fn flush(&self) {
+        loop {
+            // pop the whole lowest-iteration batch
+            let (iter, batch) = {
+                let mut inner = self.inner.borrow_mut();
+                let Some(((iter, owner), data)) = inner.pending.pop_first() else {
+                    break;
+                };
+                let mut batch = vec![(owner, data)];
+                while let Some((&(i, _), _)) = inner.pending.first_key_value() {
+                    if i != iter {
+                        break;
+                    }
+                    let ((_, o), d) = inner.pending.pop_first().expect("peeked");
+                    batch.push((o, d));
+                }
+                (iter, batch)
+            };
+            // charge the batch's costs: trickle pacing per item (the cap is
+            // the whole point of draining off the app's critical path),
+            // plus the contended disk for filesystem copies
+            for (_owner, data) in &batch {
+                self.sim
+                    .sleep(SimDuration::from_secs_f64(
+                        data.len() as f64 / self.drain_bps,
+                    ))
+                    .await;
+                for tier in 1..self.specs.len() {
+                    if matches!(self.specs[tier], TierSpec::SharedFs) {
+                        self.disk.write(data.len() as u64).await;
+                    }
+                }
+            }
+            // land the whole iteration at once (no awaits in between)
+            for (owner, data) in &batch {
+                let len = data.len();
+                for tier in 1..self.specs.len() {
+                    match self.specs[tier] {
+                        TierSpec::LocalMem => {} // tier 0 by construction
+                        TierSpec::PartnerMem { .. } => {
+                            let hosts = self.hosts(tier, *owner);
+                            for &host in hosts {
+                                self.install(tier, *owner, host, iter, data);
+                            }
+                            self.note_drained(tier, (len * hosts.len()) as u64);
+                        }
+                        TierSpec::SharedFs => {
+                            self.install(tier, *owner, FS_HOST, iter, data);
+                            self.note_drained(tier, len as u64);
+                        }
+                    }
+                }
+            }
+        }
+        let rearm = {
+            let mut inner = self.inner.borrow_mut();
+            inner.drain_armed = false;
+            !inner.pending.is_empty()
+        };
+        if rearm {
+            // items arrived while the last ones were in flight
+            self.arm_drain();
+        }
+    }
+
+    /// Newest iteration available for `rank` in any surviving tier.
+    pub fn latest_iter(&self, rank: u32) -> Option<u32> {
+        let inner = self.inner.borrow();
+        let mut best: Option<u32> = None;
+        for t in &inner.tiers {
+            if let Some(copies) = t.copies.get(&rank) {
+                for (_host, slot) in copies {
+                    best = best.max(slot.latest());
+                }
+            }
+        }
+        best
+    }
+
+    /// Load rank `rank`'s checkpoint of `iter` from the cheapest surviving
+    /// tier, awaiting that tier's retrieval cost. `None` if every copy is
+    /// gone. The payload is shared (`Rc`): the *virtual* copy cost is
+    /// charged here, the host pays no deep copy (EXPERIMENTS.md §Perf).
+    pub async fn load(&self, rank: u32, node: u32, iter: u32) -> Option<Rc<Vec<u8>>> {
+        for tier in 0..self.specs.len() {
+            let found: Option<(u32, Rc<Vec<u8>>)> = {
+                let inner = self.inner.borrow();
+                inner.tiers[tier].copies.get(&rank).and_then(|v| {
+                    v.iter()
+                        .find_map(|(h, s)| s.get(iter).map(|d| (*h, d)))
+                })
+            };
+            let Some((host, data)) = found else { continue };
+            match self.specs[tier] {
+                TierSpec::LocalMem => self.sim.sleep(self.memcpy_cost(data.len())).await,
+                TierSpec::PartnerMem { .. } => {
+                    self.sim.sleep(self.hop_cost(data.len(), host, node)).await
+                }
+                TierSpec::SharedFs => self.disk.read(data.len() as u64).await,
+            }
+            self.inner.borrow_mut().tiers[tier].io.read_bytes += data.len() as u64;
+            return Some(data);
+        }
+        None
+    }
+
+    /// Re-establish every missing copy of `(rank, iter)` — post-restart
+    /// replica rebuild for checkpoints degraded by the failure. The caller
+    /// passes the payload it just loaded; each reinstated copy is charged
+    /// its tier's write cost and counted in `rebuild_bytes`. No-op (and
+    /// zero-cost) when nothing is degraded.
+    pub async fn rebuild(&self, rank: u32, node: u32, iter: u32, data: &Rc<Vec<u8>>) {
+        for tier in 0..self.specs.len() {
+            for &host in self.hosts(tier, rank) {
+                // A copy needs rebuilding only if the slot lacks `iter` AND
+                // would actually retain it: a slot already holding two newer
+                // checkpoints (stale-but-identical pre-rollback state, or a
+                // drain that ran ahead) must not be charged for an install
+                // that `Slot::put` would drop on the floor.
+                let needs = {
+                    let inner = self.inner.borrow();
+                    match inner.tiers[tier]
+                        .copies
+                        .get(&rank)
+                        .and_then(|v| v.iter().find(|(h, _)| *h == host))
+                    {
+                        Some((_, s)) => s.get(iter).is_none() && s.would_retain(iter),
+                        None => true,
+                    }
+                };
+                if !needs {
+                    continue;
+                }
+                match self.specs[tier] {
+                    TierSpec::LocalMem => self.sim.sleep(self.memcpy_cost(data.len())).await,
+                    TierSpec::PartnerMem { .. } => {
+                        self.sim.sleep(self.hop_cost(data.len(), host, node)).await
+                    }
+                    TierSpec::SharedFs => self.disk.write(data.len() as u64).await,
+                }
+                self.install(tier, rank, host, iter, data);
+                self.inner.borrow_mut().tiers[tier].io.rebuild_bytes += data.len() as u64;
+            }
+        }
+    }
+
+    /// Model the memory loss of a failed process: every in-memory copy it
+    /// hosted — its own local checkpoint and any replica it held for other
+    /// ranks — is erased in every tier, and undrained items sourced from its
+    /// local buffer are dropped. Filesystem copies survive.
+    pub fn lose_rank(&self, rank: u32) {
+        let mut inner = self.inner.borrow_mut();
+        let inner = &mut *inner;
+        for (t, spec) in inner.tiers.iter_mut().zip(self.specs.iter()) {
+            if matches!(spec, TierSpec::SharedFs) {
+                continue;
+            }
+            let TierState { copies, io } = t;
+            let mut lost = 0u64;
+            for v in copies.values_mut() {
+                let before = v.len();
+                v.retain(|(h, _)| *h != rank);
+                lost += (before - v.len()) as u64;
+            }
+            io.copies_lost += lost;
+        }
+        inner.pending.retain(|&(_, owner), _| owner != rank);
+    }
+
+    /// Memory loss of a whole node (the fault injector passes the node's
+    /// resident ranks).
+    pub fn lose_node_ranks(&self, ranks: &[u32]) {
+        for &r in ranks {
+            self.lose_rank(r);
+        }
+    }
+
+    /// A job-wide abort (CR re-deploy): every process dies, so every
+    /// in-memory tier and the drain queue are wiped. Only the parallel
+    /// filesystem survives.
+    pub fn lose_all_memory(&self) {
+        let mut inner = self.inner.borrow_mut();
+        let inner = &mut *inner;
+        for (t, spec) in inner.tiers.iter_mut().zip(self.specs.iter()) {
+            if matches!(spec, TierSpec::SharedFs) {
+                continue;
+            }
+            let lost: u64 = t.copies.values().map(|v| v.len() as u64).sum();
+            t.copies.clear();
+            t.io.copies_lost += lost;
+        }
+        inner.pending.clear();
+    }
+
+    /// Per-tier-kind traffic counters plus the shared disk's own stats.
+    pub fn storage_stats(&self) -> StorageStats {
+        let inner = self.inner.borrow();
+        let mut s = StorageStats {
+            disk: self.disk.stats(),
+            pending_peak: inner.pending_peak,
+            ..Default::default()
+        };
+        for (t, spec) in inner.tiers.iter().zip(self.specs.iter()) {
+            match spec {
+                TierSpec::LocalMem => s.local = t.io,
+                TierSpec::PartnerMem { .. } => s.partner = t.io,
+                TierSpec::SharedFs => s.fs = t.io,
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    fn stack(s: &str) -> StackSpec {
+        StackSpec::parse(s).unwrap()
+    }
+
+    fn store_on(spec: &str, topo: Topology) -> (Sim, CkptStore) {
+        let sim = Sim::new();
+        let s = CkptStore::new(&sim, &stack(spec), topo, &Calibration::default());
+        (sim, s)
+    }
+
+    fn store(spec: &str, ranks: u32) -> (Sim, CkptStore) {
+        store_on(spec, Topology::new(ranks, 16, 0))
+    }
+
+    fn block_on_save(sim: &Sim, s: &CkptStore, rank: u32, iter: u32, data: Vec<u8>) {
+        let p = sim.spawn_process("saver");
+        let s2 = s.clone();
+        let node = s.topo.home_node(rank);
+        sim.spawn(p, async move {
+            s2.save(rank, node, iter, data).await;
+        });
+        sim.run();
+    }
+
+    fn block_on_load(sim: &Sim, s: &CkptStore, rank: u32, iter: u32) -> Option<Vec<u8>> {
+        let p = sim.spawn_process("loader");
+        let s2 = s.clone();
+        let node = s.topo.home_node(rank);
+        let out = Rc::new(RefCell::new(None));
+        let o2 = Rc::clone(&out);
+        sim.spawn(p, async move {
+            let loaded = s2.load(rank, node, iter).await.map(|d| d.as_ref().clone());
+            *o2.borrow_mut() = Some(loaded);
+        });
+        sim.run();
+        Rc::try_unwrap(out).ok().unwrap().into_inner().unwrap()
+    }
+
+    // ---- Slot edge cases ----
+
+    fn slot_iters(s: &Slot) -> Vec<u32> {
+        s.entries.iter().map(|(i, _)| *i).collect()
+    }
+
+    #[test]
+    fn slot_duplicate_iteration_overwrites_payload() {
+        let mut s = Slot::default();
+        s.put(3, Rc::new(vec![1]));
+        s.put(3, Rc::new(vec![2]));
+        assert_eq!(slot_iters(&s), vec![3]);
+        assert_eq!(s.get(3).unwrap().as_ref(), &vec![2]);
+    }
+
+    #[test]
+    fn slot_out_of_order_insert_keeps_ascending_order() {
+        let mut s = Slot::default();
+        s.put(5, Rc::new(vec![5]));
+        s.put(3, Rc::new(vec![3]));
+        assert_eq!(slot_iters(&s), vec![3, 5]);
+        assert_eq!(s.latest(), Some(5));
+    }
+
+    #[test]
+    fn slot_displaces_older_entry() {
+        let mut s = Slot::default();
+        s.put(3, Rc::new(vec![3]));
+        s.put(5, Rc::new(vec![5]));
+        s.put(7, Rc::new(vec![7]));
+        assert_eq!(slot_iters(&s), vec![5, 7]);
+        assert!(s.get(3).is_none(), "displaced");
+    }
+
+    #[test]
+    fn slot_out_of_order_displacement_stays_sorted() {
+        let mut s = Slot::default();
+        s.put(5, Rc::new(vec![5]));
+        s.put(7, Rc::new(vec![7]));
+        s.put(6, Rc::new(vec![6])); // displaces 5, slots in below 7
+        assert_eq!(slot_iters(&s), vec![6, 7]);
+        assert_eq!(s.latest(), Some(7));
+    }
+
+    #[test]
+    fn slot_drops_entries_older_than_both_retained() {
+        let mut s = Slot::default();
+        s.put(5, Rc::new(vec![5]));
+        s.put(7, Rc::new(vec![7]));
+        s.put(4, Rc::new(vec![4]));
+        assert_eq!(slot_iters(&s), vec![5, 7], "too-old insert ignored");
+    }
+
+    // ---- save/load round trips per stack ----
+
+    #[test]
+    fn fs_save_load_roundtrip() {
+        let (sim, s) = store("fs", 4);
+        block_on_save(&sim, &s, 2, 5, vec![1, 2, 3]);
+        assert_eq!(s.latest_iter(2), Some(5));
+        assert_eq!(block_on_load(&sim, &s, 2, 5), Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn memory_stack_save_load_roundtrip() {
+        let (sim, s) = store("local+partner1", 4);
+        block_on_save(&sim, &s, 2, 5, vec![9; 100]);
+        assert_eq!(block_on_load(&sim, &s, 2, 5), Some(vec![9; 100]));
+    }
+
+    #[test]
+    fn keeps_last_two_iterations_only() {
+        let (sim, s) = store("fs", 2);
+        for it in 1..=4 {
+            block_on_save(&sim, &s, 0, it, vec![it as u8]);
+        }
+        assert_eq!(s.latest_iter(0), Some(4));
+        assert_eq!(block_on_load(&sim, &s, 0, 3), Some(vec![3]));
+        assert_eq!(block_on_load(&sim, &s, 0, 2), None, "evicted");
+    }
+
+    // ---- loss semantics ----
+
+    #[test]
+    fn partner_copy_survives_process_failure() {
+        let (sim, s) = store("local+partner1", 4);
+        block_on_save(&sim, &s, 2, 7, vec![42; 10]);
+        s.lose_rank(2); // local copy gone
+        assert_eq!(s.latest_iter(2), Some(7), "partner copy survives");
+        assert_eq!(block_on_load(&sim, &s, 2, 7), Some(vec![42; 10]));
+    }
+
+    #[test]
+    fn lose_rank_clears_exactly_the_hosted_copies() {
+        // single node: partners are cyclic (r+1). Rank 2 hosts its own local
+        // copy and the partner copy of rank 1 — nothing else.
+        let (sim, s) = store("local+partner1", 4);
+        for r in 0..4 {
+            block_on_save(&sim, &s, r, 3, vec![r as u8]);
+        }
+        s.lose_rank(2);
+        // rank 2: local gone, its partner copy at rank 3 survives
+        assert_eq!(s.latest_iter(2), Some(3));
+        // rank 1: local survives, partner copy (hosted at 2) gone
+        assert_eq!(block_on_load(&sim, &s, 1, 3), Some(vec![1]));
+        s.lose_rank(1);
+        assert_eq!(s.latest_iter(1), None, "local and partner both dead");
+        // bystanders untouched
+        assert_eq!(s.latest_iter(0), Some(3));
+        assert_eq!(s.latest_iter(3), Some(3));
+        assert_eq!(s.storage_stats().local.copies_lost, 2);
+        assert_eq!(s.storage_stats().partner.copies_lost, 2);
+    }
+
+    #[test]
+    fn single_node_cluster_loses_everything_on_node_failure() {
+        // One compute node: no node-disjoint placement exists, so a node
+        // failure wipes local and partner copies alike (the paper Table 2
+        // premise for forbidding memory checkpoints under node failures).
+        let (sim, s) = store_on("local+partner1", Topology::new(4, 16, 0));
+        block_on_save(&sim, &s, 0, 1, vec![7]);
+        s.lose_node_ranks(&[0, 1, 2, 3]);
+        assert_eq!(s.latest_iter(0), None);
+    }
+
+    #[test]
+    fn node_disjoint_partner_survives_node_failure() {
+        // 2 ranks/node: rank 0's partner lands on node 1, so losing node 0
+        // (ranks 0 and 1) leaves the copy reachable — the new capability the
+        // tier sweep measures.
+        let (sim, s) = store_on("local+partner1", Topology::new(4, 2, 0));
+        block_on_save(&sim, &s, 0, 1, vec![7; 8]);
+        s.lose_node_ranks(&[0, 1]);
+        assert_eq!(s.latest_iter(0), Some(1), "partner on node 1 survives");
+        assert_eq!(block_on_load(&sim, &s, 0, 1), Some(vec![7; 8]));
+    }
+
+    #[test]
+    fn two_replicas_survive_two_process_failures() {
+        let (sim, s) = store_on("local+partner2", Topology::new(6, 2, 0));
+        block_on_save(&sim, &s, 0, 1, vec![1; 4]);
+        let hosts = partners_of(&s.topo, 0, 2, true);
+        s.lose_rank(0);
+        s.lose_rank(hosts[0]);
+        assert_eq!(s.latest_iter(0), Some(1), "second replica still alive");
+        s.lose_rank(hosts[1]);
+        assert_eq!(s.latest_iter(0), None);
+    }
+
+    #[test]
+    fn lose_all_memory_spares_only_the_filesystem() {
+        let (sim, s) = store_on("local+partner1+fs", Topology::new(4, 2, 0));
+        block_on_save(&sim, &s, 1, 2, vec![9; 16]);
+        s.lose_all_memory();
+        assert_eq!(s.latest_iter(1), Some(2), "fs copy survives the abort");
+        let st = s.storage_stats();
+        assert!(st.local.copies_lost >= 1 && st.partner.copies_lost >= 1);
+        assert_eq!(block_on_load(&sim, &s, 1, 2), Some(vec![9; 16]));
+        // and the read was served by the fs tier
+        assert_eq!(s.storage_stats().fs.read_bytes, 16);
+    }
+
+    // ---- rebuild ----
+
+    #[test]
+    fn rebuild_reinstates_degraded_copies() {
+        let (sim, s) = store_on("local+partner1+fs", Topology::new(4, 2, 0));
+        block_on_save(&sim, &s, 0, 3, vec![5; 32]);
+        s.lose_rank(0); // local gone; partner + fs remain
+        let p = sim.spawn_process("rebuilder");
+        let s2 = s.clone();
+        sim.spawn(p, async move {
+            let d = s2.load(0, 0, 3).await.expect("partner copy");
+            s2.rebuild(0, 0, 3, &d).await;
+        });
+        sim.run();
+        let st = s.storage_stats();
+        assert_eq!(st.local.rebuild_bytes, 32, "local copy reinstated");
+        assert_eq!(st.partner.rebuild_bytes, 0, "partner was never degraded");
+        assert_eq!(st.fs.rebuild_bytes, 0);
+        // the reinstated copy now serves reads at local cost
+        assert_eq!(block_on_load(&sim, &s, 0, 3), Some(vec![5; 32]));
+        assert_eq!(s.storage_stats().local.read_bytes, 32);
+    }
+
+    #[test]
+    fn rebuild_skips_copies_the_slot_would_drop() {
+        // Slots retain two iterations; rebuilding an agreed iteration that
+        // is older than both retained entries must be a free no-op — the
+        // install would be dropped on the floor, so charging cost or
+        // counting rebuild bytes for it would lie.
+        let (sim, s) = store("local+partner1", 4);
+        block_on_save(&sim, &s, 0, 5, vec![5; 8]);
+        block_on_save(&sim, &s, 0, 6, vec![6; 8]);
+        let elapsed = Rc::new(Cell::new(u64::MAX));
+        let (s2, e2, sim2) = (s.clone(), Rc::clone(&elapsed), sim.clone());
+        let p = sim.spawn_process("rebuilder");
+        sim.spawn(p, async move {
+            let t0 = sim2.now();
+            s2.rebuild(0, 0, 3, &Rc::new(vec![3; 8])).await;
+            e2.set((sim2.now() - t0).nanos());
+        });
+        sim.run();
+        assert_eq!(elapsed.get(), 0, "no virtual cost for dropped installs");
+        let st = s.storage_stats();
+        assert_eq!(st.local.rebuild_bytes, 0);
+        assert_eq!(st.partner.rebuild_bytes, 0);
+        assert_eq!(s.latest_iter(0), Some(6), "retained pair untouched");
+    }
+
+    // ---- drain ----
+
+    #[test]
+    fn drain_trickles_to_lower_tiers_after_interval() {
+        let sim = Sim::new();
+        let mut spec = stack("local+partner1+fs");
+        spec.drain_interval_s = 0.5;
+        let topo = Topology::new(4, 2, 0);
+        let s = CkptStore::new(&sim, &spec, topo, &Calibration::default());
+        let s2 = s.clone();
+        let p = sim.spawn_process("saver");
+        sim.spawn(p, async move {
+            s2.save(0, 0, 1, vec![3; 64]).await;
+        });
+        // probe before the interval: only the local tier has the bytes
+        let s3 = s.clone();
+        let probed = Rc::new(Cell::new(false));
+        let pr = Rc::clone(&probed);
+        sim.schedule(SimDuration::from_millis(100), move || {
+            let st = s3.storage_stats();
+            assert_eq!(st.local.write_bytes, 64, "sync tier written");
+            assert_eq!(st.partner.write_bytes, 0, "not drained yet");
+            assert_eq!(st.fs.write_bytes, 0);
+            pr.set(true);
+        });
+        sim.run();
+        assert!(probed.get());
+        let st = s.storage_stats();
+        assert_eq!(st.partner.write_bytes, 64);
+        assert_eq!(st.partner.drained_bytes, 64);
+        assert_eq!(st.fs.drained_bytes, 64);
+        assert_eq!(st.pending_peak, 1);
+        assert_eq!(st.disk.bytes_written, 64, "fs drain went through the disk");
+    }
+
+    #[test]
+    fn undrained_checkpoints_die_with_their_owner() {
+        let sim = Sim::new();
+        let mut spec = stack("local+partner1");
+        spec.drain_interval_s = 10.0;
+        let topo = Topology::new(4, 2, 0);
+        let s = CkptStore::new(&sim, &spec, topo, &Calibration::default());
+        let s2 = s.clone();
+        let p = sim.spawn_process("saver");
+        sim.spawn(p, async move {
+            s2.save(0, 0, 1, vec![1; 8]).await;
+        });
+        let s3 = s.clone();
+        sim.schedule(SimDuration::from_millis(500), move || s3.lose_rank(0));
+        sim.run();
+        assert_eq!(s.latest_iter(0), None, "queued item dropped with owner");
+        assert_eq!(s.storage_stats().partner.write_bytes, 0);
+    }
+
+    #[test]
+    fn drain_flushes_in_iteration_order_and_rearms() {
+        let sim = Sim::new();
+        let mut spec = stack("local+partner1");
+        spec.drain_interval_s = 0.2;
+        let topo = Topology::new(4, 2, 0);
+        let s = CkptStore::new(&sim, &spec, topo, &Calibration::default());
+        // two iterations from two ranks, saved over time
+        for (rank, iter, at_ms) in [(0u32, 1u32, 0u64), (1, 1, 10), (0, 2, 600), (1, 2, 610)] {
+            let s2 = s.clone();
+            let sim2 = sim.clone();
+            sim.schedule(SimDuration::from_millis(at_ms), move || {
+                let s3 = s2.clone();
+                let p = sim2.spawn_process("saver");
+                sim2.spawn(p, async move {
+                    s3.save(rank, s3.topo.home_node(rank), iter, vec![iter as u8; 4]).await;
+                });
+            });
+        }
+        sim.run();
+        // both activations flushed everything
+        let st = s.storage_stats();
+        assert_eq!(st.partner.drained_bytes, 16, "4 items x 4 bytes");
+        for r in [0, 1] {
+            assert_eq!(s.latest_iter(r), Some(2));
+        }
+    }
+
+    // ---- cost shape ----
+
+    #[test]
+    fn fs_write_cost_exceeds_memory_cost() {
+        // same payload: fs pays metadata + contended disk; memory pays
+        // memcpy + fabric hops. This gap is the whole Fig. 4 story.
+        let timed_save = |spec: &str| {
+            let (sim, s) = store(spec, 4);
+            let t = Rc::new(Cell::new(0.0));
+            let (s2, t2, sim2) = (s.clone(), Rc::clone(&t), sim.clone());
+            let p = sim.spawn_process("w");
+            sim.spawn(p, async move {
+                let start = sim2.now();
+                s2.save(0, 0, 1, vec![0; 1 << 20]).await;
+                t2.set((sim2.now() - start).secs_f64());
+            });
+            sim.run();
+            t.get()
+        };
+        let t_fs = timed_save("fs");
+        let t_mem = timed_save("local+partner1");
+        assert!(t_fs > 5.0 * t_mem, "fs={t_fs} mem={t_mem}");
+    }
+
+    #[test]
+    fn load_prefers_the_cheapest_surviving_tier() {
+        let (sim, s) = store_on("local+partner1+fs", Topology::new(4, 2, 0));
+        block_on_save(&sim, &s, 0, 1, vec![2; 128]);
+        assert_eq!(block_on_load(&sim, &s, 0, 1), Some(vec![2; 128]));
+        let st = s.storage_stats();
+        assert_eq!(st.local.read_bytes, 128, "served locally");
+        assert_eq!(st.partner.read_bytes, 0);
+        assert_eq!(st.fs.read_bytes, 0);
+        s.lose_rank(0);
+        assert_eq!(block_on_load(&sim, &s, 0, 1), Some(vec![2; 128]));
+        let st = s.storage_stats();
+        assert_eq!(st.partner.read_bytes, 128, "fell back to the partner");
+        assert_eq!(st.fs.read_bytes, 0, "disk never touched");
+    }
+}

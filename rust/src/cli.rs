@@ -4,16 +4,17 @@
 //! ```text
 //! reinitpp run       [OPTIONS] [key=value ...]   one experiment point
 //! reinitpp reproduce --figure N [OPTIONS] [...]  regenerate a paper figure
+//! reinitpp tiers     [OPTIONS] [key=value ...]   checkpoint tier-stack sweep
 //! reinitpp tables    [--which 1|2]               print Tables 1/2
 //! reinitpp validate  [OPTIONS] [key=value ...]   global-restart equivalence
 //! reinitpp calibrate [key=value ...]             measure artifact exec times
 //! ```
 //!
 //! OPTIONS: `--config FILE` (TOML-subset), `--max-ranks N`, `--outdir DIR`,
-//! `--jobs N` (worker threads for trial execution: default = available
-//! parallelism, `1` forces the serial path; output is byte-identical for
-//! any value — see `harness::pool`), plus any dotted config key as
-//! `key=value` (see `config::ExperimentConfig`).
+//! `--jobs N` (worker threads for trial execution, must be >= 1: default =
+//! available parallelism, `1` forces the serial path; output is
+//! byte-identical for any value — see `harness::pool`), plus any dotted
+//! config key as `key=value` (see `config::ExperimentConfig`).
 
 use std::rc::Rc;
 
@@ -31,6 +32,10 @@ pub enum Command {
     },
     Reproduce {
         figure: u32,
+        cfg: ExperimentConfig,
+        opts: SweepOpts,
+    },
+    Tiers {
         cfg: ExperimentConfig,
         opts: SweepOpts,
     },
@@ -68,32 +73,43 @@ reinitpp — Reinit++ global-restart MPI fault-tolerance study (paper reproducti
 USAGE:
   reinitpp run       [OPTIONS] [key=value ...]   run one experiment point
   reinitpp reproduce --figure N [OPTIONS] [...]  regenerate paper figure N (4-7, or 0 = all)
+  reinitpp tiers     [OPTIONS] [key=value ...]   checkpoint tier-stack comparison sweep
+                                                 (fs vs local+partner1 vs local+partner2+fs,
+                                                 process + node failures; ranks 16/32/64 at
+                                                 8 ranks/node; emits tier_compare.csv)
   reinitpp tables    [--which 1|2]               print the paper's tables
   reinitpp validate  [OPTIONS] [key=value ...]   check global-restart equivalence
   reinitpp calibrate [key=value ...]             measure artifact execution costs
 
 OPTIONS:
   --config FILE      load a TOML-subset config file
-  --max-ranks N      cap the sweep's rank counts (reproduce only)
+  --max-ranks N      cap the sweep's rank counts (reproduce/tiers)
   --outdir DIR       CSV output directory (default: results)
-  --jobs N           worker threads for trial execution (run/reproduce;
-                     default: all cores, 1 = serial). Tables and CSVs are
-                     byte-identical for any N.
+  --jobs N           worker threads for trial execution (run/reproduce/tiers).
+                     Must be >= 1: default all cores, 1 = serial execution on
+                     the calling thread. Tables and CSVs are byte-identical
+                     for any N.
   key=value          any config key, e.g. app=hpccg ranks=64 recovery=reinit
                      failure=process trials=10 iters=20 fidelity=auto
+                     ckpt_tiers=local+partner2+fs ckpt_drain_interval_s=0.5
                      calibration.fork_exec_ms=350
 
 EXAMPLES:
   reinitpp run app=hpccg ranks=16 recovery=reinit failure=process trials=3
+  reinitpp run ranks=32 ranks_per_node=8 ckpt_tiers=local+partner2+fs trials=3
   reinitpp reproduce --figure 6 --max-ranks 128 --jobs 8 trials=5
+  reinitpp tiers --max-ranks 32 --jobs 4 trials=5
   reinitpp validate app=comd recovery=ulfm failure=process
 ";
 
-/// Parse a `--jobs` value (>= 1).
+/// Parse a `--jobs` value. Zero is rejected here with an explicit message
+/// (it must never fall through to the worker pool): `1` is the documented
+/// serial convention, there is no meaningful zero-worker execution.
 fn parse_jobs(v: &str) -> Result<usize, CliError> {
     match v.parse::<usize>() {
-        Ok(n) if n >= 1 => Ok(n),
-        _ => Err(err("--jobs: positive worker count")),
+        Ok(0) => Err(err("--jobs: must be >= 1 (use 1 for serial execution)")),
+        Ok(n) => Ok(n),
+        Err(_) => Err(err(format!("--jobs: not a worker count: {v}"))),
     }
 }
 
@@ -178,13 +194,74 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             }
             Ok(Command::Reproduce { figure, cfg, opts })
         }
+        "tiers" => {
+            // Tier-sweep defaults: multiple compute nodes even at the
+            // smallest rank count, so node-disjoint replicas (and node
+            // failures) are meaningful. Overridable via key=value.
+            let base = ExperimentConfig {
+                ranks_per_node: crate::config::presets::TIER_SWEEP_RANKS_PER_NODE,
+                ..ExperimentConfig::default()
+            };
+            let (cfg, leftovers) = parse_cfg_from(base, rest)?;
+            // The sweep owns its grid axes (stack, failure kind, rank
+            // count); silently discarding an override would lie about what
+            // was swept, so reject them outright.
+            let defaults = ExperimentConfig::default();
+            if cfg.ckpt_tiers.is_some() || cfg.ckpt.is_some() {
+                return Err(err(
+                    "tiers: the sweep sets the checkpoint stack per point \
+                     (fs / local+partner1 / local+partner2+fs); drop ckpt/ckpt_tiers",
+                ));
+            }
+            if cfg.ranks != defaults.ranks {
+                return Err(err(
+                    "tiers: the sweep sets ranks per point (16/32/64); \
+                     cap the grid with --max-ranks instead",
+                ));
+            }
+            if cfg.failure != defaults.failure {
+                return Err(err(
+                    "tiers: the sweep runs both process and node failures; drop failure=",
+                ));
+            }
+            let mut opts = SweepOpts::default();
+            let mut it = leftovers.iter();
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--max-ranks" => {
+                        let v = it.next().ok_or_else(|| err("--max-ranks needs a value"))?;
+                        opts.max_ranks = v.parse().map_err(|_| err("--max-ranks: number"))?;
+                    }
+                    "--outdir" => {
+                        opts.outdir = it
+                            .next()
+                            .ok_or_else(|| err("--outdir needs a value"))?
+                            .clone();
+                    }
+                    "--jobs" => {
+                        let v = it.next().ok_or_else(|| err("--jobs needs a value"))?;
+                        opts.jobs = parse_jobs(v)?;
+                    }
+                    other => return Err(err(format!("tiers: unknown arg {other}"))),
+                }
+            }
+            Ok(Command::Tiers { cfg, opts })
+        }
         other => Err(err(format!("unknown command `{other}`\n\n{USAGE}"))),
     }
 }
 
 /// Extract `--config FILE` and `key=value` pairs; returns remaining args.
 fn parse_cfg(args: &[String]) -> Result<(ExperimentConfig, Vec<String>), CliError> {
-    let mut cfg = ExperimentConfig::default();
+    parse_cfg_from(ExperimentConfig::default(), args)
+}
+
+/// Like `parse_cfg`, starting from a command-specific base config.
+fn parse_cfg_from(
+    base: ExperimentConfig,
+    args: &[String],
+) -> Result<(ExperimentConfig, Vec<String>), CliError> {
+    let mut cfg = base;
     let mut leftovers = Vec::new();
     let mut it = args.iter();
     while let Some(a) = it.next() {
@@ -246,7 +323,7 @@ pub fn execute(cmd: Command) -> i32 {
                 cfg.ranks,
                 cfg.recovery,
                 cfg.failure,
-                cfg.effective_ckpt(),
+                cfg.effective_stack(),
                 cfg.trials,
                 jobs
             );
@@ -272,6 +349,13 @@ pub fn execute(cmd: Command) -> i32 {
             }
             0
         }
+        Command::Tiers { cfg, opts } => match harness::tier_sweep(&cfg, &opts) {
+            Ok(_) => 0,
+            Err(e) => {
+                eprintln!("{e}");
+                2
+            }
+        },
         Command::Validate { cfg } => {
             if let Err(e) = cfg.validate() {
                 eprintln!("{e}");
@@ -411,6 +495,64 @@ mod tests {
         assert!(parse(&sv(&["run", "--jobs", "x"])).is_err());
         assert!(parse(&sv(&["run", "bogus=1"])).is_err());
         assert!(parse(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn jobs_zero_is_rejected_with_serial_hint() {
+        for cmd in ["run", "tiers"] {
+            let e = parse(&sv(&[cmd, "--jobs", "0"])).unwrap_err();
+            assert!(
+                e.to_string().contains("use 1 for serial"),
+                "{cmd}: error must document the 1 = serial convention: {e}"
+            );
+        }
+        assert!(USAGE.contains("1 = serial"), "--help documents the convention");
+    }
+
+    #[test]
+    fn parse_tiers_defaults_and_options() {
+        let cmd = parse(&sv(&["tiers", "--max-ranks", "32", "--jobs", "2", "trials=4"]))
+            .unwrap();
+        match cmd {
+            Command::Tiers { cfg, opts } => {
+                assert_eq!(
+                    cfg.ranks_per_node,
+                    crate::config::presets::TIER_SWEEP_RANKS_PER_NODE,
+                    "tiers base spans multiple nodes"
+                );
+                assert_eq!(cfg.trials, 4);
+                assert_eq!(opts.max_ranks, 32);
+                assert_eq!(opts.jobs, 2);
+            }
+            _ => panic!(),
+        }
+        assert!(parse(&sv(&["tiers", "--figure", "4"])).is_err(), "unknown arg");
+        // grid-owned axes must be rejected, not silently overwritten
+        assert!(parse(&sv(&["tiers", "ranks=128"])).is_err());
+        assert!(parse(&sv(&["tiers", "failure=node"])).is_err());
+        assert!(parse(&sv(&["tiers", "ckpt_tiers=local+partner3"])).is_err());
+        assert!(parse(&sv(&["tiers", "ckpt=memory"])).is_err());
+    }
+
+    #[test]
+    fn parse_tier_stack_overrides() {
+        let cmd = parse(&sv(&[
+            "run",
+            "ranks=32",
+            "ranks_per_node=8",
+            "ckpt_tiers=local+partner2+fs",
+            "ckpt_drain_interval_s=0.5",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Run { cfg, .. } => {
+                let s = cfg.effective_stack();
+                assert_eq!(s.to_string(), "local+partner2+fs");
+                assert_eq!(s.drain_interval_s, 0.5);
+            }
+            _ => panic!(),
+        }
+        assert!(parse(&sv(&["run", "ckpt_tiers=warp"])).is_err());
     }
 
     #[test]

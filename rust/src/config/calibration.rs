@@ -61,9 +61,13 @@ pub struct Calibration {
     /// Metadata open/close round trip per file op, ms.
     pub lustre_meta_ms: f64,
 
-    // ---- in-memory / buddy checkpointing ----
+    // ---- in-memory / partner checkpointing ----
     /// Local memcpy bandwidth, GB/s.
     pub mem_bw_gbps: f64,
+    /// Background checkpoint-drain trickle bandwidth cap, GB/s (the rate at
+    /// which the async drain pushes copies down the tier stack; deliberately
+    /// below the fabric/link rates so draining never starves the app).
+    pub drain_bw_gbps: f64,
 
     // ---- ULFM prototype behaviour ----
     /// Heartbeat observation period, ms (failure detection latency floor).
@@ -103,6 +107,7 @@ impl Default for Calibration {
             lustre_client_gbps: 1.2,
             lustre_meta_ms: 15.0,
             mem_bw_gbps: 8.0,
+            drain_bw_gbps: 1.0,
             ulfm_hb_period_ms: 25.0,
             ulfm_overhead_frac_per_level: 0.022,
             ulfm_recover_base_ms: 20.0,
@@ -144,6 +149,7 @@ impl Calibration {
             lustre_client_gbps,
             lustre_meta_ms,
             mem_bw_gbps,
+            drain_bw_gbps,
             ulfm_hb_period_ms,
             ulfm_overhead_frac_per_level,
             ulfm_recover_base_ms,

@@ -7,6 +7,8 @@ pub mod toml;
 
 pub use calibration::Calibration;
 
+use crate::ckptstore::StackSpec;
+
 use std::fmt;
 
 /// Which proxy application to run (paper §4, Table 1).
@@ -110,7 +112,8 @@ impl fmt::Display for FailureKind {
 pub enum CkptKind {
     /// Per-rank files on the shared parallel filesystem (Lustre model).
     File,
-    /// Local + buddy in-memory copies (process failures only).
+    /// Local + one node-disjoint partner copy in memory (maps to the
+    /// `local+partner1` tier stack).
     Memory,
 }
 
@@ -185,6 +188,12 @@ pub struct ExperimentConfig {
     pub failure: FailureKind,
     /// None = pick per the paper's Table 2 policy.
     pub ckpt: Option<CkptKind>,
+    /// Explicit checkpoint tier stack (`ckpt_tiers=local+partner2+fs`);
+    /// overrides `ckpt` / Table 2 when set.
+    pub ckpt_tiers: Option<StackSpec>,
+    /// Background drain cadence in seconds; 0 = synchronous write-through
+    /// (the paper's blocking model).
+    pub ckpt_drain_interval_s: f64,
     pub iters: u32,
     /// Store a checkpoint every k iterations (paper: every iteration).
     pub ckpt_every: u32,
@@ -212,6 +221,8 @@ impl Default for ExperimentConfig {
             recovery: RecoveryKind::Reinit,
             failure: FailureKind::Process,
             ckpt: None,
+            ckpt_tiers: None,
+            ckpt_drain_interval_s: 0.0,
             iters: 20,
             ckpt_every: 1,
             seed: 20210621,
@@ -248,12 +259,26 @@ impl ExperimentConfig {
         self.ranks.div_ceil(self.ranks_per_node)
     }
 
-    /// Checkpoint scheme after applying the paper's Table 2 policy.
+    /// Checkpoint scheme after applying the paper's Table 2 policy
+    /// (ignored when an explicit `ckpt_tiers` stack is set).
     pub fn effective_ckpt(&self) -> CkptKind {
         if let Some(k) = self.ckpt {
             return k;
         }
         crate::checkpoint::policy::default_scheme(self.recovery, self.failure)
+    }
+
+    /// The checkpoint tier stack this experiment runs: an explicit
+    /// `ckpt_tiers` override, or the Table 2 scheme mapped onto a stack
+    /// (`file` → `fs`, `memory` → `local+partner1`), with the configured
+    /// drain cadence applied either way.
+    pub fn effective_stack(&self) -> StackSpec {
+        let mut stack = match &self.ckpt_tiers {
+            Some(s) => s.clone(),
+            None => StackSpec::from_kind(self.effective_ckpt()),
+        };
+        stack.drain_interval_s = self.ckpt_drain_interval_s;
+        stack
     }
 
     /// Apply a dotted-key override, e.g. `ranks=64`, `app=comd`,
@@ -296,6 +321,23 @@ impl ExperimentConfig {
                     CkptKind::parse(value)
                         .ok_or_else(|| cerr(format!("unknown ckpt: {value}")))?,
                 )
+            }
+            "ckpt_tiers" => {
+                if value.eq_ignore_ascii_case("auto") || value.eq_ignore_ascii_case("table2")
+                {
+                    self.ckpt_tiers = None;
+                } else {
+                    self.ckpt_tiers = Some(StackSpec::parse(value).map_err(cerr)?);
+                }
+            }
+            "ckpt_drain_interval_s" => {
+                let v: f64 = value
+                    .parse()
+                    .map_err(|_| cerr(format!("{key}: bad number: {value}")))?;
+                if !(v >= 0.0 && v.is_finite()) {
+                    return Err(cerr("ckpt_drain_interval_s must be >= 0"));
+                }
+                self.ckpt_drain_interval_s = v;
             }
             "iters" => self.iters = num!(),
             "ckpt_every" => self.ckpt_every = num!(),
@@ -349,10 +391,21 @@ impl ExperimentConfig {
                 "node-failure experiments need spare_nodes >= 1 (over-provisioning, paper §3.2)",
             ));
         }
-        if self.effective_ckpt() == CkptKind::Memory && self.failure == FailureKind::Node {
-            return Err(cerr(
-                "memory checkpointing cannot survive a node failure (paper Table 2)",
-            ));
+        let stack = self.effective_stack();
+        stack.check().map_err(cerr)?;
+        if self.failure == FailureKind::Process && !stack.survives_process_failure(self.ranks)
+        {
+            return Err(cerr(format!(
+                "checkpoint stack `{stack}` cannot survive a process failure \
+                 (add a partner or fs tier)"
+            )));
+        }
+        if self.failure == FailureKind::Node && !stack.survives_node_failure(self.nodes()) {
+            return Err(cerr(format!(
+                "checkpoint stack `{stack}` cannot survive a node failure at this scale \
+                 (need a node-disjoint partner tier with >= 2 compute nodes, or an fs \
+                 tier — paper Table 2's memory scheme maps to the 1-node case)"
+            )));
         }
         if self.app == AppKind::Lulesh {
             // paper: LULESH requires a cube number of ranks
@@ -437,10 +490,55 @@ mod tests {
 
     #[test]
     fn memory_ckpt_with_node_failure_rejected() {
+        // default scale = one compute node: no node-disjoint placement
+        // exists, so the memory stack cannot survive (paper Table 2).
         let mut c = ExperimentConfig::default();
         c.failure = FailureKind::Node;
         c.ckpt = Some(CkptKind::Memory);
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn node_disjoint_stack_allows_node_failure_at_multi_node_scale() {
+        let mut c = ExperimentConfig::default();
+        c.ranks = 16;
+        c.ranks_per_node = 4; // 4 compute nodes
+        c.failure = FailureKind::Node;
+        c.apply("ckpt_tiers", "local+partner1").unwrap();
+        c.validate().unwrap();
+        // ...but a same-node partner stays rejected
+        c.apply("ckpt_tiers", "local+partner1.same").unwrap();
+        assert!(c.validate().is_err());
+        // and a local-only stack cannot even survive a process failure
+        c.failure = FailureKind::Process;
+        c.apply("ckpt_tiers", "local").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn effective_stack_maps_table2_and_honors_overrides() {
+        let c = ExperimentConfig::default(); // Reinit + process
+        assert_eq!(c.effective_stack().to_string(), "local+partner1");
+        let mut c = ExperimentConfig::default();
+        c.recovery = RecoveryKind::Cr;
+        assert_eq!(c.effective_stack().to_string(), "fs");
+        c.apply("ckpt_tiers", "local+partner2+fs").unwrap();
+        c.apply("ckpt_drain_interval_s", "0.25").unwrap();
+        let s = c.effective_stack();
+        assert_eq!(s.to_string(), "local+partner2+fs");
+        assert_eq!(s.drain_interval_s, 0.25);
+        // `auto` clears the override back to the Table 2 route
+        c.apply("ckpt_tiers", "auto").unwrap();
+        assert_eq!(c.effective_stack().to_string(), "fs");
+    }
+
+    #[test]
+    fn ckpt_tier_keys_reject_garbage() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.apply("ckpt_tiers", "warp").is_err());
+        assert!(c.apply("ckpt_tiers", "fs+local").is_err());
+        assert!(c.apply("ckpt_drain_interval_s", "-1").is_err());
+        assert!(c.apply("ckpt_drain_interval_s", "x").is_err());
     }
 
     #[test]

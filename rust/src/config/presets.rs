@@ -1,6 +1,9 @@
-//! The paper's experimental presets (Table 1) and sweep definitions.
+//! The paper's experimental presets (Table 1) and sweep definitions, plus
+//! the checkpoint tier-comparison grid (beyond the paper; see
+//! `harness::tier_sweep`).
 
 use super::AppKind;
+use crate::ckptstore::StackSpec;
 
 /// Rank counts of the paper's weak-scaling sweep (Table 1).
 pub const RANK_SWEEP: [u32; 7] = [16, 32, 64, 128, 256, 512, 1024];
@@ -17,6 +20,28 @@ pub fn rank_sweep(app: AppKind) -> &'static [u32] {
         AppKind::Lulesh => &LULESH_RANK_SWEEP,
         _ => &RANK_SWEEP,
     }
+}
+
+/// Canonical checkpoint stacks the tier-comparison sweep contrasts:
+/// the paper's shared-FS baseline, in-memory with one node-disjoint
+/// replica, and a two-replica stack backed by the filesystem.
+pub const TIER_SWEEP_STACKS: [&str; 3] = ["fs", "local+partner1", "local+partner2+fs"];
+
+/// Rank counts of the tier sweep. Smaller than the paper's weak-scaling
+/// grid: the comparison needs several compute nodes, not extreme scale.
+pub const TIER_SWEEP_RANKS: [u32; 3] = [16, 32, 64];
+
+/// Ranks per node for the tier sweep — deliberately below the paper's 16 so
+/// even the smallest point spans multiple nodes (node-disjoint replicas and
+/// node failures are the whole object of study).
+pub const TIER_SWEEP_RANKS_PER_NODE: u32 = 8;
+
+/// The parsed tier-sweep stacks.
+pub fn tier_sweep_stacks() -> Vec<StackSpec> {
+    TIER_SWEEP_STACKS
+        .iter()
+        .map(|s| StackSpec::parse(s).expect("preset stacks parse"))
+        .collect()
 }
 
 /// Table 1 descriptor row: the paper's inputs and our simulated analog.
@@ -66,6 +91,19 @@ mod tests {
         for r in LULESH_RANK_SWEEP {
             let c = (r as f64).cbrt().round() as u32;
             assert_eq!(c * c * c, r);
+        }
+    }
+
+    #[test]
+    fn tier_sweep_presets_parse_and_span_nodes() {
+        let stacks = tier_sweep_stacks();
+        assert_eq!(stacks.len(), 3);
+        assert_eq!(stacks[2].to_string(), "local+partner2+fs");
+        for r in TIER_SWEEP_RANKS {
+            assert!(
+                r / TIER_SWEEP_RANKS_PER_NODE >= 2,
+                "every tier-sweep point must span >= 2 nodes"
+            );
         }
     }
 

@@ -30,8 +30,9 @@ struct Inner {
     peak_concurrency: usize,
 }
 
-/// Cumulative counters (tests, perf reports).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Cumulative counters (tests, perf reports; exported per sweep point into
+/// the harness CSVs via `ckptstore::StorageStats`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct DiskStats {
     pub bytes_written: u64,
     pub bytes_read: u64,

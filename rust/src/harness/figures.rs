@@ -55,8 +55,8 @@ fn point_cfg(
     c
 }
 
-/// Render one summary as `mean±ci`.
-fn cell(s: &crate::metrics::Summary) -> String {
+/// Render one summary as `mean±ci` (shared by the figure and tier tables).
+pub(crate) fn cell(s: &crate::metrics::Summary) -> String {
     if s.ci95 > 0.0005 {
         format!("{:.3}±{:.3}", s.mean, s.ci95)
     } else {
@@ -77,7 +77,7 @@ pub fn print_points(title: &str, points: &[Point]) {
             p.cfg.app,
             p.cfg.ranks,
             p.cfg.recovery,
-            p.cfg.effective_ckpt(),
+            p.cfg.effective_stack(),
             cell(&p.total),
             cell(&p.ckpt_write),
             cell(&p.ckpt_read),
@@ -87,21 +87,45 @@ pub fn print_points(title: &str, points: &[Point]) {
     }
 }
 
+/// The storage-pressure column block shared by every harness CSV (mean
+/// per-trial MB; `fs::DiskStats` plus the per-tier byte counters).
+pub(crate) const STORAGE_CSV_HEADER: &str = "disk_write_mb,disk_read_mb,disk_ops,\
+     local_write_mb,partner_write_mb,fs_write_mb,local_read_mb,partner_read_mb,\
+     fs_read_mb,rebuild_mb,drained_mb";
+
+pub(crate) fn storage_csv_cells(m: &crate::metrics::StorageMeans) -> String {
+    format!(
+        "{:.3},{:.3},{:.1},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3}",
+        m.disk_write_mb,
+        m.disk_read_mb,
+        m.disk_ops,
+        m.local_write_mb,
+        m.partner_write_mb,
+        m.fs_write_mb,
+        m.local_read_mb,
+        m.partner_read_mb,
+        m.fs_read_mb,
+        m.rebuild_mb,
+        m.drained_mb,
+    )
+}
+
 /// Write the points to `outdir/<name>.csv`.
 pub fn write_csv(name: &str, outdir: &str, points: &[Point]) -> std::io::Result<()> {
     std::fs::create_dir_all(outdir)?;
-    let mut s = String::from(
+    let mut s = format!(
         "app,ranks,recovery,failure,ckpt,total_s,total_ci,ckpt_write_s,ckpt_write_ci,\
-         ckpt_read_s,ckpt_read_ci,mpi_recovery_s,mpi_recovery_ci,app_s,app_ci,trials\n",
+         ckpt_read_s,ckpt_read_ci,mpi_recovery_s,mpi_recovery_ci,app_s,app_ci,\
+         {STORAGE_CSV_HEADER},trials\n",
     );
     for p in points {
         s.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             p.cfg.app,
             p.cfg.ranks,
             p.cfg.recovery,
             p.cfg.failure,
-            p.cfg.effective_ckpt(),
+            p.cfg.effective_stack(),
             p.total.mean,
             p.total.ci95,
             p.ckpt_write.mean,
@@ -112,6 +136,7 @@ pub fn write_csv(name: &str, outdir: &str, points: &[Point]) -> std::io::Result<
             p.recovery.ci95,
             p.app.mean,
             p.app.ci95,
+            storage_csv_cells(&p.storage),
             p.total.n,
         ));
     }

@@ -12,13 +12,15 @@
 mod figures;
 mod pool;
 mod tables;
+mod tiers;
 
 pub use figures::{fig4, fig5, fig6, fig7, print_points, write_csv, SweepOpts};
 pub use pool::{default_jobs, run_trials, TrialOut, TrialSpec};
 pub use tables::{print_table1, print_table2};
+pub use tiers::tier_sweep;
 
 use crate::config::ExperimentConfig;
-use crate::metrics::{mean_ci95, Summary, SweepStats};
+use crate::metrics::{mean_ci95, StorageMeans, Summary, SweepStats};
 
 /// Aggregated result of `trials` runs of one experiment point.
 #[derive(Clone, Debug)]
@@ -29,6 +31,8 @@ pub struct Point {
     pub ckpt_read: Summary,
     pub recovery: Summary,
     pub app: Summary,
+    /// Mean per-trial storage traffic (per-tier + shared-disk counters).
+    pub storage: StorageMeans,
     /// Host seconds of trial compute attributed to this point (sum over its
     /// trials' busy time; equals elapsed wall-clock only in a serial run).
     pub wall_s: f64,
@@ -44,6 +48,7 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
     let mut rd = Vec::with_capacity(outs.len());
     let mut rec = Vec::with_capacity(outs.len());
     let mut app = Vec::with_capacity(outs.len());
+    let mut storage = Vec::with_capacity(outs.len());
     for o in outs {
         assert!(
             o.result.completed,
@@ -55,6 +60,7 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
         rd.push(o.result.breakdown.ckpt_read_s);
         rec.push(o.result.breakdown.mpi_recovery_s);
         app.push(o.result.breakdown.app_s());
+        storage.push(o.result.storage);
     }
     Point {
         cfg: cfg.clone(),
@@ -63,6 +69,7 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
         ckpt_read: mean_ci95(&rd),
         recovery: mean_ci95(&rec),
         app: mean_ci95(&app),
+        storage: StorageMeans::from_trials(&storage),
         wall_s: outs.iter().map(|o| o.host_s).sum(),
     }
 }

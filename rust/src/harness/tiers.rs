@@ -1,0 +1,230 @@
+//! Tier-comparison sweep: the scenario axis the multi-tier checkpoint
+//! store opens up (ReStore, arXiv 2203.01107; FTHP-MPI, arXiv 2504.09989).
+//!
+//! For each rank count the driver runs the canonical stacks
+//!
+//! - `fs`                  — the paper's shared-filesystem baseline
+//! - `local+partner1`      — in-memory with one node-disjoint replica
+//! - `local+partner2+fs`   — two replicas backed by the filesystem
+//!
+//! under both a process and a node failure, and reports recovery/read/write
+//! time plus the per-tier storage traffic. Like every harness sweep, the
+//! grid is flattened to (point, trial) work items for the pool and merged
+//! deterministically, so the CSV is byte-identical for any `--jobs` value.
+
+use super::figures::{cell, storage_csv_cells, SweepOpts, STORAGE_CSV_HEADER};
+use super::{run_points, Point};
+use crate::config::{presets, ExperimentConfig, FailureKind};
+
+/// Rank counts the tier sweep visits (capped by `--max-ranks`).
+fn sweep_ranks(max: u32) -> Vec<u32> {
+    presets::TIER_SWEEP_RANKS
+        .iter()
+        .copied()
+        .filter(|&r| r <= max)
+        .collect()
+}
+
+/// Build the sweep grid. Fails (with a clear message) when an override
+/// makes a point invalid — e.g. forcing a single-node topology, where no
+/// memory-only stack can survive a node failure.
+fn build_grid(
+    base: &ExperimentConfig,
+    opts: &SweepOpts,
+) -> Result<Vec<ExperimentConfig>, String> {
+    let mut cfgs = Vec::new();
+    for &ranks in &sweep_ranks(opts.max_ranks) {
+        for failure in [FailureKind::Process, FailureKind::Node] {
+            for stack in presets::tier_sweep_stacks() {
+                let mut c = base.clone();
+                c.ranks = ranks;
+                c.failure = failure;
+                c.ckpt = None;
+                c.ckpt_tiers = Some(stack);
+                if failure == FailureKind::Node {
+                    c.spare_nodes = c.spare_nodes.max(1);
+                }
+                c.validate().map_err(|e| {
+                    format!(
+                        "tier sweep point ranks={} failure={} stack={}: {e}",
+                        c.ranks,
+                        c.failure,
+                        c.effective_stack()
+                    )
+                })?;
+                cfgs.push(c);
+            }
+        }
+    }
+    if cfgs.is_empty() {
+        return Err(format!(
+            "tier sweep: no rank count of {:?} fits --max-ranks {}",
+            presets::TIER_SWEEP_RANKS,
+            opts.max_ranks
+        ));
+    }
+    Ok(cfgs)
+}
+
+/// Run the tier-comparison sweep: markdown table on stdout, CSV under
+/// `outdir/tier_compare.csv`.
+pub fn tier_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Point>, String> {
+    let cfgs = build_grid(base, opts)?;
+    let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
+    eprintln!(
+        "  tier sweep: {} points / {trials} trials on {} worker(s)...",
+        cfgs.len(),
+        opts.jobs
+    );
+    let (points, stats) = run_points(&cfgs, opts.jobs);
+    eprintln!(
+        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
+        stats.wall_s,
+        stats.trials_per_sec(),
+        stats.utilization() * 100.0
+    );
+
+    println!("\n## Checkpoint tier comparison ({})\n", base.app);
+    println!(
+        "| stack | failure | ranks | total (s) | ckpt write (s) | ckpt read (s) | \
+         MPI recovery (s) | disk wr (MB) | rebuild (MB) |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|");
+    for p in &points {
+        println!(
+            "| {} | {} | {} | {} | {} | {} | {} | {:.3} | {:.3} |",
+            p.cfg.effective_stack(),
+            p.cfg.failure,
+            p.cfg.ranks,
+            cell(&p.total),
+            cell(&p.ckpt_write),
+            cell(&p.ckpt_read),
+            cell(&p.recovery),
+            p.storage.disk_write_mb,
+            p.storage.rebuild_mb,
+        );
+    }
+    println!("\n(expected shape: fs-only recovery reads pay the contended disk;");
+    println!(" partner tiers recover from memory and survive node failures when");
+    println!(" replicas are node-disjoint — see EXPERIMENTS.md §Checkpoint tiers)");
+
+    if let Err(e) = write_tier_csv(&opts.outdir, &points) {
+        eprintln!("WARN: could not write tier_compare.csv: {e}");
+    }
+    Ok(points)
+}
+
+/// `tier_compare.csv`: one row per (stack, failure, ranks) point.
+fn write_tier_csv(outdir: &str, points: &[Point]) -> std::io::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    let mut s = format!(
+        "app,ranks,recovery,failure,stack,drain_s,total_s,total_ci,\
+         ckpt_write_s,ckpt_write_ci,ckpt_read_s,ckpt_read_ci,\
+         mpi_recovery_s,mpi_recovery_ci,app_s,app_ci,{STORAGE_CSV_HEADER},trials\n"
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            p.cfg.app,
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.failure,
+            p.cfg.effective_stack(),
+            p.cfg.ckpt_drain_interval_s,
+            p.total.mean,
+            p.total.ci95,
+            p.ckpt_write.mean,
+            p.ckpt_write.ci95,
+            p.ckpt_read.mean,
+            p.ckpt_read.ci95,
+            p.recovery.mean,
+            p.recovery.ci95,
+            p.app.mean,
+            p.app.ci95,
+            storage_csv_cells(&p.storage),
+            p.total.n,
+        ));
+    }
+    std::fs::write(format!("{outdir}/tier_compare.csv"), s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AppKind, Fidelity, RecoveryKind};
+
+    fn quick_base() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.app = AppKind::Hpccg;
+        c.recovery = RecoveryKind::Reinit;
+        c.ranks_per_node = presets::TIER_SWEEP_RANKS_PER_NODE;
+        c.trials = 2;
+        c.iters = 6;
+        c.fidelity = Fidelity::Modeled;
+        c.hpccg_nx = 4;
+        c
+    }
+
+    #[test]
+    fn grid_covers_stacks_times_failures() {
+        let opts = SweepOpts {
+            max_ranks: 16,
+            outdir: "/tmp/reinitpp-test-results".into(),
+            jobs: 1,
+        };
+        let cfgs = build_grid(&quick_base(), &opts).unwrap();
+        assert_eq!(cfgs.len(), 6, "3 stacks x 2 failures at one rank count");
+        for c in &cfgs {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn single_node_base_is_rejected_with_context() {
+        let mut base = quick_base();
+        base.ranks_per_node = 16; // 16 ranks -> 1 compute node
+        let opts = SweepOpts {
+            max_ranks: 16,
+            outdir: "/tmp/reinitpp-test-results".into(),
+            jobs: 1,
+        };
+        let err = build_grid(&base, &opts).unwrap_err();
+        assert!(err.contains("node failure"), "{err}");
+    }
+
+    #[test]
+    fn tier_sweep_runs_and_orders_recovery_costs() {
+        let base = quick_base();
+        let opts = SweepOpts {
+            max_ranks: 16,
+            outdir: "/tmp/reinitpp-test-results/tiers".into(),
+            jobs: 2,
+        };
+        let pts = tier_sweep(&base, &opts).unwrap();
+        assert_eq!(pts.len(), 6);
+        let read_of = |stack: &str, failure: FailureKind| {
+            pts.iter()
+                .find(|p| {
+                    p.cfg.effective_stack().to_string() == stack && p.cfg.failure == failure
+                })
+                .unwrap()
+                .ckpt_read
+                .mean
+        };
+        // under a process failure, recovering from memory tiers must beat
+        // re-reading everything from the contended shared filesystem
+        assert!(
+            read_of("fs", FailureKind::Process)
+                > read_of("local+partner1", FailureKind::Process),
+            "fs read {} vs partner read {}",
+            read_of("fs", FailureKind::Process),
+            read_of("local+partner1", FailureKind::Process)
+        );
+        // the CSV exists and has the full grid
+        let text = std::fs::read_to_string("/tmp/reinitpp-test-results/tiers/tier_compare.csv")
+            .unwrap();
+        assert!(text.starts_with("app,ranks,recovery,failure,stack,drain_s,"));
+        assert_eq!(text.lines().count(), 7, "header + 6 points");
+        assert!(text.contains("local+partner2+fs"));
+    }
+}

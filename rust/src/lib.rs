@@ -5,8 +5,9 @@
 //! The crate implements the paper's full experimental system on a
 //! **virtual-time simulated cluster**: an Open-MPI-like runtime (root/HNP,
 //! per-node daemons, MPI rank processes), three global-restart recovery
-//! approaches (Checkpoint-Restart re-deploy, ULFM, Reinit++), file (Lustre
-//! model) and in-memory buddy checkpointing, fault injection/detection, and
+//! approaches (Checkpoint-Restart re-deploy, ULFM, Reinit++), multi-tier
+//! checkpoint storage (Lustre-model files, local memory, node-disjoint
+//! partner replicas, async drain), fault injection/detection, and
 //! the three weak-scaled proxy applications (CoMD, HPCCG, LULESH) whose
 //! per-rank compute executes real AOT-compiled XLA artifacts via PJRT.
 //!
@@ -18,7 +19,8 @@
 //! - `mpi`        — communicators, point-to-point, collectives, ULFM ext.
 //! - `fault`      — fault injection plans
 //! - `detect`     — child-exit / channel-break / heartbeat failure detection
-//! - `checkpoint` — file + buddy-memory checkpointing
+//! - `ckptstore`  — multi-tier checkpoint storage (local / partner / fs)
+//! - `checkpoint` — checkpoint policy (Table 2) over the tier stacks
 //! - `recovery`   — CR, ULFM, Reinit++ global-restart implementations
 //! - `runtime`    — PJRT client wrapper: load/compile/execute HLO artifacts
 //! - `apps`       — proxy applications + pure-Rust numeric oracle
@@ -35,6 +37,7 @@ pub mod fs;
 pub mod mpi;
 pub mod fault;
 pub mod detect;
+pub mod ckptstore;
 pub mod checkpoint;
 pub mod recovery;
 pub mod runtime;

@@ -10,6 +10,7 @@ pub use stats::{mean_ci95, Summary};
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use crate::ckptstore::StorageStats;
 use crate::sim::{SimDuration, SimTime};
 
 /// Phase breakdown of one trial (paper §4 "Statistical evaluation"):
@@ -61,6 +62,65 @@ impl SweepStats {
         } else {
             0.0
         }
+    }
+}
+
+/// Mean per-trial storage traffic of one experiment point, in MB (ops as a
+/// plain count) — the per-tier read/write/rebuild counters and the shared
+/// disk's own stats, exported into every sweep CSV row so storage pressure
+/// is visible per point.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StorageMeans {
+    pub disk_write_mb: f64,
+    pub disk_read_mb: f64,
+    pub disk_ops: f64,
+    pub local_write_mb: f64,
+    pub partner_write_mb: f64,
+    pub fs_write_mb: f64,
+    pub local_read_mb: f64,
+    pub partner_read_mb: f64,
+    pub fs_read_mb: f64,
+    pub rebuild_mb: f64,
+    pub drained_mb: f64,
+}
+
+impl StorageMeans {
+    pub fn from_trials(stats: &[StorageStats]) -> StorageMeans {
+        const MB: f64 = 1e6;
+        let mut m = StorageMeans::default();
+        if stats.is_empty() {
+            return m;
+        }
+        for s in stats {
+            m.disk_write_mb += s.disk.bytes_written as f64 / MB;
+            m.disk_read_mb += s.disk.bytes_read as f64 / MB;
+            m.disk_ops += s.disk.ops as f64;
+            m.local_write_mb += s.local.write_bytes as f64 / MB;
+            m.partner_write_mb += s.partner.write_bytes as f64 / MB;
+            m.fs_write_mb += s.fs.write_bytes as f64 / MB;
+            m.local_read_mb += s.local.read_bytes as f64 / MB;
+            m.partner_read_mb += s.partner.read_bytes as f64 / MB;
+            m.fs_read_mb += s.fs.read_bytes as f64 / MB;
+            m.rebuild_mb +=
+                (s.local.rebuild_bytes + s.partner.rebuild_bytes + s.fs.rebuild_bytes) as f64
+                    / MB;
+            m.drained_mb +=
+                (s.local.drained_bytes + s.partner.drained_bytes + s.fs.drained_bytes) as f64
+                    / MB;
+        }
+        let n = stats.len() as f64;
+        m.disk_write_mb /= n;
+        m.disk_read_mb /= n;
+        m.disk_ops /= n;
+        m.local_write_mb /= n;
+        m.partner_write_mb /= n;
+        m.fs_write_mb /= n;
+        m.local_read_mb /= n;
+        m.partner_read_mb /= n;
+        m.fs_read_mb /= n;
+        m.rebuild_mb /= n;
+        m.drained_mb /= n;
+        m
     }
 }
 
@@ -221,6 +281,27 @@ mod tests {
         };
         assert_eq!(z.utilization(), 0.0);
         assert_eq!(z.trials_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn storage_means_average_per_trial() {
+        use crate::ckptstore::TierIo;
+        let a = StorageStats {
+            local: TierIo {
+                write_bytes: 2_000_000,
+                ..Default::default()
+            },
+            disk: crate::fs::DiskStats {
+                ops: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let b = StorageStats::default();
+        let m = StorageMeans::from_trials(&[a, b]);
+        assert!((m.local_write_mb - 1.0).abs() < 1e-12);
+        assert!((m.disk_ops - 2.0).abs() < 1e-12);
+        assert_eq!(StorageMeans::from_trials(&[]), StorageMeans::default());
     }
 
     #[test]

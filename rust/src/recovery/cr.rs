@@ -71,6 +71,10 @@ pub async fn cr_trial_driver(w: Rc<TrialWorld>) {
         if !aborted {
             break;
         }
+        // The abort killed every process: in-memory checkpoint tiers (and
+        // any undrained copies) die with them. Only the filesystem tier
+        // survives re-deployment — which is why CR needs one (Table 2).
+        w.ckpt.lose_all_memory();
         // RTE teardown + scheduler epilogue, then re-deploy.
         w.sim.sleep(w.deploy.teardown()).await;
         deployment += 1;

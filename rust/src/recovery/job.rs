@@ -6,7 +6,7 @@ use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 
 use crate::apps::{make_app, App, ComputeBackend, CostTracker, StepCtx};
-use crate::checkpoint::CkptStore;
+use crate::ckptstore::{CkptStore, StorageStats};
 use crate::cluster::{Cluster, DeployCost, Topology};
 use crate::config::{ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
 use crate::detect::{watch_child, watch_daemon, DetectEvent};
@@ -38,6 +38,8 @@ pub struct TrialResult {
     pub sim_events: u64,
     /// Rank 0's (virtual time s, iteration, diagnostic) trace.
     pub diag_trace: Vec<(f64, u32, f64)>,
+    /// Per-tier checkpoint traffic + shared-disk counters for this trial.
+    pub storage: StorageStats,
 }
 
 /// Per-worker-thread XLA runtime cache. `Rc<XlaRuntime>` cannot cross
@@ -149,7 +151,7 @@ impl TrialWorld {
             cfg: cfg.clone(),
             app: make_app(cfg),
             backends: Backends::build(cfg, xla),
-            ckpt: CkptStore::new(sim, cfg.effective_ckpt(), topo, &cfg.calib),
+            ckpt: CkptStore::new(sim, &cfg.effective_stack(), topo, &cfg.calib),
             metrics: TrialMetrics::new(cfg.ranks),
             fault: FaultTrigger::new(if cfg.failure == FailureKind::None {
                 FaultPlan::none()
@@ -299,6 +301,15 @@ pub async fn rank_user_main(
             .expect("globally-agreed checkpoint must exist");
         app_state.restore(&bytes);
         w.metrics.add_ckpt_read(rank, w.sim.now() - t0);
+        // Tier-aware recovery: the failure degraded some ranks' replica
+        // sets; every rank re-establishes its missing copies before
+        // resuming, so a second failure finds full redundancy again.
+        // No-op (zero cost) for ranks whose copies all survived.
+        if w.fault.has_fired() {
+            let t1 = w.sim.now();
+            w.ckpt.rebuild(rank, slot.node, it, &bytes).await;
+            w.metrics.add_ckpt_write(rank, w.sim.now() - t1);
+        }
         start_iter = it + 1;
     }
 
@@ -406,6 +417,7 @@ pub fn run_trial(
         .collect();
     let fault = world.fault.plan();
     let diag_trace = world.diag_trace.borrow().clone();
+    let storage = world.ckpt.storage_stats();
     TrialResult {
         breakdown,
         digests,
@@ -413,5 +425,6 @@ pub fn run_trial(
         fault,
         sim_events: summary.events,
         diag_trace,
+        storage,
     }
 }

@@ -1,0 +1,281 @@
+//! Property-style survivability matrix for the multi-tier checkpoint store:
+//! (stack × failure domain × replica count × topology), checked two ways —
+//!
+//! 1. unit level: inject losses straight into a `CkptStore` and compare
+//!    what survives against a placement-derived oracle (a copy survives iff
+//!    some host of it is outside the failed set, or it sits on the fs tier);
+//! 2. end to end: whole trials through the recovery paths must complete and
+//!    reproduce the fault-free digests when the stack can survive the
+//!    injected failure — including the new node-failure-over-memory case
+//!    that node-disjoint replicas unlock (the acceptance pin: k >= 1
+//!    node-disjoint replicas survive a node failure).
+
+use reinitpp::ckptstore::{partners_of, CkptStore, StackSpec, TierSpec};
+use reinitpp::cluster::Topology;
+use reinitpp::config::{
+    AppKind, Calibration, ExperimentConfig, FailureKind, Fidelity, RecoveryKind,
+};
+use reinitpp::recovery::job::run_trial;
+use reinitpp::sim::Sim;
+
+fn store(spec: &str, topo: Topology) -> (Sim, CkptStore) {
+    let sim = Sim::new();
+    let stack = StackSpec::parse(spec).unwrap();
+    let s = CkptStore::new(&sim, &stack, topo, &Calibration::default());
+    (sim, s)
+}
+
+fn save_all(sim: &Sim, s: &CkptStore, topo: Topology, iter: u32) {
+    for r in 0..topo.ranks {
+        let s2 = s.clone();
+        let node = topo.home_node(r);
+        let p = sim.spawn_process(format!("saver{r}"));
+        sim.spawn(p, async move {
+            s2.save(r, node, iter, vec![r as u8; 16]).await;
+        });
+    }
+    sim.run();
+}
+
+/// Placement oracle: does rank `r`'s checkpoint survive losing `dead`?
+fn oracle_survives(stack: &StackSpec, topo: Topology, r: u32, dead: &[u32]) -> bool {
+    stack.tiers.iter().any(|t| match *t {
+        TierSpec::SharedFs => true,
+        TierSpec::LocalMem => !dead.contains(&r),
+        TierSpec::PartnerMem {
+            replicas,
+            node_disjoint,
+        } => partners_of(&topo, r, replicas, node_disjoint)
+            .iter()
+            .any(|h| !dead.contains(h)),
+    })
+}
+
+/// The full unit-level matrix: every stack × every topology × process and
+/// node failure domains, store behavior vs the placement oracle.
+#[test]
+fn survivability_matrix_matches_placement_oracle() {
+    let stacks = [
+        "fs",
+        "local",
+        "local+partner1",
+        "local+partner1.same",
+        "local+partner2",
+        "local+partner2+fs",
+        "partner3",
+    ];
+    let topos = [
+        Topology::new(8, 4, 1),
+        Topology::new(8, 2, 0),
+        Topology::new(16, 16, 0), // single node
+        Topology::new(12, 5, 2),  // ragged last node
+    ];
+    for spec in stacks {
+        let stack = StackSpec::parse(spec).unwrap();
+        for topo in topos {
+            // process-failure domains: each rank alone
+            for victim in 0..topo.ranks {
+                let (sim, s) = store(spec, topo);
+                save_all(&sim, &s, topo, 1);
+                s.lose_rank(victim);
+                for r in 0..topo.ranks {
+                    let dead = [victim];
+                    assert_eq!(
+                        s.latest_iter(r).is_some(),
+                        oracle_survives(&stack, topo, r, &dead),
+                        "{spec} topo({},{}) victim {victim} rank {r}",
+                        topo.ranks,
+                        topo.ranks_per_node
+                    );
+                }
+            }
+            // node-failure domains: each node's resident ranks
+            for node in 0..topo.compute_nodes {
+                let (sim, s) = store(spec, topo);
+                save_all(&sim, &s, topo, 1);
+                let dead = topo.ranks_on_node(node);
+                s.lose_node_ranks(&dead);
+                for r in 0..topo.ranks {
+                    assert_eq!(
+                        s.latest_iter(r).is_some(),
+                        oracle_survives(&stack, topo, r, &dead),
+                        "{spec} topo({},{}) node {node} rank {r}",
+                        topo.ranks,
+                        topo.ranks_per_node
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The acceptance pin, stated directly: with k node-disjoint replicas and
+/// >= 2 compute nodes, EVERY rank's checkpoint survives ANY single node
+/// failure, for k = 1 and k = 2 — while the same-node variant does not.
+#[test]
+fn node_disjoint_replicas_survive_any_single_node_failure() {
+    for spec in ["local+partner1", "local+partner2"] {
+        for topo in [Topology::new(8, 4, 1), Topology::new(32, 8, 0)] {
+            for node in 0..topo.compute_nodes {
+                let (sim, s) = store(spec, topo);
+                save_all(&sim, &s, topo, 3);
+                s.lose_node_ranks(&topo.ranks_on_node(node));
+                for r in 0..topo.ranks {
+                    assert_eq!(
+                        s.latest_iter(r),
+                        Some(3),
+                        "{spec}: rank {r} lost to node {node} failure"
+                    );
+                }
+            }
+        }
+    }
+    // counterexample: a same-node (cyclic) buddy loses interior ranks
+    let topo = Topology::new(8, 4, 0);
+    let (sim, s) = store("local+partner1.same", topo);
+    save_all(&sim, &s, topo, 3);
+    s.lose_node_ranks(&topo.ranks_on_node(0)); // ranks 0..4
+    assert_eq!(s.latest_iter(0), None, "rank 0's cyclic buddy (1) died with it");
+    assert_eq!(s.latest_iter(3), Some(3), "rank 3's cyclic buddy (4) is off-node");
+}
+
+/// k = 2 replicas survive owner + one replica host dying; losing the last
+/// replica host loses the checkpoint.
+#[test]
+fn replica_count_bounds_multi_failure_survivability() {
+    let topo = Topology::new(12, 4, 0);
+    for r in 0..topo.ranks {
+        let hosts = partners_of(&topo, r, 2, true);
+        let (sim, s) = store("local+partner2", topo);
+        save_all(&sim, &s, topo, 1);
+        s.lose_rank(r);
+        s.lose_rank(hosts[0]);
+        assert!(
+            s.latest_iter(r).is_some(),
+            "rank {r}: k=2 must survive owner + one replica host"
+        );
+        s.lose_rank(hosts[1]);
+        assert!(
+            s.latest_iter(r).is_none(),
+            "rank {r}: all copies gone after the second replica host"
+        );
+    }
+}
+
+// ---- end-to-end trials through the recovery paths ----
+
+fn trial_cfg(
+    recovery: RecoveryKind,
+    failure: FailureKind,
+    stack: &str,
+    drain_s: f64,
+) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.app = AppKind::Hpccg;
+    c.recovery = recovery;
+    c.failure = failure;
+    c.ranks = 8;
+    c.ranks_per_node = 4;
+    c.spare_nodes = 1;
+    c.iters = 6;
+    c.fidelity = Fidelity::Modeled;
+    c.hpccg_nx = 4;
+    c.seed = 4242;
+    c.ckpt_tiers = Some(StackSpec::parse(stack).unwrap());
+    c.ckpt_drain_interval_s = drain_s;
+    c
+}
+
+fn check_equivalence(cfg: &ExperimentConfig, trial: u32) {
+    let mut free = cfg.clone();
+    free.failure = FailureKind::None;
+    let want = run_trial(&free, trial, None);
+    assert!(want.completed);
+    let got = run_trial(cfg, trial, None);
+    assert!(
+        got.completed,
+        "{}/{}/{} hung (fault {:?})",
+        cfg.recovery,
+        cfg.failure,
+        cfg.effective_stack(),
+        got.fault
+    );
+    assert_eq!(
+        got.digests, want.digests,
+        "{}/{}/{}: recovered state differs (fault {:?})",
+        cfg.recovery,
+        cfg.failure,
+        cfg.effective_stack(),
+        got.fault
+    );
+}
+
+/// A node failure recovered entirely from memory tiers — impossible under
+/// the paper's two-scheme store, unlocked by node-disjoint replicas.
+#[test]
+fn reinit_node_failure_recovers_from_partner_tier() {
+    for trial in 0..3 {
+        let cfg = trial_cfg(RecoveryKind::Reinit, FailureKind::Node, "local+partner1", 0.0);
+        check_equivalence(&cfg, trial);
+        let r = run_trial(&cfg, trial, None);
+        assert_eq!(
+            r.storage.disk.bytes_read, 0,
+            "recovery must never touch the disk with a surviving partner tier"
+        );
+        assert!(
+            r.storage.local.rebuild_bytes + r.storage.partner.rebuild_bytes > 0,
+            "the node's victims must rebuild their lost copies"
+        );
+    }
+}
+
+/// ULFM and CR drive the same store through their own recovery paths.
+#[test]
+fn ulfm_process_failure_over_two_replica_stack() {
+    let cfg = trial_cfg(RecoveryKind::Ulfm, FailureKind::Process, "local+partner2", 0.0);
+    check_equivalence(&cfg, 1);
+}
+
+#[test]
+fn cr_abort_falls_back_to_fs_tier() {
+    let cfg = trial_cfg(RecoveryKind::Cr, FailureKind::Process, "local+partner1+fs", 0.0);
+    check_equivalence(&cfg, 0);
+    let r = run_trial(&cfg, 0, None);
+    assert!(
+        r.storage.disk.bytes_read > 0,
+        "CR re-deploy wiped the memory tiers; recovery must read the fs tier"
+    );
+}
+
+/// Async drain end to end: the failure may land between drain activations,
+/// global restart still converges to the fault-free digests.
+#[test]
+fn drained_stack_recovers_across_failure() {
+    for trial in 0..3 {
+        let cfg = trial_cfg(
+            RecoveryKind::Reinit,
+            FailureKind::Process,
+            "local+partner1+fs",
+            0.05,
+        );
+        check_equivalence(&cfg, trial);
+        let r = run_trial(&cfg, trial, None);
+        assert!(
+            r.storage.partner.drained_bytes > 0 || r.storage.fs.drained_bytes > 0,
+            "the background drain must have moved bytes"
+        );
+    }
+}
+
+/// Replica rebuild restores full redundancy: after recovery, a SECOND
+/// failure of the same domain must still be survivable at the store level.
+#[test]
+fn rebuild_restores_redundancy_for_repeat_failures() {
+    let cfg = trial_cfg(RecoveryKind::Reinit, FailureKind::Process, "local+partner1", 0.0);
+    let r = run_trial(&cfg, 2, None);
+    assert!(r.completed);
+    assert!(
+        r.storage.local.rebuild_bytes + r.storage.partner.rebuild_bytes > 0,
+        "the victim's reinstated copies must be counted as rebuild traffic"
+    );
+}
