@@ -1,0 +1,137 @@
+//! Micro-bench: the large-rank fast path. One simulated iteration =
+//! tree allreduce + 6-face halo exchange + ring heartbeat (a timed recv
+//! that completes early — the ULFM liveness pattern), at 1k/4k/16k ranks.
+//!
+//! Reports host msgs/s, steady-state heap allocations per delivered
+//! message (counting global allocator; warm-up subtracted by differencing
+//! a 1-iteration run against a longer one), and peak in-flight events.
+//! The O(1) fabric routing table, the direct-match receive path and the
+//! allocation-lean collectives are what keep these flat as ranks grow.
+//!
+//! Emits `BENCH_micro_scale.json` at the repository root.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use reinitpp::apps::halo::{grid3, neighbor};
+use reinitpp::cluster::Topology;
+use reinitpp::config::Calibration;
+use reinitpp::metrics::{BenchReport, BenchRow};
+use reinitpp::mpi::{FtMode, MpiJob, Payload, RecvSrc, ReduceOp};
+use reinitpp::sim::{ProcName, Sim, SimDuration};
+
+#[path = "support/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::alloc_count;
+
+/// Tag blocks (user tag space, below the collective/control blocks).
+const HALO_BASE: u64 = 1 << 32;
+const HB_BASE: u64 = 1 << 33;
+
+/// Run `iters` allreduce+halo+heartbeat iterations at `ranks` ranks.
+/// Returns (host seconds, fabric messages, allocations, peak inflight).
+fn run_scale(ranks: u32, iters: u32) -> (f64, u64, u64, u64) {
+    let sim = Sim::new();
+    let topo = Topology::new(ranks, 16, 0);
+    let job = MpiJob::new(&sim, topo, FtMode::Reinit, &Calibration::default());
+    let dims = grid3(ranks);
+    // One shared face payload (1 KB) and heartbeat payload: the data plane
+    // forwards them by Rc clone, so steady-state sends allocate nothing.
+    let face: Payload = Rc::from(vec![0u8; 1024]);
+    let hb: Payload = Rc::from(vec![1u8; 8]);
+    let prefix: Rc<str> = Rc::from("r");
+    for r in 0..ranks {
+        let j2 = job.clone();
+        let node = topo.home_node(r);
+        let p = sim.spawn_process(ProcName::Indexed {
+            prefix: Rc::clone(&prefix),
+            index: r,
+            sub: None,
+        });
+        let face2 = Rc::clone(&face);
+        let hb2 = Rc::clone(&hb);
+        sim.spawn(p, async move {
+            let c = j2.attach(r, node);
+            let next = (r + 1) % ranks;
+            let prev = (r + ranks - 1) % ranks;
+            for iter in 0..iters as u64 {
+                // 6-face halo exchange: post sends, then receive the
+                // opposite-direction face from each neighbour.
+                let tag = HALO_BASE + iter * 8;
+                for f in 0..6 {
+                    if let Some(to) = neighbor(r, dims, f) {
+                        c.send_payload(to, tag + f as u64, Rc::clone(&face2));
+                    }
+                }
+                for f in 0..6usize {
+                    if let Some(from) = neighbor(r, dims, f) {
+                        let m = c
+                            .recv(RecvSrc::From(from), tag + (f ^ 1) as u64)
+                            .await
+                            .unwrap();
+                        assert_eq!(m.data.len(), 1024);
+                    }
+                }
+                // ring heartbeat (a liveness probe, hence the unchecked
+                // timed recv): completes early, leaving only a stale
+                // (cancel-aware, allocation-free) timer.
+                c.send_payload(next, HB_BASE + iter, Rc::clone(&hb2));
+                let m = c
+                    .recv_unchecked_timeout(
+                        RecvSrc::From(prev),
+                        HB_BASE + iter,
+                        SimDuration::from_millis(1),
+                    )
+                    .await;
+                assert!(m.is_some(), "heartbeat must beat its deadline");
+                // tree allreduce closes the iteration (BSP barrier).
+                c.allreduce_scalar(1.0, ReduceOp::Sum).await.unwrap();
+            }
+        });
+    }
+    let a0 = alloc_count();
+    let t0 = Instant::now();
+    let summary = sim.run();
+    let host = t0.elapsed().as_secs_f64();
+    assert_eq!(summary.tasks_pending, 0, "iteration deadlocked");
+    let (msgs, _bytes) = job.fabric_stats();
+    (host, msgs, alloc_count() - a0, summary.peak_events_pending)
+}
+
+fn main() {
+    let mut report = BenchReport::new("micro_scale");
+    println!("| ranks | msgs | host (s) | M msg/s | steady allocs/msg | peak inflight |");
+    println!("|---|---|---|---|---|---|");
+    for ranks in [1024u32, 4096, 16384] {
+        // Difference a 1-iteration run against a 4-iteration run on fresh
+        // worlds: setup + warm-up (slab growth, scratch capacity) cancels,
+        // leaving the steady-state per-message cost.
+        let (_, m1, a1, _) = run_scale(ranks, 1);
+        let (host, m4, a4, peak) = run_scale(ranks, 4);
+        let steady_msgs = m4 - m1;
+        let steady_allocs = a4.saturating_sub(a1);
+        let allocs_per_msg = steady_allocs as f64 / steady_msgs as f64;
+        let rate = m4 as f64 / host;
+        println!(
+            "| {ranks} | {m4} | {host:.3} | {:.2} | {allocs_per_msg:.3} | {peak} |",
+            rate / 1e6
+        );
+        assert!(
+            allocs_per_msg <= 2.0,
+            "steady-state allocations per message regressed at {ranks} ranks: \
+             {allocs_per_msg:.3} > 2 ({steady_allocs} allocs / {steady_msgs} msgs)"
+        );
+        report.push(
+            BenchRow::new(&format!("scale_{ranks}ranks"), m4, host, "msgs/s")
+                .with_extra("ranks", ranks as f64)
+                .with_extra("steady_allocs_per_msg", allocs_per_msg)
+                .with_extra("peak_inflight", peak as f64),
+        );
+    }
+    println!("\n(acceptance: <= 2 steady-state allocations per message at every scale,");
+    println!(" including the 16k-rank allreduce+halo+heartbeat iteration)");
+    report.write_json(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_micro_scale.json"
+    ));
+}

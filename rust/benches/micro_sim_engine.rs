@@ -7,36 +7,16 @@
 //! Emits `BENCH_micro_sim_engine.json` at the repository root so CI and
 //! later PRs can track the perf trajectory.
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use reinitpp::metrics::{BenchReport, BenchRow};
 use reinitpp::sim::{channel, Sim, SimDuration};
 
-/// Counts every heap allocation so the report can include an "allocations
-/// per unit of work" figure (the measurable part of the zero-alloc claims).
-struct CountingAlloc;
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-}
-
-#[global_allocator]
-static ALLOCATOR: CountingAlloc = CountingAlloc;
-
-fn alloc_count() -> u64 {
-    ALLOCS.load(Ordering::Relaxed)
-}
+// Counts every heap allocation so the report can include an "allocations
+// per unit of work" figure (the measurable part of the zero-alloc claims).
+#[path = "support/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::alloc_count;
 
 /// Seed-engine reference rates for the same workloads (the pre-rewrite
 /// HashMap + per-poll-Arc + mutexed-wake-queue executor), used to report the

@@ -1,0 +1,34 @@
+//! Shared counting global allocator for the perf pins: every heap
+//! allocation bumps a counter so benches/tests can report (and assert)
+//! allocations per unit of work. Included via `#[path]` from the bench
+//! and test binaries that need it — keeping the counting strategy in one
+//! place so the bench numbers and the pinning tests cannot diverge.
+//! Registering the `#[global_allocator]` happens here too, so including
+//! this module is all a binary needs.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Total heap allocations observed so far (monotonic; diff around the
+/// measured region).
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}

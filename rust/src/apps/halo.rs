@@ -8,7 +8,7 @@
 //! positive-definiteness, hence CG behaviour; identical in fault-free and
 //! recovered runs, which is what the experiments compare).
 
-use crate::mpi::{bytes_to_f32s, f32s_to_bytes, Comm, MpiError, RecvSrc};
+use crate::mpi::{bytes_to_f32s, Comm, MpiError, RecvSrc};
 
 /// User-space tag block for halo faces.
 const FACE_TAG_BASE: u64 = 1 << 32;
@@ -84,11 +84,14 @@ fn idx(n: usize, x: usize, y: usize, z: usize) -> usize {
 }
 
 /// Extract the boundary plane of `field` (nx³, C order) facing direction
-/// `f`; the plane we *send* to that neighbour.
-pub fn extract_face(field: &[f32], nx: usize, f: usize) -> Vec<f32> {
+/// `f` into `out` (cleared first); the plane we *send* to that neighbour.
+/// Writing into a caller-owned buffer lets `exchange_faces` reuse one
+/// buffer across all six faces of every iteration.
+pub fn extract_face_into(field: &[f32], nx: usize, f: usize, out: &mut Vec<f32>) {
     let (axis, dir) = FACES[f];
     let fixed = if dir < 0 { 0 } else { nx - 1 };
-    let mut out = Vec::with_capacity(nx * nx);
+    out.clear();
+    out.reserve(nx * nx);
     for a in 0..nx {
         for b in 0..nx {
             let (x, y, z) = match axis {
@@ -99,6 +102,12 @@ pub fn extract_face(field: &[f32], nx: usize, f: usize) -> Vec<f32> {
             out.push(field[idx(nx, x, y, z)]);
         }
     }
+}
+
+/// Extract the boundary plane of `field` facing direction `f`.
+pub fn extract_face(field: &[f32], nx: usize, f: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    extract_face_into(field, nx, f, &mut out);
     out
 }
 
@@ -142,11 +151,15 @@ pub async fn exchange_faces(
     field: &[f32],
     nx: usize,
 ) -> Result<[Option<Vec<f32>>; 6], MpiError> {
-    // Post all sends first (non-blocking), then receive.
+    // Post all sends first (non-blocking), then receive. One reusable face
+    // buffer + the per-comm scratch encoder: each sent face costs exactly
+    // the shared `Rc` payload the fabric needs, not a `Vec<f32>` plus a
+    // `Vec<u8>` per hop.
+    let mut face = Vec::new();
     for f in 0..6 {
         if let Some(to) = neighbor(comm.rank, dims, f) {
-            let face = extract_face(field, nx, f);
-            comm.send(to, FACE_TAG_BASE + f as u64, &f32s_to_bytes(&face));
+            extract_face_into(field, nx, f, &mut face);
+            comm.send_payload(to, FACE_TAG_BASE + f as u64, comm.f32_payload(&face));
         }
     }
     let mut out: [Option<Vec<f32>>; 6] = Default::default();

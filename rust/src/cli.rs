@@ -4,6 +4,7 @@
 //! ```text
 //! reinitpp run       [OPTIONS] [key=value ...]   one experiment point
 //! reinitpp reproduce --figure N [OPTIONS] [...]  regenerate a paper figure
+//! reinitpp scale     [OPTIONS] [key=value ...]   weak-scaling sweep to 16k ranks
 //! reinitpp tiers     [OPTIONS] [key=value ...]   checkpoint tier-stack sweep
 //! reinitpp tables    [--which 1|2]               print Tables 1/2
 //! reinitpp validate  [OPTIONS] [key=value ...]   global-restart equivalence
@@ -36,6 +37,10 @@ pub enum Command {
         opts: SweepOpts,
     },
     Tiers {
+        cfg: ExperimentConfig,
+        opts: SweepOpts,
+    },
+    Scale {
         cfg: ExperimentConfig,
         opts: SweepOpts,
     },
@@ -73,6 +78,12 @@ reinitpp — Reinit++ global-restart MPI fault-tolerance study (paper reproducti
 USAGE:
   reinitpp run       [OPTIONS] [key=value ...]   run one experiment point
   reinitpp reproduce --figure N [OPTIONS] [...]  regenerate paper figure N (4-7, or 0 = all)
+  reinitpp scale     [OPTIONS] [key=value ...]   large-rank weak-scaling sweep: extends the
+                                                 paper's Figure 4 recovery curves past its
+                                                 3072-rank ceiling (ranks 512..16384, all
+                                                 recovery methods, process failure, modeled
+                                                 fidelity; ULFM capped at 4096 — see
+                                                 EXPERIMENTS.md; emits scale_compare.csv)
   reinitpp tiers     [OPTIONS] [key=value ...]   checkpoint tier-stack comparison sweep
                                                  (fs vs local+partner1 vs local+partner2+fs,
                                                  process + node failures; ranks 16/32/64 at
@@ -83,9 +94,10 @@ USAGE:
 
 OPTIONS:
   --config FILE      load a TOML-subset config file
-  --max-ranks N      cap the sweep's rank counts (reproduce/tiers)
+  --max-ranks N      cap the sweep's rank counts (reproduce/scale/tiers;
+                     scale defaults to 16384)
   --outdir DIR       CSV output directory (default: results)
-  --jobs N           worker threads for trial execution (run/reproduce/tiers).
+  --jobs N           worker threads for trial execution (run/reproduce/scale/tiers).
                      Must be >= 1: default all cores, 1 = serial execution on
                      the calling thread. Tables and CSVs are byte-identical
                      for any N.
@@ -98,6 +110,7 @@ EXAMPLES:
   reinitpp run app=hpccg ranks=16 recovery=reinit failure=process trials=3
   reinitpp run ranks=32 ranks_per_node=8 ckpt_tiers=local+partner2+fs trials=3
   reinitpp reproduce --figure 6 --max-ranks 128 --jobs 8 trials=5
+  reinitpp scale --max-ranks 16384 --jobs 8 trials=3
   reinitpp tiers --max-ranks 32 --jobs 4 trials=5
   reinitpp validate app=comd recovery=ulfm failure=process
 ";
@@ -111,6 +124,43 @@ fn parse_jobs(v: &str) -> Result<usize, CliError> {
         Ok(n) => Ok(n),
         Err(_) => Err(err(format!("--jobs: not a worker count: {v}"))),
     }
+}
+
+/// Parse the sweep flags shared by `reproduce`/`scale`/`tiers`
+/// (`--max-ranks`, `--outdir`, `--jobs`) from `leftovers` into `opts`.
+/// `extra` handles command-specific flags (returns true if it consumed the
+/// arg); anything else errors with the command name.
+fn parse_sweep_opts<'a>(
+    cmd: &str,
+    leftovers: &'a [String],
+    opts: &mut SweepOpts,
+    mut extra: impl FnMut(&str, &mut std::slice::Iter<'a, String>) -> Result<bool, CliError>,
+) -> Result<(), CliError> {
+    let mut it = leftovers.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--max-ranks" => {
+                let v = it.next().ok_or_else(|| err("--max-ranks needs a value"))?;
+                opts.max_ranks = v.parse().map_err(|_| err("--max-ranks: number"))?;
+            }
+            "--outdir" => {
+                opts.outdir = it
+                    .next()
+                    .ok_or_else(|| err("--outdir needs a value"))?
+                    .clone();
+            }
+            "--jobs" => {
+                let v = it.next().ok_or_else(|| err("--jobs needs a value"))?;
+                opts.jobs = parse_jobs(v)?;
+            }
+            other => {
+                if !extra(other, &mut it)? {
+                    return Err(err(format!("{cmd}: unknown arg {other}")));
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Parse argv (without the binary name).
@@ -164,35 +214,66 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let (cfg, leftovers) = parse_cfg(rest)?;
             let mut figure = None;
             let mut opts = SweepOpts::default();
-            let mut it = leftovers.iter();
-            while let Some(a) = it.next() {
-                match a.as_str() {
-                    "--figure" => {
-                        let v = it.next().ok_or_else(|| err("--figure needs a value"))?;
-                        figure = Some(v.parse().map_err(|_| err("--figure: 0 or 4-7"))?);
-                    }
-                    "--max-ranks" => {
-                        let v = it.next().ok_or_else(|| err("--max-ranks needs a value"))?;
-                        opts.max_ranks = v.parse().map_err(|_| err("--max-ranks: number"))?;
-                    }
-                    "--outdir" => {
-                        opts.outdir = it
-                            .next()
-                            .ok_or_else(|| err("--outdir needs a value"))?
-                            .clone();
-                    }
-                    "--jobs" => {
-                        let v = it.next().ok_or_else(|| err("--jobs needs a value"))?;
-                        opts.jobs = parse_jobs(v)?;
-                    }
-                    other => return Err(err(format!("reproduce: unknown arg {other}"))),
+            parse_sweep_opts("reproduce", &leftovers, &mut opts, |a, it| {
+                if a != "--figure" {
+                    return Ok(false);
                 }
-            }
+                let v = it.next().ok_or_else(|| err("--figure needs a value"))?;
+                figure = Some(v.parse().map_err(|_| err("--figure: 0 or 4-7"))?);
+                Ok(true)
+            })?;
             let figure = figure.ok_or_else(|| err("reproduce: missing --figure"))?;
             if figure != 0 && !(4..=7).contains(&figure) {
                 return Err(err("reproduce: --figure must be 0 (all) or 4..7"));
             }
             Ok(Command::Reproduce { figure, cfg, opts })
+        }
+        "scale" => {
+            // Scale-sweep defaults: quick modeled trials — the grid reaches
+            // 16k ranks, so per-rank work is kept small. Overridable via
+            // key=value (except the grid-owned axes below).
+            let base = ExperimentConfig {
+                trials: 3,
+                iters: 6,
+                fidelity: crate::config::Fidelity::Modeled,
+                hpccg_nx: 4,
+                comd_n: 32,
+                lulesh_nx: 4,
+                ..ExperimentConfig::default()
+            };
+            let (cfg, leftovers) = parse_cfg_from(base, rest)?;
+            // The sweep owns its grid axes (rank count, recovery method,
+            // failure kind); rejecting overrides beats silently lying
+            // about what was swept.
+            let defaults = ExperimentConfig::default();
+            if cfg.ranks != defaults.ranks {
+                return Err(err(
+                    "scale: the sweep sets ranks per point (512..16384); \
+                     cap the grid with --max-ranks instead",
+                ));
+            }
+            if cfg.recovery != defaults.recovery {
+                return Err(err(
+                    "scale: the sweep runs all recovery methods; drop recovery=",
+                ));
+            }
+            if cfg.failure != defaults.failure {
+                return Err(err(
+                    "scale: the sweep injects a single process failure; drop failure=",
+                ));
+            }
+            if cfg.ckpt.is_some() || cfg.ckpt_tiers.is_some() {
+                return Err(err(
+                    "scale: the sweep uses the paper's Table 2 checkpoint policy \
+                     per recovery method; drop ckpt/ckpt_tiers",
+                ));
+            }
+            let mut opts = SweepOpts {
+                max_ranks: 16_384,
+                ..SweepOpts::default()
+            };
+            parse_sweep_opts("scale", &leftovers, &mut opts, |_, _| Ok(false))?;
+            Ok(Command::Scale { cfg, opts })
         }
         "tiers" => {
             // Tier-sweep defaults: multiple compute nodes even at the
@@ -225,26 +306,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 ));
             }
             let mut opts = SweepOpts::default();
-            let mut it = leftovers.iter();
-            while let Some(a) = it.next() {
-                match a.as_str() {
-                    "--max-ranks" => {
-                        let v = it.next().ok_or_else(|| err("--max-ranks needs a value"))?;
-                        opts.max_ranks = v.parse().map_err(|_| err("--max-ranks: number"))?;
-                    }
-                    "--outdir" => {
-                        opts.outdir = it
-                            .next()
-                            .ok_or_else(|| err("--outdir needs a value"))?
-                            .clone();
-                    }
-                    "--jobs" => {
-                        let v = it.next().ok_or_else(|| err("--jobs needs a value"))?;
-                        opts.jobs = parse_jobs(v)?;
-                    }
-                    other => return Err(err(format!("tiers: unknown arg {other}"))),
-                }
-            }
+            parse_sweep_opts("tiers", &leftovers, &mut opts, |_, _| Ok(false))?;
             Ok(Command::Tiers { cfg, opts })
         }
         other => Err(err(format!("unknown command `{other}`\n\n{USAGE}"))),
@@ -350,6 +412,13 @@ pub fn execute(cmd: Command) -> i32 {
             0
         }
         Command::Tiers { cfg, opts } => match harness::tier_sweep(&cfg, &opts) {
+            Ok(_) => 0,
+            Err(e) => {
+                eprintln!("{e}");
+                2
+            }
+        },
+        Command::Scale { cfg, opts } => match harness::scale_sweep(&cfg, &opts) {
             Ok(_) => 0,
             Err(e) => {
                 eprintln!("{e}");
@@ -498,8 +567,36 @@ mod tests {
     }
 
     #[test]
+    fn parse_scale_defaults_and_guardrails() {
+        let cmd = parse(&sv(&["scale", "--max-ranks", "2048", "--jobs", "2", "trials=3"]))
+            .unwrap();
+        match cmd {
+            Command::Scale { cfg, opts } => {
+                assert_eq!(cfg.trials, 3);
+                assert_eq!(cfg.fidelity, crate::config::Fidelity::Modeled);
+                assert_eq!(opts.max_ranks, 2048);
+                assert_eq!(opts.jobs, 2);
+            }
+            _ => panic!(),
+        }
+        match parse(&sv(&["scale"])).unwrap() {
+            Command::Scale { opts, .. } => {
+                assert_eq!(opts.max_ranks, 16_384, "defaults past the paper's ceiling")
+            }
+            _ => panic!(),
+        }
+        // grid-owned axes must be rejected, not silently overwritten
+        assert!(parse(&sv(&["scale", "ranks=4096"])).is_err());
+        assert!(parse(&sv(&["scale", "recovery=cr"])).is_err());
+        assert!(parse(&sv(&["scale", "failure=node"])).is_err());
+        assert!(parse(&sv(&["scale", "ckpt=file"])).is_err());
+        assert!(parse(&sv(&["scale", "ckpt_tiers=local+partner1"])).is_err());
+        assert!(parse(&sv(&["scale", "--figure", "4"])).is_err(), "unknown arg");
+    }
+
+    #[test]
     fn jobs_zero_is_rejected_with_serial_hint() {
-        for cmd in ["run", "tiers"] {
+        for cmd in ["run", "tiers", "scale"] {
             let e = parse(&sv(&[cmd, "--jobs", "0"])).unwrap_err();
             assert!(
                 e.to_string().contains("use 1 for serial"),

@@ -5,7 +5,7 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use super::topology::Topology;
-use crate::sim::{ProcId, Sim};
+use crate::sim::{ProcId, ProcName, Sim};
 
 /// Where a rank currently lives.
 #[derive(Clone, Copy, Debug)]
@@ -29,6 +29,10 @@ struct Inner {
     daemons: Vec<ProcId>,
     node_alive: Vec<bool>,
     ranks: Vec<RankSlot>,
+    /// Shared `"{job_tag}/rank"` prefix for lazy process names — spawning
+    /// (or re-spawning) a rank must not pay a `format!` per process, or
+    /// 16k-rank trial setup is dominated by name strings.
+    rank_prefix: Rc<str>,
 }
 
 /// Shared handle to the cluster state (one per job incarnation).
@@ -54,14 +58,26 @@ impl Cluster {
     /// job driver via `DeployCost::mpirun_launch`.)
     pub fn new(sim: &Sim, topo: Topology, job_tag: &str) -> Self {
         let root = sim.spawn_process(format!("{job_tag}/root"));
+        let daemon_prefix: Rc<str> = Rc::from(format!("{job_tag}/daemon"));
+        let rank_prefix: Rc<str> = Rc::from(format!("{job_tag}/rank"));
         let daemons: Vec<ProcId> = (0..topo.total_nodes())
-            .map(|n| sim.spawn_process(format!("{job_tag}/daemon{n}")))
+            .map(|n| {
+                sim.spawn_process(ProcName::Indexed {
+                    prefix: Rc::clone(&daemon_prefix),
+                    index: n,
+                    sub: None,
+                })
+            })
             .collect();
         let ranks: Vec<RankSlot> = (0..topo.ranks)
             .map(|r| {
                 let node = topo.home_node(r);
                 RankSlot {
-                    proc: sim.spawn_process(format!("{job_tag}/rank{r}.0")),
+                    proc: sim.spawn_process(ProcName::Indexed {
+                        prefix: Rc::clone(&rank_prefix),
+                        index: r,
+                        sub: Some(0),
+                    }),
                     node,
                     incarnation: 0,
                 }
@@ -75,6 +91,7 @@ impl Cluster {
                 daemons,
                 node_alive: vec![true; topo.total_nodes() as usize],
                 ranks,
+                rank_prefix,
             })),
         }
     }
@@ -132,12 +149,15 @@ impl Cluster {
     pub fn respawn_rank(&self, rank: u32, node: u32) -> ProcId {
         let mut inner = self.inner.borrow_mut();
         assert!(inner.node_alive[node as usize], "respawn on dead node {node}");
+        let prefix = Rc::clone(&inner.rank_prefix);
         let slot = &mut inner.ranks[rank as usize];
         slot.incarnation += 1;
         slot.node = node;
-        slot.proc = self
-            .sim
-            .spawn_process(format!("rank{r}.{i}", r = rank, i = slot.incarnation));
+        slot.proc = self.sim.spawn_process(ProcName::Indexed {
+            prefix,
+            index: rank,
+            sub: Some(slot.incarnation),
+        });
         slot.proc
     }
 

@@ -36,6 +36,18 @@ pub const TIER_SWEEP_RANKS: [u32; 3] = [16, 32, 64];
 /// node failures are the whole object of study).
 pub const TIER_SWEEP_RANKS_PER_NODE: u32 = 8;
 
+/// Rank counts of the large-rank weak-scaling sweep (`reinitpp scale`):
+/// picks up where the paper's Figure 4 grid tops out and extends the
+/// recovery-time curves past the paper's 3072-rank ceiling.
+pub const SCALE_SWEEP_RANKS: [u32; 6] = [512, 1024, 2048, 4096, 8192, 16384];
+
+/// ULFM points of the scale sweep are capped here: the shrink/agree
+/// protocol materializes the survivor set on every rank, which is
+/// quadratic host memory at extreme scale — and the paper's ULFM
+/// prototype itself topped out at 3072 ranks (§5.3), so the comparison
+/// past this point is CR vs Reinit++, exactly like the paper's Figure 7.
+pub const SCALE_ULFM_MAX_RANKS: u32 = 4096;
+
 /// The parsed tier-sweep stacks.
 pub fn tier_sweep_stacks() -> Vec<StackSpec> {
     TIER_SWEEP_STACKS

@@ -11,11 +11,13 @@
 
 mod figures;
 mod pool;
+mod scale;
 mod tables;
 mod tiers;
 
 pub use figures::{fig4, fig5, fig6, fig7, print_points, write_csv, SweepOpts};
 pub use pool::{default_jobs, run_trials, TrialOut, TrialSpec};
+pub use scale::scale_sweep;
 pub use tables::{print_table1, print_table2};
 pub use tiers::tier_sweep;
 

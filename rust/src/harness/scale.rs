@@ -1,0 +1,209 @@
+//! Large-rank weak-scaling sweep (`reinitpp scale`): extends the paper's
+//! Figure 4 recovery-time curves past its 3072-rank ceiling.
+//!
+//! The paper's headline claim is that Reinit++ "scales excellently as the
+//! number of MPI processes grows", but its evaluation stops at 3072 ranks.
+//! ReStore (arXiv 2203.01107) and PartRePer-MPI (arXiv 2310.16370) both
+//! argue recovery-time results only become interesting at thousands of
+//! processes. With the O(1) fabric routing table, indexed receive matching
+//! and allocation-lean collectives, a simulated iteration is cheap enough
+//! in host time that the sweep runs the modeled-fidelity grid at
+//! 512..16384 ranks under a single process failure for every recovery
+//! method (ULFM capped at `presets::SCALE_ULFM_MAX_RANKS` — the survivor
+//! sets of shrink/agree are quadratic host memory at extreme scale, and
+//! the paper's own ULFM prototype stopped at 3072).
+//!
+//! Like every harness sweep, the grid is flattened to (point, trial) work
+//! items for the pool and merged deterministically, so
+//! `scale_compare.csv` is byte-identical for any `--jobs` value (pinned by
+//! the unit test below and a serial-vs-2-worker `cmp` in CI).
+
+use super::figures::{cell, write_csv, SweepOpts};
+use super::{run_points, Point};
+use crate::config::{presets, ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
+
+/// Rank counts the scale sweep visits (capped by `--max-ranks`).
+fn sweep_ranks(max: u32) -> Vec<u32> {
+    presets::SCALE_SWEEP_RANKS
+        .iter()
+        .copied()
+        .filter(|&r| r <= max)
+        .collect()
+}
+
+/// Build the sweep grid: ranks × recovery methods, single process failure,
+/// modeled fidelity (16k ranks cannot execute per-rank artifacts).
+fn build_grid(
+    base: &ExperimentConfig,
+    opts: &SweepOpts,
+) -> Result<Vec<ExperimentConfig>, String> {
+    if base.fidelity != Fidelity::Modeled {
+        return Err(
+            "scale: the sweep runs fidelity=modeled (per-rank artifact execution \
+             is not feasible at 16k ranks); drop fidelity="
+                .to_string(),
+        );
+    }
+    let mut cfgs = Vec::new();
+    for &ranks in &sweep_ranks(opts.max_ranks) {
+        for rk in RecoveryKind::ALL {
+            if rk == RecoveryKind::Ulfm && ranks > presets::SCALE_ULFM_MAX_RANKS {
+                continue; // documented cap, mirrors the paper's prototype limit
+            }
+            let mut c = base.clone();
+            c.ranks = ranks;
+            c.recovery = rk;
+            c.failure = FailureKind::Process;
+            c.ckpt = None; // Table 2 policy per method
+            c.validate().map_err(|e| {
+                format!("scale sweep point ranks={ranks} recovery={rk}: {e}")
+            })?;
+            cfgs.push(c);
+        }
+    }
+    if cfgs.is_empty() {
+        return Err(format!(
+            "scale sweep: no rank count of {:?} fits --max-ranks {}",
+            presets::SCALE_SWEEP_RANKS,
+            opts.max_ranks
+        ));
+    }
+    Ok(cfgs)
+}
+
+/// Run the weak-scaling sweep: markdown table on stdout, CSV under
+/// `outdir/scale_compare.csv`.
+pub fn scale_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Point>, String> {
+    let cfgs = build_grid(base, opts)?;
+    let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
+    eprintln!(
+        "  scale sweep: {} points / {trials} trials (to {} ranks) on {} worker(s)...",
+        cfgs.len(),
+        cfgs.iter().map(|c| c.ranks).max().unwrap_or(0),
+        opts.jobs
+    );
+    let (points, stats) = run_points(&cfgs, opts.jobs);
+    eprintln!(
+        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
+        stats.wall_s,
+        stats.trials_per_sec(),
+        stats.utilization() * 100.0
+    );
+
+    println!(
+        "\n## Large-rank weak scaling ({}): Figure 4 extended past 3072 ranks\n",
+        base.app
+    );
+    println!("| ranks | recovery | ckpt | total (s) | MPI recovery (s) | app (s) |");
+    println!("|---|---|---|---|---|---|");
+    for p in &points {
+        println!(
+            "| {} | {} | {} | {} | {} | {} |",
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.effective_stack(),
+            cell(&p.total),
+            cell(&p.recovery),
+            cell(&p.app),
+        );
+    }
+    println!(
+        "\n(expected shape: Reinit++ recovery stays ~flat to 16k ranks, CR pays the"
+    );
+    println!(
+        " full re-deploy at every scale; ULFM — capped at {} ranks, see module docs —",
+        presets::SCALE_ULFM_MAX_RANKS
+    );
+    println!(" degrades with the survivor consensus. See EXPERIMENTS.md §Large-rank scaling)");
+
+    if let Err(e) = write_csv("scale_compare", &opts.outdir, &points) {
+        eprintln!("WARN: could not write scale_compare.csv: {e}");
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AppKind;
+
+    fn quick_base() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.app = AppKind::Hpccg;
+        c.trials = 2;
+        c.iters = 4;
+        c.fidelity = Fidelity::Modeled;
+        c.hpccg_nx = 4;
+        c
+    }
+
+    #[test]
+    fn grid_shape_and_ulfm_cap() {
+        let opts = SweepOpts {
+            max_ranks: 16384,
+            outdir: "/tmp/reinitpp-test-results".into(),
+            jobs: 1,
+        };
+        let cfgs = build_grid(&quick_base(), &opts).unwrap();
+        // 4 rank counts x 3 methods + 2 rank counts x {CR, Reinit}
+        assert_eq!(cfgs.len(), 4 * 3 + 2 * 2);
+        assert!(cfgs.iter().all(|c| c.failure == FailureKind::Process));
+        assert!(
+            !cfgs
+                .iter()
+                .any(|c| c.recovery == RecoveryKind::Ulfm
+                    && c.ranks > presets::SCALE_ULFM_MAX_RANKS),
+            "ULFM must be capped at {}",
+            presets::SCALE_ULFM_MAX_RANKS
+        );
+        assert!(cfgs.iter().any(|c| c.ranks == 16384));
+    }
+
+    #[test]
+    fn non_modeled_fidelity_is_rejected() {
+        let mut base = quick_base();
+        base.fidelity = Fidelity::Auto;
+        let opts = SweepOpts::default();
+        let err = build_grid(&base, &opts).unwrap_err();
+        assert!(err.contains("modeled"), "{err}");
+    }
+
+    #[test]
+    fn scale_sweep_runs_and_is_jobs_deterministic() {
+        // The smallest rung of the sweep, serial vs 2 workers: identical
+        // Points (and therefore identical scale_compare.csv bytes — the
+        // same writer the figures use).
+        let base = quick_base();
+        let mk = |jobs, outdir: &str| SweepOpts {
+            max_ranks: 512,
+            outdir: outdir.into(),
+            jobs,
+        };
+        let serial =
+            scale_sweep(&base, &mk(1, "/tmp/reinitpp-test-results/scale-j1")).unwrap();
+        let par = scale_sweep(&base, &mk(2, "/tmp/reinitpp-test-results/scale-j2")).unwrap();
+        assert_eq!(serial.len(), 3, "512 ranks x 3 recovery methods");
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.cfg.recovery, b.cfg.recovery);
+            assert_eq!(a.total, b.total);
+            assert_eq!(a.recovery, b.recovery);
+            assert_eq!(a.app, b.app);
+        }
+        let j1 = std::fs::read("/tmp/reinitpp-test-results/scale-j1/scale_compare.csv")
+            .unwrap();
+        let j2 = std::fs::read("/tmp/reinitpp-test-results/scale-j2/scale_compare.csv")
+            .unwrap();
+        assert!(!j1.is_empty());
+        assert_eq!(j1, j2, "scale CSV bytes must not depend on worker count");
+        // paper shape at the 512-rank rung: CR much slower than Reinit++
+        let rec = |rk: RecoveryKind| {
+            serial
+                .iter()
+                .find(|p| p.cfg.recovery == rk)
+                .unwrap()
+                .recovery
+                .mean
+        };
+        assert!(rec(RecoveryKind::Cr) > 2.0 * rec(RecoveryKind::Reinit));
+    }
+}

@@ -13,7 +13,11 @@
 //! Allocation discipline: tree hops decode child partials straight off the
 //! wire bytes and encode outgoing partials through the per-comm scratch
 //! buffer (`Comm::f32_payload`) — one copy into the `Rc` payload the fabric
-//! needs anyway, no per-hop `Vec<f32>`/`Vec<u8>` churn.
+//! needs anyway, no per-hop `Vec<f32>`/`Vec<u8>` churn. `allreduce`
+//! accumulates into the per-comm reusable accumulator (`Comm::coll_acc`)
+//! and only the broadcast root encodes a payload, so the steady-state cost
+//! per rank is the result `Vec` plus one `Rc` payload
+//! (`rust/tests/alloc_pin.rs` pins allocations/message at 256 ranks).
 
 use std::rc::Rc;
 
@@ -77,20 +81,25 @@ impl Comm {
         op: ReduceOp,
     ) -> Result<Vec<f32>, MpiError> {
         let tag = self.next_coll_tag();
-        self.reduce_tagged(root, data, op, tag).await
+        let mut acc = data.to_vec();
+        self.reduce_into(root, &mut acc, op, tag).await?;
+        Ok(acc)
     }
 
-    async fn reduce_tagged(
+    /// The reduction protocol over a caller-owned accumulator (pre-filled
+    /// with this rank's contribution). Keeping the buffer external lets
+    /// `allreduce` reuse one accumulator per communicator instead of
+    /// allocating a `Vec` per call.
+    async fn reduce_into(
         &self,
         root: Rank,
-        data: &[f32],
+        acc: &mut [f32],
         op: ReduceOp,
         tag: u64,
-    ) -> Result<Vec<f32>, MpiError> {
+    ) -> Result<(), MpiError> {
         let size = self.size;
-        let mut acc: Vec<f32> = data.to_vec();
         if size <= 1 {
-            return Ok(acc);
+            return Ok(());
         }
         let vr = (self.rank + size - root) % size;
         let unvr = |v: u32| (v + root) % size;
@@ -112,22 +121,35 @@ impl Comm {
                 }
             } else {
                 let parent = unvr(vr & !mask);
-                let payload = self.f32_payload(&acc);
+                let payload = self.f32_payload(acc);
                 self.send_payload(parent, tag, payload);
                 break;
             }
             mask <<= 1;
         }
-        Ok(acc)
+        Ok(())
     }
 
     /// Allreduce: reduce to rank `0` then broadcast. Deterministic combine
-    /// order (see module docs).
+    /// order (see module docs). Steady-state allocations per call and rank:
+    /// the result `Vec` plus at most one `Rc` payload — the accumulator is
+    /// the per-comm scratch, and only the root encodes a broadcast payload
+    /// (everyone else receives theirs).
     pub async fn allreduce(&self, data: &[f32], op: ReduceOp) -> Result<Vec<f32>, MpiError> {
         let rtag = self.next_coll_tag();
         let btag = self.next_coll_tag();
-        let partial = self.reduce_tagged(0, data, op, rtag).await?;
-        let payload = self.f32_payload(&partial);
+        let mut acc = self.coll_acc.take();
+        acc.clear();
+        acc.extend_from_slice(data);
+        let reduced = self.reduce_into(0, &mut acc, op, rtag).await;
+        let payload = match &reduced {
+            // Only the broadcast root's payload carries data; other ranks'
+            // input to `bcast_tagged` is overwritten by what they receive.
+            Ok(()) if self.rank == 0 => self.f32_payload(&acc),
+            _ => self.empty_payload(),
+        };
+        self.coll_acc.replace(acc); // return the scratch before awaiting again
+        reduced?;
         let out = self.bcast_tagged(0, payload, btag).await?;
         Ok(bytes_to_f32s(&out))
     }

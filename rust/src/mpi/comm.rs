@@ -1,8 +1,16 @@
 //! Per-rank communicator handle: point-to-point with (src, tag) matching and
 //! ULFM-style failure surfacing.
+//!
+//! Matching hot path: a freshly arrived message is compared directly
+//! against the posted (src, tag) before it ever touches the out-of-order
+//! buffer, so the steady state (receiver already waiting) costs one
+//! compare — no queue traffic at all. Genuinely out-of-order messages land
+//! in `MatchBuf`, a (src, tag)-bucketed store with recycled bucket
+//! storage, so matching is O(distinct keys present) instead of O(queued
+//! messages) and steady-state churn through it allocates nothing.
 
 use std::cell::{Cell, RefCell};
-use std::collections::{HashSet, VecDeque};
+use std::collections::VecDeque;
 use std::rc::Rc;
 
 use super::{tags, FtMode, MpiError, MpiJob, Msg, Payload, Rank};
@@ -15,6 +23,82 @@ pub enum RecvSrc {
     From(Rank),
 }
 
+/// One (src, tag) bucket of out-of-order messages, in arrival order.
+struct Bucket {
+    src: Rank,
+    tag: u64,
+    q: VecDeque<(u64, Msg)>,
+}
+
+/// Out-of-order receive buffer with (src, tag)-bucket indexing and a
+/// global arrival sequence, so `RecvSrc::Any` pops in exact arrival order
+/// (FIFO per (src, tag) *and* across sources — the MPI matching rule).
+/// Emptied buckets return their storage to a free pool; steady state
+/// allocates nothing.
+#[derive(Default)]
+struct MatchBuf {
+    buckets: Vec<Bucket>,
+    pool: Vec<VecDeque<(u64, Msg)>>,
+    next_seq: u64,
+    len: usize,
+}
+
+impl MatchBuf {
+    fn push(&mut self, m: Msg) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.len += 1;
+        let (src, tag) = (m.src, m.tag);
+        if let Some(b) = self
+            .buckets
+            .iter_mut()
+            .find(|b| b.src == src && b.tag == tag)
+        {
+            b.q.push_back((seq, m));
+            return;
+        }
+        let mut q = self.pool.pop().unwrap_or_default();
+        q.push_back((seq, m));
+        self.buckets.push(Bucket { src, tag, q });
+    }
+
+    /// Pop the earliest-arrived message matching `(src, tag)`, if any.
+    fn take(&mut self, src: RecvSrc, tag: u64) -> Option<Msg> {
+        if self.len == 0 {
+            return None; // the common fast path
+        }
+        let idx = match src {
+            RecvSrc::From(r) => self
+                .buckets
+                .iter()
+                .position(|b| b.src == r && b.tag == tag)?,
+            RecvSrc::Any => {
+                // Earliest arrival across every source with this tag.
+                let mut best: Option<(usize, u64)> = None;
+                for (i, b) in self.buckets.iter().enumerate() {
+                    if b.tag != tag {
+                        continue;
+                    }
+                    let seq = b.q.front().expect("buckets are never empty").0;
+                    if best.is_none_or(|(_, s)| seq < s) {
+                        best = Some((i, seq));
+                    }
+                }
+                best?.0
+            }
+        };
+        let (_seq, m) = self.buckets[idx].q.pop_front().expect("non-empty bucket");
+        self.len -= 1;
+        if self.buckets[idx].q.is_empty() {
+            // Bucket order is irrelevant (selection is by key / arrival
+            // seq), so swap_remove + recycle the queue's storage.
+            let b = self.buckets.swap_remove(idx);
+            self.pool.push(b.q);
+        }
+        Some(m)
+    }
+}
+
 /// A rank's handle on the world communicator (one generation).
 pub struct Comm {
     pub(crate) job: MpiJob,
@@ -23,8 +107,10 @@ pub struct Comm {
     pub node: u32,
     generation: u64,
     rx: Receiver<Msg>,
-    unmatched: RefCell<VecDeque<Msg>>,
-    known_failed: RefCell<HashSet<Rank>>,
+    unmatched: RefCell<MatchBuf>,
+    /// Sorted; failures are few, so a dense `Vec` beats hashing on the
+    /// per-receive `check_failures` path.
+    known_failed: RefCell<Vec<Rank>>,
     revoked: Cell<bool>,
     op_seq: Cell<u64>,
     /// Reusable f32-serialization buffer for the collective tree
@@ -32,6 +118,11 @@ pub struct Comm {
     /// once into the shared payload, instead of allocating a fresh
     /// `Vec<f32>` + `Vec<u8>` per hop.
     coll_scratch: RefCell<Vec<u8>>,
+    /// Reusable reduce/allreduce accumulator (see `collectives.rs`).
+    pub(crate) coll_acc: RefCell<Vec<f32>>,
+    /// Shared empty payload: control floods and non-root bcast entry pass
+    /// this by `Rc` clone instead of allocating an empty buffer each time.
+    empty: Payload,
 }
 
 impl Comm {
@@ -48,11 +139,13 @@ impl Comm {
             node,
             generation,
             rx,
-            unmatched: RefCell::new(VecDeque::new()),
-            known_failed: RefCell::new(HashSet::new()),
+            unmatched: RefCell::new(MatchBuf::default()),
+            known_failed: RefCell::new(Vec::new()),
             revoked: Cell::new(false),
             op_seq: Cell::new(0),
             coll_scratch: RefCell::new(Vec::new()),
+            coll_acc: RefCell::new(Vec::new()),
+            empty: Rc::from(&[][..]),
         }
         .finish_init()
     }
@@ -68,9 +161,7 @@ impl Comm {
 
     /// Ranks this communicator knows to have failed (ULFM notification).
     pub fn known_failed(&self) -> Vec<Rank> {
-        let mut v: Vec<Rank> = self.known_failed.borrow().iter().copied().collect();
-        v.sort_unstable();
-        v
+        self.known_failed.borrow().clone() // kept sorted on insert
     }
 
     pub fn is_revoked(&self) -> bool {
@@ -106,11 +197,16 @@ impl Comm {
     /// Serialize f32s into a shared payload through the per-comm scratch
     /// buffer: one copy into the `Rc` allocation the fabric needs anyway,
     /// no intermediate `Vec` growth in the steady state.
-    pub(crate) fn f32_payload(&self, xs: &[f32]) -> Payload {
+    pub fn f32_payload(&self, xs: &[f32]) -> Payload {
         let mut scratch = self.coll_scratch.borrow_mut();
         scratch.clear();
         scratch.extend(xs.iter().flat_map(|x| x.to_le_bytes()));
         Payload::from(&scratch[..])
+    }
+
+    /// The shared zero-length payload (`Rc` clone, no allocation).
+    pub(crate) fn empty_payload(&self) -> Payload {
+        Rc::clone(&self.empty)
     }
 
     /// Zero-copy send of an already-shared payload: collective fan-out
@@ -129,16 +225,17 @@ impl Comm {
             .send_from(self.node, MpiJob::key(self.generation, to), msg, bytes);
     }
 
+    #[inline]
+    fn matches(m: &Msg, src: RecvSrc, tag: u64) -> bool {
+        m.tag == tag
+            && match src {
+                RecvSrc::Any => true,
+                RecvSrc::From(r) => m.src == r,
+            }
+    }
+
     fn take_unmatched(&self, src: RecvSrc, tag: u64) -> Option<Msg> {
-        let mut q = self.unmatched.borrow_mut();
-        let pos = q.iter().position(|m| {
-            m.tag == tag
-                && match src {
-                    RecvSrc::Any => true,
-                    RecvSrc::From(r) => m.src == r,
-                }
-        })?;
-        q.remove(pos)
+        self.unmatched.borrow_mut().take(src, tag)
     }
 
     fn handle_ctrl(&self, msg: &Msg) -> bool {
@@ -150,7 +247,10 @@ impl Comm {
                     msg.data[2],
                     msg.data[3],
                 ]);
-                self.known_failed.borrow_mut().insert(r);
+                let mut failed = self.known_failed.borrow_mut();
+                if let Err(pos) = failed.binary_search(&r) {
+                    failed.insert(pos, r); // kept sorted, deduped
+                }
                 true
             }
             tags::CTRL_REVOKE => {
@@ -175,13 +275,10 @@ impl Comm {
             return Ok(());
         }
         match involves {
-            None => {
-                let r = *failed.iter().min().unwrap();
-                Err(MpiError::ProcFailed { rank: r })
-            }
+            None => Err(MpiError::ProcFailed { rank: failed[0] }),
             Some(peers) => {
                 for p in peers {
-                    if failed.contains(p) {
+                    if failed.binary_search(p).is_ok() {
                         return Err(MpiError::ProcFailed { rank: *p });
                     }
                 }
@@ -218,10 +315,17 @@ impl Comm {
             // Block for the next message (control messages wake us too).
             match self.rx.recv().await {
                 Ok(m) => {
-                    if !self.handle_ctrl(&m) {
-                        self.unmatched.borrow_mut().push_back(m);
+                    if self.handle_ctrl(&m) {
+                        continue; // loop: re-check failures
                     }
-                    // loop: re-check failures + matching
+                    // Fast path: nothing queued matched (checked above) and
+                    // control state is unchanged since, so a matching
+                    // arrival is returned directly — the buffer is only for
+                    // genuinely out-of-order traffic.
+                    if Self::matches(&m, src, tag) {
+                        return Ok(m);
+                    }
+                    self.unmatched.borrow_mut().push(m);
                 }
                 Err(_) => {
                     // Mailbox closed: treat as revocation (job shutting down)
@@ -259,19 +363,30 @@ impl Comm {
             }
             match self.rx.recv().await {
                 Ok(m) => {
-                    if !self.handle_ctrl(&m) {
-                        self.unmatched.borrow_mut().push_back(m);
+                    if self.handle_ctrl(&m) {
+                        continue;
                     }
+                    if Self::matches(&m, src, tag) {
+                        return Some(m);
+                    }
+                    self.unmatched.borrow_mut().push(m);
                 }
                 Err(_) => return None,
             }
         }
     }
 
-    /// `recv_unchecked` with a relative timeout (shrink/agree liveness: a
-    /// survivor blocked on a peer that moved to different failure knowledge
-    /// must be able to back off and retry).
-    pub(crate) async fn recv_unchecked_timeout(
+    /// `recv_unchecked` with a relative timeout. UNCHECKED like its
+    /// namesake: ignores revocation and failure knowledge, and returns
+    /// `None` on timeout OR closed mailbox — so `None` means "no message",
+    /// never "peer failed". This is deliberate: the callers are liveness
+    /// probes — shrink/agree retries (a survivor blocked on a peer with
+    /// different failure knowledge must back off) and heartbeat traffic
+    /// (the scale bench) — which must make progress on broken
+    /// communicators. Use `recv()` for failure-surfacing receives. The
+    /// deadline timer is cancel-aware, so the common early-completion case
+    /// leaves no live timer behind.
+    pub async fn recv_unchecked_timeout(
         &self,
         src: RecvSrc,
         tag: u64,
@@ -284,9 +399,13 @@ impl Comm {
             }
             match self.rx.recv_deadline(deadline).await {
                 Ok(m) => {
-                    if !self.handle_ctrl(&m) {
-                        self.unmatched.borrow_mut().push_back(m);
+                    if self.handle_ctrl(&m) {
+                        continue;
                     }
+                    if Self::matches(&m, src, tag) {
+                        return Some(m);
+                    }
+                    self.unmatched.borrow_mut().push(m);
                 }
                 Err(_) => return None, // closed or timed out
             }
@@ -315,7 +434,6 @@ impl Comm {
     /// `Revoked` everywhere.
     pub fn revoke(&self) {
         self.revoked.set(true);
-        let empty: Payload = Rc::from(Vec::new());
         for r in 0..self.size {
             if r == self.rank {
                 continue;
@@ -323,7 +441,7 @@ impl Comm {
             let msg = Msg {
                 src: self.rank,
                 tag: tags::CTRL_REVOKE,
-                data: Rc::clone(&empty),
+                data: self.empty_payload(),
             };
             self.job
                 .inner
@@ -337,7 +455,7 @@ impl Comm {
     pub fn poll_ctrl(&self) {
         while let Some(m) = self.rx.try_recv() {
             if !self.handle_ctrl(&m) {
-                self.unmatched.borrow_mut().push_back(m);
+                self.unmatched.borrow_mut().push(m);
             }
         }
     }
@@ -451,6 +569,57 @@ mod tests {
         });
         sim.run();
         assert_eq!(total.get(), 3);
+    }
+
+    #[test]
+    fn indexed_matching_preserves_arrival_order_under_any() {
+        // Satellite regression for the (src, tag)-indexed buffer: with
+        // messages from two sources interleaved in arrival order
+        // a0 b0 a1 b1 a2 b2 (same tag), `RecvSrc::Any` must pop in exact
+        // global arrival order, and a `From` receive must preserve
+        // per-source FIFO while skipping the other source.
+        let sim = Sim::new();
+        let j = job(&sim, 3, FtMode::Reinit);
+        for (src, base_delay_us) in [(0u32, 0u64), (2, 5)] {
+            let p = sim.spawn_process(format!("r{src}"));
+            let jj = j.clone();
+            let s2 = sim.clone();
+            sim.spawn(p, async move {
+                let c = jj.attach(src, 0);
+                for i in 0..3u64 {
+                    s2.sleep(SimDuration::from_micros(base_delay_us + 10 * i))
+                        .await;
+                    c.send(1, 9, &[src as u8 * 10 + i as u8]);
+                }
+                // stragglers on another tag force the Any receives below
+                // through the out-of-order buffer, not the direct path
+                c.send(1, 7, &[99]);
+            });
+        }
+        let p1 = sim.spawn_process("r1");
+        let j1 = j.clone();
+        let s1 = sim.clone();
+        let got = Rc::new(RefCell::new(Vec::new()));
+        let g2 = Rc::clone(&got);
+        sim.spawn(p1, async move {
+            let c = j1.attach(1, 0);
+            // let every tag-9 message arrive and buffer first
+            let _ = c.recv(RecvSrc::From(0), 7).await.unwrap();
+            let _ = c.recv(RecvSrc::From(2), 7).await.unwrap();
+            s1.sleep(SimDuration::from_millis(1)).await;
+            c.poll_ctrl();
+            let mut order = Vec::new();
+            order.push(c.recv(RecvSrc::Any, 9).await.unwrap().data[0]); // a0
+            order.push(c.recv(RecvSrc::Any, 9).await.unwrap().data[0]); // b0
+            order.push(c.recv(RecvSrc::From(0), 9).await.unwrap().data[0]); // a1
+            order.push(c.recv(RecvSrc::Any, 9).await.unwrap().data[0]); // b1
+            order.push(c.recv(RecvSrc::Any, 9).await.unwrap().data[0]); // a2
+            order.push(c.recv(RecvSrc::From(2), 9).await.unwrap().data[0]); // b2
+            *g2.borrow_mut() = order;
+        });
+        let s = sim.run();
+        assert_eq!(s.tasks_pending, 0);
+        assert_eq!(*got.borrow(), vec![0, 20, 1, 21, 2, 22]);
     }
 
     #[test]

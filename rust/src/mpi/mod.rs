@@ -19,7 +19,10 @@
 //!
 //! Endpoint keys on the fabric are `(generation << 32) | rank`, so stale
 //! traffic from before a roll-back can never be matched by the repaired
-//! world communicator.
+//! world communicator. The fabric exploits exactly this composition: its
+//! routing table is a flat `Vec` indexed by the low (rank) half with a
+//! generation tag per slot, so a send is an indexed load + compare — no
+//! hashing on the per-message path (see `transport::fabric`).
 
 mod collectives;
 mod comm;
@@ -152,6 +155,12 @@ impl MpiJob {
 
     pub(crate) fn key(generation: u64, rank: Rank) -> u64 {
         (generation << 32) | rank as u64
+    }
+
+    /// Data-plane traffic counters `(messages, bytes)` — perf harnesses
+    /// report allocations and host time per delivered message.
+    pub fn fabric_stats(&self) -> (u64, u64) {
+        self.inner.fabric.stats()
     }
 
     /// Attach `rank` (currently placed on `node`) to the *current*

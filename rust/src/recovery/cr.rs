@@ -58,7 +58,7 @@ pub async fn cr_trial_driver(w: Rc<TrialWorld>) {
 
         // Wait for completion or abort.
         let mut aborted = false;
-        while (w.completed.borrow().len() as u32) < w.cfg.ranks {
+        while w.completed.count() < w.cfg.ranks {
             match done_rx.recv().await {
                 Ok(ABORT) => {
                     aborted = true;

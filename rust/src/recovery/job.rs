@@ -1,8 +1,8 @@
 //! Job runner: deployment, the per-rank driver loop, detection wiring and
 //! trial orchestration shared by all three recovery approaches.
 
-use std::cell::RefCell;
-use std::collections::{HashMap, HashSet};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::apps::{make_app, App, ComputeBackend, CostTracker, StepCtx};
@@ -121,6 +121,38 @@ impl Backends {
     }
 }
 
+/// Rank-completion tracker: dense bitmap + running count. A 16k-rank trial
+/// marks completion once per rank and polls the count on every done
+/// message, so both operations are O(1) with no hashing (the seed kept a
+/// `HashSet<u32>` here).
+pub struct Completed {
+    done: RefCell<Vec<bool>>,
+    count: Cell<u32>,
+}
+
+impl Completed {
+    pub fn new(ranks: u32) -> Completed {
+        Completed {
+            done: RefCell::new(vec![false; ranks as usize]),
+            count: Cell::new(0),
+        }
+    }
+
+    /// Mark `rank` complete (idempotent).
+    pub fn mark(&self, rank: u32) {
+        let mut done = self.done.borrow_mut();
+        if !done[rank as usize] {
+            done[rank as usize] = true;
+            self.count.set(self.count.get() + 1);
+        }
+    }
+
+    /// Number of distinct ranks that completed.
+    pub fn count(&self) -> u32 {
+        self.count.get()
+    }
+}
+
 /// Everything shared across (re-)deployments of one trial.
 pub struct TrialWorld {
     pub sim: Sim,
@@ -132,7 +164,7 @@ pub struct TrialWorld {
     pub fault: FaultTrigger,
     pub deploy: DeployCost,
     pub digests: Rc<RefCell<Vec<Option<u64>>>>,
-    pub completed: Rc<RefCell<HashSet<u32>>>,
+    pub completed: Rc<Completed>,
     /// Rank 0's per-iteration diagnostic (virtual time s, iter, value) —
     /// the e2e examples' convergence trace across the failure.
     pub diag_trace: Rc<RefCell<Vec<(f64, u32, f64)>>>,
@@ -160,7 +192,7 @@ impl TrialWorld {
             }),
             deploy: DeployCost::from_calib(&cfg.calib),
             digests: Rc::new(RefCell::new(vec![None; cfg.ranks as usize])),
-            completed: Rc::new(RefCell::new(HashSet::new())),
+            completed: Rc::new(Completed::new(cfg.ranks)),
             diag_trace: Rc::new(RefCell::new(Vec::new())),
         })
     }
@@ -183,7 +215,9 @@ pub struct JobCtx {
     pub world: Rc<TrialWorld>,
     pub cluster: Cluster,
     pub mpi: MpiJob,
-    pub rank_tasks: Rc<RefCell<HashMap<u32, TaskId>>>,
+    /// Current driver task per rank, indexed by rank (no hashing: the
+    /// reinit root reads/writes one slot per survivor per recovery).
+    pub rank_tasks: Rc<RefCell<Vec<Option<TaskId>>>>,
     pub done_tx: Sender<u32>,
     pub detect_tx: Sender<DetectEvent>,
 }
@@ -218,7 +252,7 @@ pub fn launch_job(
         world: Rc::clone(world),
         cluster,
         mpi,
-        rank_tasks: Rc::new(RefCell::new(HashMap::new())),
+        rank_tasks: Rc::new(RefCell::new(vec![None; topo.ranks as usize])),
         done_tx,
         detect_tx,
     };
@@ -362,7 +396,7 @@ pub async fn rank_user_main(
     }
 
     w.digests.borrow_mut()[rank as usize] = Some(app_state.digest());
-    w.completed.borrow_mut().insert(rank);
+    w.completed.mark(rank);
     ctx.done_tx.send(rank, SimDuration::ZERO);
     let _ = state; // informational (apps are state-agnostic; see paper Fig. 2)
     Ok(())
@@ -370,7 +404,7 @@ pub async fn rank_user_main(
 
 /// Await until all ranks reported completion.
 pub async fn wait_all_done(world: &Rc<TrialWorld>, done_rx: &Receiver<u32>) {
-    while (world.completed.borrow().len() as u32) < world.cfg.ranks {
+    while world.completed.count() < world.cfg.ranks {
         let _ = done_rx.recv().await;
     }
 }
@@ -407,7 +441,7 @@ pub fn run_trial(
         }
     }
     let summary = sim.run();
-    let completed = world.completed.borrow().len() as u32 == cfg.ranks;
+    let completed = world.completed.count() == cfg.ranks;
     let breakdown = world.metrics.breakdown();
     let digests: Vec<u64> = world
         .digests

@@ -40,7 +40,7 @@ pub fn spawn_rank(ctx: &JobCtx, rank: u32, state: ReinitState, startup: SimDurat
             crate::sim::Sim::halt_forever(&sim).await;
         }
     });
-    ctx.rank_tasks.borrow_mut().insert(rank, tid);
+    ctx.rank_tasks.borrow_mut()[rank as usize] = Some(tid);
 }
 
 /// The root's failure-handling loop (Algorithm 1 + orchestration of the
@@ -93,7 +93,7 @@ pub async fn reinit_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
             if !ctx.cluster.rank_is_alive(rank) {
                 continue;
             }
-            let old_task = ctx.rank_tasks.borrow().get(&rank).copied();
+            let old_task = ctx.rank_tasks.borrow()[rank as usize];
             let ctx2 = ctx.clone();
             w.sim.schedule(signal, move || {
                 if let Some(t) = old_task {

@@ -53,7 +53,7 @@ pub fn spawn_ulfm_rank(
             }
         }
     });
-    ctx.rank_tasks.borrow_mut().insert(rank, tid);
+    ctx.rank_tasks.borrow_mut()[rank as usize] = Some(tid);
 }
 
 /// The survivor side of the global-restart recipe.

@@ -49,6 +49,12 @@ struct ChanInner<T> {
     /// carries only an `Rc` clone + the slot index — no boxed closure).
     inflight: Vec<Option<T>>,
     free: Vec<u32>,
+    /// Token of the currently armed deadline timer (cancel-awareness).
+    /// Arming a timed recv bumps it and records the new value; completing
+    /// or dropping that recv bumps it again, so an in-flight timer event
+    /// firing later sees a mismatch and does nothing — no spurious wake,
+    /// no boxed waker closure kept alive (the ULFM heartbeat hot path).
+    armed_timer: u64,
 }
 
 impl<T> ChanInner<T> {
@@ -85,6 +91,19 @@ impl<T: 'static> Deliverable for RefCell<ChanInner<T>> {
             w.wake();
         }
     }
+
+    /// A deadline timer fired. Stale tokens (the timed recv that armed this
+    /// timer already completed or was dropped) are ignored: the task is NOT
+    /// spuriously woken.
+    fn timer(&self, token: u64) {
+        let mut ch = self.borrow_mut();
+        if ch.armed_timer != token {
+            return; // cancelled: recv finished before its deadline
+        }
+        if let Some(w) = ch.waiter.take() {
+            w.wake(); // genuine timeout: the recv polls and reports Timeout
+        }
+    }
 }
 
 /// Sending half (cloneable).
@@ -116,6 +135,7 @@ pub fn channel<T: 'static>(sim: &Sim) -> (Sender<T>, Receiver<T>) {
         closed: false,
         inflight: Vec::new(),
         free: Vec::new(),
+        armed_timer: 0,
     }));
     (
         Sender {
@@ -161,7 +181,7 @@ impl<T> Receiver<T> {
         Recv {
             rx: self,
             deadline: None,
-            timer_set: false,
+            timer_token: None,
         }
     }
 
@@ -170,7 +190,7 @@ impl<T> Receiver<T> {
         Recv {
             rx: self,
             deadline: Some(deadline),
-            timer_set: false,
+            timer_token: None,
         }
     }
 
@@ -189,10 +209,17 @@ impl<T> Receiver<T> {
 }
 
 /// Future returned by `Receiver::recv*`.
+///
+/// Deadline timers are cancel-aware and allocation-free: arming schedules
+/// an executor `Timer` event (an `Rc` clone + token, no boxed closure) and
+/// records the token in the channel; completing or dropping the `Recv`
+/// invalidates the token, so a timer firing after an early completion is a
+/// silent no-op instead of a spurious task wake-up.
 pub struct Recv<'a, T> {
     rx: &'a Receiver<T>,
     deadline: Option<SimTime>,
-    timer_set: bool,
+    /// Token of the deadline timer this recv armed, if any.
+    timer_token: Option<u64>,
 }
 
 impl<'a, T: 'static> Future for Recv<'a, T> {
@@ -212,17 +239,33 @@ impl<'a, T: 'static> Future for Recv<'a, T> {
             }
         }
         ch.waiter = Some(cx.waker().clone());
-        drop(ch);
         if let Some(dl) = self.deadline {
-            if !self.timer_set {
-                self.timer_set = true;
-                // Wake ourselves at the deadline to deliver the timeout.
-                let waker = cx.waker().clone();
+            if self.timer_token.is_none() {
+                // Arm the cancel-aware deadline timer (see struct docs).
+                let token = ch.armed_timer.wrapping_add(1);
+                ch.armed_timer = token;
+                drop(ch);
+                self.timer_token = Some(token);
                 let delay = dl - self.rx.sim.now();
-                self.rx.sim.schedule(delay, move || waker.wake());
+                let target: Rc<dyn Deliverable> = Rc::clone(&self.rx.inner);
+                self.rx.sim.schedule_timer(delay, target, token);
             }
         }
         Poll::Pending
+    }
+}
+
+impl<T> Drop for Recv<'_, T> {
+    fn drop(&mut self) {
+        // Invalidate our deadline timer (if it is still the armed one):
+        // completion, cancellation, and task death all funnel through here,
+        // so the pending timer event fires stale and wakes nobody.
+        if let Some(token) = self.timer_token.take() {
+            let mut ch = self.rx.inner.borrow_mut();
+            if ch.armed_timer == token {
+                ch.armed_timer = ch.armed_timer.wrapping_add(1);
+            }
+        }
     }
 }
 
@@ -317,6 +360,59 @@ mod tests {
         });
         sim.run();
         assert_eq!(result.get(), Some(Ok(9)));
+    }
+
+    #[test]
+    fn early_completed_recv_timeout_leaves_no_live_timer() {
+        // Satellite regression (deadline-timer leak): a timed recv that
+        // completes early must leave only a *stale* timer behind — the
+        // event still pops at the deadline (virtual time is unchanged) but
+        // wakes nobody and polls nothing.
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let (tx, rx) = channel::<u32>(&sim);
+        tx.send(9, SimDuration::from_millis(1));
+        let s2 = sim.clone();
+        sim.spawn(p, async move {
+            let v = rx.recv_timeout(SimDuration::from_millis(50)).await;
+            assert_eq!(v, Ok(9), "message beats the deadline");
+            // park well past the stale deadline: a spurious wake would poll
+            s2.sleep(SimDuration::from_millis(100)).await;
+        });
+        let s = sim.run();
+        // events: deliver@1ms, stale timer@50ms, sleep wake@101ms
+        assert_eq!(s.events, 3);
+        // polls: initial (arms timer), after deliver, after the sleep —
+        // the stale timer contributes NO poll (pre-fix it woke the task).
+        assert_eq!(s.polls, 3, "stale deadline timer must not wake the task");
+        assert_eq!(s.end_time.nanos(), 101_000_000);
+        assert_eq!(s.tasks_completed, 1);
+    }
+
+    #[test]
+    fn stale_timer_does_not_disturb_a_later_timed_recv() {
+        // recv #1 completes early (its 50 ms timer goes stale); recv #2 on
+        // the same channel must still time out exactly on its own deadline.
+        let sim = Sim::new();
+        let p = sim.spawn_process("p");
+        let (tx, rx) = channel::<u32>(&sim);
+        tx.send(7, SimDuration::from_millis(1));
+        let results = Rc::new(RefCell::new(Vec::new()));
+        let r2 = Rc::clone(&results);
+        let s2 = sim.clone();
+        sim.spawn(p, async move {
+            let a = rx.recv_timeout(SimDuration::from_millis(50)).await;
+            let b = rx.recv_timeout(SimDuration::from_millis(10)).await;
+            r2.borrow_mut().push((a, b, s2.now().nanos()));
+        });
+        let s = sim.run();
+        assert_eq!(
+            *results.borrow(),
+            vec![(Ok(7), Err(RecvError::Timeout), 11_000_000)]
+        );
+        // deliver@1ms + genuine timer@11ms + stale timer@50ms
+        assert_eq!(s.events, 3);
+        assert_eq!(s.polls, 3, "one poll per event that matters");
     }
 
     #[test]

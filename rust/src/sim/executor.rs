@@ -42,7 +42,7 @@ use std::pin::Pin;
 use std::rc::Rc;
 use std::task::{Context, Poll, RawWaker, RawWakerVTable, Waker};
 
-use super::proc::{ProcEntry, ProcId, ProcStatus, NIL};
+use super::proc::{ProcEntry, ProcId, ProcName, ProcStatus, NIL};
 use super::time::{SimDuration, SimTime};
 
 /// Identifier of a spawned task: `(slot index << 32) | generation`.
@@ -82,6 +82,10 @@ pub struct SimSummary {
     /// Tasks still pending at exit (> 0 usually indicates a deadlock,
     /// unless tasks were deliberately left blocked, e.g. idle daemons).
     pub tasks_pending: u64,
+    /// High-water mark of simultaneously scheduled events (in-flight
+    /// messages + armed timers) — the scale benches report it as "peak
+    /// inflight".
+    pub peak_events_pending: u64,
     pub reason: ExitReason,
 }
 
@@ -91,12 +95,23 @@ pub struct SimSummary {
 /// per-message closure box on the send hot path.
 pub(crate) trait Deliverable {
     fn deliver(&self, slot: u32);
+
+    /// A cancellable deadline timer armed via `Sim::schedule_timer` fired.
+    /// The implementor compares `token` against its current armed token and
+    /// ignores stale fires (a recv that completed before its deadline).
+    /// Default no-op: only channels with timed receives implement it.
+    fn timer(&self, token: u64) {
+        let _ = token;
+    }
 }
 
 enum Event {
     Wake(Waker),
     Run(Box<dyn FnOnce()>),
     Deliver(Rc<dyn Deliverable>, u32),
+    /// Cancel-aware deadline timer: an `Rc` refcount bump plus a token —
+    /// no boxed waker closure per timed receive (the ULFM heartbeat path).
+    Timer(Rc<dyn Deliverable>, u64),
 }
 
 struct EventEntry {
@@ -157,6 +172,10 @@ impl TimerWheel {
 
     fn is_empty(&self) -> bool {
         self.in_wheel == 0 && self.overflow.is_empty()
+    }
+
+    fn len(&self) -> usize {
+        self.in_wheel + self.overflow.len()
     }
 
     fn push(&mut self, e: EventEntry) {
@@ -346,6 +365,7 @@ struct Inner {
     tasks_live: u64,
     procs: Vec<ProcEntry>,
     events_fired: u64,
+    events_peak: u64,
     polls: u64,
     tasks_completed: u64,
     event_limit: u64,
@@ -396,6 +416,10 @@ impl Inner {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.events.push(EventEntry { time, seq, event });
+        let pending = self.events.len() as u64;
+        if pending > self.events_peak {
+            self.events_peak = pending;
+        }
     }
 }
 
@@ -427,6 +451,7 @@ impl Sim {
                 tasks_live: 0,
                 procs: Vec::new(),
                 events_fired: 0,
+                events_peak: 0,
                 polls: 0,
                 tasks_completed: 0,
                 event_limit: u64::MAX,
@@ -444,8 +469,10 @@ impl Sim {
         self.inner.borrow().now
     }
 
-    /// Register a new simulated process.
-    pub fn spawn_process(&self, name: impl Into<String>) -> ProcId {
+    /// Register a new simulated process. Names are stored as lazy
+    /// `ProcName`s — pass `ProcName::Indexed` for bulk families (16k ranks)
+    /// so setup does not pay a `format!` per process.
+    pub fn spawn_process(&self, name: impl Into<ProcName>) -> ProcId {
         let mut inner = self.inner.borrow_mut();
         let id = ProcId(inner.procs.len() as u32);
         inner.procs.push(ProcEntry::new(name.into()));
@@ -457,7 +484,7 @@ impl Sim {
     }
 
     pub fn proc_name(&self, p: ProcId) -> String {
-        self.inner.borrow().procs[p.0 as usize].name.clone()
+        self.inner.borrow().procs[p.0 as usize].name.render()
     }
 
     pub fn is_alive(&self, p: ProcId) -> bool {
@@ -518,6 +545,21 @@ impl Sim {
         let mut inner = self.inner.borrow_mut();
         let time = inner.now + delay;
         inner.push_event(time, Event::Deliver(target, slot));
+    }
+
+    /// Arm a cancel-aware deadline timer: at `now + delay` the executor
+    /// calls `target.timer(token)`, which checks the token against the
+    /// implementor's current armed state and ignores stale fires.
+    /// Allocation-free, like `schedule_deliver` (no boxed waker closure).
+    pub(crate) fn schedule_timer(
+        &self,
+        delay: SimDuration,
+        target: Rc<dyn Deliverable>,
+        token: u64,
+    ) {
+        let mut inner = self.inner.borrow_mut();
+        let time = inner.now + delay;
+        inner.push_event(time, Event::Timer(target, token));
     }
 
     fn schedule_wake(&self, at: SimTime, w: Waker) {
@@ -714,6 +756,7 @@ impl Sim {
                 Step::Fire(Event::Wake(w)) => w.wake(),
                 Step::Fire(Event::Run(f)) => f(), // runs without the borrow held
                 Step::Fire(Event::Deliver(t, slot)) => t.deliver(slot),
+                Step::Fire(Event::Timer(t, token)) => t.timer(token),
             }
         }
     }
@@ -727,6 +770,7 @@ impl Sim {
             polls: inner.polls,
             tasks_completed: inner.tasks_completed,
             tasks_pending: inner.tasks_live,
+            peak_events_pending: inner.events_peak,
             reason,
         }
     }
@@ -1029,6 +1073,17 @@ mod tests {
         }
         sim.run();
         assert_eq!(*order.borrow(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn peak_pending_events_tracks_high_water() {
+        let sim = Sim::new();
+        for ms in [10u64, 20, 30] {
+            sim.schedule(SimDuration::from_millis(ms), || {});
+        }
+        let s = sim.run();
+        assert_eq!(s.peak_events_pending, 3, "all three pending at once");
+        assert_eq!(s.events, 3);
     }
 
     #[test]

@@ -25,5 +25,5 @@ mod time;
 
 pub use channel::{channel, RecvError, Receiver, Sender};
 pub use executor::{ExitReason, Sim, SimSummary, TaskId};
-pub use proc::{ProcId, ProcStatus};
+pub use proc::{ProcId, ProcName, ProcStatus};
 pub use time::{SimDuration, SimTime};

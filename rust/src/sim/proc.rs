@@ -1,5 +1,6 @@
 //! Simulated processes: kill-able groups of tasks with death notification.
 
+use std::rc::Rc;
 use std::task::Waker;
 
 use super::time::SimTime;
@@ -25,8 +26,60 @@ pub enum ProcStatus {
     Dead { at: SimTime },
 }
 
+/// A process name, rendered lazily.
+///
+/// Trial setup at 16k ranks spawns tens of thousands of processes whose
+/// names are only ever read on debug/panic paths; paying a `format!` +
+/// heap `String` per process per trial made setup scale with rank count.
+/// `Indexed` shares one `Rc<str>` prefix across a whole family of
+/// processes (ranks, daemons) and renders `{prefix}{index}[.{sub}]` on
+/// demand.
+#[derive(Clone)]
+pub enum ProcName {
+    Static(&'static str),
+    Owned(String),
+    Indexed {
+        prefix: Rc<str>,
+        index: u32,
+        /// Optional sub-index (a rank's incarnation number).
+        sub: Option<u32>,
+    },
+}
+
+impl ProcName {
+    /// Render to an owned `String` (debug paths only).
+    pub fn render(&self) -> String {
+        self.to_string()
+    }
+}
+
+impl std::fmt::Display for ProcName {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProcName::Static(s) => f.write_str(s),
+            ProcName::Owned(s) => f.write_str(s),
+            ProcName::Indexed { prefix, index, sub } => match sub {
+                Some(sub) => write!(f, "{prefix}{index}.{sub}"),
+                None => write!(f, "{prefix}{index}"),
+            },
+        }
+    }
+}
+
+impl From<&'static str> for ProcName {
+    fn from(s: &'static str) -> Self {
+        ProcName::Static(s)
+    }
+}
+
+impl From<String> for ProcName {
+    fn from(s: String) -> Self {
+        ProcName::Owned(s)
+    }
+}
+
 pub(crate) struct ProcEntry {
-    pub name: String,
+    pub name: ProcName,
     pub status: ProcStatus,
     /// Wakers of `watch()` futures to notify on death.
     pub watchers: Vec<Waker>,
@@ -37,12 +90,42 @@ pub(crate) struct ProcEntry {
 }
 
 impl ProcEntry {
-    pub fn new(name: String) -> Self {
+    pub fn new(name: ProcName) -> Self {
         ProcEntry {
             name,
             status: ProcStatus::Alive,
             watchers: Vec::new(),
             task_head: NIL,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proc_name_renders_all_forms() {
+        assert_eq!(ProcName::Static("root").render(), "root");
+        assert_eq!(ProcName::Owned("r7".into()).render(), "r7");
+        let prefix: Rc<str> = Rc::from("job0/rank");
+        assert_eq!(
+            ProcName::Indexed {
+                prefix: Rc::clone(&prefix),
+                index: 12,
+                sub: Some(3)
+            }
+            .render(),
+            "job0/rank12.3"
+        );
+        assert_eq!(
+            ProcName::Indexed {
+                prefix,
+                index: 5,
+                sub: None
+            }
+            .render(),
+            "job0/rank5"
+        );
     }
 }

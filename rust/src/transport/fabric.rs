@@ -1,11 +1,19 @@
 //! Addressed message fabric: per-endpoint mailboxes with cost-model delays.
 //!
-//! Endpoints are keyed by `u64`; the MPI layer composes keys from
-//! `(job incarnation, rank)` so that a CR re-deploy gets a pristine fabric
+//! Endpoints are keyed by `u64`; the MPI layer composes keys as
+//! `(generation << 32) | rank` so that a CR re-deploy gets a pristine fabric
 //! address space and a re-spawned rank re-binds its own key.
+//!
+//! Routing is a **generation-tagged flat table indexed by rank** — the
+//! large-rank fast path. The seed design kept a `HashMap<u64, Endpoint>`
+//! plus a `HashSet<u64>` of retired keys, so every send paid a SipHash
+//! lookup and long failure-injection sweeps grew the retired set by one
+//! entry per dead incarnation. Here a send is one bounds check + one
+//! generation compare on a `Vec` slot, and retirement is a per-rank
+//! watermark (`retired_below`): dead generations cost nothing to remember,
+//! so memory stays bounded across any number of kill/re-bind cycles.
 
 use std::cell::RefCell;
-use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 
 use super::cost::NetCost;
@@ -18,21 +26,53 @@ pub struct Endpoint<M> {
     node: u32,
 }
 
+/// Routing state of one rank slot. At most one generation of a rank is
+/// bound at a time (every recovery path drops the old incarnation's
+/// binding — `Comm::drop` — before a newer generation attaches), so the
+/// slot holds a single endpoint tagged with its generation.
+struct RankRoute<M> {
+    /// Generation of the live binding; meaningful only while `ep` is Some.
+    bound_gen: u64,
+    ep: Option<Endpoint<M>>,
+    /// Retirement watermark: a send to generation `g < retired_below` with
+    /// no live binding is a crashed incarnation's traffic and is dropped
+    /// (not buffered). Subsumes the seed's unbounded `retired: HashSet`.
+    retired_below: u64,
+    /// Eager sends racing MPI_Init wireup, tagged with their target
+    /// generation; the matching `bind` drains them in arrival order.
+    pending: Vec<(u64, u32, M, usize)>,
+}
+
+impl<M> RankRoute<M> {
+    fn vacant() -> Self {
+        RankRoute {
+            bound_gen: 0,
+            ep: None,
+            retired_below: 0,
+            pending: Vec::new(),
+        }
+    }
+}
+
 struct Inner<M> {
-    endpoints: HashMap<u64, Endpoint<M>>,
-    /// Messages sent to a not-yet-bound key (eager sends racing MPI_Init
-    /// wireup). Flushed on `bind`. Only keys that were never bound buffer
-    /// here: a key that was bound and then unbound is a crashed
-    /// incarnation, and its traffic is dropped (see `retired`).
-    pending: HashMap<u64, Vec<(u32, M, usize)>>,
-    /// Keys that were bound once and then unbound (dead incarnations).
-    /// Sends to them are dropped instead of buffered — eager traffic to a
-    /// crashed process must not accumulate waiting for a bind that never
-    /// comes (endpoint keys are generation-tagged, so dead keys are never
-    /// reused by recovered worlds).
-    retired: HashSet<u64>,
+    routes: Vec<RankRoute<M>>,
     messages_sent: u64,
     bytes_sent: u64,
+}
+
+impl<M> Inner<M> {
+    fn ensure(&mut self, rank: usize) {
+        if rank >= self.routes.len() {
+            self.routes.resize_with(rank + 1, RankRoute::vacant);
+        }
+    }
+}
+
+/// Split a fabric key into `(generation, rank)` — the composition
+/// `MpiJob::key` uses.
+#[inline]
+fn split(key: u64) -> (u64, usize) {
+    (key >> 32, (key as u32) as usize)
 }
 
 /// The data-plane fabric shared by all ranks of a job.
@@ -58,9 +98,7 @@ impl<M: 'static> Fabric<M> {
             sim: sim.clone(),
             cost,
             inner: Rc::new(RefCell::new(Inner {
-                endpoints: HashMap::new(),
-                pending: HashMap::new(),
-                retired: HashSet::new(),
+                routes: Vec::new(),
                 messages_sent: 0,
                 bytes_sent: 0,
             })),
@@ -69,58 +107,102 @@ impl<M: 'static> Fabric<M> {
 
     /// Bind (or re-bind, after a re-spawn) `key` on `node`; returns the
     /// mailbox. A re-bind drops the stale mailbox: in-flight messages to the
-    /// dead incarnation are lost, like packets to a crashed process.
+    /// dead incarnation are lost, like packets to a crashed process. An
+    /// explicit re-bind of a retired key revives it (the live-binding check
+    /// runs before the retirement watermark).
     pub fn bind(&self, key: u64, node: u32) -> Receiver<M> {
+        let (gen, rank) = split(key);
         let (tx, rx) = channel::<M>(&self.sim);
         let backlog = {
             let mut inner = self.inner.borrow_mut();
-            inner.retired.remove(&key); // an explicit re-bind revives the key
-            inner.endpoints.insert(key, Endpoint { tx, node });
-            inner.pending.remove(&key).unwrap_or_default()
+            inner.ensure(rank);
+            let slot = &mut inner.routes[rank];
+            // Replacing a live binding of a *different* generation should
+            // never happen (recovery drops the old incarnation first); if a
+            // future flow ever does it, the displaced generation is dead —
+            // retire it so its traffic is dropped rather than buffered.
+            if slot.ep.take().is_some() && slot.bound_gen != gen {
+                slot.retired_below = slot.retired_below.max(slot.bound_gen + 1);
+            }
+            slot.bound_gen = gen;
+            slot.ep = Some(Endpoint { tx, node });
+            if slot.pending.is_empty() {
+                Vec::new()
+            } else {
+                let mut mine = Vec::new();
+                let mut rest = Vec::new();
+                for e in std::mem::take(&mut slot.pending) {
+                    if e.0 == gen {
+                        mine.push(e);
+                    } else {
+                        rest.push(e);
+                    }
+                }
+                slot.pending = rest;
+                mine
+            }
         };
         // Flush eager sends that raced the bind (delay computed now, which
         // models the connection-establishment handshake completing).
-        for (from_node, msg, bytes) in backlog {
+        for (_gen, from_node, msg, bytes) in backlog {
             self.send_from(from_node, key, msg, bytes);
         }
         rx
     }
 
-    /// Remove a binding (process death). The key is retired: its buffered
-    /// backlog (if any) is dropped and later eager sends are discarded
-    /// rather than buffered, so a crashed incarnation cannot accumulate
-    /// traffic forever waiting for a bind that never comes.
+    /// Remove a binding (process death). The generation is retired via the
+    /// watermark: its buffered backlog (if any) is dropped and later eager
+    /// sends are discarded rather than buffered, so a crashed incarnation
+    /// cannot accumulate traffic forever waiting for a bind that never
+    /// comes — at zero memory cost per incarnation.
     pub fn unbind(&self, key: u64) {
+        let (gen, rank) = split(key);
         let mut inner = self.inner.borrow_mut();
-        inner.endpoints.remove(&key);
-        inner.pending.remove(&key);
-        inner.retired.insert(key);
+        inner.ensure(rank);
+        let slot = &mut inner.routes[rank];
+        if slot.ep.is_some() && slot.bound_gen == gen {
+            slot.ep = None;
+        }
+        slot.retired_below = slot.retired_below.max(gen + 1);
+        slot.pending.retain(|e| e.0 != gen);
     }
 
     /// Node an endpoint lives on, if bound.
     pub fn node_of(&self, key: u64) -> Option<u32> {
-        self.inner.borrow().endpoints.get(&key).map(|e| e.node)
+        let (gen, rank) = split(key);
+        let inner = self.inner.borrow();
+        match inner.routes.get(rank) {
+            Some(slot) if slot.bound_gen == gen => slot.ep.as_ref().map(|e| e.node),
+            _ => None,
+        }
     }
 
     /// Send `msg` (`bytes` long on the wire) from a task on `from_node` to
     /// endpoint `to`. If the endpoint is not bound yet the message is
-    /// buffered until `bind` (eager send racing wireup) — unless the key is
-    /// retired (a crashed incarnation), in which case the message is
-    /// dropped like packets to a dead host. Returns false in both cases.
+    /// buffered until `bind` (eager send racing wireup) — unless the
+    /// generation is retired (a crashed incarnation), in which case the
+    /// message is dropped like packets to a dead host. Returns false in
+    /// both cases. The bound fast path is one indexed load + one
+    /// generation compare — no hashing.
     pub fn send_from(&self, from_node: u32, to: u64, msg: M, bytes: usize) -> bool {
+        let (gen, rank) = split(to);
         let (tx, delay) = {
             let mut inner = self.inner.borrow_mut();
-            let Some(ep) = inner.endpoints.get(&to) else {
-                if !inner.retired.contains(&to) {
-                    inner.pending.entry(to).or_default().push((from_node, msg, bytes));
+            inner.ensure(rank);
+            let slot = &mut inner.routes[rank];
+            let live = match &slot.ep {
+                Some(ep) if slot.bound_gen == gen => Some((ep.tx.clone(), ep.node)),
+                _ => None,
+            };
+            let Some((tx, ep_node)) = live else {
+                if gen >= slot.retired_below {
+                    slot.pending.push((gen, from_node, msg, bytes));
                 }
                 return false;
             };
-            let delay = self.cost.data_delay(bytes, ep.node == from_node);
-            let tx = ep.tx.clone();
             inner.messages_sent += 1;
             inner.bytes_sent += bytes as u64;
-            (tx, delay)
+            (tx, self.cost.data_delay(bytes, ep_node == from_node))
         };
         tx.send(msg, delay);
         true
@@ -128,7 +210,23 @@ impl<M: 'static> Fabric<M> {
 
     /// Messages currently buffered for a not-yet-bound key (leak audits).
     pub fn pending_len(&self, key: u64) -> usize {
-        self.inner.borrow().pending.get(&key).map_or(0, |v| v.len())
+        let (gen, rank) = split(key);
+        let inner = self.inner.borrow();
+        inner
+            .routes
+            .get(rank)
+            .map_or(0, |s| s.pending.iter().filter(|e| e.0 == gen).count())
+    }
+
+    /// Host-memory audit for churn tests: `(rank slots, total buffered
+    /// eager sends)`. Both must stay bounded by the topology — never by
+    /// the number of dead incarnations.
+    pub fn route_table_size(&self) -> (usize, usize) {
+        let inner = self.inner.borrow();
+        (
+            inner.routes.len(),
+            inner.routes.iter().map(|s| s.pending.len()).sum(),
+        )
     }
 
     /// Traffic counters `(messages, bytes)` — used by tests and perf metrics.
@@ -147,6 +245,11 @@ mod tests {
 
     fn fabric(sim: &Sim) -> Fabric<(u32, Vec<u8>)> {
         Fabric::new(sim, NetCost::from_calib(&Calibration::default()))
+    }
+
+    /// Compose a key the way `MpiJob::key` does.
+    fn key(gen: u64, rank: u32) -> u64 {
+        (gen << 32) | rank as u64
     }
 
     #[test]
@@ -226,6 +329,56 @@ mod tests {
         assert_eq!(f.node_of(1), Some(3));
         sim.run();
         assert!(new.is_empty(), "message to the dead incarnation is lost");
+    }
+
+    #[test]
+    fn generations_of_one_rank_route_independently() {
+        // Traffic addressed to an older, already-unbound generation must
+        // never reach the newer incarnation bound at the same rank slot.
+        let sim = Sim::new();
+        let f = fabric(&sim);
+        let _g0 = f.bind(key(0, 7), 0);
+        f.unbind(key(0, 7)); // incarnation 0 dies
+        let g1 = f.bind(key(1, 7), 1); // incarnation 1 re-binds the rank
+        assert!(!f.send_from(0, key(0, 7), (1, vec![]), 1), "stale gen dropped");
+        assert!(f.send_from(0, key(1, 7), (2, vec![]), 1));
+        // an even newer generation's eager send buffers until its bind
+        assert!(!f.send_from(0, key(2, 7), (3, vec![]), 1));
+        assert_eq!(f.pending_len(key(2, 7)), 1);
+        sim.run();
+        assert_eq!(g1.try_recv().map(|m| m.0), Some(2));
+        assert!(g1.is_empty());
+        let g2 = f.bind(key(2, 7), 2);
+        sim.run();
+        assert_eq!(g2.try_recv().map(|m| m.0), Some(3), "wireup race flushed");
+    }
+
+    #[test]
+    fn retired_state_is_bounded_across_10k_incarnations() {
+        // Satellite regression: the seed kept a `HashSet<u64>` of retired
+        // keys that grew by one entry per dead incarnation. The
+        // generation-tagged table must keep host memory bounded by the
+        // topology (one slot per rank) across any number of kill/re-bind
+        // cycles, while still dropping every dead generation's traffic.
+        let sim = Sim::new();
+        let f = fabric(&sim);
+        for gen in 0..10_000u64 {
+            let _rx = f.bind(key(gen, 3), 0);
+            if gen > 0 {
+                // eager send to the previous incarnation: dropped, not buffered
+                assert!(!f.send_from(0, key(gen - 1, 3), (1, vec![]), 1));
+            }
+            f.unbind(key(gen, 3));
+        }
+        let (slots, pending) = f.route_table_size();
+        assert_eq!(slots, 4, "one slot per rank, not per incarnation");
+        assert_eq!(pending, 0, "no retired-set or backlog growth");
+        assert_eq!(f.stats(), (0, 0));
+        // the rank is still usable after all that churn
+        let rx = f.bind(key(10_000, 3), 0);
+        assert!(f.send_from(0, key(10_000, 3), (42, vec![]), 1));
+        sim.run();
+        assert_eq!(rx.try_recv().map(|m| m.0), Some(42));
     }
 
     #[test]

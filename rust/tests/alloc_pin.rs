@@ -1,0 +1,85 @@
+//! Allocation pin for the collective hot path (tentpole acceptance):
+//! steady-state heap allocations per delivered message of a 256-rank tree
+//! allreduce must stay <= 2 — in practice the shared `Rc` payload each
+//! sender encodes plus the per-call result `Vec`, amortized over the
+//! 2(N-1) messages of a round. Everything else (channel delivery slots,
+//! wakers, the out-of-order match buffer, the reduce accumulator, the
+//! fabric routing table) must be recycled, not reallocated.
+//!
+//! Method: run two warm-up allreduce rounds to grow every slab/scratch to
+//! its high-water mark, quiesce the simulation with each rank parked on a
+//! gate channel, snapshot the counting allocator + fabric counters, then
+//! release the gates and measure eight more rounds.
+
+use std::rc::Rc;
+
+use reinitpp::cluster::Topology;
+use reinitpp::config::Calibration;
+use reinitpp::mpi::{FtMode, MpiJob, ReduceOp};
+use reinitpp::sim::{channel, ProcName, Sim, SimDuration};
+
+#[path = "../benches/support/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::alloc_count;
+
+#[test]
+fn allreduce_256_ranks_steady_state_allocs_per_msg_at_most_2() {
+    const RANKS: u32 = 256;
+    const WARMUP: u32 = 2;
+    const MEASURE: u32 = 8;
+
+    let sim = Sim::new();
+    let topo = Topology::new(RANKS, 16, 0);
+    let job = MpiJob::new(&sim, topo, FtMode::Reinit, &Calibration::default());
+    let prefix: Rc<str> = Rc::from("r");
+    let mut gates = Vec::new();
+    for r in 0..RANKS {
+        let (gate_tx, gate_rx) = channel::<u32>(&sim);
+        gates.push(gate_tx);
+        let j2 = job.clone();
+        let node = topo.home_node(r);
+        let p = sim.spawn_process(ProcName::Indexed {
+            prefix: Rc::clone(&prefix),
+            index: r,
+            sub: None,
+        });
+        sim.spawn(p, async move {
+            let c = j2.attach(r, node);
+            for _ in 0..WARMUP {
+                c.allreduce_scalar(1.0, ReduceOp::Sum).await.unwrap();
+            }
+            gate_rx.recv().await.unwrap(); // quiesce here: measurement gate
+            for _ in 0..MEASURE {
+                let s = c.allreduce_scalar(1.0, ReduceOp::Sum).await.unwrap();
+                assert_eq!(s, RANKS as f32);
+            }
+        });
+    }
+
+    // Phase 1: warm-up rounds, then every task parks on its gate.
+    let s1 = sim.run();
+    assert_eq!(s1.tasks_pending as u32, RANKS, "all ranks parked at the gate");
+    let (msgs0, _) = job.fabric_stats();
+    assert_eq!(msgs0 as u32, WARMUP * 2 * (RANKS - 1), "warm-up traffic");
+
+    // Phase 2: release the gates and measure the steady state.
+    let a0 = alloc_count();
+    for tx in &gates {
+        tx.send(1, SimDuration::ZERO);
+    }
+    let s2 = sim.run();
+    let measured_allocs = alloc_count() - a0;
+    assert_eq!(s2.tasks_pending, 0, "all ranks finished");
+
+    let (msgs1, _) = job.fabric_stats();
+    let measured_msgs = msgs1 - msgs0;
+    assert_eq!(measured_msgs as u32, MEASURE * 2 * (RANKS - 1));
+
+    let allocs_per_msg = measured_allocs as f64 / measured_msgs as f64;
+    assert!(
+        allocs_per_msg <= 2.0,
+        "steady-state allocations per message regressed: {allocs_per_msg:.3} > 2 \
+         ({measured_allocs} allocs over {measured_msgs} msgs; budget is the \
+         sender's Rc payload + the per-call result Vec)"
+    );
+}
