@@ -56,10 +56,9 @@ fn main() {
     assert!(free.completed);
     assert!(faulty.completed, "recovery failed");
 
-    println!(
-        "failure: rank {} killed at iteration {}",
-        faulty.fault.rank, faulty.fault.iteration
-    );
+    for f in &faulty.faults {
+        println!("failure injected: {} (fired: {})", f.event, f.fired);
+    }
     println!("\nresidual trace (rank 0), rollback marked:");
     let mut last_iter = 0;
     for (t, iter, res) in &faulty.diag_trace {

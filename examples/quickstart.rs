@@ -37,10 +37,9 @@ fn main() {
     let r = run_trial(&cfg, 0, xla);
 
     println!("== quickstart: {} / {} / {} ==", cfg.app, cfg.recovery, cfg.failure);
-    println!(
-        "injected failure: rank {} at iteration {}",
-        r.fault.rank, r.fault.iteration
-    );
+    for f in &r.faults {
+        println!("injected failure: {} (fired: {})", f.event, f.fired);
+    }
     println!("completed:        {}", r.completed);
     println!("total time:       {:.3} s (virtual)", r.breakdown.total_s);
     println!("  checkpoint write {:.3} s", r.breakdown.ckpt_write_s);

@@ -46,7 +46,12 @@ enum Inner {
         rt: Rc<XlaRuntime>,
         tracker: CostTracker,
     },
-    Native,
+    Native {
+        /// Virtual-time multiplier on the analytic cost
+        /// (`calibration.modeled_compute_scale`; 1.0 = the calibrated
+        /// figures' charge, bit-exact).
+        scale: f64,
+    },
     Ghost {
         tracker: CostTracker,
     },
@@ -66,8 +71,14 @@ impl ComputeBackend {
     }
 
     pub fn native() -> Self {
+        Self::native_scaled(1.0)
+    }
+
+    /// Native backend with a virtual-time cost multiplier (modeled
+    /// fidelity only; host compute is unchanged).
+    pub fn native_scaled(scale: f64) -> Self {
         ComputeBackend {
-            inner: Rc::new(Inner::Native),
+            inner: Rc::new(Inner::Native { scale }),
         }
     }
 
@@ -93,9 +104,12 @@ impl ComputeBackend {
                 tracker.record(name, secs);
                 (outs, SimDuration::from_secs_f64(secs))
             }
-            Inner::Native => {
+            Inner::Native { scale } => {
                 let outs = native::execute(name, inputs);
-                (outs, SimDuration::from_secs_f64(native::modeled_cost_s(name)))
+                (
+                    outs,
+                    SimDuration::from_secs_f64(native::modeled_cost_s(name) * scale),
+                )
             }
             Inner::Ghost { tracker } => {
                 let shapes = native::output_shapes(name);

@@ -6,6 +6,7 @@
 //! reinitpp reproduce --figure N [OPTIONS] [...]  regenerate a paper figure
 //! reinitpp scale     [OPTIONS] [key=value ...]   weak-scaling sweep to 16k ranks
 //! reinitpp tiers     [OPTIONS] [key=value ...]   checkpoint tier-stack sweep
+//! reinitpp storm     [OPTIONS] [key=value ...]   MTBF failure-storm sweep
 //! reinitpp tables    [--which 1|2]               print Tables 1/2
 //! reinitpp validate  [OPTIONS] [key=value ...]   global-restart equivalence
 //! reinitpp calibrate [key=value ...]             measure artifact exec times
@@ -41,6 +42,10 @@ pub enum Command {
         opts: SweepOpts,
     },
     Scale {
+        cfg: ExperimentConfig,
+        opts: SweepOpts,
+    },
+    Storm {
         cfg: ExperimentConfig,
         opts: SweepOpts,
     },
@@ -88,30 +93,42 @@ USAGE:
                                                  (fs vs local+partner1 vs local+partner2+fs,
                                                  process + node failures; ranks 16/32/64 at
                                                  8 ranks/node; emits tier_compare.csv)
+  reinitpp storm     [OPTIONS] [key=value ...]   failure-storm sweep: MTBF arrival process
+                                                 x recovery method x ranks 16/64/256, with
+                                                 per-event detect/recovery/rollback columns
+                                                 (emits storm_compare.csv). Single runs can
+                                                 also storm via `run mtbf_s=4` or an explicit
+                                                 scenario `run failures=proc@3:r5,node@7:r12`
   reinitpp tables    [--which 1|2]               print the paper's tables
   reinitpp validate  [OPTIONS] [key=value ...]   check global-restart equivalence
   reinitpp calibrate [key=value ...]             measure artifact execution costs
 
 OPTIONS:
   --config FILE      load a TOML-subset config file
-  --max-ranks N      cap the sweep's rank counts (reproduce/scale/tiers;
+  --max-ranks N      cap the sweep's rank counts (reproduce/scale/tiers/storm;
                      scale defaults to 16384)
   --outdir DIR       CSV output directory (default: results)
-  --jobs N           worker threads for trial execution (run/reproduce/scale/tiers).
+  --jobs N           worker threads for trial execution
+                     (run/reproduce/scale/tiers/storm).
                      Must be >= 1: default all cores, 1 = serial execution on
                      the calling thread. Tables and CSVs are byte-identical
                      for any N.
   key=value          any config key, e.g. app=hpccg ranks=64 recovery=reinit
                      failure=process trials=10 iters=20 fidelity=auto
                      ckpt_tiers=local+partner2+fs ckpt_drain_interval_s=0.5
+                     failures=proc@3:r5,node@7:r12,proc@t1.25:r3 (explicit
+                     multi-failure scenario: kind@iteration-or-tSECONDS:victim)
+                     mtbf_s=4 max_failures=6 (exponential failure arrivals)
                      calibration.fork_exec_ms=350
 
 EXAMPLES:
   reinitpp run app=hpccg ranks=16 recovery=reinit failure=process trials=3
   reinitpp run ranks=32 ranks_per_node=8 ckpt_tiers=local+partner2+fs trials=3
+  reinitpp run failures=proc@3:r5,node@7:r12 spare_nodes=2 trials=3
   reinitpp reproduce --figure 6 --max-ranks 128 --jobs 8 trials=5
   reinitpp scale --max-ranks 16384 --jobs 8 trials=3
   reinitpp tiers --max-ranks 32 --jobs 4 trials=5
+  reinitpp storm --max-ranks 256 --jobs 4 trials=5
   reinitpp validate app=comd recovery=ulfm failure=process
 ";
 
@@ -159,6 +176,77 @@ fn parse_sweep_opts<'a>(
                 }
             }
         }
+    }
+    Ok(())
+}
+
+/// Sweeps own their failure axis: an explicit scenario (`failures=`) or an
+/// MTBF process (`mtbf_s=`) sneaking in through `key=value` would make
+/// every point lie about what it ran. `run`/`validate` are the places for
+/// ad-hoc scenarios; `storm` sets `mtbf_s` per grid point itself.
+fn reject_scenario_keys(cmd: &str, cfg: &ExperimentConfig) -> Result<(), CliError> {
+    if !cfg.failures.is_empty() {
+        return Err(err(format!(
+            "{cmd}: the sweep owns its failure axis; drop failures= (use `run` \
+             for explicit multi-failure scenarios)"
+        )));
+    }
+    if cfg.mtbf_s > 0.0 {
+        return Err(err(format!(
+            "{cmd}: the sweep owns its failure axis; drop mtbf_s= \
+             (the `storm` sweep sets MTBF per point)"
+        )));
+    }
+    Ok(())
+}
+
+/// Grid axes a sweep subcommand owns (sets per point); user overrides are
+/// rejected with a message naming the sweep rather than silently folded in.
+/// The production analogue of the tests' `assert_rejects_keys` matrix —
+/// one definition instead of a copy-pasted if-chain per subcommand.
+struct GridOwnedAxes {
+    /// Rank grid description (`"512..16384"`); the ranks axis is always
+    /// sweep-owned (capped with `--max-ranks`).
+    ranks_grid: &'static str,
+    /// `Some` when the sweep runs every recovery method itself.
+    recovery_owned: bool,
+    /// What the sweep does on the failure axis ("injects a single process
+    /// failure", "runs both process and node failures", ...).
+    failure_axis: &'static str,
+    /// What the sweep does on the checkpoint axis.
+    ckpt_axis: &'static str,
+}
+
+fn reject_grid_owned_axes(
+    cmd: &str,
+    cfg: &ExperimentConfig,
+    axes: &GridOwnedAxes,
+) -> Result<(), CliError> {
+    reject_scenario_keys(cmd, cfg)?;
+    let defaults = ExperimentConfig::default();
+    if cfg.ranks != defaults.ranks {
+        return Err(err(format!(
+            "{cmd}: the sweep sets ranks per point ({}); cap the grid with \
+             --max-ranks instead",
+            axes.ranks_grid
+        )));
+    }
+    if axes.recovery_owned && cfg.recovery != defaults.recovery {
+        return Err(err(format!(
+            "{cmd}: the sweep runs all recovery methods; drop recovery="
+        )));
+    }
+    if cfg.failure != defaults.failure {
+        return Err(err(format!(
+            "{cmd}: the sweep {}; drop failure=",
+            axes.failure_axis
+        )));
+    }
+    if cfg.ckpt.is_some() || cfg.ckpt_tiers.is_some() {
+        return Err(err(format!(
+            "{cmd}: the sweep {}; drop ckpt/ckpt_tiers",
+            axes.ckpt_axis
+        )));
     }
     Ok(())
 }
@@ -212,6 +300,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
         }
         "reproduce" => {
             let (cfg, leftovers) = parse_cfg(rest)?;
+            reject_scenario_keys("reproduce", &cfg)?;
             let mut figure = None;
             let mut opts = SweepOpts::default();
             parse_sweep_opts("reproduce", &leftovers, &mut opts, |a, it| {
@@ -242,32 +331,17 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 ..ExperimentConfig::default()
             };
             let (cfg, leftovers) = parse_cfg_from(base, rest)?;
-            // The sweep owns its grid axes (rank count, recovery method,
-            // failure kind); rejecting overrides beats silently lying
-            // about what was swept.
-            let defaults = ExperimentConfig::default();
-            if cfg.ranks != defaults.ranks {
-                return Err(err(
-                    "scale: the sweep sets ranks per point (512..16384); \
-                     cap the grid with --max-ranks instead",
-                ));
-            }
-            if cfg.recovery != defaults.recovery {
-                return Err(err(
-                    "scale: the sweep runs all recovery methods; drop recovery=",
-                ));
-            }
-            if cfg.failure != defaults.failure {
-                return Err(err(
-                    "scale: the sweep injects a single process failure; drop failure=",
-                ));
-            }
-            if cfg.ckpt.is_some() || cfg.ckpt_tiers.is_some() {
-                return Err(err(
-                    "scale: the sweep uses the paper's Table 2 checkpoint policy \
-                     per recovery method; drop ckpt/ckpt_tiers",
-                ));
-            }
+            reject_grid_owned_axes(
+                "scale",
+                &cfg,
+                &GridOwnedAxes {
+                    ranks_grid: "512..16384",
+                    recovery_owned: true,
+                    failure_axis: "injects a single process failure",
+                    ckpt_axis: "uses the paper's Table 2 checkpoint policy per \
+                                recovery method",
+                },
+            )?;
             let mut opts = SweepOpts {
                 max_ranks: 16_384,
                 ..SweepOpts::default()
@@ -284,30 +358,54 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 ..ExperimentConfig::default()
             };
             let (cfg, leftovers) = parse_cfg_from(base, rest)?;
-            // The sweep owns its grid axes (stack, failure kind, rank
-            // count); silently discarding an override would lie about what
-            // was swept, so reject them outright.
-            let defaults = ExperimentConfig::default();
-            if cfg.ckpt_tiers.is_some() || cfg.ckpt.is_some() {
-                return Err(err(
-                    "tiers: the sweep sets the checkpoint stack per point \
-                     (fs / local+partner1 / local+partner2+fs); drop ckpt/ckpt_tiers",
-                ));
-            }
-            if cfg.ranks != defaults.ranks {
-                return Err(err(
-                    "tiers: the sweep sets ranks per point (16/32/64); \
-                     cap the grid with --max-ranks instead",
-                ));
-            }
-            if cfg.failure != defaults.failure {
-                return Err(err(
-                    "tiers: the sweep runs both process and node failures; drop failure=",
-                ));
-            }
+            // recovery_owned: false — the tier sweep compares stacks under
+            // whichever single recovery method the user picks.
+            reject_grid_owned_axes(
+                "tiers",
+                &cfg,
+                &GridOwnedAxes {
+                    ranks_grid: "16/32/64",
+                    recovery_owned: false,
+                    failure_axis: "runs both process and node failures",
+                    ckpt_axis: "sets the checkpoint stack per point \
+                                (fs / local+partner1 / local+partner2+fs)",
+                },
+            )?;
             let mut opts = SweepOpts::default();
             parse_sweep_opts("tiers", &leftovers, &mut opts, |_, _| Ok(false))?;
             Ok(Command::Tiers { cfg, opts })
+        }
+        "storm" => {
+            // Storm defaults: quick modeled trials whose *virtual* iteration
+            // cost is stretched to paper scale (modeled_compute_scale) so
+            // the application clock is long against the MTBF grid, while
+            // the host-side per-rank grids stay tiny.
+            let mut base = ExperimentConfig {
+                trials: 3,
+                iters: 40,
+                fidelity: crate::config::Fidelity::Modeled,
+                hpccg_nx: 4,
+                comd_n: 32,
+                lulesh_nx: 4,
+                max_failures: crate::config::presets::STORM_MAX_FAILURES,
+                ..ExperimentConfig::default()
+            };
+            base.calib.modeled_compute_scale = crate::config::presets::STORM_COMPUTE_SCALE;
+            let (cfg, leftovers) = parse_cfg_from(base, rest)?;
+            reject_grid_owned_axes(
+                "storm",
+                &cfg,
+                &GridOwnedAxes {
+                    ranks_grid: "16/64/256",
+                    recovery_owned: true,
+                    failure_axis: "injects process-failure storms",
+                    ckpt_axis: "uses the paper's Table 2 checkpoint policy per \
+                                recovery method",
+                },
+            )?;
+            let mut opts = SweepOpts::default();
+            parse_sweep_opts("storm", &leftovers, &mut opts, |_, _| Ok(false))?;
+            Ok(Command::Storm { cfg, opts })
         }
         other => Err(err(format!("unknown command `{other}`\n\n{USAGE}"))),
     }
@@ -379,18 +477,48 @@ pub fn execute(cmd: Command) -> i32 {
                 eprintln!("{e}");
                 return 2;
             }
+            // Header must describe what actually gets injected: an explicit
+            // scenario or MTBF process overrides the single-shot `failure=`
+            // kind (which `FaultTimeline::plan` then ignores).
+            let failure_desc = if !cfg.failures.is_empty() {
+                let evs: Vec<String> = cfg.failures.iter().map(|e| e.to_string()).collect();
+                format!("failures={}", evs.join(","))
+            } else if cfg.mtbf_s > 0.0 {
+                format!(
+                    "mtbf_s={} ({} failures, <= {} events)",
+                    cfg.mtbf_s, cfg.failure, cfg.max_failures
+                )
+            } else {
+                format!("failure={}", cfg.failure)
+            };
             println!(
-                "# {} | ranks={} | {} | failure={} | ckpt={} | trials={} | jobs={}",
+                "# {} | ranks={} | {} | {} | ckpt={} | trials={} | jobs={}",
                 cfg.app,
                 cfg.ranks,
                 cfg.recovery,
-                cfg.failure,
+                failure_desc,
                 cfg.effective_stack(),
                 cfg.trials,
                 jobs
             );
             let p = harness::run_point(&cfg, jobs);
             harness::print_points("run", std::slice::from_ref(&p));
+            if !cfg.failures.is_empty() || cfg.mtbf_s > 0.0 {
+                // Multi-failure scenario: surface the per-event decomposition
+                // (single-failure output stays byte-identical to the paper's).
+                // These are per-trial TOTALS over the trial's segments (the
+                // same quantities storm_compare.csv reports), not per-event
+                // averages.
+                println!(
+                    "\nper-trial storm totals: {:.1} fired failure(s) | detect {:.3} s | \
+                     recovery {:.3} s | rollback {:.3} s | degraded re-deploys {:.1}",
+                    p.failures,
+                    p.detect.mean,
+                    p.event_recovery.mean,
+                    p.rollback.mean,
+                    p.degraded
+                );
+            }
             println!("\n(host busy time: {:.2} s across {jobs} worker(s))", p.wall_s);
             0
         }
@@ -425,6 +553,13 @@ pub fn execute(cmd: Command) -> i32 {
                 2
             }
         },
+        Command::Storm { cfg, opts } => match harness::storm_sweep(&cfg, &opts) {
+            Ok(_) => 0,
+            Err(e) => {
+                eprintln!("{e}");
+                2
+            }
+        },
         Command::Validate { cfg } => {
             if let Err(e) = cfg.validate() {
                 eprintln!("{e}");
@@ -437,19 +572,19 @@ pub fn execute(cmd: Command) -> i32 {
             let free = run_trial(&free_cfg, 0, xla.clone());
             let faulty = run_trial(&cfg, 0, xla);
             if !faulty.completed {
-                eprintln!("FAIL: faulty run did not complete (fault {:?})", faulty.fault);
+                eprintln!("FAIL: faulty run did not complete (fault {:?})", faulty.faults);
                 return 1;
             }
             if faulty.digests != free.digests {
                 eprintln!(
                     "FAIL: recovered state differs from fault-free (fault {:?})",
-                    faulty.fault
+                    faulty.faults
                 );
                 return 1;
             }
             println!(
                 "OK: fault {:?} recovered bitwise-identically ({} ranks, recovery {:.3} s)",
-                faulty.fault, cfg.ranks, faulty.breakdown.mpi_recovery_s
+                faulty.faults, cfg.ranks, faulty.breakdown.mpi_recovery_s
             );
             0
         }
@@ -507,6 +642,74 @@ mod tests {
 
     fn sv(xs: &[&str]) -> Vec<String> {
         xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// Shared rejected-key assertion: `cmd` with each arg in `bad` alone
+    /// must fail to parse, with an error that names the command (so the
+    /// user sees *which* sweep owns the axis). Replaces the per-subcommand
+    /// copy-pasted `assert!(parse(..).is_err())` blocks.
+    fn assert_rejects_keys(cmd: &str, bad: &[&str]) {
+        for arg in bad {
+            let e = parse(&sv(&[cmd, arg]))
+                .expect_err(&format!("{cmd} must reject `{arg}`"));
+            assert!(
+                e.to_string().contains(cmd),
+                "{cmd} `{arg}`: error must name the command: {e}"
+            );
+        }
+    }
+
+    /// The grid-owned / scenario keys every sweep subcommand must reject
+    /// rather than silently fold into its grid.
+    #[test]
+    fn sweep_subcommands_reject_owned_axes() {
+        // (command, rejected key=value overrides)
+        let matrix: &[(&str, &[&str])] = &[
+            (
+                "scale",
+                &[
+                    "ranks=4096",
+                    "recovery=cr",
+                    "failure=node",
+                    "ckpt=file",
+                    "ckpt_tiers=local+partner1",
+                    "failures=proc@3:r5",
+                    "mtbf_s=2",
+                ],
+            ),
+            (
+                "tiers",
+                &[
+                    "ranks=128",
+                    "failure=node",
+                    "ckpt_tiers=local+partner3",
+                    "ckpt=memory",
+                    "failures=proc@3:r5",
+                    "mtbf_s=2",
+                ],
+            ),
+            (
+                "storm",
+                &[
+                    "ranks=128",
+                    "recovery=cr",
+                    "failure=node",
+                    "ckpt=file",
+                    "ckpt_tiers=local+partner1",
+                    "failures=proc@3:r5",
+                    "mtbf_s=2",
+                ],
+            ),
+        ];
+        for (cmd, keys) in matrix {
+            assert_rejects_keys(cmd, keys);
+        }
+        // reproduce owns its figure grids the same way for scenario keys
+        assert!(parse(&sv(&["reproduce", "--figure", "4", "mtbf_s=2"])).is_err());
+        assert!(parse(&sv(&["reproduce", "--figure", "4", "failures=proc@3:r5"])).is_err());
+        // `run` accepts the scenario keys those sweeps reject
+        assert!(parse(&sv(&["run", "mtbf_s=2"])).is_ok());
+        assert!(parse(&sv(&["run", "failures=proc@3:r5"])).is_ok());
     }
 
     #[test]
@@ -585,18 +788,13 @@ mod tests {
             }
             _ => panic!(),
         }
-        // grid-owned axes must be rejected, not silently overwritten
-        assert!(parse(&sv(&["scale", "ranks=4096"])).is_err());
-        assert!(parse(&sv(&["scale", "recovery=cr"])).is_err());
-        assert!(parse(&sv(&["scale", "failure=node"])).is_err());
-        assert!(parse(&sv(&["scale", "ckpt=file"])).is_err());
-        assert!(parse(&sv(&["scale", "ckpt_tiers=local+partner1"])).is_err());
+        // grid-owned axes: covered by sweep_subcommands_reject_owned_axes
         assert!(parse(&sv(&["scale", "--figure", "4"])).is_err(), "unknown arg");
     }
 
     #[test]
     fn jobs_zero_is_rejected_with_serial_hint() {
-        for cmd in ["run", "tiers", "scale"] {
+        for cmd in ["run", "tiers", "scale", "storm"] {
             let e = parse(&sv(&[cmd, "--jobs", "0"])).unwrap_err();
             assert!(
                 e.to_string().contains("use 1 for serial"),
@@ -624,11 +822,48 @@ mod tests {
             _ => panic!(),
         }
         assert!(parse(&sv(&["tiers", "--figure", "4"])).is_err(), "unknown arg");
-        // grid-owned axes must be rejected, not silently overwritten
-        assert!(parse(&sv(&["tiers", "ranks=128"])).is_err());
-        assert!(parse(&sv(&["tiers", "failure=node"])).is_err());
-        assert!(parse(&sv(&["tiers", "ckpt_tiers=local+partner3"])).is_err());
-        assert!(parse(&sv(&["tiers", "ckpt=memory"])).is_err());
+        // grid-owned axes: covered by sweep_subcommands_reject_owned_axes
+    }
+
+    #[test]
+    fn parse_storm_defaults_and_options() {
+        let cmd = parse(&sv(&["storm", "--max-ranks", "64", "--jobs", "2", "trials=4"]))
+            .unwrap();
+        match cmd {
+            Command::Storm { cfg, opts } => {
+                assert_eq!(cfg.trials, 4);
+                assert_eq!(cfg.fidelity, crate::config::Fidelity::Modeled);
+                assert_eq!(
+                    cfg.max_failures,
+                    crate::config::presets::STORM_MAX_FAILURES
+                );
+                assert!(cfg.iters >= 20, "storm base stretches the app clock");
+                assert_eq!(opts.max_ranks, 64);
+                assert_eq!(opts.jobs, 2);
+            }
+            _ => panic!(),
+        }
+        assert!(parse(&sv(&["storm", "--figure", "4"])).is_err(), "unknown arg");
+        // trial count / iteration knobs stay overridable
+        assert!(parse(&sv(&["storm", "iters=60", "max_failures=3"])).is_ok());
+    }
+
+    #[test]
+    fn parse_run_with_failure_scenario() {
+        let cmd = parse(&sv(&[
+            "run",
+            "failures=proc@3:r5,node@7:r12,proc@t1.25:r3",
+            "spare_nodes=2",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Run { cfg, .. } => {
+                assert_eq!(cfg.failures.len(), 3);
+                assert_eq!(cfg.failures[1].to_string(), "node@7:r12");
+            }
+            _ => panic!(),
+        }
+        assert!(parse(&sv(&["run", "failures=warp@1:r0"])).is_err());
     }
 
     #[test]

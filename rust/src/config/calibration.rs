@@ -69,6 +69,16 @@ pub struct Calibration {
     /// below the fabric/link rates so draining never starves the app).
     pub drain_bw_gbps: f64,
 
+    // ---- modeled-fidelity compute ----
+    /// Multiplier on the analytic per-kernel cost the modeled (native)
+    /// backend charges to virtual time. Purely a virtual-time knob — host
+    /// compute is unchanged — so storm-style scenarios can stretch the
+    /// application clock to paper-scale iteration times (~tens of ms)
+    /// while keeping the tiny per-rank grids that make 256-rank sweeps
+    /// cheap to host. 1.0 (default) reproduces the calibrated figures
+    /// bit-exactly.
+    pub modeled_compute_scale: f64,
+
     // ---- ULFM prototype behaviour ----
     /// Heartbeat observation period, ms (failure detection latency floor).
     pub ulfm_hb_period_ms: f64,
@@ -108,6 +118,7 @@ impl Default for Calibration {
             lustre_meta_ms: 15.0,
             mem_bw_gbps: 8.0,
             drain_bw_gbps: 1.0,
+            modeled_compute_scale: 1.0,
             ulfm_hb_period_ms: 25.0,
             ulfm_overhead_frac_per_level: 0.022,
             ulfm_recover_base_ms: 20.0,
@@ -150,6 +161,7 @@ impl Calibration {
             lustre_meta_ms,
             mem_bw_gbps,
             drain_bw_gbps,
+            modeled_compute_scale,
             ulfm_hb_period_ms,
             ulfm_overhead_frac_per_level,
             ulfm_recover_base_ms,

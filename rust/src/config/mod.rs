@@ -8,6 +8,7 @@ pub mod toml;
 pub use calibration::Calibration;
 
 use crate::ckptstore::StackSpec;
+use crate::fault::{parse_failures, FaultAnchor, FaultEvent};
 
 use std::fmt;
 
@@ -186,6 +187,16 @@ pub struct ExperimentConfig {
     pub spare_nodes: u32,
     pub recovery: RecoveryKind,
     pub failure: FailureKind,
+    /// Explicit multi-failure scenario
+    /// (`failures=proc@3:r5,node@7:r12,proc@t1.25:r3`); overrides the
+    /// single seeded draw and the MTBF process when non-empty.
+    pub failures: Vec<FaultEvent>,
+    /// Mean time between failures in virtual seconds (`mtbf_s=4`):
+    /// exponential inter-arrival over virtual time, up to `max_failures`
+    /// events of kind `failure`. 0 = disabled (the paper's single draw).
+    pub mtbf_s: f64,
+    /// Cap on MTBF-drawn events per trial (bounds storm length).
+    pub max_failures: u32,
     /// None = pick per the paper's Table 2 policy.
     pub ckpt: Option<CkptKind>,
     /// Explicit checkpoint tier stack (`ckpt_tiers=local+partner2+fs`);
@@ -220,6 +231,9 @@ impl Default for ExperimentConfig {
             spare_nodes: 1,
             recovery: RecoveryKind::Reinit,
             failure: FailureKind::Process,
+            failures: Vec::new(),
+            mtbf_s: 0.0,
+            max_failures: 4,
             ckpt: None,
             ckpt_tiers: None,
             ckpt_drain_interval_s: 0.0,
@@ -259,13 +273,40 @@ impl ExperimentConfig {
         self.ranks.div_ceil(self.ranks_per_node)
     }
 
+    /// Which failure kinds this experiment can inject, over every scenario
+    /// source: `(process, node)`. An explicit `failures=` scenario overrides
+    /// the single-shot/MTBF kind, mirroring `FaultTimeline::plan`.
+    pub fn configured_failure_kinds(&self) -> (bool, bool) {
+        if !self.failures.is_empty() {
+            return (
+                self.failures.iter().any(|e| e.kind == FailureKind::Process),
+                self.failures.iter().any(|e| e.kind == FailureKind::Node),
+            );
+        }
+        (
+            self.failure == FailureKind::Process,
+            self.failure == FailureKind::Node,
+        )
+    }
+
+    /// The failure kind that drives the Table 2 checkpoint-scheme choice:
+    /// node failures dominate (they need permanent or node-disjoint
+    /// storage). Identical to `failure` for single-shot configs.
+    pub fn policy_failure(&self) -> FailureKind {
+        match self.configured_failure_kinds() {
+            (_, true) => FailureKind::Node,
+            (true, false) => FailureKind::Process,
+            (false, false) => self.failure,
+        }
+    }
+
     /// Checkpoint scheme after applying the paper's Table 2 policy
     /// (ignored when an explicit `ckpt_tiers` stack is set).
     pub fn effective_ckpt(&self) -> CkptKind {
         if let Some(k) = self.ckpt {
             return k;
         }
-        crate::checkpoint::policy::default_scheme(self.recovery, self.failure)
+        crate::checkpoint::policy::default_scheme(self.recovery, self.policy_failure())
     }
 
     /// The checkpoint tier stack this experiment runs: an explicit
@@ -315,6 +356,23 @@ impl ExperimentConfig {
             "failure" => {
                 self.failure = FailureKind::parse(value)
                     .ok_or_else(|| cerr(format!("unknown failure: {value}")))?
+            }
+            "failures" => self.failures = parse_failures(value).map_err(cerr)?,
+            "mtbf_s" => {
+                let v: f64 = value
+                    .parse()
+                    .map_err(|_| cerr(format!("{key}: bad number: {value}")))?;
+                if !(v >= 0.0 && v.is_finite()) {
+                    return Err(cerr("mtbf_s must be >= 0 (0 disables the arrival process)"));
+                }
+                self.mtbf_s = v;
+            }
+            "max_failures" => {
+                let v: u32 = num!();
+                if v == 0 {
+                    return Err(cerr("max_failures must be >= 1"));
+                }
+                self.max_failures = v;
             }
             "ckpt" => {
                 self.ckpt = Some(
@@ -386,21 +444,68 @@ impl ExperimentConfig {
         if self.ckpt_every == 0 {
             return Err(cerr("ckpt_every must be > 0"));
         }
-        if self.failure == FailureKind::Node && self.spare_nodes == 0 {
+        if !self.failures.is_empty() && self.mtbf_s > 0.0 {
+            return Err(cerr(
+                "failures= and mtbf_s= both set: pick one scenario source \
+                 (an explicit timeline or the MTBF arrival process)",
+            ));
+        }
+        if self.mtbf_s > 0.0 && self.failure == FailureKind::None {
+            return Err(cerr(
+                "mtbf_s needs failure=process|node (the kind every drawn event injects)",
+            ));
+        }
+        let (has_process, has_node) = self.configured_failure_kinds();
+        let any_failure = has_process || has_node;
+        if any_failure && self.iters < 3 {
+            // Iteration draws need a non-degenerate [1, iters-1) window (the
+            // seed silently drew iteration == iters-1 at iters == 2), and
+            // even explicit scenarios need at least one checkpointed
+            // iteration strictly inside the run.
+            return Err(cerr(
+                "failure injection needs iters >= 3 (one checkpoint before the \
+                 failure, one iteration after it)",
+            ));
+        }
+        for ev in &self.failures {
+            if ev.kind == FailureKind::None {
+                return Err(cerr(format!("failure event `{ev}`: kind cannot be none")));
+            }
+            if ev.rank >= self.ranks {
+                return Err(cerr(format!(
+                    "failure event `{ev}`: victim rank out of range (ranks={})",
+                    self.ranks
+                )));
+            }
+            match ev.anchor {
+                FaultAnchor::Iteration(i) if i >= self.iters => {
+                    return Err(cerr(format!(
+                        "failure event `{ev}`: iteration anchor past the run (iters={})",
+                        self.iters
+                    )));
+                }
+                FaultAnchor::Time(t) if !(t > 0.0 && t.is_finite()) => {
+                    return Err(cerr(format!(
+                        "failure event `{ev}`: time anchor must be finite and > 0"
+                    )));
+                }
+                _ => {}
+            }
+        }
+        if has_node && self.spare_nodes == 0 {
             return Err(cerr(
                 "node-failure experiments need spare_nodes >= 1 (over-provisioning, paper §3.2)",
             ));
         }
         let stack = self.effective_stack();
         stack.check().map_err(cerr)?;
-        if self.failure == FailureKind::Process && !stack.survives_process_failure(self.ranks)
-        {
+        if has_process && !stack.survives_process_failure(self.ranks) {
             return Err(cerr(format!(
                 "checkpoint stack `{stack}` cannot survive a process failure \
                  (add a partner or fs tier)"
             )));
         }
-        if self.failure == FailureKind::Node && !stack.survives_node_failure(self.nodes()) {
+        if has_node && !stack.survives_node_failure(self.nodes()) {
             return Err(cerr(format!(
                 "checkpoint stack `{stack}` cannot survive a node failure at this scale \
                  (need a node-disjoint partner tier with >= 2 compute nodes, or an fs \
@@ -570,6 +675,86 @@ mod tests {
         assert_eq!(Fidelity::Auto.resolve(64), Fidelity::Full);
         assert_eq!(Fidelity::Auto.resolve(256), Fidelity::Fast);
         assert_eq!(Fidelity::Modeled.resolve(1024), Fidelity::Modeled);
+    }
+
+    #[test]
+    fn failure_scenario_keys_parse_and_validate() {
+        let mut c = ExperimentConfig::default();
+        c.apply("failures", "proc@3:r5,node@7:r12").unwrap();
+        assert_eq!(c.failures.len(), 2);
+        c.validate().unwrap();
+        // node event in the scenario drives Table 2 to the file scheme and
+        // demands spares
+        assert_eq!(c.policy_failure(), FailureKind::Node);
+        assert_eq!(c.effective_ckpt(), CkptKind::File);
+        c.spare_nodes = 0;
+        assert!(c.validate().is_err(), "node events need spares");
+        c.spare_nodes = 1;
+        // scenario + MTBF is ambiguous
+        c.apply("mtbf_s", "2.0").unwrap();
+        assert!(c.validate().is_err());
+        c.apply("mtbf_s", "0").unwrap();
+        // out-of-range events are rejected
+        c.apply("failures", "proc@3:r99").unwrap();
+        assert!(c.validate().is_err(), "victim out of range");
+        c.apply("failures", "proc@25:r5").unwrap();
+        assert!(c.validate().is_err(), "iteration past the run");
+        c.apply("failures", "none").unwrap();
+        c.validate().unwrap();
+        assert!(c.apply("failures", "warp@1:r0").is_err());
+        assert!(c.apply("mtbf_s", "-1").is_err());
+        assert!(c.apply("max_failures", "0").is_err());
+    }
+
+    #[test]
+    fn mtbf_validation() {
+        let mut c = ExperimentConfig::default();
+        c.apply("mtbf_s", "4.0").unwrap();
+        c.apply("max_failures", "6").unwrap();
+        c.validate().unwrap();
+        c.failure = FailureKind::None;
+        assert!(c.validate().is_err(), "mtbf needs a failure kind");
+        c.failure = FailureKind::Node;
+        assert_eq!(c.policy_failure(), FailureKind::Node);
+        c.spare_nodes = 1;
+        c.ranks = 32;
+        c.ranks_per_node = 8;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn tiny_iters_with_failure_rejected() {
+        // Satellite regression: iters=2 used to draw iteration 1 == iters-1,
+        // outside the documented [1, iters-1) window.
+        let mut c = ExperimentConfig::default();
+        c.iters = 2;
+        assert!(c.validate().is_err());
+        c.iters = 3;
+        c.validate().unwrap();
+        // fault-free runs may be arbitrarily short
+        c.iters = 1;
+        c.failure = FailureKind::None;
+        c.validate().unwrap();
+        // explicit scenarios are held to the same floor
+        c.iters = 2;
+        c.apply("failures", "proc@1:r0").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scenario_keys_roundtrip_through_toml() {
+        let doc = toml::parse(
+            "failures = \"proc@2:r1,node@4:r6\"\nmax_failures = 7\nmtbf_s = 0.0\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.failures.len(), 2);
+        assert_eq!(c.max_failures, 7);
+        let doc = toml::parse("mtbf_s = 3.5\n").unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.mtbf_s, 3.5);
     }
 
     #[test]

@@ -48,6 +48,31 @@ pub const SCALE_SWEEP_RANKS: [u32; 6] = [512, 1024, 2048, 4096, 8192, 16384];
 /// past this point is CR vs Reinit++, exactly like the paper's Figure 7.
 pub const SCALE_ULFM_MAX_RANKS: u32 = 4096;
 
+/// Rank counts of the failure-storm sweep (`reinitpp storm`). Modest
+/// scales: the object of study is repeated-failure dynamics (recovery
+/// restarts, spare exhaustion, rollback churn), not extreme rank counts —
+/// and every recovery method, including ULFM, must be runnable.
+pub const STORM_SWEEP_RANKS: [u32; 3] = [16, 64, 256];
+
+/// Mean-time-between-failures grid of the storm sweep, in virtual seconds
+/// after application start. Chosen around the recovery-cost anchors
+/// (Reinit++ ≈0.5 s, CR ≈3 s re-deploy): 2.0 is the "occasional failure"
+/// regime, 0.5 lands storms against in-flight CR re-deploys, and 0.1
+/// cascades failures inside every method's recovery window.
+pub const STORM_SWEEP_MTBF_S: [f64; 3] = [0.1, 0.5, 2.0];
+
+/// Cap on MTBF-drawn events per storm trial: bounds trial length (and the
+/// CR re-deploy count) while leaving room for several back-to-back
+/// failures at the tightest MTBF.
+pub const STORM_MAX_FAILURES: u32 = 6;
+
+/// `calibration.modeled_compute_scale` for the storm base config: at the
+/// storm's tiny per-rank grid (hpccg_nx=4 ≈ 2 µs modeled compute/iteration)
+/// this stretches a 40-iteration application run to ≈ 1 s of virtual time —
+/// paper-scale iteration cost, so the MTBF grid above actually lands
+/// failures inside the run — at zero extra host cost.
+pub const STORM_COMPUTE_SCALE: f64 = 12_000.0;
+
 /// The parsed tier-sweep stacks.
 pub fn tier_sweep_stacks() -> Vec<StackSpec> {
     TIER_SWEEP_STACKS
@@ -117,6 +142,14 @@ mod tests {
                 "every tier-sweep point must span >= 2 nodes"
             );
         }
+    }
+
+    #[test]
+    fn storm_presets_are_sane() {
+        assert!(STORM_SWEEP_MTBF_S.windows(2).all(|w| w[0] < w[1]));
+        assert!(STORM_SWEEP_MTBF_S.iter().all(|&m| m > 0.0));
+        assert!(STORM_SWEEP_RANKS.windows(2).all(|w| w[0] < w[1]));
+        assert!(STORM_MAX_FAILURES >= 2, "storms need repeated failures");
     }
 
     #[test]

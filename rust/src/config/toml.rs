@@ -212,6 +212,18 @@ mod tests {
     use super::*;
 
     #[test]
+    fn scenario_strings_survive_verbatim() {
+        // Failure-timeline values (`failures = "proc@3:r5,node@7:r12"`) are
+        // plain strings to this layer: `@`, `:` and `,` inside the quotes
+        // must reach `config::apply` untouched for `fault::parse_failures`.
+        let doc = parse("failures = \"proc@3:r5,node@7:r12,proc@t1.25:r3\"\n").unwrap();
+        assert_eq!(
+            doc.get("", "failures").unwrap().as_str(),
+            Some("proc@3:r5,node@7:r12,proc@t1.25:r3")
+        );
+    }
+
+    #[test]
     fn parses_scalars_and_sections() {
         let doc = parse(
             r#"

@@ -22,6 +22,21 @@ pub enum DetectEvent {
     NodeDead { node: u32, at: SimTime },
 }
 
+impl DetectEvent {
+    /// Virtual time of the underlying death (the kill instant, before the
+    /// SIGCHLD/TCP-break delivery delay) — the spread to `Sim::now()` at
+    /// delivery is the raw detection latency. The recovery metrics layer
+    /// computes per-event latency from the injection-side kill record
+    /// instead (`TrialMetrics::record_failure`/`record_detect`), so this
+    /// accessor serves observers of the detect channel itself (tests,
+    /// latency audits).
+    pub fn at(&self) -> SimTime {
+        match self {
+            DetectEvent::RankDead { at, .. } | DetectEvent::NodeDead { at, .. } => *at,
+        }
+    }
+}
+
 /// Watch one MPI child process from its parent daemon. Spawns a monitor
 /// task on `observer`; on death, delivers `RankDead` after the SIGCHLD
 /// handling delay.
@@ -86,6 +101,7 @@ mod tests {
         let (e, at) = v[0];
         assert!(matches!(e, DetectEvent::RankDead { rank: 3, .. }));
         assert_eq!(at, 51_000_000); // kill at 50ms + 1ms SIGCHLD
+        assert_eq!(e.at().nanos(), 50_000_000, "event carries the kill time");
     }
 
     #[test]

@@ -1,89 +1,313 @@
-//! Fault injection (paper §4 "Emulating failures").
+//! Fault injection (paper §4 "Emulating failures"), generalized to
+//! multi-failure *scenarios*.
 //!
-//! A single process or node failure per run, at a seeded-random iteration of
-//! the main loop and a seeded-random victim rank. The draw depends only on
-//! `(seed, trial)` — *not* on the recovery approach — so CR, ULFM and
-//! Reinit++ face the identical failure, as in the paper's methodology.
+//! The paper injects exactly one process or node failure per run, at a
+//! seeded-random iteration and victim. This module keeps that mode
+//! bit-compatible (same RNG stream, same draw order) and generalizes it to
+//! a **failure timeline**: an ordered sequence of `FaultEvent`s, each
+//! anchored either at a main-loop *iteration* (fires at the start of that
+//! iteration, exactly like the paper's model) or at a *virtual time*
+//! (fires whenever the clock reaches it — including inside a recovery or
+//! checkpoint window, which is where ReStore-style repeated-failure
+//! scenarios become interesting).
+//!
+//! Timelines come from one of three sources, in priority order:
+//! 1. an explicit scenario (`failures=proc@3:r5,node@7:r12,proc@t1.25:r3`),
+//! 2. an MTBF arrival process (`mtbf_s=4` — exponential inter-arrival over
+//!    virtual time, victims uniform, kind = `failure=`), or
+//! 3. the paper's single seeded draw (`failure=process|node`).
+//!
+//! Every draw depends only on `(seed, trial)` — *not* on the recovery
+//! approach — so CR, ULFM and Reinit++ face identical failure sequences,
+//! as in the paper's methodology.
 
-use std::cell::Cell;
+use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::config::{ExperimentConfig, FailureKind};
 use crate::sim::rng::Rng;
 
-/// The failure one trial will inject.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct FaultPlan {
+/// Where on the trial's axis a fault event fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAnchor {
+    /// Start of this main-loop iteration (0-based), the paper's model.
+    /// Tolerates rollback: a re-executed iteration does not re-fire.
+    Iteration(u32),
+    /// Virtual time in seconds *after application start* (the paper times
+    /// the application, not the mpirun submission) — may land mid-recovery,
+    /// mid-checkpoint, or during a CR re-deploy (then it hits dead air).
+    Time(f64),
+}
+
+/// One planned failure.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
     pub kind: FailureKind,
-    /// Main-loop iteration (0-based) at whose start the victim dies.
-    pub iteration: u32,
-    /// Victim rank. For node failures the victim's *node* dies (the rank
-    /// SIGKILLs its parent daemon, per the paper).
+    pub anchor: FaultAnchor,
+    /// Victim rank. For node failures the node *currently hosting* this
+    /// rank dies (the rank SIGKILLs its parent daemon, per the paper).
     pub rank: u32,
 }
 
-impl FaultPlan {
-    /// Draw the failure for `(cfg.seed, trial)`.
-    pub fn draw(cfg: &ExperimentConfig, trial: u32) -> FaultPlan {
-        let mut rng = Rng::new(cfg.seed)
-            .fork("fault-injection")
-            .fork(&format!("trial{trial}"));
+impl FaultEvent {
+    /// Parse one scenario token: `proc@3:r5` (iteration-anchored process
+    /// failure of rank 5 at iteration 3), `node@7:r12`, `proc@t1.25:r3`
+    /// (virtual-time-anchored at 1.25 s).
+    pub fn parse(tok: &str) -> Result<FaultEvent, String> {
+        let err = |m: &str| format!("failure event `{tok}`: {m} (expected kind@anchor:rN, e.g. proc@3:r5 or node@t1.25:r12)");
+        let (kind_s, rest) = tok.split_once('@').ok_or_else(|| err("missing `@`"))?;
+        let kind = match kind_s.to_ascii_lowercase().as_str() {
+            "proc" | "process" => FailureKind::Process,
+            "node" => FailureKind::Node,
+            _ => return Err(err("kind must be proc or node")),
+        };
+        let (at_s, rank_s) = rest.split_once(':').ok_or_else(|| err("missing `:rN` victim"))?;
+        let anchor = if let Some(t) = at_s.strip_prefix('t') {
+            let secs: f64 = t.parse().map_err(|_| err("bad virtual-time anchor"))?;
+            if !(secs > 0.0 && secs.is_finite()) {
+                return Err(err("time anchor must be finite and > 0"));
+            }
+            FaultAnchor::Time(secs)
+        } else {
+            FaultAnchor::Iteration(at_s.parse().map_err(|_| err("bad iteration anchor"))?)
+        };
+        let rank: u32 = rank_s
+            .strip_prefix('r')
+            .ok_or_else(|| err("victim must be rN"))?
+            .parse()
+            .map_err(|_| err("bad victim rank"))?;
+        Ok(FaultEvent { kind, anchor, rank })
+    }
+}
+
+impl std::fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.kind {
+            FailureKind::Process => "proc",
+            FailureKind::Node => "node",
+            FailureKind::None => "none",
+        };
+        match self.anchor {
+            FaultAnchor::Iteration(i) => write!(f, "{kind}@{i}:r{}", self.rank),
+            FaultAnchor::Time(t) => write!(f, "{kind}@t{t}:r{}", self.rank),
+        }
+    }
+}
+
+/// Parse a comma-separated scenario list; empty or `none` clears.
+pub fn parse_failures(s: &str) -> Result<Vec<FaultEvent>, String> {
+    let s = s.trim();
+    if s.is_empty() || s.eq_ignore_ascii_case("none") {
+        return Ok(Vec::new());
+    }
+    s.split(',').map(|tok| FaultEvent::parse(tok.trim())).collect()
+}
+
+/// The ordered failure plan of one trial.
+#[derive(Clone, Debug, Default)]
+pub struct FaultTimeline {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultTimeline {
+    /// Build the timeline for `(cfg.seed, trial)`. Deterministic and
+    /// independent of `cfg.recovery` (asserted by tests).
+    pub fn plan(cfg: &ExperimentConfig, trial: u32) -> FaultTimeline {
+        if !cfg.failures.is_empty() {
+            return FaultTimeline {
+                events: cfg.failures.clone(),
+            };
+        }
+        if cfg.mtbf_s > 0.0 {
+            return Self::plan_mtbf(cfg, trial);
+        }
+        if cfg.failure == FailureKind::None {
+            return FaultTimeline::default();
+        }
+        // The paper's single-shot mode: one seeded (iteration, rank) draw.
+        // Stream and draw order are bit-compatible with the original
+        // `FaultPlan::draw`, so single-failure experiments replay exactly.
+        let mut rng = fault_rng(cfg.seed, trial);
         // Iteration in [1, iters-1): at least one checkpoint exists and the
-        // failure lands strictly inside the run.
-        let span = cfg.iters.saturating_sub(2).max(1);
-        let iteration = 1 + (rng.gen_range(span as u64) as u32);
+        // failure lands strictly inside the run. Well-formed only for
+        // iters >= 3 — smaller values are rejected by config validation
+        // (the seed's `.max(1)` clamp silently drew iteration == iters-1
+        // at iters == 2).
+        assert!(
+            cfg.iters >= 3,
+            "failure injection needs iters >= 3 (enforced by config validation)"
+        );
+        let span = (cfg.iters - 2) as u64;
+        let iteration = 1 + (rng.gen_range(span) as u32);
         let rank = rng.gen_range(cfg.ranks as u64) as u32;
-        FaultPlan {
-            kind: cfg.failure,
-            iteration,
-            rank,
+        FaultTimeline {
+            events: vec![FaultEvent {
+                kind: cfg.failure,
+                anchor: FaultAnchor::Iteration(iteration),
+                rank,
+            }],
         }
     }
 
-    pub fn none() -> FaultPlan {
-        FaultPlan {
-            kind: FailureKind::None,
-            iteration: u32::MAX,
-            rank: u32::MAX,
+    /// MTBF arrival process: exponential inter-arrival times over virtual
+    /// time with mean `mtbf_s`, up to `max_failures` events; victims are
+    /// uniform over ranks, kind is `cfg.failure`. Events past the job's end
+    /// simply never fire (the job released the allocation).
+    fn plan_mtbf(cfg: &ExperimentConfig, trial: u32) -> FaultTimeline {
+        let mut rng = fault_rng(cfg.seed, trial);
+        let mut t = 0.0f64;
+        let mut events = Vec::with_capacity(cfg.max_failures as usize);
+        for _ in 0..cfg.max_failures {
+            // inverse-CDF draw; clamp keeps two arrivals from colliding on
+            // the exact same instant when u ~ 0
+            let u = rng.gen_f64();
+            t += (cfg.mtbf_s * -(1.0 - u).ln()).max(1e-6);
+            let rank = rng.gen_range(cfg.ranks as u64) as u32;
+            events.push(FaultEvent {
+                kind: cfg.failure,
+                anchor: FaultAnchor::Time(t),
+                rank,
+            });
         }
+        FaultTimeline { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
     }
 }
 
-/// One-shot trigger shared by all rank tasks of a trial: fires at most once
-/// even though the victim's iteration is re-executed after recovery.
+/// The failure-injection RNG stream for `(seed, trial)` — forked by label,
+/// so it is stable under code reordering and shared by all draw modes.
+fn fault_rng(seed: u64, trial: u32) -> Rng {
+    Rng::new(seed)
+        .fork("fault-injection")
+        .fork(&format!("trial{trial}"))
+}
+
+/// What became of one planned event after the trial ran.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultOutcome {
+    pub event: FaultEvent,
+    /// The event killed a live victim.
+    pub fired: bool,
+    /// The event's instant arrived but hit dead air: victim already dead,
+    /// the job between deployments, or the job already complete.
+    pub noop: bool,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+enum FireState {
+    #[default]
+    Unfired,
+    Fired,
+    Noop,
+}
+
+/// Shared firing state over a trial's timeline. One cursor is cloned into
+/// every rank task (iteration-anchored events fire from the main loop,
+/// exactly once each, tolerating post-rollback re-execution) and into the
+/// scheduled virtual-time killers.
 #[derive(Clone)]
-pub struct FaultTrigger {
-    plan: FaultPlan,
-    fired: Rc<Cell<bool>>,
+pub struct TimelineCursor {
+    events: Rc<Vec<FaultEvent>>,
+    state: Rc<RefCell<Vec<FireState>>>,
 }
 
-impl FaultTrigger {
-    pub fn new(plan: FaultPlan) -> Self {
-        FaultTrigger {
-            plan,
-            fired: Rc::new(Cell::new(false)),
+impl TimelineCursor {
+    pub fn new(timeline: FaultTimeline) -> TimelineCursor {
+        let n = timeline.events.len();
+        TimelineCursor {
+            events: Rc::new(timeline.events),
+            state: Rc::new(RefCell::new(vec![FireState::Unfired; n])),
         }
     }
 
-    pub fn plan(&self) -> FaultPlan {
-        self.plan
+    pub fn len(&self) -> usize {
+        self.events.len()
     }
 
-    /// Should `rank` die at the start of `iteration`? Consumes the trigger
-    /// on the first true.
-    pub fn should_fire(&self, rank: u32, iteration: u32) -> bool {
-        if self.fired.get() || self.plan.kind == FailureKind::None {
-            return false;
-        }
-        if rank == self.plan.rank && iteration == self.plan.iteration {
-            self.fired.set(true);
-            return true;
-        }
-        false
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
     }
 
-    pub fn has_fired(&self) -> bool {
-        self.fired.get()
+    pub fn event(&self, idx: usize) -> FaultEvent {
+        self.events[idx]
+    }
+
+    /// `(index, seconds)` of every virtual-time-anchored event; the trial
+    /// driver schedules each exactly once at trial start.
+    pub fn time_schedule(&self) -> Vec<(usize, f64)> {
+        self.events
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| match e.anchor {
+                FaultAnchor::Time(t) => Some((i, t)),
+                FaultAnchor::Iteration(_) => None,
+            })
+            .collect()
+    }
+
+    /// Should `rank` die at the start of `iteration`? Consumes the matching
+    /// event on the first true: a re-executed iteration after rollback (or a
+    /// CR re-deploy) does not re-kill. Events are matched independently of
+    /// list order so interleaved rollbacks cannot starve a later event.
+    pub fn should_fire(&self, rank: u32, iteration: u32) -> Option<FaultEvent> {
+        if self.events.is_empty() {
+            return None;
+        }
+        let mut state = self.state.borrow_mut();
+        for (i, ev) in self.events.iter().enumerate() {
+            if state[i] != FireState::Unfired {
+                continue;
+            }
+            if let FaultAnchor::Iteration(it) = ev.anchor {
+                if it == iteration && ev.rank == rank {
+                    state[i] = FireState::Fired;
+                    return Some(*ev);
+                }
+            }
+        }
+        None
+    }
+
+    pub fn mark_fired(&self, idx: usize) {
+        self.state.borrow_mut()[idx] = FireState::Fired;
+    }
+
+    pub fn mark_noop(&self, idx: usize) {
+        self.state.borrow_mut()[idx] = FireState::Noop;
+    }
+
+    /// Did any event actually kill something yet? (Gates rollback-path
+    /// behaviour in the rank driver: resume accounting, replica rebuild.)
+    pub fn any_fired(&self) -> bool {
+        self.state.borrow().iter().any(|&s| s == FireState::Fired)
+    }
+
+    pub fn fired_count(&self) -> u32 {
+        self.state
+            .borrow()
+            .iter()
+            .filter(|&&s| s == FireState::Fired)
+            .count() as u32
+    }
+
+    pub fn outcomes(&self) -> Vec<FaultOutcome> {
+        let state = self.state.borrow();
+        self.events
+            .iter()
+            .zip(state.iter())
+            .map(|(e, s)| FaultOutcome {
+                event: *e,
+                fired: *s == FireState::Fired,
+                noop: *s == FireState::Noop,
+            })
+            .collect()
     }
 }
 
@@ -100,31 +324,66 @@ mod tests {
         c
     }
 
+    fn single(t: &FaultTimeline) -> FaultEvent {
+        assert_eq!(t.events.len(), 1);
+        t.events[0]
+    }
+
     #[test]
-    fn draw_is_deterministic_and_recovery_independent() {
+    fn single_draw_is_deterministic_and_recovery_independent() {
         let mut a = cfg(7);
         a.recovery = RecoveryKind::Cr;
         let mut b = cfg(7);
         b.recovery = RecoveryKind::Reinit;
-        assert_eq!(FaultPlan::draw(&a, 0), FaultPlan::draw(&b, 0));
+        assert_eq!(
+            single(&FaultTimeline::plan(&a, 0)),
+            single(&FaultTimeline::plan(&b, 0))
+        );
     }
 
     #[test]
     fn trials_differ() {
         let c = cfg(7);
-        let p0 = FaultPlan::draw(&c, 0);
-        let p1 = FaultPlan::draw(&c, 1);
-        assert!(p0 != p1, "different trials draw different failures");
+        assert_ne!(
+            single(&FaultTimeline::plan(&c, 0)),
+            single(&FaultTimeline::plan(&c, 1)),
+            "different trials draw different failures"
+        );
     }
 
     #[test]
-    fn iteration_in_valid_window() {
+    fn single_draw_iteration_in_valid_window() {
         let c = cfg(3);
         for trial in 0..50 {
-            let p = FaultPlan::draw(&c, trial);
-            assert!(p.iteration >= 1 && p.iteration < c.iters - 1, "{p:?}");
-            assert!(p.rank < c.ranks);
+            let e = single(&FaultTimeline::plan(&c, trial));
+            let FaultAnchor::Iteration(it) = e.anchor else {
+                panic!("single mode is iteration-anchored");
+            };
+            assert!(it >= 1 && it < c.iters - 1, "{e:?}");
+            assert!(e.rank < c.ranks);
         }
+    }
+
+    #[test]
+    fn single_draw_window_holds_at_minimum_iters() {
+        // Satellite regression: the seed's `.max(1)` clamp made iters=2 draw
+        // iteration 1 == iters-1, outside [1, iters-1). iters < 3 is now a
+        // config-validation error; at the iters=3 minimum the window is the
+        // singleton {1}.
+        let mut c = cfg(5);
+        c.iters = 3;
+        for trial in 0..20 {
+            let e = single(&FaultTimeline::plan(&c, trial));
+            assert_eq!(e.anchor, FaultAnchor::Iteration(1));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "iters >= 3")]
+    fn single_draw_rejects_tiny_iters() {
+        let mut c = cfg(5);
+        c.iters = 2;
+        let _ = FaultTimeline::plan(&c, 0);
     }
 
     #[test]
@@ -132,31 +391,147 @@ mod tests {
         let c = cfg(11);
         let mut hit = std::collections::HashSet::new();
         for trial in 0..300 {
-            hit.insert(FaultPlan::draw(&c, trial).rank);
+            hit.insert(single(&FaultTimeline::plan(&c, trial)).rank);
         }
         assert!(hit.len() > 32, "injection spreads across ranks: {}", hit.len());
     }
 
     #[test]
-    fn trigger_fires_exactly_once() {
-        let t = FaultTrigger::new(FaultPlan {
-            kind: FailureKind::Process,
-            iteration: 3,
-            rank: 5,
-        });
-        assert!(!t.should_fire(5, 2));
-        assert!(!t.should_fire(4, 3));
-        assert!(t.should_fire(5, 3));
-        assert!(t.has_fired());
-        // re-execution of iteration 3 after recovery must not re-kill
-        assert!(!t.should_fire(5, 3));
+    fn none_plan_is_empty() {
+        let mut c = cfg(1);
+        c.failure = FailureKind::None;
+        assert!(FaultTimeline::plan(&c, 0).is_empty());
+        let t = TimelineCursor::new(FaultTimeline::plan(&c, 0));
+        for i in 0..10 {
+            assert!(t.should_fire(i, i).is_none());
+        }
+        assert!(!t.any_fired());
     }
 
     #[test]
-    fn none_plan_never_fires() {
-        let t = FaultTrigger::new(FaultPlan::none());
-        for i in 0..10 {
-            assert!(!t.should_fire(i, i));
+    fn event_parse_display_roundtrip() {
+        for s in ["proc@3:r5", "node@7:r12", "proc@t1.25:r3", "node@t0.5:r0"] {
+            let e = FaultEvent::parse(s).unwrap();
+            assert_eq!(e.to_string(), s);
         }
+        assert_eq!(
+            FaultEvent::parse("process@2:r1").unwrap().kind,
+            FailureKind::Process
+        );
+        for bad in [
+            "proc3:r5",     // no @
+            "proc@3",       // no victim
+            "proc@3:5",     // victim missing r
+            "warp@3:r5",    // unknown kind
+            "proc@t-1:r5",  // negative time
+            "proc@tx:r5",   // unparsable time
+            "proc@:r5",     // empty anchor
+            "none@3:r5",    // kind none is not injectable
+        ] {
+            assert!(FaultEvent::parse(bad).is_err(), "{bad} must not parse");
+        }
+    }
+
+    #[test]
+    fn parse_failures_list_and_clear() {
+        let v = parse_failures("proc@3:r5, node@7:r12,proc@t1.5:r0").unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[1].kind, FailureKind::Node);
+        assert_eq!(v[2].anchor, FaultAnchor::Time(1.5));
+        assert!(parse_failures("none").unwrap().is_empty());
+        assert!(parse_failures("").unwrap().is_empty());
+        assert!(parse_failures("proc@3:r5,bogus").is_err());
+    }
+
+    #[test]
+    fn explicit_scenario_overrides_single_mode() {
+        let mut c = cfg(9);
+        c.failures = parse_failures("proc@2:r1,node@5:r6").unwrap();
+        let t = FaultTimeline::plan(&c, 0);
+        assert_eq!(t.events, c.failures);
+        // identical for every trial (explicit scenarios are not re-drawn)
+        assert_eq!(FaultTimeline::plan(&c, 3).events, c.failures);
+    }
+
+    #[test]
+    fn mtbf_draw_is_deterministic_and_recovery_independent() {
+        let mut a = cfg(13);
+        a.mtbf_s = 2.5;
+        a.max_failures = 5;
+        a.recovery = RecoveryKind::Cr;
+        let mut b = a.clone();
+        b.recovery = RecoveryKind::Ulfm;
+        let ta = FaultTimeline::plan(&a, 2);
+        let tb = FaultTimeline::plan(&b, 2);
+        assert_eq!(ta.events, tb.events, "MTBF draw must ignore recovery");
+        assert_eq!(ta.len(), 5);
+        // arrivals strictly increase and victims are in range
+        let mut prev = 0.0;
+        for e in &ta.events {
+            let FaultAnchor::Time(t) = e.anchor else {
+                panic!("MTBF events are time-anchored");
+            };
+            assert!(t > prev, "arrivals must strictly increase");
+            prev = t;
+            assert!(e.rank < a.ranks);
+            assert_eq!(e.kind, a.failure);
+        }
+        // different trials draw different storms
+        assert_ne!(FaultTimeline::plan(&a, 0).events, ta.events);
+    }
+
+    #[test]
+    fn mtbf_mean_roughly_matches() {
+        let mut c = cfg(21);
+        c.mtbf_s = 3.0;
+        c.max_failures = 40;
+        let mut total = 0.0;
+        let trials = 200;
+        for trial in 0..trials {
+            let t = FaultTimeline::plan(&c, trial);
+            let FaultAnchor::Time(last) = t.events.last().unwrap().anchor else {
+                unreachable!()
+            };
+            total += last / c.max_failures as f64;
+        }
+        let mean = total / trials as f64;
+        assert!(
+            (mean - 3.0).abs() < 0.3,
+            "mean inter-arrival ≈ mtbf_s: {mean}"
+        );
+    }
+
+    #[test]
+    fn cursor_fires_each_event_once_tolerating_reexecution() {
+        let t = TimelineCursor::new(FaultTimeline {
+            events: parse_failures("proc@3:r5,proc@4:r2").unwrap(),
+        });
+        assert!(t.should_fire(5, 2).is_none());
+        assert!(t.should_fire(4, 3).is_none());
+        assert!(t.should_fire(5, 3).is_some());
+        assert!(t.any_fired());
+        // rollback re-executes iteration 3: no re-kill
+        assert!(t.should_fire(5, 3).is_none());
+        // second event fires when its (rank, iteration) comes around
+        assert!(t.should_fire(2, 4).is_some());
+        assert!(t.should_fire(2, 4).is_none());
+        assert_eq!(t.fired_count(), 2);
+        let outs = t.outcomes();
+        assert!(outs.iter().all(|o| o.fired && !o.noop));
+    }
+
+    #[test]
+    fn cursor_time_schedule_and_noop_accounting() {
+        let t = TimelineCursor::new(FaultTimeline {
+            events: parse_failures("proc@t0.5:r1,proc@2:r0,node@t2.5:r3").unwrap(),
+        });
+        assert_eq!(t.time_schedule(), vec![(0, 0.5), (2, 2.5)]);
+        t.mark_fired(0);
+        t.mark_noop(2);
+        assert_eq!(t.fired_count(), 1);
+        let outs = t.outcomes();
+        assert!(outs[0].fired && !outs[0].noop);
+        assert!(!outs[2].fired && outs[2].noop);
+        assert!(!outs[1].fired && !outs[1].noop, "iteration event untouched");
     }
 }

@@ -12,12 +12,14 @@
 mod figures;
 mod pool;
 mod scale;
+mod storm;
 mod tables;
 mod tiers;
 
 pub use figures::{fig4, fig5, fig6, fig7, print_points, write_csv, SweepOpts};
 pub use pool::{default_jobs, run_trials, TrialOut, TrialSpec};
 pub use scale::scale_sweep;
+pub use storm::storm_sweep;
 pub use tables::{print_table1, print_table2};
 pub use tiers::tier_sweep;
 
@@ -33,6 +35,18 @@ pub struct Point {
     pub ckpt_read: Summary,
     pub recovery: Summary,
     pub app: Summary,
+    /// Per-trial *sums* over the per-failure-event segments (multi-failure
+    /// decomposition; all zero in fault-free runs). `event_recovery` is the
+    /// per-event analogue of `recovery`, which stays the paper's aggregate
+    /// first-failure → last-resume window.
+    pub detect: Summary,
+    pub event_recovery: Summary,
+    pub rollback: Summary,
+    /// Mean number of fired failures per trial (storms: events can also
+    /// hit dead air and fire as no-ops).
+    pub failures: f64,
+    /// Mean number of degraded (spare-exhausted) re-deploys per trial.
+    pub degraded: f64,
     /// Mean per-trial storage traffic (per-tier + shared-disk counters).
     pub storage: StorageMeans,
     /// Host seconds of trial compute attributed to this point (sum over its
@@ -50,6 +64,11 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
     let mut rd = Vec::with_capacity(outs.len());
     let mut rec = Vec::with_capacity(outs.len());
     let mut app = Vec::with_capacity(outs.len());
+    let mut detect: Vec<f64> = Vec::with_capacity(outs.len());
+    let mut ev_rec: Vec<f64> = Vec::with_capacity(outs.len());
+    let mut rollback: Vec<f64> = Vec::with_capacity(outs.len());
+    let mut fired = 0u32;
+    let mut degraded = 0u32;
     let mut storage = Vec::with_capacity(outs.len());
     for o in outs {
         assert!(
@@ -62,8 +81,19 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
         rd.push(o.result.breakdown.ckpt_read_s);
         rec.push(o.result.breakdown.mpi_recovery_s);
         app.push(o.result.breakdown.app_s());
+        detect.push(o.result.segments.iter().map(|s| s.detect_s).sum());
+        ev_rec.push(o.result.segments.iter().map(|s| s.recovery_s).sum());
+        rollback.push(o.result.segments.iter().map(|s| s.rollback_s).sum());
+        fired += o.result.faults.iter().filter(|f| f.fired).count() as u32;
+        degraded += o
+            .result
+            .segments
+            .iter()
+            .filter(|s| s.degraded_redeploy)
+            .count() as u32;
         storage.push(o.result.storage);
     }
+    let n = outs.len().max(1) as f64;
     Point {
         cfg: cfg.clone(),
         total: mean_ci95(&total),
@@ -71,6 +101,11 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
         ckpt_read: mean_ci95(&rd),
         recovery: mean_ci95(&rec),
         app: mean_ci95(&app),
+        detect: mean_ci95(&detect),
+        event_recovery: mean_ci95(&ev_rec),
+        rollback: mean_ci95(&rollback),
+        failures: fired as f64 / n,
+        degraded: degraded as f64 / n,
         storage: StorageMeans::from_trials(&storage),
         wall_s: outs.iter().map(|o| o.host_s).sum(),
     }

@@ -1,0 +1,263 @@
+//! Failure-storm sweep (`reinitpp storm`): MTBF × recovery × ranks.
+//!
+//! The paper evaluates every recovery method under exactly one failure per
+//! run; ReStore (arXiv 2203.01107) argues repeated failures — including
+//! failures landing *inside* a prior recovery — are where recovery schemes
+//! actually differentiate, and Shrink-or-Substitute (arXiv 1810.00705)
+//! treats spare-pool exhaustion as a first-class scenario. This sweep runs
+//! an exponential MTBF arrival process (`fault::FaultTimeline`) over
+//! virtual time against all three recoveries: per point it reports how many
+//! failures actually landed, the per-event detect / recovery / rollback
+//! sums, and how often in-place recovery degraded to a CR-style re-deploy.
+//!
+//! Expected shape: at the generous end of the MTBF grid most trials see at
+//! most one failure; as MTBF tightens below the recovery-cost anchors
+//! (Reinit++ ≈0.5 s, CR ≈3 s re-deploy) each failure's recovery window
+//! attracts the next failure — CR's total time compounds (every event costs
+//! a full re-deploy, and arrivals land during the relaunch itself) while
+//! Reinit++ absorbs the same storm with per-event in-place recoveries.
+//! MTBF is measured on the application clock (arrivals start at the end of
+//! the first mpirun launch), matching the paper's timing convention.
+//!
+//! Like every harness sweep, the grid is flattened to (point, trial) work
+//! items for the pool and merged deterministically, so `storm_compare.csv`
+//! is byte-identical for any `--jobs` value (pinned by the unit test below
+//! and a serial-vs-2-worker `cmp` in CI).
+
+use super::figures::{cell, SweepOpts};
+use super::{run_points, Point};
+use crate::config::{presets, ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
+
+/// Rank counts the storm sweep visits (capped by `--max-ranks`).
+fn sweep_ranks(max: u32) -> Vec<u32> {
+    presets::STORM_SWEEP_RANKS
+        .iter()
+        .copied()
+        .filter(|&r| r <= max)
+        .collect()
+}
+
+/// Build the sweep grid: MTBF × recovery × ranks, process-failure storms,
+/// modeled fidelity (storm trials re-execute many iterations).
+fn build_grid(
+    base: &ExperimentConfig,
+    opts: &SweepOpts,
+) -> Result<Vec<ExperimentConfig>, String> {
+    if base.fidelity != Fidelity::Modeled {
+        return Err(
+            "storm: the sweep runs fidelity=modeled (storms re-execute many \
+             iterations); drop fidelity="
+                .to_string(),
+        );
+    }
+    let mut cfgs = Vec::new();
+    for &ranks in &sweep_ranks(opts.max_ranks) {
+        for rk in RecoveryKind::ALL {
+            for &mtbf in &presets::STORM_SWEEP_MTBF_S {
+                let mut c = base.clone();
+                c.ranks = ranks;
+                c.recovery = rk;
+                c.failure = FailureKind::Process;
+                c.mtbf_s = mtbf;
+                c.ckpt = None; // Table 2 policy per method
+                c.validate().map_err(|e| {
+                    format!("storm sweep point ranks={ranks} recovery={rk} mtbf={mtbf}: {e}")
+                })?;
+                cfgs.push(c);
+            }
+        }
+    }
+    if cfgs.is_empty() {
+        return Err(format!(
+            "storm sweep: no rank count of {:?} fits --max-ranks {}",
+            presets::STORM_SWEEP_RANKS,
+            opts.max_ranks
+        ));
+    }
+    Ok(cfgs)
+}
+
+/// Run the failure-storm sweep: markdown table on stdout, CSV under
+/// `outdir/storm_compare.csv`.
+pub fn storm_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Point>, String> {
+    let cfgs = build_grid(base, opts)?;
+    let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
+    eprintln!(
+        "  storm sweep: {} points / {trials} trials (MTBF {:?} s, <= {} failures/trial) on {} worker(s)...",
+        cfgs.len(),
+        presets::STORM_SWEEP_MTBF_S,
+        base.max_failures,
+        opts.jobs
+    );
+    let (points, stats) = run_points(&cfgs, opts.jobs);
+    eprintln!(
+        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
+        stats.wall_s,
+        stats.trials_per_sec(),
+        stats.utilization() * 100.0
+    );
+
+    println!(
+        "\n## Failure storms ({}): MTBF arrival process, per-event recovery\n",
+        base.app
+    );
+    println!(
+        "| ranks | recovery | mtbf (s) | failures | total (s) | detect (s) | \
+         recovery (s) | rollback (s) | degraded |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|");
+    for p in &points {
+        println!(
+            "| {} | {} | {} | {:.1} | {} | {} | {} | {} | {:.1} |",
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.mtbf_s,
+            p.failures,
+            cell(&p.total),
+            cell(&p.detect),
+            cell(&p.event_recovery),
+            cell(&p.rollback),
+            p.degraded,
+        );
+    }
+    println!("\n(expected shape: tighter MTBF -> more fired failures; CR pays a full");
+    println!(" re-deploy per event while Reinit++ recovers in place each time —");
+    println!(" see EXPERIMENTS.md §Failure storms)");
+
+    // The generic figure CSV shape is not used here: storm points need the
+    // per-event decomposition columns, not the single-failure breakdown.
+    if let Err(e) = write_storm_csv(&opts.outdir, &points) {
+        eprintln!("WARN: could not write storm_compare.csv: {e}");
+    }
+    Ok(points)
+}
+
+/// `storm_compare.csv`: one row per (ranks, recovery, mtbf) point, with the
+/// per-event decomposition columns.
+fn write_storm_csv(outdir: &str, points: &[Point]) -> std::io::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    let mut s = String::from(
+        "app,ranks,recovery,mtbf_s,max_failures,failures,degraded,\
+         total_s,total_ci,detect_s,detect_ci,recovery_s,recovery_ci,\
+         rollback_s,rollback_ci,ckpt_write_s,ckpt_read_s,app_s,trials\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            p.cfg.app,
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.mtbf_s,
+            p.cfg.max_failures,
+            p.failures,
+            p.degraded,
+            p.total.mean,
+            p.total.ci95,
+            p.detect.mean,
+            p.detect.ci95,
+            p.event_recovery.mean,
+            p.event_recovery.ci95,
+            p.rollback.mean,
+            p.rollback.ci95,
+            p.ckpt_write.mean,
+            p.ckpt_read.mean,
+            p.app.mean,
+            p.total.n,
+        ));
+    }
+    std::fs::write(format!("{outdir}/storm_compare.csv"), s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AppKind;
+
+    fn quick_base() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.app = AppKind::Hpccg;
+        c.trials = 2;
+        c.iters = 20;
+        c.fidelity = Fidelity::Modeled;
+        c.hpccg_nx = 4;
+        c.max_failures = presets::STORM_MAX_FAILURES;
+        // paper-scale virtual iteration cost (see presets::STORM_COMPUTE_SCALE):
+        // without it the app clock is microseconds and no MTBF arrival lands
+        c.calib.modeled_compute_scale = presets::STORM_COMPUTE_SCALE;
+        c
+    }
+
+    #[test]
+    fn grid_shape() {
+        let opts = SweepOpts {
+            max_ranks: 256,
+            outdir: "/tmp/reinitpp-test-results".into(),
+            jobs: 1,
+        };
+        let cfgs = build_grid(&quick_base(), &opts).unwrap();
+        assert_eq!(
+            cfgs.len(),
+            presets::STORM_SWEEP_RANKS.len() * 3 * presets::STORM_SWEEP_MTBF_S.len()
+        );
+        assert!(cfgs
+            .iter()
+            .all(|c| c.failure == FailureKind::Process && c.mtbf_s > 0.0));
+    }
+
+    #[test]
+    fn non_modeled_fidelity_is_rejected() {
+        let mut base = quick_base();
+        base.fidelity = Fidelity::Auto;
+        let err = build_grid(&base, &SweepOpts::default()).unwrap_err();
+        assert!(err.contains("modeled"), "{err}");
+    }
+
+    #[test]
+    fn storm_sweep_runs_and_is_jobs_deterministic() {
+        // The smallest rung, serial vs 2 workers: identical Points and
+        // therefore identical storm_compare.csv bytes.
+        let base = quick_base();
+        let mk = |jobs, outdir: &str| SweepOpts {
+            max_ranks: 16,
+            outdir: outdir.into(),
+            jobs,
+        };
+        let serial =
+            storm_sweep(&base, &mk(1, "/tmp/reinitpp-test-results/storm-j1")).unwrap();
+        let par = storm_sweep(&base, &mk(2, "/tmp/reinitpp-test-results/storm-j2")).unwrap();
+        assert_eq!(serial.len(), 9, "16 ranks x 3 recoveries x 3 MTBFs");
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.cfg.recovery, b.cfg.recovery);
+            assert_eq!(a.total, b.total);
+            assert_eq!(a.detect, b.detect);
+            assert_eq!(a.event_recovery, b.event_recovery);
+            assert_eq!(a.rollback, b.rollback);
+            assert_eq!(a.failures, b.failures);
+        }
+        let j1 = std::fs::read("/tmp/reinitpp-test-results/storm-j1/storm_compare.csv")
+            .unwrap();
+        let j2 = std::fs::read("/tmp/reinitpp-test-results/storm-j2/storm_compare.csv")
+            .unwrap();
+        assert!(!j1.is_empty());
+        assert_eq!(j1, j2, "storm CSV bytes must not depend on worker count");
+        // storm shape: the tightest MTBF fires at least as many failures as
+        // the loosest, for the same recovery
+        let fired = |rk: RecoveryKind, mtbf: f64| {
+            serial
+                .iter()
+                .find(|p| p.cfg.recovery == rk && p.cfg.mtbf_s == mtbf)
+                .unwrap()
+                .failures
+        };
+        let tight = presets::STORM_SWEEP_MTBF_S[0];
+        let loose = *presets::STORM_SWEEP_MTBF_S.last().unwrap();
+        assert!(
+            fired(RecoveryKind::Reinit, tight) >= fired(RecoveryKind::Reinit, loose),
+            "tighter MTBF cannot fire fewer failures: {} vs {}",
+            fired(RecoveryKind::Reinit, tight),
+            fired(RecoveryKind::Reinit, loose)
+        );
+        // at least one storm point actually fired something
+        assert!(serial.iter().any(|p| p.failures > 0.0));
+    }
+}

@@ -11,16 +11,51 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::ckptstore::StorageStats;
+use crate::config::FailureKind;
 use crate::sim::{SimDuration, SimTime};
 
 /// Phase breakdown of one trial (paper §4 "Statistical evaluation"):
 /// total = app + ckpt_write + ckpt_read + mpi_recovery.
+///
+/// For multi-failure trials this stays the paper's *aggregate* view
+/// (`mpi_recovery_s` spans first failure to last resume); the per-event
+/// decomposition lives in [`FailureSegment`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Breakdown {
     pub total_s: f64,
     pub ckpt_write_s: f64,
     pub ckpt_read_s: f64,
     pub mpi_recovery_s: f64,
+}
+
+/// Per-failure-event phase decomposition: each fired fault gets its own
+/// detect / recovery / rollback accounting instead of the one aggregate
+/// window the paper's single-failure methodology needed.
+///
+/// - `detect_s`   — kill instant → the recovery layer learning of it
+///   (root receiving the SIGCHLD/TCP-break event, or the ULFM RTE
+///   issuing notifications).
+/// - `recovery_s` — detection → the slowest rank re-entering the user
+///   function (the paper's Fig. 6/7 metric, per event).
+/// - `rollback_s` — re-entry → the iteration frontier reaching its
+///   pre-failure high-water mark again (lost-work re-execution; ≈ one
+///   partial iteration at `ckpt_every=1`, real re-execution above it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureSegment {
+    pub kind: FailureKind,
+    pub victim: u32,
+    /// Virtual time of the kill, seconds since application start — the
+    /// same clock `FaultAnchor::Time` events are scheduled on.
+    pub fail_s: f64,
+    pub detect_s: f64,
+    pub recovery_s: f64,
+    pub rollback_s: f64,
+    /// A later failure arrived before this event's recovery completed:
+    /// the recovery was restarted and is accounted to the later segment.
+    pub interrupted: bool,
+    /// This node failure exhausted the spare pool: the in-place recovery
+    /// (Reinit++/ULFM) degraded to a CR-style full abort + re-deploy.
+    pub degraded_redeploy: bool,
 }
 
 impl Breakdown {
@@ -124,6 +159,20 @@ impl StorageMeans {
     }
 }
 
+/// Raw per-event record; finalized into a [`FailureSegment`].
+struct SegRaw {
+    kind: FailureKind,
+    victim: u32,
+    fail_at: SimTime,
+    detect_at: Option<SimTime>,
+    resume_at: Option<SimTime>, // max over ranks re-entering after this event
+    /// Iteration frontier (rank 0's last completed iteration) at the kill.
+    lost_iter: i64,
+    rollback_end: Option<SimTime>,
+    interrupted: bool,
+    degraded: bool,
+}
+
 struct Inner {
     job_start: SimTime,
     job_end: SimTime,
@@ -135,6 +184,10 @@ struct Inner {
     /// Extra recovery time outside the fail->resume window (CR: teardown
     /// and re-deploy happen between jobs; already inside the window).
     recovery_extra: SimDuration,
+    /// Per-failure-event raw segments, in kill order.
+    segs: Vec<SegRaw>,
+    /// Rank 0's completed-iteration high-water mark (-1 = none yet).
+    iter_high: i64,
 }
 
 /// Shared collector for one trial.
@@ -154,6 +207,8 @@ impl TrialMetrics {
                 ckpt_write: vec![SimDuration::ZERO; ranks as usize],
                 ckpt_read: vec![SimDuration::ZERO; ranks as usize],
                 recovery_extra: SimDuration::ZERO,
+                segs: Vec::new(),
+                iter_high: -1,
             })),
         }
     }
@@ -166,11 +221,64 @@ impl TrialMetrics {
         self.inner.borrow_mut().job_end = t;
     }
 
-    /// Record the failure instant (the kill).
-    pub fn record_failure(&self, t: SimTime) {
+    /// Record a failure instant (the kill). Opens a new per-event segment;
+    /// a still-recovering prior segment is closed as `interrupted` (the
+    /// restarted recovery is accounted to this event).
+    pub fn record_failure(&self, t: SimTime, kind: FailureKind, victim: u32) {
         let mut inner = self.inner.borrow_mut();
         if inner.fail_at.is_none() {
             inner.fail_at = Some(t);
+        }
+        if let Some(last) = inner.segs.last_mut() {
+            if last.resume_at.is_none() {
+                last.interrupted = true;
+            }
+        }
+        let lost_iter = inner.iter_high;
+        inner.segs.push(SegRaw {
+            kind,
+            victim,
+            fail_at: t,
+            detect_at: None,
+            resume_at: None,
+            lost_iter,
+            rollback_end: None,
+            interrupted: false,
+            degraded: false,
+        });
+    }
+
+    /// The recovery layer learned of a failure of this `kind` (root
+    /// received the detect event / the RTE issued notifications). Matched
+    /// to the oldest undetected segment *of the same kind*: process
+    /// (SIGCHLD, ~ms) and node (TCP break, ~400 ms) detections have very
+    /// different latencies, so closely-spaced mixed-kind failures must not
+    /// have their detect times attributed positionally.
+    pub fn record_detect(&self, t: SimTime, kind: FailureKind) {
+        let mut inner = self.inner.borrow_mut();
+        if let Some(seg) = inner
+            .segs
+            .iter_mut()
+            .find(|s| s.detect_at.is_none() && s.kind == kind)
+        {
+            seg.detect_at = Some(t);
+        }
+    }
+
+    /// The in-flight recovery degraded to a full abort + re-deploy
+    /// (spare-pool exhaustion). Attributed to the newest node-failure
+    /// segment: only node failures can exhaust the pool, and an unrelated
+    /// kill may have opened a newer segment inside the node-detection
+    /// window.
+    pub fn record_degrade(&self) {
+        let mut inner = self.inner.borrow_mut();
+        if let Some(seg) = inner
+            .segs
+            .iter_mut()
+            .rev()
+            .find(|s| s.kind == FailureKind::Node && !s.degraded)
+        {
+            seg.degraded = true;
         }
     }
 
@@ -182,6 +290,73 @@ impl TrialMetrics {
             None => t,
             Some(prev) => prev.max(t),
         });
+        if let Some(last) = inner.segs.last_mut() {
+            last.resume_at = Some(match last.resume_at {
+                None => t,
+                Some(prev) => prev.max(t),
+            });
+        }
+    }
+
+    /// Rank 0 completed `iter` at `t`: advances the iteration frontier and
+    /// closes any segment whose lost work has now been re-executed. The
+    /// close condition compares the *just-completed* iteration against the
+    /// segment's pre-failure frontier — the monotone high-water mark
+    /// already equals it at kill time, so testing the high-water would
+    /// close every segment on the first post-resume iteration and
+    /// undercount rollback whenever `ckpt_every > 1`.
+    pub fn record_iter_done(&self, iter: u32, t: SimTime) {
+        let mut inner = self.inner.borrow_mut();
+        inner.iter_high = inner.iter_high.max(iter as i64);
+        for seg in inner.segs.iter_mut() {
+            if seg.resume_at.is_some()
+                && seg.rollback_end.is_none()
+                && iter as i64 >= seg.lost_iter
+            {
+                seg.rollback_end = Some(t);
+            }
+        }
+    }
+
+    /// Finalize the per-event decomposition (kill order). Interrupted
+    /// segments report zero recovery/rollback — their restarted recovery is
+    /// accounted to the interrupting event's segment.
+    pub fn segments(&self) -> Vec<FailureSegment> {
+        let inner = self.inner.borrow();
+        inner
+            .segs
+            .iter()
+            .map(|s| {
+                let detect_s = s
+                    .detect_at
+                    .map(|d| d.saturating_sub(s.fail_at).secs_f64())
+                    .unwrap_or(0.0);
+                let recovery_s = match (s.resume_at, s.detect_at) {
+                    (Some(r), Some(d)) => r.saturating_sub(d).secs_f64(),
+                    (Some(r), None) => r.saturating_sub(s.fail_at).secs_f64(),
+                    _ => 0.0,
+                };
+                let rollback_s = match (s.rollback_end, s.resume_at) {
+                    (Some(e), Some(r)) => e.saturating_sub(r).secs_f64(),
+                    _ => 0.0,
+                };
+                FailureSegment {
+                    kind: s.kind,
+                    victim: s.victim,
+                    fail_s: s.fail_at.saturating_sub(inner.job_start).secs_f64(),
+                    detect_s,
+                    recovery_s,
+                    rollback_s,
+                    interrupted: s.interrupted,
+                    degraded_redeploy: s.degraded,
+                }
+            })
+            .collect()
+    }
+
+    /// Number of recorded failure events (fired kills).
+    pub fn failure_count(&self) -> usize {
+        self.inner.borrow().segs.len()
     }
 
     pub fn add_ckpt_write(&self, rank: u32, d: SimDuration) {
@@ -239,7 +414,7 @@ mod tests {
         let m = TrialMetrics::new(2);
         m.set_job_start(SimTime(0));
         m.set_job_end(SimTime(10_000_000_000)); // 10 s
-        m.record_failure(SimTime(4_000_000_000));
+        m.record_failure(SimTime(4_000_000_000), FailureKind::Process, 1);
         m.record_resume(SimTime(4_500_000_000));
         m.record_resume(SimTime(4_400_000_000)); // earlier rank: ignored
         m.add_ckpt_write(0, SimDuration::from_millis(300));
@@ -307,8 +482,91 @@ mod tests {
     #[test]
     fn first_failure_time_sticks() {
         let m = TrialMetrics::new(1);
-        m.record_failure(SimTime(100));
-        m.record_failure(SimTime(200));
+        m.record_failure(SimTime(100), FailureKind::Process, 0);
+        m.record_failure(SimTime(200), FailureKind::Node, 3);
         assert_eq!(m.fail_at(), Some(SimTime(100)));
+        assert_eq!(m.failure_count(), 2);
+    }
+
+    #[test]
+    fn segments_decompose_per_event() {
+        const S: u64 = 1_000_000_000;
+        let m = TrialMetrics::new(2);
+        // event 1: fail @2s, detect @2.1s, resume @2.6s; frontier was 3,
+        // re-reached @2.9s
+        m.record_iter_done(2, SimTime(S));
+        m.record_iter_done(3, SimTime(2 * S));
+        m.record_failure(SimTime(2 * S), FailureKind::Process, 1);
+        m.record_detect(SimTime(2_100_000_000), FailureKind::Process);
+        m.record_resume(SimTime(2_400_000_000));
+        m.record_resume(SimTime(2_600_000_000)); // slowest rank wins
+        // lost frontier is 3: completing iter 2 again must NOT close rollback
+        m.record_iter_done(2, SimTime(2_800_000_000));
+        m.record_iter_done(3, SimTime(2_900_000_000));
+        // event 2: fail @5s, detect @5.2s, resume @6s, frontier re-reached @6.5s
+        m.record_iter_done(4, SimTime(4 * S));
+        m.record_failure(SimTime(5 * S), FailureKind::Node, 0);
+        m.record_detect(SimTime(5_200_000_000), FailureKind::Node);
+        m.record_resume(SimTime(6 * S));
+        m.record_iter_done(3, SimTime(6_300_000_000)); // below the frontier: open
+        m.record_iter_done(4, SimTime(6_500_000_000));
+        let segs = m.segments();
+        assert_eq!(segs.len(), 2);
+        let s1 = &segs[0];
+        assert_eq!((s1.kind, s1.victim), (FailureKind::Process, 1));
+        assert!((s1.fail_s - 2.0).abs() < 1e-9);
+        assert!((s1.detect_s - 0.1).abs() < 1e-9);
+        assert!((s1.recovery_s - 0.5).abs() < 1e-9);
+        assert!((s1.rollback_s - 0.3).abs() < 1e-9);
+        assert!(!s1.interrupted && !s1.degraded_redeploy);
+        let s2 = &segs[1];
+        assert!((s2.detect_s - 0.2).abs() < 1e-9);
+        assert!((s2.recovery_s - 0.8).abs() < 1e-9);
+        assert!((s2.rollback_s - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failure_during_recovery_interrupts_open_segment() {
+        const S: u64 = 1_000_000_000;
+        let m = TrialMetrics::new(2);
+        m.record_iter_done(1, SimTime(S));
+        m.record_failure(SimTime(2 * S), FailureKind::Process, 0);
+        m.record_detect(SimTime(2_050_000_000), FailureKind::Process);
+        // second failure (node kind) lands before any rank resumed
+        m.record_failure(SimTime(2_200_000_000), FailureKind::Node, 1);
+        m.record_detect(SimTime(2_250_000_000), FailureKind::Node);
+        m.record_degrade();
+        m.record_resume(SimTime(3 * S));
+        m.record_iter_done(1, SimTime(3_300_000_000));
+        let segs = m.segments();
+        assert_eq!(segs.len(), 2);
+        assert!(segs[0].interrupted, "no resume before the second kill");
+        assert_eq!(segs[0].recovery_s, 0.0);
+        assert_eq!(segs[0].rollback_s, 0.0);
+        assert!(
+            !segs[0].degraded_redeploy,
+            "degrade belongs to the node segment, not the interrupted process one"
+        );
+        assert!(!segs[1].interrupted);
+        assert!(segs[1].degraded_redeploy);
+        assert!((segs[1].recovery_s - 0.75).abs() < 1e-9);
+        assert!((segs[1].rollback_s - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_kind_detections_attribute_by_kind_not_position() {
+        // A node failure (slow TCP-break detection) followed by a process
+        // failure (fast SIGCHLD): the process detection arrives FIRST and
+        // must land on the process segment, not the older node one.
+        const S: u64 = 1_000_000_000;
+        let m = TrialMetrics::new(2);
+        m.record_failure(SimTime(S), FailureKind::Node, 0);
+        m.record_failure(SimTime(1_050_000_000), FailureKind::Process, 1);
+        m.record_detect(SimTime(1_052_000_000), FailureKind::Process); // 2 ms sigchld
+        m.record_detect(SimTime(1_400_000_000), FailureKind::Node); // 400 ms break
+        m.record_resume(SimTime(2 * S));
+        let segs = m.segments();
+        assert!((segs[0].detect_s - 0.4).abs() < 1e-9, "{segs:?}");
+        assert!((segs[1].detect_s - 0.002).abs() < 1e-9, "{segs:?}");
     }
 }

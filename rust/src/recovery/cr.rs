@@ -3,88 +3,60 @@
 //!
 //! Ranks get no fault notification; on the first detection event the root
 //! (mpirun) aborts the whole job — every daemon and MPI process is killed.
-//! After RTE teardown the driver re-deploys from scratch (full `mpirun`
-//! launch), and the fresh ranks resume from the newest file checkpoint on
-//! the parallel filesystem. The re-deployment overhead even for a single
-//! process failure is exactly what the paper's Fig. 6 shows as CR's ≈3 s.
+//! After RTE teardown the shared trial loop (`job::trial_driver`) re-deploys
+//! from scratch (full `mpirun` launch), and the fresh ranks resume from the
+//! newest file checkpoint on the parallel filesystem. The re-deployment
+//! overhead even for a single process failure is exactly what the paper's
+//! Fig. 6 shows as CR's ≈3 s — and under a failure *storm* CR pays it once
+//! per event, which is what `reinitpp storm` measures.
 
-use std::rc::Rc;
-
-use super::job::{launch_job, JobCtx, ReinitState, TrialWorld};
-
+use super::job::{abort_job, JobCtx, RecoveryDriver, ReinitState};
 use super::reinit::spawn_rank;
+use crate::config::FailureKind;
 use crate::detect::DetectEvent;
 use crate::sim::{Receiver, SimDuration};
 
-/// Sentinel "rank id" the root pushes into the done channel on abort.
-const ABORT: u32 = u32::MAX;
-
-/// Root behaviour under CR: first failure event => abort everything.
+/// Root behaviour under CR: first failure event => abort everything. A
+/// second failure landing during the abort/teardown window hits already-dead
+/// processes (no-op); one landing after the re-deploy is detected by the
+/// fresh deployment's own root.
 async fn cr_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
-    let Ok(_ev) = detect_rx.recv().await else {
+    let Ok(ev) = detect_rx.recv().await else {
         return;
     };
-    // mpirun abort: kill every node (daemon + children). The root's own
-    // teardown cost is charged by the driver before re-deploying.
-    for node in 0..ctx.cluster.topo.total_nodes() {
-        if ctx.cluster.node_is_alive(node) {
-            ctx.cluster.kill_node(node);
-        }
-    }
-    ctx.done_tx.send(ABORT, SimDuration::ZERO);
+    let kind = match ev {
+        DetectEvent::RankDead { .. } => FailureKind::Process,
+        DetectEvent::NodeDead { .. } => FailureKind::Node,
+    };
+    ctx.world.metrics.record_detect(ctx.world.sim.now(), kind);
+    abort_job(&ctx);
 }
 
-/// Whole-trial driver for CR: a sequence of deployments until the job
-/// finishes without a failure.
-pub async fn cr_trial_driver(w: Rc<TrialWorld>) {
-    let mut deployment = 0u32;
-    let mut timing_started = false;
-    loop {
-        let (ctx, detect_rx, done_rx) = launch_job(&w, &format!("cr-deploy{deployment}"));
-        w.sim.sleep(w.deploy.mpirun_launch(&w.topo())).await;
-        if !timing_started {
-            // the paper times the application, not the first submission
-            w.metrics.set_job_start(w.sim.now());
-            timing_started = true;
-        }
+/// CR hosted on the shared trial loop: spawn plain ranks and a root that
+/// aborts on the first detection.
+pub struct CrDriver;
+
+impl RecoveryDriver for CrDriver {
+    fn tag(&self) -> &'static str {
+        "cr"
+    }
+
+    fn deploy(&self, ctx: &JobCtx, detect_rx: Receiver<DetectEvent>) {
+        let w = &ctx.world;
         for rank in 0..w.cfg.ranks {
-            spawn_rank(&ctx, rank, ReinitState::New, SimDuration::ZERO);
+            spawn_rank(ctx, rank, ReinitState::New, SimDuration::ZERO);
         }
         let root = ctx.cluster.root();
         let ctx2 = ctx.clone();
         w.sim.clone().spawn(root, async move {
             cr_root(ctx2, detect_rx).await;
         });
-
-        // Wait for completion or abort.
-        let mut aborted = false;
-        while w.completed.count() < w.cfg.ranks {
-            match done_rx.recv().await {
-                Ok(ABORT) => {
-                    aborted = true;
-                    break;
-                }
-                Ok(_rank) => {}
-                Err(_) => break,
-            }
-        }
-        if !aborted {
-            break;
-        }
-        // The abort killed every process: in-memory checkpoint tiers (and
-        // any undrained copies) die with them. Only the filesystem tier
-        // survives re-deployment — which is why CR needs one (Table 2).
-        w.ckpt.lose_all_memory();
-        // RTE teardown + scheduler epilogue, then re-deploy.
-        w.sim.sleep(w.deploy.teardown()).await;
-        deployment += 1;
-        assert!(deployment < 16, "CR livelock: failure re-injected?");
     }
-    w.metrics.set_job_end(w.sim.now());
 }
 
 #[cfg(test)]
 mod tests {
     // CR end-to-end behaviour is covered by rust/tests/recovery_equivalence.rs
-    // and the unit tests in recovery::tests (job-level).
+    // and the unit tests in recovery::tests (job-level), including the
+    // multi-failure storm trials driving repeated abort + re-deploy cycles.
 }

@@ -1,5 +1,14 @@
 //! Job runner: deployment, the per-rank driver loop, detection wiring and
-//! trial orchestration shared by all three recovery approaches.
+//! the protocol-agnostic trial orchestration shared by all three recovery
+//! approaches.
+//!
+//! The heart of this module is [`trial_driver`]: one deployment loop that
+//! hosts any [`RecoveryDriver`] (CR, Reinit++, ULFM) and survives an
+//! arbitrary failure *timeline* — N successive process/node failures,
+//! failures landing inside a recovery or checkpoint window (virtual-time
+//! anchored kills), and node failures beyond the spare pool, which degrade
+//! the in-place recoveries to a CR-style full re-deploy (recorded as a
+//! `degraded_redeploy` transition on the event's metric segment).
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -10,8 +19,8 @@ use crate::ckptstore::{CkptStore, StorageStats};
 use crate::cluster::{Cluster, DeployCost, Topology};
 use crate::config::{ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
 use crate::detect::{watch_child, watch_daemon, DetectEvent};
-use crate::fault::{FaultPlan, FaultTrigger};
-use crate::metrics::{Breakdown, TrialMetrics};
+use crate::fault::{FaultOutcome, FaultTimeline, TimelineCursor};
+use crate::metrics::{Breakdown, FailureSegment, TrialMetrics};
 use crate::mpi::{Comm, FtMode, MpiError, MpiJob};
 use crate::runtime::XlaRuntime;
 use crate::sim::{channel, Receiver, Sender, Sim, SimDuration, TaskId};
@@ -34,7 +43,10 @@ pub struct TrialResult {
     /// Final state digest per rank (meaningful for non-ghost ranks).
     pub digests: Vec<u64>,
     pub completed: bool,
-    pub fault: FaultPlan,
+    /// The trial's planned timeline and what became of each event.
+    pub faults: Vec<FaultOutcome>,
+    /// Per-fired-failure detect/recovery/rollback decomposition.
+    pub segments: Vec<FailureSegment>,
     pub sim_events: u64,
     /// Rank 0's (virtual time s, iteration, diagnostic) trace.
     pub diag_trace: Vec<(f64, u32, f64)>,
@@ -88,7 +100,7 @@ impl Backends {
         let tracker = CostTracker::new();
         match cfg.fidelity.resolve(cfg.ranks) {
             Fidelity::Modeled => Backends {
-                live: ComputeBackend::native(),
+                live: ComputeBackend::native_scaled(cfg.calib.modeled_compute_scale),
                 ghost: None,
                 live_count: cfg.ranks,
             },
@@ -161,13 +173,20 @@ pub struct TrialWorld {
     pub backends: Backends,
     pub ckpt: CkptStore,
     pub metrics: TrialMetrics,
-    pub fault: FaultTrigger,
+    /// The trial's failure timeline and shared firing state.
+    pub faults: TimelineCursor,
     pub deploy: DeployCost,
     pub digests: Rc<RefCell<Vec<Option<u64>>>>,
     pub completed: Rc<Completed>,
     /// Rank 0's per-iteration diagnostic (virtual time s, iter, value) —
     /// the e2e examples' convergence trace across the failure.
     pub diag_trace: Rc<RefCell<Vec<(f64, u32, f64)>>>,
+    /// Cluster of the *current* deployment: virtual-time-anchored kills
+    /// are scheduled once per trial and must hit whatever incarnation of
+    /// the job is live when their instant arrives (a kill landing between
+    /// a CR abort and the re-deploy hits dead air). `Cluster`, not
+    /// `JobCtx`, to avoid an `Rc` cycle back into this world.
+    pub cur_cluster: RefCell<Option<Cluster>>,
 }
 
 impl TrialWorld {
@@ -185,15 +204,12 @@ impl TrialWorld {
             backends: Backends::build(cfg, xla),
             ckpt: CkptStore::new(sim, &cfg.effective_stack(), topo, &cfg.calib),
             metrics: TrialMetrics::new(cfg.ranks),
-            fault: FaultTrigger::new(if cfg.failure == FailureKind::None {
-                FaultPlan::none()
-            } else {
-                FaultPlan::draw(cfg, trial)
-            }),
+            faults: TimelineCursor::new(FaultTimeline::plan(cfg, trial)),
             deploy: DeployCost::from_calib(&cfg.calib),
             digests: Rc::new(RefCell::new(vec![None; cfg.ranks as usize])),
             completed: Rc::new(Completed::new(cfg.ranks)),
             diag_trace: Rc::new(RefCell::new(Vec::new())),
+            cur_cluster: RefCell::new(None),
         })
     }
 
@@ -210,7 +226,7 @@ impl TrialWorld {
     }
 }
 
-/// One deployment of the job (CR creates several per trial).
+/// One deployment of the job (the trial loop creates several after aborts).
 pub struct JobCtx {
     pub world: Rc<TrialWorld>,
     pub cluster: Cluster,
@@ -232,6 +248,59 @@ impl Clone for JobCtx {
             done_tx: self.done_tx.clone(),
             detect_tx: self.detect_tx.clone(),
         }
+    }
+}
+
+impl JobCtx {
+    /// Has the spare pool been outrun? True once more nodes are dead than
+    /// the allocation over-provisioned (paper §3.2): the next in-place
+    /// node recovery has nowhere sane to spawn, so Reinit++/ULFM degrade
+    /// to a CR-style abort + re-deploy.
+    pub fn spares_exhausted(&self) -> bool {
+        let topo = &self.cluster.topo;
+        let dead = (0..topo.total_nodes())
+            .filter(|&n| !self.cluster.node_is_alive(n))
+            .count() as u32;
+        dead > topo.spare_nodes
+    }
+}
+
+/// Sentinel "rank id" a root pushes into the done channel to request a
+/// full abort + re-deploy (CR's normal mode; the in-place recoveries'
+/// spare-exhaustion fallback).
+pub const ABORT: u32 = u32::MAX;
+
+/// mpirun abort: kill every node (daemon + children), then ask the trial
+/// loop for a re-deploy. The caller's own teardown cost is charged by the
+/// trial loop before re-deploying.
+pub fn abort_job(ctx: &JobCtx) {
+    for node in 0..ctx.cluster.topo.total_nodes() {
+        if ctx.cluster.node_is_alive(node) {
+            ctx.cluster.kill_node(node);
+        }
+    }
+    ctx.done_tx.send(ABORT, SimDuration::ZERO);
+}
+
+/// One recovery protocol, hosted by the shared [`trial_driver`] loop.
+/// Implementations spawn the rank tasks plus their root-side control tasks
+/// for a fresh deployment; everything else — deployment cost, abort /
+/// re-deploy sequencing, timeline arming, completion tracking — is
+/// protocol-agnostic.
+pub trait RecoveryDriver {
+    /// Short tag for process names (`cr`, `reinit`, `ulfm`).
+    fn tag(&self) -> &'static str;
+    /// Spawn all rank tasks and root-side handler tasks onto a freshly
+    /// launched deployment.
+    fn deploy(&self, ctx: &JobCtx, detect_rx: Receiver<DetectEvent>);
+}
+
+/// The driver for a recovery kind.
+pub fn driver_for(kind: RecoveryKind) -> Rc<dyn RecoveryDriver> {
+    match kind {
+        RecoveryKind::Cr => Rc::new(super::cr::CrDriver),
+        RecoveryKind::Reinit => Rc::new(super::reinit::ReinitDriver),
+        RecoveryKind::Ulfm => Rc::new(super::ulfm::UlfmDriver),
     }
 }
 
@@ -310,7 +379,7 @@ pub async fn rank_user_main(
 
     // Entering the user function after a recovery == the end of MPI
     // recovery (paper Fig. 6/7 metric). Only meaningful once a fault fired.
-    if w.fault.has_fired() {
+    if w.faults.any_fired() {
         w.metrics.record_resume(w.sim.now());
     }
 
@@ -337,9 +406,9 @@ pub async fn rank_user_main(
         w.metrics.add_ckpt_read(rank, w.sim.now() - t0);
         // Tier-aware recovery: the failure degraded some ranks' replica
         // sets; every rank re-establishes its missing copies before
-        // resuming, so a second failure finds full redundancy again.
+        // resuming, so the next failure finds full redundancy again.
         // No-op (zero cost) for ranks whose copies all survived.
-        if w.fault.has_fired() {
+        if w.faults.any_fired() {
             let t1 = w.sim.now();
             w.ckpt.rebuild(rank, slot.node, it, &bytes).await;
             w.metrics.add_ckpt_write(rank, w.sim.now() - t1);
@@ -348,10 +417,12 @@ pub async fn rank_user_main(
     }
 
     for iter in start_iter..w.cfg.iters {
-        // Fault injection at the start of the drawn iteration (paper §4).
-        if w.fault.should_fire(rank, iter) {
-            w.metrics.record_failure(w.sim.now());
-            match w.fault.plan().kind {
+        // Fault injection at the start of the anchored iteration (paper §4);
+        // the cursor fires each timeline event exactly once, tolerating
+        // post-rollback re-execution of the same iteration.
+        if let Some(ev) = w.faults.should_fire(rank, iter) {
+            w.metrics.record_failure(w.sim.now(), ev.kind, rank);
+            match ev.kind {
                 FailureKind::Process => {
                     w.ckpt.lose_rank(rank);
                     ctx.cluster.kill_rank(rank); // SIGKILL to self
@@ -384,6 +455,9 @@ pub async fn rank_user_main(
                 iter,
                 app_state.diagnostic(),
             ));
+            // Advance the iteration frontier (closes rollback accounting
+            // for recovered failure segments). Host-side only.
+            w.metrics.record_iter_done(iter, w.sim.now());
         }
 
         if iter % w.cfg.ckpt_every == 0 {
@@ -402,11 +476,112 @@ pub async fn rank_user_main(
     Ok(())
 }
 
-/// Await until all ranks reported completion.
-pub async fn wait_all_done(world: &Rc<TrialWorld>, done_rx: &Receiver<u32>) {
-    while world.completed.count() < world.cfg.ranks {
-        let _ = done_rx.recv().await;
+/// Schedule every virtual-time-anchored timeline event, exactly once per
+/// trial. The scheduled kill resolves its victim against the deployment
+/// live at fire time via `TrialWorld::cur_cluster`.
+fn arm_time_faults(w: &Rc<TrialWorld>) {
+    for (idx, secs) in w.faults.time_schedule() {
+        let w2 = Rc::clone(w);
+        w.sim.schedule(SimDuration::from_secs_f64(secs), move || {
+            fire_time_fault(&w2, idx);
+        });
     }
+}
+
+/// Execute a virtual-time-anchored kill. Mirrors the iteration-anchored
+/// path in `rank_user_main` (record, erase the dead hosts' checkpoint
+/// copies, SIGKILL), except it runs from the scheduler, so it can land
+/// mid-recovery, mid-checkpoint, or between CR deployments. A kill that
+/// finds its victim already dead — or the job complete / torn down — hits
+/// dead air and is recorded as a no-op.
+fn fire_time_fault(w: &Rc<TrialWorld>, idx: usize) {
+    let ev = w.faults.event(idx);
+    if w.completed.count() == w.cfg.ranks {
+        w.faults.mark_noop(idx); // job already released the allocation
+        return;
+    }
+    let cluster = w.cur_cluster.borrow().clone();
+    let Some(cluster) = cluster else {
+        w.faults.mark_noop(idx);
+        return;
+    };
+    if !cluster.rank_is_alive(ev.rank) {
+        w.faults.mark_noop(idx); // between deployments, or victim already down
+        return;
+    }
+    w.faults.mark_fired(idx);
+    w.metrics.record_failure(w.sim.now(), ev.kind, ev.rank);
+    match ev.kind {
+        FailureKind::Process => {
+            w.ckpt.lose_rank(ev.rank);
+            cluster.kill_rank(ev.rank);
+        }
+        FailureKind::Node => {
+            let node = cluster.rank_slot(ev.rank).node;
+            let victims: Vec<u32> = (0..w.cfg.ranks)
+                .filter(|&r| cluster.rank_slot(r).node == node)
+                .collect();
+            w.ckpt.lose_node_ranks(&victims);
+            cluster.kill_node(node);
+        }
+        FailureKind::None => unreachable!("timeline events are never kind none"),
+    }
+}
+
+/// The protocol-agnostic whole-trial loop: deploy, hand the deployment to
+/// the recovery driver, wait for completion or an abort request, and
+/// re-deploy after aborts (CR's every failure; Reinit++/ULFM only on
+/// spare-pool exhaustion) until the job finishes.
+pub async fn trial_driver(w: Rc<TrialWorld>, driver: Rc<dyn RecoveryDriver>) {
+    // Re-deploy bound: CR redeploys at most once per timeline event, plus
+    // headroom for degraded in-place recoveries.
+    let max_deploys = 16 + w.faults.len() as u32;
+    let mut deployment = 0u32;
+    let mut timing_started = false;
+    loop {
+        let (ctx, detect_rx, done_rx) =
+            launch_job(&w, &format!("{}-deploy{deployment}", driver.tag()));
+        *w.cur_cluster.borrow_mut() = Some(ctx.cluster.clone());
+        w.sim.sleep(w.deploy.mpirun_launch(&w.topo())).await;
+        if !timing_started {
+            // the paper times the application, not the first submission
+            w.metrics.set_job_start(w.sim.now());
+            timing_started = true;
+            // Virtual-time anchors (explicit `@tX` events, MTBF arrivals)
+            // count from application start, the same clock the paper's
+            // breakdown uses — not from the mpirun submission.
+            arm_time_faults(&w);
+        }
+        driver.deploy(&ctx, detect_rx);
+
+        // Wait for completion or an abort request.
+        let mut aborted = false;
+        while w.completed.count() < w.cfg.ranks {
+            match done_rx.recv().await {
+                Ok(ABORT) => {
+                    aborted = true;
+                    break;
+                }
+                Ok(_rank) => {}
+                Err(_) => break,
+            }
+        }
+        if !aborted {
+            break;
+        }
+        // The abort killed every process: in-memory checkpoint tiers (and
+        // any undrained copies) die with them. Only the filesystem tier
+        // survives re-deployment — which is why CR needs one (Table 2).
+        w.ckpt.lose_all_memory();
+        // RTE teardown + scheduler epilogue, then re-deploy.
+        w.sim.sleep(w.deploy.teardown()).await;
+        deployment += 1;
+        assert!(
+            deployment < max_deploys,
+            "recovery livelock: more re-deployments than timeline events"
+        );
+    }
+    w.metrics.set_job_end(w.sim.now());
 }
 
 /// Run one trial end to end; returns the paper's breakdown + validation data.
@@ -421,25 +596,12 @@ pub fn run_trial(
     sim.set_event_limit(200_000_000);
     let world = TrialWorld::new(&sim, cfg, trial, xla);
 
-    let driver = sim.spawn_process("trial-driver");
+    let driver_proc = sim.spawn_process("trial-driver");
     let w2 = Rc::clone(&world);
-    match cfg.recovery {
-        RecoveryKind::Cr => {
-            sim.spawn(driver, async move {
-                super::cr::cr_trial_driver(w2).await;
-            });
-        }
-        RecoveryKind::Reinit => {
-            sim.spawn(driver, async move {
-                super::reinit::reinit_trial_driver(w2).await;
-            });
-        }
-        RecoveryKind::Ulfm => {
-            sim.spawn(driver, async move {
-                super::ulfm::ulfm_trial_driver(w2).await;
-            });
-        }
-    }
+    let driver = driver_for(cfg.recovery);
+    sim.spawn(driver_proc, async move {
+        trial_driver(w2, driver).await;
+    });
     let summary = sim.run();
     let completed = world.completed.count() == cfg.ranks;
     let breakdown = world.metrics.breakdown();
@@ -449,14 +611,16 @@ pub fn run_trial(
         .iter()
         .map(|d| d.unwrap_or(0))
         .collect();
-    let fault = world.fault.plan();
+    let faults = world.faults.outcomes();
+    let segments = world.metrics.segments();
     let diag_trace = world.diag_trace.borrow().clone();
     let storage = world.ckpt.storage_stats();
     TrialResult {
         breakdown,
         digests,
         completed,
-        fault,
+        faults,
+        segments,
         sim_events: summary.events,
         diag_trace,
         storage,

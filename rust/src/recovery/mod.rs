@@ -3,7 +3,10 @@
 //!
 //! - `job`    — deployment, rank driver (the paper's Fig. 2 pattern:
 //!              MPI_Reinit-style rollback point, checkpoint every iteration,
-//!              fault injection), detection wiring, trial orchestration.
+//!              fault injection), detection wiring, and the shared
+//!              protocol-agnostic trial loop (`RecoveryDriver` +
+//!              `trial_driver`): deployment sequencing, failure-timeline
+//!              arming, abort/re-deploy cycles, spare-pool exhaustion.
 //! - `cr`     — Checkpoint-Restart: abort on failure, tear down, re-deploy
 //!              the whole job, resume from the file checkpoint.
 //! - `reinit` — Reinit++: root HandleFailure (Algorithm 1) + daemon
@@ -22,4 +25,6 @@ pub mod ulfm;
 #[cfg(test)]
 mod tests;
 
-pub use job::{run_trial, ReinitState, RtCache, TrialResult, TrialWorld};
+pub use job::{
+    driver_for, run_trial, RecoveryDriver, ReinitState, RtCache, TrialResult, TrialWorld,
+};

@@ -13,20 +13,35 @@
 //! All re-entering ranks synchronize on the ORTE-level barrier and rebuild
 //! MPI_COMM_WORLD (a fresh communicator generation); everything older is
 //! discarded, exactly the paper's post-MPI_Init semantics.
+//!
+//! **Multi-failure semantics.** The handler loop is *idempotent under
+//! overlap*: a failure landing while a prior recovery is still in flight
+//! simply restarts it. The scheduled SIGREINIT/fork+exec closures therefore
+//! re-check the cluster at fire time — a survivor that has died since is
+//! skipped (its own detect event re-covers it), a respawn onto a node that
+//! has died since is skipped (the node's detect event covers every rank on
+//! it), and task cancellation targets whatever task currently occupies the
+//! rank's slot, never a stale capture — so overlapping recoveries can never
+//! double-spawn a rank. Node failures beyond the spare pool abort to the
+//! shared trial loop for a CR-style re-deploy (recorded as degraded).
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use super::job::{
-    arm_child_watcher, launch_job, rank_user_main, wait_all_done, JobCtx, ReinitState,
-    TrialWorld,
+    abort_job, arm_child_watcher, rank_user_main, JobCtx, RecoveryDriver, ReinitState,
 };
 use crate::cluster::Topology;
 use crate::detect::DetectEvent;
 use crate::sim::{Receiver, SimDuration};
 
-/// Spawn (or re-spawn) the rank task entering the rollback point.
+/// Spawn (or re-spawn) the rank task entering the rollback point. No-op if
+/// the rank's process is dead (e.g. a timeline kill landed between cluster
+/// launch and rank spawn): its detect event brings it back.
 pub fn spawn_rank(ctx: &JobCtx, rank: u32, state: ReinitState, startup: SimDuration) {
+    if !ctx.cluster.rank_is_alive(rank) {
+        return;
+    }
     let slot = ctx.cluster.rank_slot(rank);
     let sim = ctx.world.sim.clone();
     let ctx2 = ctx.clone();
@@ -58,6 +73,8 @@ pub async fn reinit_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                 if ctx.cluster.rank_is_alive(rank) {
                     continue; // stale notification (already re-spawned)
                 }
+                w.metrics
+                    .record_detect(w.sim.now(), crate::config::FailureKind::Process);
                 // process failure: re-spawn on the original node (§3.2)
                 vec![(rank, ctx.cluster.rank_slot(rank).node)]
             }
@@ -69,6 +86,17 @@ pub async fn reinit_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                     .collect();
                 if failed.is_empty() {
                     continue;
+                }
+                w.metrics
+                    .record_detect(w.sim.now(), crate::config::FailureKind::Node);
+                // Spare pool outrun: no in-place target left. Degrade to a
+                // CR-style full re-deploy (paper §3.2 requires
+                // over-provisioning precisely because Reinit++ has no other
+                // answer once spares are gone).
+                if ctx.spares_exhausted() {
+                    w.metrics.record_degrade();
+                    abort_job(&ctx);
+                    return;
                 }
                 // d' = argmin_d |Children(d)| over alive daemons
                 let target = ctx.cluster.least_loaded_alive_node();
@@ -87,16 +115,22 @@ pub async fn reinit_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
         let startup = w.deploy.orte_barrier(ctx.cluster.topo.total_nodes())
             + w.deploy.comm_reinit(w.cfg.ranks);
 
-        // Algorithm 2 on every daemon — survivors first: SIGREINIT.
+        // Algorithm 2 on every daemon — survivors first: SIGREINIT. The
+        // closure re-reads the rank's state at fire time (see module docs):
+        // cancel whatever task currently holds the slot, skip ranks that
+        // died in the window.
         let signal = w.deploy.signal();
         for rank in 0..w.cfg.ranks {
             if !ctx.cluster.rank_is_alive(rank) {
                 continue;
             }
-            let old_task = ctx.rank_tasks.borrow()[rank as usize];
             let ctx2 = ctx.clone();
             w.sim.schedule(signal, move || {
-                if let Some(t) = old_task {
+                if !ctx2.cluster.rank_is_alive(rank) {
+                    return; // died since the REINIT broadcast; its detect covers it
+                }
+                let cur = ctx2.rank_tasks.borrow()[rank as usize];
+                if let Some(t) = cur {
                     ctx2.world.sim.cancel_task(t); // longjmp: drop the stack
                 }
                 spawn_rank(&ctx2, rank, ReinitState::Reinited, startup);
@@ -113,7 +147,15 @@ pub async fn reinit_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
             let cost = w.deploy.node_spawn(ranks.len() as u32);
             let ctx2 = ctx.clone();
             w.sim.schedule(cost, move || {
+                if !ctx2.cluster.node_is_alive(node) {
+                    // target died while the fork+exec was in flight; its
+                    // NodeDead event re-covers every rank assigned here
+                    return;
+                }
                 for &rank in &ranks {
+                    if ctx2.cluster.rank_is_alive(rank) {
+                        continue; // an overlapping recovery already re-spawned it
+                    }
                     ctx2.cluster.respawn_rank(rank, node);
                     arm_child_watcher(&ctx2, rank);
                     spawn_rank(&ctx2, rank, ReinitState::Restarted, startup);
@@ -123,20 +165,23 @@ pub async fn reinit_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
     }
 }
 
-/// Whole-trial driver for Reinit++.
-pub async fn reinit_trial_driver(w: Rc<TrialWorld>) {
-    let (ctx, detect_rx, done_rx) = launch_job(&w, "reinit-job");
-    // mpirun deployment (cost only; the paper times the application)
-    w.sim.sleep(w.deploy.mpirun_launch(&w.topo())).await;
-    w.metrics.set_job_start(w.sim.now());
-    for rank in 0..w.cfg.ranks {
-        spawn_rank(&ctx, rank, ReinitState::New, SimDuration::ZERO);
+/// Reinit++ hosted on the shared trial loop.
+pub struct ReinitDriver;
+
+impl RecoveryDriver for ReinitDriver {
+    fn tag(&self) -> &'static str {
+        "reinit"
     }
-    let root = ctx.cluster.root();
-    let ctx2 = ctx.clone();
-    w.sim.clone().spawn(root, async move {
-        reinit_root(ctx2, detect_rx).await;
-    });
-    wait_all_done(&w, &done_rx).await;
-    w.metrics.set_job_end(w.sim.now());
+
+    fn deploy(&self, ctx: &JobCtx, detect_rx: Receiver<DetectEvent>) {
+        let w = &ctx.world;
+        for rank in 0..w.cfg.ranks {
+            spawn_rank(ctx, rank, ReinitState::New, SimDuration::ZERO);
+        }
+        let root = ctx.cluster.root();
+        let ctx2 = ctx.clone();
+        w.sim.clone().spawn(root, async move {
+            reinit_root(ctx2, detect_rx).await;
+        });
+    }
 }

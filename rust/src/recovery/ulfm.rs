@@ -15,19 +15,32 @@
 //! as the calibrated-to-paper `ulfm_recover_base/per_rank` term — the
 //! protocol messages themselves are simulated, but the prototype's
 //! implementation inefficiency is not something message latency reproduces.
+//!
+//! **Multi-failure semantics.** Each recovery round is one shrink/agree/
+//! spawn/merge cycle; a failure landing mid-round makes the next collective
+//! on the repaired communicator fail and starts another round (the ULFM
+//! recipe's own retry shape). Two mechanics make the rounds converge under
+//! storms: (a) failure-detector state survives communicator repair — deaths
+//! that *raced* a round's generation bump are re-announced into the new
+//! generation, so a repaired world can never block on a silently-dead peer;
+//! (b) the RTE spawner re-checks rank/node liveness at fork+exec time, so
+//! overlapping spawn requests cannot double-spawn and a dead target node
+//! defers its ranks to the following round. Node failures beyond the spare
+//! pool abort to the shared trial loop for a CR-style re-deploy.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use super::job::{
-    arm_child_watcher, launch_job, rank_user_main, wait_all_done, JobCtx, ReinitState,
-    TrialWorld,
+    abort_job, arm_child_watcher, rank_user_main, JobCtx, RecoveryDriver, ReinitState,
 };
 use crate::detect::DetectEvent;
 use crate::mpi::{Comm, RecvSrc, PROCEED_TAG, SYSTEM_SRC};
 use crate::sim::{channel, Receiver, Sender, SimDuration};
 
 /// Spawn a ULFM rank task: user main inside the recover-and-retry loop.
+/// No-op if the rank's process is dead (a timeline kill raced the spawn);
+/// its detect event routes it through the next recovery round.
 pub fn spawn_ulfm_rank(
     ctx: &JobCtx,
     spawn_req_tx: Sender<Vec<u32>>,
@@ -35,6 +48,9 @@ pub fn spawn_ulfm_rank(
     state: ReinitState,
     startup: SimDuration,
 ) {
+    if !ctx.cluster.rank_is_alive(rank) {
+        return;
+    }
     let slot = ctx.cluster.rank_slot(rank);
     let sim = ctx.world.sim.clone();
     let ctx2 = ctx.clone();
@@ -105,14 +121,31 @@ async fn ulfm_notifier(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
         match ev {
             DetectEvent::RankDead { rank, .. } => {
                 if !ctx.cluster.rank_is_alive(rank) {
+                    w.metrics
+                        .record_detect(w.sim.now(), crate::config::FailureKind::Process);
                     ctx.mpi.notify_failure(rank, hb);
                 }
             }
             DetectEvent::NodeDead { node, .. } => {
-                for r in 0..w.cfg.ranks {
-                    if ctx.cluster.rank_slot(r).node == node && !ctx.cluster.rank_is_alive(r) {
-                        ctx.mpi.notify_failure(r, hb);
-                    }
+                let dead: Vec<u32> = (0..w.cfg.ranks)
+                    .filter(|&r| {
+                        ctx.cluster.rank_slot(r).node == node && !ctx.cluster.rank_is_alive(r)
+                    })
+                    .collect();
+                if dead.is_empty() {
+                    continue;
+                }
+                w.metrics
+                    .record_detect(w.sim.now(), crate::config::FailureKind::Node);
+                // Spare pool outrun: degrade to a CR-style full re-deploy
+                // (recorded on the event's metric segment).
+                if ctx.spares_exhausted() {
+                    w.metrics.record_degrade();
+                    abort_job(&ctx);
+                    return;
+                }
+                for r in dead {
+                    ctx.mpi.notify_failure(r, hb);
                 }
             }
         }
@@ -127,12 +160,24 @@ async fn ulfm_spawner(
     spawn_req_rx: Receiver<Vec<u32>>,
 ) {
     let w = Rc::clone(&ctx.world);
+    let hb = SimDuration::from_secs_f64(w.cfg.calib.ulfm_hb_period_ms * 1e-3);
     loop {
         let Ok(failed) = spawn_req_rx.recv().await else {
             return;
         };
         let old_gen = ctx.mpi.generation();
         ctx.mpi.bump_generation();
+        // Failure-detector state survives communicator repair: a rank that
+        // died after this round's agreement (so it is absent from `failed`)
+        // must be re-announced into the new generation, or the repaired
+        // world would block forever on a peer nobody knows is dead. The
+        // notifications are buffered by the fabric until the new
+        // generation's endpoints bind. No-op in single-failure runs.
+        for r in 0..w.cfg.ranks {
+            if !failed.contains(&r) && !ctx.cluster.rank_is_alive(r) {
+                ctx.mpi.notify_failure(r, hb);
+            }
+        }
         let survivors: Vec<u32> = (0..w.cfg.ranks)
             .filter(|r| !failed.contains(r))
             .collect();
@@ -157,7 +202,16 @@ async fn ulfm_spawner(
             let node = *node;
             let cost = w.deploy.node_spawn(ranks.len() as u32);
             w.sim.schedule(cost, move || {
+                if !ctx2.cluster.node_is_alive(node) {
+                    // target died while the fork+exec was in flight: these
+                    // ranks stay dead and notified; the survivors' next
+                    // collective fails and the following round re-places them
+                    return;
+                }
                 for &rank in &ranks {
+                    if ctx2.cluster.rank_is_alive(rank) {
+                        continue; // an overlapping round already re-spawned it
+                    }
                     ctx2.cluster.respawn_rank(rank, node);
                     arm_child_watcher(&ctx2, rank);
                     spawn_ulfm_rank(&ctx2, tx2.clone(), rank, ReinitState::Restarted, startup);
@@ -174,31 +228,35 @@ async fn ulfm_spawner(
     }
 }
 
-/// Whole-trial driver for ULFM.
-pub async fn ulfm_trial_driver(w: Rc<TrialWorld>) {
-    let (ctx, detect_rx, done_rx) = launch_job(&w, "ulfm-job");
-    w.sim.sleep(w.deploy.mpirun_launch(&w.topo())).await;
-    w.metrics.set_job_start(w.sim.now());
-    let (spawn_req_tx, spawn_req_rx) = channel::<Vec<u32>>(&w.sim);
-    for rank in 0..w.cfg.ranks {
-        spawn_ulfm_rank(
-            &ctx,
-            spawn_req_tx.clone(),
-            rank,
-            ReinitState::New,
-            SimDuration::ZERO,
-        );
+/// ULFM hosted on the shared trial loop.
+pub struct UlfmDriver;
+
+impl RecoveryDriver for UlfmDriver {
+    fn tag(&self) -> &'static str {
+        "ulfm"
     }
-    let root = ctx.cluster.root();
-    let ctx2 = ctx.clone();
-    w.sim.clone().spawn(root, async move {
-        ulfm_notifier(ctx2, detect_rx).await;
-    });
-    let ctx3 = ctx.clone();
-    let tx2 = spawn_req_tx.clone();
-    w.sim.clone().spawn(root, async move {
-        ulfm_spawner(ctx3, tx2, spawn_req_rx).await;
-    });
-    wait_all_done(&w, &done_rx).await;
-    w.metrics.set_job_end(w.sim.now());
+
+    fn deploy(&self, ctx: &JobCtx, detect_rx: Receiver<DetectEvent>) {
+        let w = &ctx.world;
+        let (spawn_req_tx, spawn_req_rx) = channel::<Vec<u32>>(&w.sim);
+        for rank in 0..w.cfg.ranks {
+            spawn_ulfm_rank(
+                ctx,
+                spawn_req_tx.clone(),
+                rank,
+                ReinitState::New,
+                SimDuration::ZERO,
+            );
+        }
+        let root = ctx.cluster.root();
+        let ctx2 = ctx.clone();
+        w.sim.clone().spawn(root, async move {
+            ulfm_notifier(ctx2, detect_rx).await;
+        });
+        let ctx3 = ctx.clone();
+        let tx2 = spawn_req_tx.clone();
+        w.sim.clone().spawn(root, async move {
+            ulfm_spawner(ctx3, tx2, spawn_req_rx).await;
+        });
+    }
 }

@@ -137,12 +137,12 @@ fn prop_equivalence_across_random_fault_draws() {
                 let free = run_trial(&free_cfg, 0, None);
                 let faulty = run_trial(&cfg, 0, None);
                 if !faulty.completed {
-                    return Err(format!("{recovery}: hung on fault {:?}", faulty.fault));
+                    return Err(format!("{recovery}: hung on fault {:?}", faulty.faults));
                 }
                 if faulty.digests != free.digests {
                     return Err(format!(
                         "{recovery}: digests differ for fault {:?}",
-                        faulty.fault
+                        faulty.faults
                     ));
                 }
                 if faulty.breakdown.mpi_recovery_s <= 0.0 {
@@ -170,7 +170,7 @@ fn prop_single_process_failure_always_recoverable_from_memory() {
             cfg.ckpt = Some(reinitpp::config::CkptKind::Memory);
             let r = run_trial(&cfg, 0, None);
             if !r.completed {
-                return Err(format!("hung on {:?}", r.fault));
+                return Err(format!("hung on {:?}", r.faults));
             }
             Ok(())
         },

@@ -42,13 +42,13 @@ fn equivalence(app: AppKind, recovery: RecoveryKind, failure: FailureKind) {
     assert!(
         faulty.completed,
         "{app}/{recovery}/{failure} hung (fault {:?})",
-        faulty.fault
+        faulty.faults
     );
     assert!(faulty.breakdown.mpi_recovery_s > 0.0);
     assert_eq!(
         faulty.digests, free.digests,
         "{app}/{recovery}/{failure}: recovered state != fault-free (fault {:?})",
-        faulty.fault
+        faulty.faults
     );
 }
 

@@ -23,14 +23,14 @@ fn cfg(ranks: u32) -> ExperimentConfig {
 #[test]
 fn modeled_256_ranks_process_failure() {
     let r = run_trial(&cfg(256), 0, None);
-    assert!(r.completed, "fault {:?}", r.fault);
+    assert!(r.completed, "fault {:?}", r.faults);
     assert!(r.breakdown.mpi_recovery_s > 0.1);
 }
 
 #[test]
 fn modeled_1024_ranks_process_failure() {
     let r = run_trial(&cfg(1024), 0, None);
-    assert!(r.completed, "fault {:?}", r.fault);
+    assert!(r.completed, "fault {:?}", r.faults);
     // Fig. 6's headline: recovery stays ~constant as ranks grow
     let small = run_trial(&cfg(64), 0, None);
     let ratio = r.breakdown.mpi_recovery_s / small.breakdown.mpi_recovery_s;
@@ -47,7 +47,7 @@ fn modeled_node_failure_at_scale() {
     let mut c = cfg(256);
     c.failure = FailureKind::Node;
     let r = run_trial(&c, 0, None);
-    assert!(r.completed, "fault {:?}", r.fault);
+    assert!(r.completed, "fault {:?}", r.faults);
     assert!(r.breakdown.mpi_recovery_s > 1.0);
 }
 

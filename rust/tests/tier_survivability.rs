@@ -198,7 +198,7 @@ fn check_equivalence(cfg: &ExperimentConfig, trial: u32) {
         cfg.recovery,
         cfg.failure,
         cfg.effective_stack(),
-        got.fault
+        got.faults
     );
     assert_eq!(
         got.digests, want.digests,
@@ -206,7 +206,7 @@ fn check_equivalence(cfg: &ExperimentConfig, trial: u32) {
         cfg.recovery,
         cfg.failure,
         cfg.effective_stack(),
-        got.fault
+        got.faults
     );
 }
 
