@@ -23,6 +23,12 @@ use crate::config::{CkptKind, FailureKind, RecoveryKind};
 pub fn default_scheme(recovery: RecoveryKind, failure: FailureKind) -> CkptKind {
     match (recovery, failure) {
         (RecoveryKind::Cr, _) => CkptKind::File,
+        // Replication's checkpoints only matter once the replica group is
+        // exhausted and the job degrades to a CR-style redeploy — at which
+        // point every in-memory tier is gone, so only permanent storage
+        // helps (PartRePer-MPI pairs replication with file checkpoints the
+        // same way).
+        (RecoveryKind::Replication, _) => CkptKind::File,
         (_, FailureKind::Node) => CkptKind::File,
         (RecoveryKind::Ulfm | RecoveryKind::Reinit, _) => CkptKind::Memory,
     }
@@ -49,6 +55,10 @@ mod tests {
         assert_eq!(default_scheme(Cr, Node), File);
         assert_eq!(default_scheme(Ulfm, Node), File);
         assert_eq!(default_scheme(Reinit, Node), File);
+        // replication: checkpoints exist for the degraded-redeploy fallback,
+        // which loses all memory — file either way
+        assert_eq!(default_scheme(Replication, Process), File);
+        assert_eq!(default_scheme(Replication, Node), File);
     }
 
     #[test]

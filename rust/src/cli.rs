@@ -7,6 +7,7 @@
 //! reinitpp scale     [OPTIONS] [key=value ...]   weak-scaling sweep to 16k ranks
 //! reinitpp tiers     [OPTIONS] [key=value ...]   checkpoint tier-stack sweep
 //! reinitpp storm     [OPTIONS] [key=value ...]   MTBF failure-storm sweep
+//! reinitpp crossover [OPTIONS] [key=value ...]   replication-vs-checkpointing crossover
 //! reinitpp tables    [--which 1|2]               print Tables 1/2
 //! reinitpp validate  [OPTIONS] [key=value ...]   global-restart equivalence
 //! reinitpp calibrate [key=value ...]             measure artifact exec times
@@ -46,6 +47,10 @@ pub enum Command {
         opts: SweepOpts,
     },
     Storm {
+        cfg: ExperimentConfig,
+        opts: SweepOpts,
+    },
+    Crossover {
         cfg: ExperimentConfig,
         opts: SweepOpts,
     },
@@ -99,17 +104,22 @@ USAGE:
                                                  (emits storm_compare.csv). Single runs can
                                                  also storm via `run mtbf_s=4` or an explicit
                                                  scenario `run failures=proc@3:r5,node@7:r12`
+  reinitpp crossover [OPTIONS] [key=value ...]   replication-vs-checkpointing crossover
+                                                 sweep: all four recovery families (repl at
+                                                 degree 1 and 2) x MTBF x checkpoint interval
+                                                 x ranks 16/64/256 at 8 ranks/node, over the
+                                                 storm MTBF engine (emits crossover_compare.csv)
   reinitpp tables    [--which 1|2]               print the paper's tables
   reinitpp validate  [OPTIONS] [key=value ...]   check global-restart equivalence
   reinitpp calibrate [key=value ...]             measure artifact execution costs
 
 OPTIONS:
   --config FILE      load a TOML-subset config file
-  --max-ranks N      cap the sweep's rank counts (reproduce/scale/tiers/storm;
-                     scale defaults to 16384)
+  --max-ranks N      cap the sweep's rank counts (reproduce/scale/tiers/storm/
+                     crossover; scale defaults to 16384)
   --outdir DIR       CSV output directory (default: results)
   --jobs N           worker threads for trial execution
-                     (run/reproduce/scale/tiers/storm).
+                     (run/reproduce/scale/tiers/storm/crossover).
                      Must be >= 1: default all cores, 1 = serial execution on
                      the calling thread. Tables and CSVs are byte-identical
                      for any N.
@@ -129,6 +139,8 @@ EXAMPLES:
   reinitpp scale --max-ranks 16384 --jobs 8 trials=3
   reinitpp tiers --max-ranks 32 --jobs 4 trials=5
   reinitpp storm --max-ranks 256 --jobs 4 trials=5
+  reinitpp crossover --max-ranks 64 --jobs 4 trials=3
+  reinitpp run recovery=repl repl_degree=2 ranks=32 ranks_per_node=8 trials=3
   reinitpp validate app=comd recovery=ulfm failure=process
 ";
 
@@ -200,6 +212,20 @@ fn reject_scenario_keys(cmd: &str, cfg: &ExperimentConfig) -> Result<(), CliErro
     Ok(())
 }
 
+/// The replication axis is owned the same way: the figure sweeps reproduce
+/// the paper's three methods (no replication row), and the grid sweeps set
+/// the degree per point — `crossover` sweeps it explicitly. Ad-hoc degrees
+/// belong on `run recovery=repl repl_degree=N`.
+fn reject_repl_degree(cmd: &str, cfg: &ExperimentConfig) -> Result<(), CliError> {
+    if cfg.repl_degree != 1 {
+        return Err(err(format!(
+            "{cmd}: repl_degree is not a free axis here (the crossover/storm \
+             sweeps set it per point); use `run recovery=repl repl_degree=N`"
+        )));
+    }
+    Ok(())
+}
+
 /// Grid axes a sweep subcommand owns (sets per point); user overrides are
 /// rejected with a message naming the sweep rather than silently folded in.
 /// The production analogue of the tests' `assert_rejects_keys` matrix —
@@ -223,6 +249,7 @@ fn reject_grid_owned_axes(
     axes: &GridOwnedAxes,
 ) -> Result<(), CliError> {
     reject_scenario_keys(cmd, cfg)?;
+    reject_repl_degree(cmd, cfg)?;
     let defaults = ExperimentConfig::default();
     if cfg.ranks != defaults.ranks {
         return Err(err(format!(
@@ -301,6 +328,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
         "reproduce" => {
             let (cfg, leftovers) = parse_cfg(rest)?;
             reject_scenario_keys("reproduce", &cfg)?;
+            reject_repl_degree("reproduce", &cfg)?;
             let mut figure = None;
             let mut opts = SweepOpts::default();
             parse_sweep_opts("reproduce", &leftovers, &mut opts, |a, it| {
@@ -406,6 +434,45 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let mut opts = SweepOpts::default();
             parse_sweep_opts("storm", &leftovers, &mut opts, |_, _| Ok(false))?;
             Ok(Command::Storm { cfg, opts })
+        }
+        "crossover" => {
+            // Crossover defaults: the storm base (quick modeled trials with
+            // paper-scale virtual iteration cost), plus 8 ranks/node so even
+            // the 16-rank rung spans two compute nodes — degree-2 shadow
+            // placement is a grid axis, not an opt-in.
+            let mut base = ExperimentConfig {
+                trials: 3,
+                iters: 40,
+                ranks_per_node: crate::config::presets::CROSSOVER_RANKS_PER_NODE,
+                fidelity: crate::config::Fidelity::Modeled,
+                hpccg_nx: 4,
+                comd_n: 32,
+                lulesh_nx: 4,
+                max_failures: crate::config::presets::STORM_MAX_FAILURES,
+                ..ExperimentConfig::default()
+            };
+            base.calib.modeled_compute_scale = crate::config::presets::STORM_COMPUTE_SCALE;
+            let (cfg, leftovers) = parse_cfg_from(base, rest)?;
+            reject_grid_owned_axes(
+                "crossover",
+                &cfg,
+                &GridOwnedAxes {
+                    ranks_grid: "16/64/256",
+                    recovery_owned: true,
+                    failure_axis: "injects process-failure storms",
+                    ckpt_axis: "uses the paper's Table 2 checkpoint policy per \
+                                recovery method",
+                },
+            )?;
+            // the checkpoint interval is the sweep's second axis
+            if cfg.ckpt_every != ExperimentConfig::default().ckpt_every {
+                return Err(err(
+                    "crossover: the sweep sets ckpt_every per point; drop ckpt_every=",
+                ));
+            }
+            let mut opts = SweepOpts::default();
+            parse_sweep_opts("crossover", &leftovers, &mut opts, |_, _| Ok(false))?;
+            Ok(Command::Crossover { cfg, opts })
         }
         other => Err(err(format!("unknown command `{other}`\n\n{USAGE}"))),
     }
@@ -560,6 +627,13 @@ pub fn execute(cmd: Command) -> i32 {
                 2
             }
         },
+        Command::Crossover { cfg, opts } => match harness::crossover_sweep(&cfg, &opts) {
+            Ok(_) => 0,
+            Err(e) => {
+                eprintln!("{e}");
+                2
+            }
+        },
         Command::Validate { cfg } => {
             if let Err(e) = cfg.validate() {
                 eprintln!("{e}");
@@ -675,6 +749,7 @@ mod tests {
                     "ckpt_tiers=local+partner1",
                     "failures=proc@3:r5",
                     "mtbf_s=2",
+                    "repl_degree=2",
                 ],
             ),
             (
@@ -686,6 +761,7 @@ mod tests {
                     "ckpt=memory",
                     "failures=proc@3:r5",
                     "mtbf_s=2",
+                    "repl_degree=2",
                 ],
             ),
             (
@@ -698,18 +774,36 @@ mod tests {
                     "ckpt_tiers=local+partner1",
                     "failures=proc@3:r5",
                     "mtbf_s=2",
+                    "repl_degree=2",
+                ],
+            ),
+            (
+                "crossover",
+                &[
+                    "ranks=128",
+                    "recovery=cr",
+                    "failure=node",
+                    "ckpt=file",
+                    "ckpt_tiers=local+partner1",
+                    "failures=proc@3:r5",
+                    "mtbf_s=2",
+                    "repl_degree=2",
+                    "ckpt_every=4",
                 ],
             ),
         ];
         for (cmd, keys) in matrix {
             assert_rejects_keys(cmd, keys);
         }
-        // reproduce owns its figure grids the same way for scenario keys
+        // reproduce owns its figure grids the same way for scenario keys,
+        // and runs the paper's three methods — no replication axis
         assert!(parse(&sv(&["reproduce", "--figure", "4", "mtbf_s=2"])).is_err());
         assert!(parse(&sv(&["reproduce", "--figure", "4", "failures=proc@3:r5"])).is_err());
+        assert!(parse(&sv(&["reproduce", "--figure", "4", "repl_degree=2"])).is_err());
         // `run` accepts the scenario keys those sweeps reject
         assert!(parse(&sv(&["run", "mtbf_s=2"])).is_ok());
         assert!(parse(&sv(&["run", "failures=proc@3:r5"])).is_ok());
+        assert!(parse(&sv(&["run", "recovery=repl", "repl_degree=2"])).is_ok());
     }
 
     #[test]
@@ -794,7 +888,7 @@ mod tests {
 
     #[test]
     fn jobs_zero_is_rejected_with_serial_hint() {
-        for cmd in ["run", "tiers", "scale", "storm"] {
+        for cmd in ["run", "tiers", "scale", "storm", "crossover"] {
             let e = parse(&sv(&[cmd, "--jobs", "0"])).unwrap_err();
             assert!(
                 e.to_string().contains("use 1 for serial"),
@@ -846,6 +940,40 @@ mod tests {
         assert!(parse(&sv(&["storm", "--figure", "4"])).is_err(), "unknown arg");
         // trial count / iteration knobs stay overridable
         assert!(parse(&sv(&["storm", "iters=60", "max_failures=3"])).is_ok());
+    }
+
+    #[test]
+    fn parse_crossover_defaults_and_options() {
+        let cmd = parse(&sv(&[
+            "crossover",
+            "--max-ranks",
+            "64",
+            "--jobs",
+            "2",
+            "trials=4",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Crossover { cfg, opts } => {
+                assert_eq!(cfg.trials, 4);
+                assert_eq!(cfg.fidelity, crate::config::Fidelity::Modeled);
+                assert_eq!(
+                    cfg.ranks_per_node,
+                    crate::config::presets::CROSSOVER_RANKS_PER_NODE,
+                    "crossover base spans >= 2 nodes on every rung"
+                );
+                assert_eq!(
+                    cfg.max_failures,
+                    crate::config::presets::STORM_MAX_FAILURES
+                );
+                assert_eq!(opts.max_ranks, 64);
+                assert_eq!(opts.jobs, 2);
+            }
+            _ => panic!(),
+        }
+        assert!(parse(&sv(&["crossover", "--figure", "4"])).is_err(), "unknown arg");
+        // trial count / iteration knobs stay overridable
+        assert!(parse(&sv(&["crossover", "iters=60", "max_failures=3"])).is_ok());
     }
 
     #[test]

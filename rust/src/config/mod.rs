@@ -43,7 +43,9 @@ impl fmt::Display for AppKind {
     }
 }
 
-/// Global-restart recovery approach (paper §4).
+/// Recovery approach: the paper's three global-restart families (§4) plus
+/// replication (FTHP-MPI / PartRePer-MPI lineage) — the one family that
+/// recovers without rollback.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum RecoveryKind {
     /// Checkpoint-Restart: abort + full re-deploy.
@@ -52,10 +54,24 @@ pub enum RecoveryKind {
     Ulfm,
     /// Reinit++ (this paper's contribution).
     Reinit,
+    /// Replication: each rank backed by `repl_degree - 1` node-disjoint
+    /// shadow replicas; a primary's death promotes a replica (failover,
+    /// zero rollback) until the group is exhausted.
+    Replication,
 }
 
 impl RecoveryKind {
-    pub const ALL: [RecoveryKind; 3] =
+    pub const ALL: [RecoveryKind; 4] = [
+        RecoveryKind::Cr,
+        RecoveryKind::Ulfm,
+        RecoveryKind::Reinit,
+        RecoveryKind::Replication,
+    ];
+
+    /// The three families the source paper evaluates — the figure sweeps
+    /// reproduce its plots and must not grow rows when new families join
+    /// [`RecoveryKind::ALL`].
+    pub const PAPER: [RecoveryKind; 3] =
         [RecoveryKind::Cr, RecoveryKind::Ulfm, RecoveryKind::Reinit];
 
     pub fn parse(s: &str) -> Option<RecoveryKind> {
@@ -63,6 +79,7 @@ impl RecoveryKind {
             "cr" => Some(RecoveryKind::Cr),
             "ulfm" => Some(RecoveryKind::Ulfm),
             "reinit" | "reinit++" | "reinitpp" => Some(RecoveryKind::Reinit),
+            "repl" | "replication" => Some(RecoveryKind::Replication),
             _ => None,
         }
     }
@@ -74,6 +91,7 @@ impl fmt::Display for RecoveryKind {
             RecoveryKind::Cr => write!(f, "CR"),
             RecoveryKind::Ulfm => write!(f, "ULFM"),
             RecoveryKind::Reinit => write!(f, "Reinit++"),
+            RecoveryKind::Replication => write!(f, "Replication"),
         }
     }
 }
@@ -186,6 +204,11 @@ pub struct ExperimentConfig {
     /// (the paper's over-provisioning requirement, §3.2).
     pub spare_nodes: u32,
     pub recovery: RecoveryKind,
+    /// Replication group size per logical rank (`repl_degree=2` = one
+    /// node-disjoint shadow replica). 1 = no replicas: every failure
+    /// degrades to a CR-style redeploy. Only meaningful with
+    /// `recovery=repl`.
+    pub repl_degree: u32,
     pub failure: FailureKind,
     /// Explicit multi-failure scenario
     /// (`failures=proc@3:r5,node@7:r12,proc@t1.25:r3`); overrides the
@@ -230,6 +253,7 @@ impl Default for ExperimentConfig {
             ranks_per_node: 16,
             spare_nodes: 1,
             recovery: RecoveryKind::Reinit,
+            repl_degree: 1,
             failure: FailureKind::Process,
             failures: Vec::new(),
             mtbf_s: 0.0,
@@ -352,6 +376,13 @@ impl ExperimentConfig {
             "recovery" => {
                 self.recovery = RecoveryKind::parse(value)
                     .ok_or_else(|| cerr(format!("unknown recovery: {value}")))?
+            }
+            "repl_degree" => {
+                let v: u32 = num!();
+                if v == 0 {
+                    return Err(cerr("repl_degree must be >= 1 (1 = no replicas)"));
+                }
+                self.repl_degree = v;
             }
             "failure" => {
                 self.failure = FailureKind::parse(value)
@@ -496,6 +527,26 @@ impl ExperimentConfig {
             return Err(cerr(
                 "node-failure experiments need spare_nodes >= 1 (over-provisioning, paper §3.2)",
             ));
+        }
+        if self.repl_degree > 1 && self.recovery != RecoveryKind::Replication {
+            return Err(cerr(format!(
+                "repl_degree={} is only meaningful with recovery=repl (got recovery={})",
+                self.repl_degree, self.recovery
+            )));
+        }
+        if self.repl_degree > self.nodes() {
+            // A same-node shadow replica dies with its primary and defeats
+            // the whole point; refuse the degenerate placement outright.
+            return Err(cerr(format!(
+                "repl_degree={} needs at least {} compute nodes for node-disjoint \
+                 replica placement, but {} ranks at ranks_per_node={} give only {} \
+                 — lower ranks_per_node (more nodes) or lower repl_degree",
+                self.repl_degree,
+                self.repl_degree,
+                self.ranks,
+                self.ranks_per_node,
+                self.nodes()
+            )));
         }
         let stack = self.effective_stack();
         stack.check().map_err(cerr)?;
@@ -761,6 +812,47 @@ mod tests {
     fn display_names_match_paper() {
         assert_eq!(RecoveryKind::Reinit.to_string(), "Reinit++");
         assert_eq!(RecoveryKind::Cr.to_string(), "CR");
+        assert_eq!(RecoveryKind::Replication.to_string(), "Replication");
         assert_eq!(AppKind::Hpccg.to_string(), "HPCCG");
+    }
+
+    #[test]
+    fn recovery_all_includes_replication_and_paper_stays_three() {
+        assert_eq!(RecoveryKind::ALL.len(), 4);
+        assert!(RecoveryKind::ALL.contains(&RecoveryKind::Replication));
+        assert_eq!(
+            RecoveryKind::PAPER,
+            [RecoveryKind::Cr, RecoveryKind::Ulfm, RecoveryKind::Reinit],
+            "figure sweeps reproduce the paper's three families only"
+        );
+        assert_eq!(RecoveryKind::parse("repl"), Some(RecoveryKind::Replication));
+        assert_eq!(
+            RecoveryKind::parse("replication"),
+            Some(RecoveryKind::Replication)
+        );
+    }
+
+    #[test]
+    fn repl_degree_applies_and_validates() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.repl_degree, 1, "default: no replicas");
+        assert!(c.apply("repl_degree", "0").is_err());
+        assert!(c.apply("repl_degree", "x").is_err());
+        c.apply("repl_degree", "2").unwrap();
+        assert_eq!(c.repl_degree, 2);
+        // degree > 1 without recovery=repl is a config error
+        assert!(c.validate().is_err());
+        c.apply("recovery", "repl").unwrap();
+        // default scale is a single compute node: node-disjoint placement
+        // impossible, and the message must say how to fix it
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("node-disjoint"), "{err}");
+        assert!(err.contains("ranks_per_node"), "{err}");
+        c.apply("ranks_per_node", "8").unwrap(); // 16 ranks -> 2 nodes
+        c.validate().unwrap();
+        // replication without replicas is valid everywhere (degrades to CR)
+        let mut c = ExperimentConfig::default();
+        c.apply("recovery", "repl").unwrap();
+        c.validate().unwrap();
     }
 }

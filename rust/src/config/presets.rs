@@ -73,6 +73,27 @@ pub const STORM_MAX_FAILURES: u32 = 6;
 /// failures inside the run — at zero extra host cost.
 pub const STORM_COMPUTE_SCALE: f64 = 12_000.0;
 
+/// Replica-group size the storm sweep runs replication at. Degree 2 (one
+/// shadow per primary) is the canonical rSDC/FTHP-MPI configuration: 2x
+/// the processes, one free failover per group. Storm rungs whose node
+/// count cannot host node-disjoint shadows skip replication entirely.
+pub const STORM_REPL_DEGREE: u32 = 2;
+
+/// Replica-group size of the scale sweep's replication points (see
+/// `STORM_REPL_DEGREE`; at 512+ ranks every rung has plenty of nodes).
+pub const SCALE_REPL_DEGREE: u32 = 2;
+
+/// Checkpoint-interval axis of the crossover sweep (`reinitpp crossover`):
+/// every iteration (the paper's Table 2 policy) vs. every 4th — the knob
+/// that trades rollback distance against write bandwidth, which is exactly
+/// what replication's zero-rollback failover competes with.
+pub const CROSSOVER_CKPT_EVERY: [u32; 2] = [1, 4];
+
+/// Ranks per node for the crossover sweep — below the paper's 16 so even
+/// the 16-rank rung spans two compute nodes and can place node-disjoint
+/// shadow replicas (degree 2 is a grid axis, not an opt-in).
+pub const CROSSOVER_RANKS_PER_NODE: u32 = 8;
+
 /// The parsed tier-sweep stacks.
 pub fn tier_sweep_stacks() -> Vec<StackSpec> {
     TIER_SWEEP_STACKS
@@ -150,6 +171,20 @@ mod tests {
         assert!(STORM_SWEEP_MTBF_S.iter().all(|&m| m > 0.0));
         assert!(STORM_SWEEP_RANKS.windows(2).all(|w| w[0] < w[1]));
         assert!(STORM_MAX_FAILURES >= 2, "storms need repeated failures");
+        assert!(STORM_REPL_DEGREE >= 2, "degree 1 replication never fails over");
+        assert!(SCALE_REPL_DEGREE >= 2);
+    }
+
+    #[test]
+    fn crossover_presets_span_nodes_and_intervals() {
+        assert!(CROSSOVER_CKPT_EVERY.windows(2).all(|w| w[0] < w[1]));
+        assert!(CROSSOVER_CKPT_EVERY.iter().all(|&k| k >= 1));
+        for r in STORM_SWEEP_RANKS {
+            assert!(
+                r / CROSSOVER_RANKS_PER_NODE >= STORM_REPL_DEGREE,
+                "every crossover rung must host node-disjoint degree-{STORM_REPL_DEGREE} groups"
+            );
+        }
     }
 
     #[test]

@@ -139,4 +139,148 @@ mod tests {
         let s = sim.run();
         assert_eq!(s.tasks_pending, 0);
     }
+
+    /// Deterministic xorshift64 for the pseudo-property loops below: the
+    /// offline build has no proptest, so seeded loops over randomized group
+    /// shapes give the same coverage reproducibly.
+    fn xorshift(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x
+    }
+
+    #[test]
+    fn no_false_positive_for_slow_but_alive_replicas() {
+        // Property: detection is death-triggered, never latency-triggered.
+        // A replica that is merely slow — its process sits in a virtual
+        // sleep far longer than any SIGCHLD delay — must produce no event,
+        // for any group size and any per-watcher delay.
+        let mut seed = 0x5eed_0001_u64;
+        for round in 0..16 {
+            let sim = Sim::new();
+            let daemon = sim.spawn_process("daemon");
+            let (tx, rx) = channel::<DetectEvent>(&sim);
+            let group = 1 + (xorshift(&mut seed) % 8) as u32;
+            for r in 0..group {
+                let child = sim.spawn_process("replica");
+                let delay = SimDuration::from_millis(1 + xorshift(&mut seed) % 500);
+                watch_child(&sim, daemon, child, r, delay, tx.clone());
+                let s2 = sim.clone();
+                sim.spawn(child, async move {
+                    s2.sleep(SimDuration::from_secs_f64(30.0)).await;
+                });
+            }
+            let seen = Rc::new(RefCell::new(0u32));
+            let seen2 = Rc::clone(&seen);
+            sim.spawn(daemon, async move {
+                while rx.recv().await.is_ok() {
+                    *seen2.borrow_mut() += 1;
+                }
+            });
+            sim.run();
+            assert_eq!(
+                *seen.borrow(),
+                0,
+                "round {round}: a slow-but-alive replica was misdetected"
+            );
+        }
+    }
+
+    #[test]
+    fn exactly_one_detection_per_real_death() {
+        // Property: over a replica group of any shape, killing an arbitrary
+        // subset at arbitrary times yields exactly one event per killed
+        // rank — no duplicates, no misses, no events for survivors.
+        let mut seed = 0xdead_beef_u64;
+        for round in 0..16 {
+            let sim = Sim::new();
+            let daemon = sim.spawn_process("daemon");
+            let (tx, rx) = channel::<DetectEvent>(&sim);
+            let group = 2 + (xorshift(&mut seed) % 7) as u32;
+            let mut killed: Vec<u32> = Vec::new();
+            for r in 0..group {
+                let child = sim.spawn_process("replica");
+                let delay = SimDuration::from_millis(1 + xorshift(&mut seed) % 20);
+                watch_child(&sim, daemon, child, r, delay, tx.clone());
+                // kill roughly half the group; always kill rank 0 so every
+                // round has at least one real death
+                if r == 0 || xorshift(&mut seed) % 2 == 0 {
+                    let t = SimDuration::from_millis(1 + xorshift(&mut seed) % 200);
+                    let s2 = sim.clone();
+                    sim.schedule(t, move || s2.kill(child));
+                    killed.push(r);
+                }
+            }
+            let seen = Rc::new(RefCell::new(Vec::new()));
+            let seen2 = Rc::clone(&seen);
+            sim.spawn(daemon, async move {
+                while let Ok(e) = rx.recv().await {
+                    seen2.borrow_mut().push(e);
+                }
+            });
+            sim.run();
+            let mut got: Vec<u32> = seen
+                .borrow()
+                .iter()
+                .map(|e| match e {
+                    DetectEvent::RankDead { rank, .. } => *rank,
+                    other => panic!("round {round}: unexpected event {other:?}"),
+                })
+                .collect();
+            got.sort_unstable();
+            assert_eq!(
+                got, killed,
+                "round {round}: one detection per real death, nothing else"
+            );
+        }
+    }
+
+    #[test]
+    fn detection_latency_is_bounded_by_the_configured_delay() {
+        // Property: a replica group member's detection latency is exactly
+        // its watcher's configured delivery delay (SIGCHLD handling or TCP
+        // break detection) — in particular it is bounded by that delay and
+        // independent of group size or kill timing.
+        let mut seed = 0x1a7e_c0de_u64;
+        for round in 0..16 {
+            let sim = Sim::new();
+            let daemon = sim.spawn_process("daemon");
+            let (tx, rx) = channel::<DetectEvent>(&sim);
+            let group = 1 + (xorshift(&mut seed) % 6) as u32;
+            let mut delays = Vec::new();
+            for r in 0..group {
+                let child = sim.spawn_process("replica");
+                let delay = SimDuration::from_millis(1 + xorshift(&mut seed) % 400);
+                delays.push(delay);
+                watch_child(&sim, daemon, child, r, delay, tx.clone());
+                let t = SimDuration::from_millis(1 + xorshift(&mut seed) % 300);
+                let s2 = sim.clone();
+                sim.schedule(t, move || s2.kill(child));
+            }
+            let seen = Rc::new(RefCell::new(Vec::new()));
+            let seen2 = Rc::clone(&seen);
+            let s3 = sim.clone();
+            sim.spawn(daemon, async move {
+                while let Ok(e) = rx.recv().await {
+                    seen2.borrow_mut().push((e, s3.now()));
+                }
+            });
+            sim.run();
+            let v = seen.borrow();
+            assert_eq!(v.len(), group as usize, "round {round}: every death detected");
+            for (e, delivered) in v.iter() {
+                let DetectEvent::RankDead { rank, at } = e else {
+                    panic!("round {round}: unexpected event {e:?}");
+                };
+                let latency = *delivered - *at;
+                assert_eq!(
+                    latency, delays[*rank as usize],
+                    "round {round} rank {rank}: latency must equal the configured delay"
+                );
+            }
+        }
+    }
 }

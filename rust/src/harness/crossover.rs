@@ -1,0 +1,325 @@
+//! Replication-vs-checkpointing crossover sweep (`reinitpp crossover`):
+//! MTBF × recovery family × replication degree × checkpoint interval ×
+//! ranks.
+//!
+//! The classic FT trade-off (rMPI, RedMPI, FTHP-MPI, PartRePer-MPI):
+//! checkpointing pays a per-iteration write plus a rollback re-execution
+//! per failure; replication pays 2x the processes plus steady-state
+//! mirroring bandwidth, and in exchange a primary's failure costs only a
+//! shadow promotion — zero rollback. Somewhere between "occasional
+//! failure" and "failure storm" the curves cross. This sweep maps that
+//! crossover empirically over the `storm` MTBF engine: every recovery
+//! family (CR / Reinit++ / ULFM at degree 1, replication at degree 1 and
+//! `presets::STORM_REPL_DEGREE`) against the storm MTBF grid and the
+//! `presets::CROSSOVER_CKPT_EVERY` checkpoint-interval axis.
+//!
+//! Ranks per node defaults to `presets::CROSSOVER_RANKS_PER_NODE` (set by
+//! the CLI base) so the smallest rung already spans two compute nodes and
+//! node-disjoint shadow placement fits at every point — degree is a grid
+//! axis here, not an opt-in. An override that breaks placement fails the
+//! per-point `validate()` with the config layer's actionable message.
+//!
+//! Like every harness sweep, the grid is flattened to (point, trial) work
+//! items for the pool and merged deterministically, so
+//! `crossover_compare.csv` is byte-identical for any `--jobs` value
+//! (pinned by the unit test below and a serial-vs-2-worker `cmp` in CI).
+
+use super::figures::{cell, SweepOpts};
+use super::{run_points, Point};
+use crate::config::{presets, ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
+
+/// The family rows of the grid: (recovery, replication degree). Degree-1
+/// replication is a deliberate row — it mirrors nothing and degrades to a
+/// full re-deploy on the first failure, isolating the cost of the
+/// replication *machinery* from the benefit of actual shadows.
+const FAMILIES: [(RecoveryKind, u32); 5] = [
+    (RecoveryKind::Cr, 1),
+    (RecoveryKind::Reinit, 1),
+    (RecoveryKind::Ulfm, 1),
+    (RecoveryKind::Replication, 1),
+    (RecoveryKind::Replication, presets::STORM_REPL_DEGREE),
+];
+
+/// Rank counts the crossover sweep visits (the storm rungs, capped by
+/// `--max-ranks`).
+fn sweep_ranks(max: u32) -> Vec<u32> {
+    presets::STORM_SWEEP_RANKS
+        .iter()
+        .copied()
+        .filter(|&r| r <= max)
+        .collect()
+}
+
+/// Build the sweep grid: family × ranks × MTBF × checkpoint interval,
+/// process-failure storms, modeled fidelity.
+fn build_grid(
+    base: &ExperimentConfig,
+    opts: &SweepOpts,
+) -> Result<Vec<ExperimentConfig>, String> {
+    if base.fidelity != Fidelity::Modeled {
+        return Err(
+            "crossover: the sweep runs fidelity=modeled (storm trials re-execute \
+             many iterations); drop fidelity="
+                .to_string(),
+        );
+    }
+    let mut cfgs = Vec::new();
+    for &ranks in &sweep_ranks(opts.max_ranks) {
+        for &(rk, degree) in &FAMILIES {
+            for &mtbf in &presets::STORM_SWEEP_MTBF_S {
+                for &every in &presets::CROSSOVER_CKPT_EVERY {
+                    let mut c = base.clone();
+                    c.ranks = ranks;
+                    c.recovery = rk;
+                    c.repl_degree = degree;
+                    c.failure = FailureKind::Process;
+                    c.mtbf_s = mtbf;
+                    c.ckpt_every = every;
+                    c.ckpt = None; // Table 2 policy per method
+                    c.validate().map_err(|e| {
+                        format!(
+                            "crossover point ranks={ranks} recovery={rk} degree={degree} \
+                             mtbf={mtbf} ckpt_every={every}: {e}"
+                        )
+                    })?;
+                    cfgs.push(c);
+                }
+            }
+        }
+    }
+    if cfgs.is_empty() {
+        return Err(format!(
+            "crossover sweep: no rank count of {:?} fits --max-ranks {}",
+            presets::STORM_SWEEP_RANKS,
+            opts.max_ranks
+        ));
+    }
+    Ok(cfgs)
+}
+
+/// Run the crossover sweep: markdown table on stdout, CSV under
+/// `outdir/crossover_compare.csv`.
+pub fn crossover_sweep(
+    base: &ExperimentConfig,
+    opts: &SweepOpts,
+) -> Result<Vec<Point>, String> {
+    let cfgs = build_grid(base, opts)?;
+    let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
+    eprintln!(
+        "  crossover sweep: {} points / {trials} trials (MTBF {:?} s, ckpt every {:?}) on {} worker(s)...",
+        cfgs.len(),
+        presets::STORM_SWEEP_MTBF_S,
+        presets::CROSSOVER_CKPT_EVERY,
+        opts.jobs
+    );
+    let (points, stats) = run_points(&cfgs, opts.jobs);
+    eprintln!(
+        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
+        stats.wall_s,
+        stats.trials_per_sec(),
+        stats.utilization() * 100.0
+    );
+
+    println!(
+        "\n## Replication vs checkpointing crossover ({}): MTBF x degree x ckpt interval\n",
+        base.app
+    );
+    println!(
+        "| ranks | recovery | deg | mtbf (s) | ckpt every | failures | failovers | \
+         total (s) | recovery (s) | rollback (s) | failover (s) | mirror (s) | degraded |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|---|---|---|---|");
+    for p in &points {
+        println!(
+            "| {} | {} | {} | {} | {} | {:.1} | {:.1} | {} | {} | {} | {} | {:.3} | {:.1} |",
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.repl_degree,
+            p.cfg.mtbf_s,
+            p.cfg.ckpt_every,
+            p.failures,
+            p.failovers,
+            cell(&p.total),
+            cell(&p.event_recovery),
+            cell(&p.rollback),
+            cell(&p.failover),
+            p.mirror_s,
+            p.degraded,
+        );
+    }
+    println!("\n(expected shape: at loose MTBF checkpointing wins — replication pays");
+    println!(" mirroring for failovers it rarely needs; as MTBF tightens below the");
+    println!(" re-deploy/rollback anchors the zero-rollback failover pulls ahead —");
+    println!(" see EXPERIMENTS.md §Replication crossover)");
+
+    if let Err(e) = write_crossover_csv(&opts.outdir, &points) {
+        eprintln!("WARN: could not write crossover_compare.csv: {e}");
+    }
+    Ok(points)
+}
+
+/// `crossover_compare.csv`: one row per (ranks, family, mtbf, ckpt_every)
+/// point, with the per-event decomposition plus the replication columns.
+fn write_crossover_csv(outdir: &str, points: &[Point]) -> std::io::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    let mut s = String::from(
+        "app,ranks,recovery,repl_degree,mtbf_s,ckpt_every,max_failures,failures,\
+         failovers,degraded,total_s,total_ci,detect_s,detect_ci,\
+         recovery_s,recovery_ci,failover_s,failover_ci,rollback_s,rollback_ci,\
+         ckpt_write_s,ckpt_read_s,mirror_s,mirror_mb,app_s,trials\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            p.cfg.app,
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.repl_degree,
+            p.cfg.mtbf_s,
+            p.cfg.ckpt_every,
+            p.cfg.max_failures,
+            p.failures,
+            p.failovers,
+            p.degraded,
+            p.total.mean,
+            p.total.ci95,
+            p.detect.mean,
+            p.detect.ci95,
+            p.event_recovery.mean,
+            p.event_recovery.ci95,
+            p.failover.mean,
+            p.failover.ci95,
+            p.rollback.mean,
+            p.rollback.ci95,
+            p.ckpt_write.mean,
+            p.ckpt_read.mean,
+            p.mirror_s,
+            p.mirror_mb,
+            p.app.mean,
+            p.total.n,
+        ));
+    }
+    std::fs::write(format!("{outdir}/crossover_compare.csv"), s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AppKind;
+
+    fn quick_base() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.app = AppKind::Hpccg;
+        c.trials = 2;
+        c.iters = 20;
+        c.ranks_per_node = presets::CROSSOVER_RANKS_PER_NODE;
+        c.fidelity = Fidelity::Modeled;
+        c.hpccg_nx = 4;
+        c.max_failures = presets::STORM_MAX_FAILURES;
+        // paper-scale virtual iteration cost, same anchor as the storm sweep
+        c.calib.modeled_compute_scale = presets::STORM_COMPUTE_SCALE;
+        c
+    }
+
+    #[test]
+    fn grid_shape() {
+        let opts = SweepOpts {
+            max_ranks: 256,
+            outdir: "/tmp/reinitpp-test-results".into(),
+            jobs: 1,
+        };
+        let cfgs = build_grid(&quick_base(), &opts).unwrap();
+        // 3 rungs x 5 family rows x 3 MTBFs x 2 ckpt intervals
+        assert_eq!(
+            cfgs.len(),
+            presets::STORM_SWEEP_RANKS.len()
+                * FAMILIES.len()
+                * presets::STORM_SWEEP_MTBF_S.len()
+                * presets::CROSSOVER_CKPT_EVERY.len()
+        );
+        assert!(cfgs
+            .iter()
+            .all(|c| c.failure == FailureKind::Process && c.mtbf_s > 0.0));
+        // every rung spans >= 2 nodes: degree 2 placement always fits
+        assert!(cfgs
+            .iter()
+            .all(|c| c.nodes() >= presets::STORM_REPL_DEGREE));
+        // all four recovery families are on the grid
+        for rk in RecoveryKind::ALL {
+            assert!(cfgs.iter().any(|c| c.recovery == rk), "missing {rk}");
+        }
+    }
+
+    #[test]
+    fn non_modeled_fidelity_is_rejected() {
+        let mut base = quick_base();
+        base.fidelity = Fidelity::Auto;
+        let err = build_grid(&base, &SweepOpts::default()).unwrap_err();
+        assert!(err.contains("modeled"), "{err}");
+    }
+
+    #[test]
+    fn crossover_sweep_runs_and_is_jobs_deterministic() {
+        // The smallest rung, serial vs 2 workers: identical Points and
+        // therefore identical crossover_compare.csv bytes.
+        let base = quick_base();
+        let mk = |jobs, outdir: &str| SweepOpts {
+            max_ranks: 16,
+            outdir: outdir.into(),
+            jobs,
+        };
+        let serial =
+            crossover_sweep(&base, &mk(1, "/tmp/reinitpp-test-results/crossover-j1"))
+                .unwrap();
+        let par =
+            crossover_sweep(&base, &mk(2, "/tmp/reinitpp-test-results/crossover-j2"))
+                .unwrap();
+        assert_eq!(serial.len(), 30, "16 ranks x 5 families x 3 MTBFs x 2 intervals");
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.cfg.recovery, b.cfg.recovery);
+            assert_eq!(a.cfg.repl_degree, b.cfg.repl_degree);
+            assert_eq!(a.total, b.total);
+            assert_eq!(a.failover, b.failover);
+            assert_eq!(a.failures, b.failures);
+            assert_eq!(a.failovers, b.failovers);
+        }
+        let j1 =
+            std::fs::read("/tmp/reinitpp-test-results/crossover-j1/crossover_compare.csv")
+                .unwrap();
+        let j2 =
+            std::fs::read("/tmp/reinitpp-test-results/crossover-j2/crossover_compare.csv")
+                .unwrap();
+        assert!(!j1.is_empty());
+        assert_eq!(j1, j2, "crossover CSV bytes must not depend on worker count");
+
+        let at = |rk: RecoveryKind, deg: u32, mtbf: f64, every: u32| {
+            serial
+                .iter()
+                .find(|p| {
+                    p.cfg.recovery == rk
+                        && p.cfg.repl_degree == deg
+                        && p.cfg.mtbf_s == mtbf
+                        && p.cfg.ckpt_every == every
+                })
+                .unwrap()
+        };
+        let tight = presets::STORM_SWEEP_MTBF_S[0];
+        // the crossover claim at the storm end of the grid: degree-2
+        // replication absorbs failures by failover (zero rollback booked)
+        // while CR pays a full re-deploy + rollback per event.
+        let repl = at(RecoveryKind::Replication, 2, tight, 1);
+        let cr = at(RecoveryKind::Cr, 1, tight, 1);
+        if repl.failures > 0.0 {
+            assert!(repl.failovers > 0.0, "storm must trigger failovers");
+            assert!(
+                repl.failover.mean > 0.0 && repl.rollback.mean < cr.rollback.mean,
+                "failover books promotion time, not rollback"
+            );
+        }
+        assert!(repl.mirror_mb > 0.0, "degree 2 must mirror state");
+        // degree-1 replication never fails over and mirrors nothing
+        let solo = at(RecoveryKind::Replication, 1, tight, 1);
+        assert_eq!(solo.failovers, 0.0);
+        assert_eq!(solo.mirror_mb, 0.0);
+    }
+}

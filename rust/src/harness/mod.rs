@@ -9,6 +9,7 @@
 //! worker threads, and merged back in (point, trial) order, so every table
 //! and CSV is bit-identical to a serial run for any `--jobs` value.
 
+mod crossover;
 mod figures;
 mod pool;
 mod scale;
@@ -16,6 +17,7 @@ mod storm;
 mod tables;
 mod tiers;
 
+pub use crossover::crossover_sweep;
 pub use figures::{fig4, fig5, fig6, fig7, print_points, write_csv, SweepOpts};
 pub use pool::{default_jobs, run_trials, TrialOut, TrialSpec};
 pub use scale::scale_sweep;
@@ -42,11 +44,21 @@ pub struct Point {
     pub detect: Summary,
     pub event_recovery: Summary,
     pub rollback: Summary,
+    /// Per-trial sum of replication failover (shadow-promotion) windows —
+    /// the time a failover segment books instead of recovery + rollback.
+    /// Zero for the non-replicated recovery families.
+    pub failover: Summary,
     /// Mean number of fired failures per trial (storms: events can also
     /// hit dead air and fire as no-ops).
     pub failures: f64,
+    /// Mean number of zero-rollback failovers per trial (replication only).
+    pub failovers: f64,
     /// Mean number of degraded (spare-exhausted) re-deploys per trial.
     pub degraded: f64,
+    /// Mean per-trial compute stall attributable to state mirroring, and
+    /// mean mirrored traffic in MB (replication's steady-state overhead).
+    pub mirror_s: f64,
+    pub mirror_mb: f64,
     /// Mean per-trial storage traffic (per-tier + shared-disk counters).
     pub storage: StorageMeans,
     /// Host seconds of trial compute attributed to this point (sum over its
@@ -67,8 +79,12 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
     let mut detect: Vec<f64> = Vec::with_capacity(outs.len());
     let mut ev_rec: Vec<f64> = Vec::with_capacity(outs.len());
     let mut rollback: Vec<f64> = Vec::with_capacity(outs.len());
+    let mut failover: Vec<f64> = Vec::with_capacity(outs.len());
     let mut fired = 0u32;
+    let mut failovers = 0u64;
     let mut degraded = 0u32;
+    let mut mirror_s = 0.0;
+    let mut mirror_mb = 0.0;
     let mut storage = Vec::with_capacity(outs.len());
     for o in outs {
         assert!(
@@ -84,13 +100,17 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
         detect.push(o.result.segments.iter().map(|s| s.detect_s).sum());
         ev_rec.push(o.result.segments.iter().map(|s| s.recovery_s).sum());
         rollback.push(o.result.segments.iter().map(|s| s.rollback_s).sum());
+        failover.push(o.result.segments.iter().map(|s| s.failover_s).sum());
         fired += o.result.faults.iter().filter(|f| f.fired).count() as u32;
+        failovers += o.result.failovers;
         degraded += o
             .result
             .segments
             .iter()
             .filter(|s| s.degraded_redeploy)
             .count() as u32;
+        mirror_s += o.result.mirror_s;
+        mirror_mb += o.result.mirror_mb;
         storage.push(o.result.storage);
     }
     let n = outs.len().max(1) as f64;
@@ -104,8 +124,12 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
         detect: mean_ci95(&detect),
         event_recovery: mean_ci95(&ev_rec),
         rollback: mean_ci95(&rollback),
+        failover: mean_ci95(&failover),
         failures: fired as f64 / n,
+        failovers: failovers as f64 / n,
         degraded: degraded as f64 / n,
+        mirror_s: mirror_s / n,
+        mirror_mb: mirror_mb / n,
         storage: StorageMeans::from_trials(&storage),
         wall_s: outs.iter().map(|o| o.host_s).sum(),
     }

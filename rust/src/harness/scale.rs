@@ -11,7 +11,9 @@
 //! 512..16384 ranks under a single process failure for every recovery
 //! method (ULFM capped at `presets::SCALE_ULFM_MAX_RANKS` — the survivor
 //! sets of shrink/agree are quadratic host memory at extreme scale, and
-//! the paper's own ULFM prototype stopped at 3072).
+//! the paper's own ULFM prototype stopped at 3072). Replication runs at
+//! node-disjoint degree `presets::SCALE_REPL_DEGREE` on every rung: at
+//! 512+ ranks each point spans dozens of nodes, so placement always fits.
 //!
 //! Like every harness sweep, the grid is flattened to (point, trial) work
 //! items for the pool and merged deterministically, so
@@ -55,6 +57,9 @@ fn build_grid(
             c.recovery = rk;
             c.failure = FailureKind::Process;
             c.ckpt = None; // Table 2 policy per method
+            if rk == RecoveryKind::Replication {
+                c.repl_degree = presets::SCALE_REPL_DEGREE;
+            }
             c.validate().map_err(|e| {
                 format!("scale sweep point ranks={ranks} recovery={rk}: {e}")
             })?;
@@ -145,8 +150,8 @@ mod tests {
             jobs: 1,
         };
         let cfgs = build_grid(&quick_base(), &opts).unwrap();
-        // 4 rank counts x 3 methods + 2 rank counts x {CR, Reinit}
-        assert_eq!(cfgs.len(), 4 * 3 + 2 * 2);
+        // 4 rank counts x 4 methods + 2 rank counts x {CR, Reinit, Repl}
+        assert_eq!(cfgs.len(), 4 * 4 + 2 * 3);
         assert!(cfgs.iter().all(|c| c.failure == FailureKind::Process));
         assert!(
             !cfgs
@@ -182,7 +187,7 @@ mod tests {
         let serial =
             scale_sweep(&base, &mk(1, "/tmp/reinitpp-test-results/scale-j1")).unwrap();
         let par = scale_sweep(&base, &mk(2, "/tmp/reinitpp-test-results/scale-j2")).unwrap();
-        assert_eq!(serial.len(), 3, "512 ranks x 3 recovery methods");
+        assert_eq!(serial.len(), 4, "512 ranks x 4 recovery methods");
         for (a, b) in serial.iter().zip(&par) {
             assert_eq!(a.cfg.recovery, b.cfg.recovery);
             assert_eq!(a.total, b.total);

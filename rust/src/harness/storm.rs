@@ -6,9 +6,12 @@
 //! actually differentiate, and Shrink-or-Substitute (arXiv 1810.00705)
 //! treats spare-pool exhaustion as a first-class scenario. This sweep runs
 //! an exponential MTBF arrival process (`fault::FaultTimeline`) over
-//! virtual time against all three recoveries: per point it reports how many
-//! failures actually landed, the per-event detect / recovery / rollback
-//! sums, and how often in-place recovery degraded to a CR-style re-deploy.
+//! virtual time against every recovery family (`RecoveryKind::ALL`):
+//! per point it reports how many failures actually landed, the per-event
+//! detect / recovery / rollback / failover sums, and how often in-place
+//! recovery degraded to a CR-style re-deploy. Replication runs at
+//! node-disjoint degree `presets::STORM_REPL_DEGREE`; rungs with a single
+//! compute node cannot place a node-disjoint shadow and skip it.
 //!
 //! Expected shape: at the generous end of the MTBF grid most trials see at
 //! most one failure; as MTBF tightens below the recovery-cost anchors
@@ -60,6 +63,12 @@ fn build_grid(
                 c.failure = FailureKind::Process;
                 c.mtbf_s = mtbf;
                 c.ckpt = None; // Table 2 policy per method
+                if rk == RecoveryKind::Replication {
+                    c.repl_degree = presets::STORM_REPL_DEGREE;
+                    if c.nodes() < c.repl_degree {
+                        continue; // no node-disjoint shadow placement on this rung
+                    }
+                }
                 c.validate().map_err(|e| {
                     format!("storm sweep point ranks={ranks} recovery={rk} mtbf={mtbf}: {e}")
                 })?;
@@ -103,12 +112,12 @@ pub fn storm_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Poin
     );
     println!(
         "| ranks | recovery | mtbf (s) | failures | total (s) | detect (s) | \
-         recovery (s) | rollback (s) | degraded |"
+         recovery (s) | rollback (s) | failover (s) | mirror (s) | degraded |"
     );
-    println!("|---|---|---|---|---|---|---|---|---|");
+    println!("|---|---|---|---|---|---|---|---|---|---|---|");
     for p in &points {
         println!(
-            "| {} | {} | {} | {:.1} | {} | {} | {} | {} | {:.1} |",
+            "| {} | {} | {} | {:.1} | {} | {} | {} | {} | {} | {:.3} | {:.1} |",
             p.cfg.ranks,
             p.cfg.recovery,
             p.cfg.mtbf_s,
@@ -117,6 +126,8 @@ pub fn storm_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Poin
             cell(&p.detect),
             cell(&p.event_recovery),
             cell(&p.rollback),
+            cell(&p.failover),
+            p.mirror_s,
             p.degraded,
         );
     }
@@ -137,19 +148,22 @@ pub fn storm_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Poin
 fn write_storm_csv(outdir: &str, points: &[Point]) -> std::io::Result<()> {
     std::fs::create_dir_all(outdir)?;
     let mut s = String::from(
-        "app,ranks,recovery,mtbf_s,max_failures,failures,degraded,\
+        "app,ranks,recovery,repl_degree,mtbf_s,max_failures,failures,failovers,degraded,\
          total_s,total_ci,detect_s,detect_ci,recovery_s,recovery_ci,\
-         rollback_s,rollback_ci,ckpt_write_s,ckpt_read_s,app_s,trials\n",
+         rollback_s,rollback_ci,failover_s,failover_ci,\
+         ckpt_write_s,ckpt_read_s,mirror_s,mirror_mb,app_s,trials\n",
     );
     for p in points {
         s.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             p.cfg.app,
             p.cfg.ranks,
             p.cfg.recovery,
+            p.cfg.repl_degree,
             p.cfg.mtbf_s,
             p.cfg.max_failures,
             p.failures,
+            p.failovers,
             p.degraded,
             p.total.mean,
             p.total.ci95,
@@ -159,8 +173,12 @@ fn write_storm_csv(outdir: &str, points: &[Point]) -> std::io::Result<()> {
             p.event_recovery.ci95,
             p.rollback.mean,
             p.rollback.ci95,
+            p.failover.mean,
+            p.failover.ci95,
             p.ckpt_write.mean,
             p.ckpt_read.mean,
+            p.mirror_s,
+            p.mirror_mb,
             p.app.mean,
             p.total.n,
         ));
@@ -195,13 +213,20 @@ mod tests {
             jobs: 1,
         };
         let cfgs = build_grid(&quick_base(), &opts).unwrap();
-        assert_eq!(
-            cfgs.len(),
-            presets::STORM_SWEEP_RANKS.len() * 3 * presets::STORM_SWEEP_MTBF_S.len()
-        );
+        // 16 ranks = 1 node at the paper's 16 ranks/node: replication has
+        // no node-disjoint shadow target and is skipped on that rung, so
+        // 3 recoveries x 3 MTBFs + 2 rungs x 4 recoveries x 3 MTBFs.
+        assert_eq!(cfgs.len(), 9 + 2 * 4 * 3);
         assert!(cfgs
             .iter()
             .all(|c| c.failure == FailureKind::Process && c.mtbf_s > 0.0));
+        assert!(!cfgs
+            .iter()
+            .any(|c| c.recovery == RecoveryKind::Replication && c.ranks == 16));
+        assert!(cfgs
+            .iter()
+            .filter(|c| c.recovery == RecoveryKind::Replication)
+            .all(|c| c.repl_degree == presets::STORM_REPL_DEGREE));
     }
 
     #[test]
@@ -225,7 +250,11 @@ mod tests {
         let serial =
             storm_sweep(&base, &mk(1, "/tmp/reinitpp-test-results/storm-j1")).unwrap();
         let par = storm_sweep(&base, &mk(2, "/tmp/reinitpp-test-results/storm-j2")).unwrap();
-        assert_eq!(serial.len(), 9, "16 ranks x 3 recoveries x 3 MTBFs");
+        assert_eq!(
+            serial.len(),
+            9,
+            "16 ranks x 3 recoveries x 3 MTBFs (replication needs >= 2 nodes)"
+        );
         for (a, b) in serial.iter().zip(&par) {
             assert_eq!(a.cfg.recovery, b.cfg.recovery);
             assert_eq!(a.total, b.total);

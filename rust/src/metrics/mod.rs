@@ -50,11 +50,21 @@ pub struct FailureSegment {
     pub detect_s: f64,
     pub recovery_s: f64,
     pub rollback_s: f64,
+    /// Replica promotion window (replication only): detection → the
+    /// slowest rank resuming. Failover segments report their cost here
+    /// *instead of* `recovery_s`/`rollback_s` — the promoted replica
+    /// already holds the frontier state, so no completed iteration is
+    /// re-executed (zero rollback by construction).
+    pub failover_s: f64,
+    /// This event was recovered by promoting a shadow replica (replication
+    /// failover) rather than by a rollback-based recovery.
+    pub failover: bool,
     /// A later failure arrived before this event's recovery completed:
     /// the recovery was restarted and is accounted to the later segment.
     pub interrupted: bool,
-    /// This node failure exhausted the spare pool: the in-place recovery
-    /// (Reinit++/ULFM) degraded to a CR-style full abort + re-deploy.
+    /// This failure exhausted the recovery's headroom — the spare pool
+    /// (Reinit++/ULFM node failures) or the replica group (replication) —
+    /// and degraded to a CR-style full abort + re-deploy.
     pub degraded_redeploy: bool,
 }
 
@@ -169,6 +179,7 @@ struct SegRaw {
     /// Iteration frontier (rank 0's last completed iteration) at the kill.
     lost_iter: i64,
     rollback_end: Option<SimTime>,
+    failover: bool,
     interrupted: bool,
     degraded: bool,
 }
@@ -243,6 +254,7 @@ impl TrialMetrics {
             resume_at: None,
             lost_iter,
             rollback_end: None,
+            failover: false,
             interrupted: false,
             degraded: false,
         });
@@ -265,20 +277,38 @@ impl TrialMetrics {
         }
     }
 
-    /// The in-flight recovery degraded to a full abort + re-deploy
-    /// (spare-pool exhaustion). Attributed to the newest node-failure
-    /// segment: only node failures can exhaust the pool, and an unrelated
-    /// kill may have opened a newer segment inside the node-detection
-    /// window.
-    pub fn record_degrade(&self) {
+    /// The in-flight recovery degraded to a full abort + re-deploy.
+    /// Attributed to the newest not-yet-degraded segment of the given
+    /// `kind`: for Reinit++/ULFM only node failures can exhaust the spare
+    /// pool, while replication degrades on whatever kind exhausted the
+    /// victim's replica group — and an unrelated kill may have opened a
+    /// newer segment inside the detection window, so kind-matching beats
+    /// taking the last segment blindly.
+    pub fn record_degrade(&self, kind: FailureKind) {
         let mut inner = self.inner.borrow_mut();
         if let Some(seg) = inner
             .segs
             .iter_mut()
             .rev()
-            .find(|s| s.kind == FailureKind::Node && !s.degraded)
+            .find(|s| s.kind == kind && !s.degraded)
         {
             seg.degraded = true;
+        }
+    }
+
+    /// The newest in-flight recovery is a replica promotion (replication
+    /// failover): its detect→resume window is accounted as `failover_s`
+    /// and its recovery/rollback are zero by construction — the promoted
+    /// replica resumes from the iteration frontier, re-executing nothing.
+    pub fn record_failover(&self) {
+        let mut inner = self.inner.borrow_mut();
+        if let Some(seg) = inner
+            .segs
+            .iter_mut()
+            .rev()
+            .find(|s| s.resume_at.is_none() && !s.failover)
+        {
+            seg.failover = true;
         }
     }
 
@@ -340,6 +370,13 @@ impl TrialMetrics {
                     (Some(e), Some(r)) => e.saturating_sub(r).secs_f64(),
                     _ => 0.0,
                 };
+                // Failover segments re-book the detect→resume window as
+                // promotion cost; nothing is rolled back or re-executed.
+                let (recovery_s, rollback_s, failover_s) = if s.failover {
+                    (0.0, 0.0, recovery_s)
+                } else {
+                    (recovery_s, rollback_s, 0.0)
+                };
                 FailureSegment {
                     kind: s.kind,
                     victim: s.victim,
@@ -347,6 +384,8 @@ impl TrialMetrics {
                     detect_s,
                     recovery_s,
                     rollback_s,
+                    failover_s,
+                    failover: s.failover,
                     interrupted: s.interrupted,
                     degraded_redeploy: s.degraded,
                 }
@@ -535,7 +574,7 @@ mod tests {
         // second failure (node kind) lands before any rank resumed
         m.record_failure(SimTime(2_200_000_000), FailureKind::Node, 1);
         m.record_detect(SimTime(2_250_000_000), FailureKind::Node);
-        m.record_degrade();
+        m.record_degrade(FailureKind::Node);
         m.record_resume(SimTime(3 * S));
         m.record_iter_done(1, SimTime(3_300_000_000));
         let segs = m.segments();
@@ -551,6 +590,61 @@ mod tests {
         assert!(segs[1].degraded_redeploy);
         assert!((segs[1].recovery_s - 0.75).abs() < 1e-9);
         assert!((segs[1].rollback_s - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failover_segment_books_promotion_not_rollback() {
+        const S: u64 = 1_000_000_000;
+        let m = TrialMetrics::new(2);
+        m.record_iter_done(4, SimTime(S));
+        m.record_failure(SimTime(2 * S), FailureKind::Process, 1);
+        m.record_detect(SimTime(2_010_000_000), FailureKind::Process);
+        m.record_failover();
+        m.record_resume(SimTime(2_300_000_000));
+        // promoted replica resumes past the frontier: first completed
+        // iteration is *new* work, yet would close rollback if this were
+        // a rollback-based segment
+        m.record_iter_done(5, SimTime(2_600_000_000));
+        let segs = m.segments();
+        assert_eq!(segs.len(), 1);
+        let s = &segs[0];
+        assert!(s.failover);
+        assert!((s.detect_s - 0.01).abs() < 1e-9);
+        assert!((s.failover_s - 0.29).abs() < 1e-9, "{segs:?}");
+        assert_eq!(s.recovery_s, 0.0, "promotion cost lives in failover_s");
+        assert_eq!(s.rollback_s, 0.0, "zero rollback by construction");
+    }
+
+    #[test]
+    fn failover_marks_newest_open_segment_only() {
+        const S: u64 = 1_000_000_000;
+        let m = TrialMetrics::new(2);
+        // first failover completes normally
+        m.record_failure(SimTime(S), FailureKind::Process, 0);
+        m.record_failover();
+        m.record_resume(SimTime(1_200_000_000));
+        // second failure mid-run: failover must land here, not re-mark seg 0
+        m.record_failure(SimTime(2 * S), FailureKind::Process, 1);
+        m.record_failover();
+        m.record_resume(SimTime(2_200_000_000));
+        let segs = m.segments();
+        assert!(segs[0].failover && segs[1].failover);
+    }
+
+    #[test]
+    fn degrade_attributes_by_kind() {
+        // Replication: a *process* failure can exhaust a replica group, so
+        // the degrade lands on the process segment even with a newer node
+        // segment open.
+        const S: u64 = 1_000_000_000;
+        let m = TrialMetrics::new(2);
+        m.record_failure(SimTime(S), FailureKind::Process, 0);
+        m.record_failure(SimTime(1_100_000_000), FailureKind::Node, 1);
+        m.record_degrade(FailureKind::Process);
+        m.record_resume(SimTime(2 * S));
+        let segs = m.segments();
+        assert!(segs[0].degraded_redeploy);
+        assert!(!segs[1].degraded_redeploy);
     }
 
     #[test]

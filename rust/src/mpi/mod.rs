@@ -1,9 +1,10 @@
 //! MPI-like message layer over the simulated fabric.
 //!
-//! Implements what the proxy applications and the three recovery approaches
+//! Implements what the proxy applications and the four recovery families
 //! need from MPI: a world communicator with point-to-point matching
 //! (src, tag), binomial-tree broadcast/reduce, tree allreduce and barrier,
-//! plus the ULFM extensions (`revoke`, failure notification, `agree`).
+//! the ULFM extensions (`revoke`, failure notification, `agree`), and the
+//! replication family's shadow-state mirroring transfer (`mirror_state`).
 //!
 //! Failure semantics per recovery mode (paper §2):
 //! - **CR**: no user-level fault notification. Operations touching a dead
@@ -60,6 +61,10 @@ pub enum FtMode {
     Cr,
     Ulfm,
     Reinit,
+    /// Replication: like Reinit, ranks see no MPI-level failure
+    /// notification — the runtime promotes replicas and re-attaches a new
+    /// generation.
+    Repl,
 }
 
 /// Errors surfaced by MPI operations (ULFM semantics).
@@ -200,6 +205,16 @@ impl MpiJob {
 pub const PROCEED_TAG: u64 = 1 << 47;
 
 impl MpiJob {
+    /// Transport-level state mirroring (replication mode): push `bytes` of
+    /// a primary's state from `from_node` to its shadow replica on
+    /// `to_node`, awaiting the transfer — replica pushes serialize on the
+    /// primary's NIC, which is exactly the replication bandwidth overhead
+    /// the crossover sweep measures. Counted in `fabric_stats`.
+    pub async fn mirror_state(&self, from_node: u32, to_node: u32, bytes: usize) {
+        let d = self.inner.fabric.charge_mirror(from_node, to_node, bytes);
+        self.inner.sim.sleep(d).await;
+    }
+
     /// RTE-originated point message to a rank of a *specific* generation
     /// (used to reach survivors still attached to a revoked communicator).
     pub fn send_system(&self, generation: u64, rank: Rank, tag: u64, data: Vec<u8>) {

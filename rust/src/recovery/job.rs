@@ -1,9 +1,9 @@
 //! Job runner: deployment, the per-rank driver loop, detection wiring and
-//! the protocol-agnostic trial orchestration shared by all three recovery
+//! the protocol-agnostic trial orchestration shared by all four recovery
 //! approaches.
 //!
 //! The heart of this module is [`trial_driver`]: one deployment loop that
-//! hosts any [`RecoveryDriver`] (CR, Reinit++, ULFM) and survives an
+//! hosts any [`RecoveryDriver`] (CR, Reinit++, ULFM, replication) and survives an
 //! arbitrary failure *timeline* — N successive process/node failures,
 //! failures landing inside a recovery or checkpoint window (virtual-time
 //! anchored kills), and node failures beyond the spare pool, which degrade
@@ -52,6 +52,13 @@ pub struct TrialResult {
     pub diag_trace: Vec<(f64, u32, f64)>,
     /// Per-tier checkpoint traffic + shared-disk counters for this trial.
     pub storage: StorageStats,
+    /// Replica promotions performed (replication only; else 0).
+    pub failovers: u64,
+    /// Slowest rank's accumulated mirror-push stall, seconds (replication
+    /// bandwidth overhead; 0 for the rollback-based families).
+    pub mirror_s: f64,
+    /// Total state bytes mirrored to shadows, MB.
+    pub mirror_mb: f64,
 }
 
 /// Per-worker-thread XLA runtime cache. `Rc<XlaRuntime>` cannot cross
@@ -187,6 +194,9 @@ pub struct TrialWorld {
     /// a CR abort and the re-deploy hits dead air). `Cluster`, not
     /// `JobCtx`, to avoid an `Rc` cycle back into this world.
     pub cur_cluster: RefCell<Option<Cluster>>,
+    /// Replica-group bookkeeping (standby queues, mirror window, failover
+    /// counters). `Some` only under `recovery=repl`.
+    pub repl: Option<super::repl::ReplState>,
 }
 
 impl TrialWorld {
@@ -210,6 +220,8 @@ impl TrialWorld {
             completed: Rc::new(Completed::new(cfg.ranks)),
             diag_trace: Rc::new(RefCell::new(Vec::new())),
             cur_cluster: RefCell::new(None),
+            repl: (cfg.recovery == RecoveryKind::Replication)
+                .then(|| super::repl::ReplState::new(cfg)),
         })
     }
 
@@ -222,6 +234,7 @@ impl TrialWorld {
             RecoveryKind::Cr => FtMode::Cr,
             RecoveryKind::Ulfm => FtMode::Ulfm,
             RecoveryKind::Reinit => FtMode::Reinit,
+            RecoveryKind::Replication => FtMode::Repl,
         }
     }
 }
@@ -288,7 +301,7 @@ pub fn abort_job(ctx: &JobCtx) {
 /// re-deploy sequencing, timeline arming, completion tracking — is
 /// protocol-agnostic.
 pub trait RecoveryDriver {
-    /// Short tag for process names (`cr`, `reinit`, `ulfm`).
+    /// Short tag for process names (`cr`, `reinit`, `ulfm`, `repl`).
     fn tag(&self) -> &'static str;
     /// Spawn all rank tasks and root-side handler tasks onto a freshly
     /// launched deployment.
@@ -301,6 +314,7 @@ pub fn driver_for(kind: RecoveryKind) -> Rc<dyn RecoveryDriver> {
         RecoveryKind::Cr => Rc::new(super::cr::CrDriver),
         RecoveryKind::Reinit => Rc::new(super::reinit::ReinitDriver),
         RecoveryKind::Ulfm => Rc::new(super::ulfm::UlfmDriver),
+        RecoveryKind::Replication => Rc::new(super::repl::ReplDriver),
     }
 }
 
@@ -386,9 +400,17 @@ pub async fn rank_user_main(
     let backend = w.backends.for_rank(rank);
     let mut app_state = w.app.new_state(rank, w.cfg.ranks);
 
-    // Application recovery (paper §3.1): agree on the newest checkpoint
-    // every rank has, then everyone loads it.
-    let my_latest = w.ckpt.latest_iter(rank).map(|i| i as f32).unwrap_or(-1.0);
+    // Application recovery (paper §3.1): agree on the newest state every
+    // rank can restore — its checkpoints, or under replication the mirror
+    // its shadow replica holds — then everyone resumes from it.
+    let ckpt_latest = w.ckpt.latest_iter(rank).map(|i| i as i64).unwrap_or(-1);
+    let mirror_latest = w
+        .repl
+        .as_ref()
+        .and_then(|r| r.latest_iter(rank))
+        .map(|i| i as i64)
+        .unwrap_or(-1);
+    let my_latest = ckpt_latest.max(mirror_latest) as f32;
     let agreed = comm
         .allreduce_scalar(my_latest, crate::mpi::ReduceOp::Min)
         .await
@@ -396,24 +418,41 @@ pub async fn rank_user_main(
     let mut start_iter = 0u32;
     if agreed >= 0.0 {
         let it = agreed as u32;
-        let t0 = w.sim.now();
-        let bytes = w
-            .ckpt
-            .load(rank, slot.node, it)
-            .await
-            .expect("globally-agreed checkpoint must exist");
-        app_state.restore(&bytes);
-        w.metrics.add_ckpt_read(rank, w.sim.now() - t0);
-        // Tier-aware recovery: the failure degraded some ranks' replica
-        // sets; every rank re-establishes its missing copies before
-        // resuming, so the next failure finds full redundancy again.
-        // No-op (zero cost) for ranks whose copies all survived.
-        if w.faults.any_fired() {
-            let t1 = w.sim.now();
-            w.ckpt.rebuild(rank, slot.node, it, &bytes).await;
-            w.metrics.add_ckpt_write(rank, w.sim.now() - t1);
+        let mirror = w.repl.as_ref().and_then(|r| r.snapshot(rank, it));
+        if let Some(bytes) = mirror {
+            // Failover restore: the shadow already holds the agreed
+            // iteration in memory on the promoted host — no storage read,
+            // no re-execution. This is the zero-rollback path replication
+            // buys with its mirror bandwidth.
+            app_state.restore(&bytes);
+            start_iter = it + 1;
+        } else {
+            let t0 = w.sim.now();
+            match w.ckpt.load(rank, slot.node, it).await {
+                Some(bytes) => {
+                    app_state.restore(&bytes);
+                    w.metrics.add_ckpt_read(rank, w.sim.now() - t0);
+                    // Tier-aware recovery: the failure degraded some ranks'
+                    // replica sets; every rank re-establishes its missing
+                    // copies before resuming, so the next failure finds full
+                    // redundancy again. No-op (zero cost) for ranks whose
+                    // copies all survived.
+                    if w.faults.any_fired() {
+                        let t1 = w.sim.now();
+                        w.ckpt.rebuild(rank, slot.node, it, &bytes).await;
+                        w.metrics.add_ckpt_write(rank, w.sim.now() - t1);
+                    }
+                    start_iter = it + 1;
+                }
+                // The agreed copy can legally be gone by load time: a
+                // failure landing before the first checkpoint completes, or
+                // a second failure erasing the copies between the agreement
+                // and this read (mid-recovery storms). Restart from
+                // iteration 0 instead of crashing the harness — exactly
+                // what a real job would do with nothing on stable storage.
+                None => start_iter = 0,
+            }
         }
-        start_iter = it + 1;
     }
 
     for iter in start_iter..w.cfg.iters {
@@ -466,6 +505,22 @@ pub async fn rank_user_main(
                 .save(rank, slot.node, iter, app_state.serialize())
                 .await;
             w.metrics.add_ckpt_write(rank, w.sim.now() - t0);
+        }
+
+        // Replication: push this iteration's state to the shadow replica
+        // (every iteration — the mirror must track the frontier, not the
+        // checkpoint interval, or failover would roll back). The transfer
+        // serializes on the primary's NIC; that stall is the replication
+        // compute/bandwidth overhead the crossover sweep measures.
+        if let Some(repl) = w.repl.as_ref() {
+            if let Some(shadow) = repl.shadow_node(rank) {
+                let bytes = app_state.serialize();
+                let t0 = w.sim.now();
+                ctx.mpi
+                    .mirror_state(ctx.cluster.rank_slot(rank).node, shadow, bytes.len())
+                    .await;
+                repl.push(rank, iter, bytes, w.sim.now() - t0);
+            }
         }
     }
 
@@ -615,6 +670,14 @@ pub fn run_trial(
     let segments = world.metrics.segments();
     let diag_trace = world.diag_trace.borrow().clone();
     let storage = world.ckpt.storage_stats();
+    let (failovers, mirror_s, mirror_mb) = match world.repl.as_ref() {
+        Some(r) => (
+            r.failovers(),
+            r.mirror_stall_s(),
+            r.mirror_traffic().1 as f64 / 1e6,
+        ),
+        None => (0, 0.0, 0.0),
+    };
     TrialResult {
         breakdown,
         digests,
@@ -624,5 +687,8 @@ pub fn run_trial(
         sim_events: summary.events,
         diag_trace,
         storage,
+        failovers,
+        mirror_s,
+        mirror_mb,
     }
 }

@@ -1,5 +1,6 @@
-//! The three global-restart recovery approaches (paper §2, §3) and the job
-//! runner that hosts them on the simulated cluster.
+//! The paper's three global-restart recovery approaches (§2, §3), a fourth
+//! replication-based family, and the job runner that hosts them on the
+//! simulated cluster.
 //!
 //! - `job`    — deployment, rank driver (the paper's Fig. 2 pattern:
 //!              MPI_Reinit-style rollback point, checkpoint every iteration,
@@ -16,10 +17,15 @@
 //! - `ulfm`   — ULFM global-restart recipe: failure notification -> pending
 //!              ops raise errors -> revoke -> shrink+agree -> RTE re-spawn
 //!              -> merge (new communicator generation) -> roll back.
+//! - `repl`   — Replication: node-disjoint shadow replicas mirror each
+//!              primary's state; a primary failure promotes the shadow
+//!              (failover, zero rollback); an exhausted replica group
+//!              degrades to a CR-style abort + re-deploy.
 
 pub mod cr;
 pub mod job;
 pub mod reinit;
+pub mod repl;
 pub mod ulfm;
 
 #[cfg(test)]

@@ -94,7 +94,7 @@ pub async fn reinit_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                 // over-provisioning precisely because Reinit++ has no other
                 // answer once spares are gone).
                 if ctx.spares_exhausted() {
-                    w.metrics.record_degrade();
+                    w.metrics.record_degrade(crate::config::FailureKind::Node);
                     abort_job(&ctx);
                     return;
                 }

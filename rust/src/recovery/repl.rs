@@ -1,0 +1,344 @@
+//! Replication: the fourth recovery family — failover without rollback.
+//!
+//! Each logical rank is backed by a replica group of `repl_degree`
+//! processes: one primary that computes, plus `repl_degree - 1` shadow
+//! replicas placed *node-disjoint* from the primary (reusing the
+//! checkpoint-store placement walk, [`crate::ckptstore::placement`]).
+//! Primaries mirror their state to the active shadow every iteration over
+//! the fabric; when a primary dies, the root *promotes* the shadow instead
+//! of rolling anyone back — the shadow already holds the iteration
+//! frontier, so recovery re-executes nothing (FTHP-MPI / PartRePer-MPI
+//! style, vs the paper's three rollback-based families).
+//!
+//! **Degrade path.** A failure that finds the victim's replica group
+//! exhausted (degree 1, or every standby node already dead) cannot fail
+//! over; the job degrades to a CR-style abort + re-deploy, recorded as
+//! `degraded_redeploy` on the event's metric segment — which is why
+//! replication still writes file checkpoints ([`crate::checkpoint::policy`]
+//! maps it to the File column of Table 2).
+//!
+//! **Multi-failure semantics.** Same idempotent-under-overlap discipline as
+//! [`super::reinit`]: promotion closures re-check the cluster at fire time.
+//! A standby node that dies *mid-failover* (after the root picked it,
+//! before the promotion fires) re-drives the root loop with a synthetic
+//! `RankDead` event, so the rank retries on its next standby or degrades —
+//! it can never be silently orphaned. Node failures take out every shadow
+//! hosted there too: mirrors on the dead node are dropped and the node is
+//! struck from every standby queue.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use super::job::{abort_job, arm_child_watcher, JobCtx, RecoveryDriver, ReinitState};
+use super::reinit::spawn_rank;
+use crate::ckptstore::placement::partners_of;
+use crate::cluster::Topology;
+use crate::config::{ExperimentConfig, FailureKind};
+use crate::detect::DetectEvent;
+use crate::sim::{Receiver, SimDuration};
+
+/// Mirror snapshots retained per rank — the frontier iteration plus one
+/// behind it, mirroring the checkpoint store's own two-deep window: BSP
+/// keeps ranks within one save interval, so the group-wide agreed
+/// iteration is always covered.
+const MIRROR_WINDOW: usize = 2;
+
+struct ReplInner {
+    /// Per-rank standby-node queue; front = the active shadow's host.
+    /// Popped on promotion, shrunk by node deaths; empty = exhausted.
+    standbys: Vec<VecDeque<u32>>,
+    /// Per-rank mirror window `(iter, state)`, newest last. The data the
+    /// active shadow holds — dropped if its host node dies.
+    mirrors: Vec<VecDeque<(u32, Rc<Vec<u8>>)>>,
+    /// Per-rank accumulated primary-side mirror stall (the replication
+    /// bandwidth overhead; reported like `ckpt_write` — slowest rank).
+    mirror_stall: Vec<SimDuration>,
+}
+
+/// Replica-group bookkeeping for one trial, shared across deployments
+/// (reset on each deploy: an abort kills shadows with everything else).
+pub struct ReplState {
+    degree: u32,
+    topo: Topology,
+    inner: RefCell<ReplInner>,
+    failovers: Cell<u64>,
+    mirror_pushes: Cell<u64>,
+    mirror_bytes: Cell<u64>,
+}
+
+impl ReplState {
+    pub fn new(cfg: &ExperimentConfig) -> ReplState {
+        let topo = Topology::new(cfg.ranks, cfg.ranks_per_node, cfg.spare_nodes);
+        let s = ReplState {
+            degree: cfg.repl_degree,
+            topo,
+            inner: RefCell::new(ReplInner {
+                standbys: Vec::new(),
+                mirrors: Vec::new(),
+                mirror_stall: vec![SimDuration::ZERO; cfg.ranks as usize],
+            }),
+            failovers: Cell::new(0),
+            mirror_pushes: Cell::new(0),
+            mirror_bytes: Cell::new(0),
+        };
+        s.reset();
+        s
+    }
+
+    /// Rebuild standby queues and drop all mirrors — a fresh deployment
+    /// respawns every shadow, and an abort killed the old ones' memory.
+    /// Accumulated traffic/stall counters survive (they are per-trial).
+    pub fn reset(&self) {
+        let mut inner = self.inner.borrow_mut();
+        let ranks = self.topo.ranks as usize;
+        inner.standbys = (0..self.topo.ranks)
+            .map(|r| {
+                let mut nodes: VecDeque<u32> = VecDeque::new();
+                for p in partners_of(&self.topo, r, self.degree - 1, true) {
+                    let n = self.topo.home_node(p);
+                    if !nodes.contains(&n) {
+                        nodes.push_back(n);
+                    }
+                }
+                nodes
+            })
+            .collect();
+        inner.mirrors = vec![VecDeque::new(); ranks];
+    }
+
+    /// Host node of `rank`'s active shadow (`None` = group exhausted).
+    pub fn shadow_node(&self, rank: u32) -> Option<u32> {
+        self.inner.borrow().standbys[rank as usize].front().copied()
+    }
+
+    /// Claim the next *live* standby node for a promotion, discarding dead
+    /// ones (their hosted mirror died with them). `None` = exhausted.
+    pub fn take_standby(&self, rank: u32, cluster: &crate::cluster::Cluster) -> Option<u32> {
+        let mut inner = self.inner.borrow_mut();
+        let r = rank as usize;
+        while let Some(node) = inner.standbys[r].pop_front() {
+            if cluster.node_is_alive(node) {
+                return Some(node);
+            }
+            inner.mirrors[r].clear();
+        }
+        None
+    }
+
+    /// A node died: every shadow hosted there is gone — drop its mirror
+    /// data and strike the node from all standby queues.
+    pub fn lose_node(&self, node: u32) {
+        let mut inner = self.inner.borrow_mut();
+        let ranks = inner.standbys.len();
+        for r in 0..ranks {
+            if inner.standbys[r].front() == Some(&node) {
+                inner.mirrors[r].clear();
+            }
+            inner.standbys[r].retain(|&n| n != node);
+        }
+    }
+
+    /// Record a completed mirror push (window of [`MIRROR_WINDOW`]).
+    pub fn push(&self, rank: u32, iter: u32, bytes: Vec<u8>, stall: SimDuration) {
+        let mut inner = self.inner.borrow_mut();
+        let r = rank as usize;
+        let win = &mut inner.mirrors[r];
+        win.push_back((iter, Rc::new(bytes)));
+        while win.len() > MIRROR_WINDOW {
+            win.pop_front();
+        }
+        self.mirror_pushes.set(self.mirror_pushes.get() + 1);
+        let len = win.back().map(|(_, b)| b.len()).unwrap_or(0) as u64;
+        self.mirror_bytes.set(self.mirror_bytes.get() + len);
+        inner.mirror_stall[r] += stall;
+    }
+
+    /// The shadow's copy of `rank`'s state at exactly `iter`, if mirrored.
+    pub fn snapshot(&self, rank: u32, iter: u32) -> Option<Rc<Vec<u8>>> {
+        self.inner.borrow().mirrors[rank as usize]
+            .iter()
+            .find(|(i, _)| *i == iter)
+            .map(|(_, b)| Rc::clone(b))
+    }
+
+    /// Newest mirrored iteration for `rank`.
+    pub fn latest_iter(&self, rank: u32) -> Option<u32> {
+        self.inner.borrow().mirrors[rank as usize]
+            .back()
+            .map(|(i, _)| *i)
+    }
+
+    pub fn record_failover(&self) {
+        self.failovers.set(self.failovers.get() + 1);
+    }
+
+    /// Promotions performed this trial.
+    pub fn failovers(&self) -> u64 {
+        self.failovers.get()
+    }
+
+    /// Total mirror traffic this trial: `(pushes, bytes)`.
+    pub fn mirror_traffic(&self) -> (u64, u64) {
+        (self.mirror_pushes.get(), self.mirror_bytes.get())
+    }
+
+    /// Slowest rank's accumulated mirror stall — the BSP-visible
+    /// replication bandwidth overhead (same convention as `ckpt_write_s`).
+    pub fn mirror_stall_s(&self) -> f64 {
+        self.inner
+            .borrow()
+            .mirror_stall
+            .iter()
+            .map(|d| d.secs_f64())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// The root's failover loop: promote shadows on primary death, degrade on
+/// replica exhaustion. Structured like [`super::reinit::reinit_root`]; the
+/// promotion list replaces the spawn list and startup skips the ORTE
+/// barrier (shadows are already running processes — re-attaching the world
+/// communicator is the only collective step).
+pub async fn repl_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
+    let w = Rc::clone(&ctx.world);
+    let repl = w.repl.as_ref().expect("repl driver without ReplState");
+    let control = SimDuration::from_secs_f64(w.cfg.calib.control_latency_us * 1e-6);
+    loop {
+        let Ok(ev) = detect_rx.recv().await else {
+            return;
+        };
+        // Build the (rank, standby node) promotion list; degrade the whole
+        // job the moment any victim's group is exhausted.
+        let (kind, victims): (FailureKind, Vec<u32>) = match ev {
+            DetectEvent::RankDead { rank, .. } => {
+                if ctx.cluster.rank_is_alive(rank) {
+                    continue; // stale notification (already promoted)
+                }
+                w.metrics.record_detect(w.sim.now(), FailureKind::Process);
+                (FailureKind::Process, vec![rank])
+            }
+            DetectEvent::NodeDead { node, .. } => {
+                // Shadows hosted on the node die with it, whether or not
+                // any primary lived there.
+                repl.lose_node(node);
+                let failed: Vec<u32> = (0..w.cfg.ranks)
+                    .filter(|&r| {
+                        ctx.cluster.rank_slot(r).node == node && !ctx.cluster.rank_is_alive(r)
+                    })
+                    .collect();
+                if failed.is_empty() {
+                    continue;
+                }
+                w.metrics.record_detect(w.sim.now(), FailureKind::Node);
+                (FailureKind::Node, failed)
+            }
+        };
+
+        let mut promotions: Vec<(u32, u32)> = Vec::with_capacity(victims.len());
+        let mut exhausted = false;
+        for &rank in &victims {
+            match repl.take_standby(rank, &ctx.cluster) {
+                Some(node) => promotions.push((rank, node)),
+                None => exhausted = true,
+            }
+        }
+        if exhausted {
+            // Replica group outrun: no shadow left to promote. Degrade to a
+            // CR-style full re-deploy, restarting from file checkpoints (or
+            // iteration 0 if none completed yet).
+            w.metrics.record_degrade(kind);
+            abort_job(&ctx);
+            return;
+        }
+        w.metrics.record_failover();
+        repl.record_failover();
+
+        // Broadcast <PROMOTE, list> down the root->daemon control tree.
+        let levels = Topology::tree_levels(ctx.cluster.topo.total_nodes() + 1);
+        w.sim
+            .sleep(SimDuration(control.0 * levels.max(1) as u64))
+            .await;
+
+        // Old MPI state is discarded; everyone re-attaches a new
+        // generation. No ORTE barrier: nothing is fork+exec'd, the
+        // promoted shadows are already running processes.
+        ctx.mpi.bump_generation();
+        let startup = w.deploy.comm_reinit(w.cfg.ranks);
+
+        // Survivors: cancel + re-enter (same longjmp discipline as
+        // Reinit++ — they restore from their own shadow's mirror at the
+        // agreed frontier, so the re-entry costs no rollback).
+        let signal = w.deploy.signal();
+        for rank in 0..w.cfg.ranks {
+            if !ctx.cluster.rank_is_alive(rank) {
+                continue;
+            }
+            let ctx2 = ctx.clone();
+            w.sim.schedule(signal, move || {
+                if !ctx2.cluster.rank_is_alive(rank) {
+                    return; // died since the broadcast; its detect covers it
+                }
+                let cur = ctx2.rank_tasks.borrow()[rank as usize];
+                if let Some(t) = cur {
+                    ctx2.world.sim.cancel_task(t);
+                }
+                spawn_rank(&ctx2, rank, ReinitState::Reinited, startup);
+            });
+        }
+
+        // Promotions: the shadow takes over its rank's slot. Fire-time
+        // re-checks keep overlap idempotent; a standby node dead by fire
+        // time re-drives this loop with a synthetic RankDead so the rank
+        // retries on its next standby (or degrades) instead of stalling.
+        for (rank, target) in promotions {
+            let ctx2 = ctx.clone();
+            w.sim.schedule(signal, move || {
+                if ctx2.cluster.rank_is_alive(rank) {
+                    return; // an overlapping recovery already covered it
+                }
+                if !ctx2.cluster.node_is_alive(target) {
+                    ctx2.detect_tx.send(
+                        DetectEvent::RankDead {
+                            rank,
+                            at: ctx2.world.sim.now(),
+                        },
+                        SimDuration::ZERO,
+                    );
+                    return;
+                }
+                ctx2.cluster.respawn_rank(rank, target);
+                arm_child_watcher(&ctx2, rank);
+                spawn_rank(&ctx2, rank, ReinitState::Restarted, startup);
+            });
+        }
+    }
+}
+
+/// Replication hosted on the shared trial loop.
+#[derive(Default)]
+pub struct ReplDriver;
+
+impl RecoveryDriver for ReplDriver {
+    fn tag(&self) -> &'static str {
+        "repl"
+    }
+
+    fn deploy(&self, ctx: &JobCtx, detect_rx: Receiver<DetectEvent>) {
+        let w = &ctx.world;
+        // Fresh deployment = fresh shadows: full standby queues, empty
+        // mirrors (an abort-redeploy killed every process's memory).
+        w.repl
+            .as_ref()
+            .expect("repl driver without ReplState")
+            .reset();
+        for rank in 0..w.cfg.ranks {
+            spawn_rank(ctx, rank, ReinitState::New, SimDuration::ZERO);
+        }
+        let root = ctx.cluster.root();
+        let ctx2 = ctx.clone();
+        w.sim.clone().spawn(root, async move {
+            repl_root(ctx2, detect_rx).await;
+        });
+    }
+}

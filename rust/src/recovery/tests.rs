@@ -46,10 +46,10 @@ fn fault_free_all_apps_complete() {
 #[test]
 fn fault_free_digest_identical_across_recovery_modes() {
     // CR and Reinit must not perturb the computation at all; ULFM inflates
-    // time but not values.
+    // time but not values; replication's mirroring costs time, not values.
     for app in AppKind::ALL {
         let base = digests_of(&base_cfg(app, RecoveryKind::Reinit, FailureKind::None), 0);
-        for rk in [RecoveryKind::Cr, RecoveryKind::Ulfm] {
+        for rk in [RecoveryKind::Cr, RecoveryKind::Ulfm, RecoveryKind::Replication] {
             let d = digests_of(&base_cfg(app, rk, FailureKind::None), 0);
             assert_eq!(d, base, "{app} {rk}");
         }
@@ -368,6 +368,175 @@ fn node_failures_beyond_spares_degrade_to_redeploy() {
     let r = run_trial(&cfg, 0, None);
     assert!(r.completed);
     assert!(r.segments.iter().all(|s| !s.degraded_redeploy));
+}
+
+// ---- replication: failover without rollback ----------------------------
+
+/// Scenario config for the replication family at `repl_degree=2` (one
+/// node-disjoint shadow per rank; the test topology's 2 compute nodes are
+/// exactly enough).
+fn repl_cfg(failures: &str) -> ExperimentConfig {
+    let mut c = scenario_cfg(RecoveryKind::Replication, failures);
+    c.repl_degree = 2;
+    c
+}
+
+#[test]
+fn repl_process_failure_equivalence_all_apps() {
+    for app in AppKind::ALL {
+        let mut cfg = base_cfg(app, RecoveryKind::Replication, FailureKind::Process);
+        cfg.repl_degree = 2;
+        let fault_free = digests_of(&base_cfg(app, RecoveryKind::Replication, FailureKind::None), 0);
+        let r = run_trial(&cfg, 0, None);
+        assert!(r.completed, "{app}: failover trial hung ({:?})", r.faults);
+        assert_eq!(r.digests, fault_free, "{app}: failover perturbed the state");
+        assert_eq!(r.failovers, 1, "{app}: one promotion expected");
+    }
+}
+
+#[test]
+fn repl_failover_has_zero_rollback_and_books_failover_time() {
+    // The tentpole invariant: a primary death promotes the shadow — the
+    // run resumes at the iteration frontier, re-executing nothing, and the
+    // cost lands in the new failover accounting, not recovery/rollback.
+    let cfg = repl_cfg("proc@2:r1");
+    let want = digests_of(&fault_free_twin(&cfg), 0);
+    let r = run_trial(&cfg, 0, None);
+    assert!(r.completed, "failover trial hung ({:?})", r.faults);
+    assert_eq!(r.digests, want, "failover must not perturb the computation");
+    assert_eq!(r.segments.len(), 1, "{:?}", r.segments);
+    let seg = &r.segments[0];
+    assert!(seg.failover, "segment must be a failover: {seg:?}");
+    assert!(!seg.degraded_redeploy);
+    assert!(seg.failover_s > 0.0, "promotion window recorded: {seg:?}");
+    assert_eq!(seg.recovery_s, 0.0, "cost lives in failover_s: {seg:?}");
+    assert_eq!(seg.rollback_s, 0.0, "zero rollback by construction: {seg:?}");
+    assert_eq!(r.failovers, 1);
+    // the mirror traffic that buys the zero rollback is visible
+    assert!(r.mirror_s > 0.0, "mirror stall must be charged");
+    assert!(r.mirror_mb > 0.0, "mirror bytes must be counted");
+}
+
+#[test]
+fn repl_failover_beats_rollback_recoveries() {
+    // Failover skips the ORTE barrier and the checkpoint read and rolls
+    // nothing back: its disruption must undercut Reinit++ (the fastest
+    // rollback family) for the same failure.
+    let repl = run_trial(&repl_cfg("proc@2:r1"), 0, None);
+    let reinit = run_trial(&scenario_cfg(RecoveryKind::Reinit, "proc@2:r1"), 0, None);
+    assert!(repl.completed && reinit.completed);
+    let tf = repl.segments[0].failover_s;
+    let tr = reinit.segments[0].recovery_s + reinit.segments[0].rollback_s;
+    assert!(
+        tf < tr,
+        "failover ({tf}) must undercut Reinit++ recovery+rollback ({tr})"
+    );
+}
+
+#[test]
+fn repl_exhausted_group_degrades_to_redeploy() {
+    // Two kills on the same logical rank: the first consumes its only
+    // shadow, the second finds the group empty and must degrade to a
+    // CR-style abort + re-deploy — still converging via file checkpoints.
+    let cfg = repl_cfg("proc@2:r1,proc@5:r1");
+    let want = digests_of(&fault_free_twin(&cfg), 0);
+    let r = run_trial(&cfg, 0, None);
+    assert!(r.completed, "exhaustion trial hung ({:?})", r.faults);
+    assert_eq!(r.digests, want, "degraded redeploy must still converge");
+    assert_eq!(r.segments.len(), 2, "{:?}", r.segments);
+    assert!(r.segments[0].failover, "first kill fails over: {:?}", r.segments);
+    assert!(!r.segments[0].degraded_redeploy);
+    assert!(
+        r.segments[1].degraded_redeploy,
+        "second kill exhausts the group: {:?}",
+        r.segments
+    );
+    assert!(!r.segments[1].failover);
+    assert_eq!(r.failovers, 1);
+}
+
+#[test]
+fn repl_degree_one_degrades_on_first_failure() {
+    // degree 1 = no replicas: replication collapses to CR-style behavior
+    // (the crossover sweep's baseline row).
+    let cfg = scenario_cfg(RecoveryKind::Replication, "proc@2:r1");
+    assert_eq!(cfg.repl_degree, 1);
+    let want = digests_of(&fault_free_twin(&cfg), 0);
+    let r = run_trial(&cfg, 0, None);
+    assert!(r.completed);
+    assert_eq!(r.digests, want);
+    assert_eq!(r.failovers, 0);
+    assert!(r.segments[0].degraded_redeploy, "{:?}", r.segments);
+    assert_eq!(r.mirror_mb, 0.0, "no shadow, no mirror traffic");
+}
+
+#[test]
+fn repl_node_failure_kills_shadows_then_exhausted_rank_degrades() {
+    // A node failure takes out four primaries AND the shadows the other
+    // four ranks kept there: the dead primaries fail over to their
+    // surviving shadows, and a later kill of a shadow-less rank must
+    // degrade. The whole storm still converges to the fault-free state.
+    let cfg = repl_cfg("node@2:r1,proc@5:r4");
+    let want = digests_of(&fault_free_twin(&cfg), 0);
+    let r = run_trial(&cfg, 0, None);
+    assert!(r.completed, "replica-set storm hung ({:?})", r.faults);
+    assert_eq!(r.digests, want, "digests differ after replica-set storm");
+    assert_eq!(r.segments.len(), 2, "{:?}", r.segments);
+    let node_seg = &r.segments[0];
+    assert_eq!(node_seg.kind, FailureKind::Node);
+    assert!(node_seg.failover, "node event promotes shadows: {:?}", r.segments);
+    assert_eq!(node_seg.rollback_s, 0.0);
+    let proc_seg = &r.segments[1];
+    assert!(
+        proc_seg.degraded_redeploy,
+        "rank 4's shadow died with the node; its kill must degrade: {:?}",
+        r.segments
+    );
+    assert_eq!(r.failovers, 1);
+}
+
+#[test]
+fn repl_failure_mid_failover_still_converges() {
+    // Second kill landing inside the first promotion window (20 ms after
+    // detection, well under the control-tree + comm-reinit startup): the
+    // root must absorb the overlap — both events resolve, digests match.
+    let probe = run_trial(&repl_cfg("proc@2:r1"), 0, None);
+    assert!(probe.completed);
+    let seg = &probe.segments[0];
+    let t2 = seg.fail_s + seg.detect_s + 0.5 * seg.failover_s.max(0.02);
+    let cfg = repl_cfg(&format!("proc@2:r1,proc@t{t2:.6}:r6"));
+    let want = digests_of(&fault_free_twin(&cfg), 0);
+    let r = run_trial(&cfg, 0, None);
+    assert!(r.completed, "mid-failover storm hung ({:?})", r.faults);
+    assert_eq!(r.digests, want, "digests differ after mid-failover storm");
+    assert_eq!(r.faults.iter().filter(|f| f.fired).count(), 2, "{:?}", r.faults);
+}
+
+// ---- failures before the first checkpoint ------------------------------
+
+#[test]
+fn failure_before_first_checkpoint_restarts_from_zero_all_recoveries() {
+    // A kill at iteration 0 lands before any checkpoint completes: a legal
+    // timeline every driver must absorb by restarting from iteration 0
+    // (the seed panicked here: "globally-agreed checkpoint must exist").
+    for recovery in RecoveryKind::ALL {
+        let cfg = scenario_cfg(recovery, "proc@0:r1");
+        let want = digests_of(&fault_free_twin(&cfg), 0);
+        let r = run_trial(&cfg, 0, None);
+        assert!(
+            r.completed,
+            "{recovery}: pre-first-checkpoint failure hung ({:?})",
+            r.faults
+        );
+        assert_eq!(r.digests, want, "{recovery}: digests differ");
+        assert_eq!(r.faults.iter().filter(|f| f.fired).count(), 1);
+    }
+    // and with a shadow available, replication fails over instead
+    let cfg = repl_cfg("proc@0:r1");
+    let want = digests_of(&fault_free_twin(&cfg), 0);
+    let r = run_trial(&cfg, 0, None);
+    assert!(r.completed, "repl pre-ckpt failure hung ({:?})", r.faults);
+    assert_eq!(r.digests, want);
 }
 
 #[test]

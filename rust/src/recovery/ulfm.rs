@@ -140,7 +140,7 @@ async fn ulfm_notifier(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                 // Spare pool outrun: degrade to a CR-style full re-deploy
                 // (recorded on the event's metric segment).
                 if ctx.spares_exhausted() {
-                    w.metrics.record_degrade();
+                    w.metrics.record_degrade(crate::config::FailureKind::Node);
                     abort_job(&ctx);
                     return;
                 }

@@ -17,7 +17,7 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use super::cost::NetCost;
-use crate::sim::{channel, Receiver, Sender, Sim};
+use crate::sim::{channel, Receiver, Sender, Sim, SimDuration};
 
 /// An endpoint binding: where a key currently lives.
 #[derive(Clone)]
@@ -206,6 +206,18 @@ impl<M: 'static> Fabric<M> {
         };
         tx.send(msg, delay);
         true
+    }
+
+    /// Account a replica mirror push: `bytes` carried between two nodes to
+    /// an endpoint-less shadow replica (transport-level mirroring — the
+    /// replica consumes the primary's stream without a mailbox of its own).
+    /// Counts in `stats` like any delivered message; returns the wire cost
+    /// for the caller to await.
+    pub fn charge_mirror(&self, from_node: u32, to_node: u32, bytes: usize) -> SimDuration {
+        let mut inner = self.inner.borrow_mut();
+        inner.messages_sent += 1;
+        inner.bytes_sent += bytes as u64;
+        self.cost.data_delay(bytes, from_node == to_node)
     }
 
     /// Messages currently buffered for a not-yet-bound key (leak audits).
@@ -403,6 +415,16 @@ mod tests {
         sim.run();
         let t = times.borrow();
         assert!(t[0] < t[1], "near={:?} far={:?}", t[0], t[1]);
+    }
+
+    #[test]
+    fn mirror_charge_counts_stats_and_prices_locality() {
+        let sim = Sim::new();
+        let f = fabric(&sim);
+        let near = f.charge_mirror(0, 0, 1024);
+        let far = f.charge_mirror(0, 1, 1024);
+        assert!(near < far, "inter-node mirror pays inter-node cost");
+        assert_eq!(f.stats(), (2, 2048), "mirror traffic hits the wire stats");
     }
 
     #[test]
