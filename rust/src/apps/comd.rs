@@ -8,7 +8,7 @@
 //! atoms. dt is small enough that energy is conserved to ~0.1% (tested at
 //! the Python layer).
 
-use super::{decode_blocks, encode_blocks, AppState, LocalBoxFuture, StepCtx};
+use super::{decode_blocks, encode_blocks, AppState, LocalBoxFuture, NewWorld, StepCtx};
 use crate::mpi::{MpiError, ReduceOp};
 use crate::runtime::ArrayF32;
 use crate::sim::rng::Rng;
@@ -44,6 +44,10 @@ pub struct ComdState {
     initialized: bool,
     /// Last global (ke + pe) — the conservation diagnostic.
     pub energy: f32,
+    /// Post-shrink compute inflation (`NewWorld::work_scale`): survivors
+    /// integrate the adopted ranks' LJ boxes too. Model-only — excluded
+    /// from `serialize`, so digests match fault-free runs.
+    work_scale: f64,
 }
 
 impl ComdState {
@@ -83,6 +87,7 @@ impl ComdState {
             frc: vec![0.0; n * 3],
             initialized: false,
             energy: 0.0,
+            work_scale: 1.0,
         }
     }
 
@@ -122,6 +127,10 @@ impl AppState for ComdState {
         self.energy as f64
     }
 
+    fn repartition(&mut self, world: NewWorld) {
+        self.work_scale = world.work_scale();
+    }
+
     fn step<'a>(
         &'a mut self,
         cx: StepCtx<'a>,
@@ -129,13 +138,14 @@ impl AppState for ComdState {
     ) -> LocalBoxFuture<'a, Result<(), MpiError>> {
         Box::pin(async move {
             let name = self.kernel();
+            let ws = self.work_scale;
             if !self.initialized {
                 // dt = 0: evaluates F(pos) without moving (see model.py)
-                let outs = cx.run_kernel(&name, &self.arrays(0.0)).await;
+                let outs = cx.run_kernel_scaled(&name, &self.arrays(0.0), ws).await;
                 self.frc = outs[2].data.clone();
                 self.initialized = true;
             }
-            let mut outs = cx.run_kernel(&name, &self.arrays(DT)).await;
+            let mut outs = cx.run_kernel_scaled(&name, &self.arrays(DT), ws).await;
             let ke = outs[3].as_scalar();
             let pe = outs[4].as_scalar();
             self.pos = std::mem::take(&mut outs[0].data);
@@ -179,6 +189,15 @@ mod tests {
         for &x in &s.pos {
             assert!(x > -JITTER && x < s.boxl + JITTER);
         }
+    }
+
+    #[test]
+    fn repartition_leaves_checkpoint_alone() {
+        let mut s = ComdState::new(64, 7, 3);
+        let before = s.serialize();
+        s.repartition(NewWorld { logical: 16, procs: 4 });
+        assert_eq!(s.work_scale, 4.0);
+        assert_eq!(s.serialize(), before, "payload must not encode the scale");
     }
 
     #[test]

@@ -14,8 +14,13 @@ use crate::mpi::{bytes_to_f32s, Comm, MpiError, RecvSrc};
 const FACE_TAG_BASE: u64 = 1 << 32;
 
 /// Near-cubic factorization of `n` into (px, py, pz), px >= py >= pz,
-/// minimizing total surface (deterministic).
+/// minimizing total surface (deterministic). Degenerate counts are first
+/// class: primes and `n == 1` yield valid *flat* grids (`(n, 1, 1)`) whose
+/// unit axes have no neighbours — a 1-wide axis never wraps onto itself.
+/// Shrinking recovery re-derives grids over arbitrary survivor counts, so
+/// every `n >= 1` must factor cleanly.
 pub fn grid3(n: u32) -> (u32, u32, u32) {
+    assert!(n >= 1, "grid3 needs at least one rank");
     let mut best = (n, 1, 1);
     let mut best_surface = u64::MAX;
     for pz in 1..=n {
@@ -190,6 +195,49 @@ mod tests {
         let (px, py, pz) = grid3(1024);
         assert_eq!(px * py * pz, 1024);
         assert!(px >= py && py >= pz);
+    }
+
+    #[test]
+    fn grid3_degenerate_survivor_counts_stay_valid() {
+        // shrink can leave any rank count alive; primes and 1 must still
+        // factor into a valid (flat) grid
+        for n in [1u32, 2, 3, 5, 7, 13] {
+            let (px, py, pz) = grid3(n);
+            assert_eq!(px * py * pz, n, "n={n}: must cover every rank");
+            assert!(px >= py && py >= pz && pz >= 1, "n={n}: ({px},{py},{pz})");
+            assert_eq!((py, pz), (1, 1), "n={n}: prime/unit counts are chains");
+            for r in 0..n {
+                assert_eq!(rank_of(coords(r, dims_of(n)), dims_of(n)), r);
+            }
+        }
+        fn dims_of(n: u32) -> (u32, u32, u32) {
+            grid3(n)
+        }
+    }
+
+    #[test]
+    fn flat_grid_neighbors_never_wrap() {
+        for n in [1u32, 2, 3, 5, 7, 13] {
+            let dims = grid3(n);
+            for r in 0..n {
+                // unit axes (y, z on a chain) have no neighbours at all
+                for f in 2..6 {
+                    assert_eq!(neighbor(r, dims, f), None, "n={n} r={r} f={f}");
+                }
+                let minus = neighbor(r, dims, 0);
+                let plus = neighbor(r, dims, 1);
+                assert_eq!(minus, (r > 0).then(|| r - 1), "n={n} r={r} -x");
+                assert_eq!(plus, (r + 1 < n).then(|| r + 1), "n={n} r={r} +x");
+                assert_ne!(minus, Some(r), "no self-wrap");
+                assert_ne!(plus, Some(r), "no self-wrap");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "grid3 needs at least one rank")]
+    fn grid3_rejects_empty_world() {
+        grid3(0);
     }
 
     #[test]

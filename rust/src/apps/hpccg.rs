@@ -8,7 +8,7 @@
 //! tree allreduce, so the distributed solve is bitwise reproducible.
 
 use super::halo::{build_halo, exchange_faces, grid3};
-use super::{decode_blocks, encode_blocks, AppState, LocalBoxFuture, StepCtx};
+use super::{decode_blocks, encode_blocks, AppState, LocalBoxFuture, NewWorld, StepCtx};
 use crate::mpi::{MpiError, ReduceOp};
 use crate::runtime::ArrayF32;
 use crate::sim::rng::Rng;
@@ -31,7 +31,14 @@ impl super::App for HpccgApp {
 
 pub struct HpccgState {
     _rank: u32,
+    /// Logical decomposition — pinned at `grid3(ranks)` for the job's whole
+    /// life (ReStore's invariant block count); halo partners never change.
     dims: (u32, u32, u32),
+    /// Live processor grid, re-derived over the survivor count by
+    /// `repartition`. Model-only: not serialized, not digested.
+    live_grid: (u32, u32, u32),
+    /// Post-shrink compute inflation (`NewWorld::work_scale`); model-only.
+    work_scale: f64,
     nx: usize,
     x: Vec<f32>,
     r: Vec<f32>,
@@ -52,6 +59,8 @@ impl HpccgState {
         HpccgState {
             _rank: rank,
             dims: grid3(size),
+            live_grid: grid3(size),
+            work_scale: 1.0,
             nx,
             x: vec![0.0; n],
             r: b.clone(),
@@ -65,6 +74,11 @@ impl HpccgState {
 
     fn shape(&self) -> Vec<usize> {
         vec![self.nx, self.nx, self.nx]
+    }
+
+    /// The processor grid currently carrying the blocks (tests/diagnostics).
+    pub fn live_grid(&self) -> (u32, u32, u32) {
+        self.live_grid
     }
 }
 
@@ -95,6 +109,14 @@ impl AppState for HpccgState {
         self.rel_residual as f64
     }
 
+    fn repartition(&mut self, world: NewWorld) {
+        // `dims` stays: the decomposition keeps `world.logical` blocks so
+        // halo partners, reductions and hence digests are unchanged. The
+        // survivors just run hotter.
+        self.live_grid = grid3(world.procs);
+        self.work_scale = world.work_scale();
+    }
+
     fn step<'a>(
         &'a mut self,
         cx: StepCtx<'a>,
@@ -112,10 +134,12 @@ impl AppState for HpccgState {
             let faces = exchange_faces(cx.comm, self.dims, &self.p, nx).await?;
             let p_halo = build_halo(&self.p, nx, &faces);
 
+            let ws = self.work_scale;
             let mut outs = cx
-                .run_kernel(
+                .run_kernel_scaled(
                     &format!("hpccg_matvec_{nx}"),
                     &[ArrayF32::new(vec![nx + 2, nx + 2, nx + 2], p_halo)],
+                    ws,
                 )
                 .await;
             let pap_local = outs[1].as_scalar();
@@ -124,7 +148,7 @@ impl AppState for HpccgState {
             let alpha = if pap != 0.0 { self.rr / pap } else { 0.0 };
 
             let mut outs = cx
-                .run_kernel(
+                .run_kernel_scaled(
                     &format!("hpccg_update_{nx}"),
                     &[
                         ArrayF32::new(self.shape(), self.x.clone()),
@@ -133,6 +157,7 @@ impl AppState for HpccgState {
                         ArrayF32::new(self.shape(), ap),
                         ArrayF32::scalar(alpha),
                     ],
+                    ws,
                 )
                 .await;
             let rr_local = outs[2].as_scalar();
@@ -142,13 +167,14 @@ impl AppState for HpccgState {
             let beta = if self.rr != 0.0 { rr_new / self.rr } else { 0.0 };
 
             let mut outs = cx
-                .run_kernel(
+                .run_kernel_scaled(
                     &format!("hpccg_direction_{nx}"),
                     &[
                         ArrayF32::new(self.shape(), self.r.clone()),
                         ArrayF32::new(self.shape(), self.p.clone()),
                         ArrayF32::scalar(beta),
                     ],
+                    ws,
                 )
                 .await;
             self.p = std::mem::take(&mut outs[0].data);
@@ -187,6 +213,19 @@ mod tests {
         assert_ne!(a.digest(), b.digest());
         b.restore(&a.serialize());
         assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn repartition_rescales_model_not_state() {
+        let mut s = HpccgState::new(8, 5, 2, 8);
+        let before = s.serialize();
+        let d = s.digest();
+        s.repartition(NewWorld { logical: 8, procs: 5 });
+        assert_eq!(s.live_grid(), grid3(5), "live grid follows survivors");
+        assert_eq!(s.dims, grid3(8), "decomposition is pinned");
+        assert_eq!(s.work_scale, 1.6);
+        assert_eq!(s.serialize(), before, "checkpoint payload untouched");
+        assert_eq!(s.digest(), d, "digest untouched");
     }
 
     #[test]

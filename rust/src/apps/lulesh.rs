@@ -4,7 +4,7 @@
 //! (CalcTimeConstraintsForElems) every iteration.
 
 use super::halo::{build_halo, coords, exchange_faces, grid3};
-use super::{decode_blocks, encode_blocks, AppState, LocalBoxFuture, StepCtx};
+use super::{decode_blocks, encode_blocks, AppState, LocalBoxFuture, NewWorld, StepCtx};
 use crate::mpi::{MpiError, ReduceOp};
 use crate::runtime::ArrayF32;
 use crate::sim::rng::Rng;
@@ -30,7 +30,14 @@ impl super::App for LuleshApp {
 }
 
 pub struct LuleshState {
+    /// Logical decomposition — pinned for the job's life (the Sedov centre
+    /// rank and halo partners must not move under a shrink).
     dims: (u32, u32, u32),
+    /// Live processor grid, re-derived over survivors by `repartition`.
+    /// Model-only: not serialized, not digested.
+    live_grid: (u32, u32, u32),
+    /// Post-shrink compute inflation (`NewWorld::work_scale`); model-only.
+    work_scale: f64,
     nx: usize,
     e: Vec<f32>,
     u: Vec<f32>,
@@ -61,12 +68,19 @@ impl LuleshState {
         let _ = coords(rank, dims);
         LuleshState {
             dims,
+            live_grid: dims,
+            work_scale: 1.0,
             nx,
             e,
             u: vec![0.0; n],
             dt: DT0,
             dt_global: DT0,
         }
+    }
+
+    /// The processor grid currently carrying the blocks (tests/diagnostics).
+    pub fn live_grid(&self) -> (u32, u32, u32) {
+        self.live_grid
     }
 }
 
@@ -89,6 +103,13 @@ impl AppState for LuleshState {
         self.dt_global as f64
     }
 
+    fn repartition(&mut self, world: NewWorld) {
+        // `dims` stays at the logical decomposition so the deposit centre
+        // and face partners are invariant; survivors just carry more work.
+        self.live_grid = grid3(world.procs);
+        self.work_scale = world.work_scale();
+    }
+
     fn step<'a>(
         &'a mut self,
         cx: StepCtx<'a>,
@@ -99,13 +120,14 @@ impl AppState for LuleshState {
             let faces = exchange_faces(cx.comm, self.dims, &self.u, nx).await?;
             let u_halo = build_halo(&self.u, nx, &faces);
             let mut outs = cx
-                .run_kernel(
+                .run_kernel_scaled(
                     &format!("lulesh_step_{nx}"),
                     &[
                         ArrayF32::new(vec![nx, nx, nx], self.e.clone()),
                         ArrayF32::new(vec![nx + 2, nx + 2, nx + 2], u_halo),
                         ArrayF32::scalar(self.dt),
                     ],
+                    self.work_scale,
                 )
                 .await;
             let dt_local = outs[2].as_scalar();
@@ -148,6 +170,17 @@ mod tests {
         assert_ne!(a.digest(), b.digest());
         b.restore(&a.serialize());
         assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn repartition_keeps_decomposition_and_digest() {
+        let mut s = LuleshState::new(8, 2, 3, 27);
+        let before = s.serialize();
+        s.repartition(NewWorld { logical: 27, procs: 13 });
+        assert_eq!(s.live_grid(), grid3(13));
+        assert_eq!(s.dims, grid3(27), "deposit centre must not move");
+        assert!((s.work_scale - 27.0 / 13.0).abs() < 1e-12);
+        assert_eq!(s.serialize(), before);
     }
 
     #[test]

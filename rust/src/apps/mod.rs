@@ -47,12 +47,54 @@ impl StepCtx<'_> {
         name: &str,
         inputs: &[crate::runtime::ArrayF32],
     ) -> Vec<crate::runtime::ArrayF32> {
+        self.run_kernel_scaled(name, inputs, 1.0).await
+    }
+
+    /// `run_kernel` with an extra multiplicative cost factor: the app's
+    /// post-shrink working-set inflation (see [`NewWorld::work_scale`]).
+    /// Scaling touches only the charged virtual time, never the kernel
+    /// outputs, so checkpoints and digests are unaffected.
+    pub async fn run_kernel_scaled(
+        &self,
+        name: &str,
+        inputs: &[crate::runtime::ArrayF32],
+        work_scale: f64,
+    ) -> Vec<crate::runtime::ArrayF32> {
         let (outs, cost) = self.backend.execute(name, inputs);
-        let f = self.comm.fault_tolerance_compute_factor();
+        let f = self.comm.fault_tolerance_compute_factor() * work_scale;
         self.sim
             .sleep(crate::sim::SimDuration::from_secs_f64(cost.secs_f64() * f))
             .await;
         outs
+    }
+}
+
+/// World shape after a shrinking recovery, handed to
+/// [`AppState::repartition`]. The *logical* rank count — the domain
+/// decomposition width, ReStore's invariant block count — never changes;
+/// what shrinks is the number of live processes carrying those blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NewWorld {
+    /// Logical ranks (== the job's configured `ranks`).
+    pub logical: u32,
+    /// Live processes after the shrink (`min_ranks ..= logical`).
+    pub procs: u32,
+}
+
+impl NewWorld {
+    /// Modeled per-rank compute inflation: with `logical` blocks spread
+    /// over `procs` survivors, each process serializes `logical / procs`
+    /// blocks' worth of kernel work per iteration on average. Data is
+    /// untouched — shrink trades permanently slower iterations for
+    /// zero respawn cost and zero spare nodes.
+    pub fn work_scale(&self) -> f64 {
+        assert!(
+            self.procs >= 1 && self.procs <= self.logical,
+            "NewWorld{{logical: {}, procs: {}}}",
+            self.logical,
+            self.procs
+        );
+        self.logical as f64 / self.procs as f64
     }
 }
 
@@ -72,6 +114,12 @@ pub trait AppState {
     fn diagnostic(&self) -> f64 {
         0.0
     }
+    /// Adapt modeled costs to a shrunken world (called by the rank driver
+    /// after a shrinking recovery, before `restore`). Must not change the
+    /// checkpoint payload or digest — the decomposition stays at
+    /// `world.logical` blocks; only the live processor grid and the
+    /// per-rank working-set scale move. Default: no-op.
+    fn repartition(&mut self, _world: NewWorld) {}
     /// One main-loop iteration.
     fn step<'a>(&'a mut self, cx: StepCtx<'a>, iter: u32)
         -> LocalBoxFuture<'a, Result<(), MpiError>>;
@@ -187,5 +235,25 @@ mod tests {
         let mut enc = encode_blocks(&[&[1.0f32]]);
         enc.push(0);
         decode_blocks(&enc);
+    }
+
+    #[test]
+    fn work_scale_is_adoption_ratio() {
+        assert_eq!(NewWorld { logical: 8, procs: 8 }.work_scale(), 1.0);
+        assert_eq!(NewWorld { logical: 8, procs: 4 }.work_scale(), 2.0);
+        assert_eq!(NewWorld { logical: 8, procs: 5 }.work_scale(), 1.6);
+        assert_eq!(NewWorld { logical: 1, procs: 1 }.work_scale(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "NewWorld")]
+    fn work_scale_rejects_grown_world() {
+        NewWorld { logical: 4, procs: 5 }.work_scale();
+    }
+
+    #[test]
+    #[should_panic(expected = "NewWorld")]
+    fn work_scale_rejects_empty_world() {
+        NewWorld { logical: 4, procs: 0 }.work_scale();
     }
 }

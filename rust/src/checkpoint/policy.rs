@@ -30,7 +30,12 @@ pub fn default_scheme(recovery: RecoveryKind, failure: FailureKind) -> CkptKind 
         // same way).
         (RecoveryKind::Replication, _) => CkptKind::File,
         (_, FailureKind::Node) => CkptKind::File,
-        (RecoveryKind::Ulfm | RecoveryKind::Reinit, _) => CkptKind::Memory,
+        // Shrink follows the Reinit++ row: in-memory copies for process
+        // failures (ReStore's fast path — they get redistributed over the
+        // survivors), file once whole nodes die. A node-disjoint partner
+        // tier would actually survive shrink's in-place node loss too, but
+        // the Table-2 default stays conservative; opt in via `ckpt_tiers`.
+        (RecoveryKind::Ulfm | RecoveryKind::Reinit | RecoveryKind::Shrink, _) => CkptKind::Memory,
     }
 }
 
@@ -59,6 +64,9 @@ mod tests {
         // which loses all memory — file either way
         assert_eq!(default_scheme(Replication, Process), File);
         assert_eq!(default_scheme(Replication, Node), File);
+        // shrink rides the Reinit++ row
+        assert_eq!(default_scheme(Shrink, Process), Memory);
+        assert_eq!(default_scheme(Shrink, Node), File);
     }
 
     #[test]

@@ -27,9 +27,11 @@
 //! degraded replicas after a restart. See EXPERIMENTS.md §Checkpoint tiers.
 
 pub mod placement;
+pub mod redistribute;
 mod store;
 
 pub use placement::{buddy_of, partners_of};
+pub use redistribute::balanced_placement;
 pub use store::CkptStore;
 
 use std::fmt;
@@ -238,6 +240,10 @@ pub struct StorageStats {
     pub disk: DiskStats,
     /// Peak number of checkpoints queued for background drain.
     pub pending_peak: u64,
+    /// Payload bytes moved by shrink-time checkpoint redistribution.
+    pub redistributed_bytes: u64,
+    /// Copies landed by shrink-time checkpoint redistribution.
+    pub redistributed_copies: u64,
 }
 
 #[cfg(test)]

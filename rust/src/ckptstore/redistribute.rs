@@ -1,0 +1,192 @@
+//! ReStore-style balanced re-placement of in-memory checkpoint copies
+//! after a shrink (arXiv 2203.01107).
+//!
+//! The construction-time walk in [`super::placement`] assumes every rank
+//! sits on its *home* node. After a shrinking recovery that is no longer
+//! true: survivors adopt the dead processes' domain blocks, so several
+//! logical ranks share a node and the old partner choices may be dead,
+//! co-located with their owner, or piled onto one host. This module
+//! recomputes partner hosts over the *live* topology (`node_of[r]` = the
+//! node currently carrying logical rank `r`) with an explicit load-balance
+//! objective: every pick takes the least-loaded eligible host, so hosted
+//! copy counts stay within one of each other whenever the node-disjointness
+//! constraint leaves any slack — ReStore's even-redistribution property.
+
+/// Partner hosts for every owner over the live topology. `node_of[r]` is
+/// the node currently hosting logical rank `r` (all ranks are alive —
+/// redistribution runs after the shrink re-hosted the victims' blocks).
+/// Returns one host list per owner, each of length
+/// `min(replicas, ranks - 1)`, deterministic in its inputs.
+///
+/// Host choice per slot: the minimum `(copies hosted so far, rank id)`
+/// among eligible candidates. With `node_disjoint`, a candidate is
+/// eligible only if its node differs from the owner's and from every node
+/// already holding one of this owner's copies; when that leaves no
+/// candidate the constraint is relaxed (replica *count* is kept,
+/// disjointness is best-effort — same contract as `partners_of`).
+pub fn balanced_placement(node_of: &[u32], replicas: u32, node_disjoint: bool) -> Vec<Vec<u32>> {
+    let n = node_of.len() as u32;
+    let want = replicas.min(n.saturating_sub(1)) as usize;
+    let mut loads = vec![0u32; n as usize];
+    let mut out: Vec<Vec<u32>> = Vec::with_capacity(n as usize);
+    for owner in 0..n {
+        let mut picked: Vec<u32> = Vec::with_capacity(want);
+        let mut used_nodes = vec![node_of[owner as usize]];
+        while picked.len() < want {
+            let eligible = |cand: u32, strict: bool| {
+                cand != owner
+                    && !picked.contains(&cand)
+                    && (!strict || !used_nodes.contains(&node_of[cand as usize]))
+            };
+            let pick = (0..n)
+                .filter(|&c| eligible(c, node_disjoint))
+                .min_by_key(|&c| (loads[c as usize], c))
+                .or_else(|| {
+                    (0..n)
+                        .filter(|&c| eligible(c, false))
+                        .min_by_key(|&c| (loads[c as usize], c))
+                });
+            let Some(h) = pick else { break };
+            used_nodes.push(node_of[h as usize]);
+            loads[h as usize] += 1;
+            picked.push(h);
+        }
+        out.push(picked);
+    }
+    // Local-search rebalance toward ReStore's ≤1 spread: the greedy order
+    // can strand a late owner's constrained pick on an already-loaded host
+    // while equally-cheap ties ate the hosts its node-mates needed. Each
+    // move retargets one copy from an overloaded host to an underloaded
+    // one (owner/duplicate/node constraints respected); every move
+    // strictly lowers the load imbalance, so the search terminates.
+    loop {
+        let mut order: Vec<u32> = (0..n).collect();
+        order.sort_by_key(|&h| (loads[h as usize], h));
+        let mut improved = false;
+        'search: for &recv in &order {
+            for &donor in order.iter().rev() {
+                if loads[donor as usize] < loads[recv as usize] + 2 {
+                    break; // donors descend by load: no gap >= 2 left
+                }
+                for owner in 0..n {
+                    let hosts = &mut out[owner as usize];
+                    let Some(pos) = hosts.iter().position(|&h| h == donor) else {
+                        continue;
+                    };
+                    if recv == owner || hosts.contains(&recv) {
+                        continue;
+                    }
+                    if node_disjoint {
+                        let recv_node = node_of[recv as usize];
+                        let clash = recv_node == node_of[owner as usize]
+                            || hosts.iter().enumerate().any(|(i, &h)| {
+                                i != pos && node_of[h as usize] == recv_node
+                            });
+                        if clash {
+                            continue;
+                        }
+                    }
+                    hosts[pos] = recv;
+                    loads[donor as usize] -= 1;
+                    loads[recv as usize] += 1;
+                    improved = true;
+                    break 'search;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spread(placement: &[Vec<u32>], n: usize) -> (u32, u32) {
+        let mut loads = vec![0u32; n];
+        for hosts in placement {
+            for &h in hosts {
+                loads[h as usize] += 1;
+            }
+        }
+        (
+            *loads.iter().min().expect("non-empty"),
+            *loads.iter().max().expect("non-empty"),
+        )
+    }
+
+    #[test]
+    fn balanced_and_node_disjoint_on_even_topology() {
+        // 8 ranks on 4 nodes, 2 each
+        let node_of: Vec<u32> = (0..8).map(|r| r / 2).collect();
+        let p = balanced_placement(&node_of, 1, true);
+        for (owner, hosts) in p.iter().enumerate() {
+            assert_eq!(hosts.len(), 1);
+            assert_ne!(hosts[0] as usize, owner, "never self");
+            assert_ne!(
+                node_of[hosts[0] as usize], node_of[owner],
+                "owner {owner}: copy must leave the node"
+            );
+        }
+        let (lo, hi) = spread(&p, 8);
+        assert!(hi - lo <= 1, "load-balance bound: {lo}..{hi}");
+    }
+
+    #[test]
+    fn stays_balanced_after_adoption_skew() {
+        // post-shrink world: node 0 carries four blocks, nodes 1..=2 two each
+        let node_of = vec![0, 0, 0, 0, 1, 1, 2, 2];
+        let p = balanced_placement(&node_of, 1, true);
+        let (lo, hi) = spread(&p, 8);
+        assert!(hi - lo <= 1, "greedy walk must even out: {lo}..{hi}");
+        for (owner, hosts) in p.iter().enumerate() {
+            assert_ne!(node_of[hosts[0] as usize], node_of[owner]);
+        }
+    }
+
+    #[test]
+    fn relaxes_disjointness_on_one_node_like_partners_of() {
+        let node_of = vec![0, 0, 0, 0];
+        let p = balanced_placement(&node_of, 1, true);
+        for (owner, hosts) in p.iter().enumerate() {
+            assert_eq!(hosts.len(), 1, "replica count kept");
+            assert_ne!(hosts[0] as usize, owner);
+        }
+        let (lo, hi) = spread(&p, 4);
+        assert!(hi - lo <= 1);
+    }
+
+    #[test]
+    fn multi_replica_distinct_hosts_and_nodes() {
+        let node_of: Vec<u32> = (0..12).map(|r| r / 4).collect(); // 3 nodes
+        let p = balanced_placement(&node_of, 2, true);
+        for (owner, hosts) in p.iter().enumerate() {
+            assert_eq!(hosts.len(), 2);
+            assert_ne!(hosts[0], hosts[1], "distinct hosts");
+            let mut nodes = vec![
+                node_of[owner],
+                node_of[hosts[0] as usize],
+                node_of[hosts[1] as usize],
+            ];
+            nodes.sort_unstable();
+            nodes.dedup();
+            assert_eq!(nodes.len(), 3, "owner + replicas on 3 distinct nodes");
+        }
+        let (lo, hi) = spread(&p, 12);
+        assert!(hi - lo <= 1);
+    }
+
+    #[test]
+    fn deterministic_and_capped() {
+        let node_of = vec![0, 1, 0, 1, 0];
+        assert_eq!(
+            balanced_placement(&node_of, 3, true),
+            balanced_placement(&node_of, 3, true)
+        );
+        assert!(balanced_placement(&[7], 2, true)[0].is_empty(), "1-rank world");
+        assert_eq!(balanced_placement(&node_of, 99, false)[0].len(), 4);
+    }
+}

@@ -28,6 +28,7 @@ use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
 
 use super::placement::partners_of;
+use super::redistribute::balanced_placement;
 use super::{StackSpec, StorageStats, TierIo, TierSpec};
 use crate::cluster::Topology;
 use crate::config::{Calibration, CkptKind};
@@ -103,6 +104,19 @@ struct Inner {
     /// A flush activation is scheduled or running.
     drain_armed: bool,
     pending_peak: u64,
+    /// Placement hosts per tier per owner rank — the *current* targets of
+    /// save/drain/rebuild. Starts as the construction-time walk over home
+    /// nodes; a shrink's `redistribute` swaps in a balanced walk over the
+    /// live topology (`Rc` so hot paths clone a pointer, not the table).
+    placements: Rc<Vec<Vec<Vec<u32>>>>,
+    /// Node currently carrying each logical rank. Tracks re-hosting after
+    /// a shrink so fabric-hop costs price against live placements, not the
+    /// home nodes. Identical to the home map until a shrink.
+    node_of: Vec<u32>,
+    /// Payload bytes moved (per landed copy) by `redistribute`.
+    redistributed_bytes: u64,
+    /// Copies landed by `redistribute`.
+    redistributed_copies: u64,
 }
 
 /// Shared tiered checkpoint store for one experiment trial (cheap clone).
@@ -110,10 +124,10 @@ struct Inner {
 pub struct CkptStore {
     sim: Sim,
     specs: Rc<Vec<TierSpec>>,
-    /// Placement hosts per tier per owner rank, precomputed once — the
-    /// topology is immutable, so the save/drain/rebuild hot paths must not
-    /// re-walk it per checkpoint.
-    placements: Rc<Vec<Vec<Vec<u32>>>>,
+    /// The construction-time placement table (home-node walk), kept so a
+    /// full re-deploy (`lose_all_memory`) can reset any shrink-time
+    /// redistribution — the fresh job starts from the original topology.
+    initial_placements: Rc<Vec<Vec<Vec<u32>>>>,
     topo: Topology,
     disk: SharedDisk,
     net: NetCost,
@@ -149,10 +163,11 @@ impl CkptStore {
                     .collect()
             })
             .collect();
+        let placements = Rc::new(placements);
         CkptStore {
             sim: sim.clone(),
             specs: Rc::new(stack.tiers.clone()),
-            placements: Rc::new(placements),
+            initial_placements: Rc::clone(&placements),
             topo,
             disk: SharedDisk::from_calib(sim, calib),
             net: NetCost::from_calib(calib),
@@ -172,6 +187,10 @@ impl CkptStore {
                 pending: BTreeMap::new(),
                 drain_armed: false,
                 pending_peak: 0,
+                placements,
+                node_of: (0..topo.ranks).map(|r| topo.home_node(r)).collect(),
+                redistributed_bytes: 0,
+                redistributed_copies: 0,
             })),
         }
     }
@@ -190,15 +209,17 @@ impl CkptStore {
         SimDuration::from_secs_f64(bytes as f64 / self.mem_bytes_per_sec)
     }
 
-    /// One fabric hop between the owner's current `node` and `host`'s home.
+    /// One fabric hop between the owner's current `node` and the node
+    /// currently carrying `host` (its home until a shrink re-hosts it).
     fn hop_cost(&self, bytes: usize, host: u32, node: u32) -> SimDuration {
-        self.net
-            .data_delay(bytes, self.topo.home_node(host) == node)
+        let same = self.inner.borrow().node_of[host as usize] == node;
+        self.net.data_delay(bytes, same)
     }
 
-    /// The placement hosts of `owner`'s copies in tier `tier`.
-    fn hosts(&self, tier: usize, owner: u32) -> &[u32] {
-        &self.placements[tier][owner as usize]
+    /// The current placement table (cheap `Rc` clone — hold it across
+    /// awaits instead of borrowing the cell).
+    fn placements(&self) -> Rc<Vec<Vec<Vec<u32>>>> {
+        Rc::clone(&self.inner.borrow().placements)
     }
 
     /// Land `data` for `(owner, iter)` in `tier`'s copy at `host`.
@@ -230,7 +251,8 @@ impl CkptStore {
             }
             TierSpec::PartnerMem { .. } => {
                 // one NIC: replica pushes serialize on the owner's link
-                for &host in self.hosts(tier, owner) {
+                let pl = self.placements();
+                for &host in &pl[tier][owner as usize] {
                     self.sim.sleep(self.hop_cost(data.len(), host, node)).await;
                     self.install(tier, owner, host, iter, data);
                 }
@@ -326,13 +348,14 @@ impl CkptStore {
                 }
             }
             // land the whole iteration at once (no awaits in between)
+            let pl = self.placements();
             for (owner, data) in &batch {
                 let len = data.len();
                 for tier in 1..self.specs.len() {
                     match self.specs[tier] {
                         TierSpec::LocalMem => {} // tier 0 by construction
                         TierSpec::PartnerMem { .. } => {
-                            let hosts = self.hosts(tier, *owner);
+                            let hosts = &pl[tier][*owner as usize];
                             for &host in hosts {
                                 self.install(tier, *owner, host, iter, data);
                             }
@@ -404,8 +427,9 @@ impl CkptStore {
     /// its tier's write cost and counted in `rebuild_bytes`. No-op (and
     /// zero-cost) when nothing is degraded.
     pub async fn rebuild(&self, rank: u32, node: u32, iter: u32, data: &Rc<Vec<u8>>) {
+        let pl = self.placements();
         for tier in 0..self.specs.len() {
-            for &host in self.hosts(tier, rank) {
+            for &host in &pl[tier][rank as usize] {
                 // A copy needs rebuilding only if the slot lacks `iter` AND
                 // would actually retain it: a slot already holding two newer
                 // checkpoints (stale-but-identical pre-rollback state, or a
@@ -436,6 +460,132 @@ impl CkptStore {
                 self.inner.borrow_mut().tiers[tier].io.rebuild_bytes += data.len() as u64;
             }
         }
+    }
+
+    /// ReStore-style redistribution after a shrink: recompute the
+    /// in-memory placement tables over the live topology (`node_of[r]` =
+    /// node currently carrying logical rank `r`, all alive) with the
+    /// load-balanced walk of [`balanced_placement`], move every retained
+    /// checkpoint iteration onto the new hosts, and prune copies stranded
+    /// at hosts the new placement no longer names.
+    ///
+    /// Sources are chosen cheapest-surviving-tier-first per iteration.
+    /// Cost model: memory→memory moves happen in parallel across owners
+    /// (ReStore's point — every rank pushes/pulls concurrently), so one
+    /// sleep of the most-loaded owner's serial transfer chain is charged;
+    /// each move is priced as a remote fabric hop (conservative — post-
+    /// shrink co-location is incidental). Filesystem-sourced copies go
+    /// through the contended disk model instead. Returns the payload
+    /// bytes moved; cumulative counters land in [`StorageStats`].
+    pub async fn redistribute(&self, node_of: &[u32]) -> u64 {
+        assert_eq!(node_of.len(), self.topo.ranks as usize);
+        let new_pl: Rc<Vec<Vec<Vec<u32>>>> = Rc::new(
+            self.specs
+                .iter()
+                .map(|spec| match *spec {
+                    TierSpec::LocalMem => (0..self.topo.ranks).map(|r| vec![r]).collect(),
+                    TierSpec::PartnerMem {
+                        replicas,
+                        node_disjoint,
+                    } => balanced_placement(node_of, replicas, node_disjoint),
+                    TierSpec::SharedFs => {
+                        (0..self.topo.ranks).map(|_| vec![FS_HOST]).collect()
+                    }
+                })
+                .collect(),
+        );
+        {
+            let mut inner = self.inner.borrow_mut();
+            inner.placements = Rc::clone(&new_pl);
+            inner.node_of.copy_from_slice(node_of);
+        }
+        let mut moved = 0u64;
+        let mut slowest_owner = SimDuration::ZERO;
+        for owner in 0..self.topo.ranks {
+            // Union of retained iterations, each from its cheapest
+            // surviving tier (tier order is fast -> slow).
+            let sources: Vec<(u32, usize, Rc<Vec<u8>>)> = {
+                let inner = self.inner.borrow();
+                let mut by_iter: BTreeMap<u32, (usize, Rc<Vec<u8>>)> = BTreeMap::new();
+                for (tier, t) in inner.tiers.iter().enumerate() {
+                    for (_h, slot) in t.copies.get(&owner).into_iter().flatten() {
+                        for (iter, data) in &slot.entries {
+                            by_iter
+                                .entry(*iter)
+                                .or_insert_with(|| (tier, Rc::clone(data)));
+                        }
+                    }
+                }
+                by_iter.into_iter().map(|(i, (t, d))| (i, t, d)).collect()
+            };
+            let mut chain = SimDuration::ZERO;
+            for tier in 0..self.specs.len() {
+                if matches!(self.specs[tier], TierSpec::SharedFs) {
+                    continue; // FS_HOST placement never moves
+                }
+                for &host in &new_pl[tier][owner as usize] {
+                    for (iter, src_tier, data) in &sources {
+                        let present = {
+                            let inner = self.inner.borrow();
+                            inner.tiers[tier]
+                                .copies
+                                .get(&owner)
+                                .and_then(|v| v.iter().find(|(h, _)| *h == host))
+                                .is_some_and(|(_, s)| s.get(*iter).is_some())
+                        };
+                        if present {
+                            continue;
+                        }
+                        if matches!(self.specs[*src_tier], TierSpec::SharedFs) {
+                            self.disk.read(data.len() as u64).await;
+                        } else {
+                            chain += self.net.data_delay(data.len(), false);
+                        }
+                        self.install(tier, owner, host, *iter, data);
+                        moved += data.len() as u64;
+                        let mut inner = self.inner.borrow_mut();
+                        inner.redistributed_bytes += data.len() as u64;
+                        inner.redistributed_copies += 1;
+                    }
+                }
+            }
+            if chain > slowest_owner {
+                slowest_owner = chain;
+            }
+            // Prune copies stranded at hosts outside the new placement so
+            // hosted-copy counts reflect the balanced walk (the ReStore
+            // load-balance bound) and stale hosts stop serving loads.
+            let mut inner = self.inner.borrow_mut();
+            for (tier, t) in inner.tiers.iter_mut().enumerate() {
+                if matches!(self.specs[tier], TierSpec::SharedFs) {
+                    continue;
+                }
+                if let Some(v) = t.copies.get_mut(&owner) {
+                    v.retain(|(h, _)| new_pl[tier][owner as usize].contains(h));
+                }
+            }
+        }
+        self.sim.sleep(slowest_owner).await;
+        moved
+    }
+
+    /// In-memory copies currently hosted per rank (both tiers' slots; the
+    /// filesystem pseudo-host is excluded). Index = host rank. The shrink
+    /// survivability tests assert ReStore's ≤1 spread on this.
+    pub fn copies_hosted(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.topo.ranks as usize];
+        let inner = self.inner.borrow();
+        for (t, spec) in inner.tiers.iter().zip(self.specs.iter()) {
+            if matches!(spec, TierSpec::SharedFs) {
+                continue;
+            }
+            for v in t.copies.values() {
+                for (h, _slot) in v {
+                    counts[*h as usize] += 1;
+                }
+            }
+        }
+        counts
     }
 
     /// Model the memory loss of a failed process: every in-memory copy it
@@ -471,7 +621,9 @@ impl CkptStore {
 
     /// A job-wide abort (CR re-deploy): every process dies, so every
     /// in-memory tier and the drain queue are wiped. Only the parallel
-    /// filesystem survives.
+    /// filesystem survives. The fresh deployment is full-size on the
+    /// original topology, so any shrink-time redistribution is reset to
+    /// the construction-time placement walk.
     pub fn lose_all_memory(&self) {
         let mut inner = self.inner.borrow_mut();
         let inner = &mut *inner;
@@ -484,6 +636,10 @@ impl CkptStore {
             t.io.copies_lost += lost;
         }
         inner.pending.clear();
+        inner.placements = Rc::clone(&self.initial_placements);
+        for (r, n) in inner.node_of.iter_mut().enumerate() {
+            *n = self.topo.home_node(r as u32);
+        }
     }
 
     /// Per-tier-kind traffic counters plus the shared disk's own stats.
@@ -492,6 +648,8 @@ impl CkptStore {
         let mut s = StorageStats {
             disk: self.disk.stats(),
             pending_peak: inner.pending_peak,
+            redistributed_bytes: inner.redistributed_bytes,
+            redistributed_copies: inner.redistributed_copies,
             ..Default::default()
         };
         for (t, spec) in inner.tiers.iter().zip(self.specs.iter()) {
@@ -838,6 +996,130 @@ mod tests {
         for r in [0, 1] {
             assert_eq!(s.latest_iter(r), Some(2));
         }
+    }
+
+    // ---- redistribute (shrink support) ----
+
+    fn block_on_redistribute(sim: &Sim, s: &CkptStore, node_of: Vec<u32>) -> u64 {
+        let p = sim.spawn_process("redistributor");
+        let s2 = s.clone();
+        let out = Rc::new(Cell::new(0u64));
+        let o2 = Rc::clone(&out);
+        sim.spawn(p, async move {
+            o2.set(s2.redistribute(&node_of).await);
+        });
+        sim.run();
+        out.get()
+    }
+
+    fn hosted_spread(s: &CkptStore) -> u32 {
+        let counts = s.copies_hosted();
+        counts.iter().max().unwrap() - counts.iter().min().unwrap()
+    }
+
+    #[test]
+    fn redistribute_without_topology_change_moves_nothing() {
+        let (sim, s) = store_on("local+partner1", Topology::new(8, 2, 0));
+        for r in 0..8 {
+            block_on_save(&sim, &s, r, 1, vec![r as u8; 16]);
+        }
+        let node_of: Vec<u32> = (0..8).map(|r| s.topo.home_node(r)).collect();
+        let moved = block_on_redistribute(&sim, &s, node_of);
+        assert_eq!(moved, 0, "every copy already sits on a placement host");
+        assert_eq!(s.storage_stats().redistributed_bytes, 0);
+        assert!(hosted_spread(&s) <= 1);
+    }
+
+    #[test]
+    fn redistribute_restores_loss_and_rebalances() {
+        // node 3 dies; its ranks 6 and 7 are adopted by nodes 0 and 1
+        let (sim, s) = store_on("local+partner1", Topology::new(8, 2, 0));
+        for r in 0..8 {
+            block_on_save(&sim, &s, r, 1, vec![r as u8; 16]);
+        }
+        s.lose_node_ranks(&[6, 7]);
+        let node_of = vec![0, 0, 1, 1, 2, 2, 0, 1];
+        let moved = block_on_redistribute(&sim, &s, node_of.clone());
+        assert!(moved > 0);
+        let st = s.storage_stats();
+        assert_eq!(st.redistributed_bytes, moved);
+        assert!(st.redistributed_copies > 0);
+        for r in 0..8 {
+            assert_eq!(s.latest_iter(r), Some(1), "rank {r} recoverable");
+            assert_eq!(block_on_load(&sim, &s, r, 1), Some(vec![r as u8; 16]));
+        }
+        assert!(hosted_spread(&s) <= 1, "ReStore balance bound");
+        // no partner copy may share its owner's live node
+        let counts = s.copies_hosted();
+        assert_eq!(counts.iter().sum::<u32>(), 16, "8 local + 8 partner");
+    }
+
+    #[test]
+    fn survivability_matrix_across_three_failure_storm() {
+        // Satellite: after EVERY shrink step of a 3-failure storm, every
+        // logical rank must be loadable from a surviving tier and hosted
+        // copy counts must stay within the ≤1 balance bound.
+        let (sim, s) = store_on("local+partner1", Topology::new(8, 2, 0));
+        for r in 0..8 {
+            block_on_save(&sim, &s, r, 1, vec![r as u8; 8]);
+        }
+        let mut node_of: Vec<u32> = (0..8).map(|r| s.topo.home_node(r)).collect();
+        // (victim rank, node adopting its block)
+        for (step, (victim, adopter)) in [(5u32, 0u32), (1, 1), (6, 2)].iter().enumerate() {
+            s.lose_rank(*victim);
+            node_of[*victim as usize] = *adopter;
+            block_on_redistribute(&sim, &s, node_of.clone());
+            for r in 0..8 {
+                assert_eq!(
+                    s.latest_iter(r),
+                    Some(1),
+                    "step {step}: rank {r} lost its checkpoint"
+                );
+                assert!(
+                    block_on_load(&sim, &s, r, 1).is_some(),
+                    "step {step}: rank {r} cannot load"
+                );
+            }
+            assert!(
+                hosted_spread(&s) <= 1,
+                "step {step}: balance bound violated: {:?}",
+                s.copies_hosted()
+            );
+        }
+    }
+
+    #[test]
+    fn redistribute_moves_both_retained_iterations() {
+        // The post-failure allreduce-min can agree on the older retained
+        // iteration; redistribution must move the full slot, not just the
+        // newest entry.
+        let (sim, s) = store_on("local+partner1", Topology::new(4, 2, 0));
+        for r in 0..4 {
+            block_on_save(&sim, &s, r, 1, vec![1; 8]);
+            block_on_save(&sim, &s, r, 2, vec![2; 8]);
+        }
+        s.lose_rank(3);
+        let node_of = vec![0, 0, 1, 0];
+        block_on_redistribute(&sim, &s, node_of);
+        assert_eq!(block_on_load(&sim, &s, 3, 1), Some(vec![1; 8]));
+        assert_eq!(block_on_load(&sim, &s, 3, 2), Some(vec![2; 8]));
+    }
+
+    #[test]
+    fn lose_all_memory_resets_redistribution() {
+        let (sim, s) = store_on("local+partner1", Topology::new(8, 2, 0));
+        block_on_save(&sim, &s, 0, 1, vec![9; 8]);
+        // cram everyone onto node 0: the balanced walk relaxes disjointness
+        // and picks rank 1 as rank 0's partner
+        block_on_redistribute(&sim, &s, vec![0; 8]);
+        s.lose_all_memory();
+        // fresh full-size deployment: placement is the construction walk
+        // again, so rank 0's partner copy lands on node-disjoint rank 2
+        block_on_save(&sim, &s, 0, 2, vec![7; 8]);
+        let counts = s.copies_hosted();
+        assert_eq!(counts[2], 1, "partner back on the home-topology host");
+        assert_eq!(counts[1], 0);
+        assert_eq!(counts[0], 1, "own local copy");
     }
 
     // ---- cost shape ----

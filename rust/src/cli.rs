@@ -8,6 +8,7 @@
 //! reinitpp tiers     [OPTIONS] [key=value ...]   checkpoint tier-stack sweep
 //! reinitpp storm     [OPTIONS] [key=value ...]   MTBF failure-storm sweep
 //! reinitpp crossover [OPTIONS] [key=value ...]   replication-vs-checkpointing crossover
+//! reinitpp shrink    [OPTIONS] [key=value ...]   shrink-vs-substitute-vs-CR sweep
 //! reinitpp tables    [--which 1|2]               print Tables 1/2
 //! reinitpp validate  [OPTIONS] [key=value ...]   global-restart equivalence
 //! reinitpp calibrate [key=value ...]             measure artifact exec times
@@ -51,6 +52,10 @@ pub enum Command {
         opts: SweepOpts,
     },
     Crossover {
+        cfg: ExperimentConfig,
+        opts: SweepOpts,
+    },
+    Shrink {
         cfg: ExperimentConfig,
         opts: SweepOpts,
     },
@@ -109,6 +114,14 @@ USAGE:
                                                  degree 1 and 2) x MTBF x checkpoint interval
                                                  x ranks 16/64/256 at 8 ranks/node, over the
                                                  storm MTBF engine (emits crossover_compare.csv)
+  reinitpp shrink    [OPTIONS] [key=value ...]   shrink-vs-substitute-vs-CR sweep: continue
+                                                 on survivors with zero spares (ReStore-style
+                                                 checkpoint redistribution) vs spare-pool
+                                                 respawn (reinit) vs full re-deploy (cr),
+                                                 process + node failure storms x MTBF x
+                                                 ranks 16/64/256 at 8 ranks/node
+                                                 (emits shrink_compare.csv; min_ranks= sets
+                                                 the shrink floor)
   reinitpp tables    [--which 1|2]               print the paper's tables
   reinitpp validate  [OPTIONS] [key=value ...]   check global-restart equivalence
   reinitpp calibrate [key=value ...]             measure artifact execution costs
@@ -116,10 +129,10 @@ USAGE:
 OPTIONS:
   --config FILE      load a TOML-subset config file
   --max-ranks N      cap the sweep's rank counts (reproduce/scale/tiers/storm/
-                     crossover; scale defaults to 16384)
+                     crossover/shrink; scale defaults to 16384)
   --outdir DIR       CSV output directory (default: results)
   --jobs N           worker threads for trial execution
-                     (run/reproduce/scale/tiers/storm/crossover).
+                     (run/reproduce/scale/tiers/storm/crossover/shrink).
                      Must be >= 1: default all cores, 1 = serial execution on
                      the calling thread. Tables and CSVs are byte-identical
                      for any N.
@@ -140,7 +153,9 @@ EXAMPLES:
   reinitpp tiers --max-ranks 32 --jobs 4 trials=5
   reinitpp storm --max-ranks 256 --jobs 4 trials=5
   reinitpp crossover --max-ranks 64 --jobs 4 trials=3
+  reinitpp shrink --max-ranks 64 --jobs 4 trials=3
   reinitpp run recovery=repl repl_degree=2 ranks=32 ranks_per_node=8 trials=3
+  reinitpp run recovery=shrink min_ranks=4 spare_nodes=0 failures=node@3:r5 trials=3
   reinitpp validate app=comd recovery=ulfm failure=process
 ";
 
@@ -226,6 +241,20 @@ fn reject_repl_degree(cmd: &str, cfg: &ExperimentConfig) -> Result<(), CliError>
     Ok(())
 }
 
+/// `min_ranks` only means anything to the shrinking family: on the figure
+/// and grid sweeps it would either silently do nothing or skew one family
+/// row, so only `shrink` (which owns that family) and `run`/`validate`
+/// accept it.
+fn reject_min_ranks(cmd: &str, cfg: &ExperimentConfig) -> Result<(), CliError> {
+    if cfg.min_ranks != ExperimentConfig::default().min_ranks {
+        return Err(err(format!(
+            "{cmd}: min_ranks is a shrinking-recovery knob; use the `shrink` \
+             sweep or `run recovery=shrink min_ranks=N`"
+        )));
+    }
+    Ok(())
+}
+
 /// Grid axes a sweep subcommand owns (sets per point); user overrides are
 /// rejected with a message naming the sweep rather than silently folded in.
 /// The production analogue of the tests' `assert_rejects_keys` matrix —
@@ -241,6 +270,9 @@ struct GridOwnedAxes {
     failure_axis: &'static str,
     /// What the sweep does on the checkpoint axis.
     ckpt_axis: &'static str,
+    /// `true` when `min_ranks=` stays a free knob — only the `shrink`
+    /// sweep, which runs the shrinking family itself.
+    min_ranks_free: bool,
 }
 
 fn reject_grid_owned_axes(
@@ -250,6 +282,9 @@ fn reject_grid_owned_axes(
 ) -> Result<(), CliError> {
     reject_scenario_keys(cmd, cfg)?;
     reject_repl_degree(cmd, cfg)?;
+    if !axes.min_ranks_free {
+        reject_min_ranks(cmd, cfg)?;
+    }
     let defaults = ExperimentConfig::default();
     if cfg.ranks != defaults.ranks {
         return Err(err(format!(
@@ -329,6 +364,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let (cfg, leftovers) = parse_cfg(rest)?;
             reject_scenario_keys("reproduce", &cfg)?;
             reject_repl_degree("reproduce", &cfg)?;
+            reject_min_ranks("reproduce", &cfg)?;
             let mut figure = None;
             let mut opts = SweepOpts::default();
             parse_sweep_opts("reproduce", &leftovers, &mut opts, |a, it| {
@@ -368,6 +404,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     failure_axis: "injects a single process failure",
                     ckpt_axis: "uses the paper's Table 2 checkpoint policy per \
                                 recovery method",
+                    min_ranks_free: false,
                 },
             )?;
             let mut opts = SweepOpts {
@@ -397,8 +434,17 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     failure_axis: "runs both process and node failures",
                     ckpt_axis: "sets the checkpoint stack per point \
                                 (fs / local+partner1 / local+partner2+fs)",
+                    min_ranks_free: false,
                 },
             )?;
+            // the tier sweep compares stacks under a fixed-size world;
+            // shrinking recovery resizes it per failure and has its own sweep
+            if cfg.recovery == crate::config::RecoveryKind::Shrink {
+                return Err(err(
+                    "tiers: shrinking recovery resizes the world per failure; \
+                     compare it via `reinitpp shrink` instead",
+                ));
+            }
             let mut opts = SweepOpts::default();
             parse_sweep_opts("tiers", &leftovers, &mut opts, |_, _| Ok(false))?;
             Ok(Command::Tiers { cfg, opts })
@@ -429,6 +475,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     failure_axis: "injects process-failure storms",
                     ckpt_axis: "uses the paper's Table 2 checkpoint policy per \
                                 recovery method",
+                    min_ranks_free: false,
                 },
             )?;
             let mut opts = SweepOpts::default();
@@ -462,6 +509,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     failure_axis: "injects process-failure storms",
                     ckpt_axis: "uses the paper's Table 2 checkpoint policy per \
                                 recovery method",
+                    min_ranks_free: false,
                 },
             )?;
             // the checkpoint interval is the sweep's second axis
@@ -473,6 +521,47 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let mut opts = SweepOpts::default();
             parse_sweep_opts("crossover", &leftovers, &mut opts, |_, _| Ok(false))?;
             Ok(Command::Crossover { cfg, opts })
+        }
+        "shrink" => {
+            // Shrink-sweep defaults: the storm base (quick modeled trials
+            // with paper-scale virtual iteration cost) at 8 ranks/node, so
+            // a node failure leaves survivors to continue on at every rung.
+            let mut base = ExperimentConfig {
+                trials: 3,
+                iters: 40,
+                ranks_per_node: crate::config::presets::CROSSOVER_RANKS_PER_NODE,
+                fidelity: crate::config::Fidelity::Modeled,
+                hpccg_nx: 4,
+                comd_n: 32,
+                lulesh_nx: 4,
+                max_failures: crate::config::presets::STORM_MAX_FAILURES,
+                ..ExperimentConfig::default()
+            };
+            base.calib.modeled_compute_scale = crate::config::presets::STORM_COMPUTE_SCALE;
+            let (cfg, leftovers) = parse_cfg_from(base, rest)?;
+            reject_grid_owned_axes(
+                "shrink",
+                &cfg,
+                &GridOwnedAxes {
+                    ranks_grid: "16/64/256",
+                    recovery_owned: true,
+                    failure_axis: "runs both process- and node-failure storms",
+                    ckpt_axis: "uses the paper's Table 2 checkpoint policy per \
+                                recovery method",
+                    min_ranks_free: true,
+                },
+            )?;
+            // spare capacity is the axis under study: set per family row
+            // (0 for shrink, 1 for the substitute and CR arms)
+            if cfg.spare_nodes != ExperimentConfig::default().spare_nodes {
+                return Err(err(
+                    "shrink: the sweep sets spare_nodes per family row (0 for \
+                     shrink, 1 for substitute/CR); drop spare_nodes=",
+                ));
+            }
+            let mut opts = SweepOpts::default();
+            parse_sweep_opts("shrink", &leftovers, &mut opts, |_, _| Ok(false))?;
+            Ok(Command::Shrink { cfg, opts })
         }
         other => Err(err(format!("unknown command `{other}`\n\n{USAGE}"))),
     }
@@ -634,6 +723,13 @@ pub fn execute(cmd: Command) -> i32 {
                 2
             }
         },
+        Command::Shrink { cfg, opts } => match harness::shrink_sweep(&cfg, &opts) {
+            Ok(_) => 0,
+            Err(e) => {
+                eprintln!("{e}");
+                2
+            }
+        },
         Command::Validate { cfg } => {
             if let Err(e) = cfg.validate() {
                 eprintln!("{e}");
@@ -744,24 +840,28 @@ mod tests {
                 &[
                     "ranks=4096",
                     "recovery=cr",
+                    "recovery=shrink",
                     "failure=node",
                     "ckpt=file",
                     "ckpt_tiers=local+partner1",
                     "failures=proc@3:r5",
                     "mtbf_s=2",
                     "repl_degree=2",
+                    "min_ranks=4",
                 ],
             ),
             (
                 "tiers",
                 &[
                     "ranks=128",
+                    "recovery=shrink",
                     "failure=node",
                     "ckpt_tiers=local+partner3",
                     "ckpt=memory",
                     "failures=proc@3:r5",
                     "mtbf_s=2",
                     "repl_degree=2",
+                    "min_ranks=4",
                 ],
             ),
             (
@@ -769,16 +869,34 @@ mod tests {
                 &[
                     "ranks=128",
                     "recovery=cr",
+                    "recovery=shrink",
                     "failure=node",
                     "ckpt=file",
                     "ckpt_tiers=local+partner1",
                     "failures=proc@3:r5",
                     "mtbf_s=2",
                     "repl_degree=2",
+                    "min_ranks=4",
                 ],
             ),
             (
                 "crossover",
+                &[
+                    "ranks=128",
+                    "recovery=cr",
+                    "recovery=shrink",
+                    "failure=node",
+                    "ckpt=file",
+                    "ckpt_tiers=local+partner1",
+                    "failures=proc@3:r5",
+                    "mtbf_s=2",
+                    "repl_degree=2",
+                    "ckpt_every=4",
+                    "min_ranks=4",
+                ],
+            ),
+            (
+                "shrink",
                 &[
                     "ranks=128",
                     "recovery=cr",
@@ -788,7 +906,7 @@ mod tests {
                     "failures=proc@3:r5",
                     "mtbf_s=2",
                     "repl_degree=2",
-                    "ckpt_every=4",
+                    "spare_nodes=2",
                 ],
             ),
         ];
@@ -800,10 +918,14 @@ mod tests {
         assert!(parse(&sv(&["reproduce", "--figure", "4", "mtbf_s=2"])).is_err());
         assert!(parse(&sv(&["reproduce", "--figure", "4", "failures=proc@3:r5"])).is_err());
         assert!(parse(&sv(&["reproduce", "--figure", "4", "repl_degree=2"])).is_err());
+        assert!(parse(&sv(&["reproduce", "--figure", "4", "min_ranks=4"])).is_err());
         // `run` accepts the scenario keys those sweeps reject
         assert!(parse(&sv(&["run", "mtbf_s=2"])).is_ok());
         assert!(parse(&sv(&["run", "failures=proc@3:r5"])).is_ok());
         assert!(parse(&sv(&["run", "recovery=repl", "repl_degree=2"])).is_ok());
+        assert!(parse(&sv(&["run", "recovery=shrink", "min_ranks=4"])).is_ok());
+        // the shrink sweep owns the shrink family: its floor stays a knob
+        assert!(parse(&sv(&["shrink", "min_ranks=4"])).is_ok());
     }
 
     #[test]
@@ -888,7 +1010,7 @@ mod tests {
 
     #[test]
     fn jobs_zero_is_rejected_with_serial_hint() {
-        for cmd in ["run", "tiers", "scale", "storm", "crossover"] {
+        for cmd in ["run", "tiers", "scale", "storm", "crossover", "shrink"] {
             let e = parse(&sv(&[cmd, "--jobs", "0"])).unwrap_err();
             assert!(
                 e.to_string().contains("use 1 for serial"),
@@ -974,6 +1096,42 @@ mod tests {
         assert!(parse(&sv(&["crossover", "--figure", "4"])).is_err(), "unknown arg");
         // trial count / iteration knobs stay overridable
         assert!(parse(&sv(&["crossover", "iters=60", "max_failures=3"])).is_ok());
+    }
+
+    #[test]
+    fn parse_shrink_defaults_and_options() {
+        let cmd = parse(&sv(&[
+            "shrink",
+            "--max-ranks",
+            "64",
+            "--jobs",
+            "2",
+            "trials=4",
+            "min_ranks=4",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Shrink { cfg, opts } => {
+                assert_eq!(cfg.trials, 4);
+                assert_eq!(cfg.min_ranks, 4, "the shrink floor stays overridable");
+                assert_eq!(cfg.fidelity, crate::config::Fidelity::Modeled);
+                assert_eq!(
+                    cfg.ranks_per_node,
+                    crate::config::presets::CROSSOVER_RANKS_PER_NODE,
+                    "shrink base spans >= 2 nodes on every rung"
+                );
+                assert_eq!(
+                    cfg.max_failures,
+                    crate::config::presets::STORM_MAX_FAILURES
+                );
+                assert_eq!(opts.max_ranks, 64);
+                assert_eq!(opts.jobs, 2);
+            }
+            _ => panic!(),
+        }
+        assert!(parse(&sv(&["shrink", "--figure", "4"])).is_err(), "unknown arg");
+        // trial count / iteration knobs stay overridable
+        assert!(parse(&sv(&["shrink", "iters=60", "max_failures=3"])).is_ok());
     }
 
     #[test]

@@ -80,6 +80,17 @@ impl DeployCost {
         self.comm_reinit + SimDuration(self.wireup_per_level.0 * Topology::tree_levels(ranks) as u64 / 4)
     }
 
+    /// Shrink+agree collective over `procs` survivors (ULFM
+    /// `MPI_Comm_shrink` semantics): survivors agree on the dead set and
+    /// rebuild the world in place — a comm re-init over the shrunken
+    /// process count, plus one extra tree sweep for the agreement vote.
+    /// Deliberately cheaper than the substitute path, which also pays
+    /// spawn + ORTE barrier before its `comm_reinit`.
+    pub fn comm_shrink(&self, procs: u32) -> SimDuration {
+        self.comm_reinit(procs)
+            + SimDuration(self.wireup_per_level.0 * Topology::tree_levels(procs) as u64 / 4)
+    }
+
     /// SIGCHLD delivery + daemon-side handling of a dead child.
     pub fn sigchld(&self) -> SimDuration {
         self.sigchld_notify
@@ -141,6 +152,18 @@ mod tests {
         let t = (c.tcp_break() + c.node_spawn(16) + c.orte_barrier(64) + c.comm_reinit(1024))
             .secs_f64();
         assert!((1.0..2.0).contains(&t), "{t} s");
+    }
+
+    #[test]
+    fn shrink_cheaper_than_substitute_recovery() {
+        // shrink skips spawn + ORTE barrier entirely; the whole point of
+        // continuing on survivors is to beat the respawn path
+        let c = cost();
+        let shrink = (c.sigchld() + c.comm_shrink(1023)).secs_f64();
+        let substitute =
+            (c.sigchld() + c.node_spawn(1) + c.orte_barrier(64) + c.comm_reinit(1024)).secs_f64();
+        assert!(shrink < substitute, "{shrink} vs {substitute}");
+        assert!(c.comm_shrink(512) > c.comm_reinit(512), "agreement sweep is not free");
     }
 
     #[test]

@@ -161,6 +161,25 @@ impl Cluster {
         slot.proc
     }
 
+    /// Shrinking recovery: a surviving node *adopts* a dead rank's domain
+    /// block — mechanically a re-spawn (fresh process, bumped incarnation,
+    /// new placement), but the job driver charges no fork+exec for it: the
+    /// block is re-hosted inside an already-running survivor process, not
+    /// launched. Panics if `node` is dead, like `respawn_rank`.
+    pub fn rehost_rank(&self, rank: u32, node: u32) -> ProcId {
+        self.respawn_rank(rank, node)
+    }
+
+    /// Algorithm 1 restricted to *compute* nodes: the least-loaded alive
+    /// node that is not a spare, or `None` if every compute node is dead.
+    /// Shrinking recovery places adopted blocks with this — by definition
+    /// it must never draw on the spare pool.
+    pub fn least_loaded_alive_compute_node(&self) -> Option<u32> {
+        (0..self.topo.compute_nodes)
+            .filter(|&node| self.node_is_alive(node))
+            .min_by_key(|&node| (self.occupied_slots(node), node))
+    }
+
     /// Alive MPI processes currently placed on `node`.
     pub fn occupied_slots(&self, node: u32) -> u32 {
         let inner = self.inner.borrow();
@@ -295,6 +314,30 @@ mod tests {
         assert!(c.rank_is_alive(20));
         assert_eq!(c.rank_slot(20).node, 1);
         assert_eq!(c.occupied_slots(1), 16);
+    }
+
+    #[test]
+    fn compute_node_choice_never_picks_spares() {
+        let (_sim, c) = cluster(32, 16, 2);
+        c.kill_node(0);
+        // substitute path would pick spare node 2; shrink must stay on
+        // the surviving compute node 1 even though it is fuller
+        assert_eq!(c.least_loaded_alive_node(), 2);
+        assert_eq!(c.least_loaded_alive_compute_node(), Some(1));
+        c.kill_node(1);
+        assert_eq!(c.least_loaded_alive_compute_node(), None);
+    }
+
+    #[test]
+    fn rehost_adopts_onto_survivor() {
+        let (sim, c) = cluster(32, 16, 0);
+        c.kill_node(1);
+        for r in 16..32 {
+            let p = c.rehost_rank(r, c.least_loaded_alive_compute_node().unwrap());
+            assert!(sim.is_alive(p));
+        }
+        assert_eq!(c.occupied_slots(0), 32, "survivor carries every block");
+        assert_eq!(c.rank_slot(20).incarnation, 1);
     }
 
     #[test]

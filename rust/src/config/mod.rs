@@ -58,14 +58,22 @@ pub enum RecoveryKind {
     /// shadow replicas; a primary's death promotes a replica (failover,
     /// zero rollback) until the group is exhausted.
     Replication,
+    /// Shrinking recovery (Shrink-or-Substitute / ReStore lineage): no
+    /// respawn at all — survivors adopt the failed processes' domain
+    /// blocks, the world communicator shrinks to the survivor process
+    /// count, and the in-memory checkpoint copies are redistributed
+    /// load-balanced over the live topology. Needs zero spare nodes;
+    /// degrades to a CR-style re-deploy only below `min_ranks`.
+    Shrink,
 }
 
 impl RecoveryKind {
-    pub const ALL: [RecoveryKind; 4] = [
+    pub const ALL: [RecoveryKind; 5] = [
         RecoveryKind::Cr,
         RecoveryKind::Ulfm,
         RecoveryKind::Reinit,
         RecoveryKind::Replication,
+        RecoveryKind::Shrink,
     ];
 
     /// The three families the source paper evaluates — the figure sweeps
@@ -80,6 +88,7 @@ impl RecoveryKind {
             "ulfm" => Some(RecoveryKind::Ulfm),
             "reinit" | "reinit++" | "reinitpp" => Some(RecoveryKind::Reinit),
             "repl" | "replication" => Some(RecoveryKind::Replication),
+            "shrink" => Some(RecoveryKind::Shrink),
             _ => None,
         }
     }
@@ -92,6 +101,7 @@ impl fmt::Display for RecoveryKind {
             RecoveryKind::Ulfm => write!(f, "ULFM"),
             RecoveryKind::Reinit => write!(f, "Reinit++"),
             RecoveryKind::Replication => write!(f, "Replication"),
+            RecoveryKind::Shrink => write!(f, "Shrink"),
         }
     }
 }
@@ -209,6 +219,11 @@ pub struct ExperimentConfig {
     /// degrades to a CR-style redeploy. Only meaningful with
     /// `recovery=repl`.
     pub repl_degree: u32,
+    /// Shrinking recovery floor: the job keeps shrinking onto survivors
+    /// while at least this many backing processes remain; one more loss
+    /// degrades to a CR-style re-deploy (`degraded_redeploy`). Only
+    /// consulted by `recovery=shrink`.
+    pub min_ranks: u32,
     pub failure: FailureKind,
     /// Explicit multi-failure scenario
     /// (`failures=proc@3:r5,node@7:r12,proc@t1.25:r3`); overrides the
@@ -254,6 +269,7 @@ impl Default for ExperimentConfig {
             spare_nodes: 1,
             recovery: RecoveryKind::Reinit,
             repl_degree: 1,
+            min_ranks: 2,
             failure: FailureKind::Process,
             failures: Vec::new(),
             mtbf_s: 0.0,
@@ -383,6 +399,13 @@ impl ExperimentConfig {
                     return Err(cerr("repl_degree must be >= 1 (1 = no replicas)"));
                 }
                 self.repl_degree = v;
+            }
+            "min_ranks" => {
+                let v: u32 = num!();
+                if v == 0 {
+                    return Err(cerr("min_ranks must be >= 1"));
+                }
+                self.min_ranks = v;
             }
             "failure" => {
                 self.failure = FailureKind::parse(value)
@@ -523,10 +546,19 @@ impl ExperimentConfig {
                 _ => {}
             }
         }
-        if has_node && self.spare_nodes == 0 {
+        if has_node && self.spare_nodes == 0 && self.recovery != RecoveryKind::Shrink {
+            // Shrink is exempt: its whole point is surviving node loss with
+            // zero over-provisioning — survivors adopt the dead node's ranks.
             return Err(cerr(
                 "node-failure experiments need spare_nodes >= 1 (over-provisioning, paper §3.2)",
             ));
+        }
+        if self.recovery == RecoveryKind::Shrink && (self.min_ranks == 0 || self.min_ranks > self.ranks)
+        {
+            return Err(cerr(format!(
+                "min_ranks={} must be in 1..=ranks ({})",
+                self.min_ranks, self.ranks
+            )));
         }
         if self.repl_degree > 1 && self.recovery != RecoveryKind::Replication {
             return Err(cerr(format!(
@@ -706,6 +738,27 @@ mod tests {
         assert!(c.validate().is_err());
         c.spare_nodes = 1;
         c.validate().unwrap();
+        // shrink is exempt: it continues on survivors with zero spares
+        c.spare_nodes = 0;
+        c.apply("recovery", "shrink").unwrap();
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn min_ranks_applies_and_validates() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.min_ranks, 2, "default shrink floor");
+        assert!(c.apply("min_ranks", "0").is_err());
+        assert!(c.apply("min_ranks", "x").is_err());
+        c.apply("min_ranks", "4").unwrap();
+        assert_eq!(c.min_ranks, 4);
+        // the floor is only checked against ranks when shrink is active
+        c.min_ranks = 99;
+        c.validate().unwrap();
+        c.apply("recovery", "shrink").unwrap();
+        assert!(c.validate().is_err(), "min_ranks > ranks under shrink");
+        c.apply("min_ranks", "2").unwrap();
+        c.validate().unwrap();
     }
 
     #[test]
@@ -818,8 +871,9 @@ mod tests {
 
     #[test]
     fn recovery_all_includes_replication_and_paper_stays_three() {
-        assert_eq!(RecoveryKind::ALL.len(), 4);
+        assert_eq!(RecoveryKind::ALL.len(), 5);
         assert!(RecoveryKind::ALL.contains(&RecoveryKind::Replication));
+        assert!(RecoveryKind::ALL.contains(&RecoveryKind::Shrink));
         assert_eq!(
             RecoveryKind::PAPER,
             [RecoveryKind::Cr, RecoveryKind::Ulfm, RecoveryKind::Reinit],
@@ -830,6 +884,8 @@ mod tests {
             RecoveryKind::parse("replication"),
             Some(RecoveryKind::Replication)
         );
+        assert_eq!(RecoveryKind::parse("shrink"), Some(RecoveryKind::Shrink));
+        assert_eq!(RecoveryKind::Shrink.to_string(), "Shrink");
     }
 
     #[test]

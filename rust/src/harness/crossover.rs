@@ -9,9 +9,11 @@
 //! shadow promotion — zero rollback. Somewhere between "occasional
 //! failure" and "failure storm" the curves cross. This sweep maps that
 //! crossover empirically over the `storm` MTBF engine: every recovery
-//! family (CR / Reinit++ / ULFM at degree 1, replication at degree 1 and
-//! `presets::STORM_REPL_DEGREE`) against the storm MTBF grid and the
-//! `presets::CROSSOVER_CKPT_EVERY` checkpoint-interval axis.
+//! family (CR / Reinit++ / ULFM / shrink at degree 1, replication at
+//! degree 1 and `presets::STORM_REPL_DEGREE`) against the storm MTBF grid
+//! and the `presets::CROSSOVER_CKPT_EVERY` checkpoint-interval axis.
+//! Shrinking recovery is the third corner of the trade: no spares, no
+//! respawn — each failure shrinks the world and the survivors run hotter.
 //!
 //! Ranks per node defaults to `presets::CROSSOVER_RANKS_PER_NODE` (set by
 //! the CLI base) so the smallest rung already spans two compute nodes and
@@ -32,10 +34,11 @@ use crate::config::{presets, ExperimentConfig, FailureKind, Fidelity, RecoveryKi
 /// replication is a deliberate row — it mirrors nothing and degrades to a
 /// full re-deploy on the first failure, isolating the cost of the
 /// replication *machinery* from the benefit of actual shadows.
-const FAMILIES: [(RecoveryKind, u32); 5] = [
+const FAMILIES: [(RecoveryKind, u32); 6] = [
     (RecoveryKind::Cr, 1),
     (RecoveryKind::Reinit, 1),
     (RecoveryKind::Ulfm, 1),
+    (RecoveryKind::Shrink, 1),
     (RecoveryKind::Replication, 1),
     (RecoveryKind::Replication, presets::STORM_REPL_DEGREE),
 ];
@@ -229,7 +232,7 @@ mod tests {
             jobs: 1,
         };
         let cfgs = build_grid(&quick_base(), &opts).unwrap();
-        // 3 rungs x 5 family rows x 3 MTBFs x 2 ckpt intervals
+        // 3 rungs x 6 family rows x 3 MTBFs x 2 ckpt intervals
         assert_eq!(
             cfgs.len(),
             presets::STORM_SWEEP_RANKS.len()
@@ -244,7 +247,7 @@ mod tests {
         assert!(cfgs
             .iter()
             .all(|c| c.nodes() >= presets::STORM_REPL_DEGREE));
-        // all four recovery families are on the grid
+        // all five recovery families are on the grid
         for rk in RecoveryKind::ALL {
             assert!(cfgs.iter().any(|c| c.recovery == rk), "missing {rk}");
         }
@@ -274,7 +277,7 @@ mod tests {
         let par =
             crossover_sweep(&base, &mk(2, "/tmp/reinitpp-test-results/crossover-j2"))
                 .unwrap();
-        assert_eq!(serial.len(), 30, "16 ranks x 5 families x 3 MTBFs x 2 intervals");
+        assert_eq!(serial.len(), 36, "16 ranks x 6 families x 3 MTBFs x 2 intervals");
         for (a, b) in serial.iter().zip(&par) {
             assert_eq!(a.cfg.recovery, b.cfg.recovery);
             assert_eq!(a.cfg.repl_degree, b.cfg.repl_degree);

@@ -13,6 +13,7 @@ mod crossover;
 mod figures;
 mod pool;
 mod scale;
+mod shrink;
 mod storm;
 mod tables;
 mod tiers;
@@ -21,6 +22,7 @@ pub use crossover::crossover_sweep;
 pub use figures::{fig4, fig5, fig6, fig7, print_points, write_csv, SweepOpts};
 pub use pool::{default_jobs, run_trials, TrialOut, TrialSpec};
 pub use scale::scale_sweep;
+pub use shrink::shrink_sweep;
 pub use storm::storm_sweep;
 pub use tables::{print_table1, print_table2};
 pub use tiers::tier_sweep;
@@ -53,8 +55,15 @@ pub struct Point {
     pub failures: f64,
     /// Mean number of zero-rollback failovers per trial (replication only).
     pub failovers: f64,
-    /// Mean number of degraded (spare-exhausted) re-deploys per trial.
+    /// Mean number of degraded (spare-exhausted or below-`min_ranks`)
+    /// re-deploys per trial.
     pub degraded: f64,
+    /// Mean number of shrink events per trial (shrinking recovery only):
+    /// failures absorbed by continuing on survivors instead of respawning.
+    pub shrinks: f64,
+    /// Mean per-trial checkpoint traffic moved by ReStore-style
+    /// redistribution after a shrink, in MB.
+    pub redistribute_mb: f64,
     /// Mean per-trial compute stall attributable to state mirroring, and
     /// mean mirrored traffic in MB (replication's steady-state overhead).
     pub mirror_s: f64,
@@ -83,6 +92,8 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
     let mut fired = 0u32;
     let mut failovers = 0u64;
     let mut degraded = 0u32;
+    let mut shrinks = 0u64;
+    let mut redistribute_mb = 0.0;
     let mut mirror_s = 0.0;
     let mut mirror_mb = 0.0;
     let mut storage = Vec::with_capacity(outs.len());
@@ -109,6 +120,8 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
             .iter()
             .filter(|s| s.degraded_redeploy)
             .count() as u32;
+        shrinks += o.result.shrinks;
+        redistribute_mb += o.result.redistribute_mb;
         mirror_s += o.result.mirror_s;
         mirror_mb += o.result.mirror_mb;
         storage.push(o.result.storage);
@@ -128,6 +141,8 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
         failures: fired as f64 / n,
         failovers: failovers as f64 / n,
         degraded: degraded as f64 / n,
+        shrinks: shrinks as f64 / n,
+        redistribute_mb: redistribute_mb / n,
         mirror_s: mirror_s / n,
         mirror_mb: mirror_mb / n,
         storage: StorageMeans::from_trials(&storage),

@@ -150,8 +150,8 @@ mod tests {
             jobs: 1,
         };
         let cfgs = build_grid(&quick_base(), &opts).unwrap();
-        // 4 rank counts x 4 methods + 2 rank counts x {CR, Reinit, Repl}
-        assert_eq!(cfgs.len(), 4 * 4 + 2 * 3);
+        // 4 rank counts x 5 methods + 2 rank counts x {CR, Reinit, Repl, Shrink}
+        assert_eq!(cfgs.len(), 4 * 5 + 2 * 4);
         assert!(cfgs.iter().all(|c| c.failure == FailureKind::Process));
         assert!(
             !cfgs
@@ -187,7 +187,7 @@ mod tests {
         let serial =
             scale_sweep(&base, &mk(1, "/tmp/reinitpp-test-results/scale-j1")).unwrap();
         let par = scale_sweep(&base, &mk(2, "/tmp/reinitpp-test-results/scale-j2")).unwrap();
-        assert_eq!(serial.len(), 4, "512 ranks x 4 recovery methods");
+        assert_eq!(serial.len(), 5, "512 ranks x 5 recovery methods");
         for (a, b) in serial.iter().zip(&par) {
             assert_eq!(a.cfg.recovery, b.cfg.recovery);
             assert_eq!(a.total, b.total);

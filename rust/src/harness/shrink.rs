@@ -1,0 +1,329 @@
+//! Shrink-vs-substitute-vs-CR sweep (`reinitpp shrink`): ranks × failure
+//! kind × recovery family × MTBF, over the storm arrival engine.
+//!
+//! Shrink-or-Substitute (arXiv 1810.00705) frames the recovery topology
+//! choice: *substitute* the failed capacity from a spare pool (Reinit++'s
+//! respawn path) or *shrink* the job and keep computing on survivors.
+//! ReStore (arXiv 2203.01107) adds the missing piece for the shrink arm —
+//! rapid recovery hinges on load-balanced redistribution of the surviving
+//! in-memory checkpoint copies. This sweep maps the trade empirically:
+//!
+//! - `shrink` runs with **zero** spare nodes (its whole point: no
+//!   over-provisioning) and absorbs each failure by continuing smaller —
+//!   the survivors run proportionally hotter (`NewWorld::work_scale`);
+//! - `reinit` is the substitute arm: spare-pool respawn, in-place
+//!   survivors — until the pool runs dry and it degrades to a re-deploy;
+//! - `cr` is the paper's baseline: every event pays a full re-deploy.
+//!
+//! Both failure kinds run: process-failure storms exercise the in-memory
+//! redistribution path (Table 2 gives shrink `local+partner1` there, so
+//! `redistribute_mb` is live), node-failure storms exercise the
+//! spare-pool-vs-survivors capacity question (Table 2 pins `fs`, so
+//! redistribution moves nothing — the column pins that too).
+//!
+//! Like every harness sweep, the grid is flattened to (point, trial) work
+//! items for the pool and merged deterministically, so
+//! `shrink_compare.csv` is byte-identical for any `--jobs` value (pinned
+//! by the unit test below and a serial-vs-2-worker `cmp` in CI).
+
+use super::figures::{cell, SweepOpts};
+use super::{run_points, Point};
+use crate::config::{presets, ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
+
+/// The family rows of the grid: (recovery, spare nodes). Shrink gets zero
+/// spares by construction; the substitute and CR arms get the paper's one
+/// spare node, which a storm can exhaust — the `degraded` column is where
+/// that shows up.
+const FAMILIES: [(RecoveryKind, u32); 3] = [
+    (RecoveryKind::Shrink, 0),
+    (RecoveryKind::Reinit, 1),
+    (RecoveryKind::Cr, 1),
+];
+
+/// Rank counts the shrink sweep visits (the storm rungs, capped by
+/// `--max-ranks`).
+fn sweep_ranks(max: u32) -> Vec<u32> {
+    presets::STORM_SWEEP_RANKS
+        .iter()
+        .copied()
+        .filter(|&r| r <= max)
+        .collect()
+}
+
+/// Build the sweep grid: ranks × failure kind × family × MTBF, modeled
+/// fidelity (storm trials re-execute many iterations).
+fn build_grid(
+    base: &ExperimentConfig,
+    opts: &SweepOpts,
+) -> Result<Vec<ExperimentConfig>, String> {
+    if base.fidelity != Fidelity::Modeled {
+        return Err(
+            "shrink: the sweep runs fidelity=modeled (storm trials re-execute \
+             many iterations); drop fidelity="
+                .to_string(),
+        );
+    }
+    let mut cfgs = Vec::new();
+    for &ranks in &sweep_ranks(opts.max_ranks) {
+        for failure in [FailureKind::Process, FailureKind::Node] {
+            for &(rk, spares) in &FAMILIES {
+                for &mtbf in &presets::STORM_SWEEP_MTBF_S {
+                    let mut c = base.clone();
+                    c.ranks = ranks;
+                    c.recovery = rk;
+                    c.failure = failure;
+                    c.mtbf_s = mtbf;
+                    c.spare_nodes = spares;
+                    c.ckpt = None; // Table 2 policy per method
+                    c.validate().map_err(|e| {
+                        format!(
+                            "shrink sweep point ranks={ranks} recovery={rk} \
+                             failure={failure} mtbf={mtbf}: {e}"
+                        )
+                    })?;
+                    cfgs.push(c);
+                }
+            }
+        }
+    }
+    if cfgs.is_empty() {
+        return Err(format!(
+            "shrink sweep: no rank count of {:?} fits --max-ranks {}",
+            presets::STORM_SWEEP_RANKS,
+            opts.max_ranks
+        ));
+    }
+    Ok(cfgs)
+}
+
+/// Run the shrink-vs-substitute-vs-CR sweep: markdown table on stdout, CSV
+/// under `outdir/shrink_compare.csv`.
+pub fn shrink_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Point>, String> {
+    let cfgs = build_grid(base, opts)?;
+    let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
+    eprintln!(
+        "  shrink sweep: {} points / {trials} trials (MTBF {:?} s, min_ranks {}) on {} worker(s)...",
+        cfgs.len(),
+        presets::STORM_SWEEP_MTBF_S,
+        base.min_ranks,
+        opts.jobs
+    );
+    let (points, stats) = run_points(&cfgs, opts.jobs);
+    eprintln!(
+        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
+        stats.wall_s,
+        stats.trials_per_sec(),
+        stats.utilization() * 100.0
+    );
+
+    println!(
+        "\n## Shrink vs substitute vs CR ({}): continue on survivors\n",
+        base.app
+    );
+    println!(
+        "| ranks | recovery | spares | failure | mtbf (s) | failures | shrinks | \
+         redist (MB) | total (s) | recovery (s) | rollback (s) | degraded |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|---|---|---|");
+    for p in &points {
+        println!(
+            "| {} | {} | {} | {} | {} | {:.1} | {:.1} | {:.3} | {} | {} | {} | {:.1} |",
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.spare_nodes,
+            p.cfg.failure,
+            p.cfg.mtbf_s,
+            p.failures,
+            p.shrinks,
+            p.redistribute_mb,
+            cell(&p.total),
+            cell(&p.event_recovery),
+            cell(&p.rollback),
+            p.degraded,
+        );
+    }
+    println!("\n(expected shape: shrink absorbs each failure with zero spares — the");
+    println!(" survivors run hotter instead of waiting on a fork+exec or re-deploy;");
+    println!(" substitute matches it until the spare pool runs dry, CR pays a full");
+    println!(" re-deploy per event — see EXPERIMENTS.md §Shrinking recovery)");
+
+    if let Err(e) = write_shrink_csv(&opts.outdir, &points) {
+        eprintln!("WARN: could not write shrink_compare.csv: {e}");
+    }
+    Ok(points)
+}
+
+/// `shrink_compare.csv`: one row per (ranks, failure, family, mtbf) point,
+/// with the shrink bookkeeping columns next to the per-event decomposition.
+fn write_shrink_csv(outdir: &str, points: &[Point]) -> std::io::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    let mut s = String::from(
+        "app,ranks,recovery,failure,spare_nodes,min_ranks,mtbf_s,max_failures,\
+         failures,shrinks,redistribute_mb,degraded,\
+         total_s,total_ci,detect_s,detect_ci,recovery_s,recovery_ci,\
+         rollback_s,rollback_ci,ckpt_write_s,ckpt_read_s,app_s,trials\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            p.cfg.app,
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.failure,
+            p.cfg.spare_nodes,
+            p.cfg.min_ranks,
+            p.cfg.mtbf_s,
+            p.cfg.max_failures,
+            p.failures,
+            p.shrinks,
+            p.redistribute_mb,
+            p.degraded,
+            p.total.mean,
+            p.total.ci95,
+            p.detect.mean,
+            p.detect.ci95,
+            p.event_recovery.mean,
+            p.event_recovery.ci95,
+            p.rollback.mean,
+            p.rollback.ci95,
+            p.ckpt_write.mean,
+            p.ckpt_read.mean,
+            p.app.mean,
+            p.total.n,
+        ));
+    }
+    std::fs::write(format!("{outdir}/shrink_compare.csv"), s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AppKind;
+
+    fn quick_base() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.app = AppKind::Hpccg;
+        c.trials = 2;
+        c.iters = 20;
+        c.ranks_per_node = presets::CROSSOVER_RANKS_PER_NODE;
+        c.fidelity = Fidelity::Modeled;
+        c.hpccg_nx = 4;
+        c.max_failures = presets::STORM_MAX_FAILURES;
+        // paper-scale virtual iteration cost, same anchor as the storm sweep
+        c.calib.modeled_compute_scale = presets::STORM_COMPUTE_SCALE;
+        c
+    }
+
+    #[test]
+    fn grid_shape() {
+        let opts = SweepOpts {
+            max_ranks: 256,
+            outdir: "/tmp/reinitpp-test-results".into(),
+            jobs: 1,
+        };
+        let cfgs = build_grid(&quick_base(), &opts).unwrap();
+        // 3 rungs x 2 failure kinds x 3 families x 3 MTBFs
+        assert_eq!(
+            cfgs.len(),
+            presets::STORM_SWEEP_RANKS.len() * 2 * FAMILIES.len()
+                * presets::STORM_SWEEP_MTBF_S.len()
+        );
+        assert!(cfgs.iter().all(|c| c.mtbf_s > 0.0));
+        // the shrink arm runs with zero spares, the others with the paper's one
+        assert!(cfgs
+            .iter()
+            .all(|c| (c.recovery == RecoveryKind::Shrink) == (c.spare_nodes == 0)));
+        // both failure kinds are on the grid for every family
+        for &(rk, _) in &FAMILIES {
+            for failure in [FailureKind::Process, FailureKind::Node] {
+                assert!(
+                    cfgs.iter()
+                        .any(|c| c.recovery == rk && c.failure == failure),
+                    "missing {rk}/{failure}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn non_modeled_fidelity_is_rejected() {
+        let mut base = quick_base();
+        base.fidelity = Fidelity::Auto;
+        let err = build_grid(&base, &SweepOpts::default()).unwrap_err();
+        assert!(err.contains("modeled"), "{err}");
+    }
+
+    #[test]
+    fn shrink_sweep_runs_and_is_jobs_deterministic() {
+        // The smallest rung, serial vs 2 workers: identical Points and
+        // therefore identical shrink_compare.csv bytes.
+        let base = quick_base();
+        let mk = |jobs, outdir: &str| SweepOpts {
+            max_ranks: 16,
+            outdir: outdir.into(),
+            jobs,
+        };
+        let serial =
+            shrink_sweep(&base, &mk(1, "/tmp/reinitpp-test-results/shrink-j1")).unwrap();
+        let par =
+            shrink_sweep(&base, &mk(2, "/tmp/reinitpp-test-results/shrink-j2")).unwrap();
+        assert_eq!(
+            serial.len(),
+            18,
+            "16 ranks x 2 failure kinds x 3 families x 3 MTBFs"
+        );
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.cfg.recovery, b.cfg.recovery);
+            assert_eq!(a.cfg.failure, b.cfg.failure);
+            assert_eq!(a.total, b.total);
+            assert_eq!(a.event_recovery, b.event_recovery);
+            assert_eq!(a.failures, b.failures);
+            assert_eq!(a.shrinks, b.shrinks);
+            assert_eq!(a.redistribute_mb, b.redistribute_mb);
+        }
+        let j1 = std::fs::read("/tmp/reinitpp-test-results/shrink-j1/shrink_compare.csv")
+            .unwrap();
+        let j2 = std::fs::read("/tmp/reinitpp-test-results/shrink-j2/shrink_compare.csv")
+            .unwrap();
+        assert!(!j1.is_empty());
+        assert_eq!(j1, j2, "shrink CSV bytes must not depend on worker count");
+
+        // bookkeeping: only the shrink family shrinks or redistributes
+        for p in &serial {
+            if p.cfg.recovery != RecoveryKind::Shrink {
+                assert_eq!(p.shrinks, 0.0, "{} must not shrink", p.cfg.recovery);
+                assert_eq!(p.redistribute_mb, 0.0);
+            }
+        }
+        // the tight end of the MTBF grid actually fires shrinks
+        assert!(
+            serial
+                .iter()
+                .any(|p| p.cfg.recovery == RecoveryKind::Shrink && p.shrinks > 0.0),
+            "no shrink point absorbed a failure"
+        );
+        for p in &serial {
+            if p.cfg.recovery != RecoveryKind::Shrink || p.shrinks == 0.0 {
+                continue;
+            }
+            match p.cfg.failure {
+                // process-failure shrink runs the Table 2 memory stack: the
+                // victim's lost local copy is always reinstated, so ReStore
+                // redistribution moves bytes every time
+                FailureKind::Process => {
+                    assert!(
+                        p.redistribute_mb > 0.0,
+                        "process-failure shrink must redistribute"
+                    );
+                    // 16 ranks, <= STORM_MAX_FAILURES victims: never below
+                    // min_ranks, so the spares=0 run never degrades
+                    assert_eq!(p.degraded, 0.0, "shrink must not degrade above min_ranks");
+                }
+                // node-failure shrink runs the fs stack: FS-tier placements
+                // never move, pinning the Table 2 policy in the CSV
+                FailureKind::Node => assert_eq!(p.redistribute_mb, 0.0),
+                FailureKind::None => unreachable!(),
+            }
+        }
+    }
+}

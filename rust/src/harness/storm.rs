@@ -215,8 +215,8 @@ mod tests {
         let cfgs = build_grid(&quick_base(), &opts).unwrap();
         // 16 ranks = 1 node at the paper's 16 ranks/node: replication has
         // no node-disjoint shadow target and is skipped on that rung, so
-        // 3 recoveries x 3 MTBFs + 2 rungs x 4 recoveries x 3 MTBFs.
-        assert_eq!(cfgs.len(), 9 + 2 * 4 * 3);
+        // 4 recoveries x 3 MTBFs + 2 rungs x 5 recoveries x 3 MTBFs.
+        assert_eq!(cfgs.len(), 12 + 2 * 5 * 3);
         assert!(cfgs
             .iter()
             .all(|c| c.failure == FailureKind::Process && c.mtbf_s > 0.0));
@@ -252,8 +252,8 @@ mod tests {
         let par = storm_sweep(&base, &mk(2, "/tmp/reinitpp-test-results/storm-j2")).unwrap();
         assert_eq!(
             serial.len(),
-            9,
-            "16 ranks x 3 recoveries x 3 MTBFs (replication needs >= 2 nodes)"
+            12,
+            "16 ranks x 4 recoveries x 3 MTBFs (replication needs >= 2 nodes)"
         );
         for (a, b) in serial.iter().zip(&par) {
             assert_eq!(a.cfg.recovery, b.cfg.recovery);

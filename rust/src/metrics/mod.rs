@@ -66,6 +66,14 @@ pub struct FailureSegment {
     /// (Reinit++/ULFM node failures) or the replica group (replication) —
     /// and degraded to a CR-style full abort + re-deploy.
     pub degraded_redeploy: bool,
+    /// This event was recovered by a shrinking recovery: survivors adopted
+    /// the victims' blocks, no process was respawned.
+    pub shrunk: bool,
+    /// This timeline event fired into dead air — its victim no longer
+    /// existed in the live world (already dead, between deployments, or the
+    /// job had completed). Explicitly recorded instead of silently skipped;
+    /// all phase durations are zero and aggregations must exclude it.
+    pub noop: bool,
 }
 
 impl Breakdown {
@@ -182,6 +190,8 @@ struct SegRaw {
     failover: bool,
     interrupted: bool,
     degraded: bool,
+    shrunk: bool,
+    noop: bool,
 }
 
 struct Inner {
@@ -240,7 +250,7 @@ impl TrialMetrics {
         if inner.fail_at.is_none() {
             inner.fail_at = Some(t);
         }
-        if let Some(last) = inner.segs.last_mut() {
+        if let Some(last) = inner.segs.iter_mut().rev().find(|s| !s.noop) {
             if last.resume_at.is_none() {
                 last.interrupted = true;
             }
@@ -257,6 +267,33 @@ impl TrialMetrics {
             failover: false,
             interrupted: false,
             degraded: false,
+            shrunk: false,
+            noop: false,
+        });
+    }
+
+    /// A timeline event fired into dead air: its victim rank no longer
+    /// exists in the live world (already dead, between deployments, or the
+    /// job completed). Recorded as an explicit zero-cost segment in kill
+    /// order — the storm/shrink analyses must see *every* planned event,
+    /// not silently lose the ones a shrunken world could no longer host.
+    pub fn record_noop_event(&self, t: SimTime, kind: FailureKind, victim: u32) {
+        let mut inner = self.inner.borrow_mut();
+        let lost_iter = inner.iter_high;
+        inner.segs.push(SegRaw {
+            kind,
+            victim,
+            fail_at: t,
+            detect_at: None,
+            // closed at birth: a no-op neither interrupts nor recovers
+            resume_at: Some(t),
+            lost_iter,
+            rollback_end: Some(t),
+            failover: false,
+            interrupted: false,
+            degraded: false,
+            shrunk: false,
+            noop: true,
         });
     }
 
@@ -271,7 +308,7 @@ impl TrialMetrics {
         if let Some(seg) = inner
             .segs
             .iter_mut()
-            .find(|s| s.detect_at.is_none() && s.kind == kind)
+            .find(|s| s.detect_at.is_none() && s.kind == kind && !s.noop)
         {
             seg.detect_at = Some(t);
         }
@@ -290,9 +327,26 @@ impl TrialMetrics {
             .segs
             .iter_mut()
             .rev()
-            .find(|s| s.kind == kind && !s.degraded)
+            .find(|s| s.kind == kind && !s.degraded && !s.noop)
         {
             seg.degraded = true;
+        }
+    }
+
+    /// The newest in-flight recovery is a *shrinking* recovery: survivors
+    /// adopt the victims' blocks instead of anyone being respawned. The
+    /// detect→resume window stays booked as `recovery_s` (it is a real
+    /// rollback-based recovery, unlike failover); the flag lets sweeps
+    /// separate shrink events from substitute-respawn ones.
+    pub fn record_shrink(&self) {
+        let mut inner = self.inner.borrow_mut();
+        if let Some(seg) = inner
+            .segs
+            .iter_mut()
+            .rev()
+            .find(|s| s.resume_at.is_none() && !s.shrunk && !s.noop)
+        {
+            seg.shrunk = true;
         }
     }
 
@@ -306,7 +360,7 @@ impl TrialMetrics {
             .segs
             .iter_mut()
             .rev()
-            .find(|s| s.resume_at.is_none() && !s.failover)
+            .find(|s| s.resume_at.is_none() && !s.failover && !s.noop)
         {
             seg.failover = true;
         }
@@ -320,7 +374,7 @@ impl TrialMetrics {
             None => t,
             Some(prev) => prev.max(t),
         });
-        if let Some(last) = inner.segs.last_mut() {
+        if let Some(last) = inner.segs.iter_mut().rev().find(|s| !s.noop) {
             last.resume_at = Some(match last.resume_at {
                 None => t,
                 Some(prev) => prev.max(t),
@@ -388,14 +442,17 @@ impl TrialMetrics {
                     failover: s.failover,
                     interrupted: s.interrupted,
                     degraded_redeploy: s.degraded,
+                    shrunk: s.shrunk,
+                    noop: s.noop,
                 }
             })
             .collect()
     }
 
-    /// Number of recorded failure events (fired kills).
+    /// Number of recorded failure events (fired kills; no-op timeline
+    /// events that hit dead air are excluded).
     pub fn failure_count(&self) -> usize {
-        self.inner.borrow().segs.len()
+        self.inner.borrow().segs.iter().filter(|s| !s.noop).count()
     }
 
     pub fn add_ckpt_write(&self, rank: u32, d: SimDuration) {
@@ -645,6 +702,54 @@ mod tests {
         let segs = m.segments();
         assert!(segs[0].degraded_redeploy);
         assert!(!segs[1].degraded_redeploy);
+    }
+
+    #[test]
+    fn noop_event_is_explicit_and_inert() {
+        const S: u64 = 1_000_000_000;
+        let m = TrialMetrics::new(2);
+        m.record_failure(SimTime(S), FailureKind::Process, 0);
+        m.record_detect(SimTime(1_010_000_000), FailureKind::Process);
+        // a time-anchored kill fires into dead air mid-recovery: its victim
+        // is already gone. It must appear in the segment list without
+        // interrupting the open recovery or absorbing its detect/resume.
+        m.record_noop_event(SimTime(1_100_000_000), FailureKind::Process, 1);
+        m.record_resume(SimTime(2 * S));
+        let segs = m.segments();
+        assert_eq!(segs.len(), 2, "the no-op is visible, not silently lost");
+        assert_eq!(m.failure_count(), 1, "but it is not a fired kill");
+        assert!(!segs[0].interrupted, "no-ops never interrupt a recovery");
+        assert!(
+            (segs[0].recovery_s - 0.99).abs() < 1e-9,
+            "resume lands on the real segment: {segs:?}"
+        );
+        let n = &segs[1];
+        assert!(n.noop && !n.interrupted && !n.degraded_redeploy);
+        assert_eq!((n.kind, n.victim), (FailureKind::Process, 1));
+        assert_eq!((n.detect_s, n.recovery_s, n.rollback_s), (0.0, 0.0, 0.0));
+        assert!((n.fail_s - 1.1).abs() < 1e-9, "fires at its planned instant");
+    }
+
+    #[test]
+    fn shrink_marks_open_segment_and_keeps_recovery_booking() {
+        const S: u64 = 1_000_000_000;
+        let m = TrialMetrics::new(2);
+        m.record_failure(SimTime(S), FailureKind::Node, 0);
+        m.record_detect(SimTime(1_400_000_000), FailureKind::Node);
+        m.record_shrink();
+        m.record_resume(SimTime(2 * S));
+        // second event exhausts min_ranks: degraded, not shrunk
+        m.record_failure(SimTime(3 * S), FailureKind::Node, 1);
+        m.record_detect(SimTime(3_400_000_000), FailureKind::Node);
+        m.record_degrade(FailureKind::Node);
+        m.record_resume(SimTime(5 * S));
+        let segs = m.segments();
+        assert!(segs[0].shrunk && !segs[0].degraded_redeploy);
+        assert!(
+            (segs[0].recovery_s - 0.6).abs() < 1e-9,
+            "shrink cost stays booked as recovery_s: {segs:?}"
+        );
+        assert!(!segs[1].shrunk && segs[1].degraded_redeploy);
     }
 
     #[test]

@@ -105,6 +105,10 @@ pub struct Comm {
     pub rank: Rank,
     pub size: u32,
     pub node: u32,
+    /// Backing-process count of this communicator's world, snapshotted at
+    /// attach time (the shrink path bumps the generation and re-attaches,
+    /// so a generation's proc count never changes under a live handle).
+    world_procs: u32,
     generation: u64,
     rx: Receiver<Msg>,
     unmatched: RefCell<MatchBuf>,
@@ -137,6 +141,7 @@ impl Comm {
             rank,
             size: 0,
             node,
+            world_procs: 0,
             generation,
             rx,
             unmatched: RefCell::new(MatchBuf::default()),
@@ -152,11 +157,20 @@ impl Comm {
 
     fn finish_init(mut self) -> Comm {
         self.size = self.job.size();
+        self.world_procs = self.job.world_procs();
         self
     }
 
     pub fn generation(&self) -> u64 {
         self.generation
+    }
+
+    /// Backing-process count of this world generation. Equal to `size`
+    /// until a shrink; after one, the `size` logical ranks are carried by
+    /// `world_procs < size` surviving processes (the shrink path next to
+    /// the Reinit re-attach — see `MpiJob::shrink_world`).
+    pub fn world_procs(&self) -> u32 {
+        self.world_procs
     }
 
     /// Ranks this communicator knows to have failed (ULFM notification).
@@ -714,6 +728,19 @@ mod tests {
         let s = sim.run();
         assert!(pending.get());
         assert_eq!(s.tasks_pending, 1, "old-generation msg must not match");
+    }
+
+    #[test]
+    fn comm_snapshots_world_procs_at_attach() {
+        let sim = Sim::new();
+        let j = job(&sim, 8, FtMode::Reinit);
+        let pre = j.attach(0, 0);
+        assert_eq!(pre.world_procs(), 8);
+        j.shrink_world(5);
+        let post = j.attach(0, 0);
+        assert_eq!(post.world_procs(), 5);
+        assert_eq!(post.size, 8, "logical rank space unchanged");
+        assert_eq!(pre.world_procs(), 8, "old handle keeps its snapshot");
     }
 
     #[test]

@@ -106,6 +106,12 @@ pub(crate) struct JobInner {
     pub topo: Topology,
     pub mode: FtMode,
     pub generation: Cell<u64>,
+    /// Backing-process count of the *current* world. Starts at
+    /// `topo.ranks`; shrinking recovery lowers it when survivors adopt a
+    /// dead process's domain blocks instead of respawning. The logical
+    /// rank space (and hence the fabric keying) never shrinks — only the
+    /// number of OS processes carrying it.
+    pub world_procs: Cell<u32>,
     /// ULFM fault-free overhead fraction per collective tree level (Fig. 5).
     pub ulfm_frac_per_level: f64,
     /// Quiet period for failure-detector convergence (one heartbeat).
@@ -127,6 +133,7 @@ impl MpiJob {
                 topo,
                 mode,
                 generation: Cell::new(0),
+                world_procs: Cell::new(topo.ranks),
                 ulfm_frac_per_level: calib.ulfm_overhead_frac_per_level,
                 ulfm_stabilize: crate::sim::SimDuration::from_secs_f64(
                     calib.ulfm_hb_period_ms * 1e-3,
@@ -145,6 +152,26 @@ impl MpiJob {
 
     pub fn generation(&self) -> u64 {
         self.inner.generation.get()
+    }
+
+    /// Backing-process count of the current world (`== size()` until a
+    /// shrink; see [`MpiJob::shrink_world`]).
+    pub fn world_procs(&self) -> u32 {
+        self.inner.world_procs.get()
+    }
+
+    /// Shrink the world to `procs` backing processes (ULFM
+    /// `MPI_Comm_shrink` + agree over survivors). Bumps the communicator
+    /// generation — exactly like a Reinit roll-back, stale traffic from
+    /// the pre-shrink world can never match the repaired communicator.
+    pub fn shrink_world(&self, procs: u32) -> u64 {
+        assert!(
+            procs >= 1 && procs <= self.inner.world_procs.get(),
+            "shrink_world({procs}) from {}",
+            self.inner.world_procs.get()
+        );
+        self.inner.world_procs.set(procs);
+        self.bump_generation()
     }
 
     /// Start a new communicator generation (Reinit++ roll-back / ULFM
@@ -286,6 +313,28 @@ mod tests {
         assert_eq!(ReduceOp::Sum.apply(1.0, 2.0), 3.0);
         assert_eq!(ReduceOp::Min.apply(1.0, 2.0), 1.0);
         assert_eq!(ReduceOp::Max.apply(1.0, 2.0), 2.0);
+    }
+
+    #[test]
+    fn shrink_world_lowers_procs_and_bumps_generation() {
+        let sim = Sim::new();
+        let topo = Topology::new(8, 4, 1);
+        let job = MpiJob::new(&sim, topo, FtMode::Reinit, &Calibration::default());
+        assert_eq!(job.world_procs(), 8);
+        let g0 = job.generation();
+        job.shrink_world(6);
+        assert_eq!(job.world_procs(), 6);
+        assert_eq!(job.generation(), g0 + 1, "shrink invalidates stale traffic");
+        assert_eq!(job.size(), 8, "logical rank space never shrinks");
+    }
+
+    #[test]
+    #[should_panic(expected = "shrink_world")]
+    fn shrink_world_rejects_growth() {
+        let sim = Sim::new();
+        let topo = Topology::new(4, 4, 0);
+        let job = MpiJob::new(&sim, topo, FtMode::Reinit, &Calibration::default());
+        job.shrink_world(5);
     }
 
     #[test]

@@ -1,9 +1,9 @@
 //! Job runner: deployment, the per-rank driver loop, detection wiring and
-//! the protocol-agnostic trial orchestration shared by all four recovery
+//! the protocol-agnostic trial orchestration shared by all five recovery
 //! approaches.
 //!
 //! The heart of this module is [`trial_driver`]: one deployment loop that
-//! hosts any [`RecoveryDriver`] (CR, Reinit++, ULFM, replication) and survives an
+//! hosts any [`RecoveryDriver`] (CR, Reinit++, ULFM, replication, shrink) and survives an
 //! arbitrary failure *timeline* — N successive process/node failures,
 //! failures landing inside a recovery or checkpoint window (virtual-time
 //! anchored kills), and node failures beyond the spare pool, which degrade
@@ -59,6 +59,10 @@ pub struct TrialResult {
     pub mirror_s: f64,
     /// Total state bytes mirrored to shadows, MB.
     pub mirror_mb: f64,
+    /// Shrinking recoveries performed (shrink only; else 0).
+    pub shrinks: u64,
+    /// Checkpoint payload moved by shrink-time redistribution, MB.
+    pub redistribute_mb: f64,
 }
 
 /// Per-worker-thread XLA runtime cache. `Rc<XlaRuntime>` cannot cross
@@ -197,6 +201,8 @@ pub struct TrialWorld {
     /// Replica-group bookkeeping (standby queues, mirror window, failover
     /// counters). `Some` only under `recovery=repl`.
     pub repl: Option<super::repl::ReplState>,
+    /// Shrinking recoveries performed this trial (shrink driver only).
+    pub shrinks: Cell<u64>,
 }
 
 impl TrialWorld {
@@ -222,6 +228,7 @@ impl TrialWorld {
             cur_cluster: RefCell::new(None),
             repl: (cfg.recovery == RecoveryKind::Replication)
                 .then(|| super::repl::ReplState::new(cfg)),
+            shrinks: Cell::new(0),
         })
     }
 
@@ -235,6 +242,10 @@ impl TrialWorld {
             RecoveryKind::Ulfm => FtMode::Ulfm,
             RecoveryKind::Reinit => FtMode::Reinit,
             RecoveryKind::Replication => FtMode::Repl,
+            // Shrink shares Reinit++'s rank-side semantics: no ULFM error
+            // notification, no per-call FT inflation — the root cancels and
+            // re-enters survivors in place.
+            RecoveryKind::Shrink => FtMode::Reinit,
         }
     }
 }
@@ -315,6 +326,7 @@ pub fn driver_for(kind: RecoveryKind) -> Rc<dyn RecoveryDriver> {
         RecoveryKind::Reinit => Rc::new(super::reinit::ReinitDriver),
         RecoveryKind::Ulfm => Rc::new(super::ulfm::UlfmDriver),
         RecoveryKind::Replication => Rc::new(super::repl::ReplDriver),
+        RecoveryKind::Shrink => Rc::new(super::shrink::ShrinkDriver),
     }
 }
 
@@ -399,6 +411,17 @@ pub async fn rank_user_main(
 
     let backend = w.backends.for_rank(rank);
     let mut app_state = w.app.new_state(rank, w.cfg.ranks);
+
+    // Shrunken world: fewer processes carry the same logical decomposition.
+    // Re-partition the app's cost model (live grid + working-set scale)
+    // before restoring — state payloads and digests are unaffected.
+    let procs = comm.world_procs();
+    if procs < w.cfg.ranks {
+        app_state.repartition(crate::apps::NewWorld {
+            logical: w.cfg.ranks,
+            procs,
+        });
+    }
 
     // Application recovery (paper §3.1): agree on the newest state every
     // rank can restore — its checkpoints, or under replication the mirror
@@ -552,16 +575,24 @@ fn arm_time_faults(w: &Rc<TrialWorld>) {
 fn fire_time_fault(w: &Rc<TrialWorld>, idx: usize) {
     let ev = w.faults.event(idx);
     if w.completed.count() == w.cfg.ranks {
-        w.faults.mark_noop(idx); // job already released the allocation
+        // job already released the allocation: explicit, logged no-op
+        w.faults.mark_noop(idx);
+        w.metrics.record_noop_event(w.sim.now(), ev.kind, ev.rank);
         return;
     }
     let cluster = w.cur_cluster.borrow().clone();
     let Some(cluster) = cluster else {
         w.faults.mark_noop(idx);
+        w.metrics.record_noop_event(w.sim.now(), ev.kind, ev.rank);
         return;
     };
     if !cluster.rank_is_alive(ev.rank) {
-        w.faults.mark_noop(idx); // between deployments, or victim already down
+        // Between deployments, or the victim is already down — after a
+        // shrink the planned victim may simply no longer exist in the live
+        // world. Either way the event lands on the metric record as an
+        // explicit zero-cost segment instead of vanishing.
+        w.faults.mark_noop(idx);
+        w.metrics.record_noop_event(w.sim.now(), ev.kind, ev.rank);
         return;
     }
     w.faults.mark_fired(idx);
@@ -686,6 +717,8 @@ pub fn run_trial(
         segments,
         sim_events: summary.events,
         diag_trace,
+        shrinks: world.shrinks.get(),
+        redistribute_mb: storage.redistributed_bytes as f64 / 1e6,
         storage,
         failovers,
         mirror_s,

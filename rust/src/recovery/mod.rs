@@ -1,6 +1,6 @@
 //! The paper's three global-restart recovery approaches (§2, §3), a fourth
-//! replication-based family, and the job runner that hosts them on the
-//! simulated cluster.
+//! replication-based family, a fifth shrinking family, and the job runner
+//! that hosts them on the simulated cluster.
 //!
 //! - `job`    — deployment, rank driver (the paper's Fig. 2 pattern:
 //!              MPI_Reinit-style rollback point, checkpoint every iteration,
@@ -21,11 +21,17 @@
 //!              primary's state; a primary failure promotes the shadow
 //!              (failover, zero rollback); an exhausted replica group
 //!              degrades to a CR-style abort + re-deploy.
+//! - `shrink` — Shrinking recovery: no respawn at all — survivors adopt
+//!              the victims' domain blocks, rebuild a smaller world in
+//!              place, and ReStore-style redistribution rebalances the
+//!              surviving checkpoint copies; below `min_ranks` the job
+//!              degrades to a CR-style abort + re-deploy.
 
 pub mod cr;
 pub mod job;
 pub mod reinit;
 pub mod repl;
+pub mod shrink;
 pub mod ulfm;
 
 #[cfg(test)]

@@ -1,0 +1,171 @@
+//! Shrinking recovery: the fifth family — continue on survivors, no
+//! respawn, no spare nodes (ULFM `MPI_Comm_shrink` lineage, with
+//! ReStore-style checkpoint redistribution, arXiv 2203.01107).
+//!
+//! On a process or node failure the root does **not** spawn replacements:
+//! the survivors agree on the dead set and rebuild a smaller world in
+//! place. The dead processes' domain *blocks* are adopted by surviving
+//! compute nodes (the logical decomposition — ReStore's invariant block
+//! count — never changes, so halo partners, reductions and digests are
+//! identical to a fault-free run; the survivors just run proportionally
+//! hotter, see [`crate::apps::NewWorld::work_scale`]). Before anyone
+//! reloads, the root redistributes the surviving in-memory checkpoint
+//! copies over the live topology ([`crate::ckptstore::CkptStore::
+//! redistribute`]): cheapest-surviving-tier sources, transport-charged
+//! moves, and a balanced destination walk that keeps hosted-copy counts
+//! within one of each other.
+//!
+//! **Degrade path.** Shrinking below `min_ranks` live processes — or
+//! losing the last compute node — leaves nothing worth continuing on; the
+//! job degrades to a CR-style abort + re-deploy (fresh full-size
+//! allocation), recorded as `degraded_redeploy` on the event's segment.
+//!
+//! **Multi-failure semantics.** Same idempotent-under-overlap discipline
+//! as [`super::reinit`]: scheduled closures re-check the cluster at fire
+//! time, adoption targets are re-picked per victim, and a second failure
+//! landing mid-shrink simply re-drives the loop (the world shrinks again).
+
+use std::rc::Rc;
+
+use super::job::{abort_job, arm_child_watcher, JobCtx, RecoveryDriver, ReinitState};
+use super::reinit::spawn_rank;
+use crate::cluster::Topology;
+use crate::config::FailureKind;
+use crate::detect::DetectEvent;
+use crate::sim::{Receiver, SimDuration};
+
+/// The root's shrink loop: agree on the dead set, adopt blocks onto
+/// survivors, redistribute checkpoint copies, cancel + re-enter everyone.
+pub async fn shrink_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
+    let w = Rc::clone(&ctx.world);
+    let control = SimDuration::from_secs_f64(w.cfg.calib.control_latency_us * 1e-6);
+    loop {
+        let Ok(ev) = detect_rx.recv().await else {
+            return;
+        };
+        let (kind, victims): (FailureKind, Vec<u32>) = match ev {
+            DetectEvent::RankDead { rank, .. } => {
+                if ctx.cluster.rank_is_alive(rank) {
+                    continue; // stale notification (already adopted)
+                }
+                w.metrics.record_detect(w.sim.now(), FailureKind::Process);
+                (FailureKind::Process, vec![rank])
+            }
+            DetectEvent::NodeDead { node, .. } => {
+                let failed: Vec<u32> = (0..w.cfg.ranks)
+                    .filter(|&r| {
+                        ctx.cluster.rank_slot(r).node == node && !ctx.cluster.rank_is_alive(r)
+                    })
+                    .collect();
+                if failed.is_empty() {
+                    continue;
+                }
+                w.metrics.record_detect(w.sim.now(), FailureKind::Node);
+                (FailureKind::Node, failed)
+            }
+        };
+
+        // Shrink decision: each fired event removes its victim processes
+        // from the world. Below `min_ranks` — or with no compute node left
+        // to adopt onto — continuing is pointless: degrade to a CR-style
+        // re-deploy on a fresh full-size allocation.
+        let remaining = ctx.mpi.world_procs().saturating_sub(victims.len() as u32);
+        if remaining < w.cfg.min_ranks
+            || ctx.cluster.least_loaded_alive_compute_node().is_none()
+        {
+            w.metrics.record_degrade(kind);
+            abort_job(&ctx);
+            return;
+        }
+        w.metrics.record_shrink();
+        w.shrinks.set(w.shrinks.get() + 1);
+
+        // Broadcast <SHRINK, adoption list> down the root->daemon tree.
+        let levels = Topology::tree_levels(ctx.cluster.topo.total_nodes() + 1);
+        w.sim
+            .sleep(SimDuration(control.0 * levels.max(1) as u64))
+            .await;
+
+        // Adoption walk: every victim block re-hosts onto the least-loaded
+        // surviving *compute* node — never a spare; shrink's whole point is
+        // needing zero over-provisioning. Re-picked per victim (balances a
+        // whole node's worth of blocks) and re-checked at this instant: a
+        // storm kill during the broadcast can empty the compute pool.
+        let mut adopted = true;
+        for &rank in &victims {
+            match ctx.cluster.least_loaded_alive_compute_node() {
+                Some(target) => {
+                    ctx.cluster.rehost_rank(rank, target); // no fork+exec
+                    arm_child_watcher(&ctx, rank);
+                }
+                None => {
+                    adopted = false;
+                    break;
+                }
+            }
+        }
+        if !adopted {
+            w.metrics.record_degrade(kind);
+            abort_job(&ctx);
+            return;
+        }
+
+        // Survivors agree on the dead set and rebuild the smaller world in
+        // place (fresh generation; stale traffic is dropped).
+        ctx.mpi.shrink_world(remaining);
+        let startup = w.deploy.comm_shrink(remaining);
+
+        // ReStore redistribution: rebalance the surviving in-memory
+        // checkpoint copies over the live topology before any rank loads.
+        // The root awaits it, so its transport cost rides the recovery
+        // window (paper Fig. 6/7 booking).
+        let node_of: Vec<u32> = (0..w.cfg.ranks)
+            .map(|r| ctx.cluster.rank_slot(r).node)
+            .collect();
+        w.ckpt.redistribute(&node_of).await;
+
+        // Everyone re-enters the rollback point: survivors via the
+        // SIGREINIT cancel+re-enter (longjmp discipline), adopted blocks as
+        // fresh `Restarted` entries inside their hosting survivor.
+        let signal = w.deploy.signal();
+        for rank in 0..w.cfg.ranks {
+            let state = if victims.contains(&rank) {
+                ReinitState::Restarted
+            } else {
+                ReinitState::Reinited
+            };
+            let ctx2 = ctx.clone();
+            w.sim.schedule(signal, move || {
+                if !ctx2.cluster.rank_is_alive(rank) {
+                    return; // died since the broadcast; its detect covers it
+                }
+                let cur = ctx2.rank_tasks.borrow()[rank as usize];
+                if let Some(t) = cur {
+                    ctx2.world.sim.cancel_task(t);
+                }
+                spawn_rank(&ctx2, rank, state, startup);
+            });
+        }
+    }
+}
+
+/// Shrinking recovery hosted on the shared trial loop.
+pub struct ShrinkDriver;
+
+impl RecoveryDriver for ShrinkDriver {
+    fn tag(&self) -> &'static str {
+        "shrink"
+    }
+
+    fn deploy(&self, ctx: &JobCtx, detect_rx: Receiver<DetectEvent>) {
+        let w = &ctx.world;
+        for rank in 0..w.cfg.ranks {
+            spawn_rank(ctx, rank, ReinitState::New, SimDuration::ZERO);
+        }
+        let root = ctx.cluster.root();
+        let ctx2 = ctx.clone();
+        w.sim.clone().spawn(root, async move {
+            shrink_root(ctx2, detect_rx).await;
+        });
+    }
+}

@@ -46,10 +46,16 @@ fn fault_free_all_apps_complete() {
 #[test]
 fn fault_free_digest_identical_across_recovery_modes() {
     // CR and Reinit must not perturb the computation at all; ULFM inflates
-    // time but not values; replication's mirroring costs time, not values.
+    // time but not values; replication's mirroring costs time, not values;
+    // shrink shares Reinit++'s fault-free path entirely.
     for app in AppKind::ALL {
         let base = digests_of(&base_cfg(app, RecoveryKind::Reinit, FailureKind::None), 0);
-        for rk in [RecoveryKind::Cr, RecoveryKind::Ulfm, RecoveryKind::Replication] {
+        for rk in [
+            RecoveryKind::Cr,
+            RecoveryKind::Ulfm,
+            RecoveryKind::Replication,
+            RecoveryKind::Shrink,
+        ] {
             let d = digests_of(&base_cfg(app, rk, FailureKind::None), 0);
             assert_eq!(d, base, "{app} {rk}");
         }
@@ -569,4 +575,158 @@ fn mtbf_storm_trial_is_deterministic_and_correct() {
         a.faults.iter().map(|f| f.event).collect::<Vec<_>>(),
         "timeline must be recovery-independent"
     );
+}
+
+// ---- shrinking recovery: continue on survivors -------------------------
+
+/// Scenario config for the shrink family with **zero** spare nodes — the
+/// family's whole point is needing no over-provisioning.
+fn shrink_cfg(failures: &str) -> ExperimentConfig {
+    let mut c = scenario_cfg(RecoveryKind::Shrink, failures);
+    c.spare_nodes = 0;
+    c
+}
+
+#[test]
+fn shrink_process_failure_equivalence_all_apps_zero_spares() {
+    // Acceptance: shrink digests equal the fault-free oracle for every app
+    // under a process failure with no spare capacity at all. The logical
+    // decomposition never changes — survivors just carry the victims'
+    // blocks — so the recovered state must be bitwise-identical.
+    for app in AppKind::ALL {
+        let mut cfg = base_cfg(app, RecoveryKind::Shrink, FailureKind::Process);
+        cfg.spare_nodes = 0;
+        let mut free = cfg.clone();
+        free.failure = FailureKind::None;
+        let want = digests_of(&free, 0);
+        let r = run_trial(&cfg, 0, None);
+        assert!(r.completed, "{app}: shrink trial hung ({:?})", r.faults);
+        assert_eq!(r.digests, want, "{app}: shrink perturbed the state");
+        assert_eq!(r.shrinks, 1, "{app}: exactly one shrink");
+        assert_eq!(r.segments.len(), 1, "{app}: {:?}", r.segments);
+        let seg = &r.segments[0];
+        assert!(seg.shrunk, "{app}: segment must be a shrink: {seg:?}");
+        assert!(!seg.degraded_redeploy, "{app}: no spare needed: {seg:?}");
+        assert!(seg.recovery_s > 0.0, "{app}: shrink window booked: {seg:?}");
+    }
+}
+
+#[test]
+fn shrink_node_failure_equivalence_all_apps_zero_spares() {
+    // The in-place recoveries require >= 1 spare node for node failures
+    // (config validation enforces it); shrink is exempt — the survivors of
+    // the other node adopt the dead node's blocks.
+    for app in AppKind::ALL {
+        let mut cfg = base_cfg(app, RecoveryKind::Shrink, FailureKind::Node);
+        cfg.spare_nodes = 0;
+        let mut free = cfg.clone();
+        free.failure = FailureKind::None;
+        let want = digests_of(&free, 0);
+        let r = run_trial(&cfg, 0, None);
+        assert!(r.completed, "{app}: node-shrink trial hung ({:?})", r.faults);
+        assert_eq!(r.digests, want, "{app}: node shrink perturbed the state");
+        assert_eq!(r.shrinks, 1, "{app}");
+        let seg = &r.segments[0];
+        assert!(seg.shrunk && !seg.degraded_redeploy, "{app}: {seg:?}");
+    }
+}
+
+#[test]
+fn shrink_books_redistribution_and_beats_cr() {
+    // Process failure under the Table 2 memory scheme: redistribution must
+    // move payload (at minimum the victim's lost local copy is reinstated
+    // on its adopting host), and the shrink — no ORTE respawn barrier, no
+    // fork+exec — must undercut CR's full re-deploy for the same failure.
+    let shrink = run_trial(&shrink_cfg("proc@2:r1"), 0, None);
+    assert!(shrink.completed, "{:?}", shrink.faults);
+    assert_eq!(shrink.shrinks, 1);
+    assert!(
+        shrink.redistribute_mb > 0.0,
+        "redistribution must move checkpoint payload"
+    );
+    assert_eq!(shrink.failovers, 0, "no replication machinery involved");
+    let cr = run_trial(&scenario_cfg(RecoveryKind::Cr, "proc@2:r1"), 0, None);
+    assert!(cr.completed);
+    let (ts, tc) = (shrink.segments[0].recovery_s, cr.segments[0].recovery_s);
+    assert!(ts < tc, "shrink ({ts}) must undercut CR re-deploy ({tc})");
+}
+
+#[test]
+fn shrink_storm_never_degrades_above_min_ranks() {
+    // Acceptance: a 3-failure process storm against ZERO spares shrinks
+    // 8 -> 7 -> 6 -> 5 live processes — never taking the degraded-redeploy
+    // escape hatch while the world stays at or above `min_ranks` — and
+    // still converges to the fault-free state.
+    let cfg = shrink_cfg("proc@2:r1,proc@4:r3,proc@6:r6");
+    assert_eq!(cfg.min_ranks, 2);
+    let want = digests_of(&fault_free_twin(&cfg), 0);
+    let r = run_trial(&cfg, 0, None);
+    assert!(r.completed, "shrink storm hung ({:?})", r.faults);
+    assert_eq!(r.digests, want, "digests differ after shrink storm");
+    assert_eq!(r.faults.iter().filter(|f| f.fired).count(), 3, "{:?}", r.faults);
+    assert_eq!(r.shrinks, 3, "every event shrinks the world");
+    assert_eq!(r.segments.len(), 3, "{:?}", r.segments);
+    for seg in &r.segments {
+        assert!(seg.shrunk || seg.interrupted, "{seg:?}");
+        assert!(!seg.degraded_redeploy, "no degrade above min_ranks: {seg:?}");
+    }
+    assert!(r.redistribute_mb > 0.0, "storm must redistribute copies");
+}
+
+#[test]
+fn shrink_below_min_ranks_degrades_to_redeploy() {
+    // With `min_ranks` pinned to the full world, the very first loss drops
+    // the survivor count below the floor: shrink must refuse to continue
+    // and degrade to a CR-style abort + re-deploy, still converging (the
+    // abort wipes the memory tiers, so the re-deploy restarts from zero).
+    let mut cfg = shrink_cfg("proc@2:r1");
+    cfg.min_ranks = 8;
+    let want = digests_of(&fault_free_twin(&cfg), 0);
+    let r = run_trial(&cfg, 0, None);
+    assert!(r.completed, "degraded trial hung ({:?})", r.faults);
+    assert_eq!(r.digests, want, "degraded redeploy must still converge");
+    assert_eq!(r.shrinks, 0, "no shrink below the floor");
+    assert_eq!(r.segments.len(), 1, "{:?}", r.segments);
+    let seg = &r.segments[0];
+    assert!(seg.degraded_redeploy, "{seg:?}");
+    assert!(!seg.shrunk, "{seg:?}");
+}
+
+#[test]
+fn shrink_losing_last_compute_node_degrades() {
+    // Two compute nodes, zero spares: the first node failure shrinks onto
+    // the other node; the second takes out the last compute node — nothing
+    // is left to adopt onto, so the event degrades to a full re-deploy
+    // (converging via the node-failure File checkpoints, Table 2).
+    let cfg = shrink_cfg("node@2:r1,node@5:r6");
+    let want = digests_of(&fault_free_twin(&cfg), 0);
+    let r = run_trial(&cfg, 0, None);
+    assert!(r.completed, "last-node storm hung ({:?})", r.faults);
+    assert_eq!(r.digests, want, "digests differ after last-node storm");
+    assert_eq!(r.shrinks, 1, "only the first event shrinks");
+    assert_eq!(r.segments.len(), 2, "{:?}", r.segments);
+    assert!(r.segments[0].shrunk && !r.segments[0].degraded_redeploy, "{:?}", r.segments);
+    assert!(r.segments[1].degraded_redeploy && !r.segments[1].shrunk, "{:?}", r.segments);
+}
+
+#[test]
+fn shrink_time_event_after_completion_is_explicit_noop() {
+    // Satellite: a virtual-time-anchored event whose instant arrives after
+    // the job released the allocation must land as an explicit, logged
+    // no-op — zero-cost segment, `noop` outcome — not silently vanish.
+    let cfg = shrink_cfg("proc@2:r1,proc@t500:r3");
+    let want = digests_of(&fault_free_twin(&cfg), 0);
+    let r = run_trial(&cfg, 0, None);
+    assert!(r.completed, "noop trial hung ({:?})", r.faults);
+    assert_eq!(r.digests, want);
+    assert_eq!(r.shrinks, 1);
+    assert!(r.faults[0].fired && !r.faults[0].noop, "{:?}", r.faults);
+    assert!(r.faults[1].noop && !r.faults[1].fired, "{:?}", r.faults);
+    assert_eq!(r.segments.len(), 2, "{:?}", r.segments);
+    let noop = &r.segments[1];
+    assert!(noop.noop, "{noop:?}");
+    assert_eq!(noop.detect_s, 0.0, "{noop:?}");
+    assert_eq!(noop.recovery_s, 0.0, "{noop:?}");
+    assert_eq!(noop.rollback_s, 0.0, "{noop:?}");
+    assert!(!noop.shrunk && !noop.degraded_redeploy && !noop.interrupted, "{noop:?}");
 }

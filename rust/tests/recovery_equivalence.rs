@@ -82,6 +82,120 @@ fn reinit_node_failure_full_fidelity_hpccg() {
     equivalence(AppKind::Hpccg, RecoveryKind::Reinit, FailureKind::Node);
 }
 
+// ---- shrinking recovery: survivors continue with ZERO spare nodes.
+// The halo layer (apps/halo.rs grid3 decomposition + exchange) is what
+// every one of these apps shrinks through; its degenerate survivor counts
+// are pinned separately by the grid3 unit tests.
+
+fn shrink_cfg(app: AppKind, failure: FailureKind) -> ExperimentConfig {
+    let mut c = cfg(app, RecoveryKind::Shrink, failure);
+    c.spare_nodes = 0; // shrink's whole point: no over-provisioning
+    c
+}
+
+fn shrink_equivalence(app: AppKind, failure: FailureKind) {
+    let rt = rt();
+    let free = run_trial(&shrink_cfg(app, FailureKind::None), 0, Some(Rc::clone(&rt)));
+    assert!(free.completed, "{app}/shrink fault-free hung");
+    let faulty = run_trial(&shrink_cfg(app, failure), 0, Some(rt));
+    assert!(
+        faulty.completed,
+        "{app}/shrink/{failure} hung (fault {:?})",
+        faulty.faults
+    );
+    assert!(faulty.breakdown.mpi_recovery_s > 0.0);
+    assert!(faulty.shrinks >= 1, "failure must be absorbed by shrinking");
+    assert!(
+        !faulty.segments.iter().any(|s| s.degraded_redeploy),
+        "{app}/shrink/{failure}: must not degrade with ranks far above min_ranks"
+    );
+    assert_eq!(
+        faulty.digests, free.digests,
+        "{app}/shrink/{failure}: shrunken-world state != fault-free (fault {:?})",
+        faulty.faults
+    );
+}
+
+#[test]
+fn shrink_process_failure_full_fidelity_hpccg() {
+    shrink_equivalence(AppKind::Hpccg, FailureKind::Process);
+}
+
+#[test]
+fn shrink_process_failure_full_fidelity_comd() {
+    shrink_equivalence(AppKind::CoMD, FailureKind::Process);
+}
+
+#[test]
+fn shrink_process_failure_full_fidelity_lulesh() {
+    shrink_equivalence(AppKind::Lulesh, FailureKind::Process);
+}
+
+#[test]
+fn shrink_node_failure_full_fidelity_hpccg() {
+    shrink_equivalence(AppKind::Hpccg, FailureKind::Node);
+}
+
+#[test]
+fn shrink_node_failure_full_fidelity_comd() {
+    shrink_equivalence(AppKind::CoMD, FailureKind::Node);
+}
+
+#[test]
+fn shrink_node_failure_full_fidelity_lulesh() {
+    shrink_equivalence(AppKind::Lulesh, FailureKind::Node);
+}
+
+#[test]
+fn shrink_matches_cr_and_reinit_results_hpccg() {
+    // same app result across families: shrink's N-k-rank continuation must
+    // land on the identical final state CR and Reinit++ restore to
+    let rt = rt();
+    let shrink = run_trial(
+        &shrink_cfg(AppKind::Hpccg, FailureKind::Process),
+        0,
+        Some(Rc::clone(&rt)),
+    );
+    let cr = run_trial(
+        &cfg(AppKind::Hpccg, RecoveryKind::Cr, FailureKind::Process),
+        0,
+        Some(Rc::clone(&rt)),
+    );
+    let reinit = run_trial(
+        &cfg(AppKind::Hpccg, RecoveryKind::Reinit, FailureKind::Process),
+        0,
+        Some(rt),
+    );
+    assert!(shrink.completed && cr.completed && reinit.completed);
+    assert_eq!(shrink.digests, cr.digests);
+    assert_eq!(shrink.digests, reinit.digests);
+}
+
+#[test]
+fn shrink_storm_with_zero_spares_never_degrades_above_min_ranks() {
+    // three process failures against 8 ranks with spares=0: every event
+    // shrinks (8 -> 7 -> 6 -> 5, all >= min_ranks=2); the degraded_redeploy
+    // path must never fire, and the result still matches fault-free
+    let rt = rt();
+    let mut c = shrink_cfg(AppKind::Hpccg, FailureKind::Process);
+    c.iters = 8;
+    c.apply("failures", "proc@2:r1,proc@4:r3,proc@6:r6").unwrap();
+    let free = {
+        let mut f = c.clone();
+        f.failures.clear();
+        f.failure = FailureKind::None;
+        run_trial(&f, 0, Some(Rc::clone(&rt)))
+    };
+    let storm = run_trial(&c, 0, Some(rt));
+    assert!(storm.completed);
+    assert_eq!(storm.shrinks, 3, "every event absorbed by shrinking");
+    assert!(
+        !storm.segments.iter().any(|s| s.degraded_redeploy),
+        "spares=0 must not degrade until ranks < min_ranks"
+    );
+    assert_eq!(storm.digests, free.digests);
+}
+
 #[test]
 fn hpccg_actually_converges_through_a_failure() {
     // beyond bit-equality: the distributed CG residual keeps dropping
