@@ -19,6 +19,7 @@ fn main() {
         max_ranks: 1024,
         outdir: "results/bench".into(),
         jobs: default_jobs(),
+        profile: false,
     };
     let points = fig6(&base, &opts);
 

@@ -270,19 +270,29 @@ impl CkptStore {
     /// with an async drain only the fastest tier is written here and the
     /// rest trickles down in the background.
     pub async fn save(&self, rank: u32, node: u32, iter: u32, data: Vec<u8>) {
+        let t0 = self.sim.tracer().is_on().then(|| self.sim.now());
         let data = Rc::new(data);
         if self.drain_proc.is_none() {
             for tier in 0..self.specs.len() {
                 self.write_tier(tier, rank, node, iter, &data).await;
             }
+            if let Some(t0) = t0 {
+                self.sim.tracer().rank_span("ckpt", "save", rank, t0, self.sim.now());
+            }
             return;
         }
         self.write_tier(0, rank, node, iter, &data).await;
-        {
+        let backlog = {
             let mut inner = self.inner.borrow_mut();
             inner.pending.insert((iter, rank), Rc::clone(&data));
             let backlog = inner.pending.len() as u64;
             inner.pending_peak = inner.pending_peak.max(backlog);
+            backlog
+        };
+        if let Some(t0) = t0 {
+            let now = self.sim.now();
+            self.sim.tracer().rank_span("ckpt", "save", rank, t0, now);
+            self.sim.tracer().counter("ckpt", "drain_pending", now, backlog);
         }
         self.arm_drain();
     }
@@ -315,6 +325,7 @@ impl CkptStore {
     /// post-failure allreduce-min agreement loadable on every surviving
     /// tier (see the module docs).
     async fn flush(&self) {
+        let t0 = self.sim.tracer().is_on().then(|| self.sim.now());
         loop {
             // pop the whole lowest-iteration batch
             let (iter, batch) = {
@@ -374,6 +385,12 @@ impl CkptStore {
             inner.drain_armed = false;
             !inner.pending.is_empty()
         };
+        if let Some(t0) = t0 {
+            let now = self.sim.now();
+            self.sim.tracer().span("ckpt", "drain", 0, t0, now);
+            let backlog = self.inner.borrow().pending.len() as u64;
+            self.sim.tracer().counter("ckpt", "drain_pending", now, backlog);
+        }
         if rearm {
             // items arrived while the last ones were in flight
             self.arm_drain();
@@ -399,6 +416,15 @@ impl CkptStore {
     /// gone. The payload is shared (`Rc`): the *virtual* copy cost is
     /// charged here, the host pays no deep copy (EXPERIMENTS.md §Perf).
     pub async fn load(&self, rank: u32, node: u32, iter: u32) -> Option<Rc<Vec<u8>>> {
+        let t0 = self.sim.tracer().is_on().then(|| self.sim.now());
+        let out = self.load_inner(rank, node, iter).await;
+        if let Some(t0) = t0 {
+            self.sim.tracer().rank_span("ckpt", "load", rank, t0, self.sim.now());
+        }
+        out
+    }
+
+    async fn load_inner(&self, rank: u32, node: u32, iter: u32) -> Option<Rc<Vec<u8>>> {
         for tier in 0..self.specs.len() {
             let found: Option<(u32, Rc<Vec<u8>>)> = {
                 let inner = self.inner.borrow();
@@ -427,6 +453,14 @@ impl CkptStore {
     /// its tier's write cost and counted in `rebuild_bytes`. No-op (and
     /// zero-cost) when nothing is degraded.
     pub async fn rebuild(&self, rank: u32, node: u32, iter: u32, data: &Rc<Vec<u8>>) {
+        let t0 = self.sim.tracer().is_on().then(|| self.sim.now());
+        self.rebuild_inner(rank, node, iter, data).await;
+        if let Some(t0) = t0 {
+            self.sim.tracer().rank_span("ckpt", "rebuild", rank, t0, self.sim.now());
+        }
+    }
+
+    async fn rebuild_inner(&self, rank: u32, node: u32, iter: u32, data: &Rc<Vec<u8>>) {
         let pl = self.placements();
         for tier in 0..self.specs.len() {
             for &host in &pl[tier][rank as usize] {
@@ -478,6 +512,15 @@ impl CkptStore {
     /// through the contended disk model instead. Returns the payload
     /// bytes moved; cumulative counters land in [`StorageStats`].
     pub async fn redistribute(&self, node_of: &[u32]) -> u64 {
+        let t0 = self.sim.tracer().is_on().then(|| self.sim.now());
+        let moved = self.redistribute_inner(node_of).await;
+        if let Some(t0) = t0 {
+            self.sim.tracer().span("ckpt", "redistribute", 0, t0, self.sim.now());
+        }
+        moved
+    }
+
+    async fn redistribute_inner(&self, node_of: &[u32]) -> u64 {
         assert_eq!(node_of.len(), self.topo.ranks as usize);
         let new_pl: Rc<Vec<Vec<Vec<u32>>>> = Rc::new(
             self.specs

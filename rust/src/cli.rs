@@ -19,6 +19,12 @@
 //! available parallelism, `1` forces the serial path; output is
 //! byte-identical for any value — see `harness::pool`), plus any dotted
 //! config key as `key=value` (see `config::ExperimentConfig`).
+//!
+//! Observability: `run` takes `--trace DIR` (per-trial Perfetto trace +
+//! flamegraph + profile JSON, see `trace`) and `--trace-filter CATS`;
+//! every sweep takes `--profile-json`; `-v`/`--quiet` are global flags
+//! stripped by `main` before parsing (see `log`). Tracing is observation
+//! only — virtual-time results and CSV bytes are identical with it on.
 
 use std::rc::Rc;
 
@@ -33,6 +39,9 @@ pub enum Command {
     Run {
         cfg: ExperimentConfig,
         jobs: usize,
+        /// `--trace DIR` (+ optional `--trace-filter`): per-trial trace
+        /// export destination, installed process-wide for the run.
+        trace: Option<crate::trace::TraceConfig>,
     },
     Reproduce {
         figure: u32,
@@ -136,6 +145,21 @@ OPTIONS:
                      Must be >= 1: default all cores, 1 = serial execution on
                      the calling thread. Tables and CSVs are byte-identical
                      for any N.
+  --trace DIR        (run) write per-trial observability artifacts under DIR:
+                     trace_<id>.trace.json (Perfetto/chrome trace-event JSON,
+                     virtual time: one track per rank group + a recovery
+                     timeline), trace_<id>.folded (flamegraph folded stacks),
+                     trace_<id>.profile.json (counters + recovery segments),
+                     plus pool.trace.json (worker timeline, wall time).
+                     Observation only: results are byte-identical with it on.
+  --trace-filter C,C (run, with --trace) record only these span categories;
+                     known: exec, mpi, ckpt, recovery, pool
+  --profile-json     (sweeps) also write per-trial executor counters as
+                     <sweep>_profiles.json next to the sweep CSV (the
+                     BENCH_sweep_stats_<sweep>.json throughput summary is
+                     always written)
+  -v, --verbose      verbose progress on stderr (global flag)
+  -q, --quiet        silence progress on stderr (global flag)
   key=value          any config key, e.g. app=hpccg ranks=64 recovery=reinit
                      failure=process trials=10 iters=20 fidelity=auto
                      ckpt_tiers=local+partner2+fs ckpt_drain_interval_s=0.5
@@ -146,6 +170,7 @@ OPTIONS:
 
 EXAMPLES:
   reinitpp run app=hpccg ranks=16 recovery=reinit failure=process trials=3
+  reinitpp run failures=proc@3:r5,proc@7:r2 --trace traces/ --trace-filter recovery,ckpt
   reinitpp run ranks=32 ranks_per_node=8 ckpt_tiers=local+partner2+fs trials=3
   reinitpp run failures=proc@3:r5,node@7:r12 spare_nodes=2 trials=3
   reinitpp reproduce --figure 6 --max-ranks 128 --jobs 8 trials=5
@@ -170,10 +195,33 @@ fn parse_jobs(v: &str) -> Result<usize, CliError> {
     }
 }
 
+/// Parse a `--trace-filter` value: comma-separated span categories checked
+/// against the recorder's category universe, so a typo fails loudly instead
+/// of silently recording nothing.
+fn parse_trace_filter(v: &str) -> Result<Vec<String>, CliError> {
+    let cats: Vec<String> = v
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if cats.is_empty() {
+        return Err(err("--trace-filter: empty category list"));
+    }
+    for c in &cats {
+        if !crate::trace::CATEGORIES.contains(&c.as_str()) {
+            return Err(err(format!(
+                "--trace-filter: unknown category `{c}` (known: {})",
+                crate::trace::CATEGORIES.join(", ")
+            )));
+        }
+    }
+    Ok(cats)
+}
+
 /// Parse the sweep flags shared by `reproduce`/`scale`/`tiers`
-/// (`--max-ranks`, `--outdir`, `--jobs`) from `leftovers` into `opts`.
-/// `extra` handles command-specific flags (returns true if it consumed the
-/// arg); anything else errors with the command name.
+/// (`--max-ranks`, `--outdir`, `--jobs`, `--profile-json`) from `leftovers`
+/// into `opts`. `extra` handles command-specific flags (returns true if it
+/// consumed the arg); anything else errors with the command name.
 fn parse_sweep_opts<'a>(
     cmd: &str,
     leftovers: &'a [String],
@@ -196,6 +244,9 @@ fn parse_sweep_opts<'a>(
             "--jobs" => {
                 let v = it.next().ok_or_else(|| err("--jobs needs a value"))?;
                 opts.jobs = parse_jobs(v)?;
+            }
+            "--profile-json" => {
+                opts.profile = true;
             }
             other => {
                 if !extra(other, &mut it)? {
@@ -338,6 +389,8 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
         "run" => {
             let (cfg, leftovers) = parse_cfg(rest)?;
             let mut jobs = crate::harness::default_jobs();
+            let mut trace_dir: Option<String> = None;
+            let mut trace_filter: Option<Vec<String>> = None;
             let mut it = leftovers.iter();
             while let Some(a) = it.next() {
                 match a.as_str() {
@@ -345,10 +398,29 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                         let v = it.next().ok_or_else(|| err("--jobs needs a value"))?;
                         jobs = parse_jobs(v)?;
                     }
+                    "--trace" => {
+                        let v = it
+                            .next()
+                            .ok_or_else(|| err("--trace needs a directory"))?;
+                        trace_dir = Some(v.clone());
+                    }
+                    "--trace-filter" => {
+                        let v = it.next().ok_or_else(|| {
+                            err("--trace-filter needs a comma-separated category list")
+                        })?;
+                        trace_filter = Some(parse_trace_filter(v)?);
+                    }
                     other => return Err(err(format!("run: unknown arg {other}"))),
                 }
             }
-            Ok(Command::Run { cfg, jobs })
+            if trace_filter.is_some() && trace_dir.is_none() {
+                return Err(err("run: --trace-filter needs --trace DIR"));
+            }
+            let trace = trace_dir.map(|dir| crate::trace::TraceConfig {
+                dir,
+                filter: trace_filter,
+            });
+            Ok(Command::Run { cfg, jobs, trace })
         }
         "validate" | "calibrate" => {
             let (cfg, leftovers) = parse_cfg(rest)?;
@@ -628,10 +700,15 @@ pub fn execute(cmd: Command) -> i32 {
             }
             0
         }
-        Command::Run { cfg, jobs } => {
+        Command::Run { cfg, jobs, trace } => {
             if let Err(e) = cfg.validate() {
                 eprintln!("{e}");
                 return 2;
+            }
+            // Install the process-wide trace destination before any trial
+            // runs; the pool and `run_trial` pick it up from there.
+            if trace.is_some() {
+                crate::trace::set_global(trace.clone());
             }
             // Header must describe what actually gets injected: an explicit
             // scenario or MTBF process overrides the single-shot `failure=`
@@ -658,6 +735,19 @@ pub fn execute(cmd: Command) -> i32 {
                 jobs
             );
             let p = harness::run_point(&cfg, jobs);
+            if let Some(tc) = &trace {
+                // Per-trial traces were written as each trial finished; the
+                // pool-worker timeline (wall time) spans the whole point.
+                let (events, samples) = crate::trace::take_pool_events();
+                let dir = std::path::Path::new(&tc.dir);
+                let path = dir.join("pool.trace.json");
+                let wrote = std::fs::create_dir_all(dir)
+                    .and_then(|_| crate::trace::chrome::write_pool(&path, &events, &samples));
+                if let Err(e) = wrote {
+                    crate::warnln!("could not write {}: {e}", path.display());
+                }
+                crate::trace::set_global(None);
+            }
             harness::print_points("run", std::slice::from_ref(&p));
             if !cfg.failures.is_empty() || cfg.mtbf_s > 0.0 {
                 // Multi-failure scenario: surface the per-event decomposition
@@ -932,12 +1022,68 @@ mod tests {
     fn parse_run_with_overrides() {
         let cmd = parse(&sv(&["run", "app=comd", "ranks=64", "trials=3"])).unwrap();
         match cmd {
-            Command::Run { cfg, jobs } => {
+            Command::Run { cfg, jobs, trace } => {
                 assert_eq!(cfg.app, crate::config::AppKind::CoMD);
                 assert_eq!(cfg.ranks, 64);
                 assert_eq!(cfg.trials, 3);
                 assert!(jobs >= 1, "defaults to available parallelism");
+                assert!(trace.is_none(), "tracing is opt-in");
             }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_run_trace_flags() {
+        let cmd = parse(&sv(&[
+            "run",
+            "ranks=16",
+            "--trace",
+            "/tmp/traces",
+            "--trace-filter",
+            "recovery,ckpt",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Run { trace, .. } => {
+                let tc = trace.expect("--trace installs a destination");
+                assert_eq!(tc.dir, "/tmp/traces");
+                assert_eq!(
+                    tc.filter.as_deref(),
+                    Some(&["recovery".to_string(), "ckpt".to_string()][..])
+                );
+            }
+            _ => panic!(),
+        }
+        // --trace alone records every category
+        match parse(&sv(&["run", "--trace", "/tmp/traces"])).unwrap() {
+            Command::Run { trace, .. } => assert!(trace.unwrap().filter.is_none()),
+            _ => panic!(),
+        }
+        // typos fail loudly instead of recording nothing
+        let e = parse(&sv(&["run", "--trace", "d", "--trace-filter", "warp"]))
+            .unwrap_err();
+        assert!(e.to_string().contains("unknown category"), "{e}");
+        // --trace-filter without a destination is meaningless
+        assert!(parse(&sv(&["run", "--trace-filter", "mpi"])).is_err());
+    }
+
+    #[test]
+    fn parse_sweeps_profile_json() {
+        for cmd in ["tiers", "scale", "storm", "crossover", "shrink"] {
+            match parse(&sv(&[cmd, "--profile-json"])).unwrap() {
+                Command::Tiers { opts, .. }
+                | Command::Scale { opts, .. }
+                | Command::Storm { opts, .. }
+                | Command::Crossover { opts, .. }
+                | Command::Shrink { opts, .. } => {
+                    assert!(opts.profile, "{cmd}: --profile-json sets profile")
+                }
+                _ => panic!(),
+            }
+        }
+        match parse(&sv(&["reproduce", "--figure", "4", "--profile-json"])).unwrap() {
+            Command::Reproduce { opts, .. } => assert!(opts.profile),
             _ => panic!(),
         }
     }

@@ -108,7 +108,7 @@ pub fn crossover_sweep(
 ) -> Result<Vec<Point>, String> {
     let cfgs = build_grid(base, opts)?;
     let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
-    eprintln!(
+    crate::info!(
         "  crossover sweep: {} points / {trials} trials (MTBF {:?} s, ckpt every {:?}) on {} worker(s)...",
         cfgs.len(),
         presets::STORM_SWEEP_MTBF_S,
@@ -116,12 +116,7 @@ pub fn crossover_sweep(
         opts.jobs
     );
     let (points, stats) = run_points(&cfgs, opts.jobs);
-    eprintln!(
-        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
-        stats.wall_s,
-        stats.trials_per_sec(),
-        stats.utilization() * 100.0
-    );
+    super::figures::finish_sweep("crossover_compare", opts, &points, &stats);
 
     println!(
         "\n## Replication vs checkpointing crossover ({}): MTBF x degree x ckpt interval\n",
@@ -156,7 +151,7 @@ pub fn crossover_sweep(
     println!(" see EXPERIMENTS.md §Replication crossover)");
 
     if let Err(e) = write_crossover_csv(&opts.outdir, &points) {
-        eprintln!("WARN: could not write crossover_compare.csv: {e}");
+        crate::warnln!("could not write crossover_compare.csv: {e}");
     }
     Ok(points)
 }
@@ -230,6 +225,7 @@ mod tests {
             max_ranks: 256,
             outdir: "/tmp/reinitpp-test-results".into(),
             jobs: 1,
+            profile: false,
         };
         let cfgs = build_grid(&quick_base(), &opts).unwrap();
         // 3 rungs x 6 family rows x 3 MTBFs x 2 ckpt intervals
@@ -270,6 +266,7 @@ mod tests {
             max_ranks: 16,
             outdir: outdir.into(),
             jobs,
+            profile: false,
         };
         let serial =
             crossover_sweep(&base, &mk(1, "/tmp/reinitpp-test-results/crossover-j1"))

@@ -19,6 +19,9 @@ pub struct SweepOpts {
     pub outdir: String,
     /// Worker threads for trial execution (1 = serial; default all cores).
     pub jobs: usize,
+    /// Also write per-trial executor counters as `<name>_profiles.json`
+    /// next to each sweep CSV (`--profile-json`).
+    pub profile: bool,
 }
 
 impl Default for SweepOpts {
@@ -27,6 +30,7 @@ impl Default for SweepOpts {
             max_ranks: 1024,
             outdir: "results".to_string(),
             jobs: default_jobs(),
+            profile: false,
         }
     }
 }
@@ -143,7 +147,100 @@ pub fn write_csv(name: &str, outdir: &str, points: &[Point]) -> std::io::Result<
     std::fs::write(format!("{outdir}/{name}.csv"), s)
 }
 
+/// Emit one finished sweep's host-side throughput stats as
+/// `BENCH_sweep_stats_<name>.json` (same naming family as the micro-bench
+/// emitters) and — under `--profile-json` — the per-trial executor counters
+/// as `<name>_profiles.json`, both next to the sweep's CSV. Also prints the
+/// "sweep done" heartbeat. Best-effort: a failed write warns, never aborts
+/// a sweep whose trials already ran.
+pub(crate) fn finish_sweep(
+    name: &str,
+    opts: &SweepOpts,
+    points: &[Point],
+    stats: &crate::metrics::SweepStats,
+) {
+    crate::info!(
+        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
+        stats.wall_s,
+        stats.trials_per_sec(),
+        stats.utilization() * 100.0
+    );
+    if let Err(e) = write_sweep_stats(name, &opts.outdir, stats) {
+        crate::warnln!("could not write BENCH_sweep_stats_{name}.json: {e}");
+    }
+    if opts.profile {
+        if let Err(e) = write_profiles(name, &opts.outdir, points) {
+            crate::warnln!("could not write {name}_profiles.json: {e}");
+        }
+    }
+}
+
+/// `BENCH_sweep_stats_<name>.json`: jobs/trials/wall/busy plus the derived
+/// throughput and utilization, for trend tracking next to the CSVs.
+fn write_sweep_stats(
+    name: &str,
+    outdir: &str,
+    stats: &crate::metrics::SweepStats,
+) -> std::io::Result<()> {
+    use crate::metrics::bench::{json_num, json_str};
+    std::fs::create_dir_all(outdir)?;
+    let mut s = String::from("{\n  \"schema\": 1,\n");
+    s.push_str(&format!("  \"sweep\": {},\n", json_str(name)));
+    s.push_str(&format!("  \"jobs\": {},\n", stats.jobs));
+    s.push_str(&format!("  \"trials\": {},\n", stats.trials));
+    s.push_str(&format!("  \"wall_s\": {},\n", json_num(stats.wall_s)));
+    s.push_str(&format!("  \"busy_s\": {},\n", json_num(stats.busy_s)));
+    s.push_str(&format!(
+        "  \"trials_per_sec\": {},\n",
+        json_num(stats.trials_per_sec())
+    ));
+    s.push_str(&format!(
+        "  \"utilization\": {}\n",
+        json_num(stats.utilization())
+    ));
+    s.push_str("}\n");
+    std::fs::write(format!("{outdir}/BENCH_sweep_stats_{name}.json"), s)
+}
+
+/// `<name>_profiles.json`: one row per (point, trial) with the trial's
+/// identity hash and executor counters (`--profile-json`).
+fn write_profiles(name: &str, outdir: &str, points: &[Point]) -> std::io::Result<()> {
+    use crate::metrics::bench::{json_num, json_str};
+    std::fs::create_dir_all(outdir)?;
+    let mut s = String::from("{\n  \"schema\": 1,\n");
+    s.push_str(&format!("  \"sweep\": {},\n", json_str(name)));
+    s.push_str("  \"trials\": [\n");
+    let mut first = true;
+    for p in points {
+        for (trial, c) in p.profiles.iter().enumerate() {
+            if !first {
+                s.push_str(",\n");
+            }
+            first = false;
+            s.push_str(&format!(
+                "    {{\"app\": {}, \"ranks\": {}, \"recovery\": {}, \"failure\": {}, \
+                 \"trial\": {trial}, \"identity\": \"{:016x}\", \"end_s\": {}, \
+                 \"events\": {}, \"polls\": {}, \"peak_events_pending\": {}, \
+                 \"tasks_completed\": {}}}",
+                json_str(&p.cfg.app.to_string()),
+                p.cfg.ranks,
+                json_str(&p.cfg.recovery.to_string()),
+                json_str(&p.cfg.failure.to_string()),
+                c.identity,
+                json_num(c.end_s),
+                c.events,
+                c.polls,
+                c.peak_events_pending,
+                c.tasks_completed,
+            ));
+        }
+    }
+    s.push_str("\n  ]\n}\n");
+    std::fs::write(format!("{outdir}/{name}_profiles.json"), s)
+}
+
 fn run_sweep(
+    name: &str,
     base: &ExperimentConfig,
     opts: &SweepOpts,
     apps: &[AppKind],
@@ -159,18 +256,13 @@ fn run_sweep(
         }
     }
     let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
-    eprintln!(
+    crate::info!(
         "  sweep: {} points / {trials} trials ({failure} failure) on {} worker(s)...",
         cfgs.len(),
         opts.jobs
     );
     let (points, stats) = run_points(&cfgs, opts.jobs);
-    eprintln!(
-        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
-        stats.wall_s,
-        stats.trials_per_sec(),
-        stats.utilization() * 100.0
-    );
+    finish_sweep(name, opts, &points, &stats);
     points
 }
 
@@ -181,6 +273,7 @@ fn run_sweep(
 /// its own crossover sweep and must not perturb the figure CSV bytes.
 pub fn fig4(base: &ExperimentConfig, opts: &SweepOpts) -> Vec<Point> {
     let points = run_sweep(
+        "fig4_total_time",
         base,
         opts,
         &AppKind::ALL,
@@ -199,6 +292,7 @@ pub fn fig4(base: &ExperimentConfig, opts: &SweepOpts) -> Vec<Point> {
 /// ULFM inflation).
 pub fn fig5(base: &ExperimentConfig, opts: &SweepOpts) -> Vec<Point> {
     let points = run_sweep(
+        "fig5_app_time",
         base,
         opts,
         &AppKind::ALL,
@@ -216,6 +310,7 @@ pub fn fig5(base: &ExperimentConfig, opts: &SweepOpts) -> Vec<Point> {
 /// Fig. 6: MPI recovery time under a process failure.
 pub fn fig6(base: &ExperimentConfig, opts: &SweepOpts) -> Vec<Point> {
     let points = run_sweep(
+        "fig6_process_recovery",
         base,
         opts,
         &AppKind::ALL,
@@ -238,6 +333,7 @@ pub fn fig7(base: &ExperimentConfig, opts: &SweepOpts) -> Vec<Point> {
     b.spare_nodes = b.spare_nodes.max(1);
     b.ckpt = Some(CkptKind::File);
     let points = run_sweep(
+        "fig7_node_recovery",
         &b,
         opts,
         &AppKind::ALL,
@@ -272,8 +368,10 @@ mod tests {
             max_ranks: 32,
             outdir: "/tmp/reinitpp-test-results".into(),
             jobs: 2,
+            profile: false,
         };
         let pts = run_sweep(
+            "unit_fig6_quick",
             &base,
             &opts,
             &[AppKind::Hpccg],
@@ -300,8 +398,10 @@ mod tests {
             max_ranks: 16,
             outdir: "/tmp/reinitpp-test-results".into(),
             jobs: 1,
+            profile: true,
         };
         let pts = run_sweep(
+            "unit_test",
             &base,
             &opts,
             &[AppKind::Hpccg],
@@ -313,5 +413,19 @@ mod tests {
             std::fs::read_to_string("/tmp/reinitpp-test-results/unit_test.csv").unwrap();
         assert!(text.starts_with("app,ranks,"));
         assert_eq!(text.lines().count(), 2);
+        // finish_sweep side-car artifacts: stats always, profiles on demand
+        let stats = std::fs::read_to_string(
+            "/tmp/reinitpp-test-results/BENCH_sweep_stats_unit_test.json",
+        )
+        .unwrap();
+        assert!(stats.contains("\"sweep\": \"unit_test\""));
+        assert!(stats.contains("\"trials\": 2"));
+        let profiles = std::fs::read_to_string(
+            "/tmp/reinitpp-test-results/unit_test_profiles.json",
+        )
+        .unwrap();
+        assert!(profiles.contains("\"identity\""));
+        assert!(profiles.contains("\"events\""));
+        assert_eq!(profiles.matches("\"trial\":").count(), 2);
     }
 }

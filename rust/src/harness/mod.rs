@@ -73,6 +73,10 @@ pub struct Point {
     /// Host seconds of trial compute attributed to this point (sum over its
     /// trials' busy time; equals elapsed wall-clock only in a serial run).
     pub wall_s: f64,
+    /// Per-trial executor counters + trial identity hash, in trial order
+    /// (always collected — they are a handful of integers per trial).
+    /// `--profile-json` serializes them next to the sweep CSV.
+    pub profiles: Vec<crate::trace::TrialCounters>,
 }
 
 /// Summarize one point's finished trials (the paper's §4 methodology:
@@ -147,6 +151,7 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
         mirror_mb: mirror_mb / n,
         storage: StorageMeans::from_trials(&storage),
         wall_s: outs.iter().map(|o| o.host_s).sum(),
+        profiles: outs.iter().map(|o| o.result.counters).collect(),
     }
 }
 

@@ -77,16 +77,21 @@ impl Drop for CancelOnPanic<'_> {
     }
 }
 
-fn run_one(spec: TrialSpec) -> TrialOut {
+fn run_one(spec: TrialSpec, worker: usize, traced: bool) -> TrialOut {
     // Resolve the runtime before starting the clock: a thread's one-time
     // XLA load must not be billed to whichever trial it runs first.
     let xla = RT_CACHE.with(|rt| rt.borrow_mut().resolve(&spec.cfg));
+    let begin_us = if traced { crate::trace::wall_us() } else { 0.0 };
     let t0 = Instant::now();
     let result = run_trial(&spec.cfg, spec.trial, xla);
+    let host_s = t0.elapsed().as_secs_f64();
+    if traced {
+        crate::trace::pool_record_trial(worker, spec.point, spec.trial, begin_us, host_s * 1e6);
+    }
     TrialOut {
         point: spec.point,
         trial: spec.trial,
-        host_s: t0.elapsed().as_secs_f64(),
+        host_s,
         result,
     }
 }
@@ -97,12 +102,15 @@ fn run_one(spec: TrialSpec) -> TrialOut {
 pub fn run_trials(specs: Vec<TrialSpec>, jobs: usize) -> (Vec<TrialOut>, SweepStats) {
     let trials = specs.len();
     let jobs = jobs.clamp(1, trials.max(1));
+    // One flag read per sweep, not per trial: pool tracing is on exactly
+    // when a global trace destination is installed (`--trace`).
+    let traced = crate::trace::pool_trace_enabled();
     // Progress heartbeat on stderr (~every 10% of the sweep), so a long
     // figure run is distinguishable from a hung one.
     let progress_every = (trials / 10).max(1);
     let progress = |done: usize| {
         if done % progress_every == 0 && done < trials {
-            eprintln!("  {done}/{trials} trials done");
+            crate::info!("  {done}/{trials} trials done");
         }
     };
     let t0 = Instant::now();
@@ -111,7 +119,7 @@ pub fn run_trials(specs: Vec<TrialSpec>, jobs: usize) -> (Vec<TrialOut>, SweepSt
             .into_iter()
             .enumerate()
             .map(|(i, s)| {
-                let o = run_one(s);
+                let o = run_one(s, 0, traced);
                 progress(i + 1);
                 o
             })
@@ -121,7 +129,7 @@ pub fn run_trials(specs: Vec<TrialSpec>, jobs: usize) -> (Vec<TrialOut>, SweepSt
         let cancelled = AtomicBool::new(false);
         let (tx, rx) = mpsc::channel::<TrialOut>();
         std::thread::scope(|scope| {
-            for _ in 0..jobs {
+            for worker in 0..jobs {
                 let tx = tx.clone();
                 let queue = &queue;
                 let cancelled = &cancelled;
@@ -137,9 +145,15 @@ pub fn run_trials(specs: Vec<TrialSpec>, jobs: usize) -> (Vec<TrialOut>, SweepSt
                         }
                         // The lock guard is a temporary: released before the
                         // (long) trial runs.
-                        let next = queue.lock().unwrap().pop_front();
+                        let (next, depth) = {
+                            let mut q = queue.lock().unwrap();
+                            (q.pop_front(), q.len() as u64)
+                        };
                         let Some(spec) = next else { break };
-                        if tx.send(run_one(spec)).is_err() {
+                        if traced {
+                            crate::trace::pool_sample("injector_queue_depth", depth);
+                        }
+                        if tx.send(run_one(spec, worker, traced)).is_err() {
                             break;
                         }
                     }

@@ -81,19 +81,14 @@ fn build_grid(
 pub fn scale_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Point>, String> {
     let cfgs = build_grid(base, opts)?;
     let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
-    eprintln!(
+    crate::info!(
         "  scale sweep: {} points / {trials} trials (to {} ranks) on {} worker(s)...",
         cfgs.len(),
         cfgs.iter().map(|c| c.ranks).max().unwrap_or(0),
         opts.jobs
     );
     let (points, stats) = run_points(&cfgs, opts.jobs);
-    eprintln!(
-        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
-        stats.wall_s,
-        stats.trials_per_sec(),
-        stats.utilization() * 100.0
-    );
+    super::figures::finish_sweep("scale_compare", opts, &points, &stats);
 
     println!(
         "\n## Large-rank weak scaling ({}): Figure 4 extended past 3072 ranks\n",
@@ -122,7 +117,7 @@ pub fn scale_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Poin
     println!(" degrades with the survivor consensus. See EXPERIMENTS.md §Large-rank scaling)");
 
     if let Err(e) = write_csv("scale_compare", &opts.outdir, &points) {
-        eprintln!("WARN: could not write scale_compare.csv: {e}");
+        crate::warnln!("could not write scale_compare.csv: {e}");
     }
     Ok(points)
 }
@@ -148,6 +143,7 @@ mod tests {
             max_ranks: 16384,
             outdir: "/tmp/reinitpp-test-results".into(),
             jobs: 1,
+            profile: false,
         };
         let cfgs = build_grid(&quick_base(), &opts).unwrap();
         // 4 rank counts x 5 methods + 2 rank counts x {CR, Reinit, Repl, Shrink}
@@ -183,6 +179,7 @@ mod tests {
             max_ranks: 512,
             outdir: outdir.into(),
             jobs,
+            profile: false,
         };
         let serial =
             scale_sweep(&base, &mk(1, "/tmp/reinitpp-test-results/scale-j1")).unwrap();

@@ -101,7 +101,7 @@ fn build_grid(
 pub fn shrink_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Point>, String> {
     let cfgs = build_grid(base, opts)?;
     let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
-    eprintln!(
+    crate::info!(
         "  shrink sweep: {} points / {trials} trials (MTBF {:?} s, min_ranks {}) on {} worker(s)...",
         cfgs.len(),
         presets::STORM_SWEEP_MTBF_S,
@@ -109,12 +109,7 @@ pub fn shrink_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Poi
         opts.jobs
     );
     let (points, stats) = run_points(&cfgs, opts.jobs);
-    eprintln!(
-        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
-        stats.wall_s,
-        stats.trials_per_sec(),
-        stats.utilization() * 100.0
-    );
+    super::figures::finish_sweep("shrink_compare", opts, &points, &stats);
 
     println!(
         "\n## Shrink vs substitute vs CR ({}): continue on survivors\n",
@@ -148,7 +143,7 @@ pub fn shrink_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Poi
     println!(" re-deploy per event — see EXPERIMENTS.md §Shrinking recovery)");
 
     if let Err(e) = write_shrink_csv(&opts.outdir, &points) {
-        eprintln!("WARN: could not write shrink_compare.csv: {e}");
+        crate::warnln!("could not write shrink_compare.csv: {e}");
     }
     Ok(points)
 }
@@ -220,6 +215,7 @@ mod tests {
             max_ranks: 256,
             outdir: "/tmp/reinitpp-test-results".into(),
             jobs: 1,
+            profile: false,
         };
         let cfgs = build_grid(&quick_base(), &opts).unwrap();
         // 3 rungs x 2 failure kinds x 3 families x 3 MTBFs
@@ -262,6 +258,7 @@ mod tests {
             max_ranks: 16,
             outdir: outdir.into(),
             jobs,
+            profile: false,
         };
         let serial =
             shrink_sweep(&base, &mk(1, "/tmp/reinitpp-test-results/shrink-j1")).unwrap();

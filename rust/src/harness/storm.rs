@@ -91,7 +91,7 @@ fn build_grid(
 pub fn storm_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Point>, String> {
     let cfgs = build_grid(base, opts)?;
     let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
-    eprintln!(
+    crate::info!(
         "  storm sweep: {} points / {trials} trials (MTBF {:?} s, <= {} failures/trial) on {} worker(s)...",
         cfgs.len(),
         presets::STORM_SWEEP_MTBF_S,
@@ -99,12 +99,7 @@ pub fn storm_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Poin
         opts.jobs
     );
     let (points, stats) = run_points(&cfgs, opts.jobs);
-    eprintln!(
-        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
-        stats.wall_s,
-        stats.trials_per_sec(),
-        stats.utilization() * 100.0
-    );
+    super::figures::finish_sweep("storm_compare", opts, &points, &stats);
 
     println!(
         "\n## Failure storms ({}): MTBF arrival process, per-event recovery\n",
@@ -138,7 +133,7 @@ pub fn storm_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Poin
     // The generic figure CSV shape is not used here: storm points need the
     // per-event decomposition columns, not the single-failure breakdown.
     if let Err(e) = write_storm_csv(&opts.outdir, &points) {
-        eprintln!("WARN: could not write storm_compare.csv: {e}");
+        crate::warnln!("could not write storm_compare.csv: {e}");
     }
     Ok(points)
 }
@@ -211,6 +206,7 @@ mod tests {
             max_ranks: 256,
             outdir: "/tmp/reinitpp-test-results".into(),
             jobs: 1,
+            profile: false,
         };
         let cfgs = build_grid(&quick_base(), &opts).unwrap();
         // 16 ranks = 1 node at the paper's 16 ranks/node: replication has
@@ -246,6 +242,7 @@ mod tests {
             max_ranks: 16,
             outdir: outdir.into(),
             jobs,
+            profile: false,
         };
         let serial =
             storm_sweep(&base, &mk(1, "/tmp/reinitpp-test-results/storm-j1")).unwrap();

@@ -71,18 +71,13 @@ fn build_grid(
 pub fn tier_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Point>, String> {
     let cfgs = build_grid(base, opts)?;
     let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
-    eprintln!(
+    crate::info!(
         "  tier sweep: {} points / {trials} trials on {} worker(s)...",
         cfgs.len(),
         opts.jobs
     );
     let (points, stats) = run_points(&cfgs, opts.jobs);
-    eprintln!(
-        "  sweep done: {:.2} s wall, {:.1} trials/s, {:.0}% worker utilization",
-        stats.wall_s,
-        stats.trials_per_sec(),
-        stats.utilization() * 100.0
-    );
+    super::figures::finish_sweep("tier_compare", opts, &points, &stats);
 
     println!("\n## Checkpoint tier comparison ({})\n", base.app);
     println!(
@@ -109,7 +104,7 @@ pub fn tier_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Point
     println!(" replicas are node-disjoint — see EXPERIMENTS.md §Checkpoint tiers)");
 
     if let Err(e) = write_tier_csv(&opts.outdir, &points) {
-        eprintln!("WARN: could not write tier_compare.csv: {e}");
+        crate::warnln!("could not write tier_compare.csv: {e}");
     }
     Ok(points)
 }
@@ -171,6 +166,7 @@ mod tests {
             max_ranks: 16,
             outdir: "/tmp/reinitpp-test-results".into(),
             jobs: 1,
+            profile: false,
         };
         let cfgs = build_grid(&quick_base(), &opts).unwrap();
         assert_eq!(cfgs.len(), 6, "3 stacks x 2 failures at one rank count");
@@ -187,6 +183,7 @@ mod tests {
             max_ranks: 16,
             outdir: "/tmp/reinitpp-test-results".into(),
             jobs: 1,
+            profile: false,
         };
         let err = build_grid(&base, &opts).unwrap_err();
         assert!(err.contains("node failure"), "{err}");
@@ -199,6 +196,7 @@ mod tests {
             max_ranks: 16,
             outdir: "/tmp/reinitpp-test-results/tiers".into(),
             jobs: 2,
+            profile: false,
         };
         let pts = tier_sweep(&base, &opts).unwrap();
         assert_eq!(pts.len(), 6);

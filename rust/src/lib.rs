@@ -12,7 +12,9 @@
 //! per-rank compute executes real AOT-compiled XLA artifacts via PJRT.
 //!
 //! Layering (see DESIGN.md):
+//! - `log`        — leveled stderr progress logging (`-v` / `--quiet`)
 //! - `sim`        — deterministic single-threaded virtual-time async executor
+//! - `trace`      — virtual-time tracing/profiling (Perfetto export, profiles)
 //! - `transport`  — message cost model + typed mailbox channels
 //! - `cluster`    — node/daemon/root topology & deployment cost model
 //! - `fs`         — shared-bandwidth parallel-filesystem (Lustre) model
@@ -30,7 +32,9 @@
 //! - `testkit`    — seeded property-testing micro-framework
 //! - `cli`        — argument parsing for the `reinitpp` binary
 
+pub mod log;
 pub mod sim;
+pub mod trace;
 pub mod transport;
 pub mod cluster;
 pub mod fs;

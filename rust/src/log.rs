@@ -1,0 +1,136 @@
+//! Leveled progress logging for the harness and CLI.
+//!
+//! Product output (markdown tables, CSVs) goes to stdout; progress and
+//! diagnostics go to stderr. This module puts the stderr side behind one
+//! process-wide level so `-v`/`--verbose` and `-q`/`--quiet` work uniformly
+//! across every subcommand: sweep heartbeats and "sweep done" throughput
+//! lines print at [`Level::Info`] (the default), extra detail at
+//! [`Level::Verbose`], and `warnln!` always prints (a degrade or a failed
+//! artifact write matters even under `--quiet`).
+//!
+//! The flags are extracted from argv *before* command parsing
+//! ([`extract_flags`] in `main`), so the per-subcommand parsers never see
+//! them and need no per-command plumbing.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Verbosity of stderr progress output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// `--quiet`: product output and warnings only.
+    Quiet = 0,
+    /// Default: progress heartbeats + sweep throughput summaries.
+    Info = 1,
+    /// `-v`: per-step detail (trace/profile file paths, pool internals).
+    Verbose = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the process-wide log level.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Current process-wide log level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Quiet,
+        2 => Level::Verbose,
+        _ => Level::Info,
+    }
+}
+
+/// Would a message at `l` print right now?
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    LEVEL.load(Ordering::Relaxed) >= l as u8
+}
+
+/// Strip the verbosity flags out of `args`, returning the level they select
+/// (`None` = no flag present, keep the default). The last flag wins, like
+/// most CLIs treat repeated `-v`/`-q`.
+pub fn extract_flags(args: &mut Vec<String>) -> Option<Level> {
+    let mut lvl = None;
+    args.retain(|a| match a.as_str() {
+        "-v" | "--verbose" => {
+            lvl = Some(Level::Verbose);
+            false
+        }
+        "-q" | "--quiet" => {
+            lvl = Some(Level::Quiet);
+            false
+        }
+        _ => true,
+    });
+    lvl
+}
+
+/// Progress output (stderr), shown at the default level and above.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::log::enabled($crate::log::Level::Info) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Detail output (stderr), shown only under `-v`.
+#[macro_export]
+macro_rules! vlog {
+    ($($arg:tt)*) => {
+        if $crate::log::enabled($crate::log::Level::Verbose) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Warning output (stderr): always printed, `warning:`-prefixed, so
+/// degrades and failed artifact writes survive `--quiet`.
+#[macro_export]
+macro_rules! warnln {
+    ($($arg:tt)*) => {
+        eprintln!("warning: {}", format_args!($($arg)*));
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn extract_pulls_flags_and_leaves_the_rest() {
+        let mut args = sv(&["storm", "-v", "--max-ranks", "64", "trials=2"]);
+        assert_eq!(extract_flags(&mut args), Some(Level::Verbose));
+        assert_eq!(args, sv(&["storm", "--max-ranks", "64", "trials=2"]));
+
+        let mut args = sv(&["run", "--quiet", "ranks=16"]);
+        assert_eq!(extract_flags(&mut args), Some(Level::Quiet));
+        assert_eq!(args, sv(&["run", "ranks=16"]));
+    }
+
+    #[test]
+    fn extract_without_flags_is_none() {
+        let mut args = sv(&["tiers", "--jobs", "2"]);
+        assert_eq!(extract_flags(&mut args), None);
+        assert_eq!(args.len(), 3);
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let mut args = sv(&["-v", "run", "-q"]);
+        assert_eq!(extract_flags(&mut args), Some(Level::Quiet));
+        assert_eq!(args, sv(&["run"]));
+    }
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Verbose > Level::Info);
+        assert!(Level::Info > Level::Quiet);
+    }
+}

@@ -3,7 +3,12 @@
 use reinitpp::cli;
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // Global verbosity flags are position-independent and stripped before
+    // command parsing (see `reinitpp::log`).
+    if let Some(lvl) = reinitpp::log::extract_flags(&mut args) {
+        reinitpp::log::set_level(lvl);
+    }
     let code = match cli::parse(&args) {
         Ok(cmd) => cli::execute(cmd),
         Err(e) => {

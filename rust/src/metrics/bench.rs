@@ -103,13 +103,15 @@ impl BenchReport {
             f.write_all(self.to_json().as_bytes())
         };
         match write() {
-            Ok(()) => eprintln!("wrote {}", path.display()),
-            Err(e) => eprintln!("WARN: could not write {}: {e}", path.display()),
+            Ok(()) => crate::info!("wrote {}", path.display()),
+            Err(e) => crate::warnln!("could not write {}: {e}", path.display()),
         }
     }
 }
 
-fn json_str(s: &str) -> String {
+/// Escape a string for embedding in hand-rolled JSON (shared with the
+/// trace/profile exporters and sweep-stats writer).
+pub(crate) fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {
@@ -126,7 +128,7 @@ fn json_str(s: &str) -> String {
 }
 
 /// JSON has no NaN/Inf; clamp to null-free sentinels.
-fn json_num(x: f64) -> String {
+pub(crate) fn json_num(x: f64) -> String {
     if x.is_finite() {
         format!("{x}")
     } else {

@@ -1,7 +1,7 @@
 //! Measurement: the paper's per-run time breakdown and its statistics
 //! (mean + 95% confidence intervals from the t-distribution, 10 trials).
 
-mod bench;
+pub(crate) mod bench;
 mod stats;
 
 pub use bench::{BenchReport, BenchRow};
@@ -81,6 +81,26 @@ impl Breakdown {
     pub fn app_s(&self) -> f64 {
         (self.total_s - self.ckpt_write_s - self.ckpt_read_s - self.mpi_recovery_s).max(0.0)
     }
+}
+
+/// One phase window of a finalized failure segment in *absolute* virtual
+/// time — the trace layer's recovery track. Each window's duration is
+/// computed with the same saturating subtraction as the corresponding
+/// [`FailureSegment`] field, so a trace's recovery spans sum to the metric
+/// decomposition exactly (pinned in `tests/trace_determinism.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SegmentWindow {
+    /// Index of the segment (kill order, no-ops included) this phase
+    /// belongs to.
+    pub seg: usize,
+    /// Victim rank of the segment.
+    pub victim: u32,
+    /// Phase name: `detect`, `redeploy`, `failover`, `shrink`, `rollback`.
+    pub name: &'static str,
+    /// Phase start, absolute virtual time.
+    pub begin: SimTime,
+    /// Phase end, absolute virtual time (`>= begin`).
+    pub end: SimTime,
 }
 
 /// Host-side throughput of one sweep (all points × trials): wall-clock,
@@ -449,6 +469,60 @@ impl TrialMetrics {
             .collect()
     }
 
+    /// The per-event phase windows in absolute virtual time, chronological
+    /// within each segment: `detect` (kill → detection), then the recovery
+    /// phase named by how the event was actually absorbed (`failover`,
+    /// `shrink`, or `redeploy` — detection → slowest resume), then
+    /// `rollback` (resume → frontier re-reached; rollback-based recoveries
+    /// only). Interrupted segments contribute their detect window alone;
+    /// no-op segments contribute nothing. Durations match [`Self::segments`]
+    /// field-for-field by construction.
+    pub fn segment_windows(&self) -> Vec<SegmentWindow> {
+        let inner = self.inner.borrow();
+        let mut out = Vec::new();
+        for (i, s) in inner.segs.iter().enumerate() {
+            if s.noop {
+                continue;
+            }
+            if let Some(d) = s.detect_at {
+                out.push(SegmentWindow {
+                    seg: i,
+                    victim: s.victim,
+                    name: "detect",
+                    begin: s.fail_at,
+                    end: d.max(s.fail_at),
+                });
+            }
+            if let Some(r) = s.resume_at {
+                let begin = s.detect_at.unwrap_or(s.fail_at);
+                let name = if s.failover {
+                    "failover"
+                } else if s.shrunk {
+                    "shrink"
+                } else {
+                    "redeploy"
+                };
+                out.push(SegmentWindow {
+                    seg: i,
+                    victim: s.victim,
+                    name,
+                    begin,
+                    end: r.max(begin),
+                });
+                if let (false, Some(e)) = (s.failover, s.rollback_end) {
+                    out.push(SegmentWindow {
+                        seg: i,
+                        victim: s.victim,
+                        name: "rollback",
+                        begin: r,
+                        end: e.max(r),
+                    });
+                }
+            }
+        }
+        out
+    }
+
     /// Number of recorded failure events (fired kills; no-op timeline
     /// events that hit dead air are excluded).
     pub fn failure_count(&self) -> usize {
@@ -767,5 +841,57 @@ mod tests {
         let segs = m.segments();
         assert!((segs[0].detect_s - 0.4).abs() < 1e-9, "{segs:?}");
         assert!((segs[1].detect_s - 0.002).abs() < 1e-9, "{segs:?}");
+    }
+
+    #[test]
+    fn segment_windows_mirror_segment_durations_exactly() {
+        const S: u64 = 1_000_000_000;
+        let m = TrialMetrics::new(2);
+        // rollback-based event with a real rollback tail
+        m.record_iter_done(3, SimTime(S));
+        m.record_failure(SimTime(2 * S), FailureKind::Process, 1);
+        m.record_detect(SimTime(2_100_000_000), FailureKind::Process);
+        m.record_resume(SimTime(2_600_000_000));
+        m.record_iter_done(3, SimTime(2_900_000_000));
+        // failover event: promotion window, no rollback span
+        m.record_failure(SimTime(4 * S), FailureKind::Process, 0);
+        m.record_detect(SimTime(4_010_000_000), FailureKind::Process);
+        m.record_failover();
+        m.record_resume(SimTime(4_300_000_000));
+        // no-op event: contributes no window at all
+        m.record_noop_event(SimTime(4_500_000_000), FailureKind::Process, 1);
+        let segs = m.segments();
+        let windows = m.segment_windows();
+        // exactly: detect+redeploy+rollback for seg 0, detect+failover for seg 1
+        assert_eq!(windows.len(), 5, "{windows:?}");
+        assert!(windows.iter().all(|w| w.seg != 2), "no-ops emit no window");
+        let sum = |seg: usize, name: &str| -> f64 {
+            windows
+                .iter()
+                .filter(|w| w.seg == seg && w.name == name)
+                .map(|w| w.end.saturating_sub(w.begin).secs_f64())
+                .sum()
+        };
+        assert_eq!(sum(0, "detect"), segs[0].detect_s);
+        assert_eq!(sum(0, "redeploy"), segs[0].recovery_s);
+        assert_eq!(sum(0, "rollback"), segs[0].rollback_s);
+        assert_eq!(sum(1, "detect"), segs[1].detect_s);
+        assert_eq!(sum(1, "failover"), segs[1].failover_s);
+        assert_eq!(sum(1, "redeploy") + sum(1, "rollback"), 0.0);
+    }
+
+    #[test]
+    fn interrupted_segment_contributes_detect_window_only() {
+        const S: u64 = 1_000_000_000;
+        let m = TrialMetrics::new(2);
+        m.record_failure(SimTime(S), FailureKind::Process, 0);
+        m.record_detect(SimTime(1_050_000_000), FailureKind::Process);
+        m.record_failure(SimTime(1_200_000_000), FailureKind::Node, 1);
+        m.record_detect(SimTime(1_600_000_000), FailureKind::Node);
+        m.record_resume(SimTime(2 * S));
+        let windows = m.segment_windows();
+        let seg0: Vec<_> = windows.iter().filter(|w| w.seg == 0).collect();
+        assert_eq!(seg0.len(), 1);
+        assert_eq!(seg0[0].name, "detect");
     }
 }

@@ -30,7 +30,10 @@ impl Comm {
     /// clones the `Rc`, never the bytes).
     pub async fn bcast(&self, root: Rank, data: Vec<u8>) -> Result<Payload, MpiError> {
         let tag = self.next_coll_tag();
-        self.bcast_tagged(root, data.into(), tag).await
+        let t0 = self.trace_begin();
+        let out = self.bcast_tagged(root, data.into(), tag).await;
+        self.trace_end("bcast", t0);
+        out
     }
 
     async fn bcast_tagged(
@@ -81,8 +84,11 @@ impl Comm {
         op: ReduceOp,
     ) -> Result<Vec<f32>, MpiError> {
         let tag = self.next_coll_tag();
+        let t0 = self.trace_begin();
         let mut acc = data.to_vec();
-        self.reduce_into(root, &mut acc, op, tag).await?;
+        let r = self.reduce_into(root, &mut acc, op, tag).await;
+        self.trace_end("reduce", t0);
+        r?;
         Ok(acc)
     }
 
@@ -138,6 +144,19 @@ impl Comm {
     pub async fn allreduce(&self, data: &[f32], op: ReduceOp) -> Result<Vec<f32>, MpiError> {
         let rtag = self.next_coll_tag();
         let btag = self.next_coll_tag();
+        let t0 = self.trace_begin();
+        let r = self.allreduce_inner(data, op, rtag, btag).await;
+        self.trace_end("allreduce", t0);
+        r
+    }
+
+    async fn allreduce_inner(
+        &self,
+        data: &[f32],
+        op: ReduceOp,
+        rtag: u64,
+        btag: u64,
+    ) -> Result<Vec<f32>, MpiError> {
         let mut acc = self.coll_acc.take();
         acc.clear();
         acc.extend_from_slice(data);
@@ -159,9 +178,15 @@ impl Comm {
         Ok(self.allreduce(&[x], op).await?[0])
     }
 
-    /// Barrier: empty allreduce (tree down + up).
+    /// Barrier: empty allreduce (tree down + up). Pulls the same two tag
+    /// blocks as `allreduce` but records its own span name.
     pub async fn barrier(&self) -> Result<(), MpiError> {
-        self.allreduce(&[], ReduceOp::Sum).await?;
+        let rtag = self.next_coll_tag();
+        let btag = self.next_coll_tag();
+        let t0 = self.trace_begin();
+        let r = self.allreduce_inner(&[], ReduceOp::Sum, rtag, btag).await;
+        self.trace_end("barrier", t0);
+        r?;
         Ok(())
     }
 }

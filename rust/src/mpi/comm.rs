@@ -194,6 +194,23 @@ impl Comm {
         }
     }
 
+    /// Collective span gate: one tracer-flag load when tracing is off
+    /// (`None` makes the matching [`Comm::trace_end`] a no-op).
+    pub(crate) fn trace_begin(&self) -> Option<crate::sim::SimTime> {
+        let sim = &self.job.inner.sim;
+        sim.tracer().is_on().then(|| sim.now())
+    }
+
+    /// Close a collective span opened by [`Comm::trace_begin`] on this
+    /// rank's trace track. Recording only observes — it never schedules
+    /// events — so virtual time is untouched.
+    pub(crate) fn trace_end(&self, name: &'static str, t0: Option<crate::sim::SimTime>) {
+        if let Some(t0) = t0 {
+            let sim = &self.job.inner.sim;
+            sim.tracer().rank_span("mpi", name, self.rank, t0, sim.now());
+        }
+    }
+
     /// Next collective tag block (all ranks call collectives in the same
     /// order, so sequence numbers agree).
     pub(crate) fn next_coll_tag(&self) -> u64 {
@@ -324,6 +341,7 @@ impl Comm {
             };
             self.check_failures(involves)?;
             if let Some(m) = self.take_unmatched(src, tag) {
+                self.job.inner.sim.tracer().add("mpi.recv_buffered", 1);
                 return Ok(m);
             }
             // Block for the next message (control messages wake us too).
@@ -337,6 +355,7 @@ impl Comm {
                     // arrival is returned directly — the buffer is only for
                     // genuinely out-of-order traffic.
                     if Self::matches(&m, src, tag) {
+                        self.job.inner.sim.tracer().add("mpi.recv_direct", 1);
                         return Ok(m);
                     }
                     self.unmatched.borrow_mut().push(m);

@@ -29,6 +29,7 @@ async fn cr_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
         DetectEvent::NodeDead { .. } => FailureKind::Node,
     };
     ctx.world.metrics.record_detect(ctx.world.sim.now(), kind);
+    ctx.world.trace_mark("detect");
     abort_job(&ctx);
 }
 

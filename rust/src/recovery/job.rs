@@ -63,6 +63,9 @@ pub struct TrialResult {
     pub shrinks: u64,
     /// Checkpoint payload moved by shrink-time redistribution, MB.
     pub redistribute_mb: f64,
+    /// Always-on executor counters + content-addressed trial identity
+    /// (`--profile-json` aggregates these; cheap to collect, traced or not).
+    pub counters: crate::trace::TrialCounters,
 }
 
 /// Per-worker-thread XLA runtime cache. `Rc<XlaRuntime>` cannot cross
@@ -236,6 +239,15 @@ impl TrialWorld {
         Topology::new(self.cfg.ranks, self.cfg.ranks_per_node, self.cfg.spare_nodes)
     }
 
+    /// Drop an instant marker on the recovery timeline (track 0) at the
+    /// current virtual time. One flag load when tracing is off.
+    pub fn trace_mark(&self, name: &'static str) {
+        let tr = self.sim.tracer();
+        if tr.is_on() {
+            tr.instant("recovery", name, 0, self.sim.now());
+        }
+    }
+
     pub fn ft_mode(&self) -> FtMode {
         match self.cfg.recovery {
             RecoveryKind::Cr => FtMode::Cr,
@@ -298,6 +310,7 @@ pub const ABORT: u32 = u32::MAX;
 /// loop for a re-deploy. The caller's own teardown cost is charged by the
 /// trial loop before re-deploying.
 pub fn abort_job(ctx: &JobCtx) {
+    ctx.world.trace_mark("abort");
     for node in 0..ctx.cluster.topo.total_nodes() {
         if ctx.cluster.node_is_alive(node) {
             ctx.cluster.kill_node(node);
@@ -484,6 +497,7 @@ pub async fn rank_user_main(
         // post-rollback re-execution of the same iteration.
         if let Some(ev) = w.faults.should_fire(rank, iter) {
             w.metrics.record_failure(w.sim.now(), ev.kind, rank);
+            w.trace_mark("failure");
             match ev.kind {
                 FailureKind::Process => {
                     w.ckpt.lose_rank(rank);
@@ -597,6 +611,7 @@ fn fire_time_fault(w: &Rc<TrialWorld>, idx: usize) {
     }
     w.faults.mark_fired(idx);
     w.metrics.record_failure(w.sim.now(), ev.kind, ev.rank);
+    w.trace_mark("failure");
     match ev.kind {
         FailureKind::Process => {
             w.ckpt.lose_rank(ev.rank);
@@ -670,16 +685,37 @@ pub async fn trial_driver(w: Rc<TrialWorld>, driver: Rc<dyn RecoveryDriver>) {
     w.metrics.set_job_end(w.sim.now());
 }
 
-/// Run one trial end to end; returns the paper's breakdown + validation data.
+/// Run one trial end to end; returns the paper's breakdown + validation
+/// data. Tracing follows the process-wide destination installed by the CLI
+/// (`trace::global()`); tests wanting a capture pass one explicitly to
+/// [`run_trial_with`].
 pub fn run_trial(
     cfg: &ExperimentConfig,
     trial: u32,
     xla: Option<Rc<XlaRuntime>>,
 ) -> TrialResult {
+    run_trial_with(cfg, trial, xla, crate::trace::global().as_ref())
+}
+
+/// [`run_trial`] with an explicit trace destination. When `trace` is set,
+/// the sim runs with an armed recorder and the trial's capture is written
+/// under `trace.dir` as three files keyed by the trial's identity hash:
+/// `trace_<id>.trace.json` (Perfetto), `trace_<id>.folded` (flamegraph),
+/// and `trace_<id>.profile.json`. Recording is observation-only, so
+/// results are identical with or without it.
+pub fn run_trial_with(
+    cfg: &ExperimentConfig,
+    trial: u32,
+    xla: Option<Rc<XlaRuntime>>,
+    trace: Option<&crate::trace::TraceConfig>,
+) -> TrialResult {
     cfg.validate().expect("invalid experiment config");
     let sim = Sim::new();
     // generous runaway guard (events scale with ranks * iters)
     sim.set_event_limit(200_000_000);
+    if let Some(tc) = trace {
+        sim.trace_install(crate::trace::Recorder::new(cfg.ranks, tc.filter.clone()));
+    }
     let world = TrialWorld::new(&sim, cfg, trial, xla);
 
     let driver_proc = sim.spawn_process("trial-driver");
@@ -709,6 +745,26 @@ pub fn run_trial(
         ),
         None => (0, 0.0, 0.0),
     };
+    let counters = crate::trace::TrialCounters {
+        identity: crate::trace::identity_hash(cfg, trial),
+        end_s: summary.end_time.secs_f64(),
+        events: summary.events,
+        polls: summary.polls,
+        peak_events_pending: summary.peak_events_pending,
+        tasks_completed: summary.tasks_completed,
+    };
+    if let Some(tc) = trace {
+        if let Some(mut rec) = sim.trace_take() {
+            // Synthesize the recovery timeline on track 0 from the metric
+            // segment windows: the spans use the same saturating clock
+            // arithmetic as `TrialMetrics::segments()`, so per-name span
+            // totals sum exactly to the FailureSegment durations.
+            for wd in world.metrics.segment_windows() {
+                rec.span("recovery", wd.name, 0, wd.begin, wd.end);
+            }
+            write_trial_trace(cfg, trial, &counters, &rec, &segments, tc);
+        }
+    }
     TrialResult {
         breakdown,
         digests,
@@ -723,5 +779,44 @@ pub fn run_trial(
         failovers,
         mirror_s,
         mirror_mb,
+        counters,
     }
+}
+
+/// Write one trial's trace artifacts under `tc.dir` (best-effort: export
+/// failures warn instead of sinking the trial's results).
+fn write_trial_trace(
+    cfg: &ExperimentConfig,
+    trial: u32,
+    counters: &crate::trace::TrialCounters,
+    rec: &crate::trace::Recorder,
+    segments: &[FailureSegment],
+    tc: &crate::trace::TraceConfig,
+) {
+    let dir = std::path::Path::new(&tc.dir);
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        crate::warnln!("cannot create trace dir {}: {e}", tc.dir);
+        return;
+    }
+    let id = format!("{:016x}", counters.identity);
+    let label = format!("{:?}/{}/{}", cfg.app, cfg.recovery, cfg.ranks);
+    let profile = crate::trace::TrialProfile::new(
+        label,
+        trial,
+        *counters,
+        rec,
+        segments.to_vec(),
+    );
+    let attempts = [
+        crate::trace::chrome::write(dir.join(format!("trace_{id}.trace.json")), rec),
+        crate::trace::folded::write(dir.join(format!("trace_{id}.folded")), rec),
+        profile.write(dir.join(format!("trace_{id}.profile.json"))),
+    ];
+    for a in attempts {
+        if let Err(e) = a {
+            crate::warnln!("trace export failed under {}: {e}", tc.dir);
+            return;
+        }
+    }
+    crate::vlog!("trace: wrote trace_{id}.{{trace.json,folded,profile.json}}");
 }

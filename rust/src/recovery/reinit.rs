@@ -75,6 +75,7 @@ pub async fn reinit_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                 }
                 w.metrics
                     .record_detect(w.sim.now(), crate::config::FailureKind::Process);
+                w.trace_mark("detect");
                 // process failure: re-spawn on the original node (§3.2)
                 vec![(rank, ctx.cluster.rank_slot(rank).node)]
             }
@@ -89,12 +90,14 @@ pub async fn reinit_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                 }
                 w.metrics
                     .record_detect(w.sim.now(), crate::config::FailureKind::Node);
+                w.trace_mark("detect");
                 // Spare pool outrun: no in-place target left. Degrade to a
                 // CR-style full re-deploy (paper §3.2 requires
                 // over-provisioning precisely because Reinit++ has no other
                 // answer once spares are gone).
                 if ctx.spares_exhausted() {
                     w.metrics.record_degrade(crate::config::FailureKind::Node);
+                    w.trace_mark("degrade");
                     abort_job(&ctx);
                     return;
                 }

@@ -216,6 +216,7 @@ pub async fn repl_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                     continue; // stale notification (already promoted)
                 }
                 w.metrics.record_detect(w.sim.now(), FailureKind::Process);
+                w.trace_mark("detect");
                 (FailureKind::Process, vec![rank])
             }
             DetectEvent::NodeDead { node, .. } => {
@@ -231,6 +232,7 @@ pub async fn repl_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                     continue;
                 }
                 w.metrics.record_detect(w.sim.now(), FailureKind::Node);
+                w.trace_mark("detect");
                 (FailureKind::Node, failed)
             }
         };
@@ -248,10 +250,12 @@ pub async fn repl_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
             // CR-style full re-deploy, restarting from file checkpoints (or
             // iteration 0 if none completed yet).
             w.metrics.record_degrade(kind);
+            w.trace_mark("degrade");
             abort_job(&ctx);
             return;
         }
         w.metrics.record_failover();
+        w.trace_mark("failover");
         repl.record_failover();
 
         // Broadcast <PROMOTE, list> down the root->daemon control tree.

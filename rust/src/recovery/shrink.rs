@@ -49,6 +49,7 @@ pub async fn shrink_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                     continue; // stale notification (already adopted)
                 }
                 w.metrics.record_detect(w.sim.now(), FailureKind::Process);
+                w.trace_mark("detect");
                 (FailureKind::Process, vec![rank])
             }
             DetectEvent::NodeDead { node, .. } => {
@@ -61,6 +62,7 @@ pub async fn shrink_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                     continue;
                 }
                 w.metrics.record_detect(w.sim.now(), FailureKind::Node);
+                w.trace_mark("detect");
                 (FailureKind::Node, failed)
             }
         };
@@ -74,10 +76,12 @@ pub async fn shrink_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
             || ctx.cluster.least_loaded_alive_compute_node().is_none()
         {
             w.metrics.record_degrade(kind);
+            w.trace_mark("degrade");
             abort_job(&ctx);
             return;
         }
         w.metrics.record_shrink();
+        w.trace_mark("shrink");
         w.shrinks.set(w.shrinks.get() + 1);
 
         // Broadcast <SHRINK, adoption list> down the root->daemon tree.
@@ -106,6 +110,7 @@ pub async fn shrink_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
         }
         if !adopted {
             w.metrics.record_degrade(kind);
+            w.trace_mark("degrade");
             abort_job(&ctx);
             return;
         }

@@ -123,6 +123,7 @@ async fn ulfm_notifier(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                 if !ctx.cluster.rank_is_alive(rank) {
                     w.metrics
                         .record_detect(w.sim.now(), crate::config::FailureKind::Process);
+                    w.trace_mark("detect");
                     ctx.mpi.notify_failure(rank, hb);
                 }
             }
@@ -137,10 +138,12 @@ async fn ulfm_notifier(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                 }
                 w.metrics
                     .record_detect(w.sim.now(), crate::config::FailureKind::Node);
+                w.trace_mark("detect");
                 // Spare pool outrun: degrade to a CR-style full re-deploy
                 // (recorded on the event's metric segment).
                 if ctx.spares_exhausted() {
                     w.metrics.record_degrade(crate::config::FailureKind::Node);
+                    w.trace_mark("degrade");
                     abort_job(&ctx);
                     return;
                 }

@@ -44,6 +44,7 @@ use std::task::{Context, Poll, RawWaker, RawWakerVTable, Waker};
 
 use super::proc::{ProcEntry, ProcId, ProcName, ProcStatus, NIL};
 use super::time::{SimDuration, SimTime};
+use crate::trace::{Recorder, Tracer};
 
 /// Identifier of a spawned task: `(slot index << 32) | generation`.
 pub type TaskId = u64;
@@ -430,6 +431,10 @@ pub struct Sim {
     /// External wake ring: wakers push here (never into `inner`, which may
     /// be borrowed when a waker fires, e.g. watchers woken inside `kill`).
     wakes: Rc<RefCell<VecDeque<TaskId>>>,
+    /// Trace slot (`crate::trace`): disabled by default; every
+    /// instrumentation site pays one flag load when off. Kept outside
+    /// `inner` so recording is legal while `inner` is borrowed.
+    tracer: Rc<Tracer>,
 }
 
 impl Default for Sim {
@@ -457,12 +462,31 @@ impl Sim {
                 event_limit: u64::MAX,
             })),
             wakes: Rc::new(RefCell::new(VecDeque::new())),
+            tracer: Rc::new(Tracer::new()),
         }
     }
 
     /// Guard against runaway simulations (default: unlimited).
     pub fn set_event_limit(&self, limit: u64) {
         self.inner.borrow_mut().event_limit = limit;
+    }
+
+    /// The trace slot of this simulation. Recording is observation only —
+    /// it never schedules events or advances the clock, so enabling it
+    /// leaves virtual-time behavior byte-identical (pinned by tests).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Arm tracing with `rec`.
+    pub fn trace_install(&self, rec: Recorder) {
+        self.tracer.install(rec);
+    }
+
+    /// Disarm tracing and take the recorder for export (None if tracing
+    /// was never armed).
+    pub fn trace_take(&self) -> Option<Recorder> {
+        self.tracer.take()
     }
 
     pub fn now(&self) -> SimTime {
@@ -710,6 +734,7 @@ impl Sim {
                 }
             }
             if !scratch.is_empty() {
+                self.tracer.add("exec.task_wakes", scratch.len() as u64);
                 let mut inner = self.inner.borrow_mut();
                 for tid in scratch.drain(..) {
                     let queue = match inner.slots.get_mut(slot_of(tid)) {
@@ -746,6 +771,16 @@ impl Sim {
                             debug_assert!(e.time >= inner.now);
                             inner.now = e.time;
                             inner.events_fired += 1;
+                            // Periodic executor-load samples (tracing only;
+                            // the tracer lives outside `inner`, so recording
+                            // under this borrow is fine).
+                            if self.tracer.is_on() && inner.events_fired % 4096 == 0 {
+                                let at = inner.now;
+                                let pending = inner.events.len() as u64;
+                                let polls = inner.polls;
+                                self.tracer.counter("exec", "events_pending", at, pending);
+                                self.tracer.counter("exec", "polls", at, polls);
+                            }
                             Step::Fire(e.event)
                         }
                     }
@@ -753,10 +788,19 @@ impl Sim {
             };
             match step {
                 Step::Exit(reason) => return self.summary(reason),
-                Step::Fire(Event::Wake(w)) => w.wake(),
+                Step::Fire(Event::Wake(w)) => {
+                    self.tracer.add("exec.wake_events", 1);
+                    w.wake()
+                }
                 Step::Fire(Event::Run(f)) => f(), // runs without the borrow held
-                Step::Fire(Event::Deliver(t, slot)) => t.deliver(slot),
-                Step::Fire(Event::Timer(t, token)) => t.timer(token),
+                Step::Fire(Event::Deliver(t, slot)) => {
+                    self.tracer.add("exec.deliveries", 1);
+                    t.deliver(slot)
+                }
+                Step::Fire(Event::Timer(t, token)) => {
+                    self.tracer.add("exec.timer_fires", 1);
+                    t.timer(token)
+                }
             }
         }
     }
@@ -1269,5 +1313,38 @@ mod tests {
             (s.events, s.polls, s.end_time)
         }
         assert_eq!(trace(), trace());
+    }
+
+    #[test]
+    fn tracing_is_observation_only() {
+        // Arming the recorder must leave the executor's behavior
+        // byte-identical: same events, polls, end time, peak pending.
+        fn workload(traced: bool) -> (SimSummary, Option<crate::trace::Recorder>) {
+            let sim = Sim::new();
+            if traced {
+                sim.trace_install(crate::trace::Recorder::new(1, None));
+            }
+            let p = sim.spawn_process("p");
+            for i in 0..20u64 {
+                let s2 = sim.clone();
+                sim.spawn(p, async move {
+                    s2.sleep(SimDuration::from_micros(i * 7 % 13)).await;
+                    s2.sleep(SimDuration::from_micros(i)).await;
+                });
+            }
+            let s = sim.run();
+            let rec = sim.trace_take();
+            (s, rec)
+        }
+        let (off, no_rec) = workload(false);
+        let (on, rec) = workload(true);
+        assert!(no_rec.is_none());
+        assert_eq!((off.events, off.polls, off.end_time), (on.events, on.polls, on.end_time));
+        assert_eq!(off.peak_events_pending, on.peak_events_pending);
+        assert_eq!(off.tasks_completed, on.tasks_completed);
+        let rec = rec.expect("armed recorder comes back");
+        let c = rec.counters();
+        assert!(c.get("exec.wake_events").copied().unwrap_or(0) > 0);
+        assert!(c.get("exec.task_wakes").copied().unwrap_or(0) > 0);
     }
 }

@@ -1,0 +1,253 @@
+//! Chrome trace-event JSON exporter (Perfetto-loadable).
+//!
+//! Renders a [`Recorder`](super::Recorder) as the legacy trace-event array
+//! format that both `chrome://tracing` and <https://ui.perfetto.dev> load:
+//! `"X"` complete events for spans, `"i"` instants, `"C"` counters, and
+//! `"M"` metadata naming processes and threads. Virtual time maps onto the
+//! trace `ts` axis (µs); host wall time rides along in `args.wall_us`.
+//!
+//! Track layout: pid 1 is the simulated trial — tid 0 the recovery
+//! timeline, tids 1.. one per rank group. Pool-worker activity (host wall
+//! time) is a separate file on pid 2 with one tid per worker, written by
+//! [`write_pool`].
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::metrics::bench::{json_num, json_str};
+
+use super::{Ev, PoolEvent, PoolSample, Recorder};
+
+/// pid of the simulated-trial tracks (virtual time).
+const PID_SIM: u32 = 1;
+/// pid of the pool-worker tracks (host wall time).
+const PID_POOL: u32 = 2;
+
+fn meta_process(out: &mut String, pid: u32, name: &str) {
+    out.push_str(&format!(
+        "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"name\":\"process_name\",\
+         \"args\":{{\"name\":{}}}}}",
+        json_str(name)
+    ));
+}
+
+fn meta_thread(out: &mut String, pid: u32, tid: u32, name: &str) {
+    out.push_str(&format!(
+        "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\
+         \"args\":{{\"name\":{}}}}}",
+        json_str(name)
+    ));
+}
+
+/// Virtual nanoseconds → trace-axis microseconds.
+fn vt_us(ns: u64) -> f64 {
+    ns as f64 / 1e3
+}
+
+/// Render one recorder as a trace-event JSON string.
+pub fn render(rec: &Recorder) -> String {
+    let mut items: Vec<String> = Vec::with_capacity(rec.len() + 16);
+
+    let mut s = String::new();
+    meta_process(&mut s, PID_SIM, "reinitpp sim (virtual time)");
+    items.push(std::mem::take(&mut s));
+    for (tid, name) in rec.track_names() {
+        meta_thread(&mut s, PID_SIM, tid, &name);
+        items.push(std::mem::take(&mut s));
+    }
+
+    for ev in &rec.events {
+        let item = match *ev {
+            Ev::Span {
+                cat,
+                name,
+                track,
+                begin_ns,
+                dur_ns,
+                wall_us,
+            } => format!(
+                "{{\"ph\":\"X\",\"pid\":{PID_SIM},\"tid\":{track},\
+                 \"cat\":{},\"name\":{},\"ts\":{},\"dur\":{},\
+                 \"args\":{{\"wall_us\":{}}}}}",
+                json_str(cat),
+                json_str(name),
+                json_num(vt_us(begin_ns)),
+                json_num(vt_us(dur_ns)),
+                json_num(wall_us)
+            ),
+            Ev::Instant {
+                cat,
+                name,
+                track,
+                at_ns,
+                wall_us,
+            } => format!(
+                "{{\"ph\":\"i\",\"pid\":{PID_SIM},\"tid\":{track},\
+                 \"cat\":{},\"name\":{},\"ts\":{},\"s\":\"t\",\
+                 \"args\":{{\"wall_us\":{}}}}}",
+                json_str(cat),
+                json_str(name),
+                json_num(vt_us(at_ns)),
+                json_num(wall_us)
+            ),
+            Ev::Counter {
+                cat,
+                name,
+                at_ns,
+                value,
+            } => format!(
+                "{{\"ph\":\"C\",\"pid\":{PID_SIM},\"tid\":0,\
+                 \"cat\":{},\"name\":{},\"ts\":{},\
+                 \"args\":{{\"value\":{value}}}}}",
+                json_str(cat),
+                json_str(name),
+                json_num(vt_us(at_ns))
+            ),
+        };
+        items.push(item);
+    }
+
+    let mut counters = String::from("{");
+    for (i, (k, v)) in rec.counters().iter().enumerate() {
+        if i > 0 {
+            counters.push(',');
+        }
+        counters.push_str(&format!("{}:{v}", json_str(k)));
+    }
+    counters.push('}');
+
+    format!(
+        "{{\"traceEvents\":[\n{}\n],\n\"displayTimeUnit\":\"ms\",\n\
+         \"otherData\":{{\"clock\":\"virtual\",\"dropped_events\":{},\
+         \"counters\":{counters}}}}}\n",
+        items.join(",\n"),
+        rec.dropped()
+    )
+}
+
+/// Write a recorder's trace to `path`.
+pub fn write(path: impl AsRef<Path>, rec: &Recorder) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(render(rec).as_bytes())?;
+    w.flush()
+}
+
+/// Render the pool-worker timeline (host wall time, µs from the process
+/// epoch) as its own trace-event JSON.
+pub fn render_pool(events: &[PoolEvent], samples: &[PoolSample]) -> String {
+    let mut items: Vec<String> = Vec::with_capacity(events.len() + samples.len() + 8);
+
+    let mut s = String::new();
+    meta_process(&mut s, PID_POOL, "reinitpp pool (wall time)");
+    items.push(std::mem::take(&mut s));
+    let mut workers: Vec<usize> = events.iter().map(|e| e.worker).collect();
+    workers.sort_unstable();
+    workers.dedup();
+    for w in &workers {
+        meta_thread(&mut s, PID_POOL, *w as u32, &format!("worker {w}"));
+        items.push(std::mem::take(&mut s));
+    }
+
+    for e in events {
+        items.push(format!(
+            "{{\"ph\":\"X\",\"pid\":{PID_POOL},\"tid\":{},\
+             \"cat\":\"pool\",\"name\":{},\"ts\":{},\"dur\":{},\
+             \"args\":{{\"point\":{},\"trial\":{}}}}}",
+            e.worker,
+            json_str(&format!("p{}t{}", e.point, e.trial)),
+            json_num(e.begin_us),
+            json_num(e.dur_us),
+            e.point,
+            e.trial
+        ));
+    }
+    for c in samples {
+        items.push(format!(
+            "{{\"ph\":\"C\",\"pid\":{PID_POOL},\"tid\":0,\
+             \"cat\":\"pool\",\"name\":{},\"ts\":{},\
+             \"args\":{{\"value\":{}}}}}",
+            json_str(c.name),
+            json_num(c.at_us),
+            c.value
+        ));
+    }
+
+    format!(
+        "{{\"traceEvents\":[\n{}\n],\n\"displayTimeUnit\":\"ms\",\n\
+         \"otherData\":{{\"clock\":\"wall\"}}}}\n",
+        items.join(",\n")
+    )
+}
+
+/// Write the pool-worker timeline to `path`.
+pub fn write_pool(
+    path: impl AsRef<Path>,
+    events: &[PoolEvent],
+    samples: &[PoolSample],
+) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(render_pool(events, samples).as_bytes())?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Tracer;
+    use super::*;
+    use crate::sim::SimTime;
+
+    #[test]
+    fn render_emits_balanced_trace_event_json() {
+        let tr = Tracer::new();
+        tr.install(Recorder::new(4, None));
+        tr.span("mpi", "allreduce", 1, SimTime(1_000), SimTime(3_000));
+        tr.instant("recovery", "abort", 0, SimTime(2_000));
+        tr.counter("exec", "events_pending", SimTime(2_500), 17);
+        tr.add("mpi.recv_direct", 3);
+        let rec = tr.take().unwrap();
+        let j = render(&rec);
+        assert!(j.starts_with("{\"traceEvents\":["));
+        assert!(j.contains("\"ph\":\"X\""));
+        assert!(j.contains("\"ph\":\"i\""));
+        assert!(j.contains("\"ph\":\"C\""));
+        assert!(j.contains("\"process_name\""));
+        assert!(j.contains("\"name\":\"allreduce\""));
+        assert!(j.contains("\"mpi.recv_direct\":3"));
+        assert!(j.contains("\"dropped_events\":0"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn span_timestamps_are_microseconds_of_virtual_time() {
+        let tr = Tracer::new();
+        tr.install(Recorder::new(1, None));
+        tr.span("ckpt", "save", 1, SimTime(2_000_000), SimTime(5_000_000));
+        let j = render(&tr.take().unwrap());
+        assert!(j.contains("\"ts\":2000"), "{j}");
+        assert!(j.contains("\"dur\":3000"), "{j}");
+    }
+
+    #[test]
+    fn pool_render_names_workers() {
+        let ev = vec![PoolEvent {
+            worker: 2,
+            point: 0,
+            trial: 1,
+            begin_us: 10.0,
+            dur_us: 5.0,
+        }];
+        let smp = vec![PoolSample {
+            name: "queue_depth",
+            at_us: 12.0,
+            value: 7,
+        }];
+        let j = render_pool(&ev, &smp);
+        assert!(j.contains("\"worker 2\""));
+        assert!(j.contains("\"p0t1\""));
+        assert!(j.contains("\"queue_depth\""));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+}

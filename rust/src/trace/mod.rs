@@ -1,0 +1,567 @@
+//! Virtual-time tracing & profiling layer.
+//!
+//! A lightweight [`Recorder`] collects ring-buffered span, instant and
+//! counter events carrying *both* clocks — the DES virtual clock
+//! ([`SimTime`], nanoseconds) and host wall time (microseconds since the
+//! process epoch) — threaded through the executor, MPI collectives and
+//! recv matching, the checkpoint store, all five recovery drivers, and the
+//! sweep worker pool. Exporters render it as Chrome trace-event JSON
+//! (loadable in Perfetto, [`chrome`]), folded stacks for flamegraphs
+//! ([`folded`]), and a machine-readable per-trial [`TrialProfile`] snapshot
+//! ([`profile`]).
+//!
+//! Design constraints (EXPERIMENTS.md §Observability):
+//!
+//! - **Zero cost when off.** Every `Sim` owns a [`Tracer`] whose hot-path
+//!   check is a single `Cell<bool>` load; the disabled path performs no
+//!   allocation (span/counter names are `&'static str`) and is pinned by
+//!   the alloc test. Instrumentation sites read the virtual clock *only
+//!   after* checking the flag.
+//! - **Observation only.** Recording never schedules events or awaits, so
+//!   virtual-time behavior, figure CSVs, golden traces and digests are
+//!   byte-identical with tracing on, off, or absent
+//!   (`tests/trace_determinism.rs` + a CI cmp enforce this).
+//! - **Bounded memory.** The ring drops the *oldest* events past capacity
+//!   and counts the drops; monotonic counters and span totals are exact
+//!   regardless of drops.
+
+pub mod chrome;
+pub mod folded;
+pub mod profile;
+
+pub use profile::{identity_hash, TrialCounters, TrialProfile};
+
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Mutex, OnceLock, RwLock};
+use std::time::Instant;
+
+use crate::sim::SimTime;
+
+/// Ring capacity default: ~262k events (~16 MB); oldest dropped beyond it.
+const DEFAULT_CAP: usize = 1 << 18;
+
+/// Simulated ranks are folded onto at most this many rank-group tracks so a
+/// 16k-rank trace still renders as a handful of Perfetto rows.
+const MAX_RANK_TRACKS: u32 = 8;
+
+/// Known span categories, in display order — the `--trace-filter` universe.
+pub const CATEGORIES: [&str; 5] = ["exec", "mpi", "ckpt", "recovery", "pool"];
+
+/// Process-wide trace destination, installed once by the CLI before any
+/// trial runs. Tests pass a config explicitly to `run_trial_with` instead
+/// of touching this, so parallel test threads cannot race on it (the one
+/// exception, the CSV-determinism test, is the only global-touching test
+/// in its binary and restores `None` before asserting).
+#[derive(Clone, Debug, Default)]
+pub struct TraceConfig {
+    /// Output directory; per-trial artifacts are written under it.
+    pub dir: String,
+    /// `--trace-filter`: only record these categories (`None` = all).
+    pub filter: Option<Vec<String>>,
+}
+
+fn global_slot() -> &'static RwLock<Option<TraceConfig>> {
+    static G: OnceLock<RwLock<Option<TraceConfig>>> = OnceLock::new();
+    G.get_or_init(|| RwLock::new(None))
+}
+
+/// Install (or clear) the process-wide trace destination.
+pub fn set_global(cfg: Option<TraceConfig>) {
+    *global_slot().write().unwrap() = cfg;
+}
+
+/// The process-wide trace destination, if any.
+pub fn global() -> Option<TraceConfig> {
+    global_slot().read().unwrap().clone()
+}
+
+/// Shared wall-clock epoch for every recorder and pool event in the
+/// process, so the sim tracks and the pool tracks line up in one timeline.
+fn process_epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+/// Microseconds of host wall time since the process epoch.
+pub fn wall_us() -> f64 {
+    process_epoch().elapsed().as_secs_f64() * 1e6
+}
+
+/// One recorded event. Virtual timestamps are nanoseconds of [`SimTime`];
+/// wall timestamps are µs from the process epoch.
+#[derive(Clone, Debug)]
+pub(crate) enum Ev {
+    /// A closed interval on a track ("X" in trace-event JSON).
+    Span {
+        cat: &'static str,
+        name: &'static str,
+        track: u32,
+        begin_ns: u64,
+        dur_ns: u64,
+        wall_us: f64,
+    },
+    /// A point-in-time marker ("i").
+    Instant {
+        cat: &'static str,
+        name: &'static str,
+        track: u32,
+        at_ns: u64,
+        wall_us: f64,
+    },
+    /// A sampled counter value ("C").
+    Counter {
+        cat: &'static str,
+        name: &'static str,
+        at_ns: u64,
+        value: u64,
+    },
+}
+
+/// Aggregated per-(category, name) span statistics, exact even when the
+/// ring dropped events.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanTotal {
+    /// Span category (one of [`CATEGORIES`]).
+    pub cat: &'static str,
+    /// Span name.
+    pub name: &'static str,
+    /// Number of spans recorded.
+    pub count: u64,
+    /// Total virtual-time duration, nanoseconds.
+    pub total_ns: u64,
+}
+
+/// Ring-buffered trace collector for one trial.
+#[derive(Debug)]
+pub struct Recorder {
+    cap: usize,
+    events: VecDeque<Ev>,
+    dropped: u64,
+    /// Monotonic named counters (recv match kinds, wake/timer tallies…).
+    counters: BTreeMap<&'static str, u64>,
+    /// Exact span totals, immune to ring drops.
+    totals: BTreeMap<(&'static str, &'static str), (u64, u64)>,
+    filter: Option<Vec<String>>,
+    ranks: u32,
+    /// Ranks folded per rank-group track (track = 1 + rank / group).
+    group: u32,
+}
+
+impl Recorder {
+    /// A recorder for a trial of `ranks` simulated ranks, recording only
+    /// the categories in `filter` (`None` = all).
+    pub fn new(ranks: u32, filter: Option<Vec<String>>) -> Recorder {
+        Recorder::with_capacity(ranks, filter, DEFAULT_CAP)
+    }
+
+    /// [`Recorder::new`] with an explicit ring capacity (tests).
+    pub fn with_capacity(ranks: u32, filter: Option<Vec<String>>, cap: usize) -> Recorder {
+        let group = ranks.div_ceil(MAX_RANK_TRACKS).max(1);
+        Recorder {
+            cap: cap.max(1),
+            events: VecDeque::new(),
+            dropped: 0,
+            counters: BTreeMap::new(),
+            totals: BTreeMap::new(),
+            filter,
+            ranks,
+            group,
+        }
+    }
+
+    #[inline]
+    fn wants(&self, cat: &str) -> bool {
+        match &self.filter {
+            None => true,
+            Some(f) => f.iter().any(|s| s == cat),
+        }
+    }
+
+    fn push(&mut self, ev: Ev) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    /// The rank-group track a simulated rank renders on (track 0 is the
+    /// recovery timeline).
+    pub fn track_for_rank(&self, rank: u32) -> u32 {
+        1 + rank / self.group
+    }
+
+    /// Record a closed span `[begin, end]` of virtual time.
+    pub(crate) fn span(
+        &mut self,
+        cat: &'static str,
+        name: &'static str,
+        track: u32,
+        begin: SimTime,
+        end: SimTime,
+    ) {
+        if !self.wants(cat) {
+            return;
+        }
+        let begin_ns = begin.nanos();
+        let dur_ns = end.nanos().saturating_sub(begin_ns);
+        let t = self.totals.entry((cat, name)).or_insert((0, 0));
+        t.0 += 1;
+        t.1 += dur_ns;
+        self.push(Ev::Span {
+            cat,
+            name,
+            track,
+            begin_ns,
+            dur_ns,
+            wall_us: wall_us(),
+        });
+    }
+
+    /// Record a point-in-time marker.
+    pub(crate) fn instant(&mut self, cat: &'static str, name: &'static str, track: u32, at: SimTime) {
+        if !self.wants(cat) {
+            return;
+        }
+        self.push(Ev::Instant {
+            cat,
+            name,
+            track,
+            at_ns: at.nanos(),
+            wall_us: wall_us(),
+        });
+    }
+
+    /// Record a sampled counter value at a virtual timestamp.
+    pub(crate) fn counter(&mut self, cat: &'static str, name: &'static str, at: SimTime, value: u64) {
+        if !self.wants(cat) {
+            return;
+        }
+        self.push(Ev::Counter {
+            cat,
+            name,
+            at_ns: at.nanos(),
+            value,
+        });
+    }
+
+    /// Bump a monotonic named counter (no timestamp, never dropped).
+    pub(crate) fn add(&mut self, key: &'static str, delta: u64) {
+        *self.counters.entry(key).or_insert(0) += delta;
+    }
+
+    /// Events currently buffered.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing has been buffered.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted from the ring.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Monotonic named counters.
+    pub fn counters(&self) -> &BTreeMap<&'static str, u64> {
+        &self.counters
+    }
+
+    /// Exact per-(category, name) span statistics, sorted by key.
+    pub fn span_totals(&self) -> Vec<SpanTotal> {
+        self.totals
+            .iter()
+            .map(|(&(cat, name), &(count, total_ns))| SpanTotal {
+                cat,
+                name,
+                count,
+                total_ns,
+            })
+            .collect()
+    }
+
+    /// Total virtual nanoseconds of spans named `name` under `cat` (0 when
+    /// none) — the determinism tests compare these to segment metrics.
+    pub fn span_total_ns(&self, cat: &str, name: &str) -> u64 {
+        self.totals
+            .iter()
+            .filter(|&(&(c, n), _)| c == cat && n == name)
+            .map(|(_, &(_, ns))| ns)
+            .sum()
+    }
+
+    /// Track-id → display-name table for the exporters: track 0 is the
+    /// recovery timeline, then one track per rank group.
+    pub(crate) fn track_names(&self) -> Vec<(u32, String)> {
+        let mut out = vec![(0, "recovery".to_string())];
+        if self.ranks > 0 {
+            let tracks = self.ranks.div_ceil(self.group);
+            for t in 0..tracks {
+                let lo = t * self.group;
+                let hi = ((t + 1) * self.group).min(self.ranks) - 1;
+                let name = if lo == hi {
+                    format!("rank {lo}")
+                } else {
+                    format!("ranks {lo}-{hi}")
+                };
+                out.push((1 + t, name));
+            }
+        }
+        out
+    }
+}
+
+/// The `Sim`'s always-present trace slot. Disabled cost: one `Cell<bool>`
+/// load per site, no allocation, no `RefCell` borrow.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    on: Cell<bool>,
+    rec: RefCell<Option<Recorder>>,
+}
+
+impl Tracer {
+    /// A disabled tracer (the default state of every `Sim`).
+    pub fn new() -> Tracer {
+        Tracer::default()
+    }
+
+    /// Arm the tracer with a recorder.
+    pub fn install(&self, rec: Recorder) {
+        *self.rec.borrow_mut() = Some(rec);
+        self.on.set(true);
+    }
+
+    /// Disarm and take the recorder (if any) for export.
+    pub fn take(&self) -> Option<Recorder> {
+        self.on.set(false);
+        self.rec.borrow_mut().take()
+    }
+
+    /// Hot-path gate: is recording active?
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        self.on.get()
+    }
+
+    /// Record a span on an explicit track.
+    #[inline]
+    pub fn span(&self, cat: &'static str, name: &'static str, track: u32, begin: SimTime, end: SimTime) {
+        if !self.on.get() {
+            return;
+        }
+        if let Some(r) = self.rec.borrow_mut().as_mut() {
+            r.span(cat, name, track, begin, end);
+        }
+    }
+
+    /// Record a span on the rank-group track of `rank`.
+    #[inline]
+    pub fn rank_span(&self, cat: &'static str, name: &'static str, rank: u32, begin: SimTime, end: SimTime) {
+        if !self.on.get() {
+            return;
+        }
+        if let Some(r) = self.rec.borrow_mut().as_mut() {
+            let track = r.track_for_rank(rank);
+            r.span(cat, name, track, begin, end);
+        }
+    }
+
+    /// Record an instant marker on an explicit track.
+    #[inline]
+    pub fn instant(&self, cat: &'static str, name: &'static str, track: u32, at: SimTime) {
+        if !self.on.get() {
+            return;
+        }
+        if let Some(r) = self.rec.borrow_mut().as_mut() {
+            r.instant(cat, name, track, at);
+        }
+    }
+
+    /// Record a sampled counter value.
+    #[inline]
+    pub fn counter(&self, cat: &'static str, name: &'static str, at: SimTime, value: u64) {
+        if !self.on.get() {
+            return;
+        }
+        if let Some(r) = self.rec.borrow_mut().as_mut() {
+            r.counter(cat, name, at, value);
+        }
+    }
+
+    /// Bump a monotonic named counter.
+    #[inline]
+    pub fn add(&self, key: &'static str, delta: u64) {
+        if !self.on.get() {
+            return;
+        }
+        if let Some(r) = self.rec.borrow_mut().as_mut() {
+            r.add(key, delta);
+        }
+    }
+}
+
+/// One pool-worker trial execution, in host wall time (µs from the
+/// process epoch). Collected across OS threads, so this side of the layer
+/// is mutex-buffered rather than `Cell`-gated.
+#[derive(Clone, Debug)]
+pub struct PoolEvent {
+    /// Worker index (0 = the serial path).
+    pub worker: usize,
+    /// Sweep point index of the trial.
+    pub point: usize,
+    /// Trial number within the point.
+    pub trial: u32,
+    /// Start, µs from the process epoch.
+    pub begin_us: f64,
+    /// Duration, µs.
+    pub dur_us: f64,
+}
+
+/// A sampled pool-wide counter (injector queue depth) in host wall time.
+#[derive(Clone, Debug)]
+pub struct PoolSample {
+    /// Counter name.
+    pub name: &'static str,
+    /// Sample time, µs from the process epoch.
+    pub at_us: f64,
+    /// Sampled value.
+    pub value: u64,
+}
+
+#[derive(Default)]
+struct PoolSink {
+    events: Vec<PoolEvent>,
+    samples: Vec<PoolSample>,
+}
+
+fn pool_sink() -> &'static Mutex<PoolSink> {
+    static S: OnceLock<Mutex<PoolSink>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(PoolSink::default()))
+}
+
+/// Should the pool record its events? (Checked once per sweep.)
+pub fn pool_trace_enabled() -> bool {
+    global_slot().read().unwrap().is_some()
+}
+
+/// Record one worker-trial execution.
+pub fn pool_record_trial(worker: usize, point: usize, trial: u32, begin_us: f64, dur_us: f64) {
+    pool_sink().lock().unwrap().events.push(PoolEvent {
+        worker,
+        point,
+        trial,
+        begin_us,
+        dur_us,
+    });
+}
+
+/// Record a pool-wide counter sample at the current wall time.
+pub fn pool_sample(name: &'static str, value: u64) {
+    let at_us = wall_us();
+    pool_sink().lock().unwrap().samples.push(PoolSample { name, at_us, value });
+}
+
+/// Drain everything the pool recorded (exporter side).
+pub fn take_pool_events() -> (Vec<PoolEvent>, Vec<PoolSample>) {
+    let mut s = pool_sink().lock().unwrap();
+    (std::mem::take(&mut s.events), std::mem::take(&mut s.samples))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ns: u64) -> SimTime {
+        SimTime(ns)
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let tr = Tracer::new();
+        assert!(!tr.is_on());
+        tr.span("exec", "x", 0, t(0), t(10));
+        tr.add("k", 1);
+        assert!(tr.take().is_none());
+    }
+
+    #[test]
+    fn span_totals_are_exact() {
+        let tr = Tracer::new();
+        tr.install(Recorder::new(4, None));
+        tr.span("mpi", "allreduce", 1, t(100), t(250));
+        tr.span("mpi", "allreduce", 1, t(300), t(400));
+        tr.span("ckpt", "save", 1, t(0), t(50));
+        let rec = tr.take().unwrap();
+        assert_eq!(rec.span_total_ns("mpi", "allreduce"), 250);
+        assert_eq!(rec.span_total_ns("ckpt", "save"), 50);
+        assert_eq!(rec.span_total_ns("mpi", "nope"), 0);
+        let totals = rec.span_totals();
+        assert_eq!(totals.len(), 2);
+        assert_eq!(totals[1].count, 2);
+        assert_eq!(rec.len(), 3);
+    }
+
+    #[test]
+    fn ring_drops_oldest_but_totals_survive() {
+        let mut rec = Recorder::with_capacity(1, None, 2);
+        rec.span("exec", "a", 0, t(0), t(1));
+        rec.span("exec", "b", 0, t(1), t(2));
+        rec.span("exec", "c", 0, t(2), t(3));
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec.dropped(), 1);
+        assert_eq!(rec.span_totals().len(), 3);
+    }
+
+    #[test]
+    fn filter_drops_unwanted_categories() {
+        let mut rec = Recorder::new(1, Some(vec!["mpi".to_string()]));
+        rec.span("exec", "poll", 0, t(0), t(1));
+        rec.span("mpi", "bcast", 1, t(0), t(1));
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec.span_total_ns("exec", "poll"), 0);
+        assert_eq!(rec.span_total_ns("mpi", "bcast"), 1);
+    }
+
+    #[test]
+    fn monotonic_counters_accumulate() {
+        let mut rec = Recorder::new(1, None);
+        rec.add("mpi.recv_direct", 3);
+        rec.add("mpi.recv_direct", 2);
+        rec.add("mpi.recv_buffered", 1);
+        assert_eq!(rec.counters()["mpi.recv_direct"], 5);
+        assert_eq!(rec.counters()["mpi.recv_buffered"], 1);
+    }
+
+    #[test]
+    fn rank_groups_fold_onto_at_most_eight_tracks() {
+        let rec = Recorder::new(16_384, None);
+        assert_eq!(rec.track_for_rank(0), 1);
+        assert_eq!(rec.track_for_rank(16_383), 8);
+        let names = rec.track_names();
+        assert_eq!(names.len(), 9); // recovery + 8 groups
+        assert_eq!(names[0].1, "recovery");
+        assert_eq!(names[1].1, "ranks 0-2047");
+
+        let small = Recorder::new(4, None);
+        assert_eq!(small.track_names().len(), 5);
+        assert_eq!(small.track_names()[1].1, "rank 0");
+    }
+
+    #[test]
+    fn global_config_roundtrip() {
+        // Only this test touches the global slot (run_trial reads it via
+        // the CLI path, which tests never exercise).
+        assert!(global().is_none() || global().is_some()); // no panic
+        let before = global();
+        set_global(Some(TraceConfig {
+            dir: "x".into(),
+            filter: None,
+        }));
+        assert_eq!(global().unwrap().dir, "x");
+        set_global(before);
+    }
+}

@@ -1,0 +1,224 @@
+//! Per-trial profiling snapshots.
+//!
+//! [`TrialCounters`] is the always-on lightweight layer: a handful of
+//! executor totals plus a content-addressed trial identity hash, collected
+//! for every trial (traced or not) and aggregated by the sweeps behind
+//! `--profile-json`. [`TrialProfile`] is the full snapshot written next to
+//! a `--trace` capture: counters + exact span totals + the per-failure
+//! segment decomposition, rendered as dependency-free JSON.
+//!
+//! The identity hash is FNV-1a over the `Debug` rendering of the full
+//! `ExperimentConfig` plus the trial number — the exact key a persistent
+//! trial-result cache needs (ROADMAP item 4: determinism makes results
+//! perfectly cacheable, so `(config, trial)` content-addresses a result).
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::config::ExperimentConfig;
+use crate::metrics::bench::{json_num, json_str};
+use crate::metrics::FailureSegment;
+
+use super::{Recorder, SpanTotal};
+
+/// FNV-1a 64-bit over `bytes`, continuing from `h`.
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Content-address a `(config, trial)` pair: equal configs and trial
+/// numbers hash equal (determinism then guarantees equal results).
+pub fn identity_hash(cfg: &ExperimentConfig, trial: u32) -> u64 {
+    let mut h = fnv1a(0xcbf2_9ce4_8422_2325, format!("{cfg:?}").as_bytes());
+    h = fnv1a(h, &trial.to_le_bytes());
+    h
+}
+
+/// Lightweight per-trial executor counters, collected for *every* trial
+/// (tracing on or off) and carried on `TrialResult`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TrialCounters {
+    /// Content-addressed `(config, trial)` identity.
+    pub identity: u64,
+    /// Virtual end time of the trial, seconds.
+    pub end_s: f64,
+    /// DES events fired.
+    pub events: u64,
+    /// Task polls executed.
+    pub polls: u64,
+    /// Pending-event high-water mark.
+    pub peak_events_pending: u64,
+    /// Tasks run to completion.
+    pub tasks_completed: u64,
+}
+
+/// Full per-trial profiling snapshot written alongside a `--trace` capture.
+#[derive(Clone, Debug)]
+pub struct TrialProfile {
+    /// Human label: `app/recovery/ranks`.
+    pub label: String,
+    /// Trial number within its point.
+    pub trial: u32,
+    /// The always-on executor counters.
+    pub counters: TrialCounters,
+    /// Monotonic named counters from the recorder (recv match kinds,
+    /// wake/timer tallies, …).
+    pub named: Vec<(String, u64)>,
+    /// Exact per-(category, name) span statistics.
+    pub spans: Vec<SpanTotal>,
+    /// The trial's per-failure-event decomposition.
+    pub segments: Vec<FailureSegment>,
+}
+
+impl TrialProfile {
+    /// Assemble a profile from the recorder and the finalized metrics.
+    pub fn new(
+        label: String,
+        trial: u32,
+        counters: TrialCounters,
+        rec: &Recorder,
+        segments: Vec<FailureSegment>,
+    ) -> TrialProfile {
+        TrialProfile {
+            label,
+            trial,
+            counters,
+            named: rec
+                .counters()
+                .iter()
+                .map(|(&k, &v)| (k.to_string(), v))
+                .collect(),
+            spans: rec.span_totals(),
+            segments,
+        }
+    }
+
+    /// Render as pretty-ish JSON (same hand-rolled style as the bench
+    /// reports; no serde in this crate).
+    pub fn to_json(&self) -> String {
+        let c = &self.counters;
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": 1,\n");
+        s.push_str(&format!("  \"label\": {},\n", json_str(&self.label)));
+        s.push_str(&format!("  \"trial\": {},\n", self.trial));
+        s.push_str(&format!(
+            "  \"identity\": {},\n",
+            json_str(&format!("{:016x}", c.identity))
+        ));
+        s.push_str(&format!("  \"end_time_s\": {},\n", json_num(c.end_s)));
+        s.push_str(&format!("  \"events\": {},\n", c.events));
+        s.push_str(&format!("  \"polls\": {},\n", c.polls));
+        s.push_str(&format!(
+            "  \"peak_events_pending\": {},\n",
+            c.peak_events_pending
+        ));
+        s.push_str(&format!("  \"tasks_completed\": {},\n", c.tasks_completed));
+        s.push_str("  \"counters\": {");
+        for (i, (k, v)) in self.named.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("{}: {v}", json_str(k)));
+        }
+        s.push_str("},\n");
+        s.push_str("  \"spans\": [\n");
+        for (i, t) in self.spans.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"cat\": {}, \"name\": {}, \"count\": {}, \"total_s\": {}}}{}\n",
+                json_str(t.cat),
+                json_str(t.name),
+                t.count,
+                json_num(t.total_ns as f64 / 1e9),
+                if i + 1 == self.spans.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"segments\": [\n");
+        for (i, g) in self.segments.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"kind\": {}, \"victim\": {}, \"fail_s\": {}, \
+                 \"detect_s\": {}, \"recovery_s\": {}, \"rollback_s\": {}, \
+                 \"failover_s\": {}, \"failover\": {}, \"interrupted\": {}, \
+                 \"degraded_redeploy\": {}, \"shrunk\": {}, \"noop\": {}}}{}\n",
+                json_str(&format!("{:?}", g.kind)),
+                g.victim,
+                json_num(g.fail_s),
+                json_num(g.detect_s),
+                json_num(g.recovery_s),
+                json_num(g.rollback_s),
+                json_num(g.failover_s),
+                g.failover,
+                g.interrupted,
+                g.degraded_redeploy,
+                g.shrunk,
+                g.noop,
+                if i + 1 == self.segments.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the profile JSON to `path`.
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        w.write_all(self.to_json().as_bytes())?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Tracer;
+    use super::*;
+    use crate::sim::SimTime;
+
+    #[test]
+    fn identity_is_stable_and_trial_sensitive() {
+        let cfg = ExperimentConfig::default();
+        let a = identity_hash(&cfg, 0);
+        let b = identity_hash(&cfg, 0);
+        let c = identity_hash(&cfg, 1);
+        assert_eq!(a, b, "same (config, trial) must hash equal");
+        assert_ne!(a, c, "trial number must perturb the identity");
+        let mut cfg2 = ExperimentConfig::default();
+        cfg2.ranks += 1;
+        assert_ne!(a, identity_hash(&cfg2, 0), "config must perturb it too");
+    }
+
+    #[test]
+    fn profile_json_is_balanced_and_carries_counters() {
+        let tr = Tracer::new();
+        tr.install(Recorder::new(2, None));
+        tr.span("mpi", "allreduce", 1, SimTime(0), SimTime(2_000_000_000));
+        tr.add("mpi.recv_direct", 9);
+        let rec = tr.take().unwrap();
+        let p = TrialProfile::new(
+            "hpccg/reinit/8".into(),
+            3,
+            TrialCounters {
+                identity: 0xdead_beef,
+                end_s: 1.5,
+                events: 100,
+                polls: 200,
+                peak_events_pending: 7,
+                tasks_completed: 12,
+            },
+            &rec,
+            vec![],
+        );
+        let j = p.to_json();
+        assert!(j.contains("\"identity\": \"00000000deadbeef\""));
+        assert!(j.contains("\"mpi.recv_direct\": 9"));
+        assert!(j.contains("\"total_s\": 2"));
+        assert!(j.contains("\"segments\": [\n  ]"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+}

@@ -1,0 +1,38 @@
+//! Allocation pin for the tracing layer's DISABLED path (tentpole
+//! acceptance: zero cost when off).
+//!
+//! Every instrumentation site threaded through the executor, MPI layer,
+//! checkpoint store and recovery drivers is a branch on one `Cell<bool>`
+//! when no recorder is armed: span/counter names are `&'static str` and
+//! the disabled path never formats, boxes or buffers anything — so it
+//! must add exactly ZERO heap allocations. (The message-path budget in
+//! `alloc_pin.rs` runs through the *instrumented* collective hot path
+//! with tracing off, so a disabled-path allocation would also trip that
+//! budget; this binary pins the tracer API itself, and stays a
+//! single-test binary because the counting allocator is process-global.)
+
+use reinitpp::sim::SimTime;
+use reinitpp::trace::Tracer;
+
+#[path = "../benches/support/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::alloc_count;
+
+#[test]
+fn disabled_tracer_hot_path_allocates_nothing() {
+    let tr = Tracer::new();
+    assert!(!tr.is_on());
+    let a0 = alloc_count();
+    for i in 0..10_000u64 {
+        tr.span("mpi", "allreduce", 1, SimTime(i), SimTime(i + 5));
+        tr.rank_span("mpi", "recv", (i % 7) as u32, SimTime(i), SimTime(i + 1));
+        tr.instant("recovery", "detect", 0, SimTime(i));
+        tr.counter("exec", "events_pending", SimTime(i), i);
+        tr.add("mpi.recv_direct", 1);
+    }
+    let added = alloc_count() - a0;
+    assert_eq!(
+        added, 0,
+        "disabled tracer allocated {added} times over 50k no-op sites"
+    );
+}

@@ -1,0 +1,227 @@
+//! Tracing is observation only — the acceptance pins for the tracing &
+//! profiling layer:
+//!
+//! 1. A traced trial is *bit-identical* to an untraced one: executor
+//!    counters (events, polls, end time), per-rank digests, the paper
+//!    breakdown and the per-failure segments must not move when a recorder
+//!    is armed, with or without a category filter.
+//! 2. The per-trial artifacts (`trace_<id>.trace.json`, `trace_<id>.folded`,
+//!    `trace_<id>.profile.json`) are written under the requested directory,
+//!    keyed by the trial's identity hash, and are structurally sound.
+//! 3. The synthesized recovery timeline is *exact*: per-name recovery span
+//!    totals in the profile sum to the `FailureSegment` decomposition
+//!    field-for-field (same saturating clock arithmetic on both sides).
+//! 4. Figure CSV bytes are identical with the process-wide trace
+//!    destination installed or absent (the CI smoke job re-checks this
+//!    through the real binary).
+
+use std::path::{Path, PathBuf};
+
+use reinitpp::config::{AppKind, ExperimentConfig, Fidelity, RecoveryKind};
+use reinitpp::harness::{run_points, write_csv};
+use reinitpp::recovery::job::{run_trial_with, TrialResult};
+use reinitpp::trace::TraceConfig;
+
+/// Unique scratch dir per test (no tempdir dependency).
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "reinitpp-trace-det-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A quick modeled 2-failure storm: two process kills at distinct
+/// iterations so the trial exercises detect → redeploy → rollback twice.
+fn storm_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.app = AppKind::Hpccg;
+    c.recovery = RecoveryKind::Reinit;
+    c.ranks = 8;
+    c.ranks_per_node = 4;
+    c.spare_nodes = 1;
+    c.iters = 8;
+    c.trials = 1;
+    c.fidelity = Fidelity::Modeled;
+    c.hpccg_nx = 4;
+    c.seed = 42;
+    c.apply("failures", "proc@2:r1,proc@5:r3").unwrap();
+    c
+}
+
+fn trace_into(dir: &Path, filter: Option<Vec<String>>) -> TraceConfig {
+    TraceConfig {
+        dir: dir.to_string_lossy().into_owned(),
+        filter,
+    }
+}
+
+/// Everything a trial result pins, as one comparable value.
+fn fingerprint(r: &TrialResult) -> String {
+    format!(
+        "{:?}|{:?}|{:?}|{:?}|{}",
+        r.counters, r.digests, r.breakdown, r.segments, r.sim_events
+    )
+}
+
+#[test]
+fn traced_trial_is_bit_identical_to_untraced() {
+    let cfg = storm_cfg();
+    let dir = tmp("identical");
+    let off = run_trial_with(&cfg, 0, None, None);
+    let on = run_trial_with(&cfg, 0, None, Some(&trace_into(&dir, None)));
+    assert!(off.completed && on.completed, "storm trial hung");
+    assert!(!off.segments.is_empty(), "storm must fire failures");
+    assert_eq!(
+        off.counters, on.counters,
+        "recording moved the executor (events/polls/end time must not change)"
+    );
+    assert_eq!(fingerprint(&off), fingerprint(&on));
+
+    // A category filter must not perturb results either.
+    let filtered = run_trial_with(
+        &cfg,
+        0,
+        None,
+        Some(&trace_into(&dir, Some(vec!["recovery".into()]))),
+    );
+    assert_eq!(fingerprint(&off), fingerprint(&filtered));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn trace_artifacts_are_written_and_recovery_spans_sum_to_segments() {
+    let cfg = storm_cfg();
+    let dir = tmp("artifacts");
+    let r = run_trial_with(&cfg, 0, None, Some(&trace_into(&dir, None)));
+    assert!(r.completed);
+    let id = format!("{:016x}", r.counters.identity);
+
+    // Perfetto-loadable trace-event JSON: balanced, both pins present.
+    let trace =
+        std::fs::read_to_string(dir.join(format!("trace_{id}.trace.json"))).unwrap();
+    assert!(trace.starts_with("{\"traceEvents\":["));
+    assert!(trace.contains("\"cat\":\"recovery\""), "recovery timeline missing");
+    assert!(trace.contains("\"ph\":\"X\""));
+    assert_eq!(trace.matches('{').count(), trace.matches('}').count());
+    assert_eq!(trace.matches('[').count(), trace.matches(']').count());
+
+    // Folded stacks: every line is `trial;<cat>;<name> <ns>`.
+    let folded = std::fs::read_to_string(dir.join(format!("trace_{id}.folded"))).unwrap();
+    assert!(folded.lines().count() > 0);
+    assert!(folded.lines().all(|l| l.starts_with("trial;")));
+    assert!(folded.contains(";recovery;detect "));
+
+    // Profile: identity-keyed, counters match the trial result.
+    let profile =
+        std::fs::read_to_string(dir.join(format!("trace_{id}.profile.json"))).unwrap();
+    assert!(profile.contains(&format!("\"identity\": \"{id}\"")));
+    assert!(profile.contains(&format!("\"events\": {}", r.counters.events)));
+    assert!(profile.contains(&format!("\"polls\": {}", r.counters.polls)));
+
+    // The synthesized recovery spans must reproduce the FailureSegment
+    // decomposition exactly: sum the profile's recovery span totals per
+    // name and compare to the segment field sums (same ns → s conversion
+    // on both sides, so only summation-order rounding is tolerated).
+    let span_total = |name: &str| -> f64 {
+        profile
+            .lines()
+            .filter(|l| l.contains("\"cat\": \"recovery\""))
+            .filter(|l| l.contains(&format!("\"name\": \"{name}\"")))
+            .map(|l| {
+                let v = l.split("\"total_s\": ").nth(1).unwrap();
+                v.trim_end_matches(&[',', '}', ' '][..]).parse::<f64>().unwrap()
+            })
+            .sum()
+    };
+    let seg_sum = |f: fn(&reinitpp::metrics::FailureSegment) -> f64| -> f64 {
+        r.segments.iter().map(f).sum()
+    };
+    let close = |a: f64, b: f64| (a - b).abs() < 1e-9;
+    assert!(
+        close(span_total("detect"), seg_sum(|s| s.detect_s)),
+        "detect spans {} != segment detect sum {}",
+        span_total("detect"),
+        seg_sum(|s| s.detect_s)
+    );
+    assert!(
+        close(
+            span_total("redeploy") + span_total("shrink"),
+            seg_sum(|s| s.recovery_s)
+        ),
+        "recovery spans {} != segment recovery sum {}",
+        span_total("redeploy") + span_total("shrink"),
+        seg_sum(|s| s.recovery_s)
+    );
+    assert!(close(span_total("rollback"), seg_sum(|s| s.rollback_s)));
+    assert!(close(span_total("failover"), seg_sum(|s| s.failover_s)));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn trace_filter_limits_recorded_categories() {
+    let cfg = storm_cfg();
+    let dir = tmp("filter");
+    let r = run_trial_with(
+        &cfg,
+        0,
+        None,
+        Some(&trace_into(&dir, Some(vec!["recovery".into()]))),
+    );
+    assert!(r.completed);
+    let id = format!("{:016x}", r.counters.identity);
+    let folded = std::fs::read_to_string(dir.join(format!("trace_{id}.folded"))).unwrap();
+    assert!(folded.contains(";recovery;"));
+    for cat in ["exec", "mpi", "ckpt", "pool"] {
+        assert!(
+            !folded.contains(&format!(";{cat};")),
+            "filtered-out category {cat} leaked into the capture"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn figure_csv_bytes_identical_with_tracing_on_and_off() {
+    // The ONLY test anywhere that installs the process-global trace
+    // destination (the sweep pool reads tracing from there, like the CLI).
+    // Safe against parallel test threads in this binary: every other test
+    // passes its TraceConfig explicitly to `run_trial_with` and never
+    // reads the global.
+    let mut a = storm_cfg();
+    a.trials = 2;
+    let mut b = a.clone();
+    b.recovery = RecoveryKind::Cr;
+    let cfgs = [a, b];
+
+    let off_dir = tmp("csv-off");
+    let on_dir = tmp("csv-on");
+    let capture_dir = tmp("csv-capture");
+
+    let (pts_off, _) = run_points(&cfgs, 2);
+    write_csv("trace_det", &off_dir.to_string_lossy(), &pts_off).unwrap();
+
+    reinitpp::trace::set_global(Some(trace_into(&capture_dir, None)));
+    let (pts_on, _) = run_points(&cfgs, 2);
+    reinitpp::trace::set_global(None);
+    write_csv("trace_det", &on_dir.to_string_lossy(), &pts_on).unwrap();
+
+    let off = std::fs::read(off_dir.join("trace_det.csv")).unwrap();
+    let on = std::fs::read(on_dir.join("trace_det.csv")).unwrap();
+    assert_eq!(
+        off, on,
+        "figure CSV bytes moved when tracing was enabled — tracing must be \
+         observation only"
+    );
+    // And the traced sweep really captured something.
+    let captured = std::fs::read_dir(&capture_dir)
+        .unwrap()
+        .filter_map(Result::ok)
+        .filter(|e| e.file_name().to_string_lossy().ends_with(".profile.json"))
+        .count();
+    assert!(captured >= 1, "traced sweep wrote no per-trial profiles");
+    for d in [&off_dir, &on_dir, &capture_dir] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
