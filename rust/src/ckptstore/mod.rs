@@ -25,6 +25,11 @@
 //! memory* (and any undrained items sourced from them) in every tier.
 //! Recovery loads from the cheapest surviving tier and `rebuild` restores
 //! degraded replicas after a restart. See EXPERIMENTS.md §Checkpoint tiers.
+//!
+//! With an [`Integrity`] spec armed (`corrupt_rate`, `corrupt@` timeline
+//! events), every copy carries a checksum, owners dying mid-save leave torn
+//! copies, `ckpt_keep` generations are retained per slot, and loads verify
+//! before serving — see EXPERIMENTS.md §Checkpoint integrity.
 
 pub mod placement;
 pub mod redistribute;
@@ -32,7 +37,7 @@ mod store;
 
 pub use placement::{buddy_of, partners_of};
 pub use redistribute::balanced_placement;
-pub use store::CkptStore;
+pub use store::{CkptStore, Integrity};
 
 use std::fmt;
 

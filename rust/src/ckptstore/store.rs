@@ -40,53 +40,149 @@ use crate::transport::NetCost;
 /// in any rank's memory; never erased by loss events.
 const FS_HOST: u32 = u32::MAX;
 
-/// Per-copy slot holding the last two checkpoints of one owner.
+/// XOR mask applied to a stored checksum to mark a copy corrupt. The
+/// payload bytes are `Rc`-shared (immutable), so corruption is modeled on
+/// the *stored* checksum: a marked copy's sum no longer matches its
+/// payload, which is exactly what verify-on-load detects.
+const SUM_FLIP: u64 = 0xbad5_eed5_bad5_eed5;
+
+/// FNV-1a over the payload — the per-copy checksum verify-on-load checks.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64 finalizer: the pure mixer behind the seeded bit-rot draw.
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Map a hash to [0, 1) (the `gen_f64` construction).
+fn unit_f64(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Per-trial integrity configuration (the imperfect-world fault model).
+///
+/// When `active`, every installed copy carries a real checksum, saves
+/// interrupted by the owner's death leave torn (non-verifying) copies, and
+/// the seeded bit-rot draw may corrupt installs outright. When inactive —
+/// the default — checksums are not even computed and the store's behavior
+/// is byte-identical to the corruption-free model; `keep` alone is a pure
+/// retention knob and never activates the machinery.
+#[derive(Clone, Copy, Debug)]
+pub struct Integrity {
+    /// Checkpoint generations retained per copy slot (`ckpt_keep`). The
+    /// slot capacity is `keep + 1`: ranks can legitimately be one
+    /// checkpoint apart when a failure lands, so retaining one extra
+    /// generation is what keeps the allreduce-min agreement loadable —
+    /// `keep = 1` reproduces the historical two-entry slot exactly.
+    pub keep: u32,
+    /// Seeded bit-rot probability per installed copy, decided by a pure
+    /// hash over (seed, trial, tier, owner, host, iteration) — order- and
+    /// recovery-independent, so trials stay jobs-deterministic. A rotted
+    /// (tier, owner, host, iteration) cell stays bad on re-install: it
+    /// behaves like a deterministic bad sector, which rebuilds cannot fix
+    /// (torn and `corrupt@` marks, by contrast, are repaired by rebuild
+    /// and redistribution because a fresh install recomputes the sum).
+    pub corrupt_rate: f64,
+    pub seed: u64,
+    pub trial: u32,
+    /// Master switch: corruption configured anywhere this trial?
+    pub active: bool,
+}
+
+impl Default for Integrity {
+    fn default() -> Self {
+        Integrity {
+            keep: 1,
+            corrupt_rate: 0.0,
+            seed: 0,
+            trial: 0,
+            active: false,
+        }
+    }
+}
+
+/// One stored checkpoint generation in a copy slot.
+#[derive(Clone)]
+struct Entry {
+    iter: u32,
+    data: Rc<Vec<u8>>,
+    /// Stored checksum: `fnv1a64(data)` when integrity tracking is active,
+    /// 0 (never verified) otherwise. Corruption — bit-rot, torn writes,
+    /// `corrupt@` events — leaves the sum mismatched against the payload.
+    sum: u64,
+}
+
+/// Per-copy slot holding the last `keep + 1` checkpoints of one owner.
 #[derive(Default, Clone)]
 struct Slot {
-    /// (iteration, payload), ascending by iteration. Length <= 2.
-    entries: Vec<(u32, Rc<Vec<u8>>)>,
+    /// Retained generations, ascending by iteration. Length <= the
+    /// store's slot capacity (2 unless `ckpt_keep` raises it).
+    entries: Vec<Entry>,
 }
 
 impl Slot {
-    /// Straight-line two-slot insert: overwrite a matching iteration, fill
-    /// an empty slot, or displace the older entry — anything older than both
-    /// retained checkpoints is dropped.
-    fn put(&mut self, iter: u32, data: Rc<Vec<u8>>) {
-        if let Some(e) = self.entries.iter_mut().find(|(i, _)| *i == iter) {
-            e.1 = data;
+    /// Bounded insert: overwrite a matching iteration, fill an empty slot,
+    /// or displace the oldest entry — anything older than every retained
+    /// checkpoint is dropped.
+    fn put(&mut self, iter: u32, data: Rc<Vec<u8>>, sum: u64, cap: usize) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.iter == iter) {
+            e.data = data;
+            e.sum = sum;
             return;
         }
-        if self.entries.len() < 2 {
-            self.entries.push((iter, data));
-        } else if iter > self.entries[0].0 {
+        if self.entries.len() < cap {
+            self.entries.push(Entry { iter, data, sum });
+        } else if iter > self.entries[0].iter {
             // newer than the oldest retained entry: displace it
-            self.entries[0] = (iter, data);
+            self.entries[0] = Entry { iter, data, sum };
         } else {
-            return; // older than both retained checkpoints
+            return; // older than every retained checkpoint
         }
-        if self.entries.len() == 2 && self.entries[0].0 > self.entries[1].0 {
-            self.entries.swap(0, 1);
-        }
+        self.entries.sort_unstable_by_key(|e| e.iter);
     }
 
     fn get(&self, iter: u32) -> Option<Rc<Vec<u8>>> {
         self.entries
             .iter()
-            .find(|(i, _)| *i == iter)
-            .map(|(_, d)| Rc::clone(d))
+            .find(|e| e.iter == iter)
+            .map(|e| Rc::clone(&e.data))
+    }
+
+    /// Like [`Slot::get`], but when `check` is set a copy whose stored sum
+    /// does not verify against its payload is treated as absent.
+    fn get_intact(&self, iter: u32, check: bool) -> Option<Rc<Vec<u8>>> {
+        self.entries.iter().find(|e| e.iter == iter).and_then(|e| {
+            if check && e.sum != fnv1a64(&e.data) {
+                return None;
+            }
+            Some(Rc::clone(&e.data))
+        })
+    }
+
+    fn entry_mut(&mut self, iter: u32) -> Option<&mut Entry> {
+        self.entries.iter_mut().find(|e| e.iter == iter)
     }
 
     fn latest(&self) -> Option<u32> {
-        self.entries.last().map(|(i, _)| *i)
+        self.entries.last().map(|e| e.iter)
     }
 
-    /// Would `put(iter, ..)` actually retain an entry for `iter`? False when
-    /// both retained checkpoints are already newer — the two-slot buffer
-    /// drops such an insert on the floor.
-    fn would_retain(&self, iter: u32) -> bool {
-        self.entries.len() < 2
-            || self.entries.iter().any(|(i, _)| *i == iter)
-            || iter > self.entries[0].0
+    /// Would `put(iter, ..)` actually retain an entry for `iter`? False
+    /// when every retained checkpoint is already newer — the bounded
+    /// buffer drops such an insert on the floor.
+    fn would_retain(&self, iter: u32, cap: usize) -> bool {
+        self.entries.len() < cap
+            || self.entries.iter().any(|e| e.iter == iter)
+            || iter > self.entries[0].iter
     }
 }
 
@@ -117,6 +213,19 @@ struct Inner {
     redistributed_bytes: u64,
     /// Copies landed by `redistribute`.
     redistributed_copies: u64,
+    /// Retained generations per copy slot = `ckpt_keep + 1` (2 default).
+    slot_cap: usize,
+    /// Integrity machinery armed (checksums, torn writes, bit-rot)?
+    check: bool,
+    /// Seeded bit-rot probability per installed copy.
+    corrupt_rate: f64,
+    /// Pure-hash base mixed from (seed, trial) for the bit-rot draw.
+    hash_base: u64,
+    /// owner -> iteration of a save session currently in flight; a death
+    /// while registered marks that session's landed copies torn.
+    in_flight: HashMap<u32, u32>,
+    /// Copies marked corrupt so far (bit-rot + torn writes + `corrupt@`).
+    corrupt_marks: u64,
 }
 
 /// Shared tiered checkpoint store for one experiment trial (cheap clone).
@@ -191,8 +300,26 @@ impl CkptStore {
                 node_of: (0..topo.ranks).map(|r| topo.home_node(r)).collect(),
                 redistributed_bytes: 0,
                 redistributed_copies: 0,
+                slot_cap: 2,
+                check: false,
+                corrupt_rate: 0.0,
+                hash_base: 0,
+                in_flight: HashMap::new(),
+                corrupt_marks: 0,
             })),
         }
+    }
+
+    /// Arm (or configure) the integrity model for this trial. Must be
+    /// called before the first save; with `Integrity::default()` (or never
+    /// calling it) the store behaves byte-identically to the
+    /// corruption-free model.
+    pub fn set_integrity(&self, spec: Integrity) {
+        let mut inner = self.inner.borrow_mut();
+        inner.slot_cap = spec.keep as usize + 1;
+        inner.check = spec.active;
+        inner.corrupt_rate = spec.corrupt_rate;
+        inner.hash_base = mix64(spec.seed ^ mix64(spec.trial as u64 ^ 0x9e37_79b9_7f4a_7c15));
     }
 
     /// Legacy two-scheme constructor (paper Table 2 kinds).
@@ -222,9 +349,29 @@ impl CkptStore {
         Rc::clone(&self.inner.borrow().placements)
     }
 
-    /// Land `data` for `(owner, iter)` in `tier`'s copy at `host`.
+    /// Land `data` for `(owner, iter)` in `tier`'s copy at `host`. With
+    /// integrity armed this also computes the copy's checksum and rolls
+    /// the seeded bit-rot draw — a pure hash of the copy's coordinates, so
+    /// the outcome is independent of install order and recovery method.
     fn install(&self, tier: usize, owner: u32, host: u32, iter: u32, data: &Rc<Vec<u8>>) {
         let mut inner = self.inner.borrow_mut();
+        let inner = &mut *inner;
+        let sum = if inner.check {
+            let mut sum = fnv1a64(data);
+            let h = mix64(
+                inner.hash_base
+                    ^ mix64(((tier as u64) << 32) ^ owner as u64)
+                    ^ mix64(((host as u64) << 32) ^ iter as u64),
+            );
+            if unit_f64(h) < inner.corrupt_rate {
+                sum ^= SUM_FLIP;
+                inner.corrupt_marks += 1;
+            }
+            sum
+        } else {
+            0
+        };
+        let cap = inner.slot_cap;
         let t = &mut inner.tiers[tier];
         let v = t.copies.entry(owner).or_default();
         let slot = match v.iter().position(|(h, _)| *h == host) {
@@ -234,7 +381,7 @@ impl CkptStore {
                 &mut v.last_mut().expect("just pushed").1
             }
         };
-        slot.put(iter, Rc::clone(data));
+        slot.put(iter, Rc::clone(data), sum, cap);
         t.io.write_bytes += data.len() as u64;
     }
 
@@ -272,9 +419,17 @@ impl CkptStore {
     pub async fn save(&self, rank: u32, node: u32, iter: u32, data: Vec<u8>) {
         let t0 = self.sim.tracer().is_on().then(|| self.sim.now());
         let data = Rc::new(data);
+        // Register the save session: if the owner dies before it closes,
+        // the copies it already landed are marked torn (`lose_rank`).
+        if self.inner.borrow().check {
+            self.inner.borrow_mut().in_flight.insert(rank, iter);
+        }
         if self.drain_proc.is_none() {
             for tier in 0..self.specs.len() {
                 self.write_tier(tier, rank, node, iter, &data).await;
+            }
+            if self.inner.borrow().check {
+                self.inner.borrow_mut().in_flight.remove(&rank);
             }
             if let Some(t0) = t0 {
                 self.sim.tracer().rank_span("ckpt", "save", rank, t0, self.sim.now());
@@ -282,6 +437,9 @@ impl CkptStore {
             return;
         }
         self.write_tier(0, rank, node, iter, &data).await;
+        if self.inner.borrow().check {
+            self.inner.borrow_mut().in_flight.remove(&rank);
+        }
         let backlog = {
             let mut inner = self.inner.borrow_mut();
             inner.pending.insert((iter, rank), Rc::clone(&data));
@@ -397,6 +555,78 @@ impl CkptStore {
         }
     }
 
+    /// Verify-on-load support: walk `rank`'s stored generations and return
+    /// the iterations with at least one checksum-intact copy (ascending),
+    /// plus the virtual cost of the verification scans. Each generation is
+    /// checked newest-first across the tier walk until one intact copy is
+    /// found; every inspected copy's payload is scanned at memory
+    /// bandwidth. Zero-cost identity (all generations intact) when the
+    /// integrity machinery is off.
+    pub fn verify_generations(&self, rank: u32) -> (Vec<u32>, SimDuration) {
+        let inner = self.inner.borrow();
+        let mut iters: Vec<u32> = Vec::new();
+        for t in &inner.tiers {
+            for (_h, slot) in t.copies.get(&rank).into_iter().flatten() {
+                iters.extend(slot.entries.iter().map(|e| e.iter));
+            }
+        }
+        iters.sort_unstable();
+        iters.dedup();
+        if !inner.check {
+            return (iters, SimDuration::ZERO);
+        }
+        let mut intact = Vec::new();
+        let mut bytes = 0usize;
+        for &iter in iters.iter().rev() {
+            'gen: for t in &inner.tiers {
+                for (_h, slot) in t.copies.get(&rank).into_iter().flatten() {
+                    if let Some(e) = slot.entries.iter().find(|e| e.iter == iter) {
+                        bytes += e.data.len();
+                        if e.sum == fnv1a64(&e.data) {
+                            intact.push(iter);
+                            break 'gen;
+                        }
+                    }
+                }
+            }
+        }
+        intact.sort_unstable();
+        (intact, self.memcpy_cost(bytes))
+    }
+
+    /// `corrupt@` fault event: mark every stored copy of `rank`'s newest
+    /// checkpoint generation corrupt, across all tiers (silent data
+    /// corruption hitting the most valuable generation — the older
+    /// generations are what verify-on-load falls back to). Idempotent;
+    /// no-op when the integrity machinery is off or nothing is stored.
+    pub fn corrupt_rank_latest(&self, rank: u32) {
+        let mut inner = self.inner.borrow_mut();
+        let inner = &mut *inner;
+        if !inner.check {
+            return;
+        }
+        let latest = inner
+            .tiers
+            .iter()
+            .filter_map(|t| t.copies.get(&rank))
+            .flat_map(|v| v.iter().filter_map(|(_h, s)| s.latest()))
+            .max();
+        let Some(latest) = latest else { return };
+        for t in inner.tiers.iter_mut() {
+            for (_h, slot) in t.copies.get_mut(&rank).into_iter().flatten() {
+                if let Some(e) = slot.entry_mut(latest) {
+                    e.sum = fnv1a64(&e.data) ^ SUM_FLIP;
+                    inner.corrupt_marks += 1;
+                }
+            }
+        }
+    }
+
+    /// Copies marked corrupt so far (bit-rot + torn writes + `corrupt@`).
+    pub fn corrupt_marks(&self) -> u64 {
+        self.inner.borrow().corrupt_marks
+    }
+
     /// Newest iteration available for `rank` in any surviving tier.
     pub fn latest_iter(&self, rank: u32) -> Option<u32> {
         let inner = self.inner.borrow();
@@ -430,7 +660,7 @@ impl CkptStore {
                 let inner = self.inner.borrow();
                 inner.tiers[tier].copies.get(&rank).and_then(|v| {
                     v.iter()
-                        .find_map(|(h, s)| s.get(iter).map(|d| (*h, d)))
+                        .find_map(|(h, s)| s.get_intact(iter, inner.check).map(|d| (*h, d)))
                 })
             };
             let Some((host, data)) = found else { continue };
@@ -464,11 +694,13 @@ impl CkptStore {
         let pl = self.placements();
         for tier in 0..self.specs.len() {
             for &host in &pl[tier][rank as usize] {
-                // A copy needs rebuilding only if the slot lacks `iter` AND
-                // would actually retain it: a slot already holding two newer
-                // checkpoints (stale-but-identical pre-rollback state, or a
-                // drain that ran ahead) must not be charged for an install
-                // that `Slot::put` would drop on the floor.
+                // A copy needs rebuilding only if the slot lacks an *intact*
+                // `iter` AND would actually retain it: a slot already holding
+                // two newer checkpoints (stale-but-identical pre-rollback
+                // state, or a drain that ran ahead) must not be charged for an
+                // install that `Slot::put` would drop on the floor. A copy
+                // present but corrupt (torn write, `corrupt@`) is rebuilt —
+                // the fresh install recomputes its checksum.
                 let needs = {
                     let inner = self.inner.borrow();
                     match inner.tiers[tier]
@@ -476,7 +708,10 @@ impl CkptStore {
                         .get(&rank)
                         .and_then(|v| v.iter().find(|(h, _)| *h == host))
                     {
-                        Some((_, s)) => s.get(iter).is_none() && s.would_retain(iter),
+                        Some((_, s)) => {
+                            s.get_intact(iter, inner.check).is_none()
+                                && s.would_retain(iter, inner.slot_cap)
+                        }
                         None => true,
                     }
                 };
@@ -546,20 +781,28 @@ impl CkptStore {
         let mut slowest_owner = SimDuration::ZERO;
         for owner in 0..self.topo.ranks {
             // Union of retained iterations, each from its cheapest
-            // surviving tier (tier order is fast -> slow).
-            let sources: Vec<(u32, usize, Rc<Vec<u8>>)> = {
+            // surviving tier (tier order is fast -> slow). Corrupt copies
+            // are never chosen as sources — redistribution would otherwise
+            // launder a bad copy into a fresh (verifying) install.
+            let (sources, check): (Vec<(u32, usize, Rc<Vec<u8>>)>, bool) = {
                 let inner = self.inner.borrow();
                 let mut by_iter: BTreeMap<u32, (usize, Rc<Vec<u8>>)> = BTreeMap::new();
                 for (tier, t) in inner.tiers.iter().enumerate() {
                     for (_h, slot) in t.copies.get(&owner).into_iter().flatten() {
-                        for (iter, data) in &slot.entries {
+                        for e in &slot.entries {
+                            if inner.check && e.sum != fnv1a64(&e.data) {
+                                continue;
+                            }
                             by_iter
-                                .entry(*iter)
-                                .or_insert_with(|| (tier, Rc::clone(data)));
+                                .entry(e.iter)
+                                .or_insert_with(|| (tier, Rc::clone(&e.data)));
                         }
                     }
                 }
-                by_iter.into_iter().map(|(i, (t, d))| (i, t, d)).collect()
+                (
+                    by_iter.into_iter().map(|(i, (t, d))| (i, t, d)).collect(),
+                    inner.check,
+                )
             };
             let mut chain = SimDuration::ZERO;
             for tier in 0..self.specs.len() {
@@ -574,7 +817,7 @@ impl CkptStore {
                                 .copies
                                 .get(&owner)
                                 .and_then(|v| v.iter().find(|(h, _)| *h == host))
-                                .is_some_and(|(_, s)| s.get(*iter).is_some())
+                                .is_some_and(|(_, s)| s.get_intact(*iter, check).is_some())
                         };
                         if present {
                             continue;
@@ -638,6 +881,20 @@ impl CkptStore {
     pub fn lose_rank(&self, rank: u32) {
         let mut inner = self.inner.borrow_mut();
         let inner = &mut *inner;
+        // Torn write: dying inside a `save` session leaves every copy of
+        // that session's iteration with a checksum that no longer verifies
+        // — the write was cut mid-stream. Only meaningful when integrity
+        // tracking is armed (the registration only happens then too).
+        if let Some(iter) = inner.in_flight.remove(&rank) {
+            for t in inner.tiers.iter_mut() {
+                for (_h, slot) in t.copies.get_mut(&rank).into_iter().flatten() {
+                    if let Some(e) = slot.entry_mut(iter) {
+                        e.sum = fnv1a64(&e.data) ^ SUM_FLIP;
+                        inner.corrupt_marks += 1;
+                    }
+                }
+            }
+        }
         for (t, spec) in inner.tiers.iter_mut().zip(self.specs.iter()) {
             if matches!(spec, TierSpec::SharedFs) {
                 continue;
@@ -679,6 +936,7 @@ impl CkptStore {
             t.io.copies_lost += lost;
         }
         inner.pending.clear();
+        inner.in_flight.clear();
         inner.placements = Rc::clone(&self.initial_placements);
         for (r, n) in inner.node_of.iter_mut().enumerate() {
             *n = self.topo.home_node(r as u32);
@@ -752,14 +1010,14 @@ mod tests {
     // ---- Slot edge cases ----
 
     fn slot_iters(s: &Slot) -> Vec<u32> {
-        s.entries.iter().map(|(i, _)| *i).collect()
+        s.entries.iter().map(|e| e.iter).collect()
     }
 
     #[test]
     fn slot_duplicate_iteration_overwrites_payload() {
         let mut s = Slot::default();
-        s.put(3, Rc::new(vec![1]));
-        s.put(3, Rc::new(vec![2]));
+        s.put(3, Rc::new(vec![1]), 0, 2);
+        s.put(3, Rc::new(vec![2]), 0, 2);
         assert_eq!(slot_iters(&s), vec![3]);
         assert_eq!(s.get(3).unwrap().as_ref(), &vec![2]);
     }
@@ -767,8 +1025,8 @@ mod tests {
     #[test]
     fn slot_out_of_order_insert_keeps_ascending_order() {
         let mut s = Slot::default();
-        s.put(5, Rc::new(vec![5]));
-        s.put(3, Rc::new(vec![3]));
+        s.put(5, Rc::new(vec![5]), 0, 2);
+        s.put(3, Rc::new(vec![3]), 0, 2);
         assert_eq!(slot_iters(&s), vec![3, 5]);
         assert_eq!(s.latest(), Some(5));
     }
@@ -776,9 +1034,9 @@ mod tests {
     #[test]
     fn slot_displaces_older_entry() {
         let mut s = Slot::default();
-        s.put(3, Rc::new(vec![3]));
-        s.put(5, Rc::new(vec![5]));
-        s.put(7, Rc::new(vec![7]));
+        s.put(3, Rc::new(vec![3]), 0, 2);
+        s.put(5, Rc::new(vec![5]), 0, 2);
+        s.put(7, Rc::new(vec![7]), 0, 2);
         assert_eq!(slot_iters(&s), vec![5, 7]);
         assert!(s.get(3).is_none(), "displaced");
     }
@@ -786,9 +1044,9 @@ mod tests {
     #[test]
     fn slot_out_of_order_displacement_stays_sorted() {
         let mut s = Slot::default();
-        s.put(5, Rc::new(vec![5]));
-        s.put(7, Rc::new(vec![7]));
-        s.put(6, Rc::new(vec![6])); // displaces 5, slots in below 7
+        s.put(5, Rc::new(vec![5]), 0, 2);
+        s.put(7, Rc::new(vec![7]), 0, 2);
+        s.put(6, Rc::new(vec![6]), 0, 2); // displaces 5, slots in below 7
         assert_eq!(slot_iters(&s), vec![6, 7]);
         assert_eq!(s.latest(), Some(7));
     }
@@ -796,10 +1054,21 @@ mod tests {
     #[test]
     fn slot_drops_entries_older_than_both_retained() {
         let mut s = Slot::default();
-        s.put(5, Rc::new(vec![5]));
-        s.put(7, Rc::new(vec![7]));
-        s.put(4, Rc::new(vec![4]));
+        s.put(5, Rc::new(vec![5]), 0, 2);
+        s.put(7, Rc::new(vec![7]), 0, 2);
+        s.put(4, Rc::new(vec![4]), 0, 2);
         assert_eq!(slot_iters(&s), vec![5, 7], "too-old insert ignored");
+    }
+
+    #[test]
+    fn slot_cap_three_retains_three_generations() {
+        let mut s = Slot::default();
+        for it in [2u32, 4, 6, 8] {
+            s.put(it, Rc::new(vec![it as u8]), 0, 3);
+        }
+        assert_eq!(slot_iters(&s), vec![4, 6, 8], "oldest displaced at cap 3");
+        assert!(s.would_retain(5, 3), "newer than the oldest retained");
+        assert!(!s.would_retain(3, 3), "older than every retained entry");
     }
 
     // ---- save/load round trips per stack ----
@@ -1203,5 +1472,145 @@ mod tests {
         let st = s.storage_stats();
         assert_eq!(st.partner.read_bytes, 128, "fell back to the partner");
         assert_eq!(st.fs.read_bytes, 0, "disk never touched");
+    }
+
+    // ---- integrity: checksums, bit-rot, torn writes, verify-on-load ----
+
+    fn integrity(keep: u32, rate: f64, seed: u64, trial: u32) -> Integrity {
+        Integrity {
+            keep,
+            corrupt_rate: rate,
+            seed,
+            trial,
+            active: true,
+        }
+    }
+
+    #[test]
+    fn inactive_integrity_keeps_zero_checksums_and_never_verifies() {
+        let (sim, s) = store("local+partner1", 4);
+        block_on_save(&sim, &s, 0, 1, vec![1; 8]);
+        // corrupt_rank_latest is a no-op with the machinery off; loads and
+        // verification stay the zero-cost identity.
+        s.corrupt_rank_latest(0);
+        assert_eq!(s.corrupt_marks(), 0);
+        let (intact, cost) = s.verify_generations(0);
+        assert_eq!(intact, vec![1]);
+        assert_eq!(cost, SimDuration::ZERO, "no verify cost when inactive");
+        assert_eq!(block_on_load(&sim, &s, 0, 1), Some(vec![1; 8]));
+    }
+
+    #[test]
+    fn bit_rot_rate_one_corrupts_every_copy() {
+        let (sim, s) = store("local+partner1", 4);
+        s.set_integrity(integrity(1, 1.0, 42, 0));
+        block_on_save(&sim, &s, 0, 3, vec![5; 16]);
+        assert!(s.corrupt_marks() >= 2, "local and partner copy both rotted");
+        let (intact, cost) = s.verify_generations(0);
+        assert!(intact.is_empty(), "no generation verifies");
+        assert!(cost > SimDuration::ZERO, "verification scanned the copies");
+        assert_eq!(block_on_load(&sim, &s, 0, 3), None, "corrupt copies never served");
+        assert_eq!(s.latest_iter(0), Some(3), "presence is not intactness");
+    }
+
+    #[test]
+    fn corrupt_latest_falls_back_to_older_generations() {
+        let (sim, s) = store("local+partner1", 4);
+        s.set_integrity(integrity(2, 0.0, 7, 0)); // keep 2 -> cap 3
+        for it in 1..=3 {
+            block_on_save(&sim, &s, 0, it, vec![it as u8; 8]);
+        }
+        s.corrupt_rank_latest(0);
+        let (intact, _) = s.verify_generations(0);
+        assert_eq!(intact, vec![1, 2], "latest generation knocked out");
+        assert_eq!(block_on_load(&sim, &s, 0, 3), None);
+        assert_eq!(block_on_load(&sim, &s, 0, 2), Some(vec![2; 8]));
+    }
+
+    #[test]
+    fn bit_rot_draw_is_deterministic_and_partial_at_half_rate() {
+        let run = || {
+            let (sim, s) = store("local+partner1", 8);
+            s.set_integrity(integrity(1, 0.5, 99, 3));
+            for r in 0..8 {
+                block_on_save(&sim, &s, r, 1, vec![r as u8; 32]);
+            }
+            (0..8)
+                .map(|r| s.verify_generations(r).0)
+                .collect::<Vec<_>>()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "pure-hash draw: identical across runs");
+        let intact_ranks = a.iter().filter(|v| !v.is_empty()).count();
+        assert!(
+            intact_ranks > 0 && intact_ranks < 8,
+            "rate 0.5 corrupts some but not all ranks: {intact_ranks}/8 intact"
+        );
+    }
+
+    #[test]
+    fn rebuild_repairs_a_corrupt_copy() {
+        // Torn/corrupt@ marks are repaired by a fresh install (the checksum
+        // is recomputed); only bit-rot cells stay bad.
+        let (sim, s) = store_on("local+partner1", Topology::new(4, 2, 0));
+        s.set_integrity(integrity(1, 0.0, 1, 0));
+        block_on_save(&sim, &s, 0, 2, vec![9; 16]);
+        s.corrupt_rank_latest(0);
+        assert!(s.verify_generations(0).0.is_empty());
+        let p = sim.spawn_process("rebuilder");
+        let s2 = s.clone();
+        sim.spawn(p, async move {
+            let d = Rc::new(vec![9u8; 16]);
+            s2.rebuild(0, 0, 2, &d).await;
+        });
+        sim.run();
+        assert_eq!(s.verify_generations(0).0, vec![2], "fresh install verifies");
+        assert_eq!(block_on_load(&sim, &s, 0, 2), Some(vec![9; 16]));
+    }
+
+    #[test]
+    fn dying_mid_save_leaves_torn_copies() {
+        // Self-calibrating: time a full local+partner2 save, then kill the
+        // owner between the first and second partner push. The landed
+        // partner copy must be torn (present but not verifying).
+        let timed = |spec: &str| {
+            let (sim, s) = store_on(spec, Topology::new(6, 2, 0));
+            let t = Rc::new(Cell::new(SimDuration::ZERO));
+            let (s2, t2, sim2) = (s.clone(), Rc::clone(&t), sim.clone());
+            let p = sim.spawn_process("w");
+            sim.spawn(p, async move {
+                let start = sim2.now();
+                s2.save(0, 0, 1, vec![3; 1 << 16]).await;
+                t2.set(sim2.now() - start);
+            });
+            sim.run();
+            t.get()
+        };
+        let t1 = timed("local+partner1");
+        let t2 = timed("local+partner2");
+        let hop = t2.saturating_sub(t1); // one partner push
+        let (sim, s) = store_on("local+partner2", Topology::new(6, 2, 0));
+        s.set_integrity(integrity(1, 0.0, 5, 0));
+        let p = sim.spawn_process("victim");
+        let s2 = s.clone();
+        sim.spawn(p, async move {
+            s2.save(0, 0, 1, vec![3; 1 << 16]).await;
+        });
+        // Kill after the first partner copy landed, before the second.
+        let s3 = s.clone();
+        let sim2 = sim.clone();
+        let kill_at = t2.saturating_sub(SimDuration::from_nanos(hop.nanos() / 2));
+        sim.schedule(kill_at, move || {
+            s3.lose_rank(0);
+            sim2.kill(p);
+        });
+        sim.run();
+        assert_eq!(s.latest_iter(0), Some(1), "first partner copy landed");
+        assert!(
+            s.verify_generations(0).0.is_empty(),
+            "landed copy is torn, not loadable"
+        );
+        assert_eq!(block_on_load(&sim, &s, 0, 1), None);
+        assert!(s.corrupt_marks() >= 1, "torn mark recorded");
     }
 }

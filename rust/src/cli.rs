@@ -9,6 +9,7 @@
 //! reinitpp storm     [OPTIONS] [key=value ...]   MTBF failure-storm sweep
 //! reinitpp crossover [OPTIONS] [key=value ...]   replication-vs-checkpointing crossover
 //! reinitpp shrink    [OPTIONS] [key=value ...]   shrink-vs-substitute-vs-CR sweep
+//! reinitpp integrity [OPTIONS] [key=value ...]   imperfect-world sweep (corruption x detector)
 //! reinitpp tables    [--which 1|2]               print Tables 1/2
 //! reinitpp validate  [OPTIONS] [key=value ...]   global-restart equivalence
 //! reinitpp calibrate [key=value ...]             measure artifact exec times
@@ -65,6 +66,10 @@ pub enum Command {
         opts: SweepOpts,
     },
     Shrink {
+        cfg: ExperimentConfig,
+        opts: SweepOpts,
+    },
+    Integrity {
         cfg: ExperimentConfig,
         opts: SweepOpts,
     },
@@ -131,6 +136,14 @@ USAGE:
                                                  ranks 16/64/256 at 8 ranks/node
                                                  (emits shrink_compare.csv; min_ranks= sets
                                                  the shrink floor)
+  reinitpp integrity [OPTIONS] [key=value ...]   imperfect-world sweep: checkpoint bit-rot x
+                                                 unreliable-detector noise x retention depth
+                                                 (ckpt_keep) x all five recovery families,
+                                                 over process-failure storms at ranks
+                                                 16/64/256 (emits integrity_compare.csv).
+                                                 Single runs can also go imperfect via e.g.
+                                                 `run corrupt_rate=0.2 ckpt_keep=3` or an
+                                                 explicit `run failures=corrupt@3:r5,...`
   reinitpp tables    [--which 1|2]               print the paper's tables
   reinitpp validate  [OPTIONS] [key=value ...]   check global-restart equivalence
   reinitpp calibrate [key=value ...]             measure artifact execution costs
@@ -138,10 +151,10 @@ USAGE:
 OPTIONS:
   --config FILE      load a TOML-subset config file
   --max-ranks N      cap the sweep's rank counts (reproduce/scale/tiers/storm/
-                     crossover/shrink; scale defaults to 16384)
+                     crossover/shrink/integrity; scale defaults to 16384)
   --outdir DIR       CSV output directory (default: results)
   --jobs N           worker threads for trial execution
-                     (run/reproduce/scale/tiers/storm/crossover/shrink).
+                     (run/reproduce/scale/tiers/storm/crossover/shrink/integrity).
                      Must be >= 1: default all cores, 1 = serial execution on
                      the calling thread. Tables and CSVs are byte-identical
                      for any N.
@@ -153,7 +166,7 @@ OPTIONS:
                      plus pool.trace.json (worker timeline, wall time).
                      Observation only: results are byte-identical with it on.
   --trace-filter C,C (run, with --trace) record only these span categories;
-                     known: exec, mpi, ckpt, recovery, pool
+                     known: exec, mpi, ckpt, recovery, pool, integrity, detect
   --profile-json     (sweeps) also write per-trial executor counters as
                      <sweep>_profiles.json next to the sweep CSV (the
                      BENCH_sweep_stats_<sweep>.json throughput summary is
@@ -164,8 +177,15 @@ OPTIONS:
                      failure=process trials=10 iters=20 fidelity=auto
                      ckpt_tiers=local+partner2+fs ckpt_drain_interval_s=0.5
                      failures=proc@3:r5,node@7:r12,proc@t1.25:r3 (explicit
-                     multi-failure scenario: kind@iteration-or-tSECONDS:victim)
+                     multi-failure scenario: kind@iteration-or-tSECONDS:victim;
+                     kind corrupt marks the victim's newest checkpoint instead
+                     of killing anything)
                      mtbf_s=4 max_failures=6 (exponential failure arrivals)
+                     ckpt_keep=3 corrupt_rate=0.1 retry_budget=3 (checkpoint
+                     integrity: retention depth, seeded bit-rot, agreement
+                     retries before an iteration-0 escalation)
+                     detect_fp_rate=0.5 detect_jitter_s=0.002
+                     suspect_timeout_s=0.01 (unreliable failure detector)
                      calibration.fork_exec_ms=350
 
 EXAMPLES:
@@ -179,6 +199,8 @@ EXAMPLES:
   reinitpp storm --max-ranks 256 --jobs 4 trials=5
   reinitpp crossover --max-ranks 64 --jobs 4 trials=3
   reinitpp shrink --max-ranks 64 --jobs 4 trials=3
+  reinitpp integrity --max-ranks 64 --jobs 4 trials=3
+  reinitpp run corrupt_rate=0.2 ckpt_keep=3 mtbf_s=0.5 trials=3
   reinitpp run recovery=repl repl_degree=2 ranks=32 ranks_per_node=8 trials=3
   reinitpp run recovery=shrink min_ranks=4 spare_nodes=0 failures=node@3:r5 trials=3
   reinitpp validate app=comd recovery=ulfm failure=process
@@ -292,6 +314,34 @@ fn reject_repl_degree(cmd: &str, cfg: &ExperimentConfig) -> Result<(), CliError>
     Ok(())
 }
 
+/// The imperfect-world knobs are owned the same way: the `integrity` sweep
+/// sets corruption, detector noise and retention depth per grid point, and
+/// on any sweep a non-default value sneaking in through `key=value` would
+/// silently skew every family row. Ad-hoc imperfect-world scenarios belong
+/// on `run` (e.g. `run corrupt_rate=0.2 ckpt_keep=3 mtbf_s=0.5`).
+fn reject_integrity_keys(cmd: &str, cfg: &ExperimentConfig) -> Result<(), CliError> {
+    let d = ExperimentConfig::default();
+    let offenders = [
+        (cfg.ckpt_keep != d.ckpt_keep, "ckpt_keep"),
+        (cfg.corrupt_rate != d.corrupt_rate, "corrupt_rate"),
+        (cfg.detect_fp_rate != d.detect_fp_rate, "detect_fp_rate"),
+        (cfg.detect_jitter_s != d.detect_jitter_s, "detect_jitter_s"),
+        (
+            cfg.suspect_timeout_s != d.suspect_timeout_s,
+            "suspect_timeout_s",
+        ),
+        (cfg.retry_budget != d.retry_budget, "retry_budget"),
+    ];
+    if let Some((_, key)) = offenders.iter().find(|(hit, _)| *hit) {
+        return Err(err(format!(
+            "{cmd}: {key} is not a free axis here (the `integrity` sweep sets \
+             the imperfect-world knobs per point); use `run {key}=...` for \
+             ad-hoc imperfect-world scenarios"
+        )));
+    }
+    Ok(())
+}
+
 /// `min_ranks` only means anything to the shrinking family: on the figure
 /// and grid sweeps it would either silently do nothing or skew one family
 /// row, so only `shrink` (which owns that family) and `run`/`validate`
@@ -333,6 +383,7 @@ fn reject_grid_owned_axes(
 ) -> Result<(), CliError> {
     reject_scenario_keys(cmd, cfg)?;
     reject_repl_degree(cmd, cfg)?;
+    reject_integrity_keys(cmd, cfg)?;
     if !axes.min_ranks_free {
         reject_min_ranks(cmd, cfg)?;
     }
@@ -436,6 +487,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let (cfg, leftovers) = parse_cfg(rest)?;
             reject_scenario_keys("reproduce", &cfg)?;
             reject_repl_degree("reproduce", &cfg)?;
+            reject_integrity_keys("reproduce", &cfg)?;
             reject_min_ranks("reproduce", &cfg)?;
             let mut figure = None;
             let mut opts = SweepOpts::default();
@@ -635,6 +687,48 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             parse_sweep_opts("shrink", &leftovers, &mut opts, |_, _| Ok(false))?;
             Ok(Command::Shrink { cfg, opts })
         }
+        "integrity" => {
+            // Integrity-sweep defaults: the storm base (quick modeled trials
+            // with paper-scale virtual iteration cost) at 8 ranks/node. The
+            // imperfect-world knobs themselves (corrupt_rate, detector
+            // noise, ckpt_keep) are grid axes and rejected as free keys.
+            let mut base = ExperimentConfig {
+                trials: 3,
+                iters: 40,
+                ranks_per_node: crate::config::presets::CROSSOVER_RANKS_PER_NODE,
+                fidelity: crate::config::Fidelity::Modeled,
+                hpccg_nx: 4,
+                comd_n: 32,
+                lulesh_nx: 4,
+                max_failures: crate::config::presets::STORM_MAX_FAILURES,
+                ..ExperimentConfig::default()
+            };
+            base.calib.modeled_compute_scale = crate::config::presets::STORM_COMPUTE_SCALE;
+            let (cfg, leftovers) = parse_cfg_from(base, rest)?;
+            reject_grid_owned_axes(
+                "integrity",
+                &cfg,
+                &GridOwnedAxes {
+                    ranks_grid: "16/64/256",
+                    recovery_owned: true,
+                    failure_axis: "injects process-failure storms",
+                    ckpt_axis: "uses the paper's Table 2 checkpoint policy per \
+                                recovery method",
+                    min_ranks_free: false,
+                },
+            )?;
+            // spare capacity is set per family row (0 for shrink, 1 for the
+            // respawning and CR families), mirroring the shrink sweep
+            if cfg.spare_nodes != ExperimentConfig::default().spare_nodes {
+                return Err(err(
+                    "integrity: the sweep sets spare_nodes per family row (0 \
+                     for shrink, 1 otherwise); drop spare_nodes=",
+                ));
+            }
+            let mut opts = SweepOpts::default();
+            parse_sweep_opts("integrity", &leftovers, &mut opts, |_, _| Ok(false))?;
+            Ok(Command::Integrity { cfg, opts })
+        }
         other => Err(err(format!("unknown command `{other}`\n\n{USAGE}"))),
     }
 }
@@ -820,6 +914,13 @@ pub fn execute(cmd: Command) -> i32 {
                 2
             }
         },
+        Command::Integrity { cfg, opts } => match harness::integrity_sweep(&cfg, &opts) {
+            Ok(_) => 0,
+            Err(e) => {
+                eprintln!("{e}");
+                2
+            }
+        },
         Command::Validate { cfg } => {
             if let Err(e) = cfg.validate() {
                 eprintln!("{e}");
@@ -997,6 +1098,29 @@ mod tests {
                     "mtbf_s=2",
                     "repl_degree=2",
                     "spare_nodes=2",
+                    "ckpt_keep=3",
+                    "corrupt_rate=0.1",
+                ],
+            ),
+            (
+                "integrity",
+                &[
+                    "ranks=128",
+                    "recovery=cr",
+                    "failure=node",
+                    "ckpt=file",
+                    "ckpt_tiers=local+partner1",
+                    "failures=proc@3:r5",
+                    "mtbf_s=2",
+                    "repl_degree=2",
+                    "spare_nodes=2",
+                    "min_ranks=4",
+                    "ckpt_keep=3",
+                    "corrupt_rate=0.1",
+                    "detect_fp_rate=0.5",
+                    "detect_jitter_s=0.002",
+                    "suspect_timeout_s=0.01",
+                    "retry_budget=5",
                 ],
             ),
         ];
@@ -1016,6 +1140,22 @@ mod tests {
         assert!(parse(&sv(&["run", "recovery=shrink", "min_ranks=4"])).is_ok());
         // the shrink sweep owns the shrink family: its floor stays a knob
         assert!(parse(&sv(&["shrink", "min_ranks=4"])).is_ok());
+        // the imperfect-world knobs are the integrity sweep's grid; every
+        // other sweep rejects them, while ad-hoc scenarios go through `run`
+        assert!(parse(&sv(&["storm", "corrupt_rate=0.1"])).is_err());
+        assert!(parse(&sv(&["scale", "detect_fp_rate=0.5"])).is_err());
+        assert!(parse(&sv(&["reproduce", "--figure", "4", "ckpt_keep=3"])).is_err());
+        assert!(parse(&sv(&[
+            "run",
+            "corrupt_rate=0.2",
+            "ckpt_keep=3",
+            "retry_budget=5",
+            "detect_fp_rate=0.5",
+            "detect_jitter_s=0.002",
+            "suspect_timeout_s=0.01",
+            "failure=process",
+        ]))
+        .is_ok());
     }
 
     #[test]
@@ -1070,13 +1210,14 @@ mod tests {
 
     #[test]
     fn parse_sweeps_profile_json() {
-        for cmd in ["tiers", "scale", "storm", "crossover", "shrink"] {
+        for cmd in ["tiers", "scale", "storm", "crossover", "shrink", "integrity"] {
             match parse(&sv(&[cmd, "--profile-json"])).unwrap() {
                 Command::Tiers { opts, .. }
                 | Command::Scale { opts, .. }
                 | Command::Storm { opts, .. }
                 | Command::Crossover { opts, .. }
-                | Command::Shrink { opts, .. } => {
+                | Command::Shrink { opts, .. }
+                | Command::Integrity { opts, .. } => {
                     assert!(opts.profile, "{cmd}: --profile-json sets profile")
                 }
                 _ => panic!(),
@@ -1156,7 +1297,7 @@ mod tests {
 
     #[test]
     fn jobs_zero_is_rejected_with_serial_hint() {
-        for cmd in ["run", "tiers", "scale", "storm", "crossover", "shrink"] {
+        for cmd in ["run", "tiers", "scale", "storm", "crossover", "shrink", "integrity"] {
             let e = parse(&sv(&[cmd, "--jobs", "0"])).unwrap_err();
             assert!(
                 e.to_string().contains("use 1 for serial"),
@@ -1278,6 +1419,44 @@ mod tests {
         assert!(parse(&sv(&["shrink", "--figure", "4"])).is_err(), "unknown arg");
         // trial count / iteration knobs stay overridable
         assert!(parse(&sv(&["shrink", "iters=60", "max_failures=3"])).is_ok());
+    }
+
+    #[test]
+    fn parse_integrity_defaults_and_options() {
+        let cmd = parse(&sv(&[
+            "integrity",
+            "--max-ranks",
+            "64",
+            "--jobs",
+            "2",
+            "trials=4",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Integrity { cfg, opts } => {
+                assert_eq!(cfg.trials, 4);
+                assert_eq!(cfg.fidelity, crate::config::Fidelity::Modeled);
+                assert_eq!(
+                    cfg.ranks_per_node,
+                    crate::config::presets::CROSSOVER_RANKS_PER_NODE,
+                    "integrity base spans >= 2 nodes on every rung"
+                );
+                assert_eq!(
+                    cfg.max_failures,
+                    crate::config::presets::STORM_MAX_FAILURES
+                );
+                // the imperfect-world knobs stay at their perfect defaults
+                // on the base config: the sweep arms them per grid point
+                assert_eq!(cfg.corrupt_rate, 0.0);
+                assert_eq!(cfg.ckpt_keep, 1);
+                assert_eq!(opts.max_ranks, 64);
+                assert_eq!(opts.jobs, 2);
+            }
+            _ => panic!(),
+        }
+        assert!(parse(&sv(&["integrity", "--figure", "4"])).is_err(), "unknown arg");
+        // trial count / iteration knobs stay overridable
+        assert!(parse(&sv(&["integrity", "iters=60", "max_failures=3"])).is_ok());
     }
 
     #[test]

@@ -235,6 +235,31 @@ pub struct ExperimentConfig {
     pub mtbf_s: f64,
     /// Cap on MTBF-drawn events per trial (bounds storm length).
     pub max_failures: u32,
+    /// Checkpoint generations retained per rank (`ckpt_keep=3` keeps the
+    /// last three); the extra generations are what verify-on-load falls
+    /// back to when the newest copy is corrupt. 1 = the classic
+    /// latest-only model (plus the one-apart agreement slack).
+    pub ckpt_keep: u32,
+    /// Seeded bit-rot probability per installed checkpoint copy
+    /// (`corrupt_rate=0.01`); 0 disables the integrity machinery unless a
+    /// `corrupt@` timeline event arms it.
+    pub corrupt_rate: f64,
+    /// False-suspicion rate of the unreliable detector, in suspicions per
+    /// virtual second across the job (`detect_fp_rate=0.002`). Each false
+    /// positive kills an innocent rank and triggers a real, fully-costed
+    /// spurious recovery. 0 = the paper's perfect detector.
+    pub detect_fp_rate: f64,
+    /// Detection-latency jitter bound in seconds: each real detection's
+    /// propagation delay gains a per-(seed,trial,rank) uniform draw from
+    /// [0, detect_jitter_s]. 0 = the paper's fixed delay.
+    pub detect_jitter_s: f64,
+    /// Suspicion confirmation timeout in seconds: a suspicion (true or
+    /// false) is only acted on after this delay, doubling per repeated
+    /// suspicion of the same rank (backoff). 0 = act immediately.
+    pub suspect_timeout_s: f64,
+    /// Recovery attempts allowed to fall back to older checkpoint
+    /// generations before escalating to a full iteration-0 redeploy.
+    pub retry_budget: u32,
     /// None = pick per the paper's Table 2 policy.
     pub ckpt: Option<CkptKind>,
     /// Explicit checkpoint tier stack (`ckpt_tiers=local+partner2+fs`);
@@ -274,6 +299,12 @@ impl Default for ExperimentConfig {
             failures: Vec::new(),
             mtbf_s: 0.0,
             max_failures: 4,
+            ckpt_keep: 1,
+            corrupt_rate: 0.0,
+            detect_fp_rate: 0.0,
+            detect_jitter_s: 0.0,
+            suspect_timeout_s: 0.0,
+            retry_budget: 3,
             ckpt: None,
             ckpt_tiers: None,
             ckpt_drain_interval_s: 0.0,
@@ -317,11 +348,20 @@ impl ExperimentConfig {
     /// source: `(process, node)`. An explicit `failures=` scenario overrides
     /// the single-shot/MTBF kind, mirroring `FaultTimeline::plan`.
     pub fn configured_failure_kinds(&self) -> (bool, bool) {
-        if !self.failures.is_empty() {
+        // `corrupt@` events kill nothing; only real failures count here.
+        if self.failures.iter().any(|e| !e.corrupt) {
             return (
-                self.failures.iter().any(|e| e.kind == FailureKind::Process),
-                self.failures.iter().any(|e| e.kind == FailureKind::Node),
+                self.failures
+                    .iter()
+                    .any(|e| !e.corrupt && e.kind == FailureKind::Process),
+                self.failures
+                    .iter()
+                    .any(|e| !e.corrupt && e.kind == FailureKind::Node),
             );
+        }
+        if !self.failures.is_empty() {
+            // corruption-only scenario: no kill is drawn from `failure`
+            return (false, false);
         }
         (
             self.failure == FailureKind::Process,
@@ -413,11 +453,21 @@ impl ExperimentConfig {
             }
             "failures" => self.failures = parse_failures(value).map_err(cerr)?,
             "mtbf_s" => {
+                // Satellite bugfix: mtbf_s=0 used to silently disable the
+                // arrival process, making a typo'd exponent (0.5 -> 0)
+                // indistinguishable from "no storm". Disabling is now the
+                // explicit `off`/`none`; numbers must be a real mean.
+                if value.eq_ignore_ascii_case("off") || value.eq_ignore_ascii_case("none") {
+                    self.mtbf_s = 0.0;
+                    return Ok(());
+                }
                 let v: f64 = value
                     .parse()
                     .map_err(|_| cerr(format!("{key}: bad number: {value}")))?;
-                if !(v >= 0.0 && v.is_finite()) {
-                    return Err(cerr("mtbf_s must be >= 0 (0 disables the arrival process)"));
+                if !(v > 0.0 && v.is_finite()) {
+                    return Err(cerr(
+                        "mtbf_s must be > 0 (use mtbf_s=off to disable the arrival process)",
+                    ));
                 }
                 self.mtbf_s = v;
             }
@@ -428,6 +478,54 @@ impl ExperimentConfig {
                 }
                 self.max_failures = v;
             }
+            "ckpt_keep" => {
+                let v: u32 = num!();
+                if v == 0 {
+                    return Err(cerr(
+                        "ckpt_keep must be >= 1 (1 = keep the latest generation only)",
+                    ));
+                }
+                self.ckpt_keep = v;
+            }
+            "corrupt_rate" => {
+                let v: f64 = value
+                    .parse()
+                    .map_err(|_| cerr(format!("{key}: bad number: {value}")))?;
+                if !((0.0..=1.0).contains(&v) && v.is_finite()) {
+                    return Err(cerr("corrupt_rate must be a probability in [0, 1]"));
+                }
+                self.corrupt_rate = v;
+            }
+            "detect_fp_rate" => {
+                let v: f64 = value
+                    .parse()
+                    .map_err(|_| cerr(format!("{key}: bad number: {value}")))?;
+                if !(v >= 0.0 && v.is_finite()) {
+                    return Err(cerr(
+                        "detect_fp_rate must be >= 0 (false suspicions per virtual second)",
+                    ));
+                }
+                self.detect_fp_rate = v;
+            }
+            "detect_jitter_s" => {
+                let v: f64 = value
+                    .parse()
+                    .map_err(|_| cerr(format!("{key}: bad number: {value}")))?;
+                if !(v >= 0.0 && v.is_finite()) {
+                    return Err(cerr("detect_jitter_s must be >= 0"));
+                }
+                self.detect_jitter_s = v;
+            }
+            "suspect_timeout_s" => {
+                let v: f64 = value
+                    .parse()
+                    .map_err(|_| cerr(format!("{key}: bad number: {value}")))?;
+                if !(v >= 0.0 && v.is_finite()) {
+                    return Err(cerr("suspect_timeout_s must be >= 0"));
+                }
+                self.suspect_timeout_s = v;
+            }
+            "retry_budget" => self.retry_budget = num!(),
             "ckpt" => {
                 self.ckpt = Some(
                     CkptKind::parse(value)
@@ -510,6 +608,9 @@ impl ExperimentConfig {
             ));
         }
         let (has_process, has_node) = self.configured_failure_kinds();
+        // An unreliable detector's false positives kill innocent ranks for
+        // real, so the stack and topology must survive process failures.
+        let has_process = has_process || self.detect_fp_rate > 0.0;
         let any_failure = has_process || has_node;
         if any_failure && self.iters < 3 {
             // Iteration draws need a non-degenerate [1, iters-1) window (the
@@ -522,7 +623,7 @@ impl ExperimentConfig {
             ));
         }
         for ev in &self.failures {
-            if ev.kind == FailureKind::None {
+            if ev.kind == FailureKind::None && !ev.corrupt {
                 return Err(cerr(format!("failure event `{ev}`: kind cannot be none")));
             }
             if ev.rank >= self.ranks {
@@ -797,7 +898,7 @@ mod tests {
         // scenario + MTBF is ambiguous
         c.apply("mtbf_s", "2.0").unwrap();
         assert!(c.validate().is_err());
-        c.apply("mtbf_s", "0").unwrap();
+        c.apply("mtbf_s", "off").unwrap();
         // out-of-range events are rejected
         c.apply("failures", "proc@3:r99").unwrap();
         assert!(c.validate().is_err(), "victim out of range");
@@ -808,6 +909,85 @@ mod tests {
         assert!(c.apply("failures", "warp@1:r0").is_err());
         assert!(c.apply("mtbf_s", "-1").is_err());
         assert!(c.apply("max_failures", "0").is_err());
+    }
+
+    #[test]
+    fn mtbf_zero_and_negative_need_explicit_off() {
+        // Satellite bugfix: mtbf_s=0 silently disabled the arrival process;
+        // disabling is now the explicit `off`/`none`.
+        let mut c = ExperimentConfig::default();
+        for bad in ["0", "0.0", "-3", "nan", "inf"] {
+            let msg = c.apply("mtbf_s", bad).unwrap_err().to_string();
+            assert!(msg.contains("mtbf_s=off"), "{bad}: actionable error: {msg}");
+        }
+        c.apply("mtbf_s", "2.5").unwrap();
+        assert_eq!(c.mtbf_s, 2.5);
+        c.apply("mtbf_s", "off").unwrap();
+        assert_eq!(c.mtbf_s, 0.0);
+        c.apply("mtbf_s", "1.5").unwrap();
+        c.apply("mtbf_s", "none").unwrap();
+        assert_eq!(c.mtbf_s, 0.0);
+    }
+
+    #[test]
+    fn integrity_and_detector_keys_parse_and_validate() {
+        let mut c = ExperimentConfig::default();
+        c.apply("ckpt_keep", "3").unwrap();
+        c.apply("corrupt_rate", "0.25").unwrap();
+        c.apply("detect_fp_rate", "0.002").unwrap();
+        c.apply("detect_jitter_s", "0.01").unwrap();
+        c.apply("suspect_timeout_s", "0.5").unwrap();
+        c.apply("retry_budget", "2").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.ckpt_keep, 3);
+        assert_eq!(c.corrupt_rate, 0.25);
+        assert_eq!(c.detect_fp_rate, 0.002);
+        assert_eq!(c.detect_jitter_s, 0.01);
+        assert_eq!(c.suspect_timeout_s, 0.5);
+        assert_eq!(c.retry_budget, 2);
+        // actionable rejections
+        let msg = c.apply("ckpt_keep", "0").unwrap_err().to_string();
+        assert!(msg.contains("latest generation"), "{msg}");
+        assert!(c.apply("corrupt_rate", "1.5").is_err());
+        assert!(c.apply("corrupt_rate", "-0.1").is_err());
+        assert!(c.apply("detect_fp_rate", "-1").is_err());
+        assert!(c.apply("detect_jitter_s", "nan").is_err());
+        assert!(c.apply("suspect_timeout_s", "-0.5").is_err());
+        assert!(c.apply("retry_budget", "x").is_err());
+        // retry_budget=0 is legal: first corrupt load escalates immediately
+        c.apply("retry_budget", "0").unwrap();
+    }
+
+    #[test]
+    fn corrupt_events_validate_like_failures_but_kill_nothing() {
+        let mut c = ExperimentConfig::default();
+        c.apply("failures", "corrupt@2:r1,proc@3:r5").unwrap();
+        c.validate().unwrap();
+        let (has_proc, has_node) = c.configured_failure_kinds();
+        assert!(has_proc && !has_node, "corrupt events are not failures");
+        // corruption-only scenario: no kill kind at all
+        c.apply("failures", "corrupt@2:r1").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.configured_failure_kinds(), (false, false));
+        // rank/anchor range checks still apply to corrupt events
+        c.apply("failures", "corrupt@2:r99").unwrap();
+        assert!(c.validate().is_err(), "victim out of range");
+        c.apply("failures", "corrupt@25:r1").unwrap();
+        assert!(c.validate().is_err(), "iteration past the run");
+    }
+
+    #[test]
+    fn unreliable_detector_demands_process_survivable_stack() {
+        let mut c = ExperimentConfig::default();
+        c.failure = FailureKind::None;
+        c.apply("detect_fp_rate", "0.01").unwrap();
+        c.apply("ckpt_tiers", "local").unwrap();
+        assert!(
+            c.validate().is_err(),
+            "false positives kill ranks for real; local-only cannot survive"
+        );
+        c.apply("ckpt_tiers", "local+partner1").unwrap();
+        c.validate().unwrap();
     }
 
     #[test]
@@ -848,7 +1028,7 @@ mod tests {
     #[test]
     fn scenario_keys_roundtrip_through_toml() {
         let doc = toml::parse(
-            "failures = \"proc@2:r1,node@4:r6\"\nmax_failures = 7\nmtbf_s = 0.0\n",
+            "failures = \"proc@2:r1,node@4:r6\"\nmax_failures = 7\nmtbf_s = \"off\"\n",
         )
         .unwrap();
         let mut c = ExperimentConfig::default();

@@ -94,6 +94,33 @@ pub const CROSSOVER_CKPT_EVERY: [u32; 2] = [1, 4];
 /// shadow replicas (degree 2 is a grid axis, not an opt-in).
 pub const CROSSOVER_RANKS_PER_NODE: u32 = 8;
 
+/// Bit-rot axis of the integrity sweep (`reinitpp integrity`): perfect
+/// storage next to a harsh 20% per-copy corruption draw — high enough
+/// that multi-generation retention (`ckpt_keep`) and the verify-then-
+/// fall-back path visibly earn their keep within a handful of trials.
+pub const INTEGRITY_CORRUPT_RATES: [f64; 2] = [0.0, 0.2];
+
+/// Detector axis of the integrity sweep: `(fp_rate/s, jitter_s,
+/// suspect_timeout_s)` bundles. The first is the perfect detector every
+/// other sweep assumes; the second suspects a healthy rank about every
+/// two virtual seconds, smears detection latency by up to 2 ms and holds
+/// each suspicion for a 10 ms confirmation timeout (doubling per repeat
+/// offence) — enough spurious recoveries per ≈1 s storm trial to price
+/// imperfect detection without drowning the real failures.
+pub const INTEGRITY_DETECTORS: [(f64, f64, f64); 2] =
+    [(0.0, 0.0, 0.0), (0.5, 0.002, 0.01)];
+
+/// Retention axis of the integrity sweep: keep only the newest generation
+/// (every other sweep's behaviour) vs a three-deep history for the
+/// verify-on-load fallback to dig through.
+pub const INTEGRITY_KEEP: [u32; 2] = [1, 3];
+
+/// The integrity sweep's single MTBF rung: the middle of the storm grid,
+/// tight enough that every trial recovers several times (each recovery is
+/// a verify-and-agree round) without the 0.1 s cascade regime swamping
+/// the corruption signal.
+pub const INTEGRITY_MTBF_S: f64 = 0.5;
+
 /// The parsed tier-sweep stacks.
 pub fn tier_sweep_stacks() -> Vec<StackSpec> {
     TIER_SWEEP_STACKS
@@ -185,6 +212,25 @@ mod tests {
                 "every crossover rung must host node-disjoint degree-{STORM_REPL_DEGREE} groups"
             );
         }
+    }
+
+    #[test]
+    fn integrity_presets_are_sane() {
+        assert_eq!(INTEGRITY_CORRUPT_RATES[0], 0.0, "perfect-storage baseline");
+        assert!(INTEGRITY_CORRUPT_RATES
+            .iter()
+            .all(|&r| (0.0..=1.0).contains(&r)));
+        let (fp0, j0, t0) = INTEGRITY_DETECTORS[0];
+        assert_eq!((fp0, j0, t0), (0.0, 0.0, 0.0), "perfect-detector baseline");
+        assert!(INTEGRITY_DETECTORS
+            .iter()
+            .all(|&(fp, j, t)| fp >= 0.0 && j >= 0.0 && t >= 0.0));
+        assert_eq!(INTEGRITY_KEEP[0], 1, "single-generation baseline");
+        assert!(INTEGRITY_KEEP.windows(2).all(|w| w[0] < w[1]));
+        assert!(
+            STORM_SWEEP_MTBF_S.contains(&INTEGRITY_MTBF_S),
+            "integrity rides a storm MTBF rung"
+        );
     }
 
     #[test]

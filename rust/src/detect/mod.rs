@@ -10,7 +10,20 @@
 //! heartbeat detector is modeled as an additional notification latency on
 //! the RTE->rank path (see `recovery::ulfm`), per Bosilca et al.'s
 //! always-on observation ring.
+//!
+//! The paper assumes this machinery is *perfect*: every death is noticed
+//! exactly once after a fixed delay and nothing else ever fires. The
+//! unreliable-detector extension (`detect_fp_rate`, `detect_jitter_s`,
+//! `suspect_timeout_s`) prices the imperfect world of real heartbeat
+//! detectors (cf. FTHP-MPI): [`SuspicionSchedule`] pre-draws a
+//! per-(seed,trial)-deterministic stream of *false suspicions* — each one
+//! kills an innocent rank for real, triggering a fully-costed spurious
+//! recovery — and [`detect_jitter`] adds a pure-hash latency jitter to
+//! every true detection. Both are independent of the recovery method under
+//! test, mirroring the fault-injection methodology.
 
+use crate::config::ExperimentConfig;
+use crate::sim::rng::Rng;
 use crate::sim::{ProcId, Sender, Sim, SimDuration, SimTime};
 
 /// A detected failure, delivered to whoever monitors the process.
@@ -70,6 +83,90 @@ pub fn watch_daemon(
         let at = sim2.watch(daemon).await;
         tx.send(DetectEvent::NodeDead { node, at }, break_delay);
     });
+}
+
+/// One planned false suspicion of the unreliable detector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Suspicion {
+    /// Virtual seconds after application start when the suspicion fires
+    /// (before the confirmation timeout/backoff is added).
+    pub at_s: f64,
+    /// The innocently suspected rank.
+    pub rank: u32,
+}
+
+/// The false-suspicion stream of one trial's unreliable detector.
+///
+/// Pre-drawn at trial start from its own RNG lineage (`detector` fork), so
+/// the stream depends only on `(seed, trial)` and the detector knobs —
+/// never on the recovery method, the failure timeline, or event ordering.
+/// Inter-arrival times are exponential with mean `1 / detect_fp_rate`
+/// (false positives are a Poisson process, like the real failures they
+/// imitate); victims are uniform; the stream is capped at `max_failures`
+/// events to bound pathological rates.
+#[derive(Clone, Debug, Default)]
+pub struct SuspicionSchedule {
+    pub events: Vec<Suspicion>,
+}
+
+impl SuspicionSchedule {
+    pub fn plan(cfg: &ExperimentConfig, trial: u32) -> SuspicionSchedule {
+        if cfg.detect_fp_rate <= 0.0 {
+            return SuspicionSchedule::default();
+        }
+        let mut rng = Rng::new(cfg.seed)
+            .fork("detector")
+            .fork(&format!("trial{trial}"));
+        let mean = 1.0 / cfg.detect_fp_rate;
+        let mut t = 0.0f64;
+        let mut events = Vec::with_capacity(cfg.max_failures as usize);
+        for _ in 0..cfg.max_failures {
+            let u = rng.gen_f64();
+            t += (mean * -(1.0 - u).ln()).max(1e-6);
+            let rank = rng.gen_range(cfg.ranks as u64) as u32;
+            events.push(Suspicion { at_s: t, rank });
+        }
+        SuspicionSchedule { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+}
+
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Detection-latency jitter for one real detection: a pure hash of
+/// `(seed, trial, rank)` mapped uniformly onto `[0, jitter_s]`. Being a
+/// pure hash (not a stream draw), the jitter a given victim sees is
+/// independent of how many detections preceded it — recovery methods that
+/// detect the same death in different orders still see identical delays.
+pub fn detect_jitter(seed: u64, trial: u32, rank: u32, jitter_s: f64) -> SimDuration {
+    if jitter_s <= 0.0 {
+        return SimDuration::ZERO;
+    }
+    let h = mix64(mix64(seed ^ 0x7e57_ab1e_dead_10cc) ^ ((trial as u64) << 32 | rank as u64));
+    let unit = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    SimDuration::from_secs_f64(unit * jitter_s)
+}
+
+/// Confirmation delay before acting on the `nth` suspicion of a rank
+/// (0-based): the base timeout doubled per prior suspicion — the classic
+/// accrual-style backoff that makes repeatedly suspected ranks harder to
+/// declare dead.
+pub fn suspicion_backoff(timeout_s: f64, nth: u32) -> SimDuration {
+    if timeout_s <= 0.0 {
+        return SimDuration::ZERO;
+    }
+    SimDuration::from_secs_f64(timeout_s * (1u64 << nth.min(32)) as f64)
 }
 
 #[cfg(test)]
@@ -282,5 +379,110 @@ mod tests {
                 );
             }
         }
+    }
+
+    // ---- unreliable-detector pseudo-property tests ----
+
+    fn noisy_cfg(seed: u64, ranks: u32, fp_rate: f64) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.seed = seed;
+        c.ranks = ranks;
+        c.detect_fp_rate = fp_rate;
+        c.max_failures = 6;
+        c
+    }
+
+    #[test]
+    fn suspicion_stream_is_deterministic_per_seed_and_trial() {
+        // Property: same (seed, trial) -> identical stream; different trials
+        // (or seeds) -> different streams. Randomized shapes, seeded loop.
+        let mut s = 0x5eed_0001_u64;
+        for round in 0..16 {
+            let seed = xorshift(&mut s);
+            let ranks = 4 + (xorshift(&mut s) % 60) as u32;
+            let trial = (xorshift(&mut s) % 8) as u32;
+            let cfg = noisy_cfg(seed, ranks, 0.5);
+            let a = SuspicionSchedule::plan(&cfg, trial);
+            let b = SuspicionSchedule::plan(&cfg, trial);
+            assert_eq!(a.events, b.events, "round {round}: replan must replay");
+            assert_eq!(a.len(), cfg.max_failures as usize);
+            let c = SuspicionSchedule::plan(&cfg, trial + 1);
+            assert_ne!(a.events, c.events, "round {round}: trials must differ");
+            let mut prev = 0.0;
+            for ev in &a.events {
+                assert!(ev.at_s > prev, "round {round}: arrivals strictly increase");
+                prev = ev.at_s;
+                assert!(ev.rank < ranks, "round {round}: victim in range");
+            }
+        }
+    }
+
+    #[test]
+    fn suspicion_stream_ignores_recovery_and_failure_timeline() {
+        // Property: the stream depends only on (seed, trial) and the
+        // detector knobs — CR and Reinit face identical false positives,
+        // and adding real failures does not perturb it.
+        use crate::config::{FailureKind, RecoveryKind};
+        let mut s = 0xdead_beef_u64;
+        for round in 0..16 {
+            let seed = xorshift(&mut s);
+            let trial = (xorshift(&mut s) % 5) as u32;
+            let mut a = noisy_cfg(seed, 32, 0.25);
+            a.recovery = RecoveryKind::Cr;
+            let mut b = noisy_cfg(seed, 32, 0.25);
+            b.recovery = RecoveryKind::Reinit;
+            b.failure = FailureKind::Node;
+            b.mtbf_s = 0.5;
+            assert_eq!(
+                SuspicionSchedule::plan(&a, trial).events,
+                SuspicionSchedule::plan(&b, trial).events,
+                "round {round}: stream must ignore recovery and timeline"
+            );
+        }
+        // a perfect detector draws nothing at all
+        let quiet = noisy_cfg(1, 32, 0.0);
+        assert!(SuspicionSchedule::plan(&quiet, 0).is_empty());
+    }
+
+    #[test]
+    fn jitter_is_pure_bounded_and_order_free() {
+        // Property: detect_jitter is a pure function of (seed, trial, rank)
+        // bounded by jitter_s — identical no matter when or how often it is
+        // asked, and zero exactly when jitter is off.
+        let mut s = 0x1a7e_c0de_u64;
+        for round in 0..16 {
+            let seed = xorshift(&mut s);
+            let trial = (xorshift(&mut s) % 6) as u32;
+            let rank = (xorshift(&mut s) % 64) as u32;
+            let jitter_s = 0.001 + (xorshift(&mut s) % 100) as f64 / 1000.0;
+            let a = detect_jitter(seed, trial, rank, jitter_s);
+            let b = detect_jitter(seed, trial, rank, jitter_s);
+            assert_eq!(a, b, "round {round}: pure function");
+            assert!(
+                a.secs_f64() <= jitter_s,
+                "round {round}: jitter {a:?} exceeds bound {jitter_s}"
+            );
+            assert_eq!(
+                detect_jitter(seed, trial, rank, 0.0),
+                SimDuration::ZERO,
+                "round {round}: no jitter when off"
+            );
+            assert_ne!(
+                detect_jitter(seed, trial, rank.wrapping_add(1) % 64, jitter_s),
+                a,
+                "round {round}: distinct ranks draw distinct jitter (w.h.p.)"
+            );
+        }
+    }
+
+    #[test]
+    fn suspicion_backoff_doubles_per_prior_suspicion() {
+        assert_eq!(suspicion_backoff(0.0, 3), SimDuration::ZERO);
+        assert_eq!(
+            suspicion_backoff(0.5, 0),
+            SimDuration::from_millis(500)
+        );
+        assert_eq!(suspicion_backoff(0.5, 1), SimDuration::from_secs_f64(1.0));
+        assert_eq!(suspicion_backoff(0.5, 3), SimDuration::from_secs_f64(4.0));
     }
 }

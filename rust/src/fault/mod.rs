@@ -39,7 +39,7 @@ pub enum FaultAnchor {
     Time(f64),
 }
 
-/// One planned failure.
+/// One planned failure (or checkpoint-corruption event).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FaultEvent {
     pub kind: FailureKind,
@@ -47,19 +47,25 @@ pub struct FaultEvent {
     /// Victim rank. For node failures the node *currently hosting* this
     /// rank dies (the rank SIGKILLs its parent daemon, per the paper).
     pub rank: u32,
+    /// `corrupt@` event: nothing dies — instead every stored copy of the
+    /// victim rank's newest checkpoint generation is silently corrupted
+    /// (detected only by verify-on-load). `kind` is `None` for these.
+    pub corrupt: bool,
 }
 
 impl FaultEvent {
     /// Parse one scenario token: `proc@3:r5` (iteration-anchored process
     /// failure of rank 5 at iteration 3), `node@7:r12`, `proc@t1.25:r3`
-    /// (virtual-time-anchored at 1.25 s).
+    /// (virtual-time-anchored at 1.25 s), `corrupt@4:r2` (silent corruption
+    /// of rank 2's newest checkpoint at iteration 4).
     pub fn parse(tok: &str) -> Result<FaultEvent, String> {
         let err = |m: &str| format!("failure event `{tok}`: {m} (expected kind@anchor:rN, e.g. proc@3:r5 or node@t1.25:r12)");
         let (kind_s, rest) = tok.split_once('@').ok_or_else(|| err("missing `@`"))?;
-        let kind = match kind_s.to_ascii_lowercase().as_str() {
-            "proc" | "process" => FailureKind::Process,
-            "node" => FailureKind::Node,
-            _ => return Err(err("kind must be proc or node")),
+        let (kind, corrupt) = match kind_s.to_ascii_lowercase().as_str() {
+            "proc" | "process" => (FailureKind::Process, false),
+            "node" => (FailureKind::Node, false),
+            "corrupt" => (FailureKind::None, true),
+            _ => return Err(err("kind must be one of proc, process, node, corrupt")),
         };
         let (at_s, rank_s) = rest.split_once(':').ok_or_else(|| err("missing `:rN` victim"))?;
         let anchor = if let Some(t) = at_s.strip_prefix('t') {
@@ -76,16 +82,25 @@ impl FaultEvent {
             .ok_or_else(|| err("victim must be rN"))?
             .parse()
             .map_err(|_| err("bad victim rank"))?;
-        Ok(FaultEvent { kind, anchor, rank })
+        Ok(FaultEvent {
+            kind,
+            anchor,
+            rank,
+            corrupt,
+        })
     }
 }
 
 impl std::fmt::Display for FaultEvent {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let kind = match self.kind {
-            FailureKind::Process => "proc",
-            FailureKind::Node => "node",
-            FailureKind::None => "none",
+        let kind = if self.corrupt {
+            "corrupt"
+        } else {
+            match self.kind {
+                FailureKind::Process => "proc",
+                FailureKind::Node => "node",
+                FailureKind::None => "none",
+            }
         };
         match self.anchor {
             FaultAnchor::Iteration(i) => write!(f, "{kind}@{i}:r{}", self.rank),
@@ -145,6 +160,7 @@ impl FaultTimeline {
                 kind: cfg.failure,
                 anchor: FaultAnchor::Iteration(iteration),
                 rank,
+                corrupt: false,
             }],
         }
     }
@@ -167,6 +183,7 @@ impl FaultTimeline {
                 kind: cfg.failure,
                 anchor: FaultAnchor::Time(t),
                 rank,
+                corrupt: false,
             });
         }
         FaultTimeline { events }
@@ -410,7 +427,15 @@ mod tests {
 
     #[test]
     fn event_parse_display_roundtrip() {
-        for s in ["proc@3:r5", "node@7:r12", "proc@t1.25:r3", "node@t0.5:r0"] {
+        // every kind, both anchors
+        for s in [
+            "proc@3:r5",
+            "node@7:r12",
+            "proc@t1.25:r3",
+            "node@t0.5:r0",
+            "corrupt@4:r2",
+            "corrupt@t2.5:r9",
+        ] {
             let e = FaultEvent::parse(s).unwrap();
             assert_eq!(e.to_string(), s);
         }
@@ -418,6 +443,9 @@ mod tests {
             FaultEvent::parse("process@2:r1").unwrap().kind,
             FailureKind::Process
         );
+        let c = FaultEvent::parse("corrupt@4:r2").unwrap();
+        assert!(c.corrupt);
+        assert_eq!(c.kind, FailureKind::None, "nothing dies on corruption");
         for bad in [
             "proc3:r5",     // no @
             "proc@3",       // no victim
@@ -430,6 +458,12 @@ mod tests {
         ] {
             assert!(FaultEvent::parse(bad).is_err(), "{bad} must not parse");
         }
+        // the unknown-kind error enumerates what IS valid
+        let msg = FaultEvent::parse("warp@3:r5").unwrap_err();
+        assert!(
+            msg.contains("proc, process, node, corrupt"),
+            "error must enumerate valid kinds: {msg}"
+        );
     }
 
     #[test]

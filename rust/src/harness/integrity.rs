@@ -1,0 +1,354 @@
+//! Imperfect-world sweep (`reinitpp integrity`): checkpoint corruption ×
+//! detector noise × retention depth × recovery family, over process-failure
+//! storms.
+//!
+//! Every other sweep assumes a perfect world: checkpoints read back exactly
+//! as written and the failure detector never lies. This sweep prices both
+//! assumptions. The corruption axis draws seeded per-copy bit-rot
+//! (`corrupt_rate`) that verify-on-load only discovers at recovery time;
+//! the retention axis (`ckpt_keep`) decides how many older generations the
+//! fallback can dig through before escalating to an iteration-0
+//! `degraded_redeploy`; the detector axis adds false suspicions that
+//! trigger real, fully-costed recoveries plus detection-latency jitter.
+//! Crossing them against all five recovery families shows who pays most
+//! for an imperfect world: CR re-deploys per spurious recovery, the
+//! in-place families re-verify per event, and replication's mirrors dodge
+//! the corruption axis entirely (the mirror protocol verifies in-line).
+//!
+//! Like every harness sweep, the grid is flattened to (point, trial) work
+//! items for the pool and merged deterministically, so
+//! `integrity_compare.csv` is byte-identical for any `--jobs` value
+//! (pinned by the unit test below and a serial-vs-2-worker `cmp` in CI).
+
+use super::figures::{cell, SweepOpts};
+use super::{run_points, Point};
+use crate::config::{presets, ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
+
+/// The family rows of the grid: (recovery, spare nodes). Shrink runs with
+/// zero spares by construction (its whole point); everyone else gets the
+/// paper's one spare node.
+const FAMILIES: [(RecoveryKind, u32); 5] = [
+    (RecoveryKind::Cr, 1),
+    (RecoveryKind::Reinit, 1),
+    (RecoveryKind::Ulfm, 1),
+    (RecoveryKind::Replication, 1),
+    (RecoveryKind::Shrink, 0),
+];
+
+/// Rank counts the integrity sweep visits (the storm rungs, capped by
+/// `--max-ranks`).
+fn sweep_ranks(max: u32) -> Vec<u32> {
+    presets::STORM_SWEEP_RANKS
+        .iter()
+        .copied()
+        .filter(|&r| r <= max)
+        .collect()
+}
+
+/// Build the sweep grid: ranks × family × corrupt rate × detector bundle ×
+/// retention depth, process-failure storms at the middle storm MTBF,
+/// modeled fidelity.
+fn build_grid(
+    base: &ExperimentConfig,
+    opts: &SweepOpts,
+) -> Result<Vec<ExperimentConfig>, String> {
+    if base.fidelity != Fidelity::Modeled {
+        return Err(
+            "integrity: the sweep runs fidelity=modeled (storm trials re-execute \
+             many iterations); drop fidelity="
+                .to_string(),
+        );
+    }
+    let mut cfgs = Vec::new();
+    for &ranks in &sweep_ranks(opts.max_ranks) {
+        for &(rk, spares) in &FAMILIES {
+            for &rate in &presets::INTEGRITY_CORRUPT_RATES {
+                for &(fp, jitter, timeout) in &presets::INTEGRITY_DETECTORS {
+                    for &keep in &presets::INTEGRITY_KEEP {
+                        let mut c = base.clone();
+                        c.ranks = ranks;
+                        c.recovery = rk;
+                        c.failure = FailureKind::Process;
+                        c.mtbf_s = presets::INTEGRITY_MTBF_S;
+                        c.spare_nodes = spares;
+                        c.corrupt_rate = rate;
+                        c.detect_fp_rate = fp;
+                        c.detect_jitter_s = jitter;
+                        c.suspect_timeout_s = timeout;
+                        c.ckpt_keep = keep;
+                        c.ckpt = None; // Table 2 policy per method
+                        if rk == RecoveryKind::Replication {
+                            c.repl_degree = presets::STORM_REPL_DEGREE;
+                            if c.nodes() < c.repl_degree {
+                                continue; // no node-disjoint shadow on this rung
+                            }
+                        }
+                        c.validate().map_err(|e| {
+                            format!(
+                                "integrity sweep point ranks={ranks} recovery={rk} \
+                                 corrupt_rate={rate} detect_fp_rate={fp} \
+                                 ckpt_keep={keep}: {e}"
+                            )
+                        })?;
+                        cfgs.push(c);
+                    }
+                }
+            }
+        }
+    }
+    if cfgs.is_empty() {
+        return Err(format!(
+            "integrity sweep: no rank count of {:?} fits --max-ranks {}",
+            presets::STORM_SWEEP_RANKS,
+            opts.max_ranks
+        ));
+    }
+    Ok(cfgs)
+}
+
+/// Run the imperfect-world sweep: markdown table on stdout, CSV under
+/// `outdir/integrity_compare.csv`.
+pub fn integrity_sweep(
+    base: &ExperimentConfig,
+    opts: &SweepOpts,
+) -> Result<Vec<Point>, String> {
+    let cfgs = build_grid(base, opts)?;
+    let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
+    crate::info!(
+        "  integrity sweep: {} points / {trials} trials (corrupt {:?}, keep {:?}, \
+         detectors {:?}) on {} worker(s)...",
+        cfgs.len(),
+        presets::INTEGRITY_CORRUPT_RATES,
+        presets::INTEGRITY_KEEP,
+        presets::INTEGRITY_DETECTORS,
+        opts.jobs
+    );
+    let (points, stats) = run_points(&cfgs, opts.jobs);
+    super::figures::finish_sweep("integrity_compare", opts, &points, &stats);
+
+    println!(
+        "\n## Imperfect world ({}): corruption x detector noise x retention\n",
+        base.app
+    );
+    println!(
+        "| ranks | recovery | corrupt | fp/s | keep | failures | spurious | \
+         retries | fallback | escal. | verify (s) | total (s) | recovery (s) | \
+         degraded |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|");
+    for p in &points {
+        println!(
+            "| {} | {} | {} | {} | {} | {:.1} | {:.1} | {:.1} | {:.1} | {:.1} | \
+             {:.4} | {} | {} | {:.1} |",
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.corrupt_rate,
+            p.cfg.detect_fp_rate,
+            p.cfg.ckpt_keep,
+            p.failures,
+            p.spurious,
+            p.retries,
+            p.fallback_iters,
+            p.escalations,
+            p.verify.mean,
+            cell(&p.total),
+            cell(&p.event_recovery),
+            p.degraded,
+        );
+    }
+    println!("\n(expected shape: corruption costs nothing until a recovery reads it —");
+    println!(" then keep=1 escalates to iteration-0 re-deploys where keep=3 falls");
+    println!(" back a few iterations; a lying detector taxes every family with");
+    println!(" real recoveries — see EXPERIMENTS.md §Checkpoint integrity)");
+
+    if let Err(e) = write_integrity_csv(&opts.outdir, &points) {
+        crate::warnln!("could not write integrity_compare.csv: {e}");
+    }
+    Ok(points)
+}
+
+/// `integrity_compare.csv`: one row per grid point, with the imperfect-world
+/// bookkeeping columns next to the per-event decomposition.
+fn write_integrity_csv(outdir: &str, points: &[Point]) -> std::io::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    let mut s = String::from(
+        "app,ranks,recovery,failure,corrupt_rate,detect_fp_rate,ckpt_keep,\
+         retry_budget,mtbf_s,max_failures,failures,spurious,retries,\
+         fallback_iters,escalations,degraded,verify_s,\
+         total_s,total_ci,detect_s,detect_ci,recovery_s,recovery_ci,\
+         rollback_s,rollback_ci,ckpt_write_s,ckpt_read_s,app_s,trials\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            p.cfg.app,
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.failure,
+            p.cfg.corrupt_rate,
+            p.cfg.detect_fp_rate,
+            p.cfg.ckpt_keep,
+            p.cfg.retry_budget,
+            p.cfg.mtbf_s,
+            p.cfg.max_failures,
+            p.failures,
+            p.spurious,
+            p.retries,
+            p.fallback_iters,
+            p.escalations,
+            p.degraded,
+            p.verify.mean,
+            p.total.mean,
+            p.total.ci95,
+            p.detect.mean,
+            p.detect.ci95,
+            p.event_recovery.mean,
+            p.event_recovery.ci95,
+            p.rollback.mean,
+            p.rollback.ci95,
+            p.ckpt_write.mean,
+            p.ckpt_read.mean,
+            p.app.mean,
+            p.total.n,
+        ));
+    }
+    std::fs::write(format!("{outdir}/integrity_compare.csv"), s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AppKind;
+
+    fn quick_base() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.app = AppKind::Hpccg;
+        c.trials = 2;
+        c.iters = 20;
+        c.ranks_per_node = presets::CROSSOVER_RANKS_PER_NODE;
+        c.fidelity = Fidelity::Modeled;
+        c.hpccg_nx = 4;
+        c.max_failures = presets::STORM_MAX_FAILURES;
+        // paper-scale virtual iteration cost, same anchor as the storm sweep
+        c.calib.modeled_compute_scale = presets::STORM_COMPUTE_SCALE;
+        c
+    }
+
+    #[test]
+    fn grid_shape() {
+        let opts = SweepOpts {
+            max_ranks: 256,
+            outdir: "/tmp/reinitpp-test-results".into(),
+            jobs: 1,
+            profile: false,
+        };
+        let cfgs = build_grid(&quick_base(), &opts).unwrap();
+        // 3 rungs x 5 families x 2 rates x 2 detectors x 2 keeps (8
+        // ranks/node: even the 16-rank rung hosts node-disjoint shadows)
+        assert_eq!(
+            cfgs.len(),
+            presets::STORM_SWEEP_RANKS.len()
+                * FAMILIES.len()
+                * presets::INTEGRITY_CORRUPT_RATES.len()
+                * presets::INTEGRITY_DETECTORS.len()
+                * presets::INTEGRITY_KEEP.len()
+        );
+        // every family appears, shrink with zero spares
+        for &(rk, spares) in &FAMILIES {
+            assert!(cfgs
+                .iter()
+                .any(|c| c.recovery == rk && c.spare_nodes == spares));
+        }
+        // the grid spans the perfect corner and the fully-imperfect corner
+        assert!(cfgs.iter().any(|c| c.corrupt_rate == 0.0
+            && c.detect_fp_rate == 0.0
+            && c.ckpt_keep == 1));
+        assert!(cfgs.iter().any(|c| c.corrupt_rate > 0.0
+            && c.detect_fp_rate > 0.0
+            && c.ckpt_keep > 1));
+    }
+
+    #[test]
+    fn non_modeled_fidelity_is_rejected() {
+        let mut base = quick_base();
+        base.fidelity = Fidelity::Auto;
+        let err = build_grid(&base, &SweepOpts::default()).unwrap_err();
+        assert!(err.contains("modeled"), "{err}");
+    }
+
+    #[test]
+    fn integrity_sweep_runs_and_is_jobs_deterministic() {
+        // The smallest rung, serial vs 2 workers: identical Points and
+        // therefore identical integrity_compare.csv bytes.
+        let base = quick_base();
+        let mk = |jobs, outdir: &str| SweepOpts {
+            max_ranks: 16,
+            outdir: outdir.into(),
+            jobs,
+            profile: false,
+        };
+        let serial = integrity_sweep(
+            &base,
+            &mk(1, "/tmp/reinitpp-test-results/integrity-j1"),
+        )
+        .unwrap();
+        let par = integrity_sweep(
+            &base,
+            &mk(2, "/tmp/reinitpp-test-results/integrity-j2"),
+        )
+        .unwrap();
+        assert_eq!(
+            serial.len(),
+            5 * 2 * 2 * 2,
+            "16 ranks x 5 families x 2 rates x 2 detectors x 2 keeps"
+        );
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.cfg.recovery, b.cfg.recovery);
+            assert_eq!(a.cfg.corrupt_rate, b.cfg.corrupt_rate);
+            assert_eq!(a.cfg.ckpt_keep, b.cfg.ckpt_keep);
+            assert_eq!(a.total, b.total);
+            assert_eq!(a.event_recovery, b.event_recovery);
+            assert_eq!(a.verify, b.verify);
+            assert_eq!(a.failures, b.failures);
+            assert_eq!(a.spurious, b.spurious);
+            assert_eq!(a.retries, b.retries);
+            assert_eq!(a.fallback_iters, b.fallback_iters);
+            assert_eq!(a.escalations, b.escalations);
+        }
+        let j1 = std::fs::read(
+            "/tmp/reinitpp-test-results/integrity-j1/integrity_compare.csv",
+        )
+        .unwrap();
+        let j2 = std::fs::read(
+            "/tmp/reinitpp-test-results/integrity-j2/integrity_compare.csv",
+        )
+        .unwrap();
+        assert!(!j1.is_empty());
+        assert_eq!(j1, j2, "integrity CSV bytes must not depend on worker count");
+
+        // The perfect corner books no imperfect-world costs at all…
+        for p in &serial {
+            if p.cfg.corrupt_rate == 0.0 && p.cfg.detect_fp_rate == 0.0 {
+                assert_eq!(p.spurious, 0.0, "{}: perfect detector", p.cfg.recovery);
+                assert_eq!(p.retries, 0.0);
+                assert_eq!(p.fallback_iters, 0.0);
+                assert_eq!(p.verify.mean, 0.0, "verify machinery must stay off");
+            }
+        }
+        // …the noisy detector triggers real recoveries somewhere…
+        assert!(
+            serial
+                .iter()
+                .any(|p| p.cfg.detect_fp_rate > 0.0 && p.spurious > 0.0),
+            "no false suspicion landed a spurious recovery"
+        );
+        // …and the corruption axis makes some rollback-family recovery
+        // verify its generations (replication can dodge via its mirrors).
+        assert!(
+            serial.iter().any(|p| p.cfg.corrupt_rate > 0.0
+                && p.cfg.recovery != RecoveryKind::Replication
+                && p.verify.mean > 0.0),
+            "no corrupted point ever verified a checkpoint"
+        );
+    }
+}

@@ -11,6 +11,7 @@
 
 mod crossover;
 mod figures;
+mod integrity;
 mod pool;
 mod scale;
 mod shrink;
@@ -20,6 +21,7 @@ mod tiers;
 
 pub use crossover::crossover_sweep;
 pub use figures::{fig4, fig5, fig6, fig7, print_points, write_csv, SweepOpts};
+pub use integrity::integrity_sweep;
 pub use pool::{default_jobs, run_trials, TrialOut, TrialSpec};
 pub use scale::scale_sweep;
 pub use shrink::shrink_sweep;
@@ -68,6 +70,18 @@ pub struct Point {
     /// mean mirrored traffic in MB (replication's steady-state overhead).
     pub mirror_s: f64,
     pub mirror_mb: f64,
+    /// Slowest rank's checkpoint verification scans (integrity sweeps;
+    /// zero with the machinery off).
+    pub verify: Summary,
+    /// Mean per-trial integrity/detector counters (all zero under perfect
+    /// storage + perfect detection): extra rollback iterations forced by
+    /// corrupted newest generations, recoveries triggered by false
+    /// suspicions, older-generation agreement retries, and escalations to
+    /// an iteration-0 degraded re-deploy.
+    pub fallback_iters: f64,
+    pub spurious: f64,
+    pub retries: f64,
+    pub escalations: f64,
     /// Mean per-trial storage traffic (per-tier + shared-disk counters).
     pub storage: StorageMeans,
     /// Host seconds of trial compute attributed to this point (sum over its
@@ -100,6 +114,11 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
     let mut redistribute_mb = 0.0;
     let mut mirror_s = 0.0;
     let mut mirror_mb = 0.0;
+    let mut verify: Vec<f64> = Vec::with_capacity(outs.len());
+    let mut fallback_iters = 0u64;
+    let mut spurious = 0u64;
+    let mut retries = 0u64;
+    let mut escalations = 0u64;
     let mut storage = Vec::with_capacity(outs.len());
     for o in outs {
         assert!(
@@ -116,8 +135,20 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
         ev_rec.push(o.result.segments.iter().map(|s| s.recovery_s).sum());
         rollback.push(o.result.segments.iter().map(|s| s.rollback_s).sum());
         failover.push(o.result.segments.iter().map(|s| s.failover_s).sum());
-        fired += o.result.faults.iter().filter(|f| f.fired).count() as u32;
+        // `corrupt@` events fire too, but corrupt nothing alive — keep the
+        // failure count a count of actual kills.
+        fired += o
+            .result
+            .faults
+            .iter()
+            .filter(|f| f.fired && !f.event.corrupt)
+            .count() as u32;
         failovers += o.result.failovers;
+        verify.push(o.result.breakdown.verify_s);
+        fallback_iters += o.result.fallback_iters;
+        spurious += o.result.spurious_recoveries;
+        retries += o.result.ckpt_retries;
+        escalations += o.result.escalations;
         degraded += o
             .result
             .segments
@@ -149,6 +180,11 @@ fn aggregate_point(cfg: &ExperimentConfig, outs: &[TrialOut]) -> Point {
         redistribute_mb: redistribute_mb / n,
         mirror_s: mirror_s / n,
         mirror_mb: mirror_mb / n,
+        verify: mean_ci95(&verify),
+        fallback_iters: fallback_iters as f64 / n,
+        spurious: spurious as f64 / n,
+        retries: retries as f64 / n,
+        escalations: escalations as f64 / n,
         storage: StorageMeans::from_trials(&storage),
         wall_s: outs.iter().map(|o| o.host_s).sum(),
         profiles: outs.iter().map(|o| o.result.counters).collect(),

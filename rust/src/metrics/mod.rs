@@ -26,6 +26,9 @@ pub struct Breakdown {
     pub ckpt_write_s: f64,
     pub ckpt_read_s: f64,
     pub mpi_recovery_s: f64,
+    /// Checkpoint-verification time (checksum scans on load, slowest rank)
+    /// — 0 unless the integrity machinery is armed.
+    pub verify_s: f64,
 }
 
 /// Per-failure-event phase decomposition: each fired fault gets its own
@@ -79,7 +82,9 @@ pub struct FailureSegment {
 impl Breakdown {
     /// Pure application time: everything not attributed elsewhere.
     pub fn app_s(&self) -> f64 {
-        (self.total_s - self.ckpt_write_s - self.ckpt_read_s - self.mpi_recovery_s).max(0.0)
+        (self.total_s - self.ckpt_write_s - self.ckpt_read_s - self.mpi_recovery_s
+            - self.verify_s)
+            .max(0.0)
     }
 }
 
@@ -222,6 +227,18 @@ struct Inner {
     /// Per-rank accumulated phase durations (index = rank).
     ckpt_write: Vec<SimDuration>,
     ckpt_read: Vec<SimDuration>,
+    /// Per-rank checkpoint-verification time (checksum scans on load).
+    verify: Vec<SimDuration>,
+    /// Iterations of extra rollback caused by falling back to an older
+    /// checkpoint generation (corrupted newest copy), summed over events.
+    fallback_iters: u64,
+    /// Recoveries triggered by a false suspicion (no real failure).
+    spurious: u64,
+    /// Agreement rounds retried onto an older generation.
+    retries: u64,
+    /// Recoveries that exhausted the retry budget (or every generation) and
+    /// escalated to a full iteration-0 redeploy.
+    escalations: u64,
     /// Extra recovery time outside the fail->resume window (CR: teardown
     /// and re-deploy happen between jobs; already inside the window).
     recovery_extra: SimDuration,
@@ -247,6 +264,11 @@ impl TrialMetrics {
                 resume_at: None,
                 ckpt_write: vec![SimDuration::ZERO; ranks as usize],
                 ckpt_read: vec![SimDuration::ZERO; ranks as usize],
+                verify: vec![SimDuration::ZERO; ranks as usize],
+                fallback_iters: 0,
+                spurious: 0,
+                retries: 0,
+                escalations: 0,
                 recovery_extra: SimDuration::ZERO,
                 segs: Vec::new(),
                 iter_high: -1,
@@ -537,6 +559,68 @@ impl TrialMetrics {
         self.inner.borrow_mut().ckpt_read[rank as usize] += d;
     }
 
+    /// Checksum-verification time spent by `rank` while choosing a loadable
+    /// checkpoint generation (reported like the ckpt phases: slowest rank).
+    pub fn add_verify(&self, rank: u32, d: SimDuration) {
+        self.inner.borrow_mut().verify[rank as usize] += d;
+    }
+
+    /// Extra rollback (in iterations) from agreeing on an older generation
+    /// than the newest stored one because the newer copies were corrupt.
+    pub fn add_fallback_iters(&self, n: u64) {
+        self.inner.borrow_mut().fallback_iters += n;
+    }
+
+    /// A false suspicion of the unreliable detector killed an innocent
+    /// rank: the recovery now running is entirely spurious.
+    pub fn record_spurious(&self) {
+        self.inner.borrow_mut().spurious += 1;
+    }
+
+    /// The post-recovery agreement landed on a corrupt generation and
+    /// retried from an older one.
+    pub fn record_retry(&self) {
+        self.inner.borrow_mut().retries += 1;
+    }
+
+    /// The recovery exhausted its retry budget (or ran out of generations)
+    /// and escalated to a CR-style iteration-0 redeploy.
+    pub fn record_escalation(&self) {
+        self.inner.borrow_mut().escalations += 1;
+    }
+
+    /// Like [`Self::record_degrade`], but kind-agnostic: marks the newest
+    /// not-yet-degraded segment whatever its kind. Used by the
+    /// corrupt-checkpoint escalation path, where the restart is forced by
+    /// storage state rather than by the failure kind's headroom.
+    pub fn record_degrade_any(&self) {
+        let mut inner = self.inner.borrow_mut();
+        if let Some(seg) = inner
+            .segs
+            .iter_mut()
+            .rev()
+            .find(|s| !s.degraded && !s.noop)
+        {
+            seg.degraded = true;
+        }
+    }
+
+    pub fn fallback_iters(&self) -> u64 {
+        self.inner.borrow().fallback_iters
+    }
+
+    pub fn spurious_count(&self) -> u64 {
+        self.inner.borrow().spurious
+    }
+
+    pub fn retry_count(&self) -> u64 {
+        self.inner.borrow().retries
+    }
+
+    pub fn escalation_count(&self) -> u64 {
+        self.inner.borrow().escalations
+    }
+
     pub fn fail_at(&self) -> Option<SimTime> {
         self.inner.borrow().fail_at
     }
@@ -560,6 +644,11 @@ impl TrialMetrics {
             .iter()
             .map(|d| d.secs_f64())
             .fold(0.0, f64::max);
+        let vf = inner
+            .verify
+            .iter()
+            .map(|d| d.secs_f64())
+            .fold(0.0, f64::max);
         let recovery = match (inner.fail_at, inner.resume_at) {
             (Some(f), Some(r)) => {
                 r.saturating_sub(f).secs_f64() + inner.recovery_extra.secs_f64()
@@ -571,6 +660,7 @@ impl TrialMetrics {
             ckpt_write_s: wr,
             ckpt_read_s: rd,
             mpi_recovery_s: recovery,
+            verify_s: vf,
         }
     }
 }
@@ -878,6 +968,60 @@ mod tests {
         assert_eq!(sum(1, "detect"), segs[1].detect_s);
         assert_eq!(sum(1, "failover"), segs[1].failover_s);
         assert_eq!(sum(1, "redeploy") + sum(1, "rollback"), 0.0);
+    }
+
+    #[test]
+    fn verify_time_books_like_the_ckpt_phases() {
+        let m = TrialMetrics::new(2);
+        m.set_job_end(SimTime(10_000_000_000));
+        m.add_verify(0, SimDuration::from_millis(30));
+        m.add_verify(1, SimDuration::from_millis(50));
+        m.add_verify(1, SimDuration::from_millis(20));
+        let b = m.breakdown();
+        assert!((b.verify_s - 0.07).abs() < 1e-9, "slowest rank's sum");
+        assert!((b.app_s() - (10.0 - 0.07)).abs() < 1e-9, "verify not app time");
+        // and a trial that never verifies reports exactly zero
+        let q = TrialMetrics::new(2);
+        q.set_job_end(SimTime(1_000_000_000));
+        assert_eq!(q.breakdown().verify_s, 0.0);
+    }
+
+    #[test]
+    fn integrity_counters_accumulate() {
+        let m = TrialMetrics::new(1);
+        assert_eq!(
+            (m.spurious_count(), m.retry_count(), m.escalation_count(), m.fallback_iters()),
+            (0, 0, 0, 0)
+        );
+        m.record_spurious();
+        m.record_retry();
+        m.record_retry();
+        m.record_escalation();
+        m.add_fallback_iters(3);
+        m.add_fallback_iters(2);
+        assert_eq!(m.spurious_count(), 1);
+        assert_eq!(m.retry_count(), 2);
+        assert_eq!(m.escalation_count(), 1);
+        assert_eq!(m.fallback_iters(), 5);
+    }
+
+    #[test]
+    fn degrade_any_marks_newest_open_segment_regardless_of_kind() {
+        const S: u64 = 1_000_000_000;
+        let m = TrialMetrics::new(2);
+        m.record_failure(SimTime(S), FailureKind::Node, 0);
+        m.record_failure(SimTime(2 * S), FailureKind::Process, 1);
+        // corrupt-checkpoint escalation: forced by storage state, so the
+        // newest segment takes the degrade whatever its kind
+        m.record_degrade_any();
+        m.record_resume(SimTime(3 * S));
+        let segs = m.segments();
+        assert!(!segs[0].degraded_redeploy);
+        assert!(segs[1].degraded_redeploy);
+        // with no segment at all it is a no-op, not a panic
+        let q = TrialMetrics::new(1);
+        q.record_degrade_any();
+        assert!(q.segments().is_empty());
     }
 
     #[test]

@@ -9,6 +9,12 @@
 //! overhead even for a single process failure is exactly what the paper's
 //! Fig. 6 shows as CR's ≈3 s — and under a failure *storm* CR pays it once
 //! per event, which is what `reinitpp storm` measures.
+//!
+//! CR is also the *escalation target* of the imperfect-world model: when
+//! verify-on-load exhausts every intact checkpoint generation, every family
+//! (this one included) restarts from iteration 0 through the same abort +
+//! re-deploy path, booked as a `degraded_redeploy` escalation — see
+//! `job::rank_user_main` and EXPERIMENTS.md §Checkpoint integrity.
 
 use super::job::{abort_job, JobCtx, RecoveryDriver, ReinitState};
 use super::reinit::spawn_rank;

@@ -15,10 +15,13 @@ use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::apps::{make_app, App, ComputeBackend, CostTracker, StepCtx};
-use crate::ckptstore::{CkptStore, StorageStats};
+use crate::ckptstore::{CkptStore, Integrity, StorageStats};
 use crate::cluster::{Cluster, DeployCost, Topology};
 use crate::config::{ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
-use crate::detect::{watch_child, watch_daemon, DetectEvent};
+use crate::detect::{
+    detect_jitter, suspicion_backoff, watch_child, watch_daemon, DetectEvent,
+    SuspicionSchedule,
+};
 use crate::fault::{FaultOutcome, FaultTimeline, TimelineCursor};
 use crate::metrics::{Breakdown, FailureSegment, TrialMetrics};
 use crate::mpi::{Comm, FtMode, MpiError, MpiJob};
@@ -59,6 +62,16 @@ pub struct TrialResult {
     pub mirror_s: f64,
     /// Total state bytes mirrored to shadows, MB.
     pub mirror_mb: f64,
+    /// Iterations of extra rollback forced by corrupted newest generations
+    /// (agreed baseline minus the generation recovery finally restored).
+    pub fallback_iters: u64,
+    /// Recoveries triggered by the unreliable detector's false suspicions.
+    pub spurious_recoveries: u64,
+    /// Agreement rounds that fell back to an older checkpoint generation.
+    pub ckpt_retries: u64,
+    /// Recoveries that exhausted every intact generation (or the retry
+    /// budget) and escalated to an iteration-0 degraded re-deploy.
+    pub escalations: u64,
     /// Shrinking recoveries performed (shrink only; else 0).
     pub shrinks: u64,
     /// Checkpoint payload moved by shrink-time redistribution, MB.
@@ -183,12 +196,24 @@ impl Completed {
 pub struct TrialWorld {
     pub sim: Sim,
     pub cfg: ExperimentConfig,
+    /// Trial index within the config's `trials` (seeds jitter/bit-rot).
+    pub trial: u32,
     pub app: Rc<dyn App>,
     pub backends: Backends,
     pub ckpt: CkptStore,
     pub metrics: TrialMetrics,
     /// The trial's failure timeline and shared firing state.
     pub faults: TimelineCursor,
+    /// Checkpoint-integrity machinery armed this trial? True when bit-rot
+    /// is configured or the timeline carries `corrupt@` events; false keeps
+    /// the agreement protocol and storage byte-identical to the
+    /// pre-integrity code paths.
+    pub integrity_on: bool,
+    /// The unreliable detector's planned false suspicions (empty under the
+    /// default perfect detector).
+    pub suspicions: SuspicionSchedule,
+    /// Prior suspicions per rank, for the detector's confirmation backoff.
+    pub suspicion_counts: RefCell<HashMap<u32, u32>>,
     pub deploy: DeployCost,
     pub digests: Rc<RefCell<Vec<Option<u64>>>>,
     pub completed: Rc<Completed>,
@@ -216,14 +241,29 @@ impl TrialWorld {
         xla: Option<Rc<XlaRuntime>>,
     ) -> Rc<TrialWorld> {
         let topo = Topology::new(cfg.ranks, cfg.ranks_per_node, cfg.spare_nodes);
+        let timeline = FaultTimeline::plan(cfg, trial);
+        let integrity_on =
+            cfg.corrupt_rate > 0.0 || timeline.events.iter().any(|e| e.corrupt);
+        let ckpt = CkptStore::new(sim, &cfg.effective_stack(), topo, &cfg.calib);
+        ckpt.set_integrity(Integrity {
+            keep: cfg.ckpt_keep,
+            corrupt_rate: cfg.corrupt_rate,
+            seed: cfg.seed,
+            trial,
+            active: integrity_on,
+        });
         Rc::new(TrialWorld {
             sim: sim.clone(),
             cfg: cfg.clone(),
+            trial,
             app: make_app(cfg),
             backends: Backends::build(cfg, xla),
-            ckpt: CkptStore::new(sim, &cfg.effective_stack(), topo, &cfg.calib),
+            ckpt,
             metrics: TrialMetrics::new(cfg.ranks),
-            faults: TimelineCursor::new(FaultTimeline::plan(cfg, trial)),
+            integrity_on,
+            suspicions: SuspicionSchedule::plan(cfg, trial),
+            suspicion_counts: RefCell::new(HashMap::new()),
+            faults: TimelineCursor::new(timeline),
             deploy: DeployCost::from_calib(&cfg.calib),
             digests: Rc::new(RefCell::new(vec![None; cfg.ranks as usize])),
             completed: Rc::new(Completed::new(cfg.ranks)),
@@ -391,8 +431,12 @@ pub fn arm_child_watcher(ctx: &JobCtx, rank: u32) {
         return; // node is gone; the root's daemon watcher covers this
     }
     // SIGCHLD to the daemon, then relay over the control channel to root.
-    let delay = ctx.world.deploy.sigchld()
-        + SimDuration::from_secs_f64(ctx.world.cfg.calib.control_latency_us * 1e-6);
+    // The unreliable detector adds a per-(trial, rank) deterministic latency
+    // jitter on top (zero under the default perfect detector).
+    let w = &ctx.world;
+    let delay = w.deploy.sigchld()
+        + SimDuration::from_secs_f64(w.cfg.calib.control_latency_us * 1e-6)
+        + detect_jitter(w.cfg.seed, w.trial, rank, w.cfg.detect_jitter_s);
     watch_child(
         &ctx.world.sim,
         daemon,
@@ -446,13 +490,92 @@ pub async fn rank_user_main(
         .and_then(|r| r.latest_iter(rank))
         .map(|i| i as i64)
         .unwrap_or(-1);
-    let my_latest = ckpt_latest.max(mirror_latest) as f32;
-    let agreed = comm
+    let my_latest = (ckpt_latest.max(mirror_latest)) as f32;
+    let baseline = comm
         .allreduce_scalar(my_latest, crate::mpi::ReduceOp::Min)
         .await
-        .map_err(|e| (e, Rc::clone(&comm)))?;
+        .map_err(|e| (e, Rc::clone(&comm)))? as i64;
+    let mut agreed = baseline;
+    if w.integrity_on && baseline >= 0 {
+        // Imperfect world: the newest stored generation may be torn, rotted
+        // or hit by a `corrupt@` event, and checksums only reveal that at
+        // load time. Every rank verifies its generations (charged as
+        // `verify_s`), then the job agrees on the newest generation *every*
+        // rank can actually serve, retrying from older generations up to
+        // `retry_budget` rounds before escalating to an iteration-0
+        // degraded re-deploy — never crashing on bad storage.
+        let (intact, vcost) = w.ckpt.verify_generations(rank);
+        if vcost > SimDuration::ZERO {
+            w.sim.sleep(vcost).await;
+            w.metrics.add_verify(rank, vcost);
+        }
+        // The mirror counts as an intact generation: the replication
+        // protocol verifies each push in-line, so a promoted shadow's
+        // snapshot never needs the checksum fallback.
+        let serves = |gen: i64| {
+            intact.binary_search(&(gen as u32)).is_ok() || mirror_latest == gen
+        };
+        agreed = -1;
+        let mut bound = baseline;
+        let mut rounds = 0u32;
+        while bound >= 0 {
+            // Candidate: my newest serveable generation at or below the
+            // current bound; min-reduce proposes the globally newest one
+            // everyone might hold.
+            let cand = intact
+                .iter()
+                .rev()
+                .map(|&i| i as i64)
+                .find(|&i| i <= bound)
+                .unwrap_or(-1)
+                .max(if mirror_latest <= bound { mirror_latest } else { -1 });
+            let prop = comm
+                .allreduce_scalar(cand as f32, crate::mpi::ReduceOp::Min)
+                .await
+                .map_err(|e| (e, Rc::clone(&comm)))? as i64;
+            if prop < 0 {
+                break; // some rank has nothing intact left: escalate
+            }
+            // Vote: a rank whose newest intact copy is *older* than the
+            // proposal cannot serve it — a second min-reduce detects the
+            // hole and the whole job falls back one generation together.
+            let vote = if serves(prop) { prop as f32 } else { -1.0 };
+            let v = comm
+                .allreduce_scalar(vote, crate::mpi::ReduceOp::Min)
+                .await
+                .map_err(|e| (e, Rc::clone(&comm)))? as i64;
+            if v == prop {
+                agreed = prop;
+                break;
+            }
+            rounds += 1;
+            if rank == 0 {
+                w.metrics.record_retry();
+            }
+            if rounds > w.cfg.retry_budget {
+                break; // budget exhausted: escalate
+            }
+            bound = prop - 1;
+        }
+        if rank == 0 {
+            if agreed < 0 {
+                // Every generation corrupted (or disagreement past the
+                // budget): graceful degradation. The job restarts from
+                // iteration 0, booked as an escalated degraded re-deploy on
+                // the failure's segment.
+                w.metrics.record_escalation();
+                w.metrics.record_degrade_any();
+                let tr = w.sim.tracer();
+                if tr.is_on() {
+                    tr.instant("integrity", "escalate", 0, w.sim.now());
+                }
+            } else if baseline > agreed {
+                w.metrics.add_fallback_iters((baseline - agreed) as u64);
+            }
+        }
+    }
     let mut start_iter = 0u32;
-    if agreed >= 0.0 {
+    if agreed >= 0 {
         let it = agreed as u32;
         let mirror = w.repl.as_ref().and_then(|r| r.snapshot(rank, it));
         if let Some(bytes) = mirror {
@@ -496,24 +619,36 @@ pub async fn rank_user_main(
         // the cursor fires each timeline event exactly once, tolerating
         // post-rollback re-execution of the same iteration.
         if let Some(ev) = w.faults.should_fire(rank, iter) {
-            w.metrics.record_failure(w.sim.now(), ev.kind, rank);
-            w.trace_mark("failure");
-            match ev.kind {
-                FailureKind::Process => {
-                    w.ckpt.lose_rank(rank);
-                    ctx.cluster.kill_rank(rank); // SIGKILL to self
+            if ev.corrupt {
+                // Silent storage corruption: every copy of this rank's
+                // newest checkpoint generation is torn. Nothing dies and
+                // nothing is detected here — the damage surfaces only when
+                // a later recovery verifies-on-load.
+                w.ckpt.corrupt_rank_latest(rank);
+                let tr = w.sim.tracer();
+                if tr.is_on() {
+                    tr.instant("integrity", "corrupt", 0, w.sim.now());
                 }
-                FailureKind::Node => {
-                    let victims: Vec<u32> = (0..w.cfg.ranks)
-                        .filter(|&r| ctx.cluster.rank_slot(r).node == slot.node)
-                        .collect();
-                    w.ckpt.lose_node_ranks(&victims);
-                    ctx.cluster.kill_node(slot.node);
+            } else {
+                w.metrics.record_failure(w.sim.now(), ev.kind, rank);
+                w.trace_mark("failure");
+                match ev.kind {
+                    FailureKind::Process => {
+                        w.ckpt.lose_rank(rank);
+                        ctx.cluster.kill_rank(rank); // SIGKILL to self
+                    }
+                    FailureKind::Node => {
+                        let victims: Vec<u32> = (0..w.cfg.ranks)
+                            .filter(|&r| ctx.cluster.rank_slot(r).node == slot.node)
+                            .collect();
+                        w.ckpt.lose_node_ranks(&victims);
+                        ctx.cluster.kill_node(slot.node);
+                    }
+                    FailureKind::None => unreachable!("corrupt handled above"),
                 }
-                FailureKind::None => unreachable!(),
+                // The kill drops this task the moment it yields.
+                w.sim.halt_forever().await;
             }
-            // The kill drops this task the moment it yields.
-            w.sim.halt_forever().await;
         }
 
         let cx = StepCtx {
@@ -594,6 +729,18 @@ fn fire_time_fault(w: &Rc<TrialWorld>, idx: usize) {
         w.metrics.record_noop_event(w.sim.now(), ev.kind, ev.rank);
         return;
     }
+    if ev.corrupt {
+        // Storage corruption needs no live victim: the checkpoint copies
+        // outlive the process (and, in the fs tier, the deployment), so a
+        // `corrupt@tX` lands on whatever the store holds right now.
+        w.faults.mark_fired(idx);
+        w.ckpt.corrupt_rank_latest(ev.rank);
+        let tr = w.sim.tracer();
+        if tr.is_on() {
+            tr.instant("integrity", "corrupt", 0, w.sim.now());
+        }
+        return;
+    }
     let cluster = w.cur_cluster.borrow().clone();
     let Some(cluster) = cluster else {
         w.faults.mark_noop(idx);
@@ -625,8 +772,59 @@ fn fire_time_fault(w: &Rc<TrialWorld>, idx: usize) {
             w.ckpt.lose_node_ranks(&victims);
             cluster.kill_node(node);
         }
-        FailureKind::None => unreachable!("timeline events are never kind none"),
+        FailureKind::None => unreachable!("corrupt events handled above"),
     }
+}
+
+/// Schedule the unreliable detector's false suspicions, exactly once per
+/// trial. Each suspicion is delayed by the confirmation backoff — the
+/// detector waits `suspect_timeout_s * 2^n` before convicting a rank it
+/// has already slandered `n` times — then lands on whatever deployment is
+/// live, exactly like a time-anchored kill.
+fn arm_suspicions(w: &Rc<TrialWorld>) {
+    for s in &w.suspicions.events {
+        let nth = {
+            let mut counts = w.suspicion_counts.borrow_mut();
+            let e = counts.entry(s.rank).or_insert(0);
+            let n = *e;
+            *e += 1;
+            n
+        };
+        let delay = SimDuration::from_secs_f64(s.at_s)
+            + suspicion_backoff(w.cfg.suspect_timeout_s, nth);
+        let w2 = Rc::clone(w);
+        let rank = s.rank;
+        w.sim.schedule(delay, move || {
+            fire_suspicion(&w2, rank);
+        });
+    }
+}
+
+/// Execute one false suspicion: the detector convicts a healthy rank, and
+/// the runtime — which cannot tell a slander from a SIGKILL — evicts the
+/// process and pays for a full, real recovery. A suspicion finding its
+/// victim already dead (or the job complete / between deployments) is
+/// silently absorbed, as a real group-membership service would.
+fn fire_suspicion(w: &Rc<TrialWorld>, rank: u32) {
+    if w.completed.count() == w.cfg.ranks {
+        return;
+    }
+    let cluster = w.cur_cluster.borrow().clone();
+    let Some(cluster) = cluster else { return };
+    if !cluster.rank_is_alive(rank) {
+        return;
+    }
+    w.metrics.record_spurious();
+    w.metrics.record_failure(w.sim.now(), FailureKind::Process, rank);
+    let tr = w.sim.tracer();
+    if tr.is_on() {
+        tr.instant("detect", "suspect", 0, w.sim.now());
+    }
+    // The eviction is indistinguishable from a process failure downstream:
+    // in-memory checkpoint copies die with the victim and the normal
+    // detect → recover machinery takes over from here.
+    w.ckpt.lose_rank(rank);
+    cluster.kill_rank(rank);
 }
 
 /// The protocol-agnostic whole-trial loop: deploy, hand the deployment to
@@ -634,9 +832,10 @@ fn fire_time_fault(w: &Rc<TrialWorld>, idx: usize) {
 /// re-deploy after aborts (CR's every failure; Reinit++/ULFM only on
 /// spare-pool exhaustion) until the job finishes.
 pub async fn trial_driver(w: Rc<TrialWorld>, driver: Rc<dyn RecoveryDriver>) {
-    // Re-deploy bound: CR redeploys at most once per timeline event, plus
-    // headroom for degraded in-place recoveries.
-    let max_deploys = 16 + w.faults.len() as u32;
+    // Re-deploy bound: CR redeploys at most once per timeline event (false
+    // suspicions included — each triggers a real recovery), plus headroom
+    // for degraded in-place recoveries.
+    let max_deploys = 16 + w.faults.len() as u32 + w.suspicions.len() as u32;
     let mut deployment = 0u32;
     let mut timing_started = false;
     loop {
@@ -650,8 +849,10 @@ pub async fn trial_driver(w: Rc<TrialWorld>, driver: Rc<dyn RecoveryDriver>) {
             timing_started = true;
             // Virtual-time anchors (explicit `@tX` events, MTBF arrivals)
             // count from application start, the same clock the paper's
-            // breakdown uses — not from the mpirun submission.
+            // breakdown uses — not from the mpirun submission. The
+            // unreliable detector's false suspicions share that clock.
             arm_time_faults(&w);
+            arm_suspicions(&w);
         }
         driver.deploy(&ctx, detect_rx);
 
@@ -779,6 +980,10 @@ pub fn run_trial_with(
         failovers,
         mirror_s,
         mirror_mb,
+        fallback_iters: world.metrics.fallback_iters(),
+        spurious_recoveries: world.metrics.spurious_count(),
+        ckpt_retries: world.metrics.retry_count(),
+        escalations: world.metrics.escalation_count(),
         counters,
     }
 }

@@ -97,6 +97,7 @@ pub async fn reinit_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                 // answer once spares are gone).
                 if ctx.spares_exhausted() {
                     w.metrics.record_degrade(crate::config::FailureKind::Node);
+                    w.metrics.record_escalation();
                     w.trace_mark("degrade");
                     abort_job(&ctx);
                     return;

@@ -250,6 +250,7 @@ pub async fn repl_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
             // CR-style full re-deploy, restarting from file checkpoints (or
             // iteration 0 if none completed yet).
             w.metrics.record_degrade(kind);
+            w.metrics.record_escalation();
             w.trace_mark("degrade");
             abort_job(&ctx);
             return;

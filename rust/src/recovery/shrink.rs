@@ -76,6 +76,7 @@ pub async fn shrink_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
             || ctx.cluster.least_loaded_alive_compute_node().is_none()
         {
             w.metrics.record_degrade(kind);
+            w.metrics.record_escalation();
             w.trace_mark("degrade");
             abort_job(&ctx);
             return;
@@ -110,6 +111,7 @@ pub async fn shrink_root(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
         }
         if !adopted {
             w.metrics.record_degrade(kind);
+            w.metrics.record_escalation();
             w.trace_mark("degrade");
             abort_job(&ctx);
             return;

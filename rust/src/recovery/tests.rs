@@ -709,6 +709,112 @@ fn shrink_losing_last_compute_node_degrades() {
     assert!(r.segments[1].degraded_redeploy && !r.segments[1].shrunk, "{:?}", r.segments);
 }
 
+// ---- imperfect world: corruption, fallback, escalation, false alarms ---
+
+#[test]
+fn all_generations_corrupted_escalates_to_iteration_zero_redeploy() {
+    // Graceful-degradation pin: `corrupt_rate=1.0` poisons every checkpoint
+    // copy ever written, so a process failure finds nothing servable in any
+    // tier or generation. The agreement loop must escalate to a graceful
+    // iteration-0 restart — booked as an escalation AND a degraded redeploy
+    // on the event's segment — instead of panicking or hanging, and the
+    // recomputed run must still match the fault-free oracle. Pinned for the
+    // paper's two global-restart families and the shrink family (whose
+    // redistribution must refuse to launder corrupt copies).
+    for recovery in [RecoveryKind::Cr, RecoveryKind::Reinit, RecoveryKind::Shrink] {
+        let mut cfg = scenario_cfg(recovery, "proc@3:r2");
+        if recovery == RecoveryKind::Shrink {
+            cfg.spare_nodes = 0;
+        }
+        cfg.corrupt_rate = 1.0;
+        let want = digests_of(&fault_free_twin(&cfg), 0);
+        let r = run_trial(&cfg, 0, None);
+        assert!(r.completed, "{recovery}: all-corrupt trial hung ({:?})", r.faults);
+        assert_eq!(
+            r.digests, want,
+            "{recovery}: iteration-0 restart must still converge"
+        );
+        assert!(r.escalations >= 1, "{recovery}: escalation must be booked");
+        assert!(
+            r.segments.iter().any(|s| s.degraded_redeploy),
+            "{recovery}: escalation lands as a degraded redeploy: {:?}",
+            r.segments
+        );
+        assert!(
+            r.breakdown.verify_s > 0.0,
+            "{recovery}: the verification scans that found nothing are charged"
+        );
+    }
+}
+
+#[test]
+fn corrupt_event_falls_back_to_older_generation_with_deep_retention() {
+    // A targeted `corrupt@` timeline event poisons rank 2's newest
+    // checkpoint generation inside a 4-iteration checkpoint interval; the
+    // verify-on-load agreement must settle on the older intact generation
+    // every rank can serve — extra rollback booked as fallback iterations,
+    // no escalation, no retry rounds — and still converge.
+    let mut cfg = scenario_cfg(RecoveryKind::Reinit, "corrupt@5:r2,proc@6:r1");
+    cfg.ckpt_every = 4; // generations at iters 0 and 4; corruption at 5
+    cfg.ckpt_keep = 3;
+    let want = digests_of(&fault_free_twin(&cfg), 0);
+    let r = run_trial(&cfg, 0, None);
+    assert!(r.completed, "fallback trial hung ({:?})", r.faults);
+    assert_eq!(r.digests, want, "older-generation restart must converge");
+    assert!(
+        r.faults.iter().any(|f| f.fired && f.event.corrupt),
+        "the corrupt event must fire: {:?}",
+        r.faults
+    );
+    assert_eq!(r.segments.len(), 1, "corruption alone opens no segment: {:?}", r.segments);
+    assert!(r.fallback_iters >= 1, "rollback deepened by the corruption");
+    assert_eq!(r.escalations, 0, "an intact older generation exists");
+    assert_eq!(r.ckpt_retries, 0, "the first proposal is globally servable");
+    assert!(r.breakdown.verify_s > 0.0, "verification scans charged");
+}
+
+#[test]
+fn false_suspicions_trigger_fully_costed_spurious_recoveries() {
+    // Unreliable-detector pin: an aggressive false-positive rate must
+    // trigger real, fully-costed recoveries of innocently suspected ranks —
+    // counted as spurious — while the trial still completes, stays
+    // deterministic, and converges to the clean-detector oracle (a spurious
+    // global restart is still a correct global restart).
+    let mut cfg = base_cfg(AppKind::Hpccg, RecoveryKind::Reinit, FailureKind::Process);
+    cfg.iters = 10;
+    cfg.max_failures = 6;
+    cfg.detect_fp_rate = 200.0; // mean 5 ms between false alarms
+    cfg.detect_jitter_s = 0.002;
+    cfg.suspect_timeout_s = 0.01;
+    // stretch the app clock so the alarm stream lands inside the run
+    cfg.calib.modeled_compute_scale = crate::config::presets::STORM_COMPUTE_SCALE;
+    let mut clean = cfg.clone();
+    clean.failure = FailureKind::None;
+    clean.detect_fp_rate = 0.0;
+    clean.detect_jitter_s = 0.0;
+    clean.suspect_timeout_s = 0.0;
+    let want = digests_of(&clean, 0);
+    let a = run_trial(&cfg, 0, None);
+    let b = run_trial(&cfg, 0, None);
+    assert!(a.completed, "noisy-detector trial hung ({:?})", a.faults);
+    assert_eq!(a.digests, want, "spurious recoveries must not perturb the state");
+    assert!(
+        a.spurious_recoveries >= 1,
+        "the alarm stream must fire at least once: {:?}",
+        a.spurious_recoveries
+    );
+    assert!(
+        a.segments.len() as u64 > a.spurious_recoveries,
+        "real + spurious events each open a segment: {:?}",
+        a.segments
+    );
+    assert!(a.breakdown.mpi_recovery_s > 0.0, "spurious recoveries are costed");
+    // jittered detection + backoff stay replay-deterministic
+    assert_eq!(a.digests, b.digests);
+    assert_eq!(a.spurious_recoveries, b.spurious_recoveries);
+    assert_eq!(a.sim_events, b.sim_events);
+}
+
 #[test]
 fn shrink_time_event_after_completion_is_explicit_noop() {
     // Satellite: a virtual-time-anchored event whose instant arrives after

@@ -143,6 +143,7 @@ async fn ulfm_notifier(ctx: JobCtx, detect_rx: Receiver<DetectEvent>) {
                 // (recorded on the event's metric segment).
                 if ctx.spares_exhausted() {
                     w.metrics.record_degrade(crate::config::FailureKind::Node);
+                    w.metrics.record_escalation();
                     w.trace_mark("degrade");
                     abort_job(&ctx);
                     return;

@@ -46,7 +46,11 @@ const DEFAULT_CAP: usize = 1 << 18;
 const MAX_RANK_TRACKS: u32 = 8;
 
 /// Known span categories, in display order — the `--trace-filter` universe.
-pub const CATEGORIES: [&str; 5] = ["exec", "mpi", "ckpt", "recovery", "pool"];
+/// `integrity` carries checkpoint-corruption instants (`corrupt`,
+/// `escalate`), `detect` the unreliable detector's `suspect` instants; both
+/// are silent unless the imperfect-world knobs are armed.
+pub const CATEGORIES: [&str; 7] =
+    ["exec", "mpi", "ckpt", "recovery", "pool", "integrity", "detect"];
 
 /// Process-wide trace destination, installed once by the CLI before any
 /// trial runs. Tests pass a config explicitly to `run_trial_with` instead
