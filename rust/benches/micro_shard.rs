@@ -1,0 +1,174 @@
+//! Micro-bench: the sharded executor (`--shards N`) against the serial
+//! event loop, on the workloads the tentpole targets — a paper-style
+//! recovery trial at 4096 ranks (events/s + peak live-task state per
+//! rank) and a raw cross-shard channel storm that exercises the
+//! window-synchronization machinery (windows advanced, staged vs bypass
+//! inbox traffic).
+//!
+//! Sharding is a host knob: every configuration below produces byte-
+//! identical trial results (pinned by `tests/shard_determinism.rs`), so
+//! the only thing measured here is host throughput and memory.
+//!
+//! Emits `BENCH_micro_shard.json` at the repository root so CI and later
+//! PRs can track the perf trajectory.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use reinitpp::config::{AppKind, ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
+use reinitpp::metrics::{BenchReport, BenchRow};
+use reinitpp::recovery::job::run_trial_opts;
+use reinitpp::sim::{channel, Sender, Sim, SimDuration, SimSummary};
+
+/// Estimated per-rank live-task state of the seed executor (pre-SoA): the
+/// integrity-agreement and restore state machines inlined into every rank
+/// future plus the AoS task record. Like the seed rates in
+/// `micro_sim_engine`, a reference figure for ratio tracking on one
+/// machine, not an absolute.
+const SEED_STATE_BYTES_PER_RANK: f64 = 5.4e3;
+
+/// The trial the shard comparison runs: a 4096-rank modeled Reinit++
+/// point with a single process failure — the smallest rung the issue's
+/// acceptance criteria speak about.
+fn trial_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.app = AppKind::Hpccg;
+    c.recovery = RecoveryKind::Reinit;
+    c.failure = FailureKind::Process;
+    c.ranks = 4096;
+    c.iters = 6;
+    c.trials = 1;
+    c.fidelity = Fidelity::Modeled;
+    c.hpccg_nx = 4;
+    c
+}
+
+/// (host seconds, DES events, peak live-task state bytes)
+fn bench_trial(shards: usize) -> (f64, u64, u64) {
+    let cfg = trial_cfg();
+    let t0 = Instant::now();
+    let r = run_trial_opts(&cfg, 0, None, None, shards);
+    assert!(r.completed, "bench trial must complete");
+    (
+        t0.elapsed().as_secs_f64(),
+        r.counters.events,
+        r.counters.peak_rank_state_bytes,
+    )
+}
+
+/// Raw window-sync storm: `pairs` sender/receiver process pairs pinned to
+/// *different* shards, every message crossing a shard boundary at exactly
+/// the lookahead latency (so it rides the inbox/window-barrier path), with
+/// the senders pacing virtual time forward between messages.
+fn bench_window_storm(shards: usize, pairs: u64, msgs: u64) -> (f64, u64, SimSummary) {
+    let sim = Sim::new();
+    sim.set_shards(shards);
+    let lookahead = SimDuration::from_micros(2);
+    if shards > 1 {
+        sim.set_lookahead(lookahead);
+    }
+    // Receivers first: each creates its channel inside its own task poll so
+    // the channel's home shard is the receiver's shard, and parks the
+    // sender half in the registry for the sender tasks (global (time, seq)
+    // order guarantees every receiver polls before any sender).
+    let registry: Rc<RefCell<Vec<Option<Sender<u64>>>>> = Rc::new(RefCell::new(Vec::new()));
+    for i in 0..pairs {
+        let p = sim.spawn_process(format!("rx{i}"));
+        sim.assign_proc_shard(p, (i % shards as u64) as u16);
+        let s2 = sim.clone();
+        let reg = Rc::clone(&registry);
+        sim.spawn(p, async move {
+            let (tx, rx) = channel::<u64>(&s2);
+            reg.borrow_mut().push(Some(tx));
+            for _ in 0..msgs {
+                let _ = rx.recv().await;
+            }
+        });
+    }
+    for i in 0..pairs {
+        let p = sim.spawn_process(format!("tx{i}"));
+        // one shard over from the paired receiver: every send is remote
+        sim.assign_proc_shard(p, ((i + 1) % shards as u64) as u16);
+        let s2 = sim.clone();
+        let reg = Rc::clone(&registry);
+        sim.spawn(p, async move {
+            let tx = reg.borrow_mut()[i as usize].take().expect("receiver ran first");
+            for k in 0..msgs {
+                tx.send(k, lookahead);
+                s2.sleep(SimDuration::from_micros(3)).await;
+            }
+        });
+    }
+    let t0 = Instant::now();
+    let summary = sim.run();
+    (t0.elapsed().as_secs_f64(), pairs * msgs, summary)
+}
+
+fn main() {
+    let mut report = BenchReport::new("micro_shard");
+    println!("| micro-bench | work | host time (s) | rate | notes |");
+    println!("|---|---|---|---|---|");
+
+    let ranks = trial_cfg().ranks;
+    let (dt1, events1, peak1) = bench_trial(1);
+    let bpr1 = peak1 as f64 / ranks as f64;
+    println!(
+        "| trial serial | {events1} events | {dt1:.3} | {:.2} M ev/s | {bpr1:.0} B/rank |",
+        events1 as f64 / dt1 / 1e6
+    );
+    report.push(
+        BenchRow::new("trial_4096_serial", events1, dt1, "events/s")
+            .with_extra("ranks", ranks as f64)
+            .with_extra("bytes_per_rank", bpr1)
+            .with_extra(
+                "seed_bytes_per_rank_ratio",
+                SEED_STATE_BYTES_PER_RANK / bpr1,
+            ),
+    );
+
+    let (dt4, events4, peak4) = bench_trial(4);
+    assert_eq!(events1, events4, "sharding must not change the event count");
+    assert_eq!(peak1, peak4, "sharding must not change the state footprint");
+    println!(
+        "| trial 4 shards | {events4} events | {dt4:.3} | {:.2} M ev/s | {:.2}x serial |",
+        events4 as f64 / dt4 / 1e6,
+        dt1 / dt4
+    );
+    report.push(
+        BenchRow::new("trial_4096_shard4", events4, dt4, "events/s")
+            .with_extra("ranks", ranks as f64)
+            .with_extra("shards", 4.0)
+            .with_extra("bytes_per_rank", peak4 as f64 / ranks as f64)
+            .with_extra("speedup_vs_serial", dt1 / dt4),
+    );
+
+    let (dts, sends, summary) = bench_window_storm(4, 512, 200);
+    let st = summary.shards;
+    let staged_frac =
+        st.inbox_staged as f64 / (st.inbox_staged + st.inbox_bypass).max(1) as f64;
+    println!(
+        "| window storm (4 shards) | {sends} sends | {dts:.3} | {:.2} M ev/s | \
+         {} windows, {:.0}% staged |",
+        summary.events as f64 / dts / 1e6,
+        st.windows,
+        staged_frac * 100.0
+    );
+    report.push(
+        BenchRow::new("window_storm_shard4", summary.events, dts, "events/s")
+            .with_extra("cross_shard_sends", sends as f64)
+            .with_extra("windows", st.windows as f64)
+            .with_extra(
+                "events_per_window",
+                summary.events as f64 / st.windows.max(1) as f64,
+            )
+            .with_extra("inbox_staged", st.inbox_staged as f64)
+            .with_extra("inbox_bypass", st.inbox_bypass as f64)
+            .with_extra("staged_fraction", staged_frac),
+    );
+
+    report.write_json(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_micro_shard.json"
+    ));
+}

@@ -40,6 +40,8 @@ pub enum Command {
     Run {
         cfg: ExperimentConfig,
         jobs: usize,
+        /// `--shards N`: executor shards per trial (1 = serial event loop).
+        shards: usize,
         /// `--trace DIR` (+ optional `--trace-filter`): per-trial trace
         /// export destination, installed process-wide for the run.
         trace: Option<crate::trace::TraceConfig>,
@@ -109,10 +111,13 @@ USAGE:
   reinitpp reproduce --figure N [OPTIONS] [...]  regenerate paper figure N (4-7, or 0 = all)
   reinitpp scale     [OPTIONS] [key=value ...]   large-rank weak-scaling sweep: extends the
                                                  paper's Figure 4 recovery curves past its
-                                                 3072-rank ceiling (ranks 512..16384, all
+                                                 3072-rank ceiling (ranks 512 up to
+                                                 --max-ranks: the preset ladder to 16384,
+                                                 then doubling rungs, e.g. 262144; all
                                                  recovery methods, process failure, modeled
                                                  fidelity; ULFM capped at 4096 — see
-                                                 EXPERIMENTS.md; emits scale_compare.csv)
+                                                 EXPERIMENTS.md; emits scale_compare.csv
+                                                 with a state_bytes_per_rank column)
   reinitpp tiers     [OPTIONS] [key=value ...]   checkpoint tier-stack comparison sweep
                                                  (fs vs local+partner1 vs local+partner2+fs,
                                                  process + node failures; ranks 16/32/64 at
@@ -151,13 +156,20 @@ USAGE:
 OPTIONS:
   --config FILE      load a TOML-subset config file
   --max-ranks N      cap the sweep's rank counts (reproduce/scale/tiers/storm/
-                     crossover/shrink/integrity; scale defaults to 16384)
+                     crossover/shrink/integrity; scale defaults to 16384 and
+                     requires a power of two >= 512 — rungs past 16384 keep
+                     doubling up to N instead of silently clamping)
   --outdir DIR       CSV output directory (default: results)
   --jobs N           worker threads for trial execution
                      (run/reproduce/scale/tiers/storm/crossover/shrink/integrity).
                      Must be >= 1: default all cores, 1 = serial execution on
                      the calling thread. Tables and CSVs are byte-identical
                      for any N.
+  --shards N         executor shards per trial (run + every sweep; default 1 =
+                     the serial event loop). Ranks are partitioned into
+                     node-aligned shards with window-synchronized cross-shard
+                     delivery; a host knob like --jobs: traces, CSVs and
+                     digests are byte-identical for any N. Must be >= 1.
   --trace DIR        (run) write per-trial observability artifacts under DIR:
                      trace_<id>.trace.json (Perfetto/chrome trace-event JSON,
                      virtual time: one track per rank group + a recovery
@@ -166,7 +178,8 @@ OPTIONS:
                      plus pool.trace.json (worker timeline, wall time).
                      Observation only: results are byte-identical with it on.
   --trace-filter C,C (run, with --trace) record only these span categories;
-                     known: exec, mpi, ckpt, recovery, pool, integrity, detect
+                     known: exec, mpi, ckpt, recovery, pool, integrity,
+                     detect, shard
   --profile-json     (sweeps) also write per-trial executor counters as
                      <sweep>_profiles.json next to the sweep CSV (the
                      BENCH_sweep_stats_<sweep>.json throughput summary is
@@ -195,6 +208,7 @@ EXAMPLES:
   reinitpp run failures=proc@3:r5,node@7:r12 spare_nodes=2 trials=3
   reinitpp reproduce --figure 6 --max-ranks 128 --jobs 8 trials=5
   reinitpp scale --max-ranks 16384 --jobs 8 trials=3
+  reinitpp scale --max-ranks 262144 --shards 8 --jobs 8 trials=1
   reinitpp tiers --max-ranks 32 --jobs 4 trials=5
   reinitpp storm --max-ranks 256 --jobs 4 trials=5
   reinitpp crossover --max-ranks 64 --jobs 4 trials=3
@@ -214,6 +228,17 @@ fn parse_jobs(v: &str) -> Result<usize, CliError> {
         Ok(0) => Err(err("--jobs: must be >= 1 (use 1 for serial execution)")),
         Ok(n) => Ok(n),
         Err(_) => Err(err(format!("--jobs: not a worker count: {v}"))),
+    }
+}
+
+/// Parse a `--shards` value: executor shards per trial. Like `--jobs` it
+/// is a host knob — traces, CSVs and digests are byte-identical for any
+/// value — and like `--jobs`, zero has no meaning (1 = serial event loop).
+fn parse_shards(v: &str) -> Result<usize, CliError> {
+    match v.parse::<usize>() {
+        Ok(0) => Err(err("--shards: must be >= 1 (1 = the serial event loop)")),
+        Ok(n) => Ok(n),
+        Err(_) => Err(err(format!("--shards: not a shard count: {v}"))),
     }
 }
 
@@ -266,6 +291,10 @@ fn parse_sweep_opts<'a>(
             "--jobs" => {
                 let v = it.next().ok_or_else(|| err("--jobs needs a value"))?;
                 opts.jobs = parse_jobs(v)?;
+            }
+            "--shards" => {
+                let v = it.next().ok_or_else(|| err("--shards needs a value"))?;
+                opts.shards = parse_shards(v)?;
             }
             "--profile-json" => {
                 opts.profile = true;
@@ -440,6 +469,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
         "run" => {
             let (cfg, leftovers) = parse_cfg(rest)?;
             let mut jobs = crate::harness::default_jobs();
+            let mut shards = 1usize;
             let mut trace_dir: Option<String> = None;
             let mut trace_filter: Option<Vec<String>> = None;
             let mut it = leftovers.iter();
@@ -448,6 +478,10 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                     "--jobs" => {
                         let v = it.next().ok_or_else(|| err("--jobs needs a value"))?;
                         jobs = parse_jobs(v)?;
+                    }
+                    "--shards" => {
+                        let v = it.next().ok_or_else(|| err("--shards needs a value"))?;
+                        shards = parse_shards(v)?;
                     }
                     "--trace" => {
                         let v = it
@@ -471,7 +505,12 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 dir,
                 filter: trace_filter,
             });
-            Ok(Command::Run { cfg, jobs, trace })
+            Ok(Command::Run {
+                cfg,
+                jobs,
+                shards,
+                trace,
+            })
         }
         "validate" | "calibrate" => {
             let (cfg, leftovers) = parse_cfg(rest)?;
@@ -774,6 +813,23 @@ fn maybe_xla(cfg: &ExperimentConfig) -> Option<Rc<XlaRuntime>> {
 
 /// Execute a parsed command; returns a process exit code.
 pub fn execute(cmd: Command) -> i32 {
+    // Install the process-wide executor shard count before any trial runs
+    // (`run_trial` reads it; the pool workers inherit it). A host knob like
+    // `--jobs`: any value produces byte-identical results.
+    let shards = match &cmd {
+        Command::Run { shards, .. } => Some(*shards),
+        Command::Reproduce { opts, .. }
+        | Command::Tiers { opts, .. }
+        | Command::Scale { opts, .. }
+        | Command::Storm { opts, .. }
+        | Command::Crossover { opts, .. }
+        | Command::Shrink { opts, .. }
+        | Command::Integrity { opts, .. } => Some(opts.shards),
+        _ => None,
+    };
+    if let Some(n) = shards {
+        crate::sim::set_global_shards(n);
+    }
     match cmd {
         Command::Help => {
             println!("{USAGE}");
@@ -794,7 +850,12 @@ pub fn execute(cmd: Command) -> i32 {
             }
             0
         }
-        Command::Run { cfg, jobs, trace } => {
+        Command::Run {
+            cfg,
+            jobs,
+            shards,
+            trace,
+        } => {
             if let Err(e) = cfg.validate() {
                 eprintln!("{e}");
                 return 2;
@@ -828,6 +889,12 @@ pub fn execute(cmd: Command) -> i32 {
                 cfg.trials,
                 jobs
             );
+            if shards > 1 {
+                println!(
+                    "# executor shards: {shards} (host knob; results are \
+                     byte-identical to --shards 1)"
+                );
+            }
             let p = harness::run_point(&cfg, jobs);
             if let Some(tc) = &trace {
                 // Per-trial traces were written as each trial finished; the
@@ -1162,15 +1229,44 @@ mod tests {
     fn parse_run_with_overrides() {
         let cmd = parse(&sv(&["run", "app=comd", "ranks=64", "trials=3"])).unwrap();
         match cmd {
-            Command::Run { cfg, jobs, trace } => {
+            Command::Run {
+                cfg,
+                jobs,
+                shards,
+                trace,
+            } => {
                 assert_eq!(cfg.app, crate::config::AppKind::CoMD);
                 assert_eq!(cfg.ranks, 64);
                 assert_eq!(cfg.trials, 3);
                 assert!(jobs >= 1, "defaults to available parallelism");
+                assert_eq!(shards, 1, "the serial event loop is the default");
                 assert!(trace.is_none(), "tracing is opt-in");
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn parse_shards_flag() {
+        match parse(&sv(&["run", "--shards", "4", "ranks=16"])).unwrap() {
+            Command::Run { shards, .. } => assert_eq!(shards, 4),
+            _ => panic!(),
+        }
+        match parse(&sv(&["scale", "--shards", "2"])).unwrap() {
+            Command::Scale { opts, .. } => assert_eq!(opts.shards, 2),
+            _ => panic!(),
+        }
+        match parse(&sv(&["scale"])).unwrap() {
+            Command::Scale { opts, .. } => assert_eq!(opts.shards, 1),
+            _ => panic!(),
+        }
+        // zero has no meaning, same convention as --jobs
+        for cmd in ["run", "scale", "storm"] {
+            let e = parse(&sv(&[cmd, "--shards", "0"])).unwrap_err();
+            assert!(e.to_string().contains("serial event loop"), "{cmd}: {e}");
+        }
+        assert!(parse(&sv(&["run", "--shards", "x"])).is_err());
+        assert!(USAGE.contains("--shards"), "--help documents the knob");
     }
 
     #[test]

@@ -83,6 +83,19 @@ impl Cluster {
                 }
             })
             .collect();
+        // Topology-aligned shard placement: each proc's events run on the
+        // executor shard owning its home node, so intra-node traffic never
+        // crosses a shard queue. No-op on the serial (1-shard) executor.
+        let shards = sim.shard_count() as u32;
+        if shards > 1 {
+            sim.assign_proc_shard(root, 0);
+            for (n, &d) in daemons.iter().enumerate() {
+                sim.assign_proc_shard(d, topo.shard_of_node(n as u32, shards) as u16);
+            }
+            for slot in &ranks {
+                sim.assign_proc_shard(slot.proc, topo.shard_of_node(slot.node, shards) as u16);
+            }
+        }
         Cluster {
             sim: sim.clone(),
             topo,
@@ -158,6 +171,12 @@ impl Cluster {
             index: rank,
             sub: Some(slot.incarnation),
         });
+        let shards = self.sim.shard_count() as u32;
+        if shards > 1 {
+            // A re-spawn may land on a spare in a different shard block.
+            self.sim
+                .assign_proc_shard(slot.proc, self.topo.shard_of_node(node, shards) as u16);
+        }
         slot.proc
     }
 

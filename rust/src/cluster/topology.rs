@@ -42,6 +42,28 @@ impl Topology {
         (lo..hi).collect()
     }
 
+    /// Executor shard owning `node` under a node-aligned partition of the
+    /// allocation into `shards` contiguous blocks. Ranks sharing a node
+    /// (the intra-node fast path) always share a shard, so only
+    /// cross-node traffic can cross shards — which is what makes the
+    /// calibration's minimum remote latency a sound lookahead horizon.
+    pub fn shard_of_node(&self, node: u32, shards: u32) -> u32 {
+        assert!(shards > 0);
+        let per = self.total_nodes().div_ceil(shards);
+        (node / per).min(shards - 1)
+    }
+
+    /// Node ranges `[lo, hi)` covered by each shard (possibly empty for
+    /// trailing shards when `shards > total_nodes()`).
+    pub fn shard_blocks(&self, shards: u32) -> Vec<(u32, u32)> {
+        assert!(shards > 0);
+        let total = self.total_nodes();
+        let per = total.div_ceil(shards);
+        (0..shards)
+            .map(|s| ((s * per).min(total), ((s + 1) * per).min(total)))
+            .collect()
+    }
+
     /// Depth of a binomial/binary communication tree over `n` participants.
     pub fn tree_levels(n: u32) -> u32 {
         if n <= 1 {
@@ -90,6 +112,48 @@ mod tests {
         assert_eq!(Topology::tree_levels(3), 2);
         assert_eq!(Topology::tree_levels(64), 6);
         assert_eq!(Topology::tree_levels(1024), 10);
+    }
+
+    #[test]
+    fn shard_blocks_are_node_aligned_and_cover_everything() {
+        let t = Topology::new(64, 16, 2); // 4 compute + 2 spare = 6 nodes
+        for shards in [1, 2, 3, 4, 6, 8] {
+            let blocks = t.shard_blocks(shards);
+            assert_eq!(blocks.len(), shards as usize);
+            // blocks are contiguous, disjoint, and cover [0, total_nodes)
+            let mut next = 0;
+            for (s, &(lo, hi)) in blocks.iter().enumerate() {
+                assert_eq!(lo, next);
+                assert!(hi >= lo);
+                next = hi;
+                for node in lo..hi {
+                    assert_eq!(t.shard_of_node(node, shards), s as u32);
+                }
+            }
+            assert_eq!(next, t.total_nodes());
+        }
+    }
+
+    #[test]
+    fn one_shard_owns_all_nodes() {
+        let t = Topology::new(20, 16, 1);
+        for node in 0..t.total_nodes() {
+            assert_eq!(t.shard_of_node(node, 1), 0);
+        }
+        assert_eq!(t.shard_blocks(1), vec![(0, t.total_nodes())]);
+    }
+
+    #[test]
+    fn co_resident_ranks_share_a_shard() {
+        let t = Topology::new(128, 16, 0);
+        for shards in [2, 4] {
+            for node in 0..t.compute_nodes {
+                let s = t.shard_of_node(node, shards);
+                for r in t.ranks_on_node(node) {
+                    assert_eq!(t.shard_of_node(t.home_node(r), shards), s);
+                }
+            }
+        }
     }
 
     #[test]

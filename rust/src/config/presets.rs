@@ -41,6 +41,39 @@ pub const TIER_SWEEP_RANKS_PER_NODE: u32 = 8;
 /// recovery-time curves past the paper's 3072-rank ceiling.
 pub const SCALE_SWEEP_RANKS: [u32; 6] = [512, 1024, 2048, 4096, 8192, 16384];
 
+/// Rank counts `reinitpp scale` actually visits for a given `--max-ranks`:
+/// the preset rungs up to the cap, then doubling past the preset ceiling
+/// all the way to the cap itself (262144-rank rungs and beyond ride the
+/// sharded executor). Requests below the smallest rung or off the
+/// power-of-two ladder are errors, not silent clamps.
+pub fn scale_rungs(max: u32) -> Result<Vec<u32>, String> {
+    if !max.is_power_of_two() {
+        return Err(format!(
+            "scale: --max-ranks {max} is not a power of two; the weak-scaling \
+             ladder doubles from {} (e.g. 4096, 16384, 262144)",
+            SCALE_SWEEP_RANKS[0]
+        ));
+    }
+    if max < SCALE_SWEEP_RANKS[0] {
+        return Err(format!(
+            "scale: --max-ranks {max} is below the smallest rung {}",
+            SCALE_SWEEP_RANKS[0]
+        ));
+    }
+    let mut rungs: Vec<u32> = SCALE_SWEEP_RANKS
+        .iter()
+        .copied()
+        .filter(|&r| r <= max)
+        .collect();
+    let top = SCALE_SWEEP_RANKS[SCALE_SWEEP_RANKS.len() - 1];
+    let mut r = top.saturating_mul(2);
+    while r <= max {
+        rungs.push(r);
+        r = r.saturating_mul(2);
+    }
+    Ok(rungs)
+}
+
 /// ULFM points of the scale sweep are capped here: the shrink/agree
 /// protocol materializes the survivor set on every rank, which is
 /// quadratic host memory at extreme scale — and the paper's ULFM
@@ -231,6 +264,26 @@ mod tests {
             STORM_SWEEP_MTBF_S.contains(&INTEGRITY_MTBF_S),
             "integrity rides a storm MTBF rung"
         );
+    }
+
+    #[test]
+    fn scale_rungs_extend_past_the_preset_ceiling() {
+        assert_eq!(scale_rungs(512).unwrap(), vec![512]);
+        assert_eq!(
+            scale_rungs(16384).unwrap(),
+            SCALE_SWEEP_RANKS.to_vec(),
+            "preset cap is the unextended ladder"
+        );
+        let big = scale_rungs(262_144).unwrap();
+        assert_eq!(
+            &big[SCALE_SWEEP_RANKS.len()..],
+            &[32_768, 65_536, 131_072, 262_144],
+            "past 16384 the ladder keeps doubling to the cap"
+        );
+        assert!(scale_rungs(3000).is_err(), "non-power-of-two is rejected");
+        assert!(scale_rungs(256).is_err(), "below the smallest rung");
+        let err = scale_rungs(24_000).unwrap_err();
+        assert!(err.contains("power of two"), "{err}");
     }
 
     #[test]

@@ -22,6 +22,10 @@ pub struct SweepOpts {
     /// Also write per-trial executor counters as `<name>_profiles.json`
     /// next to each sweep CSV (`--profile-json`).
     pub profile: bool,
+    /// Executor shards per trial (`--shards`; 1 = serial event loop). A
+    /// host-side knob like `jobs`: it must never change simulation output,
+    /// so it is carried here rather than in `ExperimentConfig`.
+    pub shards: usize,
 }
 
 impl Default for SweepOpts {
@@ -31,6 +35,7 @@ impl Default for SweepOpts {
             outdir: "results".to_string(),
             jobs: default_jobs(),
             profile: false,
+            shards: 1,
         }
     }
 }
@@ -221,7 +226,7 @@ fn write_profiles(name: &str, outdir: &str, points: &[Point]) -> std::io::Result
                 "    {{\"app\": {}, \"ranks\": {}, \"recovery\": {}, \"failure\": {}, \
                  \"trial\": {trial}, \"identity\": \"{:016x}\", \"end_s\": {}, \
                  \"events\": {}, \"polls\": {}, \"peak_events_pending\": {}, \
-                 \"tasks_completed\": {}}}",
+                 \"peak_rank_state_bytes\": {}, \"tasks_completed\": {}}}",
                 json_str(&p.cfg.app.to_string()),
                 p.cfg.ranks,
                 json_str(&p.cfg.recovery.to_string()),
@@ -231,6 +236,7 @@ fn write_profiles(name: &str, outdir: &str, points: &[Point]) -> std::io::Result
                 c.events,
                 c.polls,
                 c.peak_events_pending,
+                c.peak_rank_state_bytes,
                 c.tasks_completed,
             ));
         }
@@ -369,6 +375,7 @@ mod tests {
             outdir: "/tmp/reinitpp-test-results".into(),
             jobs: 2,
             profile: false,
+            shards: 1,
         };
         let pts = run_sweep(
             "unit_fig6_quick",
@@ -399,6 +406,7 @@ mod tests {
             outdir: "/tmp/reinitpp-test-results".into(),
             jobs: 1,
             profile: true,
+            shards: 1,
         };
         let pts = run_sweep(
             "unit_test",

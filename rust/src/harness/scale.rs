@@ -8,8 +8,10 @@
 //! processes. With the O(1) fabric routing table, indexed receive matching
 //! and allocation-lean collectives, a simulated iteration is cheap enough
 //! in host time that the sweep runs the modeled-fidelity grid at
-//! 512..16384 ranks under a single process failure for every recovery
-//! method (ULFM capped at `presets::SCALE_ULFM_MAX_RANKS` — the survivor
+//! 512 ranks up to `--max-ranks` — the preset ladder to 16384, then
+//! doubling rungs to the requested cap (`presets::scale_rungs`; a
+//! 262144-rank rung is practical on the sharded executor) — under a
+//! single process failure for every recovery method (ULFM capped at `presets::SCALE_ULFM_MAX_RANKS` — the survivor
 //! sets of shrink/agree are quadratic host memory at extreme scale, and
 //! the paper's own ULFM prototype stopped at 3072). Replication runs at
 //! node-disjoint degree `presets::SCALE_REPL_DEGREE` on every rung: at
@@ -20,17 +22,17 @@
 //! `scale_compare.csv` is byte-identical for any `--jobs` value (pinned by
 //! the unit test below and a serial-vs-2-worker `cmp` in CI).
 
-use super::figures::{cell, write_csv, SweepOpts};
+use super::figures::{cell, storage_csv_cells, SweepOpts, STORAGE_CSV_HEADER};
 use super::{run_points, Point};
 use crate::config::{presets, ExperimentConfig, FailureKind, Fidelity, RecoveryKind};
 
-/// Rank counts the scale sweep visits (capped by `--max-ranks`).
-fn sweep_ranks(max: u32) -> Vec<u32> {
-    presets::SCALE_SWEEP_RANKS
-        .iter()
-        .copied()
-        .filter(|&r| r <= max)
-        .collect()
+/// Mean peak live-task state per rank over a point's trials, bytes — the
+/// SoA memory budget a giant trial must fit in, normalized per rank.
+fn state_bytes_per_rank(p: &Point) -> f64 {
+    let n = p.profiles.len().max(1) as f64;
+    let mean =
+        p.profiles.iter().map(|c| c.peak_rank_state_bytes as f64).sum::<f64>() / n;
+    mean / p.cfg.ranks.max(1) as f64
 }
 
 /// Build the sweep grid: ranks × recovery methods, single process failure,
@@ -47,7 +49,7 @@ fn build_grid(
         );
     }
     let mut cfgs = Vec::new();
-    for &ranks in &sweep_ranks(opts.max_ranks) {
+    for &ranks in &presets::scale_rungs(opts.max_ranks)? {
         for rk in RecoveryKind::ALL {
             if rk == RecoveryKind::Ulfm && ranks > presets::SCALE_ULFM_MAX_RANKS {
                 continue; // documented cap, mirrors the paper's prototype limit
@@ -66,14 +68,44 @@ fn build_grid(
             cfgs.push(c);
         }
     }
-    if cfgs.is_empty() {
-        return Err(format!(
-            "scale sweep: no rank count of {:?} fits --max-ranks {}",
-            presets::SCALE_SWEEP_RANKS,
-            opts.max_ranks
+    debug_assert!(!cfgs.is_empty(), "scale_rungs never returns an empty ladder");
+    Ok(cfgs)
+}
+
+/// `scale_compare.csv`: the figure-CSV column block plus the sharded
+/// executor's memory-footprint column (`state_bytes_per_rank` — mean peak
+/// live-task state over the point's trials, divided by rank count).
+fn write_scale_csv(outdir: &str, points: &[Point]) -> std::io::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    let mut s = format!(
+        "app,ranks,recovery,failure,ckpt,total_s,total_ci,ckpt_write_s,ckpt_write_ci,\
+         ckpt_read_s,ckpt_read_ci,mpi_recovery_s,mpi_recovery_ci,app_s,app_ci,\
+         {STORAGE_CSV_HEADER},state_bytes_per_rank,trials\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.1},{}\n",
+            p.cfg.app,
+            p.cfg.ranks,
+            p.cfg.recovery,
+            p.cfg.failure,
+            p.cfg.effective_stack(),
+            p.total.mean,
+            p.total.ci95,
+            p.ckpt_write.mean,
+            p.ckpt_write.ci95,
+            p.ckpt_read.mean,
+            p.ckpt_read.ci95,
+            p.recovery.mean,
+            p.recovery.ci95,
+            p.app.mean,
+            p.app.ci95,
+            storage_csv_cells(&p.storage),
+            state_bytes_per_rank(p),
+            p.total.n,
         ));
     }
-    Ok(cfgs)
+    std::fs::write(format!("{outdir}/scale_compare.csv"), s)
 }
 
 /// Run the weak-scaling sweep: markdown table on stdout, CSV under
@@ -82,10 +114,12 @@ pub fn scale_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Poin
     let cfgs = build_grid(base, opts)?;
     let trials: u32 = cfgs.iter().map(|c| c.trials).sum();
     crate::info!(
-        "  scale sweep: {} points / {trials} trials (to {} ranks) on {} worker(s)...",
+        "  scale sweep: {} points / {trials} trials (to {} ranks) on {} worker(s), \
+         {} executor shard(s)...",
         cfgs.len(),
         cfgs.iter().map(|c| c.ranks).max().unwrap_or(0),
-        opts.jobs
+        opts.jobs,
+        opts.shards
     );
     let (points, stats) = run_points(&cfgs, opts.jobs);
     super::figures::finish_sweep("scale_compare", opts, &points, &stats);
@@ -94,17 +128,20 @@ pub fn scale_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Poin
         "\n## Large-rank weak scaling ({}): Figure 4 extended past 3072 ranks\n",
         base.app
     );
-    println!("| ranks | recovery | ckpt | total (s) | MPI recovery (s) | app (s) |");
-    println!("|---|---|---|---|---|---|");
+    println!(
+        "| ranks | recovery | ckpt | total (s) | MPI recovery (s) | app (s) | state B/rank |"
+    );
+    println!("|---|---|---|---|---|---|---|");
     for p in &points {
         println!(
-            "| {} | {} | {} | {} | {} | {} |",
+            "| {} | {} | {} | {} | {} | {} | {:.0} |",
             p.cfg.ranks,
             p.cfg.recovery,
             p.cfg.effective_stack(),
             cell(&p.total),
             cell(&p.recovery),
             cell(&p.app),
+            state_bytes_per_rank(p),
         );
     }
     println!(
@@ -116,7 +153,7 @@ pub fn scale_sweep(base: &ExperimentConfig, opts: &SweepOpts) -> Result<Vec<Poin
     );
     println!(" degrades with the survivor consensus. See EXPERIMENTS.md §Large-rank scaling)");
 
-    if let Err(e) = write_csv("scale_compare", &opts.outdir, &points) {
+    if let Err(e) = write_scale_csv(&opts.outdir, &points) {
         crate::warnln!("could not write scale_compare.csv: {e}");
     }
     Ok(points)
@@ -144,6 +181,7 @@ mod tests {
             outdir: "/tmp/reinitpp-test-results".into(),
             jobs: 1,
             profile: false,
+            shards: 1,
         };
         let cfgs = build_grid(&quick_base(), &opts).unwrap();
         // 4 rank counts x 5 methods + 2 rank counts x {CR, Reinit, Repl, Shrink}
@@ -158,6 +196,38 @@ mod tests {
             presets::SCALE_ULFM_MAX_RANKS
         );
         assert!(cfgs.iter().any(|c| c.ranks == 16384));
+    }
+
+    #[test]
+    fn grid_honors_max_ranks_past_the_preset_ceiling() {
+        // The old sweep silently clamped anything above 16384 to the preset
+        // list; the ladder now keeps doubling to the requested cap.
+        let opts = SweepOpts {
+            max_ranks: 65536,
+            ..SweepOpts::default()
+        };
+        let cfgs = build_grid(&quick_base(), &opts).unwrap();
+        assert!(
+            cfgs.iter().any(|c| c.ranks == 65536),
+            "--max-ranks 65536 must produce a 65536-rank rung"
+        );
+        assert!(cfgs.iter().any(|c| c.ranks == 32768));
+        assert!(
+            !cfgs
+                .iter()
+                .any(|c| c.recovery == RecoveryKind::Ulfm && c.ranks > 4096),
+            "the ULFM cap still applies on extended rungs"
+        );
+    }
+
+    #[test]
+    fn non_power_of_two_max_ranks_is_an_error() {
+        let opts = SweepOpts {
+            max_ranks: 3000,
+            ..SweepOpts::default()
+        };
+        let err = build_grid(&quick_base(), &opts).unwrap_err();
+        assert!(err.contains("power of two"), "{err}");
     }
 
     #[test]
@@ -180,6 +250,7 @@ mod tests {
             outdir: outdir.into(),
             jobs,
             profile: false,
+            shards: 1,
         };
         let serial =
             scale_sweep(&base, &mk(1, "/tmp/reinitpp-test-results/scale-j1")).unwrap();
@@ -197,6 +268,16 @@ mod tests {
             .unwrap();
         assert!(!j1.is_empty());
         assert_eq!(j1, j2, "scale CSV bytes must not depend on worker count");
+        let text = String::from_utf8(j1).unwrap();
+        let header = text.lines().next().unwrap();
+        assert!(
+            header.ends_with("state_bytes_per_rank,trials"),
+            "scale CSV must report bytes/rank: {header}"
+        );
+        assert!(
+            serial.iter().all(|p| state_bytes_per_rank(p) > 0.0),
+            "every point carries a live-task state footprint"
+        );
         // paper shape at the 512-rank rung: CR much slower than Reinit++
         let rec = |rk: RecoveryKind| {
             serial

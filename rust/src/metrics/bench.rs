@@ -53,6 +53,11 @@ impl BenchRow {
 #[derive(Clone, Debug, Default)]
 pub struct BenchReport {
     pub bench: String,
+    /// Provenance of the numbers: `"measured"` (default — the file was
+    /// produced by actually running the bench, e.g. in CI) or
+    /// `"reference"` (a checked-in snapshot from a development machine,
+    /// kept for trend context until the next CI refresh overwrites it).
+    pub baseline: String,
     pub rows: Vec<BenchRow>,
 }
 
@@ -60,8 +65,15 @@ impl BenchReport {
     pub fn new(bench: &str) -> Self {
         BenchReport {
             bench: bench.to_string(),
+            baseline: "measured".to_string(),
             rows: Vec::new(),
         }
+    }
+
+    /// Override the provenance tag (see `baseline`).
+    pub fn with_baseline(mut self, baseline: &str) -> Self {
+        self.baseline = baseline.to_string();
+        self
     }
 
     pub fn push(&mut self, row: BenchRow) {
@@ -76,6 +88,7 @@ impl BenchReport {
         s.push_str("{\n");
         s.push_str(&format!("  \"bench\": {},\n", json_str(&self.bench)));
         s.push_str("  \"schema\": 1,\n");
+        s.push_str(&format!("  \"baseline\": {},\n", json_str(&self.baseline)));
         s.push_str("  \"results\": [\n");
         for (i, r) in self.rows.iter().enumerate() {
             s.push_str("    {");
@@ -148,6 +161,12 @@ mod tests {
         assert!(j.contains("\"bench\": \"micro_example\""));
         assert!(j.contains("\"rate_per_sec\": 2000"));
         assert!(j.contains("\"allocs\": 42"));
+        assert!(
+            j.contains("\"baseline\": \"measured\""),
+            "bench runs default to measured provenance"
+        );
+        let r = BenchReport::new("x").with_baseline("reference");
+        assert!(r.to_json().contains("\"baseline\": \"reference\""));
         // crude balance check: every brace/bracket closes
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());

@@ -124,9 +124,6 @@ pub struct Comm {
     coll_scratch: RefCell<Vec<u8>>,
     /// Reusable reduce/allreduce accumulator (see `collectives.rs`).
     pub(crate) coll_acc: RefCell<Vec<f32>>,
-    /// Shared empty payload: control floods and non-root bcast entry pass
-    /// this by `Rc` clone instead of allocating an empty buffer each time.
-    empty: Payload,
 }
 
 impl Comm {
@@ -150,7 +147,6 @@ impl Comm {
             op_seq: Cell::new(0),
             coll_scratch: RefCell::new(Vec::new()),
             coll_acc: RefCell::new(Vec::new()),
-            empty: Rc::from(&[][..]),
         }
         .finish_init()
     }
@@ -235,9 +231,10 @@ impl Comm {
         Payload::from(&scratch[..])
     }
 
-    /// The shared zero-length payload (`Rc` clone, no allocation).
+    /// The job-wide zero-length payload (`Rc` clone, no allocation —
+    /// shared by every communicator of every generation).
     pub(crate) fn empty_payload(&self) -> Payload {
-        Rc::clone(&self.empty)
+        Rc::clone(&self.job.inner.empty)
     }
 
     /// Zero-copy send of an already-shared payload: collective fan-out

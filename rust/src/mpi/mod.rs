@@ -116,6 +116,10 @@ pub(crate) struct JobInner {
     pub ulfm_frac_per_level: f64,
     /// Quiet period for failure-detector convergence (one heartbeat).
     pub ulfm_stabilize: crate::sim::SimDuration,
+    /// The job-wide zero-length payload: every generation's communicators
+    /// share one allocation instead of allocating an empty `Rc<[u8]>` per
+    /// attach (tens of thousands of attaches across a storm at scale).
+    pub empty: Payload,
 }
 
 /// Shared per-job MPI state; ranks `attach` to get their `Comm`.
@@ -138,6 +142,7 @@ impl MpiJob {
                 ulfm_stabilize: crate::sim::SimDuration::from_secs_f64(
                     calib.ulfm_hb_period_ms * 1e-3,
                 ),
+                empty: Rc::from(&[][..]),
             }),
         }
     }

@@ -495,6 +495,12 @@ pub async fn rank_user_main(
         .allreduce_scalar(my_latest, crate::mpi::ReduceOp::Min)
         .await
         .map_err(|e| (e, Rc::clone(&comm)))? as i64;
+    // The two recovery-only blocks below are boxed: their state machines
+    // (verify + multi-round agreement, tiered restore) dominate the inline
+    // size of every rank's resident future, yet run at most once per
+    // deployment. Boxing them on entry keeps the per-rank steady-state
+    // footprint at the main-loop machine only — the SoA memory budget
+    // `SimSummary::peak_rank_state_bytes` measures.
     let mut agreed = baseline;
     if w.integrity_on && baseline >= 0 {
         // Imperfect world: the newest stored generation may be torn, rotted
@@ -504,88 +510,92 @@ pub async fn rank_user_main(
         // rank can actually serve, retrying from older generations up to
         // `retry_budget` rounds before escalating to an iteration-0
         // degraded re-deploy — never crashing on bad storage.
-        let (intact, vcost) = w.ckpt.verify_generations(rank);
-        if vcost > SimDuration::ZERO {
-            w.sim.sleep(vcost).await;
-            w.metrics.add_verify(rank, vcost);
-        }
-        // The mirror counts as an intact generation: the replication
-        // protocol verifies each push in-line, so a promoted shadow's
-        // snapshot never needs the checksum fallback.
-        let serves = |gen: i64| {
-            intact.binary_search(&(gen as u32)).is_ok() || mirror_latest == gen
-        };
-        agreed = -1;
-        let mut bound = baseline;
-        let mut rounds = 0u32;
-        while bound >= 0 {
-            // Candidate: my newest serveable generation at or below the
-            // current bound; min-reduce proposes the globally newest one
-            // everyone might hold.
-            let cand = intact
-                .iter()
-                .rev()
-                .map(|&i| i as i64)
-                .find(|&i| i <= bound)
-                .unwrap_or(-1)
-                .max(if mirror_latest <= bound { mirror_latest } else { -1 });
-            let prop = comm
-                .allreduce_scalar(cand as f32, crate::mpi::ReduceOp::Min)
-                .await
-                .map_err(|e| (e, Rc::clone(&comm)))? as i64;
-            if prop < 0 {
-                break; // some rank has nothing intact left: escalate
+        agreed = Box::pin(async {
+            let (intact, vcost) = w.ckpt.verify_generations(rank);
+            if vcost > SimDuration::ZERO {
+                w.sim.sleep(vcost).await;
+                w.metrics.add_verify(rank, vcost);
             }
-            // Vote: a rank whose newest intact copy is *older* than the
-            // proposal cannot serve it — a second min-reduce detects the
-            // hole and the whole job falls back one generation together.
-            let vote = if serves(prop) { prop as f32 } else { -1.0 };
-            let v = comm
-                .allreduce_scalar(vote, crate::mpi::ReduceOp::Min)
-                .await
-                .map_err(|e| (e, Rc::clone(&comm)))? as i64;
-            if v == prop {
-                agreed = prop;
-                break;
-            }
-            rounds += 1;
-            if rank == 0 {
-                w.metrics.record_retry();
-            }
-            if rounds > w.cfg.retry_budget {
-                break; // budget exhausted: escalate
-            }
-            bound = prop - 1;
-        }
-        if rank == 0 {
-            if agreed < 0 {
-                // Every generation corrupted (or disagreement past the
-                // budget): graceful degradation. The job restarts from
-                // iteration 0, booked as an escalated degraded re-deploy on
-                // the failure's segment.
-                w.metrics.record_escalation();
-                w.metrics.record_degrade_any();
-                let tr = w.sim.tracer();
-                if tr.is_on() {
-                    tr.instant("integrity", "escalate", 0, w.sim.now());
+            // The mirror counts as an intact generation: the replication
+            // protocol verifies each push in-line, so a promoted shadow's
+            // snapshot never needs the checksum fallback.
+            let serves = |gen: i64| {
+                intact.binary_search(&(gen as u32)).is_ok() || mirror_latest == gen
+            };
+            let mut agreed = -1i64;
+            let mut bound = baseline;
+            let mut rounds = 0u32;
+            while bound >= 0 {
+                // Candidate: my newest serveable generation at or below the
+                // current bound; min-reduce proposes the globally newest one
+                // everyone might hold.
+                let cand = intact
+                    .iter()
+                    .rev()
+                    .map(|&i| i as i64)
+                    .find(|&i| i <= bound)
+                    .unwrap_or(-1)
+                    .max(if mirror_latest <= bound { mirror_latest } else { -1 });
+                let prop = comm
+                    .allreduce_scalar(cand as f32, crate::mpi::ReduceOp::Min)
+                    .await? as i64;
+                if prop < 0 {
+                    break; // some rank has nothing intact left: escalate
                 }
-            } else if baseline > agreed {
-                w.metrics.add_fallback_iters((baseline - agreed) as u64);
+                // Vote: a rank whose newest intact copy is *older* than the
+                // proposal cannot serve it — a second min-reduce detects the
+                // hole and the whole job falls back one generation together.
+                let vote = if serves(prop) { prop as f32 } else { -1.0 };
+                let v = comm
+                    .allreduce_scalar(vote, crate::mpi::ReduceOp::Min)
+                    .await? as i64;
+                if v == prop {
+                    agreed = prop;
+                    break;
+                }
+                rounds += 1;
+                if rank == 0 {
+                    w.metrics.record_retry();
+                }
+                if rounds > w.cfg.retry_budget {
+                    break; // budget exhausted: escalate
+                }
+                bound = prop - 1;
             }
-        }
+            if rank == 0 {
+                if agreed < 0 {
+                    // Every generation corrupted (or disagreement past the
+                    // budget): graceful degradation. The job restarts from
+                    // iteration 0, booked as an escalated degraded re-deploy
+                    // on the failure's segment.
+                    w.metrics.record_escalation();
+                    w.metrics.record_degrade_any();
+                    let tr = w.sim.tracer();
+                    if tr.is_on() {
+                        tr.instant("integrity", "escalate", 0, w.sim.now());
+                    }
+                } else if baseline > agreed {
+                    w.metrics.add_fallback_iters((baseline - agreed) as u64);
+                }
+            }
+            Ok::<i64, MpiError>(agreed)
+        })
+        .await
+        .map_err(|e| (e, Rc::clone(&comm)))?;
     }
     let mut start_iter = 0u32;
     if agreed >= 0 {
-        let it = agreed as u32;
-        let mirror = w.repl.as_ref().and_then(|r| r.snapshot(rank, it));
-        if let Some(bytes) = mirror {
-            // Failover restore: the shadow already holds the agreed
-            // iteration in memory on the promoted host — no storage read,
-            // no re-execution. This is the zero-rollback path replication
-            // buys with its mirror bandwidth.
-            app_state.restore(&bytes);
-            start_iter = it + 1;
-        } else {
+        start_iter = Box::pin(async {
+            let it = agreed as u32;
+            let mirror = w.repl.as_ref().and_then(|r| r.snapshot(rank, it));
+            if let Some(bytes) = mirror {
+                // Failover restore: the shadow already holds the agreed
+                // iteration in memory on the promoted host — no storage
+                // read, no re-execution. This is the zero-rollback path
+                // replication buys with its mirror bandwidth.
+                app_state.restore(&bytes);
+                return it + 1;
+            }
             let t0 = w.sim.now();
             match w.ckpt.load(rank, slot.node, it).await {
                 Some(bytes) => {
@@ -601,7 +611,7 @@ pub async fn rank_user_main(
                         w.ckpt.rebuild(rank, slot.node, it, &bytes).await;
                         w.metrics.add_ckpt_write(rank, w.sim.now() - t1);
                     }
-                    start_iter = it + 1;
+                    it + 1
                 }
                 // The agreed copy can legally be gone by load time: a
                 // failure landing before the first checkpoint completes, or
@@ -609,9 +619,10 @@ pub async fn rank_user_main(
                 // and this read (mid-recovery storms). Restart from
                 // iteration 0 instead of crashing the harness — exactly
                 // what a real job would do with nothing on stable storage.
-                None => start_iter = 0,
+                None => 0,
             }
-        }
+        })
+        .await;
     }
 
     for iter in start_iter..w.cfg.iters {
@@ -903,17 +914,42 @@ pub fn run_trial(
 /// under `trace.dir` as three files keyed by the trial's identity hash:
 /// `trace_<id>.trace.json` (Perfetto), `trace_<id>.folded` (flamegraph),
 /// and `trace_<id>.profile.json`. Recording is observation-only, so
-/// results are identical with or without it.
+/// results are identical with or without it. The executor shard count
+/// follows the process-wide `--shards` knob.
 pub fn run_trial_with(
     cfg: &ExperimentConfig,
     trial: u32,
     xla: Option<Rc<XlaRuntime>>,
     trace: Option<&crate::trace::TraceConfig>,
 ) -> TrialResult {
+    run_trial_opts(cfg, trial, xla, trace, crate::sim::global_shards())
+}
+
+/// [`run_trial_with`] with an explicit executor shard count. Sharding is a
+/// *host* knob like `--jobs`: results are byte-identical for any value
+/// (asserted in `tests/shard_determinism.rs`), so it never enters the
+/// trial's identity hash. Tests pass it explicitly instead of mutating the
+/// process-wide default, which would leak across parallel test threads.
+pub fn run_trial_opts(
+    cfg: &ExperimentConfig,
+    trial: u32,
+    xla: Option<Rc<XlaRuntime>>,
+    trace: Option<&crate::trace::TraceConfig>,
+    shards: usize,
+) -> TrialResult {
     cfg.validate().expect("invalid experiment config");
     let sim = Sim::new();
     // generous runaway guard (events scale with ranks * iters)
     sim.set_event_limit(200_000_000);
+    sim.set_shards(shards.max(1));
+    if shards > 1 {
+        // Conservative lookahead = the smallest latency any cross-node
+        // (hence cross-shard, under the node-aligned plan) message can
+        // have under this calibration.
+        sim.set_lookahead(
+            crate::transport::NetCost::from_calib(&cfg.calib).min_remote_latency(),
+        );
+    }
     if let Some(tc) = trace {
         sim.trace_install(crate::trace::Recorder::new(cfg.ranks, tc.filter.clone()));
     }
@@ -952,6 +988,7 @@ pub fn run_trial_with(
         events: summary.events,
         polls: summary.polls,
         peak_events_pending: summary.peak_events_pending,
+        peak_rank_state_bytes: summary.peak_rank_state_bytes,
         tasks_completed: summary.tasks_completed,
     };
     if let Some(tc) = trace {

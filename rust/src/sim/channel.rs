@@ -55,6 +55,12 @@ struct ChanInner<T> {
     /// firing later sees a mismatch and does nothing — no spurious wake,
     /// no boxed waker closure kept alive (the ULFM heartbeat hot path).
     armed_timer: u64,
+    /// Executor shard owning this mailbox: the shard of the task that
+    /// created the channel (= the receiver's home under the topology-aligned
+    /// plan). Deliveries and deadline timers are scheduled onto this shard's
+    /// event queue, so a cross-shard `send` goes through the inbox/window
+    /// machinery while intra-shard traffic stays on the local queue.
+    home_shard: u16,
 }
 
 impl<T> ChanInner<T> {
@@ -136,6 +142,7 @@ pub fn channel<T: 'static>(sim: &Sim) -> (Sender<T>, Receiver<T>) {
         inflight: Vec::new(),
         free: Vec::new(),
         armed_timer: 0,
+        home_shard: sim.current_shard(),
     }));
     (
         Sender {
@@ -154,9 +161,12 @@ impl<T: 'static> Sender<T> {
     /// steady state: the message parks in a recycled inflight slot and the
     /// executor's `Deliver` event is an `Rc` clone plus the slot index.
     pub fn send(&self, msg: T, delay: SimDuration) {
-        let slot = self.inner.borrow_mut().park(msg);
+        let (slot, home) = {
+            let mut ch = self.inner.borrow_mut();
+            (ch.park(msg), ch.home_shard)
+        };
         let target: Rc<dyn Deliverable> = Rc::clone(&self.inner);
-        self.sim.schedule_deliver(delay, target, slot);
+        self.sim.schedule_deliver_to(home, delay, target, slot);
     }
 
     /// Mark the channel closed (pending undelivered messages are dropped,
@@ -244,11 +254,12 @@ impl<'a, T: 'static> Future for Recv<'a, T> {
                 // Arm the cancel-aware deadline timer (see struct docs).
                 let token = ch.armed_timer.wrapping_add(1);
                 ch.armed_timer = token;
+                let home = ch.home_shard;
                 drop(ch);
                 self.timer_token = Some(token);
                 let delay = dl - self.rx.sim.now();
                 let target: Rc<dyn Deliverable> = Rc::clone(&self.rx.inner);
-                self.rx.sim.schedule_timer(delay, target, token);
+                self.rx.sim.schedule_timer_to(home, delay, target, token);
             }
         }
         Poll::Pending

@@ -34,6 +34,28 @@
 //!   same time as a wheel entry always carries the smaller seq (it was
 //!   scheduled when that time still lay beyond the horizon), so ties go to
 //!   the heap.
+//! - **Executor shards** (`--shards N`): the event queue splits into N
+//!   per-shard two-level queues (one timer wheel + one staged heap each),
+//!   partitioned by the owning process's shard (rank-contiguous,
+//!   topology-aligned — see `sim/shard.rs`). Each shard keeps a local
+//!   clock; the run loop advances the *global* clock with a min-reduce
+//!   over the shard queue heads, so execution order stays exactly global
+//!   (time, seq) for any shard count — determinism by construction, not
+//!   by testing. Cross-shard events whose delay reaches the conservative
+//!   lookahead horizon (the minimum inter-shard link latency, see
+//!   `NetCost::min_remote_latency`) are staged in the target shard's
+//!   inbox and released in (time, seq) order at window barriers (epoch =
+//!   `time / lookahead`); sub-lookahead control traffic (zero-delay
+//!   done/abort signals) bypasses the inbox and is counted, so the
+//!   window-efficiency numbers in `BENCH_micro_shard.json` stay honest.
+//!   `shards = 1` (the default) is bit-for-bit today's serial queue.
+//! - **SoA task slab**: hot scheduling metadata (`TaskMeta`: generation,
+//!   flags, process link) is a separate dense array from the cold per-task
+//!   state (`TaskCold`: boxed future + cached waker), so wake dedup and
+//!   kill walks never drag future-sized cold cache lines in. Spawns record
+//!   the boxed future's actual size; `SimSummary::peak_rank_state_bytes`
+//!   reports the high-water mark of live task state, which is what bounds
+//!   memory for 100k–1M-rank trials.
 
 use std::cell::RefCell;
 use std::collections::{BinaryHeap, VecDeque};
@@ -87,7 +109,29 @@ pub struct SimSummary {
     /// messages + armed timers) — the scale benches report it as "peak
     /// inflight".
     pub peak_events_pending: u64,
+    /// High-water mark of live task-state bytes: boxed-future sizes plus
+    /// fixed slab-slot overhead, summed over live tasks. The SoA memory
+    /// metric `reinitpp scale` reports as bytes/rank.
+    pub peak_rank_state_bytes: u64,
+    /// Shard-engine counters (all zero except `shards = 1` under the
+    /// default serial configuration).
+    pub shards: ShardStats,
     pub reason: ExitReason,
+}
+
+/// Window-synchronization counters of a sharded run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Number of executor shards the run was configured with.
+    pub shards: u32,
+    /// Window-barrier advances (epoch = virtual time / lookahead).
+    pub windows: u64,
+    /// Cross-shard events staged in an inbox until a window barrier
+    /// (delay >= lookahead — the conservative-parallelism fraction).
+    pub inbox_staged: u64,
+    /// Cross-shard events under the lookahead horizon (zero-delay control
+    /// signals) that had to bypass the inbox for exact ordering.
+    pub inbox_bypass: u64,
 }
 
 /// A scheduled message delivery into a channel. The message itself is
@@ -97,7 +141,7 @@ pub struct SimSummary {
 pub(crate) trait Deliverable {
     fn deliver(&self, slot: u32);
 
-    /// A cancellable deadline timer armed via `Sim::schedule_timer` fired.
+    /// A cancellable deadline timer armed via `Sim::schedule_timer_to` fired.
     /// The implementor compares `token` against its current armed token and
     /// ignores stale fires (a recv that completed before its deadline).
     /// Default no-op: only channels with timed receives implement it.
@@ -246,15 +290,37 @@ impl TimerWheel {
         e
     }
 
+    /// (time, seq) of the earliest entry, advancing the wheel cursor like
+    /// `pop` would (the bucket front is the lowest seq at that time: pushes
+    /// within one queue arrive in seq order, and same-time late arrivals
+    /// land in the heap).
+    fn peek_key(&mut self) -> Option<(u64, u64)> {
+        let wheel = self.wheel_peek_time().map(|t| {
+            let idx = (self.base & WHEEL_MASK) as usize;
+            let front = self.buckets[idx].front().expect("occupied bucket");
+            (t, front.seq)
+        });
+        let heap = self.overflow.peek().map(|h| (h.time.nanos(), h.seq));
+        match (wheel, heap) {
+            (None, None) => None,
+            (Some(w), None) => Some(w),
+            (None, Some(h)) => Some(h),
+            (Some(w), Some(h)) => Some(w.min(h)),
+        }
+    }
+
     /// Remove and return the globally earliest event by (time, seq).
     fn pop(&mut self) -> Option<EventEntry> {
-        let wheel_t = self.wheel_peek_time();
-        let heap_t = self.overflow.peek().map(|h| h.time.nanos());
-        match (wheel_t, heap_t) {
+        let wheel = self.wheel_peek_time().map(|t| {
+            let idx = (self.base & WHEEL_MASK) as usize;
+            (t, self.buckets[idx].front().expect("occupied bucket").seq)
+        });
+        let heap = self.overflow.peek().map(|h| (h.time.nanos(), h.seq));
+        match (wheel, heap) {
             (None, None) => None,
             (Some(_), None) => self.pop_wheel(),
             (None, Some(_)) => self.pop_overflow(),
-            // Ties go to the heap: at equal times the heap entry was
+            // Full lexicographic compare; at equal times the heap entry was
             // scheduled first (beyond-horizon then), i.e. has lower seq.
             (Some(w), Some(h)) => {
                 if h <= w {
@@ -265,6 +331,82 @@ impl TimerWheel {
             }
         }
     }
+}
+
+/// One executor shard: its own two-level event queue, a shard-local clock,
+/// and the inbox cross-shard deliveries are staged into between window
+/// barriers. `staged` is a separate exact-(time, seq) heap rather than a
+/// push into the wheel: bucket FIFO order assumes in-seq-order pushes,
+/// which barrier drains (releasing older seqs late) would violate.
+struct ShardQ {
+    events: TimerWheel,
+    staged: BinaryHeap<EventEntry>,
+    inbox: Vec<EventEntry>,
+    /// Virtual time of the last event fired on this shard.
+    clock: SimTime,
+    /// Events fired on this shard (the per-shard balance the shard bench
+    /// reports as window efficiency).
+    fired: u64,
+}
+
+impl ShardQ {
+    fn new() -> ShardQ {
+        ShardQ {
+            events: TimerWheel::new(),
+            staged: BinaryHeap::new(),
+            inbox: Vec::new(),
+            clock: SimTime::ZERO,
+            fired: 0,
+        }
+    }
+
+    /// Entries queued on this shard (inbox included: staged events are
+    /// still pending work for the peak-events accounting).
+    fn len(&self) -> usize {
+        self.events.len() + self.staged.len() + self.inbox.len()
+    }
+
+    /// (time, seq) of this shard's earliest *released* entry.
+    fn peek_key(&mut self) -> Option<(u64, u64)> {
+        let q = self.events.peek_key();
+        let s = self.staged.peek().map(|e| (e.time.nanos(), e.seq));
+        match (q, s) {
+            (None, None) => None,
+            (Some(a), None) => Some(a),
+            (None, Some(b)) => Some(b),
+            (Some(a), Some(b)) => Some(a.min(b)),
+        }
+    }
+
+    /// Remove this shard's earliest released entry by (time, seq).
+    fn pop(&mut self) -> Option<EventEntry> {
+        let q = self.events.peek_key();
+        let s = self.staged.peek().map(|e| (e.time.nanos(), e.seq));
+        match (q, s) {
+            (None, None) => None,
+            (Some(_), None) => self.events.pop(),
+            (None, Some(_)) => self.staged.pop(),
+            (Some(a), Some(b)) => {
+                if b <= a {
+                    self.staged.pop()
+                } else {
+                    self.events.pop()
+                }
+            }
+        }
+    }
+}
+
+/// Static per-shard counter names: tracer names are `&'static str` (zero
+/// allocation on the hot path), so shards beyond this table simply don't
+/// get an individual trace track.
+const SHARD_TRACK_NAMES: [&str; 16] = [
+    "shard0", "shard1", "shard2", "shard3", "shard4", "shard5", "shard6", "shard7", "shard8",
+    "shard9", "shard10", "shard11", "shard12", "shard13", "shard14", "shard15",
+];
+
+fn shard_track_name(i: usize) -> Option<&'static str> {
+    SHARD_TRACK_NAMES.get(i).copied()
 }
 
 /// Per-task waker payload: pushes the task id into the run loop's wake ring.
@@ -318,17 +460,20 @@ fn make_waker(id: TaskId, wakes: &Rc<RefCell<VecDeque<TaskId>>>) -> Waker {
 
 type TaskFuture = Pin<Box<dyn Future<Output = ()>>>;
 
-/// One slab slot. `gen` disambiguates reuse; `fut == None` while the task is
-/// being polled (the future is out on the stack) or after release.
-struct TaskSlot {
+/// Hot half of a slab slot (SoA split): the scheduling metadata every wake
+/// dedup, kill walk, and stale-id check touches. Kept future-free so an
+/// idle task costs these few fields of dense array, not a cold cache line.
+/// `gen` disambiguates slot reuse.
+struct TaskMeta {
     gen: u32,
-    occupied: bool,
     proc: ProcId,
+    /// `size_of_val` of the boxed future, recorded at spawn for the
+    /// rank-state accounting (saturated at u32::MAX).
+    fut_bytes: u32,
+    occupied: bool,
     /// Already sitting in the ready queue (dedup flag: avoids an O(n)
     /// `contains` scan per external wake — see EXPERIMENTS.md §Perf).
     queued: bool,
-    fut: Option<TaskFuture>,
-    waker: Option<Waker>,
     /// Intrusive per-process doubly-linked list (kill in O(tasks-of-proc)).
     prev: u32,
     next: u32,
@@ -336,15 +481,27 @@ struct TaskSlot {
     next_free: u32,
 }
 
-impl TaskSlot {
+/// Cold half of a slab slot: touched only when the task actually polls.
+/// `fut == None` while the task is being polled (the future is out on the
+/// stack) or after release.
+struct TaskCold {
+    fut: Option<TaskFuture>,
+    waker: Option<Waker>,
+}
+
+/// Fixed slab overhead charged per live task by the rank-state accounting,
+/// on top of the boxed future's own size.
+const SLOT_BYTES: u64 =
+    (std::mem::size_of::<TaskMeta>() + std::mem::size_of::<TaskCold>()) as u64;
+
+impl TaskMeta {
     fn vacant() -> Self {
-        TaskSlot {
+        TaskMeta {
             gen: 0,
-            occupied: false,
             proc: ProcId(0),
+            fut_bytes: 0,
+            occupied: false,
             queued: false,
-            fut: None,
-            waker: None,
             prev: NIL,
             next: NIL,
             next_free: NIL,
@@ -359,11 +516,31 @@ impl TaskSlot {
 struct Inner {
     now: SimTime,
     next_seq: u64,
-    events: TimerWheel,
+    /// Per-shard event queues; always at least one. Index 0 is the control
+    /// plane (root, daemons, trial driver) — the serial path in full.
+    shards: Vec<ShardQ>,
+    /// Conservative lookahead horizon in nanoseconds (0 = windowing off):
+    /// cross-shard events at or beyond it wait in inboxes for the next
+    /// window barrier; anything closer bypasses (and is counted).
+    lookahead: u64,
+    /// Current window index (`time / lookahead`), monotone.
+    window: u64,
+    windows_advanced: u64,
+    inbox_staged: u64,
+    inbox_bypass: u64,
+    /// Shard of the task currently being polled / event currently firing;
+    /// new events without an explicit target shard inherit it.
+    current_shard: u16,
+    /// Shard of each process (indexed by `ProcId`; missing = shard 0).
+    shard_of_proc: Vec<u16>,
     ready: VecDeque<TaskId>,
-    slots: Vec<TaskSlot>,
+    meta: Vec<TaskMeta>,
+    cold: Vec<TaskCold>,
     free_head: u32,
     tasks_live: u64,
+    /// Live task-state bytes (boxed futures + slot overhead) and its peak.
+    state_bytes: u64,
+    state_bytes_peak: u64,
     procs: Vec<ProcEntry>,
     events_fired: u64,
     events_peak: u64,
@@ -376,11 +553,15 @@ impl Inner {
     fn alloc_slot(&mut self) -> usize {
         if self.free_head != NIL {
             let idx = self.free_head as usize;
-            self.free_head = self.slots[idx].next_free;
+            self.free_head = self.meta[idx].next_free;
             idx
         } else {
-            self.slots.push(TaskSlot::vacant());
-            self.slots.len() - 1
+            self.meta.push(TaskMeta::vacant());
+            self.cold.push(TaskCold {
+                fut: None,
+                waker: None,
+            });
+            self.meta.len() - 1
         }
     }
 
@@ -389,37 +570,134 @@ impl Inner {
     /// the CALLER must drop outside any `inner` borrow — drop glue may
     /// re-enter the `Sim`.
     fn release_slot(&mut self, idx: usize) -> Option<TaskFuture> {
-        let s = &mut self.slots[idx];
-        debug_assert!(s.occupied);
-        s.occupied = false;
-        s.gen = s.gen.wrapping_add(1);
-        s.queued = false;
-        s.waker = None;
-        let fut = s.fut.take();
-        let (prev, next, proc) = (s.prev, s.next, s.proc);
-        s.prev = NIL;
-        s.next = NIL;
+        let m = &mut self.meta[idx];
+        debug_assert!(m.occupied);
+        m.occupied = false;
+        m.gen = m.gen.wrapping_add(1);
+        m.queued = false;
+        let (prev, next, proc) = (m.prev, m.next, m.proc);
+        m.prev = NIL;
+        m.next = NIL;
+        let released = m.fut_bytes as u64 + SLOT_BYTES;
+        m.fut_bytes = 0;
+        self.state_bytes = self.state_bytes.saturating_sub(released);
+        let c = &mut self.cold[idx];
+        c.waker = None;
+        let fut = c.fut.take();
         if prev != NIL {
-            self.slots[prev as usize].next = next;
+            self.meta[prev as usize].next = next;
         } else {
             self.procs[proc.0 as usize].task_head = next;
         }
         if next != NIL {
-            self.slots[next as usize].prev = prev;
+            self.meta[next as usize].prev = prev;
         }
-        self.slots[idx].next_free = self.free_head;
+        self.meta[idx].next_free = self.free_head;
         self.free_head = idx as u32;
         self.tasks_live -= 1;
         fut
     }
 
-    fn push_event(&mut self, time: SimTime, event: Event) {
-        let seq = self.next_seq;
-        self.next_seq += 1;
-        self.events.push(EventEntry { time, seq, event });
-        let pending = self.events.len() as u64;
+    /// Pending events across all shard queues (inboxes included).
+    fn pending_events(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    fn note_pending(&mut self) {
+        let pending = self.pending_events() as u64;
         if pending > self.events_peak {
             self.events_peak = pending;
+        }
+    }
+
+    /// Queue an event on the current shard (the serial path in full).
+    fn push_event(&mut self, time: SimTime, event: Event) {
+        let shard = self.current_shard;
+        self.push_event_to(shard, time, event);
+    }
+
+    /// Queue an event on an explicit target shard. Cross-shard events at or
+    /// beyond the lookahead horizon stage in the target's inbox until the
+    /// next window barrier; closer ones (zero-delay done/abort control
+    /// signals) are pushed directly and counted as bypasses so ordering
+    /// stays exactly global (time, seq).
+    fn push_event_to(&mut self, shard: u16, time: SimTime, event: Event) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let e = EventEntry { time, seq, event };
+        let s = (shard as usize).min(self.shards.len() - 1);
+        if s != self.current_shard as usize && self.shards.len() > 1 {
+            if self.lookahead > 0
+                && time.nanos().saturating_sub(self.now.nanos()) >= self.lookahead
+            {
+                self.inbox_staged += 1;
+                self.shards[s].inbox.push(e);
+                self.note_pending();
+                return;
+            }
+            self.inbox_bypass += 1;
+        }
+        self.shards[s].events.push(e);
+        self.note_pending();
+    }
+
+    /// Release every inbox into its shard's staged heap (window barrier).
+    /// Returns whether anything moved.
+    fn drain_inboxes(&mut self) -> bool {
+        let mut any = false;
+        for sh in &mut self.shards {
+            if !sh.inbox.is_empty() {
+                any = true;
+                for e in sh.inbox.drain(..) {
+                    sh.staged.push(e);
+                }
+            }
+        }
+        any
+    }
+
+    /// Remove the globally earliest event by (time, seq): a min-reduce over
+    /// the shard queue heads, draining inboxes whenever the global clock is
+    /// about to cross a window boundary. Staged events carry a delay >= one
+    /// full lookahead window, so every inbox entry is released strictly
+    /// before the clock can reach its fire time — exact global order holds
+    /// for any shard count.
+    fn pop_next(&mut self) -> Option<(u16, EventEntry)> {
+        if self.shards.len() == 1 {
+            // Serial fast path: today's single-queue pop, bit for bit.
+            return self.shards[0].pop().map(|e| (0, e));
+        }
+        loop {
+            let mut best: Option<(usize, (u64, u64))> = None;
+            for (i, sh) in self.shards.iter_mut().enumerate() {
+                if let Some(k) = sh.peek_key() {
+                    if best.is_none_or(|(_, bk)| k < bk) {
+                        best = Some((i, k));
+                    }
+                }
+            }
+            let Some((i, key)) = best else {
+                // All released queues dry: anything still parked in an
+                // inbox is the next work (bootstrap/idle-shard edge).
+                if self.drain_inboxes() {
+                    self.windows_advanced += 1;
+                    continue;
+                }
+                return None;
+            };
+            if self.lookahead > 0 {
+                let w = key.0 / self.lookahead;
+                if w > self.window {
+                    self.window = w;
+                    self.windows_advanced += 1;
+                    if self.drain_inboxes() {
+                        // A released entry may now precede the candidate.
+                        continue;
+                    }
+                }
+            }
+            let e = self.shards[i].pop().expect("peeked entry pops");
+            return Some((i as u16, e));
         }
     }
 }
@@ -449,11 +727,21 @@ impl Sim {
             inner: Rc::new(RefCell::new(Inner {
                 now: SimTime::ZERO,
                 next_seq: 0,
-                events: TimerWheel::new(),
+                shards: vec![ShardQ::new()],
+                lookahead: 0,
+                window: 0,
+                windows_advanced: 0,
+                inbox_staged: 0,
+                inbox_bypass: 0,
+                current_shard: 0,
+                shard_of_proc: Vec::new(),
                 ready: VecDeque::new(),
-                slots: Vec::new(),
+                meta: Vec::new(),
+                cold: Vec::new(),
                 free_head: NIL,
                 tasks_live: 0,
+                state_bytes: 0,
+                state_bytes_peak: 0,
                 procs: Vec::new(),
                 events_fired: 0,
                 events_peak: 0,
@@ -469,6 +757,60 @@ impl Sim {
     /// Guard against runaway simulations (default: unlimited).
     pub fn set_event_limit(&self, limit: u64) {
         self.inner.borrow_mut().event_limit = limit;
+    }
+
+    /// Partition the event queue into `n` executor shards. Must be called
+    /// before anything is scheduled; `n = 1` (the default) is the serial
+    /// path bit for bit. Processes map to shards via
+    /// [`Sim::assign_proc_shard`]; unassigned processes run on shard 0
+    /// (the control plane).
+    pub fn set_shards(&self, n: usize) {
+        let mut inner = self.inner.borrow_mut();
+        assert!(n >= 1, "at least one shard");
+        assert_eq!(
+            inner.pending_events(),
+            0,
+            "set_shards must run before any event is scheduled"
+        );
+        inner.shards = (0..n).map(|_| ShardQ::new()).collect();
+    }
+
+    /// Set the conservative lookahead horizon: the minimum cross-shard
+    /// link latency (see `NetCost::min_remote_latency`). Cross-shard
+    /// events at or beyond it ride inboxes released at window barriers;
+    /// zero (the default) disables windowing (every cross-shard event is a
+    /// direct push). Irrelevant while `shards == 1`.
+    pub fn set_lookahead(&self, d: SimDuration) {
+        self.inner.borrow_mut().lookahead = d.nanos();
+    }
+
+    /// Pin process `p` (and every task it spawns) to `shard`. Out-of-range
+    /// shards clamp to the last shard; unassigned processes default to
+    /// shard 0.
+    pub fn assign_proc_shard(&self, p: ProcId, shard: u16) {
+        let mut inner = self.inner.borrow_mut();
+        let idx = p.0 as usize;
+        if inner.shard_of_proc.len() <= idx {
+            inner.shard_of_proc.resize(idx + 1, 0);
+        }
+        inner.shard_of_proc[idx] = shard;
+    }
+
+    /// Number of configured executor shards.
+    pub fn shard_count(&self) -> usize {
+        self.inner.borrow().shards.len()
+    }
+
+    /// Events fired per shard so far (the shard bench's window-efficiency
+    /// distribution).
+    pub fn shard_event_counts(&self) -> Vec<u64> {
+        self.inner.borrow().shards.iter().map(|s| s.fired).collect()
+    }
+
+    /// Shard of the currently executing context (shard 0 outside any
+    /// task poll) — channels record it at creation as their home shard.
+    pub(crate) fn current_shard(&self) -> u16 {
+        self.inner.borrow().current_shard
     }
 
     /// The trace slot of this simulation. Recording is observation only —
@@ -526,31 +868,44 @@ impl Sim {
             inner.procs[p.0 as usize].name
         );
         let idx = inner.alloc_slot();
-        let gen = inner.slots[idx].gen;
+        let gen = inner.meta[idx].gen;
         let tid = task_id(idx as u32, gen);
         let waker = make_waker(tid, &self.wakes);
         let head = inner.procs[p.0 as usize].task_head;
+        let fut: TaskFuture = Box::pin(fut);
+        // Rank-state accounting: the async state machine's actual size is
+        // what an idle rank costs (cold paths `Box::pin`ed out of the main
+        // future shrink exactly this number).
+        let fut_bytes = std::mem::size_of_val(&*fut) as u64;
         {
-            let s = &mut inner.slots[idx];
-            s.occupied = true;
-            s.proc = p;
-            s.queued = true;
-            s.fut = Some(Box::pin(fut));
-            s.waker = Some(waker);
-            s.prev = NIL;
-            s.next = head;
+            let m = &mut inner.meta[idx];
+            m.occupied = true;
+            m.proc = p;
+            m.queued = true;
+            m.fut_bytes = fut_bytes.min(u32::MAX as u64) as u32;
+            m.prev = NIL;
+            m.next = head;
+        }
+        {
+            let c = &mut inner.cold[idx];
+            c.fut = Some(fut);
+            c.waker = Some(waker);
         }
         if head != NIL {
-            inner.slots[head as usize].prev = idx as u32;
+            inner.meta[head as usize].prev = idx as u32;
         }
         inner.procs[p.0 as usize].task_head = idx as u32;
         inner.tasks_live += 1;
+        inner.state_bytes += fut_bytes + SLOT_BYTES;
+        if inner.state_bytes > inner.state_bytes_peak {
+            inner.state_bytes_peak = inner.state_bytes;
+        }
         inner.ready.push_back(tid);
         tid
     }
 
     /// Schedule `f` to run at `now + delay` (control-plane events; the
-    /// channel data plane uses the allocation-free `schedule_deliver`).
+    /// channel data plane uses the allocation-free `schedule_deliver_to`).
     pub fn schedule(&self, delay: SimDuration, f: impl FnOnce() + 'static) {
         let mut inner = self.inner.borrow_mut();
         let time = inner.now + delay;
@@ -558,32 +913,37 @@ impl Sim {
     }
 
     /// Schedule delivery of the message stashed in `target`'s inflight slot
-    /// `slot` at `now + delay`. Allocation-free: the `Rc` clone is a
-    /// refcount bump, the ordering (`seq`) semantics match `schedule`.
-    pub(crate) fn schedule_deliver(
+    /// `slot` at `now + delay`, onto an explicit shard (the channel's home
+    /// shard, so node-local traffic stays intra-shard — see
+    /// `sim/channel.rs`). Allocation-free: the `Rc` clone is a refcount
+    /// bump, the ordering (`seq`) semantics match `schedule`.
+    pub(crate) fn schedule_deliver_to(
         &self,
+        shard: u16,
         delay: SimDuration,
         target: Rc<dyn Deliverable>,
         slot: u32,
     ) {
         let mut inner = self.inner.borrow_mut();
         let time = inner.now + delay;
-        inner.push_event(time, Event::Deliver(target, slot));
+        inner.push_event_to(shard, time, Event::Deliver(target, slot));
     }
 
-    /// Arm a cancel-aware deadline timer: at `now + delay` the executor
-    /// calls `target.timer(token)`, which checks the token against the
-    /// implementor's current armed state and ignores stale fires.
-    /// Allocation-free, like `schedule_deliver` (no boxed waker closure).
-    pub(crate) fn schedule_timer(
+    /// Arm a cancel-aware deadline timer on an explicit shard (the
+    /// channel's home shard, where the matching deliveries fire): at
+    /// `now + delay` the executor calls `target.timer(token)`, which checks
+    /// the token against the implementor's current armed state and ignores
+    /// stale fires. Allocation-free (no boxed waker closure).
+    pub(crate) fn schedule_timer_to(
         &self,
+        shard: u16,
         delay: SimDuration,
         target: Rc<dyn Deliverable>,
         token: u64,
     ) {
         let mut inner = self.inner.borrow_mut();
         let time = inner.now + delay;
-        inner.push_event(time, Event::Timer(target, token));
+        inner.push_event_to(shard, time, Event::Timer(target, token));
     }
 
     fn schedule_wake(&self, at: SimTime, w: Waker) {
@@ -633,7 +993,7 @@ impl Sim {
             let watchers = std::mem::take(&mut entry.watchers);
             let mut cur = entry.task_head;
             while cur != NIL {
-                let next = inner.slots[cur as usize].next;
+                let next = inner.meta[cur as usize].next;
                 // A `None` future here is the currently-running task killing
                 // its own process; `poll_task` sees the bumped generation
                 // and drops the future when the poll returns.
@@ -659,7 +1019,7 @@ impl Sim {
         let removed = {
             let mut inner = self.inner.borrow_mut();
             let idx = slot_of(tid);
-            let current = inner.slots.get(idx).is_some_and(|s| s.is_current(tid));
+            let current = inner.meta.get(idx).is_some_and(|m| m.is_current(tid));
             if current {
                 inner.release_slot(idx)
             } else {
@@ -678,17 +1038,26 @@ impl Sim {
         let idx = slot_of(tid);
         let (mut fut, waker) = {
             let mut inner = self.inner.borrow_mut();
-            let slot = match inner.slots.get_mut(idx) {
-                Some(s) if s.is_current(tid) => s,
+            let meta = match inner.meta.get_mut(idx) {
+                Some(m) if m.is_current(tid) => m,
                 // Task finished or was killed after being scheduled: skip.
                 _ => return,
             };
-            slot.queued = false;
-            let fut = match slot.fut.take() {
+            meta.queued = false;
+            let proc = meta.proc;
+            // Everything this poll schedules belongs to the task's shard
+            // (channel sends override with their home shard explicitly).
+            inner.current_shard = inner
+                .shard_of_proc
+                .get(proc.0 as usize)
+                .copied()
+                .unwrap_or(0);
+            let cold = &mut inner.cold[idx];
+            let fut = match cold.fut.take() {
                 Some(f) => f,
                 None => return,
             };
-            let waker = slot.waker.as_ref().expect("live task has a waker").clone();
+            let waker = cold.waker.as_ref().expect("live task has a waker").clone();
             (fut, waker)
         };
         let mut cx = Context::from_waker(&waker);
@@ -698,7 +1067,7 @@ impl Sim {
         let leftover = match res {
             Poll::Ready(()) => {
                 inner.tasks_completed += 1;
-                if inner.slots[idx].is_current(tid) {
+                if inner.meta[idx].is_current(tid) {
                     let none = inner.release_slot(idx); // future is out here
                     debug_assert!(none.is_none());
                 }
@@ -708,8 +1077,8 @@ impl Sim {
                 // If the task killed its own process (or was cancelled)
                 // during the poll, the slot generation moved on and the
                 // future must die with it.
-                if inner.slots[idx].is_current(tid) {
-                    inner.slots[idx].fut = Some(fut);
+                if inner.meta[idx].is_current(tid) {
+                    inner.cold[idx].fut = Some(fut);
                     None
                 } else {
                     Some(fut)
@@ -737,9 +1106,9 @@ impl Sim {
                 self.tracer.add("exec.task_wakes", scratch.len() as u64);
                 let mut inner = self.inner.borrow_mut();
                 for tid in scratch.drain(..) {
-                    let queue = match inner.slots.get_mut(slot_of(tid)) {
-                        Some(s) if s.is_current(tid) && !s.queued => {
-                            s.queued = true;
+                    let queue = match inner.meta.get_mut(slot_of(tid)) {
+                        Some(m) if m.is_current(tid) && !m.queued => {
+                            m.queued = true;
                             true
                         }
                         _ => false,
@@ -765,21 +1134,36 @@ impl Sim {
                 if inner.events_fired >= inner.event_limit {
                     Step::Exit(ExitReason::EventLimit)
                 } else {
-                    match inner.events.pop() {
+                    match inner.pop_next() {
                         None => Step::Exit(ExitReason::Idle),
-                        Some(e) => {
+                        Some((shard, e)) => {
                             debug_assert!(e.time >= inner.now);
                             inner.now = e.time;
+                            inner.current_shard = shard;
+                            {
+                                let sh = &mut inner.shards[shard as usize];
+                                sh.clock = e.time;
+                                sh.fired += 1;
+                            }
                             inner.events_fired += 1;
                             // Periodic executor-load samples (tracing only;
                             // the tracer lives outside `inner`, so recording
                             // under this borrow is fine).
                             if self.tracer.is_on() && inner.events_fired % 4096 == 0 {
                                 let at = inner.now;
-                                let pending = inner.events.len() as u64;
+                                let pending = inner.pending_events() as u64;
                                 let polls = inner.polls;
                                 self.tracer.counter("exec", "events_pending", at, pending);
                                 self.tracer.counter("exec", "polls", at, polls);
+                                // Per-shard load tracks (sharded runs only):
+                                // fired-event counters per shard clock.
+                                if inner.shards.len() > 1 {
+                                    for (i, sh) in inner.shards.iter().enumerate() {
+                                        if let Some(name) = shard_track_name(i) {
+                                            self.tracer.counter("shard", name, sh.clock, sh.fired);
+                                        }
+                                    }
+                                }
                             }
                             Step::Fire(e.event)
                         }
@@ -807,7 +1191,7 @@ impl Sim {
 
     fn summary(&self, reason: ExitReason) -> SimSummary {
         let inner = self.inner.borrow();
-        debug_assert!(inner.events.is_empty() || reason == ExitReason::EventLimit);
+        debug_assert!(inner.pending_events() == 0 || reason == ExitReason::EventLimit);
         SimSummary {
             end_time: inner.now,
             events: inner.events_fired,
@@ -815,6 +1199,13 @@ impl Sim {
             tasks_completed: inner.tasks_completed,
             tasks_pending: inner.tasks_live,
             peak_events_pending: inner.events_peak,
+            peak_rank_state_bytes: inner.state_bytes_peak,
+            shards: ShardStats {
+                shards: inner.shards.len() as u32,
+                windows: inner.windows_advanced,
+                inbox_staged: inner.inbox_staged,
+                inbox_bypass: inner.inbox_bypass,
+            },
             reason,
         }
     }
@@ -1346,5 +1737,113 @@ mod tests {
         let c = rec.counters();
         assert!(c.get("exec.wake_events").copied().unwrap_or(0) > 0);
         assert!(c.get("exec.task_wakes").copied().unwrap_or(0) > 0);
+    }
+
+    /// Cross-shard ping-pong: process `a` on shard 0, `b` on the last
+    /// shard, both channels homed on shard 0 (created outside any task),
+    /// so `b`'s replies cross a shard boundary at 3 µs >= the 2 µs
+    /// lookahead and must ride the inbox/window-barrier path.
+    fn cross_shard_pingpong(shards: usize) -> (SimSummary, Vec<u64>) {
+        let sim = Sim::new();
+        sim.set_shards(shards);
+        if shards > 1 {
+            sim.set_lookahead(SimDuration::from_micros(2));
+        }
+        let a = sim.spawn_process("a");
+        let b = sim.spawn_process("b");
+        if shards > 1 {
+            sim.assign_proc_shard(a, 0);
+            sim.assign_proc_shard(b, (shards - 1) as u16);
+        }
+        let (tx_ab, rx_ab) = crate::sim::channel::<u64>(&sim);
+        let (tx_ba, rx_ba) = crate::sim::channel::<u64>(&sim);
+        let s2 = sim.clone();
+        sim.spawn(a, async move {
+            for k in 0..8u64 {
+                tx_ab.send(k, SimDuration::from_micros(3));
+                assert_eq!(rx_ba.recv().await.unwrap(), k * 2);
+                s2.sleep(SimDuration::from_micros(1)).await;
+            }
+        });
+        sim.spawn(b, async move {
+            for _ in 0..8u64 {
+                let k = rx_ab.recv().await.unwrap();
+                tx_ba.send(k * 2, SimDuration::from_micros(3));
+            }
+        });
+        let s = sim.run();
+        let fired = sim.shard_event_counts();
+        (s, fired)
+    }
+
+    #[test]
+    fn sharded_run_is_bit_identical_to_serial() {
+        let (serial, _) = cross_shard_pingpong(1);
+        assert_eq!(serial.tasks_completed, 2);
+        assert_eq!(serial.shards, ShardStats { shards: 1, ..ShardStats::default() });
+        for shards in [2usize, 4] {
+            let (s, fired) = cross_shard_pingpong(shards);
+            assert_eq!(
+                (s.events, s.polls, s.end_time, s.tasks_completed),
+                (serial.events, serial.polls, serial.end_time, serial.tasks_completed),
+                "{shards}-shard trace drifted from the serial loop"
+            );
+            assert_eq!(s.peak_events_pending, serial.peak_events_pending);
+            assert_eq!(s.peak_rank_state_bytes, serial.peak_rank_state_bytes);
+            assert_eq!(s.shards.shards as usize, shards);
+            assert!(s.shards.windows > 0, "window barriers must advance");
+            assert!(s.shards.inbox_staged > 0, "replies must stage in the inbox");
+            // Per-shard balance: every fired event is attributed to exactly
+            // one shard, and both endpoints' shards saw work.
+            assert_eq!(fired.iter().sum::<u64>(), s.events);
+            assert!(fired[0] > 0 && fired[shards - 1] > 0);
+        }
+    }
+
+    #[test]
+    fn zero_delay_cross_shard_send_bypasses_the_inbox() {
+        // Sub-lookahead control signals (done/abort) cannot wait for the
+        // next window barrier: they are pushed directly into the target
+        // shard's queue and counted as bypasses.
+        let sim = Sim::new();
+        sim.set_shards(2);
+        sim.set_lookahead(SimDuration::from_micros(5));
+        let a = sim.spawn_process("a");
+        let b = sim.spawn_process("b");
+        sim.assign_proc_shard(a, 0);
+        sim.assign_proc_shard(b, 1);
+        let (tx, rx) = crate::sim::channel::<u32>(&sim); // homed on shard 0
+        let got = Rc::new(Cell::new(0u32));
+        let g2 = Rc::clone(&got);
+        sim.spawn(a, async move {
+            g2.set(rx.recv().await.unwrap());
+        });
+        sim.spawn(b, async move {
+            tx.send(7, SimDuration::ZERO); // shard 1 -> shard 0, below lookahead
+        });
+        let s = sim.run();
+        assert_eq!(got.get(), 7);
+        assert!(s.shards.inbox_bypass >= 1, "zero-delay send must bypass");
+        assert_eq!(s.shards.inbox_staged, 0);
+    }
+
+    #[test]
+    fn state_bytes_peak_scales_with_live_tasks() {
+        fn peak(n: usize) -> u64 {
+            let sim = Sim::new();
+            let p = sim.spawn_process("p");
+            for _ in 0..n {
+                let s2 = sim.clone();
+                sim.spawn(p, async move {
+                    s2.sleep(SimDuration::from_micros(1)).await;
+                });
+            }
+            sim.run().peak_rank_state_bytes
+        }
+        assert!(peak(1) > 0, "a live boxed future has nonzero footprint");
+        assert!(
+            peak(8) > peak(1),
+            "the high-water mark must grow with concurrently live tasks"
+        );
     }
 }

@@ -21,9 +21,11 @@ mod channel;
 mod executor;
 mod proc;
 pub mod rng;
+mod shard;
 mod time;
 
 pub use channel::{channel, RecvError, Receiver, Sender};
-pub use executor::{ExitReason, Sim, SimSummary, TaskId};
+pub use executor::{ExitReason, ShardStats, Sim, SimSummary, TaskId};
 pub use proc::{ProcId, ProcName, ProcStatus};
+pub use shard::{global_shards, set_global_shards};
 pub use time::{SimDuration, SimTime};

@@ -1,0 +1,45 @@
+//! Process-global default for the executor shard count (`--shards N`).
+//!
+//! Like `--jobs` and `--trace`, the shard count is a *host* knob: it decides
+//! how the machine executes a trial, never what the trial computes, so it
+//! must not enter `ExperimentConfig` identity (results are byte-identical
+//! for any value — asserted in `tests/shard_determinism.rs`). The CLI
+//! installs the global once at startup; `run_trial` reads it when building
+//! each `Sim`. Tests that want a specific shard count pass it explicitly
+//! through `run_trial_opts` instead of mutating the global, so parallel
+//! test threads cannot leak configuration into each other.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static GLOBAL_SHARDS: AtomicUsize = AtomicUsize::new(1);
+
+/// Install the process-wide default shard count (clamped to >= 1).
+pub fn set_global_shards(n: usize) {
+    GLOBAL_SHARDS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// The process-wide default shard count (1 = serial executor).
+pub fn global_shards() -> usize {
+    GLOBAL_SHARDS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_serial() {
+        // Other tests never touch the global (they use run_trial_opts), so
+        // observing the default here is race-free.
+        assert_eq!(global_shards(), 1);
+    }
+
+    #[test]
+    fn clamped_to_at_least_one() {
+        // set+restore in one test to avoid cross-test interference
+        set_global_shards(0);
+        assert_eq!(global_shards(), 1);
+        set_global_shards(1);
+        assert_eq!(global_shards(), 1);
+    }
+}

@@ -48,9 +48,11 @@ const MAX_RANK_TRACKS: u32 = 8;
 /// Known span categories, in display order — the `--trace-filter` universe.
 /// `integrity` carries checkpoint-corruption instants (`corrupt`,
 /// `escalate`), `detect` the unreliable detector's `suspect` instants; both
-/// are silent unless the imperfect-world knobs are armed.
-pub const CATEGORIES: [&str; 7] =
-    ["exec", "mpi", "ckpt", "recovery", "pool", "integrity", "detect"];
+/// are silent unless the imperfect-world knobs are armed. `shard` carries
+/// the sharded executor's per-shard fired-event counter tracks (silent at
+/// `--shards 1`).
+pub const CATEGORIES: [&str; 8] =
+    ["exec", "mpi", "ckpt", "recovery", "pool", "integrity", "detect", "shard"];
 
 /// Process-wide trace destination, installed once by the CLI before any
 /// trial runs. Tests pass a config explicitly to `run_trial_with` instead

@@ -52,6 +52,9 @@ pub struct TrialCounters {
     pub polls: u64,
     /// Pending-event high-water mark.
     pub peak_events_pending: u64,
+    /// Live-task state high-water mark, bytes (boxed futures + slab
+    /// slots) — the SoA memory budget a giant trial must fit in.
+    pub peak_rank_state_bytes: u64,
     /// Tasks run to completion.
     pub tasks_completed: u64,
 }
@@ -116,6 +119,10 @@ impl TrialProfile {
         s.push_str(&format!(
             "  \"peak_events_pending\": {},\n",
             c.peak_events_pending
+        ));
+        s.push_str(&format!(
+            "  \"peak_rank_state_bytes\": {},\n",
+            c.peak_rank_state_bytes
         ));
         s.push_str(&format!("  \"tasks_completed\": {},\n", c.tasks_completed));
         s.push_str("  \"counters\": {");
@@ -208,6 +215,7 @@ mod tests {
                 events: 100,
                 polls: 200,
                 peak_events_pending: 7,
+                peak_rank_state_bytes: 4096,
                 tasks_completed: 12,
             },
             &rec,
@@ -215,6 +223,7 @@ mod tests {
         );
         let j = p.to_json();
         assert!(j.contains("\"identity\": \"00000000deadbeef\""));
+        assert!(j.contains("\"peak_rank_state_bytes\": 4096"));
         assert!(j.contains("\"mpi.recv_direct\": 9"));
         assert!(j.contains("\"total_s\": 2"));
         assert!(j.contains("\"segments\": [\n  ]"));

@@ -40,6 +40,15 @@ impl NetCost {
     pub fn control_delay(&self, bytes: usize) -> SimDuration {
         self.control_lat + SimDuration::from_secs_f64(bytes as f64 / self.inter_bytes_per_sec)
     }
+
+    /// Smallest latency any message crossing a node boundary can have —
+    /// min(inter-node data latency, control-plane latency). Under the
+    /// node-aligned shard plan every cross-shard message is also
+    /// cross-node, so this is the conservative lookahead horizon for the
+    /// sharded executor's time windows.
+    pub fn min_remote_latency(&self) -> SimDuration {
+        self.inter_lat.min(self.control_lat)
+    }
 }
 
 #[cfg(test)]

@@ -105,6 +105,15 @@ impl<M: 'static> Fabric<M> {
         }
     }
 
+    /// Conservative lookahead horizon for the sharded executor: the
+    /// smallest latency any message crossing a node boundary can have
+    /// under this fabric's calibration. Shard partitions are node-aligned,
+    /// so every cross-shard message is cross-node and arrives at least
+    /// this far in the future.
+    pub fn min_remote_latency(&self) -> SimDuration {
+        self.cost.min_remote_latency()
+    }
+
     /// Bind (or re-bind, after a re-spawn) `key` on `node`; returns the
     /// mailbox. A re-bind drops the stale mailbox: in-flight messages to the
     /// dead incarnation are lost, like packets to a crashed process. An

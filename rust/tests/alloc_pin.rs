@@ -29,6 +29,11 @@ fn allreduce_256_ranks_steady_state_allocs_per_msg_at_most_2() {
     const MEASURE: u32 = 8;
 
     let sim = Sim::new();
+    // This pin covers the *serial* event loop specifically: the sharded
+    // executor (`--shards N`) shares every recycled structure but adds
+    // inbox staging on cross-shard sends, so the default single-shard
+    // configuration is asserted rather than assumed.
+    assert_eq!(sim.shard_count(), 1, "alloc pin measures the serial path");
     let topo = Topology::new(RANKS, 16, 0);
     let job = MpiJob::new(&sim, topo, FtMode::Reinit, &Calibration::default());
     let prefix: Rc<str> = Rc::from("r");

@@ -1,0 +1,166 @@
+//! The tentpole pin for the sharded executor: `--shards N` is a host
+//! knob, so every observable output of a trial — executor counters,
+//! per-rank digests, the paper breakdown, the per-failure segments, the
+//! peak state footprint — must be *byte-identical* for any shard count.
+//!
+//! The sharded engine earns this by construction (the K-way merge across
+//! shard queues replays the exact global `(time, seq)` order the serial
+//! loop pops), but construction arguments rot; these tests re-prove it
+//! empirically for all five recovery families under a 3-failure storm,
+//! and byte-compare the golden trace artifacts of a serial vs a 4-shard
+//! run (modulo the host `wall_us` annotations, which are real wall time
+//! and never deterministic).
+
+use std::path::{Path, PathBuf};
+
+use reinitpp::config::{AppKind, ExperimentConfig, Fidelity, RecoveryKind};
+use reinitpp::recovery::job::{run_trial_opts, TrialResult};
+use reinitpp::trace::TraceConfig;
+
+/// Unique scratch dir per test (no tempdir dependency).
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "reinitpp-shard-det-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A 3-failure process storm at 8 ranks / 4 per node: enough churn to
+/// exercise detect → recover → rollback (or failover) three times in
+/// every family, small enough to run all fifteen trials in one test.
+fn storm_cfg(recovery: RecoveryKind) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.app = AppKind::Hpccg;
+    c.recovery = recovery;
+    c.ranks = 8;
+    c.ranks_per_node = 4;
+    c.spare_nodes = 1;
+    c.iters = 8;
+    c.trials = 1;
+    c.fidelity = Fidelity::Modeled;
+    c.hpccg_nx = 4;
+    c.seed = 42;
+    c.apply("failures", "proc@2:r1,proc@4:r3,proc@6:r5").unwrap();
+    match recovery {
+        // shrink's whole point: survivors absorb the failure, no spares
+        RecoveryKind::Shrink => c.spare_nodes = 0,
+        // one node-disjoint shadow per rank (2 compute nodes available)
+        RecoveryKind::Replication => c.repl_degree = 2,
+        _ => {}
+    }
+    c
+}
+
+/// Everything a trial result pins, as one comparable value (the same
+/// shape `tests/trace_determinism.rs` uses, plus the SoA footprint).
+fn fingerprint(r: &TrialResult) -> String {
+    format!(
+        "{:?}|{:?}|{:?}|{:?}|{}|{}",
+        r.counters, r.digests, r.breakdown, r.segments, r.sim_events,
+        r.counters.peak_rank_state_bytes
+    )
+}
+
+#[test]
+fn all_recovery_families_are_shard_count_invariant_under_a_storm() {
+    for recovery in RecoveryKind::ALL {
+        let cfg = storm_cfg(recovery);
+        let serial = run_trial_opts(&cfg, 0, None, None, 1);
+        assert!(serial.completed, "{recovery}: serial storm trial hung");
+        assert!(
+            !serial.segments.is_empty(),
+            "{recovery}: storm must fire failures"
+        );
+        assert!(
+            serial.counters.peak_rank_state_bytes > 0,
+            "{recovery}: state footprint metric must be populated"
+        );
+        for shards in [2usize, 4] {
+            let sharded = run_trial_opts(&cfg, 0, None, None, shards);
+            assert!(sharded.completed, "{recovery}: {shards}-shard trial hung");
+            assert_eq!(
+                fingerprint(&serial),
+                fingerprint(&sharded),
+                "{recovery}: --shards {shards} diverged from the serial loop"
+            );
+        }
+    }
+}
+
+/// Categories recorded for the golden-trace byte comparison: everything
+/// except `shard` (the per-shard fired-event counter tracks exist *only*
+/// in sharded runs — they are the one intentional trace difference) and
+/// `pool` (host wall time).
+fn golden_filter() -> Option<Vec<String>> {
+    Some(
+        ["exec", "mpi", "ckpt", "recovery", "integrity", "detect"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    )
+}
+
+fn trace_into(dir: &Path) -> TraceConfig {
+    TraceConfig {
+        dir: dir.to_string_lossy().into_owned(),
+        filter: golden_filter(),
+    }
+}
+
+/// Blank out the `"wall_us":<float>` annotations (real host time) so the
+/// rest of the trace-event JSON can be compared byte-for-byte.
+fn strip_wall_us(trace: &str) -> String {
+    let mut out = String::with_capacity(trace.len());
+    let mut rest = trace;
+    while let Some(i) = rest.find("\"wall_us\":") {
+        let tail = &rest[i + "\"wall_us\":".len()..];
+        let end = tail
+            .find(|c: char| !matches!(c, '0'..='9' | '.' | '-' | '+' | 'e' | 'E'))
+            .unwrap_or(tail.len());
+        out.push_str(&rest[..i]);
+        out.push_str("\"wall_us\":0");
+        rest = &tail[end..];
+    }
+    out.push_str(rest);
+    out
+}
+
+#[test]
+fn golden_trace_artifacts_are_byte_identical_across_shard_counts() {
+    let cfg = storm_cfg(RecoveryKind::Reinit);
+    let d1 = tmp("serial");
+    let d4 = tmp("shard4");
+    let serial = run_trial_opts(&cfg, 0, None, Some(&trace_into(&d1)), 1);
+    let sharded = run_trial_opts(&cfg, 0, None, Some(&trace_into(&d4)), 4);
+    assert!(serial.completed && sharded.completed);
+    // `--shards` is not part of the experiment identity, so both runs key
+    // their artifacts by the same hash.
+    assert_eq!(serial.counters.identity, sharded.counters.identity);
+    let id = format!("{:016x}", serial.counters.identity);
+
+    // Folded stacks carry only virtual-time span totals: byte-identical.
+    let folded1 = std::fs::read(d1.join(format!("trace_{id}.folded"))).unwrap();
+    let folded4 = std::fs::read(d4.join(format!("trace_{id}.folded"))).unwrap();
+    assert!(!folded1.is_empty());
+    assert_eq!(
+        folded1, folded4,
+        "folded flamegraph stacks moved between --shards 1 and --shards 4"
+    );
+
+    // The Perfetto trace embeds host wall time in args; everything else —
+    // event order, virtual timestamps, durations, counters, track names —
+    // must match byte-for-byte.
+    let t1 = std::fs::read_to_string(d1.join(format!("trace_{id}.trace.json"))).unwrap();
+    let t4 = std::fs::read_to_string(d4.join(format!("trace_{id}.trace.json"))).unwrap();
+    assert_eq!(
+        strip_wall_us(&t1),
+        strip_wall_us(&t4),
+        "golden trace diverged between --shards 1 and --shards 4"
+    );
+
+    for d in [&d1, &d4] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
